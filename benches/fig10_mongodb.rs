@@ -1,0 +1,90 @@
+//! FIGURE 10: MongoDB running YCSB A–F over RPCool (CXL) vs UDS, and
+//! RPCool-DSM vs TCP(IPoIB).
+//!
+//! Paper shape: RPCool wins everywhere except YCSB-E (scans move bulk
+//! results, which favors the socket's streaming path over far-memory
+//! materialization); DSM ≥ 1.34× vs TCP.
+//!
+//! Run: `cargo bench --bench fig10_mongodb [-- --quick|--full]`
+
+use rpcool::apps::mongodb::{run_ycsb, serve_net, serve_rpcool, DocStore, RpcoolDoc};
+use rpcool::baselines::netrpc::Flavor;
+use rpcool::benchkit::Table;
+use rpcool::channel::TransportSel;
+use rpcool::workloads::ycsb::WorkloadKind;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::args().any(|a| a == "--full");
+    let (nkeys, nops): (u64, usize) = if full {
+        (100_000, 1_000_000)
+    } else if quick {
+        (1_000, 4_000)
+    } else {
+        (5_000, 30_000)
+    };
+    let rack = Rack::new(SimConfig::for_bench());
+    let mut t = Table::new(&["Workload", "RPCool", "UDS", "spd", "RPCool(DSM)", "TCP(IPoIB)", "spd"]);
+
+    for kind in WorkloadKind::all() {
+        // RPCool (CXL).
+        let env = rack.proc_env(0);
+        let store = DocStore::new();
+        let server = serve_rpcool(&env, &format!("f10/cxl/{}", kind.name()), store).unwrap();
+        let cenv = rack.proc_env(1);
+        let db = RpcoolDoc::connect(&cenv, &format!("f10/cxl/{}", kind.name())).unwrap();
+        db.conn().attach_inline(&server);
+        cenv.enter();
+        let (_l, cxl) = run_ycsb(&db, kind, nkeys, nops, 9).unwrap();
+        drop(db);
+        server.stop();
+
+        // UDS.
+        let store = DocStore::new();
+        let (srv, db) = serve_net(Flavor::Uds, Arc::clone(&rack.pool.charger), store);
+        db.client_inline(&srv);
+        let (_l, uds) = run_ycsb(&db, kind, nkeys, nops, 9).unwrap();
+        srv.stop();
+
+        // RPCool over DSM.
+        let env = rack.proc_env(0);
+        let store = DocStore::new();
+        let server = serve_rpcool(&env, &format!("f10/dsm/{}", kind.name()), store).unwrap();
+        let renv = rack.remote_proc_env();
+        let conn = rpcool::channel::Connection::connect_with(
+            &renv,
+            &format!("f10/dsm/{}", kind.name()),
+            TransportSel::Rdma,
+        )
+        .unwrap();
+        conn.attach_inline(&server);
+        let db = RpcoolDoc::from_conn(conn).unwrap();
+        renv.enter();
+        let (_l, dsm) = run_ycsb(&db, kind, nkeys, nops, 9).unwrap();
+        drop(db);
+        server.stop();
+
+        // TCP over IPoIB.
+        let store = DocStore::new();
+        let (srv, db) = serve_net(Flavor::Tcp, Arc::clone(&rack.pool.charger), store);
+        db.client_inline(&srv);
+        let (_l, tcp) = run_ycsb(&db, kind, nkeys, nops, 9).unwrap();
+        srv.stop();
+
+        t.row(&[
+            format!("YCSB-{}", kind.name()),
+            format!("{cxl:.2?}"),
+            format!("{uds:.2?}"),
+            format!("{:.2}×", uds.as_secs_f64() / cxl.as_secs_f64()),
+            format!("{dsm:.2?}"),
+            format!("{tcp:.2?}"),
+            format!("{:.2}×", tcp.as_secs_f64() / dsm.as_secs_f64()),
+        ]);
+    }
+
+    t.print(&format!(
+        "Figure 10 — MongoDB YCSB ({nkeys} keys, {nops} ops; paper: RPCool wins except E; DSM ≥1.34× vs TCP)"
+    ));
+}

@@ -1,0 +1,111 @@
+//! FIGURE 11: CoolDB build (NoBench corpus) + search (range queries)
+//! across RPCool (CXL), RPCool (RDMA), RPCool (Secure), ZhangRPC, eRPC.
+//!
+//! Paper shape: RPCool fastest on CXL (4.7× build / 1.3× search vs
+//! the fastest other framework); RPCool-RDMA slows markedly on build
+//! (page ping-pong); Zhang pays per-object header/ref costs.
+//! Paper scale: 100K docs / 1K searches (pass `--full`).
+//!
+//! Run: `cargo bench --bench fig11_cooldb [-- --quick|--full]`
+
+use rpcool::apps::cooldb::{
+    run_fig11, serve_net, serve_rpcool, CoolIndex, RpcoolCool, ZhangCool,
+};
+use rpcool::baselines::netrpc::Flavor;
+use rpcool::benchkit::Table;
+use rpcool::channel::TransportSel;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::args().any(|a| a == "--full");
+    let (ndocs, nsearches) = if full {
+        (100_000, 1_000)
+    } else if quick {
+        (3_000, 20)
+    } else {
+        (20_000, 100)
+    };
+    let mut cfg = SimConfig::for_bench();
+    cfg.pool_bytes = 1 << 31; // room for the corpus (shared heap)
+    let rack = Rack::new(cfg);
+    let mut t = Table::new(&["Framework", "build", "search"]);
+
+    // ---- RPCool (CXL) ----
+    let env = rack.proc_env(0);
+    let index = CoolIndex::new();
+    let server = serve_rpcool(&env, "f11/cxl", Arc::clone(&index)).unwrap();
+    let cenv = rack.proc_env(1);
+    let db = RpcoolCool::connect(&cenv, "f11/cxl").unwrap();
+    db.conn().attach_inline(&server);
+    cenv.enter();
+    let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
+    t.row(&["RPCool".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    let (rp_b, rp_s) = (b, s);
+    drop(db);
+    server.stop();
+
+    // ---- RPCool (Secure): sealed+sandboxed puts ----
+    let env = rack.proc_env(0);
+    let index = CoolIndex::new();
+    let server = serve_rpcool(&env, "f11/sec", Arc::clone(&index)).unwrap();
+    let cenv = rack.proc_env(2);
+    let db = RpcoolCool::connect_secure(&cenv, "f11/sec").unwrap();
+    db.conn().attach_inline(&server);
+    cenv.enter();
+    let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
+    t.row(&["RPCool (Secure)".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    drop(db);
+    server.stop();
+
+    // ---- RPCool (RDMA fallback) ----
+    let env = rack.proc_env(0);
+    let index = CoolIndex::new();
+    let server = serve_rpcool(&env, "f11/rdma", Arc::clone(&index)).unwrap();
+    let renv = rack.remote_proc_env();
+    let db = RpcoolCool::connect_with(&renv, "f11/rdma", TransportSel::Rdma).unwrap();
+    db.conn().attach_inline(&server);
+    renv.enter();
+    // RDMA build at paper scale moves every doc page twice; scale down
+    // the doc count to keep the bench bounded, then normalize.
+    let nd = ndocs / 4;
+    let (b, s) = run_fig11(&db, nd, nsearches, 42).unwrap();
+    t.row(&[
+        "RPCool (RDMA)".into(),
+        format!("{:.2?} (×4 scaled)", b * 4),
+        format!("{s:.2?}"),
+    ]);
+    drop(db);
+    server.stop();
+
+    // ---- ZhangRPC ----
+    let env = rack.proc_env(0);
+    let index = CoolIndex::new();
+    let server = serve_rpcool(&env, "f11/zhang", Arc::clone(&index)).unwrap();
+    let cenv = rack.proc_env(3);
+    let db = ZhangCool::connect(&cenv, "f11/zhang").unwrap();
+    db.conn_inline(&server);
+    cenv.enter();
+    let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
+    t.row(&["ZhangRPC".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    drop(db);
+    server.stop();
+
+    // ---- eRPC ----
+    let (srv, db, _store) = serve_net(Flavor::ERpc, Arc::clone(&rack.pool.charger));
+    db.client_inline(&srv);
+    let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
+    t.row(&["eRPC".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    srv.stop();
+    let (er_b, er_s) = (b, s);
+
+    t.print(&format!(
+        "Figure 11 — CoolDB build ({ndocs} NoBench docs) + search ({nsearches} queries)"
+    ));
+    println!(
+        "\nRPCool vs eRPC: build {:.2}× (paper 4.7× vs fastest), search {:.2}× (paper 1.3×)",
+        er_b.as_secs_f64() / rp_b.as_secs_f64(),
+        er_s.as_secs_f64() / rp_s.as_secs_f64(),
+    );
+}

@@ -1,0 +1,107 @@
+//! FIGURE 12: DeathStarBench SocialNetwork compose-post — median and
+//! P99 latency vs offered load, RPCool vs RPCool (Secure) vs Thrift.
+//!
+//! Paper shape: all three track closely (the critical path is ~66%
+//! databases + Nginx); RPCool's peak throughput exceeds Thrift's.
+//! Open-loop driver: requests arrive at the offered rate; latency is
+//! measured per request; each point runs for a fixed wall budget
+//! (paper: 30 s/point — pass `--full` for that).
+//!
+//! Run: `cargo bench --bench fig12_deathstar [-- --quick|--full]`
+
+use rpcool::apps::socialnet::{sample_post, RpcoolSocial, SocialState, ThriftSocial};
+use rpcool::benchkit::Table;
+use rpcool::channel::waiter::SleepPolicy;
+use rpcool::metrics::Histogram;
+use rpcool::util::Rng;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Open-loop run at `rate` req/s for `budget`; returns (p50, p99,
+/// achieved req/s).
+fn run_point(
+    mut call: impl FnMut(u64, &str) -> rpcool::Result<u64>,
+    nusers: usize,
+    rate: f64,
+    budget: Duration,
+    seed: u64,
+) -> (u64, u64, f64) {
+    let hist = Histogram::new();
+    let mut rng = Rng::new(seed);
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let t0 = Instant::now();
+    let mut scheduled = t0;
+    let mut done = 0u64;
+    while t0.elapsed() < budget {
+        // Open loop: next arrival is scheduled regardless of service.
+        scheduled += interval;
+        let now = Instant::now();
+        if scheduled > now {
+            std::thread::sleep(scheduled - now);
+        }
+        let (user, text) = sample_post(&mut rng, nusers);
+        let t = Instant::now();
+        call(user, &text).unwrap();
+        // Latency includes queueing delay behind schedule.
+        hist.record_ns(t.elapsed().as_nanos() as u64 + (t - scheduled).as_nanos() as u64);
+        done += 1;
+    }
+    (hist.median_ns(), hist.p99_ns(), done as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::args().any(|a| a == "--full");
+    let budget = if full {
+        Duration::from_secs(30)
+    } else if quick {
+        Duration::from_millis(600)
+    } else {
+        Duration::from_secs(3)
+    };
+    let rates: &[f64] = if quick { &[200.0, 800.0] } else { &[200.0, 500.0, 1000.0, 1500.0, 2000.0] };
+    let nusers = 1_000;
+    let rack = Rack::new(SimConfig::for_bench());
+    let mut t = Table::new(&["Backend", "offered req/s", "achieved", "p50", "p99"]);
+
+    // RPCool and RPCool (Secure).
+    for secure in [false, true] {
+        let tag = if secure { "sec" } else { "fast" };
+        let state = SocialState::new(nusers, 16, 1);
+        let net =
+            RpcoolSocial::start(&rack, state, SleepPolicy::Fixed(1), secure, &format!("f12{tag}"))
+                .unwrap();
+        net.inline_mode();
+        for &rate in rates {
+            let (p50, p99, ach) =
+                run_point(|u, s| net.compose_post(u, s), nusers, rate, budget, 3);
+            t.row(&[
+                if secure { "RPCool (Secure)".into() } else { "RPCool".into() },
+                format!("{rate:.0}"),
+                format!("{ach:.0}"),
+                Histogram::fmt_ns(p50),
+                Histogram::fmt_ns(p99),
+            ]);
+        }
+        net.stop();
+    }
+
+    // Thrift.
+    let state = SocialState::new(nusers, 16, 1);
+    let net = ThriftSocial::start(Arc::clone(&rack.pool.charger), state);
+    net.inline_mode();
+    for &rate in rates {
+        let (p50, p99, ach) = run_point(|u, s| net.compose_post(u, s), nusers, rate, budget, 3);
+        t.row(&[
+            "ThriftRPC".into(),
+            format!("{rate:.0}"),
+            format!("{ach:.0}"),
+            Histogram::fmt_ns(p50),
+            Histogram::fmt_ns(p99),
+        ]);
+    }
+    net.stop();
+
+    t.print("Figure 12 — SocialNetwork compose-post latency vs offered load (paper: RPCool ≈ Thrift, higher peak)");
+}

@@ -1,0 +1,56 @@
+//! FIGURE 13: throughput–latency tradeoff of the busy-wait sleep
+//! policy (paper §5.8): 0µs, 5µs, 150µs between poll iterations.
+//!
+//! Paper shape: no sleep → best latency, throughput capped by burned
+//! CPU; 150µs → higher tail latency, higher peak throughput (polling
+//! CPUs yield to workers). On the simulation host we reproduce the
+//! *latency* side directly (sleep adds to RTT when a request lands
+//! mid-sleep) and report poll-CPU burn as the throughput proxy.
+//!
+//! Run: `cargo bench --bench fig13_busywait [-- --quick]`
+
+use rpcool::apps::socialnet::{sample_post, RpcoolSocial, SocialState};
+use rpcool::benchkit::Table;
+use rpcool::channel::waiter::SleepPolicy;
+use rpcool::metrics::Histogram;
+use rpcool::util::Rng;
+use rpcool::{Rack, SimConfig};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let nreq = if quick { 200 } else { 2_000 };
+    let nusers = 500;
+    let rack = Rack::new(SimConfig::for_bench());
+    let mut t = Table::new(&["sleep (µs)", "p50", "p99", "req/s", "server poll wakeups/req"]);
+
+    for sleep_us in [0u64, 5, 150] {
+        let policy = if sleep_us == 0 { SleepPolicy::Spin } else { SleepPolicy::Fixed(sleep_us) };
+        let state = SocialState::new(nusers, 16, 1);
+        let net = RpcoolSocial::start(&rack, state, policy, false, &format!("f13-{sleep_us}"))
+            .unwrap();
+        // NOT inline: the sleep policy only matters with real pollers.
+        let hist = Histogram::new();
+        let mut rng = Rng::new(4);
+        let t0 = Instant::now();
+        for _ in 0..nreq {
+            let (user, text) = sample_post(&mut rng, nusers);
+            let tt = Instant::now();
+            net.compose_post(user, &text).unwrap();
+            hist.record(tt.elapsed());
+        }
+        let wall = t0.elapsed();
+        t.row(&[
+            format!("{sleep_us}"),
+            Histogram::fmt_ns(hist.median_ns()),
+            Histogram::fmt_ns(hist.p99_ns()),
+            format!("{:.0}", nreq as f64 / wall.as_secs_f64()),
+            format!("{:.1}", 4.0 * wall.as_secs_f64() * 1e6
+                / (sleep_us.max(1) as f64) / nreq as f64),
+        ]);
+        net.stop();
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    t.print("Figure 13 — busy-wait sleep sweep (paper: 0µs best latency/capped throughput; 150µs higher tail, higher peak)");
+}

@@ -1,0 +1,49 @@
+//! FIGURE 1: round-trip time of the raw communication substrates —
+//! CXL loads/signals vs RDMA vs TCP vs HTTP. The ladder motivates the
+//! whole paper: CXL ≪ RDMA ≪ TCP < HTTP.
+//!
+//! Run: `cargo bench --bench fig1_rtt`
+
+use rpcool::benchkit::{fmt_ns, time_op, Table};
+use rpcool::transport::{LinkKind, SimNicPair, Transport};
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 10_000 } else { 100_000 };
+    let rack = Rack::new(SimConfig::for_bench());
+    let charger = Arc::clone(&rack.pool.charger);
+    let mut t = Table::new(&["Protocol", "RTT", "Note"]);
+
+    // CXL: a dependent far-memory load pair (request/response via
+    // shared memory — two one-way signal latencies).
+    let (m, _) = time_op(1000, n, false, || {
+        charger.charge_cxl_signal();
+        charger.charge_cxl_signal();
+    });
+    t.row(&["CXL ld/st".into(), fmt_ns(m), "2× far-memory signal".into()]);
+
+    // RDMA / TCP / HTTP2: message out + message back through the NIC
+    // model (inline send+recv, costs charged on send).
+    for (kind, label, note) in [
+        (LinkKind::Rdma, "RDMA (CX-5 class)", "verbs small message"),
+        (LinkKind::Uds, "UNIX domain socket", "same-host kernel path"),
+        (LinkKind::Tcp, "TCP (IPoIB)", "kernel stack"),
+        (LinkKind::Http2, "HTTP/2 (gRPC wire)", "TCP + framing"),
+    ] {
+        let pair = SimNicPair::new(kind, Arc::clone(&charger));
+        let reps = if kind == LinkKind::Http2 { n / 20 } else { n / 4 };
+        let (m, _) = time_op(100, reps, false, || {
+            pair.a.send(b"ping").unwrap();
+            let _ = pair.b.try_recv();
+            pair.b.send(b"pong").unwrap();
+            let _ = pair.a.recv(Duration::from_secs(1)).unwrap();
+        });
+        t.row(&[label.into(), fmt_ns(m), note.into()]);
+    }
+
+    t.print("Figure 1 — RTT comparison of communication protocols");
+    println!("\nexpected ladder: CXL < RDMA < UDS < TCP < HTTP (paper Fig. 1).");
+}

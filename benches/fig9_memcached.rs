@@ -1,0 +1,97 @@
+//! FIGURE 9: Memcached running YCSB (A–D, F; no E — memcached has no
+//! SCAN) over four transports: RPCool (CXL), UDS, RPCool (DSM/RDMA),
+//! TCP-over-IPoIB.
+//!
+//! Paper shape: RPCool ≥ 6.0× vs UDS; RPCool-DSM ≥ 2.1× vs TCP.
+//! Paper scale: 100K keys / 1M ops; default here is scaled down 10×
+//! (pass `--full` for paper scale).
+//!
+//! Run: `cargo bench --bench fig9_memcached [-- --quick|--full]`
+
+use rpcool::apps::memcached::{run_ycsb, serve_net, serve_rpcool, Cache, RpcoolKv};
+use rpcool::baselines::netrpc::Flavor;
+use rpcool::benchkit::Table;
+use rpcool::channel::TransportSel;
+use rpcool::workloads::ycsb::WorkloadKind;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::args().any(|a| a == "--full");
+    let (nkeys, nops): (u64, usize) = if full {
+        (100_000, 1_000_000)
+    } else if quick {
+        (2_000, 10_000)
+    } else {
+        (10_000, 100_000)
+    };
+    let rack = Rack::new(SimConfig::for_bench());
+    let mut t = Table::new(&["Workload", "RPCool", "UDS", "spd", "RPCool(DSM)", "TCP(IPoIB)", "spd"]);
+
+    let workloads =
+        [WorkloadKind::A, WorkloadKind::B, WorkloadKind::C, WorkloadKind::D, WorkloadKind::F];
+
+    for kind in workloads {
+        // RPCool (CXL).
+        let env = rack.proc_env(0);
+        let cache = Cache::new(16);
+        let server = serve_rpcool(&env, &format!("f9/cxl/{}", kind.name()), cache).unwrap();
+        let cenv = rack.proc_env(1);
+        let kv = RpcoolKv::connect(&cenv, &format!("f9/cxl/{}", kind.name())).unwrap();
+        kv.conn().attach_inline(&server);
+        cenv.enter();
+        let (_l, cxl) = run_ycsb(&kv, kind, nkeys, nops, 7).unwrap();
+        drop(kv);
+        server.stop();
+
+        // UDS.
+        let cache = Cache::new(16);
+        let (srv, kv) = serve_net(Flavor::Uds, Arc::clone(&rack.pool.charger), cache);
+        kv.client_inline(&srv);
+        let (_l, uds) = run_ycsb(&kv, kind, nkeys, nops, 7).unwrap();
+        srv.stop();
+
+        // RPCool over DSM (RDMA fallback).
+        let env = rack.proc_env(0);
+        let cache = Cache::new(16);
+        let server = serve_rpcool(&env, &format!("f9/dsm/{}", kind.name()), cache).unwrap();
+        let renv = rack.remote_proc_env();
+        let kv = {
+            // connect_with RDMA through the same helper type.
+            let conn = rpcool::channel::Connection::connect_with(
+                &renv,
+                &format!("f9/dsm/{}", kind.name()),
+                TransportSel::Rdma,
+            )
+            .unwrap();
+            conn.attach_inline(&server);
+            rpcool::apps::memcached::RpcoolKv::from_conn(conn).unwrap()
+        };
+        renv.enter();
+        let (_l, dsm) = run_ycsb(&kv, kind, nkeys, nops, 7).unwrap();
+        drop(kv);
+        server.stop();
+
+        // TCP over IPoIB.
+        let cache = Cache::new(16);
+        let (srv, kv) = serve_net(Flavor::Tcp, Arc::clone(&rack.pool.charger), cache);
+        kv.client_inline(&srv);
+        let (_l, tcp) = run_ycsb(&kv, kind, nkeys, nops, 7).unwrap();
+        srv.stop();
+
+        t.row(&[
+            format!("YCSB-{}", kind.name()),
+            format!("{cxl:.2?}"),
+            format!("{uds:.2?}"),
+            format!("{:.2}×", uds.as_secs_f64() / cxl.as_secs_f64()),
+            format!("{dsm:.2?}"),
+            format!("{tcp:.2?}"),
+            format!("{:.2}×", tcp.as_secs_f64() / dsm.as_secs_f64()),
+        ]);
+    }
+
+    t.print(&format!(
+        "Figure 9 — Memcached YCSB ({nkeys} keys, {nops} ops; paper: RPCool ≥6.0× vs UDS, DSM ≥2.1× vs TCP)"
+    ));
+}

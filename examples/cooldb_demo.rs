@@ -1,0 +1,54 @@
+//! CoolDB demo: the paper's JSON document store on shared memory.
+//! Builds a NoBench corpus, runs range searches, and contrasts the
+//! zero-copy PUT path against the serialized eRPC path side by side.
+//!
+//! Run: `cargo run --release --example cooldb_demo [ndocs] [nsearches]`
+
+use rpcool::apps::cooldb::{
+    run_fig11, serve_net, serve_rpcool, CoolClient, CoolIndex, RpcoolCool,
+};
+use rpcool::baselines::netrpc::Flavor;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+
+fn main() -> rpcool::Result<()> {
+    let ndocs: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5_000);
+    let nsearches: usize =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+
+    let rack = Rack::new(SimConfig::for_bench());
+
+    // --- RPCool (CXL) ---
+    let env = rack.proc_env(0);
+    let index = CoolIndex::new();
+    let server = serve_rpcool(&env, "svc/cooldb", Arc::clone(&index))?;
+    let cenv = rack.proc_env(1);
+    let db = RpcoolCool::connect(&cenv, "svc/cooldb")?;
+    db.conn().attach_inline(&server); // sequential-RTT model (1-core host)
+    cenv.enter();
+    let (build, search) = run_fig11(&db, ndocs, nsearches, 42)?;
+    println!("== CoolDB over {} ==", db.transport_name());
+    println!("build  {ndocs} docs      : {build:.2?}");
+    println!("search {nsearches} queries   : {search:.2?}");
+    println!("index size            : {}", index.len());
+    drop(db);
+    server.stop();
+
+    // --- eRPC baseline (everything serialized) ---
+    let charger = Arc::clone(&rack.pool.charger);
+    let (nserver, ndb, _store) = serve_net(Flavor::ERpc, charger);
+    ndb.client_inline(&nserver);
+    let (nbuild, nsearch) = run_fig11(&ndb, ndocs, nsearches, 42)?;
+    println!("\n== CoolDB over {} ==", ndb.transport_name());
+    println!("build  {ndocs} docs      : {nbuild:.2?}");
+    println!("search {nsearches} queries   : {nsearch:.2?}");
+    nserver.stop();
+
+    println!(
+        "\nspeedup (RPCool vs eRPC): build {:.2}×, search {:.2}×",
+        nbuild.as_secs_f64() / build.as_secs_f64(),
+        nsearch.as_secs_f64() / search.as_secs_f64(),
+    );
+    Ok(())
+}

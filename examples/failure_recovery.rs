@@ -1,0 +1,76 @@
+//! Failure handling walkthrough (paper §4.6/§5.4, Figure 5): a server
+//! crashes mid-conversation; the orchestrator's lease machinery
+//! notices, notifies the surviving client, and reclaims the orphaned
+//! heap once the client lets go. Quotas stop a client from hoarding.
+//!
+//! Run: `cargo run --release --example failure_recovery`
+
+use rpcool::channel::Rpc;
+use rpcool::orchestrator::Notification;
+use rpcool::{Rack, SimConfig};
+use std::time::Duration;
+
+fn main() -> rpcool::Result<()> {
+    let mut cfg = SimConfig::for_tests(); // fast leases for the demo
+    cfg.lease_ttl_ms = 100;
+    cfg.lease_renew_ms = 25;
+    let rack = Rack::new(cfg);
+
+    // Scenario (a): server crash orphans its heap (Fig. 5a).
+    let server_env = rack.proc_env(0);
+    let server = Rpc::open(&server_env, "fragile")?;
+    server.add(1, |ctx| {
+        let v: u64 = ctx.arg_val()?;
+        Ok(v * 2)
+    });
+    let listener = server.spawn_listener();
+
+    let client_env = rack.proc_env(1);
+    let conn = Rpc::connect(&client_env, "fragile")?;
+    client_env.enter();
+    let arg = conn.new_val(21u64)?;
+    println!("call before crash: 21*2 = {}", conn.call_ptr(1, arg)?);
+    println!("live heaps: {}", rack.orch.live_heaps());
+
+    // The server "crashes": its listener stops, its leases lapse.
+    server.stop();
+    listener.join().unwrap();
+    drop(server);
+    println!("\n-- server crashed (stops renewing its lease) --");
+    std::thread::sleep(Duration::from_millis(150));
+    let expired = rack.orch.tick();
+    println!("orchestrator tick: {expired} lease(s) expired");
+
+    for note in rack.orch.poll_notifications(client_env.proc) {
+        match note {
+            Notification::PeerFailed { proc, heap_id } => {
+                println!("client notified: peer proc {proc} failed (heap {heap_id})")
+            }
+            Notification::ChannelDown { name } => println!("client notified: channel '{name}' down"),
+            Notification::HeapReclaimed { heap_id } => println!("heap {heap_id} reclaimed"),
+        }
+    }
+
+    // The client may keep reading previously shared data...
+    println!("client still reads shared data: {}", unsafe {
+        rpcool::memory::ShmPtr::<u64>::from_addr(arg.addr()).read_unchecked()
+    });
+    // ...but communication fails, and closing releases the heap.
+    drop(conn);
+    rack.orch.tick();
+    println!("after client close: live heaps = {}", rack.orch.live_heaps());
+
+    // Scenario (b): quotas stop a hoarding client (Fig. 5b / §5.4).
+    println!("\n-- quota enforcement --");
+    let mut cfg = SimConfig::for_tests();
+    cfg.quota_bytes = 3 * cfg.heap_bytes;
+    let rack2 = Rack::new(cfg);
+    let hoarder = rack2.proc_env(5);
+    for i in 0..4 {
+        match rack2.orch.create_heap(&format!("h{i}"), rack2.cfg.heap_bytes, hoarder.proc) {
+            Ok(_) => println!("mapped heap {i} (held {} MiB)", rack2.orch.quota_held(hoarder.proc) >> 20),
+            Err(e) => println!("heap {i} denied: {e}"),
+        }
+    }
+    Ok(())
+}

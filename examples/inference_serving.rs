@@ -1,0 +1,93 @@
+//! END-TO-END DRIVER (DESIGN.md §3, EXPERIMENTS.md §e2e): load the
+//! AOT-compiled transformer (L2 JAX + L1 Pallas, exported as HLO
+//! text), serve it behind an RPCool channel (L3), and drive batched
+//! next-token requests from multiple clients — reporting latency
+//! percentiles and throughput. Proves the full Rust+JAX+Pallas stack
+//! composes with Python nowhere on the request path.
+//!
+//! Run: `make artifacts && cargo run --release --example inference_serving`
+
+use rpcool::inference::{serve_model, InferenceClient};
+use rpcool::metrics::Histogram;
+use rpcool::runtime::{ModelBundle, PjrtRuntime};
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> rpcool::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let rt = PjrtRuntime::cpu()?;
+    let model = Arc::new(ModelBundle::load(&rt, &dir)?);
+    let cfg = model.cfg;
+    println!(
+        "loaded model: {} layers, d_model {}, seq {}, vocab {} ({} params) on {}",
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.seq,
+        cfg.vocab,
+        cfg.param_count(),
+        rt.platform(),
+    );
+
+    let rack = Rack::new(SimConfig::for_bench());
+    let env = rack.proc_env(0);
+    let server = serve_model(&env, "svc/llm", Arc::clone(&model))?;
+    let listener = server.spawn_listener();
+
+    // Warm the executable.
+    let warm = InferenceClient::connect(&rack.proc_env(9), "svc/llm", cfg.seq, cfg.vocab)?;
+    warm.next_token(&[1, 2, 3])?;
+
+    // Batched load: N clients, each issuing generate() calls.
+    let nclients = 4usize;
+    let per_client = 16usize;
+    let gen_len = 4usize;
+    let hist = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..nclients {
+            let rack = Arc::clone(&rack);
+            let hist = Arc::clone(&hist);
+            s.spawn(move || {
+                let cenv = rack.proc_env(1 + c as u32);
+                let client =
+                    InferenceClient::connect(&cenv, "svc/llm", cfg.seq, cfg.vocab).unwrap();
+                cenv.enter();
+                let mut prompt = vec![(c as i32) + 1, 7, 13];
+                for _ in 0..per_client {
+                    let t = Instant::now();
+                    let out = client.generate(&prompt, gen_len).unwrap();
+                    hist.record(t.elapsed());
+                    prompt = out[..3.min(out.len())].to_vec();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    let total_reqs = (nclients * per_client * gen_len) as f64;
+    println!("\n== inference serving over RPCool (e2e) ==");
+    println!("clients            : {nclients}");
+    println!("generate() calls   : {}", nclients * per_client);
+    println!("next-token RPCs    : {total_reqs}");
+    println!("wall time          : {wall:.2?}");
+    println!(
+        "throughput         : {:.1} tokens/s",
+        total_reqs / wall.as_secs_f64()
+    );
+    println!(
+        "generate() latency : p50 {} | p99 {} | max {}",
+        Histogram::fmt_ns(hist.median_ns()),
+        Histogram::fmt_ns(hist.p99_ns()),
+        Histogram::fmt_ns(hist.max_ns()),
+    );
+    println!(
+        "per-token latency  : ~{}",
+        Histogram::fmt_ns(hist.median_ns() / gen_len as u64)
+    );
+
+    drop(warm);
+    server.stop();
+    listener.join().unwrap();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Memcached + YCSB: Figure 9's experiment in miniature — the same
+//! cache served over RPCool shared memory vs a UNIX domain socket.
+//!
+//! Run: `cargo run --release --example memcached_ycsb [nkeys] [nops]`
+
+use rpcool::apps::memcached::{run_ycsb, serve_net, serve_rpcool, Cache, KvClient, RpcoolKv};
+use rpcool::baselines::netrpc::Flavor;
+use rpcool::workloads::ycsb::WorkloadKind;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+
+fn main() -> rpcool::Result<()> {
+    let nkeys: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5_000);
+    let nops: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+
+    let rack = Rack::new(SimConfig::for_bench());
+    println!("workload  {:>12}  {:>12}  speedup", "RPCool", "UDS");
+
+    for kind in [WorkloadKind::A, WorkloadKind::B, WorkloadKind::C] {
+        // RPCool.
+        let env = rack.proc_env(0);
+        let cache = Cache::new(16);
+        let server = serve_rpcool(&env, &format!("mc/{}", kind.name()), cache)?;
+        let cenv = rack.proc_env(1);
+        let kv = RpcoolKv::connect(&cenv, &format!("mc/{}", kind.name()))?;
+        kv.conn().attach_inline(&server); // sequential-RTT model
+        cenv.enter();
+        let (_l, rpcool) = run_ycsb(&kv, kind, nkeys, nops, 7)?;
+        drop(kv);
+        server.stop();
+
+        // UDS.
+        let cache = Cache::new(16);
+        let (nserver, nkv) = serve_net(Flavor::Uds, Arc::clone(&rack.pool.charger), cache);
+        nkv.client_inline(&nserver);
+        let (_l, uds) = run_ycsb(&nkv, kind, nkeys, nops, 7)?;
+        nserver.stop();
+        let _ = nkv.transport_name();
+
+        println!(
+            "YCSB-{}    {:>12.2?}  {:>12.2?}  {:.2}×",
+            kind.name(),
+            rpcool,
+            uds,
+            uds.as_secs_f64() / rpcool.as_secs_f64()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: the paper's Figure 6 ping-pong program, verbatim shape.
+//!
+//! A server opens channel "mychannel" and registers `process_fn` under
+//! id 100; a client connects, builds a `string` in the connection's
+//! shared heap, and calls — the argument crosses as a native pointer,
+//! no serialization anywhere.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rpcool::channel::Rpc;
+use rpcool::memory::{ShmPtr, ShmString};
+use rpcool::{Rack, SimConfig};
+
+fn main() -> rpcool::Result<()> {
+    // A rack with the full cost model (real CXL-class latencies).
+    let rack = Rack::new(SimConfig::for_bench());
+
+    // --- Server (Fig. 6a) ---
+    let server_env = rack.proc_env(0);
+    let rpc = Rpc::open(&server_env, "mychannel")?;
+    rpc.add(100, |ctx| {
+        // process_fn: read the ping, answer with a heap-allocated pong.
+        let ping: ShmString = ctx.arg_val()?;
+        assert!(ping.eq_str("ping"));
+        ctx.reply_string("pong")
+    });
+    // --- Client (Fig. 6b) ---
+    let client_env = rack.proc_env(1);
+    let conn = Rpc::connect(&client_env, "mychannel")?;
+    // Inline serving: the sequential-RTT model (see Connection docs) —
+    // correct latency accounting on a single-core simulation host.
+    conn.attach_inline(&rpc);
+    client_env.enter();
+
+    let t0 = std::time::Instant::now();
+    let n = 10_000;
+    for _ in 0..n {
+        let arg = conn.new_string("ping")?;
+        let ret = conn.call_ptr(100, arg)?;
+        let pong: ShmString = ShmPtr::<ShmString>::from_addr(ret as usize).read()?;
+        assert!(pong.eq_str("pong"));
+    }
+    let el = t0.elapsed();
+    println!(
+        "quickstart: {n} ping-pong RPCs in {:.2?} ({:.2} µs RTT, {:.0} K req/s)",
+        el,
+        el.as_secs_f64() * 1e6 / n as f64,
+        n as f64 / el.as_secs_f64() / 1e3,
+    );
+
+    drop(conn);
+    rpc.stop();
+    Ok(())
+}

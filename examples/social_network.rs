@@ -1,0 +1,75 @@
+//! DeathStarBench SocialNetwork compose-post over RPCool vs ThriftRPC
+//! (Figure 12's experiment in miniature): same service graph, same
+//! database work, different RPC fabric.
+//!
+//! Run: `cargo run --release --example social_network [nposts]`
+
+use rpcool::apps::socialnet::{sample_post, RpcoolSocial, SocialState, ThriftSocial};
+use rpcool::channel::waiter::SleepPolicy;
+use rpcool::metrics::Histogram;
+use rpcool::util::Rng;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> rpcool::Result<()> {
+    let nposts: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(500);
+    let rack = Rack::new(SimConfig::for_bench());
+    let nusers = 1_000;
+
+    // --- RPCool fabric ---
+    let state = SocialState::new(nusers, 16, 1);
+    let net = RpcoolSocial::start(&rack, Arc::clone(&state), SleepPolicy::Fixed(1), false, "ex")?;
+    net.inline_mode(); // sequential-RTT model on the 1-core host
+    let hist = Histogram::new();
+    let mut rng = Rng::new(2);
+    let t0 = Instant::now();
+    for _ in 0..nposts {
+        let (user, text) = sample_post(&mut rng, nusers);
+        let t = Instant::now();
+        net.compose_post(user, &text)?;
+        hist.record(t.elapsed());
+    }
+    let rpcool_wall = t0.elapsed();
+    println!("== compose-post over RPCool ==");
+    println!(
+        "{} posts in {:.2?} — p50 {} p99 {} ({:.0} req/s)",
+        nposts,
+        rpcool_wall,
+        Histogram::fmt_ns(hist.median_ns()),
+        Histogram::fmt_ns(hist.p99_ns()),
+        nposts as f64 / rpcool_wall.as_secs_f64()
+    );
+    net.stop();
+
+    // --- Thrift fabric ---
+    let state = SocialState::new(nusers, 16, 1);
+    let net = ThriftSocial::start(Arc::clone(&rack.pool.charger), Arc::clone(&state));
+    net.inline_mode();
+    let hist = Histogram::new();
+    let mut rng = Rng::new(2);
+    let t0 = Instant::now();
+    for _ in 0..nposts {
+        let (user, text) = sample_post(&mut rng, nusers);
+        let t = Instant::now();
+        net.compose_post(user, &text)?;
+        hist.record(t.elapsed());
+    }
+    let thrift_wall = t0.elapsed();
+    println!("\n== compose-post over ThriftRPC ==");
+    println!(
+        "{} posts in {:.2?} — p50 {} p99 {} ({:.0} req/s)",
+        nposts,
+        thrift_wall,
+        Histogram::fmt_ns(hist.median_ns()),
+        Histogram::fmt_ns(hist.p99_ns()),
+        nposts as f64 / thrift_wall.as_secs_f64()
+    );
+    net.stop();
+
+    println!(
+        "\nRPCool vs Thrift wall-time ratio: {:.2}× (paper: comparable — DB+nginx dominate)",
+        thrift_wall.as_secs_f64() / rpcool_wall.as_secs_f64()
+    );
+    Ok(())
+}

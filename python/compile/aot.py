@@ -1,0 +1,125 @@
+"""AOT export: lower the L2 model (with its L1 Pallas kernels inlined
+via interpret=True) to HLO TEXT for the Rust PJRT runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Produces:
+  model.hlo.txt        — transformer forward (tokens + params → logits)
+  matmul.hlo.txt       — standalone FFN kernel (smoke/bench target)
+  attention.hlo.txt    — standalone attention kernel
+  model_meta.txt       — arg order + shapes (the Rust-side contract)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+import numpy as np
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.matmul import matmul_bias_gelu
+from compile.model import ModelCfg, forward_flat, init_params, param_shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(cfg: ModelCfg, out_dir: str) -> str:
+    names = sorted(param_shapes(cfg).keys())
+    shapes = param_shapes(cfg)
+    args = [jax.ShapeDtypeStruct((cfg.seq,), jnp.int32)]
+    args += [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+
+    import functools
+
+    fn = functools.partial(forward_flat, cfg, use_pallas=True)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    # The Rust-side calling convention: arg 0 is tokens, then params
+    # in sorted-name order.
+    meta = [f"tokens i32 {cfg.seq}"]
+    meta += [
+        f"{n} f32 {'x'.join(str(d) for d in shapes[n])}" for n in names
+    ]
+    meta.append(f"# cfg vocab={cfg.vocab} d_model={cfg.d_model} "
+                f"n_heads={cfg.n_heads} n_layers={cfg.n_layers} "
+                f"d_ff={cfg.d_ff} seq={cfg.seq}")
+    with open(os.path.join(out_dir, "model_meta.txt"), "w") as f:
+        f.write("\n".join(meta) + "\n")
+
+    # Parameter values, concatenated f32 little-endian in sorted-name
+    # order — the Rust runtime mmaps/reads this alongside the HLO.
+    params = init_params(cfg, seed=0)
+    with open(os.path.join(out_dir, "params.bin"), "wb") as f:
+        for n in names:
+            f.write(np.asarray(params[n], dtype="<f4").tobytes())
+    return path
+
+
+def export_matmul(out_dir: str, m=128, k=128, n=128) -> str:
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    lowered = jax.jit(
+        lambda x, w, b: (matmul_bias_gelu(x, w, b, interpret=True),)
+    ).lower(spec(m, k), spec(k, n), spec(n))
+    path = os.path.join(out_dir, "matmul.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def export_attention(out_dir: str, lq=128, lk=128, d=64) -> str:
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    lowered = jax.jit(
+        lambda q, k, v: (flash_attention(q, k, v, interpret=True),)
+    ).lower(spec(lq, d), spec(lk, d), spec(lk, d))
+    path = os.path.join(out_dir, "attention.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--d-ff", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=32)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = ModelCfg(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_heads=args.n_heads,
+        n_layers=args.n_layers,
+        d_ff=args.d_ff,
+        seq=args.seq,
+    )
+    p1 = export_model(cfg, args.out_dir)
+    p2 = export_matmul(args.out_dir)
+    p3 = export_attention(args.out_dir)
+    for p in (p1, p2, p3):
+        print(f"wrote {p} ({os.path.getsize(p)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: flash-style causal attention with online softmax.
+
+The paper's GPU analogue would tile Q/K/V into threadblock shared
+memory; the TPU rethink (DESIGN.md §2) streams KV blocks HBM→VMEM via
+BlockSpec while one Q block stays resident, carrying the online-softmax
+running max/denominator — the numerically stable single-pass scheme.
+
+Grid: (q_blocks, kv_blocks); the KV axis is the inner (sequential)
+loop, so the running statistics persist in the output block + carries.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, bq, bk, nk, scale, causal):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    # Rescale previous partials, fold in this block.
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    o_ref[...] = o_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        # Guard fully-masked rows (l == 0 can only happen off-causal).
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[...] = o_ref[...] / denom[:, None]
+
+
+def flash_attention(q, k, v, *, bq=128, bkv=128, causal=True, interpret=True):
+    """Single-head attention. q: (Lq, D), k/v: (Lk, D). Returns q.dtype."""
+    lq, d = q.shape
+    lk, d2 = k.shape
+    assert d == d2 and v.shape == (lk, d)
+    bq = min(bq, lq)
+    bkv = min(bkv, lk)
+    assert lq % bq == 0 and lk % bkv == 0, f"({lq},{lk}) not divisible by ({bq},{bkv})"
+    nk = lk // bkv
+    scale = 1.0 / (d ** 0.5)
+
+    out, _m, _l = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bkv, nk=nk, scale=scale, causal=causal
+        ),
+        grid=(lq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda qi, ki: (qi, 0)),   # Q resident
+            pl.BlockSpec((bkv, d), lambda qi, ki: (ki, 0)),  # K streamed
+            pl.BlockSpec((bkv, d), lambda qi, ki: (ki, 0)),  # V streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((bq,), lambda qi, ki: (qi,)),
+            pl.BlockSpec((bq,), lambda qi, ki: (qi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lq, d), jnp.float32),
+            jax.ShapeDtypeStruct((lq,), jnp.float32),  # running max
+            jax.ShapeDtypeStruct((lq,), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out.astype(q.dtype)
+
+
+def vmem_bytes(bq=128, bkv=128, d=128, dtype_bytes=4):
+    """Static VMEM footprint for a block choice."""
+    q_blk = bq * d * dtype_bytes
+    kv_blk = 2 * bkv * d * dtype_bytes
+    o_acc = bq * d * 4
+    stats = 2 * bq * 4
+    return q_blk + kv_blk + o_acc + stats

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + GELU.
+
+TPU-shaped even though we execute via interpret=True on CPU
+(DESIGN.md §2, Hardware-Adaptation): blocks are MXU-aligned
+(128×128 systolic tiles), the K reduction walks HBM→VMEM block by
+block via BlockSpec index maps, and accumulation happens in f32 (as
+the MXU accumulates) inside the output block, which stays resident in
+VMEM across the K loop.
+
+VMEM footprint per grid step (defaults bm=bn=bk=128, f32):
+  x-block 64 KiB + w-block 64 KiB + out/acc 64 KiB + bias 512 B
+  ≈ 192 KiB ≪ 16 MiB VMEM — ample room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """One (i, j, k) grid step: o += x[i,k] @ w[k,j]; epilogue at k=nk-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped block matmul with f32 accumulation.
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "gelu":
+            y = jax.nn.gelu(y, approximate=True)
+        o_ref[...] = y
+
+
+def matmul_bias_gelu(x, w, b, *, bm=128, bn=128, bk=128, activation="gelu", interpret=True):
+    """act(x @ w + b), Pallas-tiled. x: (M,K), w: (K,N), b: (N,).
+
+    Returns x.dtype; accumulation is always f32 (MXU semantics).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            # x: block row i, K-step kk — the HBM→VMEM schedule.
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # w: K-step kk, block column j.
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            # bias: block column j (broadcast over rows).
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+    return out.astype(x.dtype)
+
+
+def vmem_bytes(bm=128, bn=128, bk=128, dtype_bytes=4):
+    """Static VMEM footprint estimate for a block choice (perf model)."""
+    x_blk = bm * bk * dtype_bytes
+    w_blk = bk * bn * dtype_bytes
+    out_acc = bm * bn * 4
+    bias = bn * dtype_bytes
+    return x_blk + w_blk + out_acc + bias
+
+
+def mxu_utilization(m, n, k, bm=128, bn=128, bk=128):
+    """Fraction of MXU issue slots doing useful work for a block choice
+    (1.0 when every 128×128×128 tile is fully populated)."""
+    def eff(dim, blk):
+        full = dim // blk
+        rem = dim % blk
+        tiles = full + (1 if rem else 0)
+        return dim / (tiles * blk)
+
+    return eff(m, bm) * eff(n, bn) * eff(k, bk)

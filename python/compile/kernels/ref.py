@@ -1,0 +1,36 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+These are the ground truth the pytest/hypothesis suites compare the
+Pallas kernels against. They are deliberately written in the most
+obvious way possible — no tiling, no tricks — so a disagreement always
+indicts the kernel, not the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_gelu_ref(x, w, b, *, activation="gelu"):
+    """y = act(x @ w + b) — the transformer FFN hot-spot."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "gelu":
+        y = jax.nn.gelu(y, approximate=True)
+    elif activation == "none":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation}")
+    return y.astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Scaled dot-product attention with optional causal mask."""
+    d = q.shape[-1]
+    logits = jnp.einsum("qd,kd->qk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    if causal:
+        qlen, klen = logits.shape
+        mask = jnp.tril(jnp.ones((qlen, klen), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("qk,kd->qd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

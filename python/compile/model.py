@@ -1,0 +1,145 @@
+"""L2: the served model — a small decoder-only transformer whose
+matmul/attention hot-spots are the L1 Pallas kernels.
+
+This is the compute RPCool serves in our end-to-end driver
+(`examples/inference_serving.rs`): the model is lowered ONCE to HLO
+text by `aot.py`, loaded by the Rust runtime via PJRT, and executed on
+the request path with zero Python.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.matmul import matmul_bias_gelu
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    seq: int = 32
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+def param_shapes(cfg: ModelCfg):
+    """Name → shape for every parameter (layout contract with Rust)."""
+    shapes = {"embed": (cfg.vocab, cfg.d_model)}
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        shapes[p + "wq"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wk"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wv"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wo"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "w1"] = (cfg.d_model, cfg.d_ff)
+        shapes[p + "b1"] = (cfg.d_ff,)
+        shapes[p + "w2"] = (cfg.d_ff, cfg.d_model)
+        shapes[p + "b2"] = (cfg.d_model,)
+        shapes[p + "ln1"] = (cfg.d_model,)
+        shapes[p + "ln2"] = (cfg.d_model,)
+    shapes["ln_f"] = (cfg.d_model,)
+    shapes["unembed"] = (cfg.d_model, cfg.vocab)
+    return shapes
+
+
+def init_params(cfg: ModelCfg, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("b1", "b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            scale = 0.02
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _rmsnorm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _block(cfg: ModelCfg, params, prefix, x, *, use_pallas=True):
+    """One pre-norm transformer block over (seq, d_model)."""
+    h = _rmsnorm(x, params[prefix + "ln1"])
+    q = h @ params[prefix + "wq"]
+    k = h @ params[prefix + "wk"]
+    v = h @ params[prefix + "wv"]
+
+    heads = []
+    for hd in range(cfg.n_heads):
+        sl = slice(hd * cfg.d_head, (hd + 1) * cfg.d_head)
+        if use_pallas:
+            heads.append(
+                flash_attention(
+                    q[:, sl], k[:, sl], v[:, sl],
+                    bq=min(128, cfg.seq), bkv=min(128, cfg.seq),
+                    causal=True, interpret=True,
+                )
+            )
+        else:
+            from compile.kernels.ref import attention_ref
+
+            heads.append(attention_ref(q[:, sl], k[:, sl], v[:, sl], causal=True))
+    attn = jnp.concatenate(heads, axis=-1) @ params[prefix + "wo"]
+    x = x + attn
+
+    h = _rmsnorm(x, params[prefix + "ln2"])
+    if use_pallas:
+        ff = matmul_bias_gelu(
+            h, params[prefix + "w1"], params[prefix + "b1"],
+            bm=min(128, cfg.seq), bn=min(128, cfg.d_ff), bk=min(128, cfg.d_model),
+            activation="gelu", interpret=True,
+        )
+        ff = matmul_bias_gelu(
+            ff, params[prefix + "w2"], params[prefix + "b2"],
+            bm=min(128, cfg.seq), bn=min(128, cfg.d_model), bk=min(128, cfg.d_ff),
+            activation="none", interpret=True,
+        )
+    else:
+        from compile.kernels.ref import matmul_bias_gelu_ref
+
+        ff = matmul_bias_gelu_ref(h, params[prefix + "w1"], params[prefix + "b1"])
+        ff = matmul_bias_gelu_ref(
+            ff, params[prefix + "w2"], params[prefix + "b2"], activation="none"
+        )
+    return x + ff
+
+
+def forward(cfg: ModelCfg, params, tokens, *, use_pallas=True):
+    """tokens (seq,) int32 → logits (seq, vocab) f32."""
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params, f"l{i}.", x, use_pallas=use_pallas)
+    x = _rmsnorm(x, params["ln_f"])
+    return (x @ params["unembed"]).astype(jnp.float32)
+
+
+def forward_flat(cfg: ModelCfg, *flat_args, use_pallas=True):
+    """Positional-argument variant for AOT export: (tokens, *params in
+    sorted-name order) — the calling convention the Rust runtime uses."""
+    names = sorted(param_shapes(cfg).keys())
+    tokens = flat_args[0]
+    params = dict(zip(names, flat_args[1:]))
+    return forward(cfg, params, tokens, use_pallas=use_pallas)
+
+
+def flat_args(cfg: ModelCfg, params, tokens):
+    names = sorted(param_shapes(cfg).keys())
+    return (tokens, *[params[n] for n in names])
+
+
+@functools.lru_cache(maxsize=4)
+def jitted(cfg: ModelCfg, use_pallas: bool = True):
+    return jax.jit(functools.partial(forward_flat, cfg, use_pallas=use_pallas))

@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps block-divisible shapes and both dtypes; explicit
+cases pin the MXU-shaped defaults. This is the CORE correctness signal
+for the compute layer — if these pass, the HLO the Rust runtime loads
+computes the right numbers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, vmem_bytes as attn_vmem
+from compile.kernels.matmul import matmul_bias_gelu, mxu_utilization, vmem_bytes
+from compile.kernels.ref import attention_ref, matmul_bias_gelu_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ----------------------------------------------------------- matmul
+
+def tol_for(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384), (32, 64, 96)])
+@pytest.mark.parametrize("activation", ["gelu", "none"])
+def test_matmul_matches_ref(m, k, n, activation):
+    x, w, b = rand(1, m, k), rand(2, k, n), rand(3, n)
+    got = matmul_bias_gelu(x, w, b, bm=32, bn=32, bk=32, activation=activation)
+    want = matmul_bias_gelu_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, **tol_for(jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    blk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(mi, ki, ni, blk, seed):
+    m, k, n = mi * blk, ki * blk, ni * blk
+    x, w, b = rand(seed, m, k), rand(seed + 1, k, n), rand(seed + 2, n)
+    got = matmul_bias_gelu(x, w, b, bm=blk, bn=blk, bk=blk)
+    want = matmul_bias_gelu_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16(seed):
+    x = rand(seed, 64, 64, dtype=jnp.bfloat16)
+    w = rand(seed + 1, 64, 64, dtype=jnp.bfloat16)
+    b = rand(seed + 2, 64, dtype=jnp.bfloat16)
+    got = matmul_bias_gelu(x, w, b, bm=32, bn=32, bk=32)
+    want = matmul_bias_gelu_ref(x, w, b)
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), **tol_for(jnp.bfloat16)
+    )
+
+
+def test_matmul_block_shape_invariance():
+    # Different tilings must give identical results.
+    x, w, b = rand(1, 128, 128), rand(2, 128, 128), rand(3, 128)
+    a = matmul_bias_gelu(x, w, b, bm=128, bn=128, bk=128)
+    c = matmul_bias_gelu(x, w, b, bm=32, bn=64, bk=16)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_indivisible():
+    x, w, b = rand(1, 100, 64), rand(2, 64, 64), rand(3, 64)
+    with pytest.raises(AssertionError):
+        matmul_bias_gelu(x, w, b, bm=64, bn=64, bk=64)
+
+
+def test_vmem_model_sane():
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20  # fits VMEM
+    assert vmem_bytes(512, 512, 512) > vmem_bytes(128, 128, 128)
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(100, 128, 128) < 1.0
+
+
+# -------------------------------------------------------- attention
+
+@pytest.mark.parametrize("lq,lk,d", [(128, 128, 64), (64, 128, 32), (32, 32, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_matches_ref(lq, lk, d, causal):
+    if causal and lq != lk:
+        pytest.skip("causal requires square for the ref mask to align")
+    q, k, v = rand(1, lq, d), rand(2, lk, d), rand(3, lk, d)
+    got = flash_attention(q, k, v, bq=32, bkv=32, causal=causal)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    qb=st.integers(1, 4),
+    kb=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    blk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis_noncausal(qb, kb, d, blk, seed):
+    lq, lk = qb * blk, kb * blk
+    q, k, v = rand(seed, lq, d), rand(seed + 1, lk, d), rand(seed + 2, lk, d)
+    got = flash_attention(q, k, v, bq=blk, bkv=blk, causal=False)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nblk=st.integers(1, 4),
+    blk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis_causal(nblk, blk, seed):
+    n = nblk * blk
+    q, k, v = rand(seed, n, 32), rand(seed + 1, n, 32), rand(seed + 2, n, 32)
+    got = flash_attention(q, k, v, bq=blk, bkv=blk, causal=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_block_invariance():
+    q, k, v = rand(1, 128, 64), rand(2, 128, 64), rand(3, 128, 64)
+    a = flash_attention(q, k, v, bq=128, bkv=128)
+    b = flash_attention(q, k, v, bq=32, bkv=64)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causality():
+    # Changing future keys must not change past outputs.
+    q, k, v = rand(1, 64, 32), rand(2, 64, 32), rand(3, 64, 32)
+    base = flash_attention(q, k, v, bq=16, bkv=16, causal=True)
+    k2 = k.at[48:].set(999.0)
+    v2 = v.at[48:].set(-999.0)
+    pert = flash_attention(q, k2, v2, bq=16, bkv=16, causal=True)
+    np.testing.assert_allclose(base[:48], pert[:48], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[48:], pert[48:])
+
+
+def test_attention_vmem_model():
+    assert attn_vmem(128, 128, 64) < 16 * 2**20

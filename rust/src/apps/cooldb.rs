@@ -1,0 +1,558 @@
+//! CoolDB (paper §6.3, Figure 11): the paper's custom JSON document
+//! store, built *for* shared memory.
+//!
+//! Clients allocate documents directly in the channel-wide shared
+//! heap and pass references; CoolDB **takes ownership of the object**
+//! — no copy at all on PUT. Reads return a pointer to the in-memory
+//! tree. Searches walk the shared trees and return a vector of
+//! pointers to the matching documents.
+//!
+//! The contrast frameworks (same workload, Figure 11):
+//!  * eRPC / gRPC — documents must be serialized both ways;
+//!  * ZhangRPC — per-node object headers + fat refs + link_reference;
+//!  * RPCool over RDMA — ownership ping-pong moves pages on build.
+
+use crate::apps::doc::{ShmVal, Val};
+use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
+use crate::baselines::wire::{Wire, WireBuf, WireCur};
+use crate::channel::{ChannelOpts, Connection, RpcServer, TransportSel};
+use crate::error::{Result, RpcError};
+use crate::memory::containers::{ShmString, ShmVec};
+use crate::memory::pod::Pod;
+use crate::memory::pool::Charger;
+use crate::memory::ptr::ShmPtr;
+use crate::rack::ProcEnv;
+use crate::workloads::nobench::NumRangeQuery;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+pub const F_PUT: u32 = 20;
+pub const F_GET: u32 = 21;
+pub const F_SEARCH: u32 = 22;
+
+/// Server-side index: key → address of the owned ShmVal in the shared
+/// heap. The documents themselves never move.
+pub struct CoolIndex {
+    map: RwLock<HashMap<String, usize>>,
+}
+
+impl CoolIndex {
+    pub fn new() -> Arc<CoolIndex> {
+        Arc::new(CoolIndex { map: RwLock::new(HashMap::new()) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Clone, Copy)]
+pub struct PutArg {
+    pub key: ShmString,
+    /// Address of the document (ownership transfers to CoolDB).
+    pub doc: ShmPtr<ShmVal>,
+}
+unsafe impl Pod for PutArg {}
+
+#[derive(Clone, Copy)]
+pub struct SearchArg {
+    pub lo: f64,
+    pub hi: f64,
+}
+unsafe impl Pod for SearchArg {}
+
+/// Open a CoolDB server over a channel-wide shared heap (clients
+/// allocate documents straight into it — Fig. 4b topology).
+pub fn serve_rpcool(env: &ProcEnv, name: &str, index: Arc<CoolIndex>) -> Result<RpcServer> {
+    let mut opts = ChannelOpts::from_config(&env.rack.cfg);
+    opts.shared_heap = true;
+    // Documents accumulate: give CoolDB a big heap.
+    opts.heap_bytes = opts.heap_bytes.max(192 << 20);
+    let server = RpcServer::open(env, name, opts)?;
+
+    let idx = Arc::clone(&index);
+    server.add(F_PUT, move |ctx| {
+        let arg: PutArg = ctx.arg_val()?;
+        let key = arg.key.to_string()?;
+        // Ownership transfer: CoolDB records the pointer. Zero copy.
+        idx.map.write().unwrap().insert(key, arg.doc.addr());
+        Ok(0)
+    });
+
+    let idx = Arc::clone(&index);
+    server.add(F_GET, move |ctx| {
+        let key: ShmString = ctx.arg_val()?;
+        let key = key.to_string()?;
+        match idx.map.read().unwrap().get(&key) {
+            Some(addr) => Ok(*addr as u64),
+            None => Ok(u64::MAX),
+        }
+    });
+
+    let idx = Arc::clone(&index);
+    server.add(F_SEARCH, move |ctx| {
+        let q: SearchArg = ctx.arg_val()?;
+        // Walk every document tree in shared memory; collect pointers
+        // to matches (the zero-serialization search path).
+        let addrs: Vec<usize> = { idx.map.read().unwrap().values().copied().collect() };
+        let mut hits: ShmVec<ShmPtr<ShmVal>> = ShmVec::new();
+        for addr in addrs {
+            // Trusted scan over CoolDB-owned documents (validated at
+            // PUT): borrow, don't copy (§Perf).
+            let p: ShmPtr<ShmVal> = ShmPtr::from_addr(addr);
+            crate::simproc::check_access(addr, std::mem::size_of::<ShmVal>(), false)?;
+            let doc: &ShmVal = unsafe { p.as_ref() };
+            if let Some(n) = doc.get_num_fast("num") {
+                if n >= q.lo && n < q.hi {
+                    hits.push(ctx.heap.as_ref(), p)?;
+                }
+            }
+        }
+        ctx.reply_val(hits)
+    });
+
+    Ok(server)
+}
+
+/// CoolDB client interface (benches generic over transports).
+pub trait CoolClient: Send + Sync {
+    /// Store a document; CoolDB takes ownership.
+    fn put(&self, key: &str, doc: &Val) -> Result<()>;
+    /// Number of matches whose `num` ∈ [lo, hi) — and (for shared
+    /// memory transports) direct access to each match.
+    fn search(&self, q: NumRangeQuery) -> Result<usize>;
+    fn get_num(&self, key: &str) -> Result<Option<f64>>;
+    fn transport_name(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------- RPCool
+
+pub struct RpcoolCool {
+    conn: Connection,
+    /// Seal+sandbox every PUT ("RPCool (Secure)" in Fig. 11).
+    secure: bool,
+}
+
+impl RpcoolCool {
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<RpcoolCool> {
+        Self::connect_with(env, name, TransportSel::Auto)
+    }
+
+    pub fn connect_with(env: &ProcEnv, name: &str, sel: TransportSel) -> Result<RpcoolCool> {
+        Ok(RpcoolCool { conn: Connection::connect_with(env, name, sel)?, secure: false })
+    }
+
+    /// The "RPCool (Secure)" configuration: the PUT argument rides in
+    /// a sealed scope and the server processes it sandboxed.
+    pub fn connect_secure(env: &ProcEnv, name: &str) -> Result<RpcoolCool> {
+        Ok(RpcoolCool { conn: Connection::connect(env, name)?, secure: true })
+    }
+
+    pub fn conn(&self) -> &Connection {
+        &self.conn
+    }
+}
+
+impl CoolClient for RpcoolCool {
+    fn put(&self, key: &str, doc: &Val) -> Result<()> {
+        // Build the pointer-rich document directly in the shared heap
+        // (this allocation IS the entire "serialization").
+        let heap = self.conn.heap();
+        let shm = doc.to_shm(heap.as_ref())?;
+        let doc_addr = heap.new_val(shm)?;
+        if self.secure {
+            // Sealed+sandboxed argument scope: the whole argument (key
+            // bytes included) lives inside the sandbox window; the
+            // document tree the server takes ownership of stays in the
+            // heap and is validated by the handler's checked reads.
+            let scope = self.conn.create_scope(4096)?;
+            let arg = PutArg {
+                key: ShmString::from_str(&scope, key)?,
+                doc: ShmPtr::from_addr(doc_addr),
+            };
+            let a = scope.new_val(arg)?;
+            self.conn.call_secure(F_PUT, &scope, a, std::mem::size_of::<PutArg>())?;
+        } else {
+            let arg = PutArg {
+                key: ShmString::from_str(heap.as_ref(), key)?,
+                doc: ShmPtr::from_addr(doc_addr),
+            };
+            let a = heap.new_val(arg)?;
+            self.conn.call(F_PUT, a, std::mem::size_of::<PutArg>())?;
+            heap.free_bytes(a);
+        }
+        Ok(())
+    }
+
+    fn search(&self, q: NumRangeQuery) -> Result<usize> {
+        let heap = self.conn.heap();
+        let a = heap.new_val(SearchArg { lo: q.lo, hi: q.hi })?;
+        let ret = self.conn.call(F_SEARCH, a, std::mem::size_of::<SearchArg>())?;
+        heap.free_bytes(a);
+        let mut hits: ShmVec<ShmPtr<ShmVal>> =
+            ShmPtr::<ShmVec<ShmPtr<ShmVal>>>::from_addr(ret as usize).read()?;
+        let n = hits.len();
+        // The client can dereference every hit directly — prove it by
+        // touching the first one.
+        if n > 0 {
+            let first = hits.get(0)?;
+            let _doc: ShmVal = first.read()?;
+        }
+        hits.destroy(heap.as_ref());
+        heap.free_bytes(ret as usize);
+        Ok(n)
+    }
+
+    fn get_num(&self, key: &str) -> Result<Option<f64>> {
+        let heap = self.conn.heap();
+        let k = ShmString::from_str(heap.as_ref(), key)?;
+        let a = heap.new_val(k)?;
+        let ret = self.conn.call(F_GET, a, std::mem::size_of::<ShmString>())?;
+        heap.free_bytes(a);
+        if ret == u64::MAX {
+            return Ok(None);
+        }
+        let doc: ShmVal = ShmPtr::<ShmVal>::from_addr(ret as usize).read()?;
+        Ok(doc.get("num")?.and_then(|v| v.as_num()))
+    }
+
+    fn transport_name(&self) -> &'static str {
+        if self.conn.shared.is_dsm() {
+            "RPCool(RDMA)"
+        } else {
+            "RPCool"
+        }
+    }
+}
+
+// ----------------------------------------------------------- ZhangRPC
+
+/// CoolDB through ZhangRPC's object model: every node of every
+/// document becomes a headered CXL object linked by fat refs, and
+/// each RPC pays their failure-resilience commit (§6.2's analysis).
+pub struct ZhangCool {
+    conn: Connection,
+    charger: Arc<Charger>,
+}
+
+impl ZhangCool {
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<ZhangCool> {
+        let conn = Connection::connect(env, name)?;
+        let charger = Arc::clone(&env.rack.pool.charger);
+        Ok(ZhangCool { conn, charger })
+    }
+
+    /// Sequential-RTT model (mirrors `Connection::attach_inline`).
+    pub fn conn_inline(&self, server: &crate::channel::RpcServer) {
+        self.conn.attach_inline(server);
+    }
+}
+
+impl CoolClient for ZhangCool {
+    fn put(&self, key: &str, doc: &Val) -> Result<()> {
+        let heap = self.conn.heap();
+        // Zhang's allocator: header + CXLRef + link per node.
+        let nodes = doc.node_count() as u64;
+        self.charger.charge_ns(nodes * self.charger.cost.zhang_obj_ns);
+        let shm = doc.to_shm(heap.as_ref())?;
+        let doc_addr = heap.new_val(shm)?;
+        let arg = PutArg {
+            key: ShmString::from_str(heap.as_ref(), key)?,
+            doc: ShmPtr::from_addr(doc_addr),
+        };
+        let a = heap.new_val(arg)?;
+        self.charger.charge_ns(self.charger.cost.zhang_commit_ns);
+        self.conn.call(F_PUT, a, std::mem::size_of::<PutArg>())?;
+        heap.free_bytes(a);
+        Ok(())
+    }
+
+    fn search(&self, q: NumRangeQuery) -> Result<usize> {
+        let heap = self.conn.heap();
+        let a = heap.new_val(SearchArg { lo: q.lo, hi: q.hi })?;
+        self.charger.charge_ns(self.charger.cost.zhang_commit_ns);
+        let ret = self.conn.call(F_SEARCH, a, std::mem::size_of::<SearchArg>())?;
+        heap.free_bytes(a);
+        let mut hits: ShmVec<ShmPtr<ShmVal>> =
+            ShmPtr::<ShmVec<ShmPtr<ShmVal>>>::from_addr(ret as usize).read()?;
+        // Dereferencing through fat refs costs per access.
+        self.charger.charge_ns(hits.len() as u64 * self.charger.cost.zhang_obj_ns);
+        let n = hits.len();
+        hits.destroy(heap.as_ref());
+        heap.free_bytes(ret as usize);
+        Ok(n)
+    }
+
+    fn get_num(&self, key: &str) -> Result<Option<f64>> {
+        let heap = self.conn.heap();
+        let k = ShmString::from_str(heap.as_ref(), key)?;
+        let a = heap.new_val(k)?;
+        self.charger.charge_ns(self.charger.cost.zhang_commit_ns);
+        let ret = self.conn.call(F_GET, a, std::mem::size_of::<ShmString>())?;
+        heap.free_bytes(a);
+        if ret == u64::MAX {
+            return Ok(None);
+        }
+        let doc: ShmVal = ShmPtr::<ShmVal>::from_addr(ret as usize).read()?;
+        Ok(doc.get("num")?.and_then(|v| v.as_num()))
+    }
+
+    fn transport_name(&self) -> &'static str {
+        "ZhangRPC"
+    }
+}
+
+// ------------------------------------------------------- net baselines
+
+/// CoolDB over eRPC/gRPC: a host-memory store fed by serialized docs.
+pub struct NetCoolStore {
+    docs: Mutex<HashMap<String, Val>>,
+}
+
+pub fn serve_net(
+    flavor: Flavor,
+    charger: Arc<Charger>,
+) -> (NetRpcServer, NetCool, Arc<NetCoolStore>) {
+    let store = Arc::new(NetCoolStore { docs: Mutex::new(HashMap::new()) });
+    let (server, client) = netrpc::pair(flavor, Arc::clone(&charger));
+
+    let s = Arc::clone(&store);
+    let ch = Arc::clone(&charger);
+    server.add(F_PUT, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?.to_string();
+        let doc = Val::decode(&mut cur)?;
+        // Protobuf-class decoders pay per object node, not per message
+        // (the generic netrpc layer charges objs=1).
+        crate::baselines::wire::charge_serialize(&ch, 0, doc.node_count());
+        s.docs.lock().unwrap().insert(key, doc);
+        Ok(vec![])
+    });
+
+    let s = Arc::clone(&store);
+    let ch = Arc::clone(&charger);
+    server.add(F_SEARCH, move |req| {
+        let mut cur = WireCur::new(req);
+        let lo = cur.f64()?;
+        let hi = cur.f64()?;
+        // Serialize every matching document back — the cost RPCool's
+        // pointer-returning search avoids.
+        let docs = s.docs.lock().unwrap();
+        let mut out = WireBuf::new();
+        let matches: Vec<&Val> = docs
+            .values()
+            .filter(|d| {
+                d.get("num").and_then(Val::as_num).map(|n| n >= lo && n < hi).unwrap_or(false)
+            })
+            .collect();
+        out.put_varint(matches.len() as u64);
+        let mut nodes = 0usize;
+        for d in matches {
+            nodes += d.node_count();
+            d.encode(&mut out);
+        }
+        // Per-node encode cost of the matched documents.
+        crate::baselines::wire::charge_serialize(&ch, 0, nodes);
+        Ok(out.bytes)
+    });
+
+    let s = Arc::clone(&store);
+    server.add(F_GET, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?;
+        let docs = s.docs.lock().unwrap();
+        let mut out = WireBuf::new();
+        match docs.get(key) {
+            Some(d) => {
+                out.put_varint(1);
+                d.encode(&mut out);
+            }
+            None => out.put_varint(0),
+        }
+        Ok(out.bytes)
+    });
+
+    let cool = NetCool { client, charger };
+    (server, cool, store)
+}
+
+pub struct NetCool {
+    client: NetRpcClient,
+    charger: Arc<Charger>,
+}
+
+impl NetCool {
+    /// Sequential-RTT model (mirrors `Connection::attach_inline`).
+    pub fn client_inline(&self, server: &NetRpcServer) {
+        self.client.attach_inline(server);
+    }
+}
+
+impl CoolClient for NetCool {
+    fn put(&self, key: &str, doc: &Val) -> Result<()> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        doc.encode(&mut b);
+        // Per-node encode cost (see serve_net).
+        crate::baselines::wire::charge_serialize(&self.charger, 0, doc.node_count());
+        self.client.call(F_PUT, &b.bytes)?;
+        Ok(())
+    }
+
+    fn search(&self, q: NumRangeQuery) -> Result<usize> {
+        let mut b = WireBuf::new();
+        b.put_f64(q.lo);
+        b.put_f64(q.hi);
+        let reply = self.client.call(F_SEARCH, &b.bytes)?;
+        let mut cur = WireCur::new(&reply);
+        let n = cur.varint()? as usize;
+        // Deserialize the matches (the client must, to use them).
+        let mut nodes = 0usize;
+        for _ in 0..n {
+            nodes += Val::decode(&mut cur)?.node_count();
+        }
+        crate::baselines::wire::charge_serialize(&self.charger, 0, nodes);
+        Ok(n)
+    }
+
+    fn get_num(&self, key: &str) -> Result<Option<f64>> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        let reply = self.client.call(F_GET, &b.bytes)?;
+        let mut cur = WireCur::new(&reply);
+        match cur.varint()? {
+            0 => Ok(None),
+            1 => Ok(Val::decode(&mut cur)?.get("num").and_then(Val::as_num)),
+            t => Err(RpcError::Serialization(format!("bad GET reply {t}"))),
+        }
+    }
+
+    fn transport_name(&self) -> &'static str {
+        self.client.flavor().name()
+    }
+}
+
+// ------------------------------------------------------------- driver
+
+/// The Figure 11 workload: build with NoBench docs, then range
+/// searches. Returns (build, search) wall times.
+pub fn run_fig11(
+    client: &dyn CoolClient,
+    ndocs: usize,
+    nsearches: usize,
+    seed: u64,
+) -> Result<(std::time::Duration, std::time::Duration)> {
+    let mut gen = crate::workloads::nobench::NoBench::new(seed);
+    let corpus = gen.corpus(ndocs);
+    let t0 = std::time::Instant::now();
+    for (key, doc) in &corpus {
+        client.put(key, doc)?;
+    }
+    let build = t0.elapsed();
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5EA5C);
+    let t1 = std::time::Instant::now();
+    for _ in 0..nsearches {
+        client.search(NumRangeQuery::random(&mut rng))?;
+    }
+    Ok((build, t1.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChargePolicy, CostModel};
+    use crate::rack::Rack;
+
+    #[test]
+    fn put_get_search_over_rpcool() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let index = CoolIndex::new();
+        let server = serve_rpcool(&env, "cooldb", Arc::clone(&index)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let db = RpcoolCool::connect(&cenv, "cooldb").unwrap();
+        cenv.run(|| {
+            for i in 0..50 {
+                let doc = Val::Obj(vec![
+                    ("num".into(), Val::Num(i as f64 * 10.0)),
+                    ("name".into(), Val::Str(format!("doc{i}"))),
+                ]);
+                db.put(&format!("key{i}"), &doc).unwrap();
+            }
+            assert_eq!(db.get_num("key3").unwrap(), Some(30.0));
+            assert_eq!(db.get_num("nope").unwrap(), None);
+            // num ∈ [100, 200) → docs 10..19 → 10 matches.
+            let hits = db.search(NumRangeQuery { lo: 100.0, hi: 200.0 }).unwrap();
+            assert_eq!(hits, 10);
+        });
+        assert_eq!(index.len(), 50);
+        drop(db);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn net_cooldb_matches_semantics() {
+        let charger = Arc::new(Charger::new(CostModel::default(), ChargePolicy::Skip));
+        let (server, db, _store) = serve_net(Flavor::ERpc, charger);
+        let t = server.spawn_listener();
+        for i in 0..50 {
+            let doc = Val::Obj(vec![("num".into(), Val::Num(i as f64 * 10.0))]);
+            db.put(&format!("key{i}"), &doc).unwrap();
+        }
+        assert_eq!(db.get_num("key3").unwrap(), Some(30.0));
+        assert_eq!(db.search(NumRangeQuery { lo: 100.0, hi: 200.0 }).unwrap(), 10);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn fig11_driver_small() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let index = CoolIndex::new();
+        let server = serve_rpcool(&env, "cooldb-f11", Arc::clone(&index)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let db = RpcoolCool::connect(&cenv, "cooldb-f11").unwrap();
+        cenv.run(|| {
+            let (build, search) = run_fig11(&db, 200, 10, 42).unwrap();
+            assert!(build.as_nanos() > 0 && search.as_nanos() > 0);
+        });
+        assert_eq!(index.len(), 200);
+        drop(db);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn zhang_pays_per_node_overheads() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let index = CoolIndex::new();
+        let server = serve_rpcool(&env, "cooldb-z", Arc::clone(&index)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let db = ZhangCool::connect(&cenv, "cooldb-z").unwrap();
+        let charger = Arc::clone(&rack.pool.charger);
+        cenv.run(|| {
+            let before = charger.total_charged_ns();
+            let doc = Val::Obj(vec![("num".into(), Val::Num(1.0))]);
+            db.put("k", &doc).unwrap();
+            let delta = charger.total_charged_ns() - before;
+            let c = CostModel::default();
+            assert!(
+                delta >= c.zhang_commit_ns + 2 * c.zhang_obj_ns,
+                "Zhang put must pay commit+node costs, got {delta}"
+            );
+        });
+        drop(db);
+        server.stop();
+        t.join().unwrap();
+    }
+}

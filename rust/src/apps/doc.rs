@@ -1,0 +1,420 @@
+//! JSON document model, in two representations:
+//!
+//!  * [`Val`] — host-memory documents, `Wire`-serializable (what the
+//!    network baselines ship over TCP/RDMA, paying the encode/decode
+//!    the paper indicts);
+//!  * [`ShmVal`] — the same documents as pointer-rich shared-memory
+//!    trees (nested vectors/strings/objects of native `ShmPtr`s) that
+//!    RPCool passes by reference with zero serialization.
+//!
+//! `Val::to_shm` / `ShmVal::to_host` convert between them; that pair
+//! is also RPCool's `conn.copy_from()` deep copy (paper §5.6) when
+//! used heap-to-heap.
+
+use crate::baselines::wire::{Wire, WireBuf, WireCur};
+use crate::error::{Result, RpcError};
+use crate::memory::containers::{ShmString, ShmVec};
+use crate::memory::pod::Pod;
+use crate::memory::scope::ShmAlloc;
+
+// ------------------------------------------------------------- host side
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Val>),
+    Obj(Vec<(String, Val)>),
+}
+
+impl Val {
+    pub fn get(&self, key: &str) -> Option<&Val> {
+        match self {
+            Val::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Val::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Val::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Rough in-memory size (for reporting).
+    pub fn weight(&self) -> usize {
+        match self {
+            Val::Null | Val::Bool(_) | Val::Num(_) => 8,
+            Val::Str(s) => 16 + s.len(),
+            Val::Arr(v) => 16 + v.iter().map(Val::weight).sum::<usize>(),
+            Val::Obj(f) => {
+                16 + f.iter().map(|(k, v)| 16 + k.len() + v.weight()).sum::<usize>()
+            }
+        }
+    }
+
+    /// Count of nodes (objects the Zhang baseline must header-wrap).
+    pub fn node_count(&self) -> usize {
+        match self {
+            Val::Arr(v) => 1 + v.iter().map(Val::node_count).sum::<usize>(),
+            Val::Obj(f) => 1 + f.iter().map(|(_, v)| v.node_count()).sum::<usize>(),
+            _ => 1,
+        }
+    }
+
+    /// Build the shared-memory representation in `alloc`.
+    pub fn to_shm(&self, alloc: &dyn ShmAlloc) -> Result<ShmVal> {
+        Ok(match self {
+            Val::Null => ShmVal::null(),
+            Val::Bool(b) => ShmVal { tag: TAG_BOOL, num: *b as u64 as f64, ..ShmVal::null() },
+            Val::Num(n) => ShmVal { tag: TAG_NUM, num: *n, ..ShmVal::null() },
+            Val::Str(s) => {
+                ShmVal { tag: TAG_STR, str: ShmString::from_str(alloc, s)?, ..ShmVal::null() }
+            }
+            Val::Arr(items) => {
+                let mut arr: ShmVec<ShmVal> = ShmVec::with_capacity(alloc, items.len())?;
+                for it in items {
+                    let sv = it.to_shm(alloc)?;
+                    arr.push(alloc, sv)?;
+                }
+                ShmVal { tag: TAG_ARR, arr, ..ShmVal::null() }
+            }
+            Val::Obj(fields) => {
+                let mut obj: ShmVec<ShmField> = ShmVec::with_capacity(alloc, fields.len())?;
+                for (k, v) in fields {
+                    let f = ShmField {
+                        key: ShmString::from_str(alloc, k)?,
+                        val: v.to_shm(alloc)?,
+                    };
+                    obj.push(alloc, f)?;
+                }
+                ShmVal { tag: TAG_OBJ, obj, ..ShmVal::null() }
+            }
+        })
+    }
+}
+
+impl Wire for Val {
+    fn encode(&self, out: &mut WireBuf) {
+        match self {
+            Val::Null => out.put_varint(0),
+            Val::Bool(b) => {
+                out.put_varint(1);
+                out.put_varint(*b as u64);
+            }
+            Val::Num(n) => {
+                out.put_varint(2);
+                out.put_f64(*n);
+            }
+            Val::Str(s) => {
+                out.put_varint(3);
+                out.put_str(s);
+            }
+            Val::Arr(v) => {
+                out.put_varint(4);
+                out.put_varint(v.len() as u64);
+                for x in v {
+                    x.encode(out);
+                }
+            }
+            Val::Obj(f) => {
+                out.put_varint(5);
+                out.put_varint(f.len() as u64);
+                for (k, v) in f {
+                    out.put_str(k);
+                    v.encode(out);
+                }
+            }
+        }
+    }
+
+    fn decode(cur: &mut WireCur) -> Result<Self> {
+        Ok(match cur.varint()? {
+            0 => Val::Null,
+            1 => Val::Bool(cur.varint()? != 0),
+            2 => Val::Num(cur.f64()?),
+            3 => Val::Str(cur.str()?.to_string()),
+            4 => {
+                let n = cur.varint()? as usize;
+                let mut v = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    v.push(Val::decode(cur)?);
+                }
+                Val::Arr(v)
+            }
+            5 => {
+                let n = cur.varint()? as usize;
+                let mut f = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let k = cur.str()?.to_string();
+                    f.push((k, Val::decode(cur)?));
+                }
+                Val::Obj(f)
+            }
+            t => return Err(RpcError::Serialization(format!("bad tag {t}"))),
+        })
+    }
+}
+
+// -------------------------------------------------------------- shm side
+
+pub const TAG_NULL: u32 = 0;
+pub const TAG_BOOL: u32 = 1;
+pub const TAG_NUM: u32 = 2;
+pub const TAG_STR: u32 = 3;
+pub const TAG_ARR: u32 = 4;
+pub const TAG_OBJ: u32 = 5;
+
+/// A field of a shared-memory JSON object.
+#[derive(Clone, Copy, Debug)]
+pub struct ShmField {
+    pub key: ShmString,
+    pub val: ShmVal,
+}
+
+unsafe impl Pod for ShmField {}
+
+/// A pointer-rich JSON value resident in a connection heap. `Pod`, so
+/// it nests inside vectors/maps/other documents and crosses the RPC
+/// boundary as a native pointer.
+#[derive(Clone, Copy, Debug)]
+pub struct ShmVal {
+    pub tag: u32,
+    _pad: u32,
+    pub num: f64,
+    pub str: ShmString,
+    pub arr: ShmVec<ShmVal>,
+    pub obj: ShmVec<ShmField>,
+}
+
+unsafe impl Pod for ShmVal {}
+
+impl ShmVal {
+    pub const fn null() -> ShmVal {
+        ShmVal {
+            tag: TAG_NULL,
+            _pad: 0,
+            num: 0.0,
+            str: ShmString::new(),
+            arr: ShmVec::new(),
+            obj: ShmVec::new(),
+        }
+    }
+
+    pub fn num(n: f64) -> ShmVal {
+        ShmVal { tag: TAG_NUM, num: n, ..ShmVal::null() }
+    }
+
+    pub fn str(alloc: &dyn ShmAlloc, s: &str) -> Result<ShmVal> {
+        Ok(ShmVal { tag: TAG_STR, str: ShmString::from_str(alloc, s)?, ..ShmVal::null() })
+    }
+
+    /// Checked field lookup (works under a sandbox — wild pointers in
+    /// a malicious document surface as Err, not a crash).
+    pub fn get(&self, key: &str) -> Result<Option<ShmVal>> {
+        if self.tag != TAG_OBJ {
+            return Ok(None);
+        }
+        for i in 0..self.obj.len() {
+            let f = self.obj.get(i)?;
+            if f.key.eq_str(key) {
+                return Ok(Some(f.val));
+            }
+        }
+        Ok(None)
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        (self.tag == TAG_NUM).then_some(self.num)
+    }
+
+    /// Allocation- and copy-free numeric field lookup for *trusted*
+    /// documents (e.g. CoolDB scanning objects it owns — validated at
+    /// PUT time). §Perf: the checked `get()` copies a ~120-byte
+    /// `ShmField` per probed field; this borrows instead.
+    ///
+    /// # Safety-ish
+    /// Performs one `check_access` over the field array, then borrows.
+    pub fn get_num_fast(&self, key: &str) -> Option<f64> {
+        if self.tag != TAG_OBJ || self.obj.is_empty() {
+            return None;
+        }
+        let bytes = self.obj.len() * std::mem::size_of::<ShmField>();
+        crate::simproc::check_access(self.obj.data_addr(), bytes, false).ok()?;
+        let fields: &[ShmField] = unsafe { self.obj.as_slice() };
+        for f in fields {
+            if f.key.eq_str(key) {
+                return f.val.as_num();
+            }
+        }
+        None
+    }
+
+    /// Deep-copy back to host memory (also: receiver-side validation
+    /// pass — every pointer is a checked read).
+    pub fn to_host(&self) -> Result<Val> {
+        Ok(match self.tag {
+            TAG_NULL => Val::Null,
+            TAG_BOOL => Val::Bool(self.num != 0.0),
+            TAG_NUM => Val::Num(self.num),
+            TAG_STR => Val::Str(self.str.to_string()?),
+            TAG_ARR => {
+                let mut v = Vec::with_capacity(self.arr.len());
+                for i in 0..self.arr.len() {
+                    v.push(self.arr.get(i)?.to_host()?);
+                }
+                Val::Arr(v)
+            }
+            TAG_OBJ => {
+                let mut f = Vec::with_capacity(self.obj.len());
+                for i in 0..self.obj.len() {
+                    let fld = self.obj.get(i)?;
+                    f.push((fld.key.to_string()?, fld.val.to_host()?));
+                }
+                Val::Obj(f)
+            }
+            t => return Err(RpcError::Serialization(format!("bad shm tag {t}"))),
+        })
+    }
+
+    /// Free every allocation reachable from this value (strings,
+    /// vectors, nested objects). The value itself, if heap-allocated,
+    /// must be freed by the caller.
+    pub fn deep_free(&mut self, alloc: &dyn crate::memory::scope::ShmAlloc) -> Result<()> {
+        match self.tag {
+            TAG_STR => self.str.destroy(alloc),
+            TAG_ARR => {
+                for i in 0..self.arr.len() {
+                    let mut c = self.arr.get(i)?;
+                    c.deep_free(alloc)?;
+                }
+                self.arr.destroy(alloc);
+            }
+            TAG_OBJ => {
+                for i in 0..self.obj.len() {
+                    let mut f = self.obj.get(i)?;
+                    f.key.destroy(alloc);
+                    f.val.deep_free(alloc)?;
+                }
+                self.obj.destroy(alloc);
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Deep copy into another allocator — `conn.copy_from(ptr)` (§5.6).
+    pub fn deep_copy_to(&self, dst: &dyn ShmAlloc) -> Result<ShmVal> {
+        // Traverse the shm tree directly (no host round-trip).
+        Ok(match self.tag {
+            TAG_NULL | TAG_BOOL | TAG_NUM => *self,
+            TAG_STR => ShmVal {
+                tag: TAG_STR,
+                str: ShmString::from_str(dst, &self.str.to_string()?)?,
+                ..ShmVal::null()
+            },
+            TAG_ARR => {
+                let mut arr: ShmVec<ShmVal> = ShmVec::with_capacity(dst, self.arr.len())?;
+                for i in 0..self.arr.len() {
+                    let c = self.arr.get(i)?.deep_copy_to(dst)?;
+                    arr.push(dst, c)?;
+                }
+                ShmVal { tag: TAG_ARR, arr, ..ShmVal::null() }
+            }
+            TAG_OBJ => {
+                let mut obj: ShmVec<ShmField> = ShmVec::with_capacity(dst, self.obj.len())?;
+                for i in 0..self.obj.len() {
+                    let f = self.obj.get(i)?;
+                    let nf = ShmField {
+                        key: ShmString::from_str(dst, &f.key.to_string()?)?,
+                        val: f.val.deep_copy_to(dst)?,
+                    };
+                    obj.push(dst, nf)?;
+                }
+                ShmVal { tag: TAG_OBJ, obj, ..ShmVal::null() }
+            }
+            t => return Err(RpcError::Serialization(format!("bad shm tag {t}"))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::heap::Heap;
+    use crate::memory::pool::Pool;
+
+    fn sample() -> Val {
+        Val::Obj(vec![
+            ("id".into(), Val::Num(42.0)),
+            ("name".into(), Val::Str("telepathic".into())),
+            ("tags".into(), Val::Arr(vec![Val::Str("cxl".into()), Val::Str("rpc".into())])),
+            (
+                "nested".into(),
+                Val::Obj(vec![("ok".into(), Val::Bool(true)), ("x".into(), Val::Null)]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let v = sample();
+        let bytes = v.to_bytes();
+        let back = Val::from_bytes(&bytes).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn shm_roundtrip() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "doc", 4 << 20).unwrap();
+        let v = sample();
+        let shm = v.to_shm(&heap).unwrap();
+        assert_eq!(shm.to_host().unwrap(), v);
+        // Field access without any deserialization.
+        let name = shm.get("name").unwrap().unwrap();
+        assert_eq!(name.str.to_string().unwrap(), "telepathic");
+        assert_eq!(shm.get("id").unwrap().unwrap().as_num(), Some(42.0));
+        assert_eq!(shm.get("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn deep_copy_between_heaps() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let h1 = Heap::new(&pool, "src", 2 << 20).unwrap();
+        let h2 = Heap::new(&pool, "dst", 2 << 20).unwrap();
+        let v = sample();
+        let s1 = v.to_shm(&h1).unwrap();
+        let s2 = s1.deep_copy_to(&h2).unwrap();
+        assert_eq!(s2.to_host().unwrap(), v);
+        // The copy's strings live in h2, not h1.
+        assert!(h2.contains(s2.obj.data_addr()));
+    }
+
+    #[test]
+    fn node_count_and_weight() {
+        let v = sample();
+        assert_eq!(v.node_count(), 9);
+        assert!(v.weight() > 50);
+    }
+
+    impl PartialEq for ShmVal {
+        fn eq(&self, other: &Self) -> bool {
+            match (self.to_host(), other.to_host()) {
+                (Ok(a), Ok(b)) => a == b,
+                _ => false,
+            }
+        }
+    }
+}

@@ -1,0 +1,424 @@
+//! Memcached (paper §6.3, Figure 9): a slab-style KV cache whose
+//! network front-end is swapped between RPCool shared memory and
+//! socket transports (UDS for local, TCP/IPoIB for remote).
+//!
+//! Faithful to the paper's integration notes: memcached moves small,
+//! non-pointer-rich values, so the RPCool version uses `memcpy()` in
+//! and out of the connection heap instead of sealing+sandboxing
+//! (§6.2's crossover analysis: below ~2 pages, copying wins). No SCAN
+//! operation exists, so YCSB-E is skipped (Fig. 9 note).
+
+use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
+use crate::baselines::wire::{WireBuf, WireCur};
+use crate::channel::{ChannelOpts, Connection, RpcServer};
+use crate::error::{Result, RpcError};
+use crate::memory::containers::{ShmString, ShmVec};
+use crate::memory::pod::Pod;
+use crate::memory::pool::Charger;
+use crate::memory::ptr::ShmPtr;
+use crate::rack::ProcEnv;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+pub const F_SET: u32 = 1;
+pub const F_GET: u32 = 2;
+pub const F_DEL: u32 = 3;
+
+/// The cache itself (host memory, hash table + LRU-less slab model).
+pub struct Cache {
+    shards: Vec<RwLock<HashMap<String, Vec<u8>>>>,
+}
+
+impl Cache {
+    pub fn new(nshards: usize) -> Arc<Cache> {
+        Arc::new(Cache {
+            shards: (0..nshards.next_power_of_two()).map(|_| RwLock::new(HashMap::new())).collect(),
+        })
+    }
+
+    #[inline]
+    fn shard(&self, key: &str) -> &RwLock<HashMap<String, Vec<u8>>> {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in key.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        &self.shards[(h as usize) & (self.shards.len() - 1)]
+    }
+
+    pub fn set(&self, key: &str, val: Vec<u8>) {
+        self.shard(key).write().unwrap().insert(key.to_string(), val);
+    }
+
+    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+        self.shard(key).read().unwrap().get(key).cloned()
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.shard(key).write().unwrap().remove(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Client interface every transport implements (the YCSB driver and
+/// the benches are generic over this).
+pub trait KvClient: Send + Sync {
+    fn set(&self, key: &str, val: &[u8]) -> Result<()>;
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>>;
+    fn delete(&self, key: &str) -> Result<bool>;
+    fn transport_name(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------- RPCool
+
+/// SET argument in shared memory: key + value, memcpy'd by the server.
+#[derive(Clone, Copy)]
+pub struct KvPair {
+    pub key: ShmString,
+    pub val: ShmVec<u8>,
+}
+
+unsafe impl Pod for KvPair {}
+
+/// Spin up a memcached server behind an RPCool channel.
+pub fn serve_rpcool(env: &ProcEnv, name: &str, cache: Arc<Cache>) -> Result<RpcServer> {
+    let opts = ChannelOpts::from_config(&env.rack.cfg);
+    let server = RpcServer::open(env, name, opts)?;
+    let charger: Arc<Charger> = Arc::clone(&env.rack.pool.charger);
+
+    let c = Arc::clone(&cache);
+    let ch = Arc::clone(&charger);
+    server.add(F_SET, move |ctx| {
+        let pair: KvPair = ctx.arg_val()?;
+        // memcpy out of shared memory (charged as CXL bulk reads).
+        let key = pair.key.to_string()?;
+        let val = pair.val.to_vec()?;
+        ch.charge_cxl_copy(key.len() + val.len());
+        c.set(&key, val);
+        Ok(0)
+    });
+
+    let c = Arc::clone(&cache);
+    let ch = Arc::clone(&charger);
+    server.add(F_GET, move |ctx| {
+        let key: ShmString = ctx.arg_val()?;
+        let key = key.to_string()?;
+        match c.get(&key) {
+            Some(val) => {
+                // memcpy the value into the connection heap for the
+                // client to read (reply buffer).
+                ch.charge_cxl_copy(val.len());
+                let mut out: ShmVec<u8> = ShmVec::with_capacity(ctx.heap, val.len())?;
+                out.extend_from_slice(ctx.heap, &val)?;
+                ctx.reply_val(out)
+            }
+            None => Ok(u64::MAX),
+        }
+    });
+
+    let c = Arc::clone(&cache);
+    server.add(F_DEL, move |ctx| {
+        let key: ShmString = ctx.arg_val()?;
+        Ok(c.delete(&key.to_string()?) as u64)
+    });
+
+    Ok(server)
+}
+
+/// RPCool-backed client. Reuses a scratch scope per call (memcpy
+/// discipline — no seal, no sandbox, exactly as the paper's
+/// integration does).
+pub struct RpcoolKv {
+    conn: Connection,
+    scratch: Mutex<crate::memory::scope::Scope>,
+}
+
+impl RpcoolKv {
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<RpcoolKv> {
+        Self::from_conn(Connection::connect(env, name)?)
+    }
+
+    /// Wrap an existing connection (e.g. one opened over the RDMA
+    /// fallback with `connect_with`).
+    pub fn from_conn(conn: Connection) -> Result<RpcoolKv> {
+        let scratch = Mutex::new(conn.create_scope(64 * 1024)?);
+        Ok(RpcoolKv { conn, scratch })
+    }
+
+    pub fn conn(&self) -> &Connection {
+        &self.conn
+    }
+}
+
+impl KvClient for RpcoolKv {
+    fn set(&self, key: &str, val: &[u8]) -> Result<()> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let k = ShmString::from_str(&*scope, key)?;
+        let mut v: ShmVec<u8> = ShmVec::with_capacity(&*scope, val.len())?;
+        v.extend_from_slice(&*scope, val)?;
+        let arg = scope.new_val(KvPair { key: k, val: v })?;
+        self.conn.call(F_SET, arg, std::mem::size_of::<KvPair>())?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let k = ShmString::from_str(&*scope, key)?;
+        let arg = scope.new_val(k)?;
+        let ret = self.conn.call(F_GET, arg, std::mem::size_of::<ShmString>())?;
+        if ret == u64::MAX {
+            return Ok(None);
+        }
+        let out: ShmVec<u8> = ShmPtr::<ShmVec<u8>>::from_addr(ret as usize).read()?;
+        let bytes = out.to_vec()?;
+        // Server-allocated reply buffer: free it after copying out.
+        let mut out = out;
+        out.destroy(self.conn.heap().as_ref());
+        self.conn.heap().free_bytes(ret as usize);
+        Ok(Some(bytes))
+    }
+
+    fn delete(&self, key: &str) -> Result<bool> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let k = ShmString::from_str(&*scope, key)?;
+        let arg = scope.new_val(k)?;
+        Ok(self.conn.call(F_DEL, arg, std::mem::size_of::<ShmString>())? == 1)
+    }
+
+    fn transport_name(&self) -> &'static str {
+        if self.conn.shared.is_dsm() {
+            "RPCool(DSM)"
+        } else {
+            "RPCool"
+        }
+    }
+}
+
+// ------------------------------------------------------- socket flavors
+
+/// Memcached over a socket transport (UDS or TCP): the classic
+/// serialize-send-deserialize path.
+pub fn serve_net(flavor: Flavor, charger: Arc<Charger>, cache: Arc<Cache>) -> (NetRpcServer, NetKv) {
+    let (server, client) = netrpc::pair(flavor, charger);
+    let c = Arc::clone(&cache);
+    server.add(F_SET, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?.to_string();
+        let val = cur.bytes()?.to_vec();
+        c.set(&key, val);
+        Ok(vec![])
+    });
+    let c = Arc::clone(&cache);
+    server.add(F_GET, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?;
+        match c.get(key) {
+            Some(v) => {
+                let mut out = WireBuf::new();
+                out.put_varint(1);
+                out.put_bytes(&v);
+                Ok(out.bytes)
+            }
+            None => {
+                let mut out = WireBuf::new();
+                out.put_varint(0);
+                Ok(out.bytes)
+            }
+        }
+    });
+    let c = Arc::clone(&cache);
+    server.add(F_DEL, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?;
+        Ok(vec![c.delete(key) as u8])
+    });
+    (server, NetKv { client })
+}
+
+pub struct NetKv {
+    client: NetRpcClient,
+}
+
+impl NetKv {
+    /// Sequential-RTT model (mirrors `Connection::attach_inline`).
+    pub fn client_inline(&self, server: &NetRpcServer) {
+        self.client.attach_inline(server);
+    }
+}
+
+impl KvClient for NetKv {
+    fn set(&self, key: &str, val: &[u8]) -> Result<()> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        b.put_bytes(val);
+        self.client.call(F_SET, &b.bytes)?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        let reply = self.client.call(F_GET, &b.bytes)?;
+        let mut cur = WireCur::new(&reply);
+        match cur.varint()? {
+            0 => Ok(None),
+            1 => Ok(Some(cur.bytes()?.to_vec())),
+            t => Err(RpcError::Serialization(format!("bad GET reply {t}"))),
+        }
+    }
+
+    fn delete(&self, key: &str) -> Result<bool> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        Ok(self.client.call(F_DEL, &b.bytes)?.first() == Some(&1))
+    }
+
+    fn transport_name(&self) -> &'static str {
+        match self.client.flavor() {
+            Flavor::Uds => "UDS",
+            Flavor::Tcp => "TCP(IPoIB)",
+            other => other.name(),
+        }
+    }
+}
+
+// ---------------------------------------------------------- YCSB driver
+
+use crate::workloads::ycsb::{Op, WorkloadKind, Ycsb};
+
+/// Load + run one YCSB workload; returns (load, run) wall times.
+pub fn run_ycsb(
+    client: &dyn KvClient,
+    kind: WorkloadKind,
+    nkeys: u64,
+    nops: usize,
+    seed: u64,
+) -> Result<(std::time::Duration, std::time::Duration)> {
+    assert!(!kind.has_scan(), "memcached cannot run YCSB-E (no SCAN)");
+    let mut w = Ycsb::new(kind, nkeys, seed);
+    let t0 = std::time::Instant::now();
+    for id in 0..nkeys {
+        let v = w.value_for(100);
+        client.set(&Ycsb::key_name(id), &v)?;
+    }
+    let load = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..nops {
+        let spec = w.next_op();
+        let key = Ycsb::key_name(spec.key);
+        match spec.op {
+            Op::Read => {
+                client.get(&key)?;
+            }
+            Op::Update | Op::Insert => {
+                let v = w.value_for(100);
+                client.set(&key, &v)?;
+            }
+            Op::ReadModifyWrite => {
+                let mut v = client.get(&key)?.unwrap_or_default();
+                if v.is_empty() {
+                    v = w.value_for(100);
+                }
+                v[0] = v[0].wrapping_add(1);
+                client.set(&key, &v)?;
+            }
+            Op::Scan { .. } => unreachable!(),
+        }
+    }
+    Ok((load, t1.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChargePolicy, CostModel, SimConfig};
+    use crate::rack::Rack;
+
+    #[test]
+    fn cache_basics() {
+        let c = Cache::new(8);
+        c.set("a", vec![1, 2, 3]);
+        assert_eq!(c.get("a"), Some(vec![1, 2, 3]));
+        assert!(c.delete("a"));
+        assert!(!c.delete("a"));
+        assert_eq!(c.get("a"), None);
+    }
+
+    #[test]
+    fn rpcool_kv_end_to_end() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let cache = Cache::new(8);
+        let server = serve_rpcool(&env, "memcached", Arc::clone(&cache)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let kv = RpcoolKv::connect(&cenv, "memcached").unwrap();
+        cenv.run(|| {
+            kv.set("hello", b"world").unwrap();
+            assert_eq!(kv.get("hello").unwrap(), Some(b"world".to_vec()));
+            assert_eq!(kv.get("nope").unwrap(), None);
+            assert!(kv.delete("hello").unwrap());
+            assert_eq!(kv.get("hello").unwrap(), None);
+        });
+        assert_eq!(cache.len(), 0);
+        drop(kv);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn net_kv_end_to_end() {
+        let charger = Arc::new(crate::memory::pool::Charger::new(
+            CostModel::default(),
+            ChargePolicy::Skip,
+        ));
+        let cache = Cache::new(8);
+        let (server, kv) = serve_net(Flavor::Uds, charger, Arc::clone(&cache));
+        let t = server.spawn_listener();
+        kv.set("k1", b"v1").unwrap();
+        assert_eq!(kv.get("k1").unwrap(), Some(b"v1".to_vec()));
+        assert!(kv.delete("k1").unwrap());
+        assert_eq!(kv.get("k1").unwrap(), None);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ycsb_a_runs_on_both_transports() {
+        let rack = Rack::new(SimConfig::for_tests());
+        let env = rack.proc_env(0);
+        let cache = Cache::new(8);
+        let server = serve_rpcool(&env, "mc-ycsb", Arc::clone(&cache)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let kv = RpcoolKv::connect(&cenv, "mc-ycsb").unwrap();
+        cenv.run(|| {
+            let (_load, _run) = run_ycsb(&kv, WorkloadKind::A, 200, 500, 7).unwrap();
+        });
+        assert!(cache.len() >= 200);
+        drop(kv);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot run YCSB-E")]
+    fn ycsb_e_rejected() {
+        let charger = Arc::new(crate::memory::pool::Charger::new(
+            CostModel::default(),
+            ChargePolicy::Skip,
+        ));
+        let cache = Cache::new(8);
+        let (_server, kv) = serve_net(Flavor::Uds, charger, cache);
+        let _ = run_ycsb(&kv, WorkloadKind::E, 10, 10, 1);
+    }
+}

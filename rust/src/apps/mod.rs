@@ -1,0 +1,12 @@
+//! The evaluated applications (paper §6.3): Memcached (Fig. 9),
+//! MongoDB (Fig. 10), CoolDB (Fig. 11), and the DeathStarBench
+//! SocialNetwork (Figs. 12–13), each integrable with RPCool or the
+//! baseline transports.
+
+pub mod cooldb;
+pub mod doc;
+pub mod memcached;
+pub mod mongodb;
+pub mod socialnet;
+
+pub use doc::{ShmField, ShmVal, Val};

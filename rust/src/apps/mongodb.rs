@@ -1,0 +1,533 @@
+//! MongoDB (paper §6.3, Figure 10): a document store with an ordered
+//! primary index (so YCSB-E scans work), front-ended by either RPCool
+//! shared memory or socket transports.
+//!
+//! Like the paper's integration, the store *internally copies* the
+//! non-pointer-rich data it receives, so the RPCool path uses plain
+//! copies rather than sealing+sandboxing; documents cross the RPC
+//! boundary as pointer-rich `ShmVal` trees (zero serialization) and
+//! are materialized into the engine's own memory.
+
+use crate::apps::doc::{ShmVal, Val};
+use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
+use crate::baselines::wire::{Wire, WireBuf, WireCur};
+use crate::channel::{ChannelOpts, Connection, RpcServer};
+use crate::error::{Result, RpcError};
+use crate::memory::containers::{ShmString, ShmVec};
+use crate::memory::pod::Pod;
+use crate::memory::pool::Charger;
+use crate::memory::ptr::ShmPtr;
+use crate::rack::ProcEnv;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+pub const F_INSERT: u32 = 10;
+pub const F_READ: u32 = 11;
+pub const F_UPDATE: u32 = 12;
+pub const F_SCAN: u32 = 13;
+
+/// The storage engine: ordered primary index over documents.
+pub struct DocStore {
+    docs: RwLock<BTreeMap<String, Val>>,
+}
+
+impl DocStore {
+    pub fn new() -> Arc<DocStore> {
+        Arc::new(DocStore { docs: RwLock::new(BTreeMap::new()) })
+    }
+
+    pub fn insert(&self, key: String, doc: Val) {
+        self.docs.write().unwrap().insert(key, doc);
+    }
+
+    pub fn read(&self, key: &str) -> Option<Val> {
+        self.docs.read().unwrap().get(key).cloned()
+    }
+
+    /// Set (or add) a numeric field — YCSB UPDATE's shape.
+    pub fn update_field(&self, key: &str, field: &str, v: f64) -> bool {
+        let mut docs = self.docs.write().unwrap();
+        match docs.get_mut(key) {
+            Some(Val::Obj(fields)) => {
+                if let Some(f) = fields.iter_mut().find(|(k, _)| k == field) {
+                    f.1 = Val::Num(v);
+                } else {
+                    fields.push((field.to_string(), Val::Num(v)));
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Ordered scan from `start`, up to `len` documents (YCSB-E).
+    pub fn scan(&self, start: &str, len: usize) -> Vec<(String, Val)> {
+        self.docs
+            .read()
+            .unwrap()
+            .range(start.to_string()..)
+            .take(len)
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Client interface (benches are generic over it).
+pub trait DocClient: Send + Sync {
+    fn insert(&self, key: &str, doc: &Val) -> Result<()>;
+    fn read(&self, key: &str) -> Result<Option<Val>>;
+    fn update(&self, key: &str, field: &str, v: f64) -> Result<bool>;
+    fn scan(&self, start: &str, len: usize) -> Result<Vec<Val>>;
+    fn transport_name(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------- RPCool
+
+#[derive(Clone, Copy)]
+pub struct InsertArg {
+    pub key: ShmString,
+    pub doc: ShmVal,
+}
+unsafe impl Pod for InsertArg {}
+
+#[derive(Clone, Copy)]
+pub struct UpdateArg {
+    pub key: ShmString,
+    pub field: ShmString,
+    pub value: f64,
+}
+unsafe impl Pod for UpdateArg {}
+
+#[derive(Clone, Copy)]
+pub struct ScanArg {
+    pub start: ShmString,
+    pub len: u64,
+}
+unsafe impl Pod for ScanArg {}
+
+pub fn serve_rpcool(env: &ProcEnv, name: &str, store: Arc<DocStore>) -> Result<RpcServer> {
+    let opts = ChannelOpts::from_config(&env.rack.cfg);
+    let server = RpcServer::open(env, name, opts)?;
+    let charger: Arc<Charger> = Arc::clone(&env.rack.pool.charger);
+
+    let s = Arc::clone(&store);
+    let ch = Arc::clone(&charger);
+    server.add(F_INSERT, move |ctx| {
+        let arg: InsertArg = ctx.arg_val()?;
+        let key = arg.key.to_string()?;
+        // Engine copies the document into its own memory (charged as
+        // CXL reads of the pointer-rich tree).
+        let doc = arg.doc.to_host()?;
+        ch.charge_cxl_copy(doc.weight());
+        s.insert(key, doc);
+        Ok(0)
+    });
+
+    let s = Arc::clone(&store);
+    let ch = Arc::clone(&charger);
+    server.add(F_READ, move |ctx| {
+        let key: ShmString = ctx.arg_val()?;
+        match s.read(&key.to_string()?) {
+            Some(doc) => {
+                // Materialize the reply into the connection heap as a
+                // pointer-rich tree the client reads directly.
+                ch.charge_cxl_copy(doc.weight());
+                let shm = doc.to_shm(ctx.heap.as_ref())?;
+                ctx.reply_val(shm)
+            }
+            None => Ok(u64::MAX),
+        }
+    });
+
+    let s = Arc::clone(&store);
+    server.add(F_UPDATE, move |ctx| {
+        let arg: UpdateArg = ctx.arg_val()?;
+        Ok(s.update_field(&arg.key.to_string()?, &arg.field.to_string()?, arg.value) as u64)
+    });
+
+    let s = Arc::clone(&store);
+    let ch = Arc::clone(&charger);
+    server.add(F_SCAN, move |ctx| {
+        let arg: ScanArg = ctx.arg_val()?;
+        let rows = s.scan(&arg.start.to_string()?, arg.len as usize);
+        let mut out: ShmVec<ShmVal> = ShmVec::with_capacity(ctx.heap.as_ref(), rows.len())?;
+        for (_k, doc) in &rows {
+            ch.charge_cxl_copy(doc.weight());
+            let shm = doc.to_shm(ctx.heap.as_ref())?;
+            out.push(ctx.heap.as_ref(), shm)?;
+        }
+        ctx.reply_val(out)
+    });
+
+    Ok(server)
+}
+
+pub struct RpcoolDoc {
+    conn: Connection,
+    scratch: Mutex<crate::memory::scope::Scope>,
+}
+
+impl RpcoolDoc {
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<RpcoolDoc> {
+        Self::from_conn(Connection::connect(env, name)?)
+    }
+
+    /// Wrap an existing connection (e.g. RDMA-fallback).
+    pub fn from_conn(conn: Connection) -> Result<RpcoolDoc> {
+        let scratch = Mutex::new(conn.create_scope(256 * 1024)?);
+        Ok(RpcoolDoc { conn, scratch })
+    }
+
+    pub fn conn(&self) -> &Connection {
+        &self.conn
+    }
+}
+
+impl DocClient for RpcoolDoc {
+    fn insert(&self, key: &str, doc: &Val) -> Result<()> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let arg = InsertArg {
+            key: ShmString::from_str(&*scope, key)?,
+            doc: doc.to_shm(&*scope)?,
+        };
+        let a = scope.new_val(arg)?;
+        self.conn.call(F_INSERT, a, std::mem::size_of::<InsertArg>())?;
+        Ok(())
+    }
+
+    fn read(&self, key: &str) -> Result<Option<Val>> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let k = ShmString::from_str(&*scope, key)?;
+        let a = scope.new_val(k)?;
+        let ret = self.conn.call(F_READ, a, std::mem::size_of::<ShmString>())?;
+        if ret == u64::MAX {
+            return Ok(None);
+        }
+        let mut shm: ShmVal = ShmPtr::<ShmVal>::from_addr(ret as usize).read()?;
+        let doc = shm.to_host()?;
+        // The reply tree was server-allocated in the connection heap:
+        // free it all once materialized.
+        shm.deep_free(self.conn.heap().as_ref())?;
+        self.conn.heap().free_bytes(ret as usize);
+        Ok(Some(doc))
+    }
+
+    fn update(&self, key: &str, field: &str, v: f64) -> Result<bool> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let arg = UpdateArg {
+            key: ShmString::from_str(&*scope, key)?,
+            field: ShmString::from_str(&*scope, field)?,
+            value: v,
+        };
+        let a = scope.new_val(arg)?;
+        Ok(self.conn.call(F_UPDATE, a, std::mem::size_of::<UpdateArg>())? == 1)
+    }
+
+    fn scan(&self, start: &str, len: usize) -> Result<Vec<Val>> {
+        let scope = self.scratch.lock().unwrap();
+        scope.reset();
+        let arg = ScanArg { start: ShmString::from_str(&*scope, start)?, len: len as u64 };
+        let a = scope.new_val(arg)?;
+        let ret = self.conn.call(F_SCAN, a, std::mem::size_of::<ScanArg>())?;
+        let mut rows: ShmVec<ShmVal> = ShmPtr::<ShmVec<ShmVal>>::from_addr(ret as usize).read()?;
+        let mut out = Vec::with_capacity(rows.len());
+        for i in 0..rows.len() {
+            let mut row = rows.get(i)?;
+            out.push(row.to_host()?);
+            row.deep_free(self.conn.heap().as_ref())?;
+        }
+        rows.destroy(self.conn.heap().as_ref());
+        self.conn.heap().free_bytes(ret as usize);
+        Ok(out)
+    }
+
+    fn transport_name(&self) -> &'static str {
+        if self.conn.shared.is_dsm() {
+            "RPCool(DSM)"
+        } else {
+            "RPCool"
+        }
+    }
+}
+
+// ------------------------------------------------------- socket flavors
+
+pub fn serve_net(
+    flavor: Flavor,
+    charger: Arc<Charger>,
+    store: Arc<DocStore>,
+) -> (NetRpcServer, NetDoc) {
+    let (server, client) = netrpc::pair(flavor, charger);
+
+    let s = Arc::clone(&store);
+    server.add(F_INSERT, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?.to_string();
+        let doc = Val::decode(&mut cur)?;
+        s.insert(key, doc);
+        Ok(vec![])
+    });
+
+    let s = Arc::clone(&store);
+    server.add(F_READ, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?;
+        let mut out = WireBuf::new();
+        match s.read(key) {
+            Some(doc) => {
+                out.put_varint(1);
+                doc.encode(&mut out);
+            }
+            None => out.put_varint(0),
+        }
+        Ok(out.bytes)
+    });
+
+    let s = Arc::clone(&store);
+    server.add(F_UPDATE, move |req| {
+        let mut cur = WireCur::new(req);
+        let key = cur.str()?.to_string();
+        let field = cur.str()?.to_string();
+        let v = cur.f64()?;
+        Ok(vec![s.update_field(&key, &field, v) as u8])
+    });
+
+    let s = Arc::clone(&store);
+    server.add(F_SCAN, move |req| {
+        let mut cur = WireCur::new(req);
+        let start = cur.str()?.to_string();
+        let len = cur.varint()? as usize;
+        let rows = s.scan(&start, len);
+        let mut out = WireBuf::new();
+        out.put_varint(rows.len() as u64);
+        for (_k, doc) in rows {
+            doc.encode(&mut out);
+        }
+        Ok(out.bytes)
+    });
+
+    (server, NetDoc { client })
+}
+
+pub struct NetDoc {
+    client: NetRpcClient,
+}
+
+impl NetDoc {
+    /// Sequential-RTT model (mirrors `Connection::attach_inline`).
+    pub fn client_inline(&self, server: &NetRpcServer) {
+        self.client.attach_inline(server);
+    }
+}
+
+impl DocClient for NetDoc {
+    fn insert(&self, key: &str, doc: &Val) -> Result<()> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        doc.encode(&mut b);
+        self.client.call(F_INSERT, &b.bytes)?;
+        Ok(())
+    }
+
+    fn read(&self, key: &str) -> Result<Option<Val>> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        let reply = self.client.call(F_READ, &b.bytes)?;
+        let mut cur = WireCur::new(&reply);
+        match cur.varint()? {
+            0 => Ok(None),
+            1 => Ok(Some(Val::decode(&mut cur)?)),
+            t => Err(RpcError::Serialization(format!("bad READ reply {t}"))),
+        }
+    }
+
+    fn update(&self, key: &str, field: &str, v: f64) -> Result<bool> {
+        let mut b = WireBuf::new();
+        b.put_str(key);
+        b.put_str(field);
+        b.put_f64(v);
+        Ok(self.client.call(F_UPDATE, &b.bytes)?.first() == Some(&1))
+    }
+
+    fn scan(&self, start: &str, len: usize) -> Result<Vec<Val>> {
+        let mut b = WireBuf::new();
+        b.put_str(start);
+        b.put_varint(len as u64);
+        let reply = self.client.call(F_SCAN, &b.bytes)?;
+        let mut cur = WireCur::new(&reply);
+        let n = cur.varint()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(Val::decode(&mut cur)?);
+        }
+        Ok(out)
+    }
+
+    fn transport_name(&self) -> &'static str {
+        match self.client.flavor() {
+            Flavor::Uds => "UDS",
+            Flavor::Tcp => "TCP(IPoIB)",
+            other => other.name(),
+        }
+    }
+}
+
+// ---------------------------------------------------------- YCSB driver
+
+use crate::workloads::ycsb::{Op, Ycsb, WorkloadKind};
+
+/// A YCSB document: 10 string fields of 100 bytes (the standard row).
+pub fn ycsb_doc(rng: &mut crate::util::rng::Rng) -> Val {
+    Val::Obj(
+        (0..10)
+            .map(|i| (format!("field{i}"), Val::Str(rng.alnum_string(100))))
+            .collect(),
+    )
+}
+
+/// Load + run one YCSB workload against any `DocClient`.
+pub fn run_ycsb(
+    client: &dyn DocClient,
+    kind: WorkloadKind,
+    nkeys: u64,
+    nops: usize,
+    seed: u64,
+) -> Result<(std::time::Duration, std::time::Duration)> {
+    let mut w = Ycsb::new(kind, nkeys, seed);
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xD0C5);
+    let t0 = std::time::Instant::now();
+    for id in 0..nkeys {
+        client.insert(&Ycsb::key_name(id), &ycsb_doc(&mut rng))?;
+    }
+    let load = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for opn in 0..nops {
+        let spec = w.next_op();
+        let key = Ycsb::key_name(spec.key);
+        match spec.op {
+            Op::Read => {
+                client.read(&key)?;
+            }
+            Op::Update => {
+                client.update(&key, "field0", opn as f64)?;
+            }
+            Op::Insert => {
+                client.insert(&key, &ycsb_doc(&mut rng))?;
+            }
+            Op::Scan { len } => {
+                client.scan(&key, len)?;
+            }
+            Op::ReadModifyWrite => {
+                client.read(&key)?;
+                client.update(&key, "field0", opn as f64)?;
+            }
+        }
+    }
+    Ok((load, t1.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChargePolicy, CostModel};
+    use crate::rack::Rack;
+
+    fn doc() -> Val {
+        Val::Obj(vec![
+            ("field0".into(), Val::Str("x".repeat(50))),
+            ("n".into(), Val::Num(5.0)),
+        ])
+    }
+
+    #[test]
+    fn store_crud_and_scan() {
+        let s = DocStore::new();
+        for i in 0..20 {
+            s.insert(format!("user{i:03}"), doc());
+        }
+        assert_eq!(s.len(), 20);
+        assert!(s.read("user005").is_some());
+        assert!(s.update_field("user005", "n", 9.0));
+        assert_eq!(s.read("user005").unwrap().get("n").unwrap().as_num(), Some(9.0));
+        let rows = s.scan("user010", 5);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].0, "user010");
+    }
+
+    #[test]
+    fn rpcool_doc_end_to_end() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let store = DocStore::new();
+        let server = serve_rpcool(&env, "mongo", Arc::clone(&store)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let db = RpcoolDoc::connect(&cenv, "mongo").unwrap();
+        cenv.run(|| {
+            db.insert("user001", &doc()).unwrap();
+            let d = db.read("user001").unwrap().unwrap();
+            assert_eq!(d.get("n").unwrap().as_num(), Some(5.0));
+            assert!(db.update("user001", "n", 7.0).unwrap());
+            assert_eq!(
+                db.read("user001").unwrap().unwrap().get("n").unwrap().as_num(),
+                Some(7.0)
+            );
+            for i in 2..12 {
+                db.insert(&format!("user{i:03}"), &doc()).unwrap();
+            }
+            let rows = db.scan("user003", 4).unwrap();
+            assert_eq!(rows.len(), 4);
+            assert_eq!(db.read("missing").unwrap(), None);
+        });
+        drop(db);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn net_doc_end_to_end() {
+        let charger = Arc::new(crate::memory::pool::Charger::new(
+            CostModel::default(),
+            ChargePolicy::Skip,
+        ));
+        let store = DocStore::new();
+        let (server, db) = serve_net(Flavor::Tcp, charger, Arc::clone(&store));
+        let t = server.spawn_listener();
+        db.insert("a", &doc()).unwrap();
+        assert!(db.read("a").unwrap().is_some());
+        assert!(db.update("a", "n", 1.0).unwrap());
+        db.insert("b", &doc()).unwrap();
+        assert_eq!(db.scan("a", 10).unwrap().len(), 2);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ycsb_e_scans_work_on_mongo() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let store = DocStore::new();
+        let server = serve_rpcool(&env, "mongo-e", Arc::clone(&store)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let db = RpcoolDoc::connect(&cenv, "mongo-e").unwrap();
+        cenv.run(|| {
+            run_ycsb(&db, WorkloadKind::E, 50, 100, 3).unwrap();
+        });
+        assert!(store.len() >= 50);
+        drop(db);
+        server.stop();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,513 @@
+//! DeathStarBench SocialNetwork (paper §6.3, Figures 12–13): the
+//! compose-post microservice graph, with every inter-service RPC
+//! riding either RPCool channels or ThriftRPC (the paper's swap).
+//!
+//! Service graph (Gan et al., ASPLOS'19), compose-post path:
+//!
+//!   nginx → ComposePost → { UniqueId, User, Text(UrlShorten +
+//!   UserMention) } → PostStorage (MongoDB) → UserTimeline (MongoDB)
+//!   → HomeTimeline → SocialGraph (followers) → per-follower
+//!   timeline updates (Memcached/Redis class)
+//!
+//! Per the paper's modification, a **thread pool** serves requests
+//! (new-thread-per-request contends on the page-table lock with
+//! seal/release) — our drivers use a fixed worker pool. Databases and
+//! Nginx dominate the critical path (~66% by their tracing); the
+//! `nginx_ns` / `socialnet_db_extra_ns` cost-model knobs reproduce
+//! that balance.
+
+use crate::apps::doc::Val;
+use crate::apps::memcached::Cache;
+use crate::apps::mongodb::DocStore;
+use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
+use crate::baselines::wire::{Wire, WireBuf, WireCur};
+use crate::channel::{waiter::SleepPolicy, ChannelOpts, Connection, RpcServer};
+use crate::error::Result;
+use crate::memory::containers::ShmString;
+use crate::memory::pod::Pod;
+use crate::memory::pool::Charger;
+use crate::rack::Rack;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Which RPC fabric links the services.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Rpcool,
+    /// RPCool with sealing+sandboxing on every hop ("RPCool (Secure)").
+    RpcoolSecure,
+    Thrift,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Rpcool => "RPCool",
+            Backend::RpcoolSecure => "RPCool (Secure)",
+            Backend::Thrift => "ThriftRPC",
+        }
+    }
+}
+
+// ------------------------------------------------------------ services
+
+/// Shared backing state for the whole deployment.
+pub struct SocialState {
+    pub unique: AtomicU64,
+    pub users: RwLock<Vec<String>>,
+    /// user → follower user-ids.
+    pub graph: RwLock<Vec<Vec<u64>>>,
+    pub posts: Arc<DocStore>,
+    pub user_timelines: Mutex<Vec<Vec<u64>>>,
+    pub home_cache: Arc<Cache>,
+    pub composed: AtomicU64,
+}
+
+impl SocialState {
+    pub fn new(nusers: usize, followers_per_user: usize, seed: u64) -> Arc<SocialState> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let users: Vec<String> = (0..nusers).map(|i| format!("user-{i}")).collect();
+        let graph: Vec<Vec<u64>> = (0..nusers)
+            .map(|_| {
+                (0..followers_per_user).map(|_| rng.next_below(nusers as u64)).collect()
+            })
+            .collect();
+        Arc::new(SocialState {
+            unique: AtomicU64::new(1),
+            users: RwLock::new(users),
+            graph: RwLock::new(graph),
+            posts: DocStore::new(),
+            user_timelines: Mutex::new(vec![Vec::new(); nusers]),
+            home_cache: Cache::new(16),
+            composed: AtomicU64::new(0),
+        })
+    }
+}
+
+/// Text-service work: mention + URL extraction (real string work, the
+/// same on every backend).
+pub fn process_text(text: &str) -> (Vec<String>, Vec<String>) {
+    let mut mentions = Vec::new();
+    let mut urls = Vec::new();
+    for tok in text.split_whitespace() {
+        if let Some(m) = tok.strip_prefix('@') {
+            mentions.push(m.to_string());
+        } else if tok.starts_with("http://") || tok.starts_with("https://") {
+            // "Shorten": keep a hash suffix, like the real service.
+            urls.push(format!("http://short/{:x}", crate::util::rng::mix64(tok.len() as u64 * 31)));
+        }
+    }
+    (mentions, urls)
+}
+
+/// The database work shared by both backends (post insert + timelines
+/// + fanout), charged with the paper's db-dominance factor.
+fn do_db_work(state: &SocialState, charger: &Charger, user_id: u64, post_id: u64, text: &str) {
+    let extra = charger.cost.socialnet_db_extra_ns;
+    // PostStorage (MongoDB) insert.
+    state.posts.insert(
+        format!("post{post_id:012}"),
+        Val::Obj(vec![
+            ("post_id".into(), Val::Num(post_id as f64)),
+            ("creator".into(), Val::Num(user_id as f64)),
+            ("text".into(), Val::Str(text.to_string())),
+        ]),
+    );
+    charger.charge_ns(extra);
+    // UserTimeline (MongoDB) update.
+    {
+        let mut tl = state.user_timelines.lock().unwrap();
+        if let Some(v) = tl.get_mut(user_id as usize) {
+            v.push(post_id);
+        }
+    }
+    charger.charge_ns(extra);
+    // HomeTimeline fanout via SocialGraph + cache (Memcached/Redis).
+    let followers: Vec<u64> = state
+        .graph
+        .read()
+        .unwrap()
+        .get(user_id as usize)
+        .cloned()
+        .unwrap_or_default();
+    for f in &followers {
+        let key = format!("home:{f}");
+        let mut tl = state.home_cache.get(&key).unwrap_or_default();
+        tl.extend_from_slice(&post_id.to_le_bytes());
+        state.home_cache.set(&key, tl);
+    }
+    charger.charge_ns(extra);
+    state.composed.fetch_add(1, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------- RPCool
+
+const F_UNIQUE: u32 = 1;
+const F_USER: u32 = 2;
+const F_TEXT: u32 = 3;
+const F_STORE_POST: u32 = 4;
+
+#[derive(Clone, Copy)]
+struct StorePostArg {
+    user_id: u64,
+    post_id: u64,
+    text: ShmString,
+}
+unsafe impl Pod for StorePostArg {}
+
+/// One RPCool-linked deployment: four channels (id/user/text/storage),
+/// compose logic runs in the front-end driver (as nginx + compose do).
+pub struct RpcoolSocial {
+    pub state: Arc<SocialState>,
+    servers: Vec<RpcServer>,
+    listeners: Vec<std::thread::JoinHandle<()>>,
+    conns: SocialConns,
+    secure: bool,
+    charger: Arc<Charger>,
+}
+
+pub struct SocialConns {
+    unique: Connection,
+    user: Connection,
+    text: Connection,
+    storage: Connection,
+}
+
+impl RpcoolSocial {
+    pub fn start(
+        rack: &Arc<Rack>,
+        state: Arc<SocialState>,
+        sleep: SleepPolicy,
+        secure: bool,
+        tag: &str,
+    ) -> Result<RpcoolSocial> {
+        let mut servers = Vec::new();
+        let mut listeners = Vec::new();
+        let mut opts = ChannelOpts::from_config(&rack.cfg);
+        opts.sleep = sleep;
+
+        // UniqueId service.
+        let env = rack.proc_env(1);
+        let s = RpcServer::open(&env, &format!("social/{tag}/unique"), opts.clone())?;
+        let st = Arc::clone(&state);
+        s.add(F_UNIQUE, move |_ctx| Ok(st.unique.fetch_add(1, Ordering::Relaxed)));
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        // User service.
+        let env = rack.proc_env(2);
+        let s = RpcServer::open(&env, &format!("social/{tag}/user"), opts.clone())?;
+        let st = Arc::clone(&state);
+        s.add(F_USER, move |ctx| {
+            let uid: u64 = ctx.arg_val()?;
+            let users = st.users.read().unwrap();
+            let name = users.get(uid as usize).cloned().unwrap_or_default();
+            ctx.reply_string(&name)
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        // Text service (urls + mentions).
+        let env = rack.proc_env(3);
+        let s = RpcServer::open(&env, &format!("social/{tag}/text"), opts.clone())?;
+        s.add(F_TEXT, move |ctx| {
+            let text: ShmString = ctx.arg_val()?;
+            let (mentions, urls) = process_text(&text.to_string()?);
+            Ok((mentions.len() + urls.len()) as u64)
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        // Post storage + timelines + fanout.
+        let env = rack.proc_env(4);
+        let s = RpcServer::open(&env, &format!("social/{tag}/storage"), opts.clone())?;
+        let st = Arc::clone(&state);
+        let ch = Arc::clone(&rack.pool.charger);
+        s.add(F_STORE_POST, move |ctx| {
+            let arg: StorePostArg = ctx.arg_val()?;
+            let text = arg.text.to_string()?;
+            do_db_work(&st, &ch, arg.user_id, arg.post_id, &text);
+            Ok(0)
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        // Front-end connections (the compose service's client side).
+        let fenv = rack.proc_env(0);
+        fenv.enter();
+        let conns = SocialConns {
+            unique: Connection::connect(&fenv, &format!("social/{tag}/unique"))?,
+            user: Connection::connect(&fenv, &format!("social/{tag}/user"))?,
+            text: Connection::connect(&fenv, &format!("social/{tag}/text"))?,
+            storage: Connection::connect(&fenv, &format!("social/{tag}/storage"))?,
+        };
+
+        Ok(RpcoolSocial {
+            state,
+            servers,
+            listeners,
+            conns,
+            secure,
+            charger: Arc::clone(&rack.pool.charger),
+        })
+    }
+
+    /// Switch every service link to inline serving (sequential-RTT
+    /// model for single-core benchmarking; see `Connection` docs).
+    pub fn inline_mode(&self) {
+        self.conns.unique.attach_inline(&self.servers[0]);
+        self.conns.user.attach_inline(&self.servers[1]);
+        self.conns.text.attach_inline(&self.servers[2]);
+        self.conns.storage.attach_inline(&self.servers[3]);
+        for s in &self.servers {
+            s.stop(); // listener threads exit; inline takes over
+        }
+    }
+
+    /// One compose-post request (nginx + the full service chain).
+    pub fn compose_post(&self, user_id: u64, text: &str) -> Result<u64> {
+        self.charger.charge_ns(self.charger.cost.nginx_ns);
+
+        // Text service.
+        let c = &self.conns.text;
+        if self.secure {
+            let scope = c.create_scope(4096)?;
+            let t = ShmString::from_str(&scope, text)?;
+            let addr = scope.new_val(t)?;
+            c.call_secure(F_TEXT, &scope, addr, std::mem::size_of::<ShmString>())?;
+        } else {
+            let t = ShmString::from_str(c.heap().as_ref(), text)?;
+            let addr = c.heap().new_val(t)?;
+            c.call(F_TEXT, addr, std::mem::size_of::<ShmString>())?;
+            c.heap().free_bytes(addr);
+        }
+
+        // UniqueId.
+        let post_id = self.conns.unique.call(F_UNIQUE, 0, 0)?;
+
+        // User lookup.
+        let c = &self.conns.user;
+        let addr = c.heap().new_val(user_id)?;
+        c.call(F_USER, addr, 8)?;
+        c.heap().free_bytes(addr);
+
+        // Storage chain (post + user timeline + home fanout).
+        let c = &self.conns.storage;
+        if self.secure {
+            let scope = c.create_scope(4096)?;
+            let arg = StorePostArg {
+                user_id,
+                post_id,
+                text: ShmString::from_str(&scope, text)?,
+            };
+            let addr = scope.new_val(arg)?;
+            c.call_secure(F_STORE_POST, &scope, addr, std::mem::size_of::<StorePostArg>())?;
+        } else {
+            let arg = StorePostArg {
+                user_id,
+                post_id,
+                text: ShmString::from_str(c.heap().as_ref(), text)?,
+            };
+            let addr = c.heap().new_val(arg)?;
+            c.call(F_STORE_POST, addr, std::mem::size_of::<StorePostArg>())?;
+            c.heap().free_bytes(addr);
+        }
+        Ok(post_id)
+    }
+
+    pub fn stop(self) {
+        drop(self.conns.unique);
+        drop(self.conns.user);
+        drop(self.conns.text);
+        drop(self.conns.storage);
+        for s in &self.servers {
+            s.stop();
+        }
+        for l in self.listeners {
+            let _ = l.join();
+        }
+    }
+}
+
+// ------------------------------------------------------------- Thrift
+
+pub struct ThriftSocial {
+    pub state: Arc<SocialState>,
+    servers: Vec<NetRpcServer>,
+    listeners: Vec<std::thread::JoinHandle<()>>,
+    unique: NetRpcClient,
+    user: NetRpcClient,
+    text: NetRpcClient,
+    storage: NetRpcClient,
+    charger: Arc<Charger>,
+}
+
+impl ThriftSocial {
+    pub fn start(charger: Arc<Charger>, state: Arc<SocialState>) -> ThriftSocial {
+        let mut servers = Vec::new();
+        let mut listeners = Vec::new();
+
+        let (s, unique) = netrpc::pair(Flavor::Thrift, Arc::clone(&charger));
+        let st = Arc::clone(&state);
+        s.add(F_UNIQUE, move |_req| {
+            Ok(st.unique.fetch_add(1, Ordering::Relaxed).to_bytes())
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        let (s, user) = netrpc::pair(Flavor::Thrift, Arc::clone(&charger));
+        let st = Arc::clone(&state);
+        s.add(F_USER, move |req| {
+            let uid: u64 = Wire::from_bytes(req)?;
+            let users = st.users.read().unwrap();
+            Ok(users.get(uid as usize).cloned().unwrap_or_default().to_bytes())
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        let (s, text) = netrpc::pair(Flavor::Thrift, Arc::clone(&charger));
+        s.add(F_TEXT, move |req| {
+            let t: String = Wire::from_bytes(req)?;
+            let (m, u) = process_text(&t);
+            Ok(((m.len() + u.len()) as u64).to_bytes())
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        let (s, storage) = netrpc::pair(Flavor::Thrift, Arc::clone(&charger));
+        let st = Arc::clone(&state);
+        let ch = Arc::clone(&charger);
+        s.add(F_STORE_POST, move |req| {
+            let mut cur = WireCur::new(req);
+            let user_id = cur.u64()?;
+            let post_id = cur.u64()?;
+            let text = cur.str()?;
+            do_db_work(&st, &ch, user_id, post_id, text);
+            Ok(vec![])
+        });
+        listeners.push(s.spawn_listener());
+        servers.push(s);
+
+        ThriftSocial { state, servers, listeners, unique, user, text, storage, charger }
+    }
+
+    /// Sequential-RTT model (see `RpcoolSocial::inline_mode`).
+    pub fn inline_mode(&self) {
+        self.unique.attach_inline(&self.servers[0]);
+        self.user.attach_inline(&self.servers[1]);
+        self.text.attach_inline(&self.servers[2]);
+        self.storage.attach_inline(&self.servers[3]);
+        for s in &self.servers {
+            s.stop();
+        }
+    }
+
+    pub fn compose_post(&self, user_id: u64, text: &str) -> Result<u64> {
+        self.charger.charge_ns(self.charger.cost.nginx_ns);
+        self.text.call(F_TEXT, &text.to_string().to_bytes())?;
+        let post_id: u64 = Wire::from_bytes(&self.unique.call(F_UNIQUE, &[])?)?;
+        self.user.call(F_USER, &user_id.to_bytes())?;
+        let mut b = WireBuf::new();
+        b.put_u64(user_id);
+        b.put_u64(post_id);
+        b.put_str(text);
+        self.storage.call(F_STORE_POST, &b.bytes)?;
+        Ok(post_id)
+    }
+
+    pub fn stop(self) {
+        for s in &self.servers {
+            s.stop();
+        }
+        for l in self.listeners {
+            let _ = l.join();
+        }
+    }
+}
+
+/// Sample post text with mentions and a URL (the benchmark's shape).
+pub fn sample_post(rng: &mut crate::util::rng::Rng, nusers: usize) -> (u64, String) {
+    let user = rng.next_below(nusers as u64);
+    let mention = rng.next_below(nusers as u64);
+    let text = format!(
+        "@user-{mention} check this out https://example.com/{} {}",
+        rng.alnum_string(8),
+        rng.alnum_string(64),
+    );
+    (user, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChargePolicy, CostModel, SimConfig};
+
+    #[test]
+    fn text_processing_extracts_entities() {
+        let (m, u) = process_text("hi @alice see https://x.io/a and @bob");
+        assert_eq!(m, vec!["alice", "bob"]);
+        assert_eq!(u.len(), 1);
+        assert!(u[0].starts_with("http://short/"));
+    }
+
+    #[test]
+    fn rpcool_compose_post_full_chain() {
+        let rack = Rack::new(SimConfig::for_tests());
+        let state = SocialState::new(100, 8, 1);
+        let net = RpcoolSocial::start(
+            &rack,
+            Arc::clone(&state),
+            SleepPolicy::Fixed(1),
+            false,
+            "t1",
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..20 {
+            let (user, text) = sample_post(&mut rng, 100);
+            net.compose_post(user, &text).unwrap();
+        }
+        assert_eq!(state.composed.load(Ordering::Relaxed), 20);
+        assert_eq!(state.posts.len(), 20);
+        // Fanout reached follower home timelines.
+        assert!(state.home_cache.len() > 0);
+        net.stop();
+    }
+
+    #[test]
+    fn secure_backend_seals_and_sandboxes() {
+        let rack = Rack::new(SimConfig::for_tests());
+        let state = SocialState::new(50, 4, 3);
+        let net = RpcoolSocial::start(
+            &rack,
+            Arc::clone(&state),
+            SleepPolicy::Fixed(1),
+            true,
+            "t2",
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(4);
+        for _ in 0..5 {
+            let (user, text) = sample_post(&mut rng, 50);
+            net.compose_post(user, &text).unwrap();
+        }
+        assert_eq!(state.composed.load(Ordering::Relaxed), 5);
+        net.stop();
+    }
+
+    #[test]
+    fn thrift_backend_equivalent_semantics() {
+        let charger =
+            Arc::new(Charger::new(CostModel::default(), ChargePolicy::Skip));
+        let state = SocialState::new(100, 8, 5);
+        let net = ThriftSocial::start(charger, Arc::clone(&state));
+        let mut rng = crate::util::rng::Rng::new(6);
+        for _ in 0..20 {
+            let (user, text) = sample_post(&mut rng, 100);
+            net.compose_post(user, &text).unwrap();
+        }
+        assert_eq!(state.composed.load(Ordering::Relaxed), 20);
+        assert_eq!(state.posts.len(), 20);
+        net.stop();
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline RPC frameworks the paper evaluates against (§6):
+//! RDMA-based eRPC, TCP-based gRPC and ThriftRPC, UNIX-domain-socket
+//! RPC, and the CXL-based ZhangRPC — all re-implemented over the
+//! simulated substrates so every Table 1a / Figure 9–12 comparison can
+//! be regenerated.
+
+pub mod netrpc;
+pub mod wire;
+pub mod zhang;
+
+pub use netrpc::{pair, Flavor, NetRpcClient, NetRpcServer};
+pub use wire::{charge_serialize, Wire, WireBuf, WireCur};
+pub use zhang::{CxlRef, ZhangAlloc, ZhangClient};

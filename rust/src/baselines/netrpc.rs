@@ -1,0 +1,334 @@
+//! Network-based baseline RPC frameworks (eRPC, gRPC, ThriftRPC,
+//! plain TCP, UNIX-domain-socket RPC).
+//!
+//! One generic request/response engine over a `SimNic`, specialized by
+//! a `Flavor`: the link model plus the framework's per-direction stack
+//! cost (calibrated to Table 1a). Every call serializes its request
+//! and deserializes the response — the overhead RPCool exists to
+//! avoid.
+
+use crate::baselines::wire::charge_serialize;
+use crate::error::{Result, RpcError};
+use crate::memory::pool::Charger;
+use crate::transport::{LinkKind, SimNicPair, Transport};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// A baseline framework's identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    ERpc,
+    Grpc,
+    Thrift,
+    Tcp,
+    Uds,
+}
+
+impl Flavor {
+    pub fn link(&self) -> LinkKind {
+        match self {
+            Flavor::ERpc => LinkKind::Rdma,
+            Flavor::Grpc => LinkKind::Http2,
+            Flavor::Thrift | Flavor::Tcp => LinkKind::Tcp,
+            Flavor::Uds => LinkKind::Uds,
+        }
+    }
+
+    /// Per-direction stack cost beyond the wire itself.
+    pub fn stack_ns(&self, charger: &Charger) -> u64 {
+        let c = &charger.cost;
+        match self {
+            Flavor::ERpc => c.erpc_stack_ns,
+            Flavor::Grpc => c.grpc_stack_ns,
+            Flavor::Thrift => c.thrift_stack_ns,
+            Flavor::Tcp | Flavor::Uds => 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Flavor::ERpc => "eRPC",
+            Flavor::Grpc => "gRPC",
+            Flavor::Thrift => "ThriftRPC",
+            Flavor::Tcp => "TCP-RPC",
+            Flavor::Uds => "UDS-RPC",
+        }
+    }
+}
+
+/// Message framing: [seq u64][func u32][payload...].
+fn frame(seq: u64, func: u32, payload: &[u8]) -> Vec<u8> {
+    let mut m = Vec::with_capacity(12 + payload.len());
+    m.extend_from_slice(&seq.to_le_bytes());
+    m.extend_from_slice(&func.to_le_bytes());
+    m.extend_from_slice(payload);
+    m
+}
+
+fn unframe(m: &[u8]) -> Result<(u64, u32, &[u8])> {
+    if m.len() < 12 {
+        return Err(RpcError::Serialization("short frame".into()));
+    }
+    let seq = u64::from_le_bytes(m[0..8].try_into().unwrap());
+    let func = u32::from_le_bytes(m[8..12].try_into().unwrap());
+    Ok((seq, func, &m[12..]))
+}
+
+pub type NetHandler = Box<dyn Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync>;
+
+/// Server half: owns one end of the link, serves until stopped.
+pub struct NetRpcServer {
+    flavor: Flavor,
+    nic: Arc<crate::transport::SimNic>,
+    handlers: Arc<RwLock<HashMap<u32, NetHandler>>>,
+    stop: Arc<AtomicBool>,
+    charger: Arc<Charger>,
+    served: Arc<AtomicU64>,
+}
+
+impl NetRpcServer {
+    pub fn add(&self, func: u32, f: impl Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync + 'static) {
+        self.handlers.write().unwrap().insert(func, Box::new(f));
+    }
+
+    pub fn spawn_listener(&self) -> std::thread::JoinHandle<()> {
+        let nic = Arc::clone(&self.nic);
+        let handlers = Arc::clone(&self.handlers);
+        let stop = Arc::clone(&self.stop);
+        let charger = Arc::clone(&self.charger);
+        let served = Arc::clone(&self.served);
+        let flavor = self.flavor;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let Ok(msg) = nic.recv(Duration::from_millis(20)) else { continue };
+                let Ok((seq, func, payload)) = unframe(&msg) else { continue };
+                // Receive-side stack + deserialize charge.
+                charger.charge_ns(flavor.stack_ns(&charger));
+                charge_serialize(&charger, payload.len(), 1);
+                let reply = {
+                    let h = handlers.read().unwrap();
+                    match h.get(&func) {
+                        Some(f) => match f(payload) {
+                            Ok(bytes) => {
+                                let mut r = vec![0u8];
+                                r.extend_from_slice(&bytes);
+                                r
+                            }
+                            Err(e) => {
+                                let mut r = vec![1u8];
+                                r.extend_from_slice(e.to_string().as_bytes());
+                                r
+                            }
+                        },
+                        None => vec![2u8],
+                    }
+                };
+                served.fetch_add(1, Ordering::Relaxed);
+                // Send-side stack + serialize charge.
+                charger.charge_ns(flavor.stack_ns(&charger));
+                charge_serialize(&charger, reply.len(), 1);
+                let _ = nic.send(&frame(seq, func, &reply));
+            }
+        })
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+}
+
+/// Client half.
+pub struct NetRpcClient {
+    flavor: Flavor,
+    nic: Arc<crate::transport::SimNic>,
+    charger: Arc<Charger>,
+    seq: AtomicU64,
+    pub timeout: Duration,
+    /// Inline serving (sequential-RTT model on a 1-core simulation
+    /// host, mirroring `Connection::attach_inline`): the caller thread
+    /// runs the handler, charging both directions' wire+stack costs.
+    inline: std::sync::Mutex<Option<(Arc<RwLock<HashMap<u32, NetHandler>>>, Arc<AtomicU64>)>>,
+}
+
+impl NetRpcClient {
+    /// Switch to inline serving against `server`'s handler table.
+    pub fn attach_inline(&self, server: &NetRpcServer) {
+        *self.inline.lock().unwrap() =
+            Some((Arc::clone(&server.handlers), Arc::clone(&server.served)));
+    }
+
+    fn call_inline(
+        &self,
+        func: u32,
+        payload: &[u8],
+        handlers: &RwLock<HashMap<u32, NetHandler>>,
+        served: &AtomicU64,
+    ) -> Result<Vec<u8>> {
+        let link = self.flavor.link();
+        let stack = self.flavor.stack_ns(&self.charger);
+        // Client send: stack + serialize + wire.
+        self.charger.charge_ns(stack);
+        charge_serialize(&self.charger, payload.len(), 1);
+        self.charger.charge_ns(link.oneway_ns(&self.charger.cost, payload.len() + 12));
+        // Server: recv stack + deserialize, handler, send stack + serialize.
+        self.charger.charge_ns(stack);
+        charge_serialize(&self.charger, payload.len(), 1);
+        let reply = {
+            let h = handlers.read().unwrap();
+            match h.get(&func) {
+                Some(f) => f(payload).map_err(|e| RpcError::Remote(e.to_string())),
+                None => Err(RpcError::NoSuchHandler(func)),
+            }
+        };
+        served.fetch_add(1, Ordering::Relaxed);
+        let reply = reply?;
+        self.charger.charge_ns(stack);
+        charge_serialize(&self.charger, reply.len(), 1);
+        // Response wire + client recv stack + deserialize.
+        self.charger.charge_ns(link.oneway_ns(&self.charger.cost, reply.len() + 12));
+        self.charger.charge_ns(stack);
+        charge_serialize(&self.charger, reply.len(), 1);
+        Ok(reply)
+    }
+    /// Serialize-request → wire → deserialize-response (the whole
+    /// layer cake RPCool skips).
+    pub fn call(&self, func: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        if let Some((handlers, served)) = self.inline.lock().unwrap().as_ref() {
+            let (h, s) = (Arc::clone(handlers), Arc::clone(served));
+            return self.call_inline(func, payload, &h, &s);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        // Client send-side stack + serialize.
+        self.charger.charge_ns(self.flavor.stack_ns(&self.charger));
+        charge_serialize(&self.charger, payload.len(), 1);
+        self.nic.send(&frame(seq, func, payload))?;
+        loop {
+            let msg = self.nic.recv(self.timeout)?;
+            let (rseq, _func, body) = unframe(&msg)?;
+            if rseq != seq {
+                continue; // stale response from a timed-out call
+            }
+            // Client receive-side stack + deserialize.
+            self.charger.charge_ns(self.flavor.stack_ns(&self.charger));
+            charge_serialize(&self.charger, body.len(), 1);
+            return match body.first() {
+                Some(0) => Ok(body[1..].to_vec()),
+                Some(1) => Err(RpcError::Remote(
+                    String::from_utf8_lossy(&body[1..]).to_string(),
+                )),
+                Some(2) => Err(RpcError::NoSuchHandler(func)),
+                _ => Err(RpcError::Serialization("bad reply".into())),
+            };
+        }
+    }
+
+    pub fn flavor(&self) -> Flavor {
+        self.flavor
+    }
+}
+
+/// Build a connected client/server pair of the given flavor.
+pub fn pair(flavor: Flavor, charger: Arc<Charger>) -> (NetRpcServer, NetRpcClient) {
+    let nics = SimNicPair::new(flavor.link(), Arc::clone(&charger));
+    let server = NetRpcServer {
+        flavor,
+        nic: nics.b,
+        handlers: Arc::new(RwLock::new(HashMap::new())),
+        stop: Arc::new(AtomicBool::new(false)),
+        charger: Arc::clone(&charger),
+        served: Arc::new(AtomicU64::new(0)),
+    };
+    let client = NetRpcClient {
+        flavor,
+        nic: nics.a,
+        charger,
+        seq: AtomicU64::new(1),
+        timeout: Duration::from_secs(10),
+        inline: std::sync::Mutex::new(None),
+    };
+    (server, client)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::wire::Wire;
+    use crate::config::{ChargePolicy, CostModel};
+
+    fn charger() -> Arc<Charger> {
+        Arc::new(Charger::new(CostModel::default(), ChargePolicy::Skip))
+    }
+
+    #[test]
+    fn echo_roundtrip_all_flavors() {
+        for flavor in [Flavor::ERpc, Flavor::Grpc, Flavor::Thrift, Flavor::Tcp, Flavor::Uds] {
+            let (server, client) = pair(flavor, charger());
+            server.add(1, |req| Ok(req.to_vec()));
+            let t = server.spawn_listener();
+            let out = client.call(1, b"payload").unwrap();
+            assert_eq!(out, b"payload", "{}", flavor.name());
+            server.stop();
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn typed_payloads_serialize() {
+        let (server, client) = pair(Flavor::ERpc, charger());
+        server.add(2, |req| {
+            let v: Vec<u64> = Wire::from_bytes(req)?;
+            let sum: u64 = v.iter().sum();
+            Ok(sum.to_bytes())
+        });
+        let t = server.spawn_listener();
+        let v: Vec<u64> = (1..=100).collect();
+        let out = client.call(2, &v.to_bytes()).unwrap();
+        let sum: u64 = Wire::from_bytes(&out).unwrap();
+        assert_eq!(sum, 5050);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn handler_error_propagates() {
+        let (server, client) = pair(Flavor::Tcp, charger());
+        server.add(3, |_req| Err(RpcError::Remote("boom".into())));
+        let t = server.spawn_listener();
+        let e = client.call(3, b"").unwrap_err();
+        assert!(matches!(e, RpcError::Remote(_)));
+        let e2 = client.call(99, b"").unwrap_err();
+        assert!(matches!(e2, RpcError::NoSuchHandler(99)));
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn charged_costs_reflect_stack_ladder() {
+        // eRPC (RDMA) must charge less than gRPC (HTTP2 + big stack).
+        let run = |flavor: Flavor| {
+            let ch = charger();
+            let (server, client) = pair(flavor, Arc::clone(&ch));
+            server.add(1, |r| Ok(r.to_vec()));
+            let t = server.spawn_listener();
+            let before = ch.total_charged_ns();
+            for _ in 0..10 {
+                client.call(1, b"x").unwrap();
+            }
+            let cost = ch.total_charged_ns() - before;
+            server.stop();
+            t.join().unwrap();
+            cost
+        };
+        let erpc = run(Flavor::ERpc);
+        let grpc = run(Flavor::Grpc);
+        let uds = run(Flavor::Uds);
+        assert!(erpc < uds, "eRPC {erpc} < UDS {uds}");
+        assert!(uds < grpc, "UDS {uds} < gRPC {grpc}");
+    }
+}

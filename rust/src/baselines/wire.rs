@@ -1,0 +1,256 @@
+//! Wire serialization for the baseline frameworks.
+//!
+//! The paper's core claim is that serialization dominates RPC cost for
+//! pointer-rich data. The baselines therefore *actually serialize*: a
+//! varint-based tag-length-value encoding in the protobuf/Thrift
+//! compact family. Encoding cost is twofold: the real CPU work of the
+//! encoder below, plus the calibrated per-byte/per-object charge of
+//! the heavier production encoders it stands in for.
+
+use crate::error::{Result, RpcError};
+use crate::memory::pool::Charger;
+
+/// Encode/decode buffer (LEB128 varints, little-endian fixed ints).
+#[derive(Default)]
+pub struct WireBuf {
+    pub bytes: Vec<u8>,
+}
+
+impl WireBuf {
+    pub fn new() -> Self {
+        WireBuf { bytes: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        WireBuf { bytes: Vec::with_capacity(n) }
+    }
+
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.bytes.push(b);
+                return;
+            }
+            self.bytes.push(b | 0x80);
+        }
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_varint(b.len() as u64);
+        self.bytes.extend_from_slice(b);
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+/// Cursor over received bytes.
+pub struct WireCur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireCur<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireCur { buf, pos: 0 }
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.pos + n > self.buf.len() {
+            return Err(RpcError::Serialization(format!(
+                "short read at {} (+{n} > {})",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            self.need(1)?;
+            let b = self.buf[self.pos];
+            self.pos += 1;
+            v |= ((b & 0x7F) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift >= 64 {
+                return Err(RpcError::Serialization("varint overflow".into()));
+            }
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        self.need(8)?;
+        let v = f64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.varint()? as usize;
+        self.need(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn str(&mut self) -> Result<&'a str> {
+        std::str::from_utf8(self.bytes()?)
+            .map_err(|e| RpcError::Serialization(e.to_string()))
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Types the baselines can put on the wire.
+pub trait Wire: Sized {
+    fn encode(&self, out: &mut WireBuf);
+    fn decode(cur: &mut WireCur) -> Result<Self>;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut b = WireBuf::new();
+        self.encode(&mut b);
+        b.bytes
+    }
+
+    fn from_bytes(buf: &[u8]) -> Result<Self> {
+        Self::decode(&mut WireCur::new(buf))
+    }
+}
+
+impl Wire for u64 {
+    fn encode(&self, out: &mut WireBuf) {
+        out.put_varint(*self);
+    }
+    fn decode(cur: &mut WireCur) -> Result<Self> {
+        cur.varint()
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, out: &mut WireBuf) {
+        out.put_str(self);
+    }
+    fn decode(cur: &mut WireCur) -> Result<Self> {
+        Ok(cur.str()?.to_string())
+    }
+}
+
+impl Wire for Vec<u8> {
+    fn encode(&self, out: &mut WireBuf) {
+        out.put_bytes(self);
+    }
+    fn decode(cur: &mut WireCur) -> Result<Self> {
+        Ok(cur.bytes()?.to_vec())
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn encode(&self, out: &mut WireBuf) {
+        out.put_varint(self.len() as u64);
+        for x in self {
+            x.encode(out);
+        }
+    }
+    fn decode(cur: &mut WireCur) -> Result<Self> {
+        let n = cur.varint()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(T::decode(cur)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn encode(&self, out: &mut WireBuf) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(cur: &mut WireCur) -> Result<Self> {
+        Ok((A::decode(cur)?, B::decode(cur)?))
+    }
+}
+
+/// Charge the calibrated serializer cost for a message of `bytes`
+/// containing ~`objs` objects (what a protobuf-class encoder costs on
+/// the paper's testbed, on top of the real work done here).
+pub fn charge_serialize(charger: &Charger, bytes: usize, objs: usize) {
+    let c = &charger.cost;
+    charger.charge_ns(
+        (bytes as u64 * c.serialize_per_byte_ns_x100) / 100 + objs as u64 * c.serialize_per_obj_ns,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_extremes() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u64::MAX] {
+            let mut b = WireBuf::new();
+            b.put_varint(v);
+            assert_eq!(WireCur::new(&b.bytes).varint().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn composite_roundtrip() {
+        let val: Vec<(u64, String)> =
+            vec![(1, "one".into()), (2, "two".into()), (99, "ninety-nine".into())];
+        let bytes = val.to_bytes();
+        let back: Vec<(u64, String)> = Wire::from_bytes(&bytes).unwrap();
+        assert_eq!(val, back);
+    }
+
+    #[test]
+    fn short_read_detected() {
+        let mut b = WireBuf::new();
+        b.put_str("hello");
+        let r: Result<String> = Wire::from_bytes(&b.bytes[..3]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn varint_overflow_detected() {
+        let bad = [0xFFu8; 11];
+        assert!(WireCur::new(&bad).varint().is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! ZhangRPC — the failure-resilient CXL RPC baseline (Zhang et al.,
+//! SOSP'23 [40], as characterized in the paper's §6.2).
+//!
+//! Differences from RPCool that Table 1a attributes the 7.2× gap to:
+//!  * every CXL object carries an 8-byte header (failure-resilience
+//!    metadata), created through their allocator;
+//!  * references are fat pointers (`CxlRef`), not native pointers, and
+//!    linking a child into a parent requires `link_reference()` on the
+//!    critical path;
+//!  * each RPC commits a failure-resilience journal entry.
+//!
+//! We reproduce that object model over our CXL substrate and charge
+//! the calibrated costs for the header/ref/link/commit work.
+
+use crate::channel::{CallCtx, Connection, RpcServer};
+use crate::error::Result;
+use crate::memory::heap::Heap;
+use crate::memory::pod::Pod;
+use crate::memory::ptr::ShmPtr;
+use crate::memory::scope::ShmAlloc;
+use crate::rack::ProcEnv;
+use std::sync::Arc;
+
+/// Fat pointer: address + object id + generation (what breaks native
+/// pointer compatibility in their design).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CxlRef<T> {
+    pub addr: usize,
+    pub obj_id: u64,
+    pub generation: u32,
+    _m: std::marker::PhantomData<fn() -> T>,
+}
+
+unsafe impl<T: Pod> Pod for CxlRef<T> {}
+
+impl<T> CxlRef<T> {
+    pub const fn null() -> Self {
+        CxlRef { addr: 0, obj_id: 0, generation: 0, _m: std::marker::PhantomData }
+    }
+
+    pub fn is_null(&self) -> bool {
+        self.addr == 0
+    }
+}
+
+/// Per-object header their allocator prepends (8 bytes).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct ObjHeader {
+    pub obj_id: u32,
+    pub type_and_flags: u32,
+}
+
+unsafe impl Pod for ObjHeader {}
+
+/// ZhangRPC's allocator facade over a connection heap.
+pub struct ZhangAlloc {
+    heap: Arc<Heap>,
+    next_obj: std::sync::atomic::AtomicU64,
+}
+
+impl ZhangAlloc {
+    pub fn new(heap: Arc<Heap>) -> ZhangAlloc {
+        ZhangAlloc { heap, next_obj: std::sync::atomic::AtomicU64::new(1) }
+    }
+
+    /// Allocate a CXL object: header + payload, returns a fat ref.
+    pub fn create<T: Pod>(&self, val: T) -> Result<CxlRef<T>> {
+        let charger = &self.heap.pool().charger;
+        charger.charge_ns(charger.cost.zhang_obj_ns);
+        let obj_id = self.next_obj.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let total = std::mem::size_of::<ObjHeader>() + std::mem::size_of::<T>().max(1);
+        let base = ShmAlloc::alloc_bytes(&self.heap, total)?;
+        let hdr: ShmPtr<ObjHeader> = ShmPtr::from_addr(base);
+        hdr.write(ObjHeader { obj_id: obj_id as u32, type_and_flags: 0 })?;
+        let payload = base + std::mem::size_of::<ObjHeader>();
+        let p: ShmPtr<T> = ShmPtr::from_addr(payload);
+        p.write(val)?;
+        Ok(CxlRef { addr: payload, obj_id, generation: 1, _m: std::marker::PhantomData })
+    }
+
+    /// Their `link_reference()` API: installing a child ref into a
+    /// parent object is a tracked operation (for failure resilience),
+    /// charged on the critical path.
+    pub fn link_reference<P: Pod, C: Pod>(
+        &self,
+        parent: CxlRef<P>,
+        slot: ShmPtr<CxlRef<C>>,
+        child: CxlRef<C>,
+    ) -> Result<()> {
+        let charger = &self.heap.pool().charger;
+        charger.charge_ns(charger.cost.zhang_obj_ns);
+        let _ = parent; // journal would record parent obj id
+        slot.write(child)
+    }
+
+    pub fn read<T: Pod>(&self, r: CxlRef<T>) -> Result<T> {
+        ShmPtr::<T>::from_addr(r.addr).read()
+    }
+
+    pub fn heap(&self) -> &Arc<Heap> {
+        &self.heap
+    }
+}
+
+/// Client handle: an RPCool connection driven through ZhangRPC's
+/// object model + per-RPC commit cost.
+pub struct ZhangClient {
+    pub conn: Connection,
+    pub alloc: ZhangAlloc,
+}
+
+impl ZhangClient {
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<ZhangClient> {
+        let conn = Connection::connect(env, name)?;
+        let alloc = ZhangAlloc::new(Arc::clone(conn.heap()));
+        Ok(ZhangClient { conn, alloc })
+    }
+
+    /// An RPC in their system: journal commit + the CXL transport.
+    pub fn call<T: Pod>(&self, func: u32, arg: CxlRef<T>) -> Result<u64> {
+        let charger = &self.conn.heap().pool().charger;
+        charger.charge_ns(charger.cost.zhang_commit_ns);
+        self.conn.call(func, arg.addr, std::mem::size_of::<T>())
+    }
+}
+
+/// Serve a ZhangRPC channel (same server loop; handlers read fat refs).
+pub fn open_server(env: &ProcEnv, name: &str) -> Result<RpcServer> {
+    crate::channel::Rpc::open(env, name)
+}
+
+/// Handler-side helper: interpret the argument as a fat-ref payload.
+pub fn arg_payload<T: Pod>(ctx: &CallCtx) -> Result<T> {
+    ShmPtr::<T>::from_addr(ctx.arg).read()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::Rack;
+
+    #[test]
+    fn object_model_roundtrip() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = open_server(&env, "zhang-objs").unwrap();
+        server.add(1, |ctx| {
+            let v: u64 = arg_payload(ctx)?;
+            Ok(v * 3)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let client = ZhangClient::connect(&cenv, "zhang-objs").unwrap();
+        cenv.run(|| {
+            let r = client.alloc.create(14u64).unwrap();
+            assert_eq!(client.alloc.read(r).unwrap(), 14);
+            assert_eq!(client.call(1, r).unwrap(), 42);
+        });
+        drop(client);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tree_building_needs_link_reference() {
+        // The paper's example: building a tree requires a CXL object +
+        // CxlRef per node plus link_reference per edge — all charged.
+        #[derive(Clone, Copy)]
+        struct Node {
+            value: u64,
+            left: CxlRef<Node>,
+            right: CxlRef<Node>,
+        }
+        unsafe impl Pod for Node {}
+
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let heap = rack.orch.create_heap("zhang-tree", 1 << 20, env.proc).unwrap().0;
+        let alloc = ZhangAlloc::new(heap);
+        let charged_before = alloc.heap().pool().charger.total_charged_ns();
+
+        let leaf_l = alloc.create(Node { value: 1, left: CxlRef::null(), right: CxlRef::null() }).unwrap();
+        let leaf_r = alloc.create(Node { value: 2, left: CxlRef::null(), right: CxlRef::null() }).unwrap();
+        let root = alloc.create(Node { value: 0, left: CxlRef::null(), right: CxlRef::null() }).unwrap();
+        // Link children via the tracked API.
+        let left_slot: ShmPtr<CxlRef<Node>> = ShmPtr::from_addr(root.addr + 8);
+        let right_slot: ShmPtr<CxlRef<Node>> =
+            ShmPtr::from_addr(root.addr + 8 + std::mem::size_of::<CxlRef<Node>>());
+        alloc.link_reference(root, left_slot, leaf_l).unwrap();
+        alloc.link_reference(root, right_slot, leaf_r).unwrap();
+
+        let r = alloc.read(root).unwrap();
+        assert_eq!(alloc.read(r.left).unwrap().value, 1);
+        assert_eq!(alloc.read(r.right).unwrap().value, 2);
+        let charged = alloc.heap().pool().charger.total_charged_ns() - charged_before;
+        // 3 objects + 2 links, each with the per-object charge.
+        assert!(charged >= 5 * crate::config::CostModel::default().zhang_obj_ns);
+    }
+}

@@ -1,0 +1,1095 @@
+//! Channels and connections — RPCool's communication core (paper §4.2).
+//!
+//! A server *opens* a channel (registered with the orchestrator under
+//! a hierarchical name); clients *connect* and receive a `Connection`
+//! whose shared-memory heap holds RPC arguments — exchanged by native
+//! pointer, never serialized. The per-connection `RpcRing` in that
+//! heap carries request/response descriptors; both sides busy-wait
+//! with the adaptive-sleep policy of §5.8.
+//!
+//! Safety hooks are wired here: a call may be **sealed** (sender loses
+//! write access until the receiver completes, §4.5) and/or
+//! **sandboxed** (the handler runs inside an MPK window over the
+//! argument scope, §4.4) — orthogonal, per-RPC choices, exactly as in
+//! the paper.
+
+pub mod ring;
+pub mod waiter;
+
+use crate::config::SimConfig;
+use crate::daemon::Daemon;
+use crate::dsm::{DsmState, NODE_CLIENT, NODE_SERVER};
+use crate::error::{Result, RpcError};
+use crate::memory::containers::{ShmString, ShmVec};
+use crate::memory::heap::Heap;
+use crate::memory::pod::Pod;
+use crate::memory::ptr::ShmPtr;
+use crate::memory::scope::Scope;
+use crate::orchestrator::{Acl, ChannelReg};
+use crate::rack::ProcEnv;
+use crate::sandbox::SandboxMgr;
+use crate::seal::{ScopePool, SealHandle, Sealer};
+use ring::*;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::time::Duration;
+use waiter::{SleepPolicy, WaitOutcome, LOAD};
+
+// ---------------------------------------------------------------------
+// channel directory (how connect() finds a live server in-process)
+
+static DIRECTORY: Mutex<Option<HashMap<(u64, String), Weak<ServerCore>>>> = Mutex::new(None);
+
+fn directory_insert(rack_id: u64, name: &str, core: &Arc<ServerCore>) {
+    let mut d = DIRECTORY.lock().unwrap();
+    d.get_or_insert_with(HashMap::new)
+        .insert((rack_id, name.to_string()), Arc::downgrade(core));
+}
+
+fn directory_remove(rack_id: u64, name: &str) {
+    if let Some(d) = DIRECTORY.lock().unwrap().as_mut() {
+        d.remove(&(rack_id, name.to_string()));
+    }
+}
+
+fn directory_get(rack_id: u64, name: &str) -> Option<Arc<ServerCore>> {
+    DIRECTORY
+        .lock()
+        .unwrap()
+        .as_ref()
+        .and_then(|d| d.get(&(rack_id, name.to_string())))
+        .and_then(|w| w.upgrade())
+}
+
+// ---------------------------------------------------------------------
+// options
+
+#[derive(Clone)]
+pub struct ChannelOpts {
+    /// Per-connection heap size (or the single shared heap's size).
+    pub heap_bytes: usize,
+    /// One heap shared channel-wide (Fig. 4b) vs per-connection (4a).
+    pub shared_heap: bool,
+    /// ACL; defaults to world-connectable.
+    pub acl: Option<Acl>,
+    /// RPC ring slots per connection.
+    pub ring_slots: usize,
+    pub sleep: SleepPolicy,
+    /// Client-side call timeout.
+    pub call_timeout: Duration,
+}
+
+impl ChannelOpts {
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        ChannelOpts {
+            heap_bytes: cfg.heap_bytes,
+            shared_heap: false,
+            acl: None,
+            ring_slots: 64,
+            sleep: SleepPolicy::from_config(cfg),
+            call_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// handler interface
+
+/// What a handler sees: the connection heap and the argument pointer.
+pub struct CallCtx<'a> {
+    pub heap: &'a Arc<Heap>,
+    pub func: u32,
+    pub arg: usize,
+    pub arg_len: usize,
+    /// Was the argument verified sealed?
+    pub sealed: bool,
+    /// Is the handler running inside a sandbox window?
+    pub sandboxed: bool,
+    /// Sandbox temp heap (malloc redirection target), if sandboxed.
+    pub temp: Option<&'a Scope>,
+}
+
+impl<'a> CallCtx<'a> {
+    /// Typed view of the argument.
+    pub fn arg_ptr<T: Pod>(&self) -> ShmPtr<T> {
+        ShmPtr::from_addr(self.arg)
+    }
+
+    pub fn arg_val<T: Pod>(&self) -> Result<T> {
+        self.arg_ptr::<T>().read()
+    }
+
+    /// Allocate a reply value in the connection heap; returns its
+    /// address for the `ret` slot.
+    pub fn reply_val<T: Pod>(&self, v: T) -> Result<u64> {
+        Ok(self.heap.new_val(v)? as u64)
+    }
+
+    pub fn reply_string(&self, s: &str) -> Result<u64> {
+        let shm = ShmString::from_str(self.heap, s)?;
+        Ok(self.heap.new_val(shm)? as u64)
+    }
+
+    /// In-sandbox allocation (fails when not sandboxed).
+    pub fn malloc(&self, size: usize) -> Result<usize> {
+        match self.temp {
+            Some(t) => t.alloc_bytes(size),
+            None => self.heap.alloc_bytes(size),
+        }
+    }
+}
+
+pub type Handler = Box<dyn Fn(&CallCtx) -> Result<u64> + Send + Sync>;
+
+// ---------------------------------------------------------------------
+// connection state shared by both endpoints (models shm + kernels)
+
+pub struct ConnShared {
+    pub id: u64,
+    pub heap: Arc<Heap>,
+    pub ring: RpcRing,
+    pub sealer: Arc<Sealer>,
+    pub sandbox: Arc<SandboxMgr>,
+    pub client_proc: u32,
+    pub server_proc: u32,
+    /// RDMA-fallback page-ownership state (None ⇒ CXL connection).
+    pub dsm: Option<Arc<DsmState>>,
+    closed: AtomicBool,
+    accepted: AtomicBool,
+}
+
+impl ConnShared {
+    pub fn closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    pub fn is_dsm(&self) -> bool {
+        self.dsm.is_some()
+    }
+}
+
+/// Which fabric a connection should ride (paper §4.7: "Channels in
+/// RPCool automatically use either CXL-based shared memory or fall
+/// back to RDMA").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportSel {
+    /// CXL when both hosts share the rack, RDMA otherwise.
+    #[default]
+    Auto,
+    Cxl,
+    Rdma,
+}
+
+// ---------------------------------------------------------------------
+// server
+
+struct Accepting {
+    queue: Vec<Arc<ConnShared>>,
+}
+
+pub struct ServerCore {
+    pub name: String,
+    pub env: ProcEnv,
+    opts: ChannelOpts,
+    handlers: RwLock<HashMap<u32, Handler>>,
+    conns: Mutex<Vec<Arc<ConnShared>>>,
+    accepting: Mutex<Accepting>,
+    accept_cv: Condvar,
+    stop: AtomicBool,
+    next_conn_id: AtomicU64,
+    daemon: Arc<Daemon>,
+    /// The shared channel-wide heap, if `opts.shared_heap`.
+    shared_heap: Mutex<Option<Arc<Heap>>>,
+    served: AtomicU64,
+}
+
+/// Server-side channel handle (the paper's `RPC rpc; rpc.open(...)`).
+pub struct RpcServer {
+    core: Arc<ServerCore>,
+}
+
+impl RpcServer {
+    /// Open a channel: create the registration with the orchestrator
+    /// (26.5ms-class operation in the paper's Table 1b).
+    pub fn open(env: &ProcEnv, name: &str, opts: ChannelOpts) -> Result<RpcServer> {
+        let rack = &env.rack;
+        let charger = &rack.pool.charger;
+        charger.charge_ns(charger.cost.channel_create_us * 1000);
+
+        let daemon = Daemon::new(env.host, Arc::clone(&rack.orch));
+        let core = Arc::new(ServerCore {
+            name: name.to_string(),
+            env: env.clone(),
+            opts: opts.clone(),
+            handlers: RwLock::new(HashMap::new()),
+            conns: Mutex::new(Vec::new()),
+            accepting: Mutex::new(Accepting { queue: Vec::new() }),
+            accept_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            next_conn_id: AtomicU64::new(1),
+            daemon,
+            shared_heap: Mutex::new(None),
+            served: AtomicU64::new(0),
+        });
+
+        // Register with the orchestrator: a placeholder heap id is
+        // fine until the first connection exists.
+        rack.orch.register_channel(ChannelReg {
+            name: name.to_string(),
+            owner_proc: env.proc,
+            owner_uid: env.uid,
+            acl: opts.acl.clone().unwrap_or_else(|| Acl::open(env.uid)),
+            heap_id: 0,
+        })?;
+        directory_insert(rack.id, name, &core);
+        Ok(RpcServer { core })
+    }
+
+    /// Register a handler under a function id (the paper's `rpc.add`).
+    pub fn add(&self, func: u32, f: impl Fn(&CallCtx) -> Result<u64> + Send + Sync + 'static) {
+        self.core.handlers.write().unwrap().insert(func, Box::new(f));
+    }
+
+    /// Block until a client connects; returns its connection.
+    pub fn accept(&self) -> Result<Arc<ConnShared>> {
+        let mut acc = self.core.accepting.lock().unwrap();
+        loop {
+            if let Some(c) = acc.queue.pop() {
+                c.accepted.store(true, Ordering::Release);
+                self.core.conns.lock().unwrap().push(Arc::clone(&c));
+                return Ok(c);
+            }
+            if self.core.stop.load(Ordering::Acquire) {
+                return Err(RpcError::ConnectionClosed);
+            }
+            let (a, timeout) = self
+                .core
+                .accept_cv
+                .wait_timeout(acc, Duration::from_millis(50))
+                .unwrap();
+            acc = a;
+            let _ = timeout;
+        }
+    }
+
+    /// Serve every accepted connection until `stop()` — the paper's
+    /// `conn->listen()`, generalized over all of the channel's
+    /// connections (one event-loop thread, busy-waiting per §5.8).
+    pub fn listen(&self) {
+        self.core.env.enter();
+        let policy = self.core.opts.sleep;
+        LOAD.enter();
+        while !self.core.stop.load(Ordering::Acquire) {
+            // Accept anything pending without blocking.
+            {
+                let mut acc = self.core.accepting.lock().unwrap();
+                while let Some(c) = acc.queue.pop() {
+                    c.accepted.store(true, Ordering::Release);
+                    self.core.conns.lock().unwrap().push(c);
+                }
+            }
+            let conns: Vec<Arc<ConnShared>> = self.core.conns.lock().unwrap().clone();
+            let mut progress = false;
+            for conn in &conns {
+                while let Some(slot) = conn.ring.take_request() {
+                    progress = true;
+                    self.core.handle_slot(conn, slot);
+                }
+            }
+            if !progress {
+                let us = policy.sleep_us(LOAD.load());
+                if us > 0 {
+                    std::thread::sleep(Duration::from_micros(us));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        LOAD.exit();
+    }
+
+    /// Spawn the listen loop on a server thread.
+    pub fn spawn_listener(&self) -> std::thread::JoinHandle<()> {
+        let s = RpcServer { core: Arc::clone(&self.core) };
+        std::thread::spawn(move || s.listen())
+    }
+
+    pub fn stop(&self) {
+        self.core.stop.store(true, Ordering::Release);
+        self.core.accept_cv.notify_all();
+    }
+
+    /// Accept all pending connections without blocking (used together
+    /// with inline serving, where no listener thread runs).
+    pub fn accept_pending(&self) {
+        let mut acc = self.core.accepting.lock().unwrap();
+        while let Some(c) = acc.queue.pop() {
+            c.accepted.store(true, Ordering::Release);
+            self.core.conns.lock().unwrap().push(c);
+        }
+    }
+
+    /// Handle to the server core (for `Connection::attach_inline`).
+    pub fn core(&self) -> Arc<ServerCore> {
+        Arc::clone(&self.core)
+    }
+
+    pub fn served(&self) -> u64 {
+        self.core.served.load(Ordering::Relaxed)
+    }
+
+    pub fn connection_count(&self) -> usize {
+        self.core.conns.lock().unwrap().len()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.core.name
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        // Last handle (beyond any listener threads' core refs) tears
+        // the channel down: 38.4ms-class destroy in Table 1b.
+        self.stop();
+        if Arc::strong_count(&self.core) <= 2 {
+            let rack = &self.core.env.rack;
+            let charger = &rack.pool.charger;
+            charger.charge_ns(charger.cost.channel_destroy_us * 1000);
+            rack.orch.unregister_channel(&self.core.name);
+            directory_remove(rack.id, &self.core.name);
+            for c in self.core.conns.lock().unwrap().iter() {
+                c.closed.store(true, Ordering::Release);
+            }
+        }
+    }
+}
+
+impl ServerCore {
+    /// Process one request slot (the server's hot path). Public so
+    /// inline serving can drive it from the caller thread.
+    pub fn handle_slot(&self, conn: &Arc<ConnShared>, slot: usize) {
+        let s = conn.ring.slot(slot);
+        let func = s.func.load(Ordering::Relaxed);
+        let flags = s.flags.load(Ordering::Relaxed);
+        let seal_idx = s.seal_idx.load(Ordering::Relaxed);
+        let arg = s.arg.load(Ordering::Relaxed) as usize;
+        let arg_len = s.arg_len.load(Ordering::Relaxed) as usize;
+
+        // RDMA fallback: fault the argument pages over to the server
+        // (paper §5.6 — load triggers fault, fetch, re-execute).
+        if let Some(dsm) = &conn.dsm {
+            if arg != 0 {
+                if let Err(e) = dsm.ensure_owned(NODE_SERVER, arg, arg_len.max(1)) {
+                    let _ = e;
+                    conn.ring.respond(slot, ST_HANDLER_ERROR, 0);
+                    return;
+                }
+            }
+        }
+
+        // Seal verification (receiver side, §5.3): refuse to process
+        // if the sender claims a seal that doesn't check out.
+        let sealed = flags & FLAG_SEALED != 0;
+        if sealed && !conn.sealer.verify(seal_idx, arg, arg_len.max(1)) {
+            conn.ring.respond(slot, ST_SEAL_INVALID, 0);
+            return;
+        }
+
+        let handlers = self.handlers.read().unwrap();
+        let Some(handler) = handlers.get(&func) else {
+            conn.ring.respond(slot, ST_NO_HANDLER, 0);
+            return;
+        };
+
+        let result = if flags & FLAG_SANDBOXED != 0 {
+            // Enter the MPK sandbox over the argument window; a
+            // violation surfaces as Err and becomes an error response
+            // (the SIGSEGV → RPC-error path of §5.2).
+            match conn.sandbox.begin(arg, arg_len.max(1)) {
+                Ok(guard) => {
+                    let ctx = CallCtx {
+                        heap: &conn.heap,
+                        func,
+                        arg,
+                        arg_len,
+                        sealed,
+                        sandboxed: true,
+                        temp: Some(guard.temp()),
+                    };
+                    let r = handler(&ctx);
+                    drop(guard);
+                    r
+                }
+                Err(e) => Err(e),
+            }
+        } else {
+            let ctx = CallCtx {
+                heap: &conn.heap,
+                func,
+                arg,
+                arg_len,
+                sealed,
+                sandboxed: false,
+                temp: None,
+            };
+            handler(&ctx)
+        };
+
+        // Mark the seal complete *before* responding so the sender's
+        // release() check passes as soon as it sees the response.
+        if sealed {
+            conn.sealer.complete(seal_idx);
+        }
+
+        self.served.fetch_add(1, Ordering::Relaxed);
+        match result {
+            Ok(ret) => conn.ring.respond(slot, ST_OK, ret),
+            Err(RpcError::SandboxViolation { .. }) => {
+                conn.ring.respond(slot, ST_SANDBOX_VIOLATION, 0)
+            }
+            Err(_) => conn.ring.respond(slot, ST_HANDLER_ERROR, 0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// client connection
+
+/// Client-side connection handle (the paper's `conn`).
+pub struct Connection {
+    pub shared: Arc<ConnShared>,
+    env: ProcEnv,
+    opts: ChannelOpts,
+    daemon: Arc<Daemon>,
+    calls: AtomicU64,
+    /// Inline serving: after publishing a request, the caller thread
+    /// runs the server's handler directly (under the server's
+    /// identity). On a one-core simulation host this is the *correct*
+    /// latency model — a real RPC is sequential (client → wire →
+    /// server → wire → client), and all hardware costs are charged by
+    /// spinning either way. Benchmarks use this; concurrency tests use
+    /// `spawn_listener`.
+    inline_server: Mutex<Option<Arc<ServerCore>>>,
+}
+
+impl Connection {
+    /// Connect to a channel by name (paper Table 1b: 0.4s-class —
+    /// daemon maps the heap, orchestrator grants the lease).
+    /// Transport is selected automatically: CXL in-rack, RDMA beyond.
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<Connection> {
+        Self::connect_with(env, name, TransportSel::Auto)
+    }
+
+    pub fn connect_with(env: &ProcEnv, name: &str, sel: TransportSel) -> Result<Connection> {
+        let rack = &env.rack;
+        let core = directory_get(rack.id, name)
+            .ok_or_else(|| RpcError::ChannelNotFound(name.to_string()))?;
+
+        // ACL check through the orchestrator.
+        rack.orch.check_connect(name, env.uid)?;
+
+        let charger = &rack.pool.charger;
+        charger.charge_ns(charger.cost.channel_connect_us * 1000);
+
+        // Daemon creates (or reuses the shared) heap and maps it for
+        // both endpoints.
+        let cfg = &rack.cfg;
+        let opts = core.opts.clone();
+        let heap = if opts.shared_heap {
+            let mut sh = core.shared_heap.lock().unwrap();
+            match &*sh {
+                Some(h) => {
+                    core.daemon.map_heap(h.id, env.proc)?;
+                    Arc::clone(h)
+                }
+                None => {
+                    let h = core.daemon.create_heap(
+                        &format!("{name}/shared"),
+                        opts.heap_bytes,
+                        core.env.proc,
+                    )?;
+                    core.daemon.map_heap(h.id, env.proc)?;
+                    *sh = Some(Arc::clone(&h));
+                    h
+                }
+            }
+        } else {
+            let id = core.next_conn_id.load(Ordering::Relaxed);
+            let h = core.daemon.create_heap(
+                &format!("{name}/conn{id}"),
+                opts.heap_bytes,
+                core.env.proc,
+            )?;
+            core.daemon.map_heap(h.id, env.proc)?;
+            h
+        };
+
+        // Fabric selection (paper §4.7): CXL if both ends share the
+        // rack, otherwise the RDMA-fallback coherence layer.
+        let use_dsm = match sel {
+            TransportSel::Cxl => false,
+            TransportSel::Rdma => true,
+            TransportSel::Auto => !rack.same_cxl_domain(env.host, core.env.host),
+        };
+        let (ring, dsm) = if use_dsm {
+            let ring =
+                RpcRing::create_with_signal(&heap, opts.ring_slots, cfg.cost.rdma_oneway_ns)?;
+            (ring, Some(DsmState::new(&heap, cfg.page_bytes)))
+        } else {
+            (RpcRing::create(&heap, opts.ring_slots)?, None)
+        };
+
+        let shared = Arc::new(ConnShared {
+            id: core.next_conn_id.fetch_add(1, Ordering::Relaxed),
+            ring,
+            sealer: Sealer::new(cfg, Arc::clone(&heap), Arc::clone(charger))?,
+            sandbox: SandboxMgr::new(cfg, Arc::clone(&heap), Arc::clone(charger)),
+            heap,
+            client_proc: env.proc,
+            server_proc: core.env.proc,
+            dsm,
+            closed: AtomicBool::new(false),
+            accepted: AtomicBool::new(false),
+        });
+
+        // Hand the connection to the server. The daemon+orchestrator
+        // handshake (already charged above) completes the connect;
+        // the server's accept/listen loop picks the connection up from
+        // the queue before serving it.
+        if core.stop.load(Ordering::Acquire) {
+            return Err(RpcError::ConnectionRefused(
+                name.to_string(),
+                "server is shutting down".into(),
+            ));
+        }
+        {
+            let mut acc = core.accepting.lock().unwrap();
+            acc.queue.push(Arc::clone(&shared));
+            core.accept_cv.notify_one();
+        }
+        shared.accepted.store(true, Ordering::Release);
+
+        Ok(Connection {
+            shared,
+            env: env.clone(),
+            opts,
+            daemon: Arc::clone(&core.daemon),
+            calls: AtomicU64::new(0),
+            inline_server: Mutex::new(None),
+        })
+    }
+
+    /// Switch this connection to inline serving (see field docs).
+    pub fn attach_inline(&self, server: &RpcServer) {
+        server.accept_pending();
+        *self.inline_server.lock().unwrap() = Some(server.core());
+    }
+
+    pub fn heap(&self) -> &Arc<Heap> {
+        &self.shared.heap
+    }
+
+    /// Allocate a value in the connection heap (paper's `conn->new_<T>`).
+    pub fn new_val<T: Pod>(&self, v: T) -> Result<ShmPtr<T>> {
+        Ok(ShmPtr::from_addr(self.shared.heap.new_val(v)?))
+    }
+
+    pub fn new_string(&self, s: &str) -> Result<ShmPtr<ShmString>> {
+        let shm = ShmString::from_str(&self.shared.heap, s)?;
+        self.new_val(shm)
+    }
+
+    pub fn new_vec<T: Pod>(&self, xs: &[T]) -> Result<ShmPtr<ShmVec<T>>> {
+        let mut v: ShmVec<T> = ShmVec::with_capacity(&self.shared.heap, xs.len())?;
+        v.extend_from_slice(&self.shared.heap, xs)?;
+        self.new_val(v)
+    }
+
+    /// Create a scope in the connection heap (`create_scope`, §5.1).
+    pub fn create_scope(&self, bytes: usize) -> Result<Scope> {
+        Scope::create(&self.shared.heap, bytes)
+    }
+
+    /// Create a scope pool with batched seal release (§5.3).
+    pub fn create_scope_pool(&self, scope_bytes: usize) -> Arc<ScopePool> {
+        ScopePool::new(
+            Arc::clone(&self.shared.heap),
+            Arc::clone(&self.shared.sealer),
+            scope_bytes,
+            self.env.rack.cfg.batch_release_threshold,
+        )
+    }
+
+    /// The raw call: argument is a native pointer into the connection
+    /// heap. Returns the handler's `ret` word.
+    pub fn call(&self, func: u32, arg: usize, arg_len: usize) -> Result<u64> {
+        self.call_inner(func, 0, NO_SEAL, arg, arg_len)
+    }
+
+    /// Typed convenience: pass a pointer, get the return word.
+    pub fn call_ptr<T: Pod>(&self, func: u32, arg: ShmPtr<T>) -> Result<u64> {
+        self.call(func, arg.addr(), std::mem::size_of::<T>())
+    }
+
+    /// Sealed call over a scope: seals exactly the scope's pages,
+    /// calls, and releases (standard single release) on return.
+    pub fn call_sealed(&self, func: u32, scope: &Scope, arg: usize, arg_len: usize) -> Result<u64> {
+        let h = self.seal_scope(scope)?;
+        let r = self.call_inner(func, FLAG_SEALED, h.idx, arg, arg_len);
+        // Release even on error if the receiver completed; on seal
+        // rejection the receiver never completes, so force-complete to
+        // reclaim (sender-side abort path).
+        if self.shared.sealer.release(h).is_err() {
+            self.shared.sealer.complete(h.idx);
+            let _ = self.shared.sealer.release(h);
+        }
+        r
+    }
+
+    /// Sealed call with *batched* release: the scope+seal go back to
+    /// the pool, released when the batch threshold hits.
+    pub fn call_sealed_pooled(
+        &self,
+        func: u32,
+        pool: &ScopePool,
+        scope: Scope,
+        arg: usize,
+        arg_len: usize,
+    ) -> Result<u64> {
+        let h = self.seal_scope(&scope)?;
+        let r = self.call_inner(func, FLAG_SEALED, h.idx, arg, arg_len)?;
+        pool.push_sealed(scope, h)?;
+        Ok(r)
+    }
+
+    /// Sealed + sandboxed call (paper's "RPCool (Secure)" config).
+    pub fn call_secure(&self, func: u32, scope: &Scope, arg: usize, arg_len: usize) -> Result<u64> {
+        let h = self.seal_scope(scope)?;
+        let r = self.call_inner(func, FLAG_SEALED | FLAG_SANDBOXED, h.idx, arg, arg_len);
+        if self.shared.sealer.release(h).is_err() {
+            self.shared.sealer.complete(h.idx);
+            let _ = self.shared.sealer.release(h);
+        }
+        r
+    }
+
+    /// Sandbox-only call (receiver protects itself; sender trusted).
+    pub fn call_sandboxed(&self, func: u32, arg: usize, arg_len: usize) -> Result<u64> {
+        self.call_inner(func, FLAG_SANDBOXED, NO_SEAL, arg, arg_len)
+    }
+
+    fn seal_scope(&self, scope: &Scope) -> Result<SealHandle> {
+        // Seal only the touched pages (that is the whole point of
+        // scopes), but at least one.
+        let pages = scope.used_pages().max(1);
+        let len = pages * self.env.rack.cfg.page_bytes;
+        self.shared.sealer.seal(scope.base(), len, self.env.proc)
+    }
+
+    fn call_inner(
+        &self,
+        func: u32,
+        flags: u32,
+        seal_idx: u64,
+        arg: usize,
+        arg_len: usize,
+    ) -> Result<u64> {
+        if self.shared.closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        // RDMA fallback: the client must own the argument pages before
+        // the server can be told about them (it wrote them, so any
+        // pages the server took on a previous RPC fault back now).
+        if let Some(dsm) = &self.shared.dsm {
+            if arg != 0 {
+                dsm.ensure_owned(NODE_CLIENT, arg, arg_len.max(1))?;
+            }
+        }
+        let ring = &self.shared.ring;
+        // Claim a slot (waiting out a full ring).
+        let slot = match ring.claim() {
+            Some(i) => i,
+            None => {
+                let mut got = None;
+                let out =
+                    waiter::wait_until(self.opts.sleep, self.opts.call_timeout, None, || {
+                        got = ring.claim();
+                        got.is_some()
+                    });
+                if out == WaitOutcome::TimedOut {
+                    return Err(RpcError::Timeout("rpc slot".into()));
+                }
+                got.unwrap()
+            }
+        };
+        ring.publish(slot, func, flags, seal_idx, arg, arg_len);
+        // Inline serving: run the server's handler on this thread
+        // under the server's identity (the sequential-RTT model).
+        if let Some(core) = self.inline_server.lock().unwrap().as_ref() {
+            while !ring.response_ready(slot) {
+                let Some(i) = ring.take_request() else { break };
+                crate::simproc::with_identity(core.env.proc, core.env.host, || {
+                    core.handle_slot(&self.shared, i)
+                });
+            }
+        }
+        let out = waiter::wait_until(self.opts.sleep, self.opts.call_timeout, None, || {
+            ring.response_ready(slot) || self.shared.closed()
+        });
+        if out == WaitOutcome::TimedOut {
+            return Err(RpcError::Timeout(format!("rpc response (func {func})")));
+        }
+        if self.shared.closed() && !ring.response_ready(slot) {
+            return Err(RpcError::ConnectionClosed);
+        }
+        let (status, ret) = ring.consume(slot);
+        match status {
+            ST_OK => Ok(ret),
+            ST_NO_HANDLER => Err(RpcError::NoSuchHandler(func)),
+            other => Err(status_to_error(other)),
+        }
+    }
+
+    /// Clean close: unmap the heap (lease surrendered, quota credited).
+    pub fn close(self) {
+        // Drop runs the unmap.
+    }
+
+    pub fn calls_made(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Simulate a client crash: the connection vanishes without
+    /// unmapping — leases must expire for cleanup (test hook).
+    pub fn crash(self) {
+        self.daemon.crash_proc(self.env.proc);
+        std::mem::forget(self);
+    }
+}
+
+impl Drop for Connection {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::Release);
+        self.daemon.unmap_heap(self.shared.heap.id, self.env.proc);
+        // A per-connection heap dies with the connection: release the
+        // server's mapping too so the orchestrator can reclaim it and
+        // credit the server's quota (paper §5.7: "When the last
+        // process with access to a channel heap closes it, the heap is
+        // automatically freed"). Channel-wide shared heaps live until
+        // the channel goes down.
+        if !self.opts.shared_heap {
+            self.daemon.unmap_heap(self.shared.heap.id, self.shared.server_proc);
+        }
+    }
+}
+
+/// Paper-shaped facade (Fig. 6): `Rpc::open`, `rpc.add`, `rpc.accept`,
+/// client `Rpc::connect`.
+pub struct Rpc;
+
+impl Rpc {
+    pub fn open(env: &ProcEnv, name: &str) -> Result<RpcServer> {
+        RpcServer::open(env, name, ChannelOpts::from_config(&env.rack.cfg))
+    }
+
+    pub fn connect(env: &ProcEnv, name: &str) -> Result<Connection> {
+        Connection::connect(env, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rack::Rack;
+
+    fn serve_echo(rack: &Arc<Rack>, name: &str) -> (RpcServer, std::thread::JoinHandle<()>) {
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, name).unwrap();
+        // 100 = ping→pong; 101 = read u64 arg, return arg+1.
+        server.add(100, |ctx| ctx.reply_string("pong"));
+        server.add(101, |ctx| {
+            let v: u64 = ctx.arg_val()?;
+            Ok(v + 1)
+        });
+        let t = server.spawn_listener();
+        (server, t)
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        // The paper's Fig. 6 program, end to end.
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "mychannel");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "mychannel").unwrap();
+        cenv.run(|| {
+            let arg = conn.new_string("ping").unwrap();
+            let ret = conn.call_ptr(100, arg).unwrap();
+            let s: ShmPtr<ShmString> = ShmPtr::from_addr(ret as usize);
+            assert_eq!(s.read().unwrap().to_string().unwrap(), "pong");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn numeric_rpc_and_counters() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "nums");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "nums").unwrap();
+        cenv.run(|| {
+            for i in 0..200u64 {
+                let arg = conn.new_val(i).unwrap();
+                assert_eq!(conn.call_ptr(101, arg).unwrap(), i + 1);
+            }
+        });
+        assert_eq!(conn.calls_made(), 200);
+        assert_eq!(server.served(), 200);
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_function_and_channel() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "known");
+        let cenv = rack.proc_env(1);
+        assert!(matches!(
+            Rpc::connect(&cenv, "unknown"),
+            Err(RpcError::ChannelNotFound(_))
+        ));
+        let conn = Rpc::connect(&cenv, "known").unwrap();
+        let e = cenv.run(|| {
+            let arg = conn.new_val(1u64).unwrap();
+            conn.call_ptr(999, arg)
+        });
+        assert!(matches!(e, Err(RpcError::NoSuchHandler(999))));
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn sealed_call_blocks_sender_writes_during_flight() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "sealed").unwrap();
+        // Handler verifies it sees a sealed argument and that the
+        // value cannot be changed by the sender mid-flight (we can't
+        // interleave here, but the seal state is asserted).
+        server.add(7, |ctx| {
+            assert!(ctx.sealed);
+            let v: u64 = ctx.arg_val()?;
+            Ok(v * 2)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "sealed").unwrap();
+        cenv.run(|| {
+            let scope = conn.create_scope(4096).unwrap();
+            let addr = scope.new_val(21u64).unwrap();
+            let ret = conn.call_sealed(7, &scope, addr, 8).unwrap();
+            assert_eq!(ret, 42);
+            // After release the sender can write again.
+            let p: ShmPtr<u64> = ShmPtr::from_addr(addr);
+            p.write(5).unwrap();
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn secure_call_catches_wild_pointer() {
+        use crate::memory::containers::ShmList;
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "secure").unwrap();
+        // Handler traverses an untrusted list inside the sandbox.
+        server.add(8, |ctx| {
+            let list: ShmList<u64> = ctx.arg_ptr::<ShmList<u64>>().read()?;
+            let sum: u64 = list.iter_collect()?.iter().sum();
+            Ok(sum)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "secure").unwrap();
+        cenv.run(|| {
+            // Honest list: works.
+            let scope = conn.create_scope(8192).unwrap();
+            let mut list: ShmList<u64> = ShmList::new();
+            for i in 1..=4 {
+                list.push_back(&scope, i).unwrap();
+            }
+            let laddr = scope.new_val(list).unwrap();
+            assert_eq!(conn.call_secure(8, &scope, laddr, 24).unwrap(), 10);
+
+            // Malicious list: tail points outside the scope (at the
+            // connection heap — could be a server secret). The sandbox
+            // catches it and the client gets an error, not data.
+            let scope2 = conn.create_scope(8192).unwrap();
+            let mut evil: ShmList<u64> = ShmList::new();
+            for i in 1..=4 {
+                evil.push_back(&scope2, i).unwrap();
+            }
+            let secret = conn.heap().new_val(0xDEAD_u64).unwrap();
+            evil.corrupt_tail(secret).unwrap();
+            let eaddr = scope2.new_val(evil).unwrap();
+            let e = conn.call_secure(8, &scope2, eaddr, 24);
+            assert!(
+                matches!(e, Err(RpcError::SandboxViolation { .. })),
+                "expected sandbox violation, got {e:?}"
+            );
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn multiple_clients_share_server() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "multi");
+        let mut handles = Vec::new();
+        for c in 0..4 {
+            let rack = Arc::clone(&rack);
+            handles.push(std::thread::spawn(move || {
+                let cenv = rack.proc_env(1 + c);
+                let conn = Rpc::connect(&cenv, "multi").unwrap();
+                cenv.run(|| {
+                    for i in 0..50u64 {
+                        let arg = conn.new_val(i).unwrap();
+                        assert_eq!(conn.call_ptr(101, arg).unwrap(), i + 1);
+                    }
+                });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.served(), 200);
+        assert_eq!(server.connection_count(), 4);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn shared_heap_mode_single_heap() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let mut opts = ChannelOpts::from_config(&rack.cfg);
+        opts.shared_heap = true;
+        let server = RpcServer::open(&env, "shared-heap", opts).unwrap();
+        server.add(1, |_| Ok(0));
+        let t = server.spawn_listener();
+        let c1 = Connection::connect(&rack.proc_env(1), "shared-heap").unwrap();
+        let c2 = Connection::connect(&rack.proc_env(2), "shared-heap").unwrap();
+        assert_eq!(c1.heap().id, c2.heap().id, "Fig 4b: one channel-wide heap");
+        drop((c1, c2));
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn acl_blocks_unauthorized_connect() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let mut opts = ChannelOpts::from_config(&rack.cfg);
+        opts.acl = Some(Acl::private(env.uid));
+        let server = RpcServer::open(&env, "private-ch", opts).unwrap();
+        let _t = server.spawn_listener();
+        let e = Connection::connect(&rack.proc_env(1), "private-ch");
+        assert!(matches!(e, Err(RpcError::AccessDenied(_))));
+        server.stop();
+    }
+
+    #[test]
+    fn rdma_fallback_auto_selected_beyond_rack() {
+        // Paper §4.7: the same API transparently falls back to RDMA
+        // when the client is outside the CXL domain.
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "faraway");
+        let cenv = rack.remote_proc_env();
+        let conn = Rpc::connect(&cenv, "faraway").unwrap();
+        assert!(conn.shared.is_dsm(), "out-of-rack ⇒ DSM transport");
+        cenv.run(|| {
+            for i in 0..20u64 {
+                let arg = conn.new_val(i).unwrap();
+                assert_eq!(conn.call_ptr(101, arg).unwrap(), i + 1);
+            }
+        });
+        let (faults, pages) = conn.shared.dsm.as_ref().unwrap().stats();
+        assert!(faults > 0 && pages > 0, "server must have faulted pages over");
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+
+        // In-rack clients stay on CXL.
+        let (server2, t2) = serve_echo(&rack, "nearby");
+        let conn2 = Rpc::connect(&rack.proc_env(3), "nearby").unwrap();
+        assert!(!conn2.shared.is_dsm());
+        drop(conn2);
+        server2.stop();
+        t2.join().unwrap();
+    }
+
+    #[test]
+    fn dsm_sealing_and_sandboxing_work_identically() {
+        // Paper §5.6: "Sealing and sandboxing for RDMA-based shared
+        // memory pages works similarly to RPCool's CXL implementation."
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "dsm-secure").unwrap();
+        server.add(7, |ctx| {
+            assert!(ctx.sealed && ctx.sandboxed);
+            let v: u64 = ctx.arg_val()?;
+            Ok(v + 100)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.remote_proc_env();
+        let conn = Connection::connect_with(&cenv, "dsm-secure", TransportSel::Rdma).unwrap();
+        cenv.run(|| {
+            let scope = conn.create_scope(4096).unwrap();
+            let addr = scope.new_val(1u64).unwrap();
+            assert_eq!(conn.call_secure(7, &scope, addr, 8).unwrap(), 101);
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn call_sealed_pooled_batches_releases() {
+        let mut cfg = SimConfig::for_tests();
+        cfg.batch_release_threshold = 16;
+        let rack = Rack::new(cfg);
+        let env = rack.proc_env(0);
+        let server = RpcServer::open(&env, "pooled", ChannelOpts::from_config(&rack.cfg)).unwrap();
+        server.add(1, |ctx| {
+            let v: u64 = ctx.arg_val()?;
+            Ok(v)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Connection::connect(&cenv, "pooled").unwrap();
+        let pool = conn.create_scope_pool(4096);
+        cenv.run(|| {
+            for i in 0..40u64 {
+                let scope = pool.pop().unwrap();
+                let addr = scope.new_val(i).unwrap();
+                assert_eq!(conn.call_sealed_pooled(1, &pool, scope, addr, 8).unwrap(), i);
+            }
+        });
+        assert_eq!(pool.flushes(), 2, "40 calls / threshold 16 = 2 flushes");
+        pool.flush().unwrap();
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,276 @@
+//! The RPC slot ring — the shared-memory mailbox a connection's RPCs
+//! travel through (paper §4.2, §5.8).
+//!
+//! One ring per connection lives in the connection heap. The client
+//! claims a slot, writes the request descriptor (function id, argument
+//! pointer — the argument *data* is already in the heap; this is the
+//! zero-serialization trick), and publishes it with a release store:
+//! the "doorbell" the server's busy-wait loop observes across the CXL
+//! fabric. Responses flow back through the same slot.
+//!
+//! Slot states cycle EMPTY → CLAIMED → REQUEST → PROCESSING →
+//! RESPONSE → EMPTY. Multiple client threads may share a connection
+//! (slots are claimed by CAS); each slot is single-producer
+//! single-consumer once claimed.
+
+use crate::error::{Result, RpcError};
+use crate::memory::heap::Heap;
+use crate::memory::pool::Charger;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+pub const SLOT_EMPTY: u32 = 0;
+pub const SLOT_CLAIMED: u32 = 1;
+pub const SLOT_REQUEST: u32 = 2;
+pub const SLOT_PROCESSING: u32 = 3;
+pub const SLOT_RESPONSE: u32 = 4;
+
+/// Call flags.
+pub const FLAG_SEALED: u32 = 1 << 0;
+pub const FLAG_SANDBOXED: u32 = 1 << 1;
+
+/// No seal descriptor attached.
+pub const NO_SEAL: u64 = u64::MAX;
+
+/// One request/response slot, resident in shared memory.
+#[repr(C)]
+pub struct Slot {
+    pub state: AtomicU32,
+    pub func: AtomicU32,
+    pub flags: AtomicU32,
+    pub status: AtomicU32,
+    /// Seal descriptor index (NO_SEAL if none).
+    pub seal_idx: std::sync::atomic::AtomicU64,
+    /// Argument pointer + byte length (a native shm pointer!).
+    pub arg: std::sync::atomic::AtomicU64,
+    pub arg_len: std::sync::atomic::AtomicU64,
+    /// Return value (scalar or native shm pointer).
+    pub ret: std::sync::atomic::AtomicU64,
+}
+
+/// Status codes carried back in `Slot::status`.
+pub const ST_OK: u32 = 0;
+pub const ST_NO_HANDLER: u32 = 1;
+pub const ST_SEAL_INVALID: u32 = 2;
+pub const ST_SANDBOX_VIOLATION: u32 = 3;
+pub const ST_HANDLER_ERROR: u32 = 4;
+pub const ST_CLOSED: u32 = 5;
+
+pub fn status_to_error(status: u32) -> RpcError {
+    match status {
+        ST_NO_HANDLER => RpcError::NoSuchHandler(0),
+        ST_SEAL_INVALID => RpcError::SealInvalid("receiver-side seal verification failed".into()),
+        ST_SANDBOX_VIOLATION => {
+            RpcError::SandboxViolation { addr: 0, lo: 0, hi: 0 }
+        }
+        ST_CLOSED => RpcError::ConnectionClosed,
+        _ => RpcError::Remote(format!("handler error (status {status})")),
+    }
+}
+
+/// The ring itself: `n` slots in the connection heap.
+pub struct RpcRing {
+    base: usize,
+    n: usize,
+    charger: Arc<Charger>,
+    /// One-way doorbell cost: CXL signal for in-rack connections, an
+    /// RDMA message for DSM-fallback connections.
+    signal_ns: u64,
+}
+
+impl RpcRing {
+    pub fn create(heap: &Arc<Heap>, n: usize) -> Result<RpcRing> {
+        let ns = heap.pool().charger.cost.cxl_signal_ns;
+        Self::create_with_signal(heap, n, ns)
+    }
+
+    /// Ring whose doorbell models a different link (RDMA fallback).
+    pub fn create_with_signal(heap: &Arc<Heap>, n: usize, signal_ns: u64) -> Result<RpcRing> {
+        let n = n.next_power_of_two().max(4);
+        let bytes = n * std::mem::size_of::<Slot>();
+        let base = heap.alloc_bytes(bytes)?;
+        unsafe { std::ptr::write_bytes(base as *mut u8, 0, bytes) };
+        Ok(RpcRing { base, n, charger: Arc::clone(&heap.pool().charger), signal_ns })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn slot(&self, i: usize) -> &Slot {
+        debug_assert!(i < self.n);
+        unsafe { &*((self.base + i * std::mem::size_of::<Slot>()) as *const Slot) }
+    }
+
+    /// Client side: claim an EMPTY slot (CAS scan).
+    pub fn claim(&self) -> Option<usize> {
+        for i in 0..self.n {
+            let s = self.slot(i);
+            if s.state
+                .compare_exchange(SLOT_EMPTY, SLOT_CLAIMED, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Client side: fill the claimed slot and ring the doorbell.
+    #[allow(clippy::too_many_arguments)]
+    pub fn publish(
+        &self,
+        i: usize,
+        func: u32,
+        flags: u32,
+        seal_idx: u64,
+        arg: usize,
+        arg_len: usize,
+    ) {
+        let s = self.slot(i);
+        s.func.store(func, Ordering::Relaxed);
+        s.flags.store(flags, Ordering::Relaxed);
+        s.seal_idx.store(seal_idx, Ordering::Relaxed);
+        s.arg.store(arg as u64, Ordering::Relaxed);
+        s.arg_len.store(arg_len as u64, Ordering::Relaxed);
+        s.status.store(ST_OK, Ordering::Relaxed);
+        // The doorbell: one cross-fabric signal (or RDMA message).
+        self.charger.charge_ns(self.signal_ns);
+        s.state.store(SLOT_REQUEST, Ordering::Release);
+    }
+
+    /// Server side: find a pending request, transition it to PROCESSING.
+    pub fn take_request(&self) -> Option<usize> {
+        for i in 0..self.n {
+            let s = self.slot(i);
+            if s.state.load(Ordering::Acquire) == SLOT_REQUEST
+                && s.state
+                    .compare_exchange(
+                        SLOT_REQUEST,
+                        SLOT_PROCESSING,
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+            {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Server side: write the response and signal the client.
+    pub fn respond(&self, i: usize, status: u32, ret: u64) {
+        let s = self.slot(i);
+        s.ret.store(ret, Ordering::Relaxed);
+        s.status.store(status, Ordering::Relaxed);
+        self.charger.charge_ns(self.signal_ns);
+        s.state.store(SLOT_RESPONSE, Ordering::Release);
+    }
+
+    /// Client side: is the response ready?
+    #[inline]
+    pub fn response_ready(&self, i: usize) -> bool {
+        self.slot(i).state.load(Ordering::Acquire) == SLOT_RESPONSE
+    }
+
+    /// Client side: consume the response, freeing the slot.
+    pub fn consume(&self, i: usize) -> (u32, u64) {
+        let s = self.slot(i);
+        let status = s.status.load(Ordering::Relaxed);
+        let ret = s.ret.load(Ordering::Relaxed);
+        s.state.store(SLOT_EMPTY, Ordering::Release);
+        (status, ret)
+    }
+
+    /// Any in-flight work? (used by drain/shutdown paths)
+    pub fn quiescent(&self) -> bool {
+        (0..self.n).all(|i| self.slot(i).state.load(Ordering::Acquire) == SLOT_EMPTY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::pool::Pool;
+
+    fn ring() -> (Arc<Pool>, Arc<Heap>, RpcRing) {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "ring", 1 << 20).unwrap();
+        let r = RpcRing::create(&heap, 8).unwrap();
+        (pool, heap, r)
+    }
+
+    #[test]
+    fn request_response_cycle() {
+        let (_p, _h, r) = ring();
+        let i = r.claim().unwrap();
+        r.publish(i, 100, 0, NO_SEAL, 0xAB0, 64);
+        let j = r.take_request().unwrap();
+        assert_eq!(i, j);
+        let s = r.slot(j);
+        assert_eq!(s.func.load(Ordering::Relaxed), 100);
+        assert_eq!(s.arg.load(Ordering::Relaxed), 0xAB0);
+        r.respond(j, ST_OK, 42);
+        assert!(r.response_ready(i));
+        let (status, ret) = r.consume(i);
+        assert_eq!((status, ret), (ST_OK, 42));
+        assert!(r.quiescent());
+    }
+
+    #[test]
+    fn slots_exhaust_then_recycle() {
+        let (_p, _h, r) = ring();
+        let claimed: Vec<usize> = (0..r.len()).map(|_| r.claim().unwrap()).collect();
+        assert_eq!(claimed.len(), 8);
+        assert!(r.claim().is_none(), "ring full");
+        // Respond to one and it becomes claimable again.
+        r.publish(claimed[0], 1, 0, NO_SEAL, 0, 0);
+        let i = r.take_request().unwrap();
+        r.respond(i, ST_OK, 0);
+        r.consume(i);
+        assert!(r.claim().is_some());
+    }
+
+    #[test]
+    fn cross_thread_rpc() {
+        let (_p, h, _unused) = ring();
+        let r = Arc::new(RpcRing::create(&h, 4).unwrap());
+        let server = Arc::clone(&r);
+        let t = std::thread::spawn(move || {
+            // Serve exactly 100 requests, echoing func+1.
+            let mut served = 0;
+            while served < 100 {
+                if let Some(i) = server.take_request() {
+                    let f = server.slot(i).func.load(Ordering::Relaxed);
+                    server.respond(i, ST_OK, f as u64 + 1);
+                    served += 1;
+                }
+            }
+        });
+        for k in 0..100u32 {
+            let i = loop {
+                if let Some(i) = r.claim() {
+                    break i;
+                }
+            };
+            r.publish(i, k, 0, NO_SEAL, 0, 0);
+            while !r.response_ready(i) {
+                std::hint::spin_loop();
+            }
+            let (st, ret) = r.consume(i);
+            assert_eq!(st, ST_OK);
+            assert_eq!(ret, k as u64 + 1);
+        }
+        t.join().unwrap();
+    }
+}

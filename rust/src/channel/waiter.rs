@@ -1,0 +1,196 @@
+//! Busy-waiting with adaptive sleep (paper §5.8).
+//!
+//! RPCool busy-polls shared memory for new RPCs and completions. To
+//! keep CPU burn bounded, it sleeps between iterations depending on
+//! CPU load: no sleep under 25% load, 5µs between 25–50%, 150µs above
+//! 50%. Figure 13 sweeps these sleeps to show the latency/throughput
+//! tradeoff; `SleepPolicy::Fixed` reproduces that sweep.
+//!
+//! Load here is the fraction of hardware threads occupied by active
+//! pollers/workers (a `LoadMonitor` EWMA), standing in for the
+//! system-wide CPU load the paper samples.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Global count of threads currently spinning/working, and the
+/// number of "virtual cores" load is measured against.
+pub struct LoadMonitor {
+    active: AtomicI64,
+    cores: AtomicI64,
+}
+
+impl LoadMonitor {
+    pub const fn new() -> Self {
+        LoadMonitor { active: AtomicI64::new(0), cores: AtomicI64::new(8) }
+    }
+
+    pub fn set_cores(&self, n: i64) {
+        self.cores.store(n.max(1), Ordering::Relaxed);
+    }
+
+    pub fn enter(&self) {
+        self.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn exit(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Instantaneous load in [0, ∞): active / cores.
+    pub fn load(&self) -> f64 {
+        let a = self.active.load(Ordering::Relaxed).max(0) as f64;
+        let c = self.cores.load(Ordering::Relaxed) as f64;
+        a / c
+    }
+}
+
+impl Default for LoadMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Process-wide monitor (simulated hosts share the physical CPU).
+pub static LOAD: LoadMonitor = LoadMonitor::new();
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SleepPolicy {
+    /// Paper §5.8 default: 0 / mid / high µs by load band.
+    Adaptive { load_mid: f64, load_high: f64, sleep_mid_us: u64, sleep_high_us: u64 },
+    /// Fixed sleep between iterations (Figure 13's sweep points).
+    Fixed(u64),
+    /// Never sleep.
+    Spin,
+}
+
+impl SleepPolicy {
+    pub fn from_config(cfg: &crate::config::SimConfig) -> SleepPolicy {
+        SleepPolicy::Adaptive {
+            load_mid: cfg.busywait_load_mid,
+            load_high: cfg.busywait_load_high,
+            sleep_mid_us: cfg.busywait_sleep_mid_us,
+            sleep_high_us: cfg.busywait_sleep_high_us,
+        }
+    }
+
+    /// Sleep duration for the current load.
+    pub fn sleep_us(&self, load: f64) -> u64 {
+        match *self {
+            SleepPolicy::Spin => 0,
+            SleepPolicy::Fixed(us) => us,
+            SleepPolicy::Adaptive { load_mid, load_high, sleep_mid_us, sleep_high_us } => {
+                if load < load_mid {
+                    0
+                } else if load < load_high {
+                    sleep_mid_us
+                } else {
+                    sleep_high_us
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of a wait.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WaitOutcome {
+    Ready,
+    TimedOut,
+}
+
+/// Statistics (iterations vs sleeps) for tuning/telemetry.
+#[derive(Default)]
+pub struct WaitStats {
+    pub polls: AtomicU64,
+    pub sleeps: AtomicU64,
+}
+
+/// Busy-wait until `ready()` or `timeout`. The paper's poll loop.
+pub fn wait_until(
+    policy: SleepPolicy,
+    timeout: Duration,
+    stats: Option<&WaitStats>,
+    mut ready: impl FnMut() -> bool,
+) -> WaitOutcome {
+    let start = Instant::now();
+    LOAD.enter();
+    let out = loop {
+        if ready() {
+            break WaitOutcome::Ready;
+        }
+        if let Some(s) = stats {
+            s.polls.fetch_add(1, Ordering::Relaxed);
+        }
+        if start.elapsed() >= timeout {
+            break WaitOutcome::TimedOut;
+        }
+        let us = policy.sleep_us(LOAD.load());
+        if us > 0 {
+            if let Some(s) = stats {
+                s.sleeps.fetch_add(1, Ordering::Relaxed);
+            }
+            // A real sleep yields the core — that is the whole point
+            // of the adaptive policy (frees CPU for workers).
+            std::thread::sleep(Duration::from_micros(us));
+        } else {
+            std::hint::spin_loop();
+        }
+    };
+    LOAD.exit();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn policy_bands_match_paper() {
+        let p = SleepPolicy::Adaptive {
+            load_mid: 0.25,
+            load_high: 0.50,
+            sleep_mid_us: 5,
+            sleep_high_us: 150,
+        };
+        assert_eq!(p.sleep_us(0.10), 0);
+        assert_eq!(p.sleep_us(0.30), 5);
+        assert_eq!(p.sleep_us(0.80), 150);
+    }
+
+    #[test]
+    fn wait_sees_flag_from_other_thread() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&flag);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            f2.store(true, Ordering::Release);
+        });
+        let out = wait_until(SleepPolicy::Spin, Duration::from_secs(1), None, || {
+            flag.load(Ordering::Acquire)
+        });
+        assert_eq!(out, WaitOutcome::Ready);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let out =
+            wait_until(SleepPolicy::Fixed(1), Duration::from_millis(5), None, || false);
+        assert_eq!(out, WaitOutcome::TimedOut);
+    }
+
+    #[test]
+    fn load_monitor_counts() {
+        let m = LoadMonitor::new();
+        m.set_cores(4);
+        m.enter();
+        m.enter();
+        assert!((m.load() - 0.5).abs() < 1e-9);
+        m.exit();
+        m.exit();
+        assert_eq!(m.load(), 0.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! Configuration: the simulated-hardware cost model and system knobs.
+//!
+//! The cost model is the heart of the reproduction (DESIGN.md §5):
+//! every latency the paper's testbed exhibits in hardware is charged
+//! here via calibrated spins. Defaults are calibrated against the
+//! paper's Table 1 / Figure 1. All values are overridable from a
+//! simple `key = value` config file (`from_file`) or `key=value` CLI
+//! pairs (`apply_kv`), so ablations can sweep them.
+
+use crate::error::{Result, RpcError};
+use std::collections::BTreeMap;
+
+/// Simulated hardware latencies, in nanoseconds unless noted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    // --- CXL fabric (paper §3, Fig. 1) ---
+    /// One cacheline load served from the far (CXL) memory node.
+    pub cxl_load_ns: u64,
+    /// Doorbell: producer's flag store becoming visible to a polling
+    /// consumer across the fabric (one-way).
+    pub cxl_signal_ns: u64,
+    /// Per-64B-cacheline cost of bulk copies into/out of CXL memory.
+    pub cxl_copy_per_line_ns: u64,
+
+    // --- Intel MPK (paper §5.2) ---
+    /// WRPKRU — change this thread's key permissions.
+    pub pkru_write_ns: u64,
+    /// pkey_mprotect-like base cost of (re)assigning a key to a region.
+    pub key_assign_base_ns: u64,
+    /// ... plus per-page cost of the assignment walk.
+    pub key_assign_per_page_ns: u64,
+    /// Entering/exiting a cached sandbox beyond the PKRU write itself
+    /// (malloc redirection swap, window bookkeeping).
+    pub sandbox_enter_extra_ns: u64,
+    pub sandbox_exit_extra_ns: u64,
+    /// Setting up an uncached sandbox's temp heap (allocator init).
+    pub sandbox_heap_setup_ns: u64,
+
+    // --- seal()/release() (paper §5.3) ---
+    /// Syscall entry/exit + descriptor write.
+    pub seal_syscall_ns: u64,
+    /// Per-page PTE permission flip.
+    pub pte_flip_per_page_ns: u64,
+    /// TLB shootdown broadcast (charged on release; amortized by batching).
+    pub tlb_shootdown_ns: u64,
+
+    // --- RDMA simnet (paper §5.6, Fig. 1) ---
+    /// One-way small-message latency (CX-5 class).
+    pub rdma_oneway_ns: u64,
+    /// Per-4KiB-page wire time.
+    pub rdma_page_ns: u64,
+    /// Page-fault trap + remap cost in the DSM fallback.
+    pub dsm_fault_ns: u64,
+
+    // --- TCP / IPoIB (for gRPC/Thrift baselines) ---
+    /// One-way small-message latency through the kernel stack.
+    pub tcp_oneway_ns: u64,
+    /// Per-4KiB wire+copy time.
+    pub tcp_page_ns: u64,
+    /// Extra per-message overhead for HTTP/2 framing (gRPC).
+    pub http2_framing_ns: u64,
+    /// UNIX domain socket one-way latency.
+    pub uds_oneway_ns: u64,
+    /// Per-4KiB cost over UDS.
+    pub uds_page_ns: u64,
+
+    // --- serialization (baselines) ---
+    /// Per-byte serialize cost (protobuf-class encoder).
+    pub serialize_per_byte_ns_x100: u64,
+    /// Per-object fixed serialize overhead.
+    pub serialize_per_obj_ns: u64,
+
+    // --- baseline framework stacks (calibrated to Table 1a) ---
+    /// gRPC's userspace stack per direction (HTTP/2, flow control,
+    /// completion queues — the paper measures a 5.5ms no-op RTT).
+    pub grpc_stack_ns: u64,
+    /// ThriftRPC per-direction stack cost.
+    pub thrift_stack_ns: u64,
+    /// eRPC per-direction stack cost beyond raw RDMA.
+    pub erpc_stack_ns: u64,
+    /// ZhangRPC per-RPC failure-resilience commit (their SOSP'23
+    /// design journals object metadata per operation).
+    pub zhang_commit_ns: u64,
+    /// ZhangRPC per-object overhead: 8-byte header + CXLRef creation
+    /// + link_reference() on the critical path.
+    pub zhang_obj_ns: u64,
+
+    // --- DeathStarBench social network (Fig. 12/13) ---
+    /// Nginx front-end cost per request (the paper's tracing: ~66% of
+    /// the critical path is databases + Nginx).
+    pub nginx_ns: u64,
+    /// Extra per-database-operation cost on the compose-post critical
+    /// path (index maintenance, journaling, redis/mongo internals our
+    /// lean stores don't reproduce).
+    pub socialnet_db_extra_ns: u64,
+
+    // --- misc ---
+    /// Channel create/destroy involve the daemon + orchestrator (ms class).
+    pub channel_create_us: u64,
+    pub channel_destroy_us: u64,
+    /// Connect includes daemon mapping the heap + orchestrator lease (paper: 0.4s).
+    pub channel_connect_us: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            cxl_load_ns: 320,
+            cxl_signal_ns: 600,
+            cxl_copy_per_line_ns: 35,
+            pkru_write_ns: 28,
+            key_assign_base_ns: 2_000,
+            key_assign_per_page_ns: 120,
+            sandbox_enter_extra_ns: 120,
+            sandbox_exit_extra_ns: 60,
+            sandbox_heap_setup_ns: 21_000,
+            seal_syscall_ns: 350,
+            pte_flip_per_page_ns: 1,
+            tlb_shootdown_ns: 250,
+            rdma_oneway_ns: 1_450,
+            rdma_page_ns: 1_300,
+            dsm_fault_ns: 2_500,
+            tcp_oneway_ns: 17_000,
+            tcp_page_ns: 3_000,
+            http2_framing_ns: 20_000,
+            uds_oneway_ns: 5_200,
+            uds_page_ns: 1_200,
+            serialize_per_byte_ns_x100: 45, // 0.45 ns/byte
+            serialize_per_obj_ns: 120,
+            grpc_stack_ns: 1_350_000,
+            thrift_stack_ns: 22_000,
+            erpc_stack_ns: 0,
+            zhang_commit_ns: 9_100,
+            zhang_obj_ns: 260,
+            nginx_ns: 55_000,
+            socialnet_db_extra_ns: 70_000,
+            channel_create_us: 26_500,  // 26.5 ms
+            channel_destroy_us: 38_400, // 38.4 ms
+            channel_connect_us: 400_000, // 0.4 s
+        }
+    }
+}
+
+/// Whether simulated latencies are actually charged (spin) or skipped.
+/// Functional tests turn charging off to run fast; benches leave it on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChargePolicy {
+    /// Spin for every modelled cost (benchmarks).
+    Charge,
+    /// Skip spins; purely functional execution (unit/integration tests).
+    Skip,
+}
+
+/// System-wide knobs.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub cost: CostModel,
+    pub charge: ChargePolicy,
+    /// Total size of the simulated CXL pool.
+    pub pool_bytes: usize,
+    /// Default per-connection heap size.
+    pub heap_bytes: usize,
+    /// Page size of the simulated machines.
+    pub page_bytes: usize,
+    /// Number of MPK keys per process (hardware: 16).
+    pub mpk_keys: usize,
+    /// Reserved keys (private heap + unsandboxed shm) — paper reserves 2.
+    pub mpk_reserved_keys: usize,
+    /// Lease time-to-live (ms of wall-clock in the sim).
+    pub lease_ttl_ms: u64,
+    /// Lease renewal interval.
+    pub lease_renew_ms: u64,
+    /// Per-process shared-memory quota (bytes).
+    pub quota_bytes: usize,
+    /// Batch-release threshold (paper: 1024).
+    pub batch_release_threshold: usize,
+    /// Busy-wait adaptive-sleep thresholds (paper §5.8).
+    pub busywait_load_mid: f64,
+    pub busywait_load_high: f64,
+    pub busywait_sleep_mid_us: u64,
+    pub busywait_sleep_high_us: u64,
+    /// Hosts per rack reachable over CXL (paper assumes ≤32).
+    pub rack_hosts: usize,
+    /// Enforce permissions on every shm access (tests) vs trust+charge (benches).
+    pub enforce_protection: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cost: CostModel::default(),
+            charge: ChargePolicy::Charge,
+            pool_bytes: 1 << 30, // 1 GiB
+            heap_bytes: 16 << 20, // 16 MiB
+            page_bytes: 4096,
+            mpk_keys: 16,
+            mpk_reserved_keys: 2,
+            lease_ttl_ms: 200,
+            lease_renew_ms: 50,
+            quota_bytes: 256 << 20,
+            batch_release_threshold: 1024,
+            busywait_load_mid: 0.25,
+            busywait_load_high: 0.50,
+            busywait_sleep_mid_us: 5,
+            busywait_sleep_high_us: 150,
+            rack_hosts: 32,
+            enforce_protection: true,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Fast functional config for tests: no latency charging, smaller pool.
+    pub fn for_tests() -> Self {
+        SimConfig {
+            charge: ChargePolicy::Skip,
+            pool_bytes: 256 << 20,
+            heap_bytes: 4 << 20,
+            lease_ttl_ms: 60,
+            lease_renew_ms: 15,
+            ..Default::default()
+        }
+    }
+
+    /// Benchmark config: full cost model, protection charged not checked
+    /// (matches real hardware, where MPK/PTE checks are free at access
+    /// time and paid at permission-change time).
+    pub fn for_bench() -> Self {
+        SimConfig {
+            charge: ChargePolicy::Charge,
+            enforce_protection: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn pages(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.page_bytes)
+    }
+
+    /// Parse `key = value` lines ('#' comments allowed).
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| RpcError::Config(format!("{path}: {e}")))?;
+        let mut cfg = SimConfig::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| RpcError::Config(format!("{path}:{}: expected key=value", ln + 1)))?;
+            cfg.apply_kv(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply a single `key=value` override.
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
+        fn pu64(v: &str) -> Result<u64> {
+            v.parse::<u64>().map_err(|e| RpcError::Config(format!("bad u64 '{v}': {e}")))
+        }
+        fn pusize(v: &str) -> Result<usize> {
+            v.parse::<usize>().map_err(|e| RpcError::Config(format!("bad usize '{v}': {e}")))
+        }
+        fn pf64(v: &str) -> Result<f64> {
+            v.parse::<f64>().map_err(|e| RpcError::Config(format!("bad f64 '{v}': {e}")))
+        }
+        match key {
+            "cxl_load_ns" => self.cost.cxl_load_ns = pu64(value)?,
+            "cxl_signal_ns" => self.cost.cxl_signal_ns = pu64(value)?,
+            "cxl_copy_per_line_ns" => self.cost.cxl_copy_per_line_ns = pu64(value)?,
+            "pkru_write_ns" => self.cost.pkru_write_ns = pu64(value)?,
+            "key_assign_base_ns" => self.cost.key_assign_base_ns = pu64(value)?,
+            "key_assign_per_page_ns" => self.cost.key_assign_per_page_ns = pu64(value)?,
+            "sandbox_enter_extra_ns" => self.cost.sandbox_enter_extra_ns = pu64(value)?,
+            "sandbox_exit_extra_ns" => self.cost.sandbox_exit_extra_ns = pu64(value)?,
+            "sandbox_heap_setup_ns" => self.cost.sandbox_heap_setup_ns = pu64(value)?,
+            "seal_syscall_ns" => self.cost.seal_syscall_ns = pu64(value)?,
+            "pte_flip_per_page_ns" => self.cost.pte_flip_per_page_ns = pu64(value)?,
+            "tlb_shootdown_ns" => self.cost.tlb_shootdown_ns = pu64(value)?,
+            "rdma_oneway_ns" => self.cost.rdma_oneway_ns = pu64(value)?,
+            "rdma_page_ns" => self.cost.rdma_page_ns = pu64(value)?,
+            "dsm_fault_ns" => self.cost.dsm_fault_ns = pu64(value)?,
+            "tcp_oneway_ns" => self.cost.tcp_oneway_ns = pu64(value)?,
+            "tcp_page_ns" => self.cost.tcp_page_ns = pu64(value)?,
+            "http2_framing_ns" => self.cost.http2_framing_ns = pu64(value)?,
+            "uds_oneway_ns" => self.cost.uds_oneway_ns = pu64(value)?,
+            "uds_page_ns" => self.cost.uds_page_ns = pu64(value)?,
+            "serialize_per_byte_ns_x100" => self.cost.serialize_per_byte_ns_x100 = pu64(value)?,
+            "serialize_per_obj_ns" => self.cost.serialize_per_obj_ns = pu64(value)?,
+            "grpc_stack_ns" => self.cost.grpc_stack_ns = pu64(value)?,
+            "thrift_stack_ns" => self.cost.thrift_stack_ns = pu64(value)?,
+            "erpc_stack_ns" => self.cost.erpc_stack_ns = pu64(value)?,
+            "zhang_commit_ns" => self.cost.zhang_commit_ns = pu64(value)?,
+            "zhang_obj_ns" => self.cost.zhang_obj_ns = pu64(value)?,
+            "nginx_ns" => self.cost.nginx_ns = pu64(value)?,
+            "socialnet_db_extra_ns" => self.cost.socialnet_db_extra_ns = pu64(value)?,
+            "channel_create_us" => self.cost.channel_create_us = pu64(value)?,
+            "channel_destroy_us" => self.cost.channel_destroy_us = pu64(value)?,
+            "channel_connect_us" => self.cost.channel_connect_us = pu64(value)?,
+            "charge" => {
+                self.charge = match value {
+                    "on" | "true" | "1" => ChargePolicy::Charge,
+                    "off" | "false" | "0" => ChargePolicy::Skip,
+                    other => return Err(RpcError::Config(format!("bad charge '{other}'"))),
+                }
+            }
+            "pool_bytes" => self.pool_bytes = pusize(value)?,
+            "heap_bytes" => self.heap_bytes = pusize(value)?,
+            "page_bytes" => self.page_bytes = pusize(value)?,
+            "mpk_keys" => self.mpk_keys = pusize(value)?,
+            "mpk_reserved_keys" => self.mpk_reserved_keys = pusize(value)?,
+            "lease_ttl_ms" => self.lease_ttl_ms = pu64(value)?,
+            "lease_renew_ms" => self.lease_renew_ms = pu64(value)?,
+            "quota_bytes" => self.quota_bytes = pusize(value)?,
+            "batch_release_threshold" => self.batch_release_threshold = pusize(value)?,
+            "busywait_load_mid" => self.busywait_load_mid = pf64(value)?,
+            "busywait_load_high" => self.busywait_load_high = pf64(value)?,
+            "busywait_sleep_mid_us" => self.busywait_sleep_mid_us = pu64(value)?,
+            "busywait_sleep_high_us" => self.busywait_sleep_high_us = pu64(value)?,
+            "rack_hosts" => self.rack_hosts = pusize(value)?,
+            "enforce_protection" => self.enforce_protection = value == "true" || value == "1",
+            other => return Err(RpcError::Config(format!("unknown key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Dump as sorted key=value lines (round-trips through `apply_kv`).
+    pub fn dump(&self) -> String {
+        let c = &self.cost;
+        let mut m: BTreeMap<&str, String> = BTreeMap::new();
+        m.insert("cxl_load_ns", c.cxl_load_ns.to_string());
+        m.insert("cxl_signal_ns", c.cxl_signal_ns.to_string());
+        m.insert("pkru_write_ns", c.pkru_write_ns.to_string());
+        m.insert("seal_syscall_ns", c.seal_syscall_ns.to_string());
+        m.insert("tlb_shootdown_ns", c.tlb_shootdown_ns.to_string());
+        m.insert("rdma_oneway_ns", c.rdma_oneway_ns.to_string());
+        m.insert("tcp_oneway_ns", c.tcp_oneway_ns.to_string());
+        m.insert("pool_bytes", self.pool_bytes.to_string());
+        m.insert("heap_bytes", self.heap_bytes.to_string());
+        m.insert("page_bytes", self.page_bytes.to_string());
+        m.insert(
+            "charge",
+            match self.charge {
+                ChargePolicy::Charge => "on".into(),
+                ChargePolicy::Skip => "off".into(),
+            },
+        );
+        m.iter().map(|(k, v)| format!("{k} = {v}\n")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_calibration() {
+        let c = CostModel::default();
+        assert_eq!(c.channel_create_us, 26_500);
+        assert_eq!(c.channel_connect_us, 400_000);
+        assert!(c.cxl_signal_ns < c.rdma_oneway_ns);
+        assert!(c.rdma_oneway_ns < c.tcp_oneway_ns);
+    }
+
+    #[test]
+    fn apply_kv_roundtrip() {
+        let mut cfg = SimConfig::default();
+        cfg.apply_kv("cxl_load_ns", "123").unwrap();
+        assert_eq!(cfg.cost.cxl_load_ns, 123);
+        cfg.apply_kv("charge", "off").unwrap();
+        assert_eq!(cfg.charge, ChargePolicy::Skip);
+        assert!(cfg.apply_kv("nonsense", "1").is_err());
+        assert!(cfg.apply_kv("cxl_load_ns", "abc").is_err());
+    }
+
+    #[test]
+    fn from_file_parses_comments_and_blanks() {
+        let path = std::env::temp_dir().join("rpcool_cfg_test.conf");
+        std::fs::write(&path, "# comment\n\ncxl_load_ns = 77 # inline\nrack_hosts=8\n").unwrap();
+        let cfg = SimConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.cost.cxl_load_ns, 77);
+        assert_eq!(cfg.rack_hosts, 8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pages_rounds_up() {
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.pages(1), 1);
+        assert_eq!(cfg.pages(4096), 1);
+        assert_eq!(cfg.pages(4097), 2);
+    }
+}

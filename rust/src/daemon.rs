@@ -1,0 +1,156 @@
+//! The per-host trusted daemon (paper §5.5).
+//!
+//! Each OS runs one daemon at start. It is the *only* entity that
+//! makes map/unmap syscalls for connection heaps: applications open
+//! and close channels/connections through it, and it coordinates with
+//! the orchestrator. Applications may call `seal()`/`release()` but
+//! never `mprotect()` on connection-heap pages — that restriction is
+//! what stops a malicious sender from un-sealing its own pages behind
+//! the kernel's back.
+
+use crate::error::{Result, RpcError};
+use crate::memory::heap::{Heap, ProcId};
+use crate::orchestrator::{LeaseId, Orchestrator};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Mapping record the daemon keeps per (proc, heap).
+#[derive(Clone, Copy, Debug)]
+pub struct Mapping {
+    pub lease: LeaseId,
+    pub heap_id: u64,
+}
+
+pub struct Daemon {
+    pub host: u32,
+    orch: Arc<Orchestrator>,
+    /// proc → heap_id → mapping.
+    mappings: Mutex<HashMap<ProcId, HashMap<u64, Mapping>>>,
+    maps: AtomicU64,
+    denied_mprotects: AtomicU64,
+}
+
+impl Daemon {
+    pub fn new(host: u32, orch: Arc<Orchestrator>) -> Arc<Daemon> {
+        Arc::new(Daemon {
+            host,
+            orch,
+            mappings: Mutex::new(HashMap::new()),
+            maps: AtomicU64::new(0),
+            denied_mprotects: AtomicU64::new(0),
+        })
+    }
+
+    /// Map a connection heap into `proc`'s address space (daemon-only
+    /// syscall; charges the orchestrator handshake via the caller's
+    /// connect-cost accounting).
+    pub fn map_heap(&self, heap_id: u64, proc: ProcId) -> Result<Arc<Heap>> {
+        let (heap, lease) = self.orch.map_heap(heap_id, proc)?;
+        self.mappings
+            .lock()
+            .unwrap()
+            .entry(proc)
+            .or_default()
+            .insert(heap_id, Mapping { lease, heap_id });
+        self.maps.fetch_add(1, Ordering::Relaxed);
+        Ok(heap)
+    }
+
+    /// Create + map a fresh heap (server opening a channel).
+    pub fn create_heap(&self, name: &str, bytes: usize, proc: ProcId) -> Result<Arc<Heap>> {
+        let (heap, lease) = self.orch.create_heap(name, bytes, proc)?;
+        self.mappings
+            .lock()
+            .unwrap()
+            .entry(proc)
+            .or_default()
+            .insert(heap.id, Mapping { lease, heap_id: heap.id });
+        self.maps.fetch_add(1, Ordering::Relaxed);
+        Ok(heap)
+    }
+
+    /// Unmap on clean close.
+    pub fn unmap_heap(&self, heap_id: u64, proc: ProcId) {
+        let m = self.mappings.lock().unwrap().get_mut(&proc).and_then(|h| h.remove(&heap_id));
+        if let Some(m) = m {
+            self.orch.unmap_heap(m.lease, proc, heap_id);
+        }
+    }
+
+    /// librpcool's periodic lease renewal for everything `proc` maps.
+    pub fn renew_all(&self, proc: ProcId) -> usize {
+        let leases: Vec<LeaseId> = self
+            .mappings
+            .lock()
+            .unwrap()
+            .get(&proc)
+            .map(|h| h.values().map(|m| m.lease).collect())
+            .unwrap_or_default();
+        leases.iter().filter(|l| self.orch.renew(**l)).count()
+    }
+
+    /// Simulate a proc crash on this host: its mappings are simply
+    /// forgotten (no unmap, no surrender) — lease expiry must clean up.
+    pub fn crash_proc(&self, proc: ProcId) {
+        self.mappings.lock().unwrap().remove(&proc);
+    }
+
+    /// Applications may not mprotect connection-heap pages (§5.5).
+    pub fn try_app_mprotect(&self, _addr: usize) -> Result<()> {
+        self.denied_mprotects.fetch_add(1, Ordering::Relaxed);
+        Err(RpcError::AccessDenied(
+            "mprotect on connection heap pages is daemon-only (paper §5.5)".into(),
+        ))
+    }
+
+    pub fn map_count(&self) -> u64 {
+        self.maps.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::pool::Pool;
+
+    fn setup() -> (Arc<Orchestrator>, Arc<Daemon>) {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let orch = Orchestrator::new(&cfg, pool);
+        let d = Daemon::new(0, Arc::clone(&orch));
+        (orch, d)
+    }
+
+    #[test]
+    fn daemon_mediates_mapping() {
+        let (orch, d) = setup();
+        let h = d.create_heap("c0", 1 << 20, 1).unwrap();
+        let h2 = d.map_heap(h.id, 2).unwrap();
+        assert_eq!(h.id, h2.id);
+        assert_eq!(d.map_count(), 2);
+        assert_eq!(d.renew_all(1), 1);
+        d.unmap_heap(h.id, 1);
+        d.unmap_heap(h.id, 2);
+        assert_eq!(orch.live_heaps(), 0);
+    }
+
+    #[test]
+    fn crash_leaves_lease_to_expire() {
+        let (orch, d) = setup();
+        let h = d.create_heap("c0", 1 << 20, 7).unwrap();
+        d.crash_proc(7);
+        assert_eq!(d.renew_all(7), 0, "crashed proc renews nothing");
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        orch.tick();
+        assert_eq!(orch.live_heaps(), 0, "expired lease → heap reclaimed");
+        let _ = h;
+    }
+
+    #[test]
+    fn app_mprotect_denied() {
+        let (_o, d) = setup();
+        assert!(d.try_app_mprotect(0x1000).is_err());
+    }
+}

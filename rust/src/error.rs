@@ -1,0 +1,98 @@
+//! RPCool error taxonomy.
+//!
+//! Errors mirror the failure surfaces the paper calls out: seal
+//! verification (§5.3), sandbox violations (§5.2), orchestrator
+//! lease/quota denials (§5.4), transport failures, and the RDMA
+//! fallback's two-node restriction (§5.6).
+
+use thiserror::Error;
+
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum RpcError {
+    #[error("out of shared memory: requested {requested} bytes from heap '{heap}'")]
+    OutOfMemory { heap: String, requested: usize },
+
+    #[error("scope exhausted: requested {requested} bytes, {available} available")]
+    ScopeExhausted { requested: usize, available: usize },
+
+    #[error("seal verification failed: {0}")]
+    SealInvalid(String),
+
+    #[error("release denied: RPC {0} not yet marked complete")]
+    ReleaseDenied(u64),
+
+    #[error("sandbox violation: access to {addr:#x} outside sandbox [{lo:#x}, {hi:#x})")]
+    SandboxViolation { addr: usize, lo: usize, hi: usize },
+
+    #[error("protection fault: write to sealed/read-only page {page}")]
+    ProtectionFault { page: usize },
+
+    #[error("no protection keys available (16-key limit, 14 cached sandboxes)")]
+    NoKeysAvailable,
+
+    #[error("channel '{0}' not found")]
+    ChannelNotFound(String),
+
+    #[error("channel '{0}' already exists")]
+    ChannelExists(String),
+
+    #[error("connection closed")]
+    ConnectionClosed,
+
+    #[error("connection refused by '{0}': {1}")]
+    ConnectionRefused(String, String),
+
+    #[error("quota exceeded: proc {proc} holds {held} bytes, quota {quota}, wanted {wanted}")]
+    QuotaExceeded { proc: u32, held: usize, quota: usize, wanted: usize },
+
+    #[error("lease expired for heap {0}")]
+    LeaseExpired(u64),
+
+    #[error("peer failed: {0}")]
+    PeerFailed(String),
+
+    #[error("access denied: {0}")]
+    AccessDenied(String),
+
+    #[error("RDMA fallback supports exactly two nodes per heap ({0})")]
+    DsmTwoNodeLimit(String),
+
+    #[error("timeout waiting for {0}")]
+    Timeout(String),
+
+    #[error("serialization error: {0}")]
+    Serialization(String),
+
+    #[error("handler {0} not registered on channel")]
+    NoSuchHandler(u32),
+
+    #[error("remote handler error: {0}")]
+    Remote(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+pub type Result<T> = std::result::Result<T, RpcError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_display_useful_messages() {
+        let e = RpcError::QuotaExceeded { proc: 3, held: 100, quota: 50, wanted: 10 };
+        assert!(e.to_string().contains("quota"));
+        let e = RpcError::SandboxViolation { addr: 0x1000, lo: 0x2000, hi: 0x3000 };
+        assert!(e.to_string().contains("outside sandbox"));
+    }
+
+    #[test]
+    fn errors_are_comparable() {
+        assert_eq!(RpcError::ConnectionClosed, RpcError::ConnectionClosed);
+        assert_ne!(RpcError::ConnectionClosed, RpcError::Timeout("x".into()));
+    }
+}

@@ -1,0 +1,43 @@
+//! # RPCool — fast RPCs over shared CXL memory (reproduction)
+//!
+//! A from-scratch reproduction of *Telepathic Datacenters: Fast RPCs
+//! using Shared CXL Memory* (Mahar et al., 2024) as a three-layer
+//! Rust + JAX + Pallas stack. The Rust layer implements the paper's
+//! system: zero-serialization RPCs whose arguments are native
+//! pointer-rich data structures in (simulated) CXL shared memory,
+//! made safe by **seals** (senders lose write access to in-flight
+//! arguments) and **MPK sandboxes** (receivers dereference untrusted
+//! pointers inside a memory window), scaled beyond the rack by an
+//! **RDMA-fallback** software-coherence layer, and kept leak-free by a
+//! global **orchestrator** (leases, quotas, orphaned-heap GC).
+//!
+//! See `DESIGN.md` for the hardware-substitution map and the
+//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured.
+
+pub mod apps;
+pub mod baselines;
+pub mod benchkit;
+pub mod channel;
+pub mod config;
+pub mod daemon;
+pub mod dsm;
+pub mod error;
+pub mod inference;
+pub mod memory;
+pub mod metrics;
+pub mod mpk;
+pub mod orchestrator;
+pub mod rack;
+pub mod runtime;
+pub mod sandbox;
+pub mod seal;
+pub mod simproc;
+pub mod transport;
+pub mod util;
+pub mod workloads;
+
+pub use channel::{ChannelOpts, Connection, Rpc, RpcServer};
+pub use rack::{ProcEnv, Rack};
+
+pub use config::{ChargePolicy, CostModel, SimConfig};
+pub use error::{Result, RpcError};

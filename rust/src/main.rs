@@ -1,0 +1,206 @@
+//! `rpcool` — the launcher binary.
+//!
+//! Subcommands:
+//!   serve   --artifacts DIR [--channel NAME] [--requests N] [--clients K]
+//!           Load the AOT model and serve inference over an RPCool
+//!           channel, driving K in-process clients (the e2e driver as
+//!           a deployable command).
+//!   noop    [--n N] [--config FILE] [k=v ...]
+//!           No-op RPC latency/throughput (Table 1a's first row).
+//!   ycsb    --app memcached|mongodb --workload A..F [--keys N] [--ops N]
+//!           One YCSB cell from Figures 9/10.
+//!   config  [k=v ...]
+//!           Print the effective cost model / knobs.
+//!
+//! Any trailing `key=value` pairs override the cost model (see
+//! `SimConfig::apply_kv`) for ablations.
+
+use rpcool::benchkit::fmt_ns;
+use rpcool::channel::{Connection, Rpc};
+use rpcool::inference::{serve_model, InferenceClient};
+use rpcool::metrics::Histogram;
+use rpcool::runtime::{ModelBundle, PjrtRuntime};
+use rpcool::workloads::ycsb::WorkloadKind;
+use rpcool::{Rack, SimConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn apply_overrides(cfg: &mut SimConfig, args: &[String]) {
+    for a in args {
+        if let Some((k, v)) = a.split_once('=') {
+            if !k.starts_with("--") {
+                if let Err(e) = cfg.apply_kv(k, v) {
+                    eprintln!("config override '{a}': {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let mut cfg = SimConfig::for_bench();
+    if let Some(path) = parse_flag(&args, "--config") {
+        cfg = SimConfig::from_file(&path).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    }
+    apply_overrides(&mut cfg, &args);
+
+    match cmd {
+        "serve" => cmd_serve(&args, cfg),
+        "noop" => cmd_noop(&args, cfg),
+        "ycsb" => cmd_ycsb(&args, cfg),
+        "config" => print!("{}", cfg.dump()),
+        _ => {
+            eprintln!(
+                "usage: rpcool <serve|noop|ycsb|config> [flags] [k=v ...]\n\
+                 see `rust/src/main.rs` header for details"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_serve(args: &[String], cfg: SimConfig) {
+    let dir = parse_flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let channel = parse_flag(args, "--channel").unwrap_or_else(|| "svc/llm".into());
+    let requests: usize =
+        parse_flag(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let clients: usize = parse_flag(args, "--clients").and_then(|v| v.parse().ok()).unwrap_or(2);
+
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = Arc::new(ModelBundle::load(&rt, &dir).expect("artifacts (run `make artifacts`)"));
+    println!(
+        "model: {} layers / d{} / seq {} / vocab {} ({} params)",
+        model.cfg.n_layers,
+        model.cfg.d_model,
+        model.cfg.seq,
+        model.cfg.vocab,
+        model.cfg.param_count()
+    );
+    let rack = Rack::new(cfg);
+    let env = rack.proc_env(0);
+    let server = serve_model(&env, &channel, Arc::clone(&model)).unwrap();
+    let listener = server.spawn_listener();
+    println!("serving '{channel}'; driving {clients} clients × {requests} requests");
+
+    let hist = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let rack = Arc::clone(&rack);
+            let hist = Arc::clone(&hist);
+            let channel = channel.clone();
+            let (seq, vocab) = (model.cfg.seq, model.cfg.vocab);
+            s.spawn(move || {
+                let env = rack.proc_env(1 + c as u32);
+                let cl = InferenceClient::connect(&env, &channel, seq, vocab).unwrap();
+                env.enter();
+                for i in 0..requests {
+                    let t = Instant::now();
+                    cl.next_token(&[c as i32 + 1, i as i32]).unwrap();
+                    hist.record(t.elapsed());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let total = (clients * requests) as f64;
+    println!(
+        "{total} requests in {wall:.2?}: {:.1} req/s — p50 {} p99 {}",
+        total / wall.as_secs_f64(),
+        Histogram::fmt_ns(hist.median_ns()),
+        Histogram::fmt_ns(hist.p99_ns())
+    );
+    server.stop();
+    listener.join().unwrap();
+}
+
+fn cmd_noop(args: &[String], cfg: SimConfig) {
+    let n: usize = parse_flag(args, "--n").and_then(|v| v.parse().ok()).unwrap_or(200_000);
+    let rack = Rack::new(cfg);
+    let env = rack.proc_env(0);
+    let server = Rpc::open(&env, "cli/noop").unwrap();
+    server.add(1, |_| Ok(0));
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, "cli/noop").unwrap();
+    conn.attach_inline(&server);
+    cenv.enter();
+    for _ in 0..1000 {
+        conn.call(1, 0, 0).unwrap();
+    }
+    let t0 = Instant::now();
+    for _ in 0..n {
+        conn.call(1, 0, 0).unwrap();
+    }
+    let el = t0.elapsed();
+    let per = el.as_nanos() as f64 / n as f64;
+    println!("no-op RPC over CXL: {} RTT, {:.2} K req/s", fmt_ns(per), 1e6 / per);
+    drop(conn);
+    server.stop();
+}
+
+fn cmd_ycsb(args: &[String], cfg: SimConfig) {
+    let app = parse_flag(args, "--app").unwrap_or_else(|| "memcached".into());
+    let wl = parse_flag(args, "--workload").unwrap_or_else(|| "A".into());
+    let keys: u64 = parse_flag(args, "--keys").and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    let ops: usize = parse_flag(args, "--ops").and_then(|v| v.parse().ok()).unwrap_or(100_000);
+    let kind = match wl.as_str() {
+        "A" => WorkloadKind::A,
+        "B" => WorkloadKind::B,
+        "C" => WorkloadKind::C,
+        "D" => WorkloadKind::D,
+        "E" => WorkloadKind::E,
+        "F" => WorkloadKind::F,
+        other => {
+            eprintln!("unknown workload {other}");
+            std::process::exit(2);
+        }
+    };
+    let rack = Rack::new(cfg);
+    match app.as_str() {
+        "memcached" => {
+            use rpcool::apps::memcached::*;
+            let env = rack.proc_env(0);
+            let cache = Cache::new(16);
+            let server = serve_rpcool(&env, "cli/mc", cache).unwrap();
+            let cenv = rack.proc_env(1);
+            let kv = RpcoolKv::connect(&cenv, "cli/mc").unwrap();
+            kv.conn().attach_inline(&server);
+            cenv.enter();
+            let (load, run) = run_ycsb(&kv, kind, keys, ops, 7).unwrap();
+            println!("memcached YCSB-{wl} over RPCool: load {load:.2?}, run {run:.2?}");
+            drop(kv);
+            server.stop();
+        }
+        "mongodb" => {
+            use rpcool::apps::mongodb::*;
+            let env = rack.proc_env(0);
+            let store = DocStore::new();
+            let server = serve_rpcool(&env, "cli/mongo", store).unwrap();
+            let cenv = rack.proc_env(1);
+            let db = RpcoolDoc::connect(&cenv, "cli/mongo").unwrap();
+            db.conn().attach_inline(&server);
+            cenv.enter();
+            let (load, run) = run_ycsb(&db, kind, keys, ops, 7).unwrap();
+            println!("mongodb YCSB-{wl} over RPCool: load {load:.2?}, run {run:.2?}");
+            drop(db);
+            server.stop();
+        }
+        other => {
+            eprintln!("unknown app {other}");
+            std::process::exit(2);
+        }
+    }
+}

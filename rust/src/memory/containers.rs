@@ -1,0 +1,610 @@
+//! STL-like containers living in shared memory (paper §4.1:
+//! `rpcool::vector`, `rpcool::string`, ... "based on
+//! Boost.Interprocess"). All containers are themselves `Pod`, so they
+//! nest: a `ShmVec<ShmVec<u8>>`, a map of string → document tree, a
+//! linked list whose nodes carry strings — everything transfers by
+//! pointer with zero serialization.
+//!
+//! Containers don't own an allocator reference (that would not be
+//! `Pod`); mutation methods take any `ShmAlloc` (heap or scope), like
+//! C++ polymorphic allocators.
+
+use crate::error::Result;
+use crate::memory::pod::Pod;
+use crate::memory::ptr::ShmPtr;
+use crate::memory::scope::ShmAlloc;
+use crate::simproc;
+use crate::util::rng::mix64;
+
+// ---------------------------------------------------------------- vec
+
+/// Growable array in shared memory.
+#[derive(Clone, Copy, Debug)]
+pub struct ShmVec<T: Pod> {
+    data: ShmPtr<T>,
+    len: u64,
+    cap: u64,
+}
+
+unsafe impl<T: Pod> Pod for ShmVec<T> {}
+
+impl<T: Pod> Default for ShmVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Pod> ShmVec<T> {
+    pub const fn new() -> Self {
+        ShmVec { data: ShmPtr::null(), len: 0, cap: 0 }
+    }
+
+    pub fn with_capacity(alloc: &dyn ShmAlloc, cap: usize) -> Result<Self> {
+        let mut v = Self::new();
+        if cap > 0 {
+            v.reserve(alloc, cap)?;
+        }
+        Ok(v)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+    #[inline]
+    pub fn data_addr(&self) -> usize {
+        self.data.addr()
+    }
+
+    pub fn reserve(&mut self, alloc: &dyn ShmAlloc, want: usize) -> Result<()> {
+        if want <= self.cap as usize {
+            return Ok(());
+        }
+        let new_cap = want.next_power_of_two().max(4);
+        let bytes = new_cap * std::mem::size_of::<T>();
+        let new_data = alloc.alloc_bytes(bytes.max(1))?;
+        if !self.data.is_null() && self.len > 0 {
+            simproc::check_access(self.data.addr(), self.len() * std::mem::size_of::<T>(), false)?;
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.data.addr() as *const u8,
+                    new_data as *mut u8,
+                    self.len() * std::mem::size_of::<T>(),
+                );
+            }
+        }
+        if !self.data.is_null() {
+            alloc.free_bytes(self.data.addr());
+        }
+        self.data = ShmPtr::from_addr(new_data);
+        self.cap = new_cap as u64;
+        Ok(())
+    }
+
+    pub fn push(&mut self, alloc: &dyn ShmAlloc, v: T) -> Result<()> {
+        if self.len == self.cap {
+            self.reserve(alloc, self.len as usize + 1)?;
+        }
+        self.data.at(self.len as usize).write(v)?;
+        self.len += 1;
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        self.len -= 1;
+        self.data.at(self.len as usize).read().ok()
+    }
+
+    pub fn get(&self, i: usize) -> Result<T> {
+        assert!(i < self.len as usize, "index {i} out of bounds (len {})", self.len);
+        self.data.at(i).read()
+    }
+
+    pub fn set(&self, i: usize, v: T) -> Result<()> {
+        assert!(i < self.len as usize, "index {i} out of bounds (len {})", self.len);
+        self.data.at(i).write(v)
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Checked snapshot into host memory.
+    pub fn to_vec(&self) -> Result<Vec<T>> {
+        simproc::check_access(self.data.addr(), self.len() * std::mem::size_of::<T>(), false)?;
+        let mut out = Vec::with_capacity(self.len());
+        for i in 0..self.len() {
+            out.push(unsafe { self.data.at(i).read_unchecked() });
+        }
+        Ok(out)
+    }
+
+    /// Borrow as a slice.
+    ///
+    /// # Safety
+    /// No concurrent mutation during the borrow (sealed or trusted peer).
+    pub unsafe fn as_slice<'a>(&self) -> &'a [T] {
+        if self.data.is_null() {
+            return &[];
+        }
+        std::slice::from_raw_parts(self.data.addr() as *const T, self.len())
+    }
+
+    pub fn extend_from_slice(&mut self, alloc: &dyn ShmAlloc, xs: &[T]) -> Result<()> {
+        self.reserve(alloc, self.len() + xs.len())?;
+        simproc::check_access(
+            self.data.addr() + self.len() * std::mem::size_of::<T>(),
+            xs.len() * std::mem::size_of::<T>(),
+            true,
+        )?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                xs.as_ptr(),
+                (self.data.addr() as *mut T).add(self.len()),
+                xs.len(),
+            );
+        }
+        self.len += xs.len() as u64;
+        Ok(())
+    }
+
+    /// Free the backing storage (contents are lost).
+    pub fn destroy(&mut self, alloc: &dyn ShmAlloc) {
+        if !self.data.is_null() {
+            alloc.free_bytes(self.data.addr());
+            self.data = ShmPtr::null();
+            self.len = 0;
+            self.cap = 0;
+        }
+    }
+}
+
+// ------------------------------------------------------------- string
+
+/// UTF-8 string in shared memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShmString {
+    bytes: ShmVec<u8>,
+}
+
+unsafe impl Pod for ShmString {}
+
+impl ShmString {
+    pub const fn new() -> Self {
+        ShmString { bytes: ShmVec::new() }
+    }
+
+    pub fn from_str(alloc: &dyn ShmAlloc, s: &str) -> Result<Self> {
+        let mut v = ShmVec::with_capacity(alloc, s.len())?;
+        v.extend_from_slice(alloc, s.as_bytes())?;
+        Ok(ShmString { bytes: v })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn push_str(&mut self, alloc: &dyn ShmAlloc, s: &str) -> Result<()> {
+        self.bytes.extend_from_slice(alloc, s.as_bytes())
+    }
+
+    /// Checked copy into a host `String`.
+    pub fn to_string(&self) -> Result<String> {
+        let v = self.bytes.to_vec()?;
+        String::from_utf8(v).map_err(|e| crate::error::RpcError::Serialization(e.to_string()))
+    }
+
+    /// Borrow as `&str`.
+    ///
+    /// # Safety
+    /// No concurrent mutation during the borrow.
+    pub unsafe fn as_str<'a>(&self) -> &'a str {
+        std::str::from_utf8_unchecked(self.bytes.as_slice())
+    }
+
+    pub fn eq_str(&self, s: &str) -> bool {
+        if self.len() != s.len() {
+            return false;
+        }
+        if self.is_empty() {
+            return true;
+        }
+        // Checked, allocation-free byte compare (§Perf: the to_vec()
+        // version dominated CoolDB's search walk).
+        if simproc::check_access(self.bytes.data_addr(), self.len(), false).is_err() {
+            return false;
+        }
+        unsafe { self.bytes.as_slice() == s.as_bytes() }
+    }
+
+    pub fn hash64(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        if self.is_empty() {
+            return h;
+        }
+        if simproc::check_access(self.bytes.data_addr(), self.len(), false).is_err() {
+            return h;
+        }
+        for &b in unsafe { self.bytes.as_slice() } {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    pub fn destroy(&mut self, alloc: &dyn ShmAlloc) {
+        self.bytes.destroy(alloc);
+    }
+}
+
+// --------------------------------------------------------------- list
+
+/// Singly-linked list — the canonical pointer-rich structure the paper
+/// uses to motivate sandboxing (a malicious tail pointer aimed at a
+/// server secret, §4.3).
+#[derive(Clone, Copy, Debug)]
+pub struct ShmList<T: Pod> {
+    head: ShmPtr<ListNode<T>>,
+    tail: ShmPtr<ListNode<T>>,
+    len: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ListNode<T: Pod> {
+    pub value: T,
+    pub next: ShmPtr<ListNode<T>>,
+}
+
+unsafe impl<T: Pod> Pod for ListNode<T> {}
+unsafe impl<T: Pod> Pod for ShmList<T> {}
+
+impl<T: Pod> Default for ShmList<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Pod> ShmList<T> {
+    pub const fn new() -> Self {
+        ShmList { head: ShmPtr::null(), tail: ShmPtr::null(), len: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    #[inline]
+    pub fn head(&self) -> ShmPtr<ListNode<T>> {
+        self.head
+    }
+    #[inline]
+    pub fn tail(&self) -> ShmPtr<ListNode<T>> {
+        self.tail
+    }
+
+    pub fn push_back(&mut self, alloc: &dyn ShmAlloc, value: T) -> Result<()> {
+        let node = ListNode { value, next: ShmPtr::null() };
+        let addr = alloc.alloc_bytes(std::mem::size_of::<ListNode<T>>())?;
+        let p: ShmPtr<ListNode<T>> = ShmPtr::from_addr(addr);
+        p.write(node)?;
+        if self.tail.is_null() {
+            self.head = p;
+        } else {
+            let mut t = self.tail.read()?;
+            t.next = p;
+            self.tail.write(t)?;
+        }
+        self.tail = p;
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Checked traversal; fails if a node pointer escapes the sandbox —
+    /// exactly the attack §4.3 describes.
+    pub fn iter_collect(&self) -> Result<Vec<T>> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut cur = self.head;
+        while !cur.is_null() {
+            let node = cur.read()?;
+            out.push(node.value);
+            cur = node.next;
+        }
+        Ok(out)
+    }
+
+    /// Corrupt the tail pointer — test helper modelling the §4.3
+    /// malicious-sender attack.
+    pub fn corrupt_tail(&self, target_addr: usize) -> Result<()> {
+        if self.tail.is_null() {
+            return Ok(());
+        }
+        let mut t = self.tail.read()?;
+        t.next = ShmPtr::from_addr(target_addr);
+        self.tail.write(t)
+    }
+}
+
+// ---------------------------------------------------------------- map
+
+/// Key trait for shm hash maps (shared-memory-safe hashing/equality).
+pub trait ShmKey: Pod {
+    fn key_hash(&self) -> u64;
+    fn key_eq(&self, other: &Self) -> bool;
+}
+
+impl ShmKey for u64 {
+    fn key_hash(&self) -> u64 {
+        mix64(*self)
+    }
+    fn key_eq(&self, other: &Self) -> bool {
+        self == other
+    }
+}
+
+impl ShmKey for u32 {
+    fn key_hash(&self) -> u64 {
+        mix64(*self as u64)
+    }
+    fn key_eq(&self, other: &Self) -> bool {
+        self == other
+    }
+}
+
+impl ShmKey for ShmString {
+    fn key_hash(&self) -> u64 {
+        self.hash64()
+    }
+    fn key_eq(&self, other: &Self) -> bool {
+        match (self.to_string(), other.to_string()) {
+            (Ok(a), Ok(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+/// Chained hash map in shared memory. Fixed bucket array chosen at
+/// creation, chains grow unbounded (rehash would invalidate shared
+/// pointers held by peers, so we do what Boost.Interprocess maps do
+/// and keep buckets stable).
+#[derive(Clone, Copy, Debug)]
+pub struct ShmMap<K: ShmKey, V: Pod> {
+    buckets: ShmPtr<ShmPtr<MapNode<K, V>>>,
+    nbuckets: u64,
+    len: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MapNode<K: ShmKey, V: Pod> {
+    pub key: K,
+    pub value: V,
+    pub next: ShmPtr<MapNode<K, V>>,
+}
+
+unsafe impl<K: ShmKey, V: Pod> Pod for MapNode<K, V> {}
+unsafe impl<K: ShmKey, V: Pod> Pod for ShmMap<K, V> {}
+
+impl<K: ShmKey, V: Pod> ShmMap<K, V> {
+    pub fn create(alloc: &dyn ShmAlloc, nbuckets: usize) -> Result<Self> {
+        let nbuckets = nbuckets.next_power_of_two().max(8);
+        let bytes = nbuckets * std::mem::size_of::<ShmPtr<MapNode<K, V>>>();
+        let addr = alloc.alloc_bytes(bytes)?;
+        simproc::check_access(addr, bytes, true)?;
+        unsafe { std::ptr::write_bytes(addr as *mut u8, 0, bytes) };
+        Ok(ShmMap { buckets: ShmPtr::from_addr(addr), nbuckets: nbuckets as u64, len: 0 })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn bucket(&self, k: &K) -> ShmPtr<ShmPtr<MapNode<K, V>>> {
+        let i = (k.key_hash() & (self.nbuckets - 1)) as usize;
+        self.buckets.at(i)
+    }
+
+    pub fn insert(&mut self, alloc: &dyn ShmAlloc, key: K, value: V) -> Result<Option<V>> {
+        let slot = self.bucket(&key);
+        // Replace if present.
+        let mut cur = slot.read()?;
+        while !cur.is_null() {
+            let mut n = cur.read()?;
+            if n.key.key_eq(&key) {
+                let old = n.value;
+                n.value = value;
+                cur.write(n)?;
+                return Ok(Some(old));
+            }
+            cur = n.next;
+        }
+        let node = MapNode { key, value, next: slot.read()? };
+        let addr = alloc.alloc_bytes(std::mem::size_of::<MapNode<K, V>>())?;
+        let p: ShmPtr<MapNode<K, V>> = ShmPtr::from_addr(addr);
+        p.write(node)?;
+        slot.write(p)?;
+        self.len += 1;
+        Ok(None)
+    }
+
+    pub fn get(&self, key: &K) -> Result<Option<V>> {
+        let mut cur = self.bucket(key).read()?;
+        while !cur.is_null() {
+            let n = cur.read()?;
+            if n.key.key_eq(key) {
+                return Ok(Some(n.value));
+            }
+            cur = n.next;
+        }
+        Ok(None)
+    }
+
+    pub fn remove(&mut self, alloc: &dyn ShmAlloc, key: &K) -> Result<Option<V>> {
+        let slot = self.bucket(key);
+        let mut prev: Option<ShmPtr<MapNode<K, V>>> = None;
+        let mut cur = slot.read()?;
+        while !cur.is_null() {
+            let n = cur.read()?;
+            if n.key.key_eq(key) {
+                match prev {
+                    None => slot.write(n.next)?,
+                    Some(p) => {
+                        let mut pn = p.read()?;
+                        pn.next = n.next;
+                        p.write(pn)?;
+                    }
+                }
+                alloc.free_bytes(cur.addr());
+                self.len -= 1;
+                return Ok(Some(n.value));
+            }
+            prev = Some(cur);
+            cur = n.next;
+        }
+        Ok(None)
+    }
+
+    /// Visit all entries (checked reads).
+    pub fn for_each(&self, mut f: impl FnMut(&K, &V)) -> Result<()> {
+        for i in 0..self.nbuckets as usize {
+            let mut cur = self.buckets.at(i).read()?;
+            while !cur.is_null() {
+                let n = cur.read()?;
+                f(&n.key, &n.value);
+                cur = n.next;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::heap::Heap;
+    use crate::memory::pool::Pool;
+    use std::sync::Arc;
+
+    fn heap() -> (Arc<Pool>, Arc<Heap>) {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "c", 8 << 20).unwrap();
+        (pool, heap)
+    }
+
+    #[test]
+    fn vec_push_get_pop() {
+        let (_p, h) = heap();
+        let mut v: ShmVec<u64> = ShmVec::new();
+        for i in 0..1000u64 {
+            v.push(&h, i * 3).unwrap();
+        }
+        assert_eq!(v.len(), 1000);
+        assert_eq!(v.get(500).unwrap(), 1500);
+        assert_eq!(v.pop().unwrap(), 999 * 3);
+        assert_eq!(v.to_vec().unwrap().len(), 999);
+    }
+
+    #[test]
+    fn vec_nested_in_shm() {
+        let (_p, h) = heap();
+        // A vector of vectors, fully in shared memory.
+        let mut outer: ShmVec<ShmVec<u32>> = ShmVec::new();
+        for i in 0..10u32 {
+            let mut inner: ShmVec<u32> = ShmVec::new();
+            for j in 0..i {
+                inner.push(&h, j).unwrap();
+            }
+            outer.push(&h, inner).unwrap();
+        }
+        let seven = outer.get(7).unwrap();
+        assert_eq!(seven.len(), 7);
+        assert_eq!(seven.get(6).unwrap(), 6);
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let (_p, h) = heap();
+        let mut s = ShmString::from_str(&h, "ping").unwrap();
+        assert!(s.eq_str("ping"));
+        s.push_str(&h, "-pong").unwrap();
+        assert_eq!(s.to_string().unwrap(), "ping-pong");
+        assert_ne!(s.hash64(), ShmString::from_str(&h, "other").unwrap().hash64());
+    }
+
+    #[test]
+    fn list_push_and_traverse() {
+        let (_p, h) = heap();
+        let mut l: ShmList<u64> = ShmList::new();
+        for i in 0..100 {
+            l.push_back(&h, i).unwrap();
+        }
+        assert_eq!(l.iter_collect().unwrap(), (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_insert_get_remove() {
+        let (_p, h) = heap();
+        let mut m: ShmMap<u64, u64> = ShmMap::create(&h, 64).unwrap();
+        for i in 0..500u64 {
+            assert!(m.insert(&h, i, i * i).unwrap().is_none());
+        }
+        assert_eq!(m.len(), 500);
+        assert_eq!(m.get(&100).unwrap(), Some(10_000));
+        assert_eq!(m.insert(&h, 100, 42).unwrap(), Some(10_000));
+        assert_eq!(m.remove(&h, &100).unwrap(), Some(42));
+        assert_eq!(m.get(&100).unwrap(), None);
+        assert_eq!(m.len(), 499);
+    }
+
+    #[test]
+    fn map_with_string_keys() {
+        let (_p, h) = heap();
+        let mut m: ShmMap<ShmString, u32> = ShmMap::create(&h, 16).unwrap();
+        let k1 = ShmString::from_str(&h, "alpha").unwrap();
+        let k2 = ShmString::from_str(&h, "beta").unwrap();
+        m.insert(&h, k1, 1).unwrap();
+        m.insert(&h, k2, 2).unwrap();
+        let probe = ShmString::from_str(&h, "alpha").unwrap();
+        assert_eq!(m.get(&probe).unwrap(), Some(1));
+        let mut count = 0;
+        m.for_each(|_, _| count += 1).unwrap();
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn vec_grows_through_scope() {
+        use crate::memory::scope::Scope;
+        let (_p, h) = heap();
+        let s = Scope::create(&h, 64 * 1024).unwrap();
+        let mut v: ShmVec<u64> = ShmVec::new();
+        for i in 0..1000u64 {
+            v.push(&s, i).unwrap();
+        }
+        assert!(s.contains(v.data_addr()));
+        assert_eq!(v.get(999).unwrap(), 999);
+    }
+}

@@ -1,0 +1,492 @@
+//! Connection heaps: thread-safe shared-memory allocation (paper §4.1).
+//!
+//! Each RPCool connection is associated with a heap carved from the
+//! CXL pool at an orchestrator-assigned, cluster-unique base address.
+//! The allocator is Boost.Interprocess-class: segregated size-class
+//! free lists with intrusive links stored *inside* the shared memory
+//! itself, plus a page-granular first-fit region for large objects and
+//! scopes. A single mutex per heap serializes metadata updates —
+//! allocation is not the RPC hot path (arguments are typically built
+//! once and shared by pointer), but CoolDB's build phase does stress
+//! it, so the fast path is kept short.
+//!
+//! The heap is also the **seal enforcement point**: `seal_range` flips
+//! simulated PTE write-permission bits for one proc's address-space
+//! view (paper §5.3), and `check_write` is consulted by the `ShmPtr`
+//! accessor layer when protection enforcement is on.
+
+use crate::error::{Result, RpcError};
+use crate::memory::pool::{Pool, Segment};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+
+/// Simulated process id (one "process" = one simulated app instance).
+pub type ProcId = u32;
+
+/// Size classes for small allocations (bytes).
+const CLASSES: [usize; 9] = [16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+/// Each small-object chunk carved from the page region.
+const CHUNK_BYTES: usize = 64 * 1024;
+/// Per-allocation header (precedes payload, payload aligned to 16).
+const HDR_BYTES: usize = 16;
+/// Header tag layout: type in the top 16 bits, payload (class index or
+/// page count) in the low 48.
+const TAG_SMALL: u64 = 0xA11C << 48;
+const TAG_LARGE: u64 = 0xB16B << 48;
+const TAG_MASK: u64 = 0xFFFF << 48;
+
+#[inline]
+fn class_for(size: usize) -> Option<usize> {
+    CLASSES.iter().position(|&c| size <= c)
+}
+
+struct PageFree {
+    /// Sorted, coalesced (base, len) free page ranges.
+    free: Vec<(usize, usize)>,
+}
+
+impl PageFree {
+    fn alloc(&mut self, len: usize) -> Option<usize> {
+        for i in 0..self.free.len() {
+            let (b, l) = self.free[i];
+            if l >= len {
+                if l == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (b + len, l - len);
+                }
+                return Some(b);
+            }
+        }
+        None
+    }
+    fn release(&mut self, base: usize, len: usize) {
+        let idx = self.free.partition_point(|&(b, _)| b < base);
+        self.free.insert(idx, (base, len));
+        if idx + 1 < self.free.len() && self.free[idx].0 + self.free[idx].1 == self.free[idx + 1].0
+        {
+            let (_, nl) = self.free[idx + 1];
+            self.free[idx].1 += nl;
+            self.free.remove(idx + 1);
+        }
+        if idx > 0 && self.free[idx - 1].0 + self.free[idx - 1].1 == self.free[idx].0 {
+            let (_, l) = self.free[idx];
+            self.free[idx - 1].1 += l;
+            self.free.remove(idx);
+        }
+    }
+    fn total(&self) -> usize {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+}
+
+struct HeapInner {
+    /// Head of the intrusive free list per size class (0 = empty).
+    class_heads: [usize; CLASSES.len()],
+    pages: PageFree,
+    live_allocs: usize,
+    live_bytes: usize,
+}
+
+/// A sealed (write-protected) range in one proc's address-space view.
+#[derive(Clone, Copy, Debug)]
+struct SealedRange {
+    start: usize,
+    end: usize,
+    proc: ProcId,
+}
+
+/// A shared-memory heap tied to a connection (or shared channel-wide).
+pub struct Heap {
+    pub id: u64,
+    pub name: String,
+    seg: Segment,
+    page: usize,
+    pool: Arc<Pool>,
+    inner: Mutex<HeapInner>,
+    sealed: RwLock<Vec<SealedRange>>,
+    epoch: AtomicU64,
+}
+
+static NEXT_HEAP_ID: AtomicU64 = AtomicU64::new(1);
+
+impl Heap {
+    /// Create a heap over a fresh segment from the pool.
+    pub fn new(pool: &Arc<Pool>, name: impl Into<String>, bytes: usize) -> Result<Arc<Heap>> {
+        let seg = pool.alloc_segment(bytes)?;
+        let heap = Arc::new(Heap {
+            id: NEXT_HEAP_ID.fetch_add(1, Ordering::Relaxed),
+            name: name.into(),
+            seg,
+            page: pool.page_size(),
+            pool: Arc::clone(pool),
+            inner: Mutex::new(HeapInner {
+                class_heads: [0; CLASSES.len()],
+                pages: PageFree { free: vec![(seg.base, seg.len)] },
+                live_allocs: 0,
+                live_bytes: 0,
+            }),
+            sealed: RwLock::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+        });
+        registry_insert(&heap);
+        Ok(heap)
+    }
+
+    #[inline]
+    pub fn base(&self) -> usize {
+        self.seg.base
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.seg.len
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.seg.len == 0
+    }
+    #[inline]
+    pub fn segment(&self) -> Segment {
+        self.seg
+    }
+    #[inline]
+    pub fn contains(&self, addr: usize) -> bool {
+        self.seg.contains(addr)
+    }
+    #[inline]
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+    #[inline]
+    pub fn page_size(&self) -> usize {
+        self.page
+    }
+
+    // ---------------- allocation ----------------
+
+    /// Allocate `size` bytes (16-aligned). The workhorse behind
+    /// `new_<T>()` and the shm containers.
+    pub fn alloc_bytes(&self, size: usize) -> Result<usize> {
+        let size = size.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        let addr = if let Some(class) = class_for(size) {
+            self.alloc_small(&mut inner, class)?
+        } else {
+            self.alloc_large(&mut inner, size)?
+        };
+        inner.live_allocs += 1;
+        inner.live_bytes += size;
+        Ok(addr)
+    }
+
+    fn alloc_small(&self, inner: &mut HeapInner, class: usize) -> Result<usize> {
+        if inner.class_heads[class] == 0 {
+            self.refill_class(inner, class)?;
+        }
+        let block = inner.class_heads[class];
+        // Intrusive link: the first word of a free block's payload is
+        // the next free block's address.
+        let next = unsafe { *(block as *const usize) };
+        inner.class_heads[class] = next;
+        let hdr = block - HDR_BYTES;
+        unsafe { *(hdr as *mut u64) = TAG_SMALL | class as u64 };
+        Ok(block)
+    }
+
+    fn refill_class(&self, inner: &mut HeapInner, class: usize) -> Result<()> {
+        let chunk = inner.pages.alloc(CHUNK_BYTES).ok_or(RpcError::OutOfMemory {
+            heap: self.name.clone(),
+            requested: CHUNK_BYTES,
+        })?;
+        let stride = (CLASSES[class] + HDR_BYTES + 15) & !15;
+        let nblocks = CHUNK_BYTES / stride;
+        debug_assert!(nblocks > 0);
+        let mut head = 0usize;
+        // Thread blocks onto the free list back-to-front so they pop in
+        // address order (helps locality during bulk builds).
+        for i in (0..nblocks).rev() {
+            let payload = chunk + i * stride + HDR_BYTES;
+            unsafe { *(payload as *mut usize) = head };
+            head = payload;
+        }
+        inner.class_heads[class] = head;
+        Ok(())
+    }
+
+    fn alloc_large(&self, inner: &mut HeapInner, size: usize) -> Result<usize> {
+        let total = (size + HDR_BYTES).div_ceil(self.page) * self.page;
+        let base = inner.pages.alloc(total).ok_or(RpcError::OutOfMemory {
+            heap: self.name.clone(),
+            requested: total,
+        })?;
+        unsafe { *(base as *mut u64) = TAG_LARGE | (total / self.page) as u64 };
+        Ok(base + HDR_BYTES)
+    }
+
+    /// Free an allocation made by `alloc_bytes`.
+    pub fn free_bytes(&self, addr: usize) {
+        debug_assert!(self.contains(addr), "free of foreign pointer {addr:#x}");
+        let hdr = addr - HDR_BYTES;
+        let tag = unsafe { *(hdr as *const u64) };
+        let mut inner = self.inner.lock().unwrap();
+        if tag & TAG_MASK == TAG_SMALL {
+            let class = (tag & 0xFFFF) as usize;
+            debug_assert!(class < CLASSES.len(), "corrupt small header {tag:#x}");
+            unsafe { *(addr as *mut usize) = inner.class_heads[class] };
+            inner.class_heads[class] = addr;
+            inner.live_bytes = inner.live_bytes.saturating_sub(CLASSES[class]);
+        } else {
+            debug_assert!(tag & TAG_MASK == TAG_LARGE, "corrupt header {tag:#x}");
+            let pages = (tag & 0xFFFF_FFFF) as usize;
+            inner.pages.release(hdr, pages * self.page);
+            inner.live_bytes = inner.live_bytes.saturating_sub(pages * self.page);
+        }
+        inner.live_allocs = inner.live_allocs.saturating_sub(1);
+    }
+
+    /// Allocate a page-aligned run of pages (scopes, DSM, ring buffers).
+    pub fn alloc_pages(&self, n: usize) -> Result<Segment> {
+        let len = n * self.page;
+        let mut inner = self.inner.lock().unwrap();
+        let base = inner
+            .pages
+            .alloc(len)
+            .ok_or(RpcError::OutOfMemory { heap: self.name.clone(), requested: len })?;
+        Ok(Segment { base, len })
+    }
+
+    pub fn free_pages(&self, seg: Segment) {
+        debug_assert!(self.contains(seg.base));
+        self.inner.lock().unwrap().pages.release(seg.base, seg.len);
+    }
+
+    /// Allocate and store a Pod value; returns its shared address.
+    pub fn new_val<T: crate::memory::pod::Pod>(&self, val: T) -> Result<usize> {
+        let addr = self.alloc_bytes(std::mem::size_of::<T>().max(1))?;
+        unsafe { std::ptr::write(addr as *mut T, val) };
+        Ok(addr)
+    }
+
+    // ---------------- stats ----------------
+
+    pub fn live_allocs(&self) -> usize {
+        self.inner.lock().unwrap().live_allocs
+    }
+    pub fn live_bytes(&self) -> usize {
+        self.inner.lock().unwrap().live_bytes
+    }
+    pub fn free_page_bytes(&self) -> usize {
+        self.inner.lock().unwrap().pages.total()
+    }
+
+    // ---------------- sealing (simulated PTE write bits) ----------------
+
+    /// Mark `[start, start+len)` read-only in `proc`'s address-space
+    /// view. Page-granular: the range is expanded to page boundaries
+    /// (this is exactly the "false sealing" hazard scopes exist to
+    /// avoid, paper §4.5).
+    pub fn seal_range(&self, start: usize, len: usize, proc: ProcId) {
+        let s = start & !(self.page - 1);
+        let e = (start + len).div_ceil(self.page) * self.page;
+        self.sealed.write().unwrap().push(SealedRange { start: s, end: e, proc });
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Remove a seal previously installed with the same page-expanded bounds.
+    pub fn unseal_range(&self, start: usize, len: usize, proc: ProcId) {
+        let s = start & !(self.page - 1);
+        let e = (start + len).div_ceil(self.page) * self.page;
+        let mut v = self.sealed.write().unwrap();
+        if let Some(i) = v.iter().position(|r| r.start == s && r.end == e && r.proc == proc) {
+            v.swap_remove(i);
+        }
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Is any byte of `[addr, addr+len)` sealed for `proc`?
+    #[inline]
+    pub fn is_sealed_for(&self, addr: usize, len: usize, proc: ProcId) -> bool {
+        // Fast path: no seals at all (the common case) — cheap atomic read.
+        if self.epoch.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        let v = self.sealed.read().unwrap();
+        v.iter().any(|r| r.proc == proc && addr < r.end && addr + len > r.start)
+    }
+
+    /// True if the *whole* range is sealed for `proc` (receiver-side
+    /// seal verification reads this through the descriptor, §5.3).
+    pub fn range_fully_sealed(&self, addr: usize, len: usize, proc: ProcId) -> bool {
+        let s = addr & !(self.page - 1);
+        let e = (addr + len).div_ceil(self.page) * self.page;
+        let v = self.sealed.read().unwrap();
+        // Ranges are installed whole; check any single covering range.
+        v.iter().any(|r| r.proc == proc && r.start <= s && r.end >= e)
+    }
+
+    /// Write-permission check for `proc` (the ShmPtr enforcement hook).
+    #[inline]
+    pub fn check_write(&self, addr: usize, len: usize, proc: ProcId) -> Result<()> {
+        if self.is_sealed_for(addr, len, proc) {
+            return Err(RpcError::ProtectionFault { page: (addr - self.base()) / self.page });
+        }
+        Ok(())
+    }
+
+    pub fn sealed_count(&self) -> usize {
+        self.sealed.read().unwrap().len()
+    }
+}
+
+impl Drop for Heap {
+    fn drop(&mut self) {
+        registry_remove(self.seg);
+        self.pool.free_segment(self.seg);
+    }
+}
+
+// ---------------- global heap registry ----------------
+//
+// The ShmPtr enforcement layer must map an address to its heap to
+// consult seal state. Heaps across all pools occupy disjoint mmap
+// ranges, so one process-global sorted registry suffices.
+
+static REGISTRY: RwLock<Vec<(usize, usize, Weak<Heap>)>> = RwLock::new(Vec::new());
+
+fn registry_insert(heap: &Arc<Heap>) {
+    let mut r = REGISTRY.write().unwrap();
+    let idx = r.partition_point(|&(b, _, _)| b < heap.base());
+    r.insert(idx, (heap.base(), heap.base() + heap.len(), Arc::downgrade(heap)));
+}
+
+fn registry_remove(seg: Segment) {
+    let mut r = REGISTRY.write().unwrap();
+    r.retain(|&(b, _, _)| b != seg.base);
+}
+
+/// Find the heap containing `addr`, if any.
+pub fn heap_for_addr(addr: usize) -> Option<Arc<Heap>> {
+    let r = REGISTRY.read().unwrap();
+    let idx = r.partition_point(|&(b, _, _)| b <= addr);
+    if idx == 0 {
+        return None;
+    }
+    let (b, e, ref w) = r[idx - 1];
+    if addr >= b && addr < e {
+        w.upgrade()
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn heap() -> (Arc<Pool>, Arc<Heap>) {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "t", 4 << 20).unwrap();
+        (pool, heap)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_small() {
+        let (_p, h) = heap();
+        let a = h.alloc_bytes(24).unwrap();
+        let b = h.alloc_bytes(24).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(a % 16, 0);
+        unsafe { *(a as *mut u64) = 7 };
+        h.free_bytes(a);
+        h.free_bytes(b);
+        assert_eq!(h.live_allocs(), 0);
+        // Freed block is recycled.
+        let c = h.alloc_bytes(24).unwrap();
+        assert!(c == a || c == b);
+    }
+
+    #[test]
+    fn alloc_large_is_page_backed() {
+        let (_p, h) = heap();
+        let a = h.alloc_bytes(100_000).unwrap();
+        unsafe { std::ptr::write_bytes(a as *mut u8, 0xAB, 100_000) };
+        h.free_bytes(a);
+        assert_eq!(h.live_allocs(), 0);
+    }
+
+    #[test]
+    fn many_sizes_no_overlap() {
+        let (_p, h) = heap();
+        let mut allocs: Vec<(usize, usize)> = Vec::new();
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..500 {
+            let sz = rng.range(1, 9000) as usize;
+            let a = h.alloc_bytes(sz).unwrap();
+            for &(b, bsz) in &allocs {
+                assert!(a + sz <= b || b + bsz <= a, "overlap {a:#x}+{sz} vs {b:#x}+{bsz}");
+            }
+            allocs.push((a, sz));
+        }
+        for (a, _) in allocs {
+            h.free_bytes(a);
+        }
+        assert_eq!(h.live_allocs(), 0);
+    }
+
+    #[test]
+    fn new_val_stores_value() {
+        let (_p, h) = heap();
+        let addr = h.new_val(12345u64).unwrap();
+        assert_eq!(unsafe { *(addr as *const u64) }, 12345);
+    }
+
+    #[test]
+    fn oom_on_tiny_heap() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let h = Heap::new(&pool, "tiny", 64 * 1024).unwrap();
+        assert!(h.alloc_bytes(1 << 22).is_err());
+    }
+
+    #[test]
+    fn seal_blocks_sender_only() {
+        let (_p, h) = heap();
+        let a = h.alloc_bytes(64).unwrap();
+        h.seal_range(a, 64, 1);
+        assert!(h.check_write(a, 8, 1).is_err());
+        assert!(h.check_write(a, 8, 2).is_ok());
+        assert!(h.range_fully_sealed(a, 64, 1));
+        h.unseal_range(a, 64, 1);
+        assert!(h.check_write(a, 8, 1).is_ok());
+    }
+
+    #[test]
+    fn seal_is_page_granular_false_sealing() {
+        // Two objects on the same page: sealing one seals the other —
+        // the hazard scopes exist to avoid (paper §4.5).
+        let (_p, h) = heap();
+        let a = h.alloc_bytes(32).unwrap();
+        let b = h.alloc_bytes(32).unwrap();
+        assert_eq!(a & !4095, b & !4095, "expect same page from same chunk");
+        h.seal_range(a, 32, 1);
+        assert!(h.check_write(b, 8, 1).is_err(), "false sealing should occur");
+    }
+
+    #[test]
+    fn registry_resolves_addresses() {
+        let (_p, h) = heap();
+        let a = h.alloc_bytes(64).unwrap();
+        let found = heap_for_addr(a).unwrap();
+        assert_eq!(found.id, h.id);
+        assert!(heap_for_addr(0x10).is_none());
+    }
+
+    #[test]
+    fn alloc_pages_aligned() {
+        let (_p, h) = heap();
+        let seg = h.alloc_pages(4).unwrap();
+        assert_eq!(seg.base % 4096, 0);
+        assert_eq!(seg.len, 4 * 4096);
+        h.free_pages(seg);
+    }
+}

@@ -1,0 +1,17 @@
+//! The shared-memory substrate: the simulated CXL pool, connection
+//! heaps, scopes, native `ShmPtr` pointers, and shm containers.
+//! See DESIGN.md §1 for how this substitutes for real CXL 3.0 hardware.
+
+pub mod containers;
+pub mod heap;
+pub mod pod;
+pub mod pool;
+pub mod ptr;
+pub mod scope;
+
+pub use containers::{ListNode, MapNode, ShmKey, ShmList, ShmMap, ShmString, ShmVec};
+pub use heap::{heap_for_addr, Heap, ProcId};
+pub use pod::Pod;
+pub use pool::{Charger, Pool, Segment};
+pub use ptr::{copy_from_shm, copy_into_shm, ShmPtr};
+pub use scope::{Scope, ShmAlloc};

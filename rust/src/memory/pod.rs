@@ -1,0 +1,47 @@
+//! Plain-old-data marker for types that may live in shared memory.
+//!
+//! Anything stored in a connection heap must be bit-copyable and free
+//! of (host-private) resources: no `Drop`, no references, no heap
+//! pointers other than `ShmPtr`s (which are globally valid because the
+//! orchestrator assigns every heap a cluster-unique base address,
+//! paper §4.1).
+
+/// # Safety
+/// Implementors guarantee: any bit pattern is a valid value, the type
+/// has no padding-dependent invariants relied on across processes, and
+/// it owns no process-private resources.
+pub unsafe trait Pod: Copy + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for usize {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for isize {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+unsafe impl Pod for bool {}
+unsafe impl Pod for char {}
+unsafe impl Pod for () {}
+
+unsafe impl<T: Pod, const N: usize> Pod for [T; N] {}
+unsafe impl<A: Pod, B: Pod> Pod for (A, B) {}
+unsafe impl<A: Pod, B: Pod, C: Pod> Pod for (A, B, C) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_pod<T: Pod>() {}
+
+    #[test]
+    fn primitives_are_pod() {
+        assert_pod::<u64>();
+        assert_pod::<[u8; 16]>();
+        assert_pod::<(u32, f64)>();
+    }
+}

@@ -1,0 +1,299 @@
+//! The simulated CXL memory pool.
+//!
+//! One `Pool` models the rack's CXL memory device (paper Fig. 2): a
+//! single byte-addressable region every host can map. We back it with
+//! one anonymous mmap in this process; simulated "hosts" are threads,
+//! so coherence holds by construction and *addresses are identical in
+//! every host's view* — exactly the globally-unique-address property
+//! the orchestrator provides in the paper (§4.1).
+//!
+//! The pool hands out page-aligned *segments* (used for heaps). A
+//! simple first-fit free list keeps fragmentation manageable; segment
+//! churn is rare (heap create/destroy, not per-RPC).
+
+use crate::config::{ChargePolicy, CostModel, SimConfig};
+use crate::error::{Result, RpcError};
+use crate::util::spin::spin_ns;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Charges simulated-hardware costs by spinning (or skips, per policy).
+#[derive(Debug)]
+pub struct Charger {
+    pub cost: CostModel,
+    pub policy: ChargePolicy,
+    charged_ns: AtomicU64,
+}
+
+impl Charger {
+    pub fn new(cost: CostModel, policy: ChargePolicy) -> Self {
+        Charger { cost, policy, charged_ns: AtomicU64::new(0) }
+    }
+
+    /// Charge a raw latency.
+    #[inline]
+    pub fn charge_ns(&self, ns: u64) {
+        if ns == 0 {
+            return;
+        }
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        if self.policy == ChargePolicy::Charge {
+            spin_ns(ns);
+        }
+    }
+
+    /// Total simulated nanoseconds charged so far (for accounting even
+    /// when `policy == Skip`).
+    pub fn total_charged_ns(&self) -> u64 {
+        self.charged_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cost of a bulk copy touching CXL memory.
+    #[inline]
+    pub fn charge_cxl_copy(&self, bytes: usize) {
+        let lines = (bytes as u64).div_ceil(64);
+        self.charge_ns(lines * self.cost.cxl_copy_per_line_ns);
+    }
+
+    /// Cost of one far-memory load (pointer chase class).
+    #[inline]
+    pub fn charge_cxl_load(&self) {
+        self.charge_ns(self.cost.cxl_load_ns);
+    }
+
+    /// Doorbell visibility latency (one-way).
+    #[inline]
+    pub fn charge_cxl_signal(&self) {
+        self.charge_ns(self.cost.cxl_signal_ns);
+    }
+}
+
+/// A page-aligned range carved out of the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Address in this process — identical in every simulated host.
+    pub base: usize,
+    pub len: usize,
+}
+
+impl Segment {
+    #[inline]
+    pub fn end(&self) -> usize {
+        self.base + self.len
+    }
+    #[inline]
+    pub fn contains(&self, addr: usize) -> bool {
+        addr >= self.base && addr < self.end()
+    }
+}
+
+struct FreeList {
+    /// Sorted, coalesced free ranges as (base, len).
+    free: Vec<(usize, usize)>,
+}
+
+impl FreeList {
+    fn alloc(&mut self, len: usize) -> Option<usize> {
+        // First fit.
+        for i in 0..self.free.len() {
+            let (base, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (base + len, flen - len);
+                }
+                return Some(base);
+            }
+        }
+        None
+    }
+
+    fn release(&mut self, base: usize, len: usize) {
+        let idx = self.free.partition_point(|&(b, _)| b < base);
+        self.free.insert(idx, (base, len));
+        // Coalesce with neighbours.
+        if idx + 1 < self.free.len() && self.free[idx].0 + self.free[idx].1 == self.free[idx + 1].0
+        {
+            let (nb, nl) = self.free[idx + 1];
+            debug_assert_eq!(self.free[idx].0 + self.free[idx].1, nb);
+            self.free[idx].1 += nl;
+            self.free.remove(idx + 1);
+        }
+        if idx > 0 && self.free[idx - 1].0 + self.free[idx - 1].1 == self.free[idx].0 {
+            let (_, l) = self.free[idx];
+            self.free[idx - 1].1 += l;
+            self.free.remove(idx);
+        }
+    }
+
+    fn total_free(&self) -> usize {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+}
+
+/// The rack's shared CXL memory device.
+pub struct Pool {
+    map_base: *mut u8,
+    map_len: usize,
+    page: usize,
+    segments: Mutex<FreeList>,
+    pub charger: Arc<Charger>,
+}
+
+// The raw pointer is to an mmap region we own for our whole lifetime;
+// all mutation of pool *data* is done by simulated procs which carry
+// their own synchronization (that is the point of the simulation).
+unsafe impl Send for Pool {}
+unsafe impl Sync for Pool {}
+
+impl Pool {
+    pub fn new(cfg: &SimConfig) -> Result<Arc<Pool>> {
+        let len = cfg.pool_bytes;
+        let page = cfg.page_bytes;
+        assert!(page.is_power_of_two());
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE,
+                -1,
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(RpcError::OutOfMemory { heap: "<pool mmap>".into(), requested: len });
+        }
+        let base = ptr as usize;
+        Ok(Arc::new(Pool {
+            map_base: ptr as *mut u8,
+            map_len: len,
+            page,
+            segments: Mutex::new(FreeList { free: vec![(base, len)] }),
+            charger: Arc::new(Charger::new(cfg.cost.clone(), cfg.charge)),
+        }))
+    }
+
+    #[inline]
+    pub fn page_size(&self) -> usize {
+        self.page
+    }
+
+    #[inline]
+    pub fn base(&self) -> usize {
+        self.map_base as usize
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.map_len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.map_len == 0
+    }
+
+    #[inline]
+    pub fn contains(&self, addr: usize) -> bool {
+        addr >= self.base() && addr < self.base() + self.map_len
+    }
+
+    /// Carve a page-aligned segment (e.g. a heap) out of the pool.
+    pub fn alloc_segment(&self, bytes: usize) -> Result<Segment> {
+        let len = bytes.div_ceil(self.page) * self.page;
+        let mut fl = self.segments.lock().unwrap();
+        let base = fl
+            .alloc(len)
+            .ok_or(RpcError::OutOfMemory { heap: "<pool>".into(), requested: len })?;
+        Ok(Segment { base, len })
+    }
+
+    /// Return a segment to the pool. The memory is scrubbed so stale
+    /// data never leaks across heap lifetimes (the orchestrator reclaims
+    /// orphaned heaps, paper §5.4).
+    pub fn free_segment(&self, seg: Segment) {
+        unsafe {
+            std::ptr::write_bytes(seg.base as *mut u8, 0, seg.len);
+        }
+        self.segments.lock().unwrap().release(seg.base, seg.len);
+    }
+
+    /// Bytes currently unallocated.
+    pub fn free_bytes(&self) -> usize {
+        self.segments.lock().unwrap().total_free()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.map_base as *mut libc::c_void, self.map_len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Arc<Pool> {
+        Pool::new(&SimConfig::for_tests()).unwrap()
+    }
+
+    #[test]
+    fn segments_are_page_aligned_and_disjoint() {
+        let p = pool();
+        let a = p.alloc_segment(100).unwrap();
+        let b = p.alloc_segment(5000).unwrap();
+        assert_eq!(a.base % 4096, 0);
+        assert_eq!(b.base % 4096, 0);
+        assert_eq!(a.len, 4096);
+        assert_eq!(b.len, 8192);
+        assert!(a.end() <= b.base || b.end() <= a.base);
+    }
+
+    #[test]
+    fn free_coalesces() {
+        let p = pool();
+        let before = p.free_bytes();
+        let a = p.alloc_segment(4096).unwrap();
+        let b = p.alloc_segment(4096).unwrap();
+        let c = p.alloc_segment(4096).unwrap();
+        p.free_segment(a);
+        p.free_segment(c);
+        p.free_segment(b);
+        assert_eq!(p.free_bytes(), before);
+        // After coalescing we can grab one big contiguous block again.
+        let big = p.alloc_segment(before).unwrap();
+        assert_eq!(big.len, before);
+    }
+
+    #[test]
+    fn exhaustion_reports_oom() {
+        let mut cfg = SimConfig::for_tests();
+        cfg.pool_bytes = 64 * 1024;
+        let p = Pool::new(&cfg).unwrap();
+        assert!(p.alloc_segment(1 << 30).is_err());
+    }
+
+    #[test]
+    fn freed_segment_is_scrubbed() {
+        let p = pool();
+        let s = p.alloc_segment(4096).unwrap();
+        unsafe { *(s.base as *mut u64) = 0xDEADBEEF };
+        p.free_segment(s);
+        let s2 = p.alloc_segment(4096).unwrap();
+        assert_eq!(s2.base, s.base, "first-fit should reuse");
+        assert_eq!(unsafe { *(s2.base as *const u64) }, 0);
+    }
+
+    #[test]
+    fn charger_accounts_when_skipping() {
+        let ch = Charger::new(CostModel::default(), ChargePolicy::Skip);
+        ch.charge_ns(500);
+        ch.charge_cxl_copy(128);
+        assert!(ch.total_charged_ns() >= 500);
+    }
+}

@@ -1,0 +1,233 @@
+//! `ShmPtr<T>` — a *native* pointer into shared memory.
+//!
+//! This is the paper's headline programming-model claim: because the
+//! orchestrator gives every heap a cluster-unique base address, plain
+//! addresses stored inside shared data structures are valid in every
+//! process that maps the heap — no swizzling, no fat pointers (the
+//! contrast with ZhangRPC's `CXLRef` is benchmarked in Table 1a).
+//!
+//! `ShmPtr` is `Pod`, so pointer-rich structures (lists, trees, JSON
+//! documents) compose freely inside heaps. Checked accessors route
+//! through `simproc::check_access`, the simulation's MMU: sandbox
+//! windows and seal state are enforced there.
+
+use crate::error::Result;
+use crate::memory::pod::Pod;
+use crate::simproc;
+use std::fmt;
+use std::marker::PhantomData;
+
+#[repr(transparent)]
+pub struct ShmPtr<T> {
+    addr: usize,
+    _m: PhantomData<fn() -> T>,
+}
+
+impl<T> Clone for ShmPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for ShmPtr<T> {}
+
+impl<T> PartialEq for ShmPtr<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.addr == other.addr
+    }
+}
+impl<T> Eq for ShmPtr<T> {}
+
+impl<T> fmt::Debug for ShmPtr<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ShmPtr({:#x})", self.addr)
+    }
+}
+
+unsafe impl<T: Pod> Pod for ShmPtr<T> {}
+
+impl<T> ShmPtr<T> {
+    pub const fn null() -> Self {
+        ShmPtr { addr: 0, _m: PhantomData }
+    }
+
+    #[inline]
+    pub const fn from_addr(addr: usize) -> Self {
+        ShmPtr { addr, _m: PhantomData }
+    }
+
+    #[inline]
+    pub fn addr(&self) -> usize {
+        self.addr
+    }
+
+    #[inline]
+    pub fn is_null(&self) -> bool {
+        self.addr == 0
+    }
+
+    /// Pointer to the `i`-th element of an array starting here.
+    #[inline]
+    pub fn at(&self, i: usize) -> ShmPtr<T> {
+        ShmPtr::from_addr(self.addr + i * std::mem::size_of::<T>())
+    }
+
+    /// Reinterpret as a different element type (offset pointer math).
+    #[inline]
+    pub fn cast<U>(&self) -> ShmPtr<U> {
+        ShmPtr::from_addr(self.addr)
+    }
+}
+
+impl<T: Pod> ShmPtr<T> {
+    /// Checked read through the simulated MMU.
+    #[inline]
+    pub fn read(&self) -> Result<T> {
+        simproc::check_access(self.addr, std::mem::size_of::<T>(), false)?;
+        Ok(unsafe { std::ptr::read(self.addr as *const T) })
+    }
+
+    /// Checked write through the simulated MMU (seals enforced here).
+    #[inline]
+    pub fn write(&self, v: T) -> Result<()> {
+        simproc::check_access(self.addr, std::mem::size_of::<T>(), true)?;
+        unsafe { std::ptr::write(self.addr as *mut T, v) };
+        Ok(())
+    }
+
+    /// Unchecked read — hot paths where the caller has already
+    /// verified the seal/sandbox (mirrors real hardware where the MMU
+    /// check is free).
+    ///
+    /// # Safety
+    /// `addr` must point to a live, initialized `T` in a mapped heap.
+    #[inline]
+    pub unsafe fn read_unchecked(&self) -> T {
+        std::ptr::read(self.addr as *const T)
+    }
+
+    /// # Safety
+    /// As `read_unchecked`, and no concurrent readers may observe a torn value.
+    #[inline]
+    pub unsafe fn write_unchecked(&self, v: T) {
+        std::ptr::write(self.addr as *mut T, v)
+    }
+
+    /// Borrow the value immutably.
+    ///
+    /// # Safety
+    /// Caller must ensure the pointee outlives the borrow and is not
+    /// concurrently mutated (i.e. the RPC is sealed or the peer trusted).
+    #[inline]
+    pub unsafe fn as_ref<'a>(&self) -> &'a T {
+        &*(self.addr as *const T)
+    }
+
+    /// # Safety
+    /// As `as_ref`, plus exclusive access.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn as_mut<'a>(&self) -> &'a mut T {
+        &mut *(self.addr as *mut T)
+    }
+}
+
+/// Checked bulk copy helpers for byte ranges in shared memory.
+pub fn copy_into_shm(dst: usize, src: &[u8]) -> Result<()> {
+    simproc::check_access(dst, src.len(), true)?;
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), dst as *mut u8, src.len());
+    }
+    Ok(())
+}
+
+pub fn copy_from_shm(dst: &mut [u8], src: usize) -> Result<()> {
+    simproc::check_access(src, dst.len(), false)?;
+    unsafe {
+        std::ptr::copy_nonoverlapping(src as *const u8, dst.as_mut_ptr(), dst.len());
+    }
+    Ok(())
+}
+
+/// View a shm byte range as a slice.
+///
+/// # Safety
+/// Range must be live heap memory; no concurrent mutation during the borrow.
+pub unsafe fn shm_slice<'a, T: Pod>(addr: usize, len: usize) -> &'a [T] {
+    std::slice::from_raw_parts(addr as *const T, len)
+}
+
+/// # Safety
+/// As `shm_slice`, plus exclusive access.
+pub unsafe fn shm_slice_mut<'a, T: Pod>(addr: usize, len: usize) -> &'a mut [T] {
+    std::slice::from_raw_parts_mut(addr as *mut T, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::heap::Heap;
+    use crate::memory::pool::Pool;
+    use crate::simproc::{self, Window};
+
+    #[test]
+    fn read_write_roundtrip() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "p", 1 << 20).unwrap();
+        let p: ShmPtr<u64> = ShmPtr::from_addr(heap.new_val(5u64).unwrap());
+        assert_eq!(p.read().unwrap(), 5);
+        p.write(9).unwrap();
+        assert_eq!(p.read().unwrap(), 9);
+    }
+
+    #[test]
+    fn null_and_indexing() {
+        let p: ShmPtr<u32> = ShmPtr::null();
+        assert!(p.is_null());
+        let q: ShmPtr<u32> = ShmPtr::from_addr(0x1000);
+        assert_eq!(q.at(3).addr(), 0x1000 + 12);
+    }
+
+    #[test]
+    fn write_to_sealed_fails() {
+        simproc::set_enforcement(true);
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "p", 1 << 20).unwrap();
+        let addr = heap.new_val(1u64).unwrap();
+        let p: ShmPtr<u64> = ShmPtr::from_addr(addr);
+        simproc::with_identity(9, 0, || {
+            heap.seal_range(addr, 8, 9);
+            assert!(p.write(2).is_err());
+            assert_eq!(p.read().unwrap(), 1);
+            heap.unseal_range(addr, 8, 9);
+            assert!(p.write(2).is_ok());
+        });
+    }
+
+    #[test]
+    fn sandboxed_read_outside_window_fails() {
+        simproc::set_enforcement(true);
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "p", 1 << 20).unwrap();
+        let inside = heap.new_val(7u64).unwrap();
+        let outside = heap.new_val(8u64).unwrap();
+        simproc::push_sandbox(vec![Window { lo: inside, hi: inside + 8 }]);
+        let pi: ShmPtr<u64> = ShmPtr::from_addr(inside);
+        let po: ShmPtr<u64> = ShmPtr::from_addr(outside);
+        assert_eq!(pi.read().unwrap(), 7);
+        assert!(po.read().is_err());
+        simproc::pop_sandbox();
+        assert_eq!(po.read().unwrap(), 8);
+    }
+
+    #[test]
+    fn bulk_copies() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "p", 1 << 20).unwrap();
+        let addr = heap.alloc_bytes(64).unwrap();
+        copy_into_shm(addr, b"hello shared world").unwrap();
+        let mut back = [0u8; 18];
+        copy_from_shm(&mut back, addr).unwrap();
+        assert_eq!(&back, b"hello shared world");
+    }
+}

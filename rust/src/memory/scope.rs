@@ -1,0 +1,227 @@
+//! Scopes — contiguous page ranges holding self-contained RPC argument
+//! sets (paper §4.5, §5.1).
+//!
+//! Sealing works at page granularity, so sealing an argument that
+//! shares a page with unrelated objects would "false-seal" them. A
+//! scope is a dedicated run of pages with its own bump allocator:
+//! applications build an RPC's arguments entirely inside a scope and
+//! seal exactly that page range. `reset()` recycles the scope for the
+//! next request (scope pools batch this, see `seal::pool`).
+
+use crate::error::{Result, RpcError};
+use crate::memory::heap::Heap;
+use crate::memory::pod::Pod;
+use crate::memory::pool::Segment;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+static NEXT_SCOPE_ID: AtomicU64 = AtomicU64::new(1);
+
+pub struct Scope {
+    pub id: u64,
+    heap: Arc<Heap>,
+    seg: Segment,
+    bump: AtomicUsize,
+}
+
+impl Scope {
+    /// Carve a scope of at least `bytes` out of `heap`
+    /// (`Connection::create_scope` forwards here).
+    pub fn create(heap: &Arc<Heap>, bytes: usize) -> Result<Scope> {
+        let pages = bytes.div_ceil(heap.page_size()).max(1);
+        let seg = heap.alloc_pages(pages)?;
+        Ok(Scope {
+            id: NEXT_SCOPE_ID.fetch_add(1, Ordering::Relaxed),
+            heap: Arc::clone(heap),
+            seg,
+            bump: AtomicUsize::new(seg.base),
+        })
+    }
+
+    #[inline]
+    pub fn base(&self) -> usize {
+        self.seg.base
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.seg.len
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.used() == 0
+    }
+    #[inline]
+    pub fn segment(&self) -> Segment {
+        self.seg
+    }
+    #[inline]
+    pub fn heap(&self) -> &Arc<Heap> {
+        &self.heap
+    }
+    #[inline]
+    pub fn contains(&self, addr: usize) -> bool {
+        self.seg.contains(addr)
+    }
+    #[inline]
+    pub fn used(&self) -> usize {
+        self.bump.load(Ordering::Relaxed) - self.seg.base
+    }
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.seg.end() - self.bump.load(Ordering::Relaxed)
+    }
+    /// Pages actually touched so far (what a seal must cover).
+    pub fn used_pages(&self) -> usize {
+        self.used().div_ceil(self.heap.page_size())
+    }
+    pub fn total_pages(&self) -> usize {
+        self.seg.len / self.heap.page_size()
+    }
+
+    /// Bump-allocate `size` bytes, 16-aligned. Lock-free: scopes are
+    /// usually single-writer, but nothing breaks if they are shared.
+    pub fn alloc_bytes(&self, size: usize) -> Result<usize> {
+        let size = (size.max(1) + 15) & !15;
+        loop {
+            let cur = self.bump.load(Ordering::Relaxed);
+            let next = cur + size;
+            if next > self.seg.end() {
+                return Err(RpcError::ScopeExhausted {
+                    requested: size,
+                    available: self.seg.end() - cur,
+                });
+            }
+            if self
+                .bump
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Ok(cur);
+            }
+        }
+    }
+
+    /// Allocate and store a Pod value in the scope.
+    pub fn new_val<T: Pod>(&self, val: T) -> Result<usize> {
+        let addr = self.alloc_bytes(std::mem::size_of::<T>().max(1))?;
+        unsafe { std::ptr::write(addr as *mut T, val) };
+        Ok(addr)
+    }
+
+    /// Discard all objects and recycle the scope (paper: "reset it to
+    /// reuse the scope. Once destroyed or reset, all objects allocated
+    /// within the scope are lost.").
+    pub fn reset(&self) {
+        self.bump.store(self.seg.base, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        self.heap.free_pages(self.seg);
+    }
+}
+
+/// Allocation source abstraction: containers take any of heap / scope.
+pub trait ShmAlloc {
+    fn alloc_bytes(&self, size: usize) -> Result<usize>;
+    /// Scopes ignore frees (space returns on reset/destroy).
+    fn free_bytes(&self, addr: usize);
+    fn backing_heap(&self) -> &Arc<Heap>;
+}
+
+impl ShmAlloc for Heap {
+    fn alloc_bytes(&self, size: usize) -> Result<usize> {
+        Heap::alloc_bytes(self, size)
+    }
+    fn free_bytes(&self, addr: usize) {
+        Heap::free_bytes(self, addr)
+    }
+    fn backing_heap(&self) -> &Arc<Heap> {
+        unreachable!("call via Arc<Heap> wrapper")
+    }
+}
+
+impl ShmAlloc for Arc<Heap> {
+    fn alloc_bytes(&self, size: usize) -> Result<usize> {
+        Heap::alloc_bytes(self, size)
+    }
+    fn free_bytes(&self, addr: usize) {
+        Heap::free_bytes(self, addr)
+    }
+    fn backing_heap(&self) -> &Arc<Heap> {
+        self
+    }
+}
+
+impl ShmAlloc for Scope {
+    fn alloc_bytes(&self, size: usize) -> Result<usize> {
+        Scope::alloc_bytes(self, size)
+    }
+    fn free_bytes(&self, _addr: usize) {}
+    fn backing_heap(&self) -> &Arc<Heap> {
+        &self.heap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::pool::Pool;
+
+    fn scope(bytes: usize) -> (Arc<Pool>, Arc<Heap>, Scope) {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "s", 1 << 20).unwrap();
+        let scope = Scope::create(&heap, bytes).unwrap();
+        (pool, heap, scope)
+    }
+
+    #[test]
+    fn scope_is_page_aligned_contiguous() {
+        let (_p, h, s) = scope(10_000);
+        assert_eq!(s.base() % h.page_size(), 0);
+        assert_eq!(s.len(), 12288); // 3 pages
+    }
+
+    #[test]
+    fn bump_allocs_are_contiguous_and_aligned() {
+        let (_p, _h, s) = scope(4096);
+        let a = s.alloc_bytes(10).unwrap();
+        let b = s.alloc_bytes(10).unwrap();
+        assert_eq!(a % 16, 0);
+        assert_eq!(b, a + 16);
+        assert_eq!(s.used(), 32);
+    }
+
+    #[test]
+    fn exhaustion_then_reset() {
+        let (_p, _h, s) = scope(4096);
+        assert!(s.alloc_bytes(3000).is_ok());
+        let e = s.alloc_bytes(3000);
+        assert!(matches!(e, Err(RpcError::ScopeExhausted { .. })));
+        s.reset();
+        assert!(s.alloc_bytes(3000).is_ok());
+    }
+
+    #[test]
+    fn drop_returns_pages_to_heap() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "s", 64 * 1024).unwrap();
+        let free0 = heap.free_page_bytes();
+        {
+            let _s = Scope::create(&heap, 16 * 1024).unwrap();
+            assert!(heap.free_page_bytes() < free0);
+        }
+        assert_eq!(heap.free_page_bytes(), free0);
+    }
+
+    #[test]
+    fn used_pages_tracks_touch() {
+        let (_p, _h, s) = scope(4 * 4096);
+        assert_eq!(s.used_pages(), 0);
+        s.alloc_bytes(5000).unwrap();
+        assert_eq!(s.used_pages(), 2);
+        assert_eq!(s.total_pages(), 4);
+    }
+}

@@ -1,0 +1,214 @@
+//! Measurement kit: log-bucketed latency histogram (HDR-style) and
+//! throughput windows — used by the benches to print the paper's
+//! median/P99/throughput rows.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-linear histogram: 64 power-of-two buckets × 16 linear sub-buckets,
+/// nanosecond domain. Concurrent recording, lock-free.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    min_ns: AtomicU64,
+}
+
+const SUB: usize = 16;
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..64 * SUB).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn index(ns: u64) -> usize {
+        if ns < SUB as u64 {
+            return ns as usize;
+        }
+        let exp = 63 - ns.leading_zeros() as usize;
+        let sub = ((ns >> (exp - 4)) & 0xF) as usize;
+        ((exp - 3) * SUB + sub).min(64 * SUB - 1)
+    }
+
+    /// Representative (upper-bound) value for a bucket index.
+    fn value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let exp = idx / SUB + 3;
+        let sub = idx % SUB;
+        (1u64 << exp) + ((sub as u64 + 1) << (exp - 4))
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        let v = self.min_ns.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            0
+        } else {
+            v
+        }
+    }
+
+    /// p in [0,100].
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::value(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    pub fn median_ns(&self) -> u64 {
+        self.percentile_ns(50.0)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.percentile_ns(99.0)
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+        self.min_ns.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// "1.53 µs" style formatting.
+    pub fn fmt_ns(ns: u64) -> String {
+        if ns >= 1_000_000_000 {
+            format!("{:.2} s", ns as f64 / 1e9)
+        } else if ns >= 1_000_000 {
+            format!("{:.2} ms", ns as f64 / 1e6)
+        } else if ns >= 1_000 {
+            format!("{:.2} µs", ns as f64 / 1e3)
+        } else {
+            format!("{ns} ns")
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Throughput helper: ops over a wall-clock window.
+pub struct Throughput {
+    pub ops: u64,
+    pub wall: Duration,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.ops as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn k_per_sec(&self) -> f64 {
+        self.per_sec() / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_uniform_ramp() {
+        let h = Histogram::new();
+        for ns in 1..=10_000u64 {
+            h.record_ns(ns * 100); // 100ns..1ms
+        }
+        let p50 = h.percentile_ns(50.0) as f64;
+        let p99 = h.percentile_ns(99.0) as f64;
+        assert!((p50 / 500_000.0 - 1.0).abs() < 0.10, "p50 {p50}");
+        assert!((p99 / 990_000.0 - 1.0).abs() < 0.10, "p99 {p99}");
+        assert_eq!(h.count(), 10_000);
+        assert!(h.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn extremes_and_reset() {
+        let h = Histogram::new();
+        h.record_ns(3);
+        h.record_ns(u32::MAX as u64 * 10);
+        assert_eq!(h.min_ns(), 3);
+        assert!(h.max_ns() >= u32::MAX as u64);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ns(99.0), 0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(Histogram::fmt_ns(950), "950 ns");
+        assert_eq!(Histogram::fmt_ns(1500), "1.50 µs");
+        assert_eq!(Histogram::fmt_ns(2_600_000), "2.60 ms");
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..10_000 {
+                        h.record_ns(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 40_000);
+    }
+}

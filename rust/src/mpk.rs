@@ -1,0 +1,250 @@
+//! Simulated Intel Memory Protection Keys (paper §5.2).
+//!
+//! Real MPK: pages carry a 4-bit protection key (process-level
+//! assignment, `pkey_mprotect`-priced); the per-thread PKRU register
+//! holds 2 permission bits per key and is written in tens of
+//! nanoseconds (`WRPKRU`). RPCool's entire sandbox-cache design falls
+//! out of this asymmetry — PKRU writes are nearly free, key
+//! (re)assignment is a syscall-priced page walk, and there are only 16
+//! keys (2 reserved: private heap + unsandboxed shm ⇒ 14 cached
+//! sandboxes).
+//!
+//! The simulation reproduces the *bookkeeping and the cost structure*:
+//! key allocation, region assignment, per-thread PKRU words, and the
+//! charge for each operation. Actual access interception happens in
+//! `simproc::check_access` (the simulated MMU).
+
+use crate::config::SimConfig;
+use crate::error::{Result, RpcError};
+use crate::memory::pool::Charger;
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
+
+/// Key indices are small (hardware: 0..16).
+pub type Key = u8;
+
+/// Permission bits per key in the PKRU (hardware: AD = access disable,
+/// WD = write disable).
+pub const PKRU_ACCESS_DISABLE: u32 = 0b01;
+pub const PKRU_WRITE_DISABLE: u32 = 0b10;
+
+/// The region a key currently guards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KeyRegion {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+#[derive(Debug)]
+struct KeyTableInner {
+    /// `None` = key free; `Some(region)` = assigned.
+    assigned: Vec<Option<KeyRegion>>,
+    /// Count of key reassignments (telemetry for Table 1b's
+    /// cached-vs-uncached split).
+    reassignments: u64,
+}
+
+/// Process-level key table: which pages each key guards.
+pub struct KeyTable {
+    nkeys: usize,
+    reserved: usize,
+    inner: Mutex<KeyTableInner>,
+    charger: Arc<Charger>,
+    page_bytes: usize,
+}
+
+/// Reserved key guarding the process's private memory.
+pub const KEY_PRIVATE: Key = 0;
+/// Reserved key guarding unsandboxed shared-memory regions.
+pub const KEY_SHM: Key = 1;
+
+impl KeyTable {
+    pub fn new(cfg: &SimConfig, charger: Arc<Charger>) -> Self {
+        let mut assigned = vec![None; cfg.mpk_keys];
+        // Reserved keys are permanently assigned (paper: "RPCool
+        // reserves 2 keys for the private heap and unsandboxed
+        // regions, respectively").
+        assigned[KEY_PRIVATE as usize] = Some(KeyRegion { lo: 0, hi: 0 });
+        assigned[KEY_SHM as usize] = Some(KeyRegion { lo: 0, hi: 0 });
+        KeyTable {
+            nkeys: cfg.mpk_keys,
+            reserved: cfg.mpk_reserved_keys,
+            inner: Mutex::new(KeyTableInner { assigned, reassignments: 0 }),
+            charger,
+            page_bytes: cfg.page_bytes,
+        }
+    }
+
+    /// Keys usable for sandboxes (hardware 16 − 2 reserved = 14).
+    pub fn sandbox_key_budget(&self) -> usize {
+        self.nkeys - self.reserved
+    }
+
+    /// Allocate a free key and assign it to `region`, charging the
+    /// `pkey_mprotect`-class cost. Returns `NoKeysAvailable` when all
+    /// 14 sandbox keys are in use — callers then *reuse* a key
+    /// (`reassign`), which is the uncached-sandbox slow path.
+    pub fn assign(&self, region: KeyRegion) -> Result<Key> {
+        let mut inner = self.inner.lock().unwrap();
+        let key = inner.assigned[self.reserved..]
+            .iter()
+            .position(|a| a.is_none())
+            .map(|i| i + self.reserved)
+            .ok_or(RpcError::NoKeysAvailable)?;
+        inner.assigned[key] = Some(region);
+        self.charge_assign(region);
+        Ok(key as Key)
+    }
+
+    /// Re-point an already-held key at a new region (uncached path).
+    pub fn reassign(&self, key: Key, region: KeyRegion) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = inner
+            .assigned
+            .get_mut(key as usize)
+            .ok_or(RpcError::NoKeysAvailable)?;
+        if slot.is_none() {
+            return Err(RpcError::NoKeysAvailable);
+        }
+        *slot = Some(region);
+        inner.reassignments += 1;
+        self.charge_assign(region);
+        Ok(())
+    }
+
+    pub fn free(&self, key: Key) {
+        if (key as usize) < self.reserved {
+            return; // reserved keys are never freed
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.assigned.get_mut(key as usize) {
+            *slot = None;
+        }
+    }
+
+    pub fn region_of(&self, key: Key) -> Option<KeyRegion> {
+        self.inner.lock().unwrap().assigned.get(key as usize).copied().flatten()
+    }
+
+    pub fn keys_in_use(&self) -> usize {
+        self.inner.lock().unwrap().assigned.iter().filter(|a| a.is_some()).count()
+    }
+
+    pub fn reassignments(&self) -> u64 {
+        self.inner.lock().unwrap().reassignments
+    }
+
+    fn charge_assign(&self, region: KeyRegion) {
+        let pages = (region.hi.saturating_sub(region.lo)).div_ceil(self.page_bytes) as u64;
+        self.charger.charge_ns(
+            self.charger.cost.key_assign_base_ns
+                + pages * self.charger.cost.key_assign_per_page_ns,
+        );
+    }
+
+    pub fn charger(&self) -> &Arc<Charger> {
+        &self.charger
+    }
+}
+
+// ---------------- per-thread PKRU ----------------
+
+thread_local! {
+    /// 2 bits per key, like the hardware register. All-zero = every
+    /// key readable+writable.
+    static PKRU: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Write the thread's PKRU (charged at WRPKRU cost).
+pub fn pkru_write(charger: &Charger, value: u32) {
+    charger.charge_ns(charger.cost.pkru_write_ns);
+    PKRU.with(|p| p.set(value));
+}
+
+pub fn pkru_read() -> u32 {
+    PKRU.with(|p| p.get())
+}
+
+/// PKRU value that *only* allows `allowed` keys (all others
+/// access-disabled) — what SB_BEGIN installs.
+pub fn pkru_allow_only(allowed: &[Key]) -> u32 {
+    let mut v = 0u32;
+    for k in 0..16u8 {
+        if !allowed.contains(&k) {
+            v |= PKRU_ACCESS_DISABLE << (2 * k as u32);
+        }
+    }
+    v
+}
+
+/// Does the current PKRU allow access through `key`?
+pub fn pkru_allows(key: Key, write: bool) -> bool {
+    let v = pkru_read();
+    let bits = (v >> (2 * key as u32)) & 0b11;
+    if bits & PKRU_ACCESS_DISABLE != 0 {
+        return false;
+    }
+    !(write && bits & PKRU_WRITE_DISABLE != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChargePolicy, CostModel};
+
+    fn table() -> KeyTable {
+        let cfg = SimConfig::for_tests();
+        let charger = Arc::new(Charger::new(CostModel::default(), ChargePolicy::Skip));
+        KeyTable::new(&cfg, charger)
+    }
+
+    #[test]
+    fn fourteen_sandbox_keys() {
+        let t = table();
+        assert_eq!(t.sandbox_key_budget(), 14);
+        let mut keys = Vec::new();
+        for i in 0..14 {
+            keys.push(t.assign(KeyRegion { lo: i * 4096, hi: (i + 1) * 4096 }).unwrap());
+        }
+        // 15th fails — the hardware limit the paper designs around.
+        assert_eq!(t.assign(KeyRegion { lo: 0, hi: 4096 }), Err(RpcError::NoKeysAvailable));
+        t.free(keys[0]);
+        assert!(t.assign(KeyRegion { lo: 0, hi: 4096 }).is_ok());
+    }
+
+    #[test]
+    fn reserved_keys_protected() {
+        let t = table();
+        t.free(KEY_PRIVATE);
+        t.free(KEY_SHM);
+        assert_eq!(t.keys_in_use(), 2);
+        let k = t.assign(KeyRegion { lo: 0, hi: 4096 }).unwrap();
+        assert!(k >= 2, "sandbox keys start after reserved");
+    }
+
+    #[test]
+    fn reassignment_counted_and_charged() {
+        let cfg = SimConfig::for_tests();
+        let charger = Arc::new(Charger::new(CostModel::default(), ChargePolicy::Skip));
+        let t = KeyTable::new(&cfg, Arc::clone(&charger));
+        let k = t.assign(KeyRegion { lo: 0, hi: 8 * 4096 }).unwrap();
+        let before = charger.total_charged_ns();
+        t.reassign(k, KeyRegion { lo: 0, hi: 64 * 4096 }).unwrap();
+        assert_eq!(t.reassignments(), 1);
+        let delta = charger.total_charged_ns() - before;
+        assert!(delta >= CostModel::default().key_assign_base_ns);
+        assert_eq!(t.region_of(k), Some(KeyRegion { lo: 0, hi: 64 * 4096 }));
+    }
+
+    #[test]
+    fn pkru_masks() {
+        let v = pkru_allow_only(&[3, KEY_SHM]);
+        PKRU.with(|p| p.set(v));
+        assert!(pkru_allows(3, true));
+        assert!(pkru_allows(KEY_SHM, false));
+        assert!(!pkru_allows(KEY_PRIVATE, false));
+        assert!(!pkru_allows(7, false));
+        PKRU.with(|p| p.set(0));
+        assert!(pkru_allows(7, true));
+    }
+}

@@ -1,0 +1,105 @@
+//! POSIX-like access control lists for channels and shared heaps
+//! (paper §4.1: the orchestrator "supports POSIX-like access control
+//! lists for the shared memory").
+
+pub type Uid = u32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Perm {
+    Read,
+    Write,
+    Connect,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Mode {
+    pub read: bool,
+    pub write: bool,
+    pub connect: bool,
+}
+
+impl Mode {
+    pub const RWC: Mode = Mode { read: true, write: true, connect: true };
+    pub const RO: Mode = Mode { read: true, write: false, connect: false };
+    pub const NONE: Mode = Mode { read: false, write: false, connect: false };
+
+    pub fn allows(&self, p: Perm) -> bool {
+        match p {
+            Perm::Read => self.read,
+            Perm::Write => self.write,
+            Perm::Connect => self.connect,
+        }
+    }
+}
+
+/// ACL: owner with full rights, per-uid entries, and an "other" mode.
+#[derive(Clone, Debug)]
+pub struct Acl {
+    pub owner: Uid,
+    pub entries: Vec<(Uid, Mode)>,
+    pub other: Mode,
+}
+
+impl Acl {
+    /// Owner-only access.
+    pub fn private(owner: Uid) -> Acl {
+        Acl { owner, entries: Vec::new(), other: Mode::NONE }
+    }
+
+    /// World-connectable (the common case for public services).
+    pub fn open(owner: Uid) -> Acl {
+        Acl { owner, entries: Vec::new(), other: Mode::RWC }
+    }
+
+    pub fn grant(&mut self, uid: Uid, mode: Mode) {
+        if let Some(e) = self.entries.iter_mut().find(|(u, _)| *u == uid) {
+            e.1 = mode;
+        } else {
+            self.entries.push((uid, mode));
+        }
+    }
+
+    pub fn revoke(&mut self, uid: Uid) {
+        self.entries.retain(|(u, _)| *u != uid);
+    }
+
+    pub fn check(&self, uid: Uid, p: Perm) -> bool {
+        if uid == self.owner {
+            return true;
+        }
+        if let Some((_, m)) = self.entries.iter().find(|(u, _)| *u == uid) {
+            return m.allows(p);
+        }
+        self.other.allows(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_always_allowed() {
+        let acl = Acl::private(1);
+        assert!(acl.check(1, Perm::Write));
+        assert!(!acl.check(2, Perm::Read));
+    }
+
+    #[test]
+    fn grant_and_revoke() {
+        let mut acl = Acl::private(1);
+        acl.grant(2, Mode::RO);
+        assert!(acl.check(2, Perm::Read));
+        assert!(!acl.check(2, Perm::Write));
+        acl.grant(2, Mode::RWC);
+        assert!(acl.check(2, Perm::Connect));
+        acl.revoke(2);
+        assert!(!acl.check(2, Perm::Read));
+    }
+
+    #[test]
+    fn open_acl_allows_everyone() {
+        let acl = Acl::open(1);
+        assert!(acl.check(99, Perm::Connect));
+    }
+}

@@ -1,0 +1,154 @@
+//! Leases: failure detection + orphaned-heap reclamation (paper §5.4).
+//!
+//! Every time a proc maps a heap it receives a lease; `librpcool`
+//! renews it periodically. If a proc dies (crash = it stops renewing),
+//! the lease expires, the orchestrator notifies the other participants
+//! and — once the last lease on a heap is gone — reclaims the heap.
+
+use crate::memory::heap::ProcId;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LeaseId(pub u64);
+
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub id: LeaseId,
+    pub heap_id: u64,
+    pub proc: ProcId,
+    pub expires: Instant,
+}
+
+/// Lease table: pure bookkeeping, driven by the orchestrator.
+pub struct LeaseTable {
+    ttl: Duration,
+    next_id: u64,
+    leases: HashMap<LeaseId, Lease>,
+    /// heap_id → live lease ids (fast per-heap queries).
+    by_heap: HashMap<u64, Vec<LeaseId>>,
+}
+
+impl LeaseTable {
+    pub fn new(ttl: Duration) -> Self {
+        LeaseTable { ttl, next_id: 1, leases: HashMap::new(), by_heap: HashMap::new() }
+    }
+
+    pub fn grant(&mut self, heap_id: u64, proc: ProcId, now: Instant) -> Lease {
+        let id = LeaseId(self.next_id);
+        self.next_id += 1;
+        let lease = Lease { id, heap_id, proc, expires: now + self.ttl };
+        self.leases.insert(id, lease.clone());
+        self.by_heap.entry(heap_id).or_default().push(id);
+        lease
+    }
+
+    /// Renew; returns false if the lease already expired or was revoked.
+    pub fn renew(&mut self, id: LeaseId, now: Instant) -> bool {
+        match self.leases.get_mut(&id) {
+            Some(l) if l.expires > now => {
+                l.expires = now + self.ttl;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop a lease voluntarily (clean close).
+    pub fn surrender(&mut self, id: LeaseId) {
+        if let Some(l) = self.leases.remove(&id) {
+            if let Some(v) = self.by_heap.get_mut(&l.heap_id) {
+                v.retain(|x| *x != id);
+                if v.is_empty() {
+                    self.by_heap.remove(&l.heap_id);
+                }
+            }
+        }
+    }
+
+    /// Harvest expired leases; returns them (orchestrator notifies &
+    /// possibly GCs their heaps).
+    pub fn expire(&mut self, now: Instant) -> Vec<Lease> {
+        let dead: Vec<LeaseId> = self
+            .leases
+            .values()
+            .filter(|l| l.expires <= now)
+            .map(|l| l.id)
+            .collect();
+        let mut out = Vec::with_capacity(dead.len());
+        for id in dead {
+            if let Some(l) = self.leases.remove(&id) {
+                if let Some(v) = self.by_heap.get_mut(&l.heap_id) {
+                    v.retain(|x| *x != id);
+                    if v.is_empty() {
+                        self.by_heap.remove(&l.heap_id);
+                    }
+                }
+                out.push(l);
+            }
+        }
+        out
+    }
+
+    /// Procs still holding a live lease on `heap_id`.
+    pub fn holders(&self, heap_id: u64) -> Vec<ProcId> {
+        self.by_heap
+            .get(&heap_id)
+            .map(|v| v.iter().filter_map(|id| self.leases.get(id)).map(|l| l.proc).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn heap_is_orphaned(&self, heap_id: u64) -> bool {
+        !self.by_heap.contains_key(&heap_id)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.leases.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn grant_renew_expire_cycle() {
+        let mut lt = LeaseTable::new(Duration::from_millis(100));
+        let now = t0();
+        let l = lt.grant(7, 1, now);
+        assert!(lt.renew(l.id, now + Duration::from_millis(50)));
+        // Renewal pushed expiry to +150ms.
+        assert!(lt.expire(now + Duration::from_millis(120)).is_empty());
+        let dead = lt.expire(now + Duration::from_millis(200));
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].heap_id, 7);
+        assert!(!lt.renew(l.id, now + Duration::from_millis(210)), "expired lease unrenewable");
+    }
+
+    #[test]
+    fn orphan_detection_when_all_leases_gone() {
+        let mut lt = LeaseTable::new(Duration::from_millis(100));
+        let now = t0();
+        let a = lt.grant(9, 1, now);
+        let _b = lt.grant(9, 2, now);
+        assert!(!lt.heap_is_orphaned(9));
+        lt.surrender(a.id);
+        assert!(!lt.heap_is_orphaned(9));
+        assert_eq!(lt.holders(9), vec![2]);
+        lt.expire(now + Duration::from_millis(500));
+        assert!(lt.heap_is_orphaned(9));
+    }
+
+    #[test]
+    fn surrender_is_idempotent() {
+        let mut lt = LeaseTable::new(Duration::from_millis(100));
+        let l = lt.grant(1, 1, t0());
+        lt.surrender(l.id);
+        lt.surrender(l.id);
+        assert_eq!(lt.live_count(), 0);
+    }
+}

@@ -1,0 +1,396 @@
+//! The global orchestrator (paper §4.1, §5.4).
+//!
+//! One per cluster: tracks shared-memory resources, assigns heaps
+//! their cluster-unique addresses (via the pool), registers channels
+//! under hierarchical names with POSIX-like ACLs, grants/expires
+//! leases, enforces per-process quotas, notifies peers of failures,
+//! and garbage-collects orphaned heaps. It resembles the cluster
+//! orchestrators datacenters already deploy (the paper's analogy).
+
+pub mod acl;
+pub mod lease;
+pub mod quota;
+
+pub use acl::{Acl, Mode, Perm, Uid};
+pub use lease::{Lease, LeaseId, LeaseTable};
+pub use quota::QuotaTable;
+
+use crate::config::SimConfig;
+use crate::error::{Result, RpcError};
+use crate::memory::heap::{Heap, ProcId};
+use crate::memory::pool::Pool;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Events the orchestrator delivers to participants (polled by
+/// librpcool's renewal thread in the real system).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Notification {
+    /// A peer holding a lease on a heap you share stopped renewing.
+    PeerFailed { proc: ProcId, heap_id: u64 },
+    /// A heap you used was orphaned and reclaimed.
+    HeapReclaimed { heap_id: u64 },
+    /// The channel's server went away.
+    ChannelDown { name: String },
+}
+
+/// Channel metadata registered with the orchestrator.
+#[derive(Clone)]
+pub struct ChannelReg {
+    pub name: String,
+    pub owner_proc: ProcId,
+    pub owner_uid: Uid,
+    pub acl: Acl,
+    pub heap_id: u64,
+}
+
+struct Inner {
+    leases: LeaseTable,
+    quotas: QuotaTable,
+    heaps: HashMap<u64, Arc<Heap>>,
+    /// heap → procs that ever mapped it (for failure notification fan-out).
+    participants: HashMap<u64, Vec<ProcId>>,
+    channels: HashMap<String, ChannelReg>,
+    notifications: HashMap<ProcId, Vec<Notification>>,
+    reclaimed: u64,
+}
+
+pub struct Orchestrator {
+    pub pool: Arc<Pool>,
+    cfg: SimConfig,
+    inner: Mutex<Inner>,
+    ticker_stop: AtomicBool,
+}
+
+impl Orchestrator {
+    pub fn new(cfg: &SimConfig, pool: Arc<Pool>) -> Arc<Orchestrator> {
+        Arc::new(Orchestrator {
+            pool,
+            cfg: cfg.clone(),
+            inner: Mutex::new(Inner {
+                leases: LeaseTable::new(Duration::from_millis(cfg.lease_ttl_ms)),
+                quotas: QuotaTable::new(cfg.quota_bytes),
+                heaps: HashMap::new(),
+                participants: HashMap::new(),
+                channels: HashMap::new(),
+                notifications: HashMap::new(),
+                reclaimed: 0,
+            }),
+            ticker_stop: AtomicBool::new(false),
+        })
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    // ---------------- heaps ----------------
+
+    /// Create a heap at a cluster-unique address and lease it to `proc`.
+    pub fn create_heap(
+        &self,
+        name: &str,
+        bytes: usize,
+        proc: ProcId,
+    ) -> Result<(Arc<Heap>, LeaseId)> {
+        let heap = Heap::new(&self.pool, name, bytes)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.quotas.charge(proc, heap.id, heap.len())?;
+        let lease = inner.leases.grant(heap.id, proc, Instant::now());
+        inner.participants.entry(heap.id).or_default().push(proc);
+        inner.heaps.insert(heap.id, Arc::clone(&heap));
+        Ok((heap, lease.id))
+    }
+
+    /// Map an existing heap into another proc's address space.
+    pub fn map_heap(&self, heap_id: u64, proc: ProcId) -> Result<(Arc<Heap>, LeaseId)> {
+        let mut inner = self.inner.lock().unwrap();
+        let heap = inner
+            .heaps
+            .get(&heap_id)
+            .cloned()
+            .ok_or(RpcError::LeaseExpired(heap_id))?;
+        inner.quotas.charge(proc, heap_id, heap.len())?;
+        let lease = inner.leases.grant(heap_id, proc, Instant::now());
+        let parts = inner.participants.entry(heap_id).or_default();
+        if !parts.contains(&proc) {
+            parts.push(proc);
+        }
+        Ok((heap, lease.id))
+    }
+
+    /// Voluntary unmap (clean close): surrender lease, credit quota,
+    /// reclaim if orphaned.
+    pub fn unmap_heap(&self, lease: LeaseId, proc: ProcId, heap_id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.leases.surrender(lease);
+        inner.quotas.credit(proc, heap_id);
+        if let Some(parts) = inner.participants.get_mut(&heap_id) {
+            parts.retain(|p| *p != proc);
+        }
+        if inner.leases.heap_is_orphaned(heap_id) {
+            Self::reclaim_heap(&mut inner, heap_id);
+        }
+    }
+
+    pub fn renew(&self, lease: LeaseId) -> bool {
+        self.inner.lock().unwrap().leases.renew(lease, Instant::now())
+    }
+
+    fn reclaim_heap(inner: &mut Inner, heap_id: u64) {
+        if inner.heaps.remove(&heap_id).is_some() {
+            inner.reclaimed += 1;
+            let parts = inner.participants.remove(&heap_id).unwrap_or_default();
+            for p in parts {
+                inner
+                    .notifications
+                    .entry(p)
+                    .or_default()
+                    .push(Notification::HeapReclaimed { heap_id });
+            }
+        }
+    }
+
+    pub fn heap(&self, heap_id: u64) -> Option<Arc<Heap>> {
+        self.inner.lock().unwrap().heaps.get(&heap_id).cloned()
+    }
+
+    pub fn live_heaps(&self) -> usize {
+        self.inner.lock().unwrap().heaps.len()
+    }
+
+    pub fn reclaimed_heaps(&self) -> u64 {
+        self.inner.lock().unwrap().reclaimed
+    }
+
+    pub fn quota_held(&self, proc: ProcId) -> usize {
+        self.inner.lock().unwrap().quotas.held_by(proc)
+    }
+
+    // ---------------- channels ----------------
+
+    pub fn register_channel(&self, reg: ChannelReg) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.channels.contains_key(&reg.name) {
+            return Err(RpcError::ChannelExists(reg.name));
+        }
+        inner.channels.insert(reg.name.clone(), reg);
+        Ok(())
+    }
+
+    pub fn unregister_channel(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.channels.remove(name);
+    }
+
+    pub fn lookup_channel(&self, name: &str) -> Result<ChannelReg> {
+        self.inner
+            .lock()
+            .unwrap()
+            .channels
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RpcError::ChannelNotFound(name.to_string()))
+    }
+
+    /// Check a uid may connect to a channel (POSIX-like ACL).
+    pub fn check_connect(&self, name: &str, uid: Uid) -> Result<ChannelReg> {
+        let reg = self.lookup_channel(name)?;
+        if !reg.acl.check(uid, Perm::Connect) {
+            return Err(RpcError::AccessDenied(format!("uid {uid} cannot connect to '{name}'")));
+        }
+        Ok(reg)
+    }
+
+    /// Channels under a hierarchical prefix (e.g. `"social/"`).
+    pub fn list_channels(&self, prefix: &str) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<String> =
+            inner.channels.keys().filter(|k| k.starts_with(prefix)).cloned().collect();
+        v.sort();
+        v
+    }
+
+    // ---------------- failure handling ----------------
+
+    /// One sweep: expire leases, notify survivors, GC orphaned heaps.
+    /// Returns the number of leases that expired.
+    pub fn tick(&self) -> usize {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        let dead = inner.leases.expire(now);
+        let n = dead.len();
+        for lease in dead {
+            inner.quotas.credit(lease.proc, lease.heap_id);
+            // Notify surviving participants of this heap.
+            let survivors: Vec<ProcId> = inner
+                .participants
+                .get(&lease.heap_id)
+                .map(|v| v.iter().copied().filter(|p| *p != lease.proc).collect())
+                .unwrap_or_default();
+            for s in survivors {
+                inner.notifications.entry(s).or_default().push(Notification::PeerFailed {
+                    proc: lease.proc,
+                    heap_id: lease.heap_id,
+                });
+            }
+            // Channels owned by the dead proc go down.
+            let downs: Vec<String> = inner
+                .channels
+                .values()
+                .filter(|c| c.owner_proc == lease.proc)
+                .map(|c| c.name.clone())
+                .collect();
+            for name in downs {
+                inner.channels.remove(&name);
+                // Tell everyone who shares the channel's heap.
+                let heap_holders = inner.leases.holders(lease.heap_id);
+                for h in heap_holders {
+                    inner
+                        .notifications
+                        .entry(h)
+                        .or_default()
+                        .push(Notification::ChannelDown { name: name.clone() });
+                }
+            }
+            if inner.leases.heap_is_orphaned(lease.heap_id) {
+                Self::reclaim_heap(&mut inner, lease.heap_id);
+            }
+        }
+        n
+    }
+
+    /// Poll pending notifications for a proc (drains them).
+    pub fn poll_notifications(&self, proc: ProcId) -> Vec<Notification> {
+        self.inner.lock().unwrap().notifications.remove(&proc).unwrap_or_default()
+    }
+
+    /// Spawn the background ticker (lease sweeper). Call `stop_ticker`
+    /// (or drop the rack) to stop it.
+    pub fn start_ticker(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let this = Arc::clone(self);
+        let interval = Duration::from_millis(this.cfg.lease_renew_ms.max(1));
+        std::thread::spawn(move || {
+            while !this.ticker_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                this.tick();
+            }
+        })
+    }
+
+    pub fn stop_ticker(&self) {
+        self.ticker_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Orchestrator {
+    fn drop(&mut self) {
+        self.stop_ticker();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn orch() -> Arc<Orchestrator> {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        Orchestrator::new(&cfg, pool)
+    }
+
+    #[test]
+    fn heap_lifecycle_and_quota() {
+        let o = orch();
+        let (h, lease) = o.create_heap("conn0", 1 << 20, 1).unwrap();
+        assert_eq!(o.quota_held(1), h.len());
+        assert_eq!(o.live_heaps(), 1);
+        o.unmap_heap(lease, 1, h.id);
+        assert_eq!(o.quota_held(1), 0);
+        assert_eq!(o.live_heaps(), 0, "orphaned heap reclaimed on clean close");
+    }
+
+    #[test]
+    fn crash_expires_lease_and_notifies_peer() {
+        // Paper Fig. 5a: server crash orphans a heap; the orchestrator
+        // notices via lease expiry, notifies the client, and reclaims
+        // when the client also lets go.
+        let o = orch();
+        let (h, server_lease) = o.create_heap("conn", 1 << 20, 1).unwrap();
+        let (_h2, client_lease) = o.map_heap(h.id, 2).unwrap();
+        // Server "crashes": stops renewing. Client keeps renewing.
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(20)); // total 80ms > ttl 60ms
+            assert!(o.renew(client_lease), "client renewal must stay live");
+        }
+        let expired = o.tick();
+        assert!(expired >= 1);
+        let notes = o.poll_notifications(2);
+        assert!(
+            notes.contains(&Notification::PeerFailed { proc: 1, heap_id: h.id }),
+            "client told about server failure: {notes:?}"
+        );
+        // Client may keep using the heap...
+        assert!(o.heap(h.id).is_some());
+        // ...until it closes; then the heap is reclaimed.
+        o.unmap_heap(client_lease, 2, h.id);
+        assert_eq!(o.live_heaps(), 0);
+        let _ = server_lease;
+    }
+
+    #[test]
+    fn total_failure_reclaims_without_survivors() {
+        // Paper Fig. 5b / §5.4 "total failure": all procs die, the
+        // memory node survives; the orchestrator GCs the heap.
+        let o = orch();
+        let (h, _l1) = o.create_heap("conn", 1 << 20, 1).unwrap();
+        let (_h, _l2) = o.map_heap(h.id, 2).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        o.tick();
+        assert_eq!(o.live_heaps(), 0);
+        assert_eq!(o.reclaimed_heaps(), 1);
+    }
+
+    #[test]
+    fn channel_registry_with_acl() {
+        let o = orch();
+        let (h, _l) = o.create_heap("ch-heap", 1 << 20, 1).unwrap();
+        o.register_channel(ChannelReg {
+            name: "svc/db".into(),
+            owner_proc: 1,
+            owner_uid: 100,
+            acl: Acl::private(100),
+            heap_id: h.id,
+        })
+        .unwrap();
+        assert!(o.check_connect("svc/db", 100).is_ok());
+        assert!(o.check_connect("svc/db", 200).is_err());
+        assert!(o.register_channel(ChannelReg {
+            name: "svc/db".into(),
+            owner_proc: 2,
+            owner_uid: 2,
+            acl: Acl::open(2),
+            heap_id: h.id,
+        })
+        .is_err());
+        assert_eq!(o.list_channels("svc/"), vec!["svc/db".to_string()]);
+        assert!(matches!(o.check_connect("nope", 1), Err(RpcError::ChannelNotFound(_))));
+    }
+
+    #[test]
+    fn quota_blocks_hoarding_client() {
+        // §5.4 scenario 3: a client must not amass unbounded shm.
+        let mut cfg = SimConfig::for_tests();
+        cfg.quota_bytes = 3 << 20;
+        let pool = Pool::new(&cfg).unwrap();
+        let o = Orchestrator::new(&cfg, pool);
+        let (h1, _) = o.create_heap("a", 1 << 20, 1).unwrap();
+        let (h2, _) = o.create_heap("b", 1 << 20, 1).unwrap();
+        let (_h3, _) = o.create_heap("c", 1 << 20, 1).unwrap();
+        let err = o.create_heap("d", 1 << 20, 1).err().unwrap();
+        assert!(matches!(err, RpcError::QuotaExceeded { .. }));
+        let _ = (h1, h2);
+    }
+}

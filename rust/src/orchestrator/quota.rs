@@ -1,0 +1,95 @@
+//! Shared-memory quotas (paper §5.4): the orchestrator enforces an
+//! administrator-configured per-process cap on mapped shared memory.
+//! A heap mapped by several procs counts against *all* of their
+//! quotas; mapping beyond the cap is refused until the proc closes
+//! enough channels.
+
+use crate::error::{Result, RpcError};
+use crate::memory::heap::ProcId;
+use std::collections::HashMap;
+
+pub struct QuotaTable {
+    quota: usize,
+    /// proc → (heap_id → bytes) currently charged.
+    held: HashMap<ProcId, HashMap<u64, usize>>,
+}
+
+impl QuotaTable {
+    pub fn new(quota: usize) -> Self {
+        QuotaTable { quota, held: HashMap::new() }
+    }
+
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    pub fn held_by(&self, proc: ProcId) -> usize {
+        self.held.get(&proc).map(|m| m.values().sum()).unwrap_or(0)
+    }
+
+    /// Charge `proc` for mapping `heap_id` (`bytes` big). Fails — and
+    /// charges nothing — if it would exceed the quota.
+    pub fn charge(&mut self, proc: ProcId, heap_id: u64, bytes: usize) -> Result<()> {
+        let held = self.held_by(proc);
+        let entry = self.held.entry(proc).or_default();
+        if entry.contains_key(&heap_id) {
+            return Ok(()); // mapping the same heap twice is free
+        }
+        if held + bytes > self.quota {
+            return Err(RpcError::QuotaExceeded { proc, held, quota: self.quota, wanted: bytes });
+        }
+        entry.insert(heap_id, bytes);
+        Ok(())
+    }
+
+    /// Release the charge when a proc unmaps a heap.
+    pub fn credit(&mut self, proc: ProcId, heap_id: u64) {
+        if let Some(m) = self.held.get_mut(&proc) {
+            m.remove(&heap_id);
+            if m.is_empty() {
+                self.held.remove(&proc);
+            }
+        }
+    }
+
+    /// Drop every charge held by `proc` (it died).
+    pub fn drop_proc(&mut self, proc: ProcId) {
+        self.held.remove(&proc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quota_enforced_per_proc() {
+        let mut q = QuotaTable::new(100);
+        q.charge(1, 10, 60).unwrap();
+        q.charge(2, 10, 60).unwrap(); // other proc has its own budget
+        let err = q.charge(1, 11, 60).unwrap_err();
+        assert!(matches!(err, RpcError::QuotaExceeded { proc: 1, held: 60, .. }));
+        q.credit(1, 10);
+        q.charge(1, 11, 60).unwrap();
+    }
+
+    #[test]
+    fn double_map_is_free() {
+        let mut q = QuotaTable::new(100);
+        q.charge(1, 10, 80).unwrap();
+        q.charge(1, 10, 80).unwrap();
+        assert_eq!(q.held_by(1), 80);
+    }
+
+    #[test]
+    fn shared_heap_counts_against_all() {
+        let mut q = QuotaTable::new(100);
+        q.charge(1, 5, 90).unwrap();
+        q.charge(2, 5, 90).unwrap();
+        assert_eq!(q.held_by(1), 90);
+        assert_eq!(q.held_by(2), 90);
+        q.drop_proc(1);
+        assert_eq!(q.held_by(1), 0);
+        assert_eq!(q.held_by(2), 90);
+    }
+}

@@ -1,0 +1,136 @@
+//! The simulated rack: up to ~32 hosts sharing one CXL memory pool
+//! (paper Fig. 2), plus the cluster-global orchestrator.
+//!
+//! A `Rack` owns the pool and the orchestrator. "Procs" (simulated OS
+//! processes) are created via `proc_env` and run on caller threads; a
+//! `ProcEnv` carries the identity (`ProcId`, uid, host) that the
+//! protection layers key on. Hosts beyond the rack (for RDMA-fallback
+//! experiments) are modelled by marking the env's host id `>= rack_hosts`.
+
+use crate::config::SimConfig;
+use crate::memory::pool::Pool;
+use crate::orchestrator::{Orchestrator, Uid};
+use crate::simproc::{self};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static NEXT_RACK_ID: AtomicU64 = AtomicU64::new(1);
+
+pub struct Rack {
+    pub id: u64,
+    pub cfg: SimConfig,
+    pub pool: Arc<Pool>,
+    pub orch: Arc<Orchestrator>,
+}
+
+impl Rack {
+    pub fn new(cfg: SimConfig) -> Arc<Rack> {
+        let pool = Pool::new(&cfg).expect("pool mmap");
+        let orch = Orchestrator::new(&cfg, Arc::clone(&pool));
+        simproc::set_enforcement(cfg.enforce_protection);
+        Arc::new(Rack { id: NEXT_RACK_ID.fetch_add(1, Ordering::Relaxed), cfg, pool, orch })
+    }
+
+    /// Convenience constructors matching the two standard configs.
+    pub fn for_tests() -> Arc<Rack> {
+        Rack::new(SimConfig::for_tests())
+    }
+
+    pub fn for_bench() -> Arc<Rack> {
+        Rack::new(SimConfig::for_bench())
+    }
+
+    /// Create a new simulated process on `host`.
+    pub fn proc_env(self: &Arc<Self>, host: u32) -> ProcEnv {
+        let proc = simproc::fresh_proc_id();
+        ProcEnv { rack: Arc::clone(self), proc, uid: proc, host }
+    }
+
+    /// A process on a host *outside* this rack's CXL domain (RDMA only).
+    pub fn remote_proc_env(self: &Arc<Self>) -> ProcEnv {
+        self.proc_env(self.cfg.rack_hosts as u32 + 1)
+    }
+
+    /// Are two hosts CXL-reachable (same rack)?
+    pub fn same_cxl_domain(&self, host_a: u32, host_b: u32) -> bool {
+        (host_a as usize) < self.cfg.rack_hosts && (host_b as usize) < self.cfg.rack_hosts
+    }
+}
+
+/// A simulated process: identity + rack handle. Cheap to clone; bind
+/// to the current thread with `enter()` (or run closures via `run`).
+#[derive(Clone)]
+pub struct ProcEnv {
+    pub rack: Arc<Rack>,
+    pub proc: u32,
+    pub uid: Uid,
+    pub host: u32,
+}
+
+impl ProcEnv {
+    /// Bind this proc identity to the current thread.
+    pub fn enter(&self) {
+        simproc::bind(self.proc, self.host);
+    }
+
+    /// Run `f` under this proc's identity, restoring the previous one.
+    pub fn run<R>(&self, f: impl FnOnce() -> R) -> R {
+        simproc::with_identity(self.proc, self.host, f)
+    }
+
+    /// Spawn an OS thread bound to this proc identity.
+    pub fn spawn<F, R>(&self, f: F) -> std::thread::JoinHandle<R>
+    where
+        F: FnOnce() -> R + Send + 'static,
+        R: Send + 'static,
+    {
+        let env = self.clone();
+        std::thread::spawn(move || {
+            env.enter();
+            f()
+        })
+    }
+
+    pub fn in_rack(&self) -> bool {
+        (self.host as usize) < self.rack.cfg.rack_hosts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn procs_get_distinct_ids() {
+        let rack = Rack::for_tests();
+        let a = rack.proc_env(0);
+        let b = rack.proc_env(1);
+        assert_ne!(a.proc, b.proc);
+        a.run(|| {
+            assert_eq!(simproc::current_proc(), a.proc);
+            assert_eq!(simproc::current_host(), 0);
+        });
+    }
+
+    #[test]
+    fn cxl_domain_boundaries() {
+        let rack = Rack::for_tests();
+        assert!(rack.same_cxl_domain(0, 31));
+        let remote = rack.remote_proc_env();
+        assert!(!remote.in_rack());
+        assert!(!rack.same_cxl_domain(0, remote.host));
+    }
+
+    #[test]
+    fn spawned_thread_carries_identity() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(2);
+        let p = env.proc;
+        env.spawn(move || {
+            assert_eq!(simproc::current_proc(), p);
+            assert_eq!(simproc::current_host(), 2);
+        })
+        .join()
+        .unwrap();
+    }
+}

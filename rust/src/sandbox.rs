@@ -1,0 +1,392 @@
+//! Sandboxes: processing untrusted RPC arguments safely (paper §4.4, §5.2).
+//!
+//! A sandboxed thread loses access to everything except the RPC's
+//! argument region and a temporary heap; dereferencing a wild or
+//! malicious pointer produces a violation the RPC layer converts into
+//! an error response instead of a crash or a secret leak.
+//!
+//! Mechanics reproduced from the paper:
+//!  * MPK keys, not `mprotect`: entering/leaving a *cached* sandbox is
+//!    just a PKRU write (sub-µs); only assigning a key to a new region
+//!    costs a syscall-priced page walk.
+//!  * Up to 14 cached sandboxes (16 keys − 2 reserved). An uncached
+//!    request reuses the key of an idle cached sandbox (reassignment —
+//!    the slow path in Table 1b), waiting if all are busy.
+//!  * `malloc` redirection: allocations inside the sandbox go to a
+//!    temp heap whose contents die at `SB_END`.
+//!  * Private-variable copy-in: `SB_BEGIN(region, var0, var1, ...)`.
+
+use crate::config::SimConfig;
+use crate::error::Result;
+use crate::memory::heap::Heap;
+use crate::memory::pod::Pod;
+use crate::memory::pool::Charger;
+use crate::memory::ptr::ShmPtr;
+use crate::memory::scope::Scope;
+use crate::mpk::{self, Key, KeyRegion, KeyTable, KEY_SHM};
+use crate::simproc::{self, Window};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Size of each cached sandbox's temp heap.
+const TEMP_HEAP_BYTES: usize = 256 * 1024;
+
+struct CacheEntry {
+    key: Key,
+    region: KeyRegion,
+    temp: Arc<Scope>,
+    in_use: bool,
+}
+
+struct CacheState {
+    entries: Vec<CacheEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Per-process sandbox manager (one per connection endpoint).
+pub struct SandboxMgr {
+    keys: Arc<KeyTable>,
+    heap: Arc<Heap>,
+    cache: Mutex<CacheState>,
+    freed: Condvar,
+    charger: Arc<Charger>,
+    page: usize,
+}
+
+impl SandboxMgr {
+    pub fn new(cfg: &SimConfig, heap: Arc<Heap>, charger: Arc<Charger>) -> Arc<Self> {
+        Arc::new(SandboxMgr {
+            keys: Arc::new(KeyTable::new(cfg, Arc::clone(&charger))),
+            heap,
+            cache: Mutex::new(CacheState { entries: Vec::new(), hits: 0, misses: 0 }),
+            freed: Condvar::new(),
+            charger,
+            page: cfg.page_bytes,
+        })
+    }
+
+    fn page_region(&self, start: usize, len: usize) -> KeyRegion {
+        let lo = start & !(self.page - 1);
+        let hi = (start + len).div_ceil(self.page) * self.page;
+        KeyRegion { lo, hi }
+    }
+
+    /// `SB_BEGIN(start, len)` — enter a sandbox over the given region
+    /// of the connection heap. Returns an RAII guard; drop = `SB_END`.
+    pub fn begin(self: &Arc<Self>, start: usize, len: usize) -> Result<SandboxGuard> {
+        self.begin_with_vars(start, len, &[])
+    }
+
+    /// `SB_BEGIN(region, var0, var1, ...)` — additionally copy
+    /// programmer-specified private variables into the sandbox's temp
+    /// heap; their in-sandbox addresses are exposed on the guard.
+    pub fn begin_with_vars(
+        self: &Arc<Self>,
+        start: usize,
+        len: usize,
+        vars: &[&[u8]],
+    ) -> Result<SandboxGuard> {
+        let region = self.page_region(start, len);
+        let (idx, temp) = self.acquire_entry(region)?;
+
+        // Copy private vars into the temp heap *before* dropping
+        // access to private memory (they are host-memory slices).
+        let mut var_addrs = Vec::with_capacity(vars.len());
+        for v in vars {
+            let addr = temp.alloc_bytes(v.len().max(1))?;
+            unsafe {
+                std::ptr::copy_nonoverlapping(v.as_ptr(), addr as *mut u8, v.len());
+            }
+            var_addrs.push(addr);
+        }
+
+        // The PKRU write that actually drops access — the cheap part.
+        let key = {
+            let cache = self.cache.lock().unwrap();
+            cache.entries[idx].key
+        };
+        let old_pkru = mpk::pkru_read();
+        mpk::pkru_write(&self.charger, mpk::pkru_allow_only(&[key, KEY_SHM]));
+        self.charger.charge_ns(self.charger.cost.sandbox_enter_extra_ns);
+
+        // Install the simulated-MMU windows: argument region + temp heap.
+        simproc::push_sandbox(vec![
+            Window { lo: region.lo, hi: region.hi },
+            Window { lo: temp.base(), hi: temp.base() + temp.len() },
+        ]);
+
+        Ok(SandboxGuard {
+            mgr: Arc::clone(self),
+            entry_idx: idx,
+            temp,
+            region,
+            old_pkru,
+            var_addrs,
+            ended: false,
+        })
+    }
+
+    /// Find or build a cache entry for `region`. Cached hit = cheap;
+    /// miss = key reassignment + temp-heap setup (the 25µs-class path).
+    fn acquire_entry(&self, region: KeyRegion) -> Result<(usize, Arc<Scope>)> {
+        let mut cache = self.cache.lock().unwrap();
+        loop {
+            // Cached sandbox with a pre-assigned key for this region?
+            if let Some(i) = cache
+                .entries
+                .iter()
+                .position(|e| e.region == region && !e.in_use)
+            {
+                cache.entries[i].in_use = true;
+                cache.hits += 1;
+                return Ok((i, Arc::clone(&cache.entries[i].temp)));
+            }
+            // Room to create a new cached sandbox?
+            if cache.entries.len() < self.keys.sandbox_key_budget() {
+                match self.keys.assign(region) {
+                    Ok(key) => {
+                        let temp = Arc::new(Scope::create(&self.heap, TEMP_HEAP_BYTES)?);
+                        self.charger.charge_ns(self.charger.cost.sandbox_heap_setup_ns);
+                        cache.misses += 1;
+                        cache.entries.push(CacheEntry { key, region, temp: Arc::clone(&temp), in_use: true });
+                        return Ok((cache.entries.len() - 1, temp));
+                    }
+                    Err(_) => { /* fall through to reuse */ }
+                }
+            }
+            // Reuse an idle entry's key (uncached slow path).
+            if let Some(i) = cache.entries.iter().position(|e| !e.in_use) {
+                let key = cache.entries[i].key;
+                self.keys.reassign(key, region)?;
+                self.charger.charge_ns(self.charger.cost.sandbox_heap_setup_ns);
+                cache.misses += 1;
+                cache.entries[i].region = region;
+                cache.entries[i].in_use = true;
+                cache.entries[i].temp.reset();
+                return Ok((i, Arc::clone(&cache.entries[i].temp)));
+            }
+            // All 14 sandboxes are mid-RPC: wait for one to end
+            // (paper: "RPCool waits for an existing sandbox to end").
+            cache = self.freed.wait(cache).unwrap();
+        }
+    }
+
+    fn end(&self, idx: usize, old_pkru: u32) {
+        // Restore PKRU (cheap) and release the entry. Temp-heap
+        // contents are lost, as the paper specifies.
+        mpk::pkru_write(&self.charger, old_pkru);
+        self.charger.charge_ns(self.charger.cost.sandbox_exit_extra_ns);
+        simproc::pop_sandbox();
+        let mut cache = self.cache.lock().unwrap();
+        cache.entries[idx].in_use = false;
+        cache.entries[idx].temp.reset();
+        self.freed.notify_one();
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    pub fn keys(&self) -> &Arc<KeyTable> {
+        &self.keys
+    }
+}
+
+/// RAII sandbox: drop = `SB_END`.
+pub struct SandboxGuard {
+    mgr: Arc<SandboxMgr>,
+    entry_idx: usize,
+    temp: Arc<Scope>,
+    region: KeyRegion,
+    old_pkru: u32,
+    var_addrs: Vec<usize>,
+    ended: bool,
+}
+
+impl SandboxGuard {
+    /// The sandboxed window (page-expanded argument region).
+    pub fn region(&self) -> KeyRegion {
+        self.region
+    }
+
+    /// The temp heap: in-sandbox `malloc`/`free` target.
+    pub fn temp(&self) -> &Scope {
+        &self.temp
+    }
+
+    /// In-sandbox address of the i-th copied-in private variable.
+    pub fn var_addr(&self, i: usize) -> usize {
+        self.var_addrs[i]
+    }
+
+    /// Typed view of a copied-in private variable.
+    pub fn var<T: Pod>(&self, i: usize) -> ShmPtr<T> {
+        ShmPtr::from_addr(self.var_addrs[i])
+    }
+
+    /// Allocate inside the sandbox (redirected malloc).
+    pub fn malloc(&self, size: usize) -> Result<usize> {
+        self.temp.alloc_bytes(size)
+    }
+
+    /// Explicit `SB_END` (drop does the same).
+    pub fn end(mut self) {
+        self.end_inner();
+    }
+
+    fn end_inner(&mut self) {
+        if !self.ended {
+            self.ended = true;
+            self.mgr.end(self.entry_idx, self.old_pkru);
+        }
+    }
+}
+
+impl Drop for SandboxGuard {
+    fn drop(&mut self) {
+        self.end_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::containers::ShmList;
+    use crate::memory::pool::Pool;
+
+    fn mgr() -> (Arc<Pool>, Arc<Heap>, Arc<SandboxMgr>) {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "sb", 16 << 20).unwrap();
+        let m = SandboxMgr::new(&cfg, Arc::clone(&heap), Arc::clone(&pool.charger));
+        (pool, heap, m)
+    }
+
+    #[test]
+    fn sandbox_allows_region_denies_outside() {
+        simproc::set_enforcement(true);
+        let (_p, heap, m) = mgr();
+        let scope = Scope::create(&heap, 8192).unwrap();
+        let inside = scope.new_val(123u64).unwrap();
+        let outside = heap.new_val(456u64).unwrap();
+        {
+            let _g = m.begin(scope.base(), scope.len()).unwrap();
+            let pi: ShmPtr<u64> = ShmPtr::from_addr(inside);
+            let po: ShmPtr<u64> = ShmPtr::from_addr(outside);
+            assert_eq!(pi.read().unwrap(), 123);
+            assert!(po.read().is_err(), "outside-sandbox read must fail");
+        }
+        // After SB_END everything is accessible again.
+        let po: ShmPtr<u64> = ShmPtr::from_addr(outside);
+        assert_eq!(po.read().unwrap(), 456);
+    }
+
+    #[test]
+    fn wild_pointer_attack_is_caught() {
+        // Paper §4.3: a malicious list whose tail points at a server
+        // secret. Traversal inside the sandbox must error, not leak.
+        simproc::set_enforcement(true);
+        let (_p, heap, m) = mgr();
+        let scope = Scope::create(&heap, 8192).unwrap();
+        let mut list: ShmList<u64> = ShmList::new();
+        for i in 0..5 {
+            list.push_back(&scope, i).unwrap();
+        }
+        // "Secret" outside the scope (server's part of the heap).
+        let secret = heap.new_val(0x5EC12E7u64).unwrap();
+        list.corrupt_tail(secret).unwrap();
+        let g = m.begin(scope.base(), scope.len()).unwrap();
+        let res = list.iter_collect();
+        assert!(res.is_err(), "traversal must hit the sandbox wall");
+        drop(g);
+        // Outside the sandbox the (trusted-mode) traversal reads 6 values.
+        assert_eq!(list.iter_collect().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn cached_sandbox_reuse_hits() {
+        let (_p, heap, m) = mgr();
+        let scope = Scope::create(&heap, 4096).unwrap();
+        for _ in 0..10 {
+            let g = m.begin(scope.base(), scope.len()).unwrap();
+            drop(g);
+        }
+        let (hits, misses) = m.cache_stats();
+        assert_eq!(misses, 1, "only the first entry builds a sandbox");
+        assert_eq!(hits, 9);
+    }
+
+    #[test]
+    fn uncached_reassigns_keys_beyond_14() {
+        let (_p, heap, m) = mgr();
+        let scopes: Vec<Scope> =
+            (0..20).map(|_| Scope::create(&heap, 4096).unwrap()).collect();
+        for s in &scopes {
+            let g = m.begin(s.base(), s.len()).unwrap();
+            drop(g);
+        }
+        let (_hits, misses) = m.cache_stats();
+        assert_eq!(misses, 20);
+        assert!(m.keys().reassignments() >= 6, "demand beyond 14 keys reassigns");
+    }
+
+    #[test]
+    fn temp_heap_malloc_and_reset() {
+        simproc::set_enforcement(true);
+        let (_p, heap, m) = mgr();
+        let scope = Scope::create(&heap, 4096).unwrap();
+        let addr;
+        {
+            let g = m.begin(scope.base(), scope.len()).unwrap();
+            addr = g.malloc(64).unwrap();
+            // Temp heap is accessible inside the sandbox.
+            let p: ShmPtr<u64> = ShmPtr::from_addr(addr);
+            p.write(77).unwrap();
+            assert_eq!(p.read().unwrap(), 77);
+        }
+        // After SB_END the temp heap was reset: next sandbox reuses it.
+        {
+            let g = m.begin(scope.base(), scope.len()).unwrap();
+            let addr2 = g.malloc(64).unwrap();
+            assert_eq!(addr, addr2, "temp heap reset ⇒ same first allocation");
+        }
+    }
+
+    #[test]
+    fn private_vars_copied_in() {
+        simproc::set_enforcement(true);
+        let (_p, heap, m) = mgr();
+        let scope = Scope::create(&heap, 4096).unwrap();
+        let private_counter = 9912u64;
+        let g = m
+            .begin_with_vars(scope.base(), scope.len(), &[&private_counter.to_le_bytes()])
+            .unwrap();
+        let v: ShmPtr<u64> = g.var(0);
+        assert_eq!(v.read().unwrap(), 9912);
+    }
+
+    #[test]
+    fn concurrent_sandboxes_on_distinct_threads() {
+        // MPK perms are per-thread: multiple in-flight sandboxed RPCs.
+        let (_p, heap, m) = mgr();
+        let scopes: Vec<Scope> =
+            (0..4).map(|_| Scope::create(&heap, 4096).unwrap()).collect();
+        std::thread::scope(|s| {
+            for sc in &scopes {
+                let m = Arc::clone(&m);
+                let base = sc.base();
+                let len = sc.len();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let g = m.begin(base, len).unwrap();
+                        drop(g);
+                    }
+                });
+            }
+        });
+        let (hits, misses) = m.cache_stats();
+        assert_eq!(hits + misses, 200);
+    }
+}

@@ -1,0 +1,425 @@
+//! Sealing: preventing sender-side concurrent modification of
+//! in-flight RPC arguments (paper §4.5, §5.3).
+//!
+//! Protocol reproduced from the paper's Figure 8:
+//!  1. sender `seal()` (simulated syscall): kernel writes a *seal
+//!     descriptor* into a sender-read-only circular buffer in shared
+//!     memory, then flips the argument pages read-only in the sender's
+//!     address space;
+//!  2. receiver verifies the seal by reading the descriptor
+//!     (`verify`), processes the RPC, and marks it complete;
+//!  3. sender `release()`: its kernel checks the descriptor is
+//!     COMPLETE (only the receiver can set that — asymmetric mapping),
+//!     then restores write permission, paying PTE flips + a TLB
+//!     shootdown.
+//!
+//! `release()`'s TLB shootdown is the expensive part, so `ScopePool`
+//! implements the paper's batched release: completed scopes accumulate
+//! and are released together, amortizing one shootdown across the
+//! batch (threshold 1024 by default).
+
+use crate::config::SimConfig;
+use crate::error::{Result, RpcError};
+use crate::memory::heap::{Heap, ProcId};
+use crate::memory::pool::Charger;
+use crate::memory::scope::Scope;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Descriptor states (stored in shared memory).
+pub const DESC_FREE: u32 = 0;
+pub const DESC_SEALED: u32 = 1;
+pub const DESC_COMPLETE: u32 = 2;
+
+/// One seal descriptor in the shared circular buffer. The region is
+/// mapped read-only for the sender and read-write for the receiver;
+/// the simulation enforces that discipline through this API (the
+/// sender-side kernel writes descriptors, the receiver marks
+/// completion).
+#[repr(C)]
+struct SealDescriptor {
+    state: AtomicU32,
+    _pad: u32,
+    start: u64,
+    len: u64,
+}
+
+/// The descriptor circular buffer, resident in the connection heap.
+pub struct SealRing {
+    base: usize,
+    n: usize,
+    next: AtomicU64,
+}
+
+impl SealRing {
+    pub fn create(heap: &Arc<Heap>, n: usize) -> Result<SealRing> {
+        let n = n.next_power_of_two().max(8);
+        let bytes = n * std::mem::size_of::<SealDescriptor>();
+        let base = heap.alloc_bytes(bytes)?;
+        unsafe { std::ptr::write_bytes(base as *mut u8, 0, bytes) };
+        Ok(SealRing { base, n, next: AtomicU64::new(0) })
+    }
+
+    #[inline]
+    fn desc(&self, idx: u64) -> &SealDescriptor {
+        let slot = (idx as usize) & (self.n - 1);
+        unsafe { &*((self.base + slot * std::mem::size_of::<SealDescriptor>()) as *const SealDescriptor) }
+    }
+
+    /// Claim the next descriptor slot (sender-kernel side).
+    fn alloc(&self) -> Result<u64> {
+        // Bounded retry: if the ring wraps onto a still-sealed slot the
+        // application has too many in-flight seals.
+        for _ in 0..self.n {
+            let idx = self.next.fetch_add(1, Ordering::Relaxed);
+            let d = self.desc(idx);
+            if d
+                .state
+                .compare_exchange(DESC_FREE, DESC_SEALED, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Ok(idx);
+            }
+        }
+        Err(RpcError::SealInvalid("descriptor ring exhausted (too many in-flight seals)".into()))
+    }
+}
+
+/// An active seal, as held by the sender. Released via `Sealer`.
+#[derive(Clone, Copy, Debug)]
+pub struct SealHandle {
+    pub idx: u64,
+    pub start: usize,
+    pub len: usize,
+    pub proc: ProcId,
+}
+
+/// Per-endpoint sealing facility (wraps the simulated kernel's
+/// `seal()`/`release()` syscalls for one connection heap).
+pub struct Sealer {
+    heap: Arc<Heap>,
+    charger: Arc<Charger>,
+    ring: SealRing,
+    page: usize,
+}
+
+impl Sealer {
+    pub fn new(cfg: &SimConfig, heap: Arc<Heap>, charger: Arc<Charger>) -> Result<Arc<Sealer>> {
+        let ring = SealRing::create(&heap, 4096)?;
+        Ok(Arc::new(Sealer { heap, charger, ring, page: cfg.page_bytes }))
+    }
+
+    #[inline]
+    fn pages(&self, start: usize, len: usize) -> u64 {
+        let lo = start & !(self.page - 1);
+        let hi = (start + len).div_ceil(self.page) * self.page;
+        ((hi - lo) / self.page) as u64
+    }
+
+    /// The `seal()` syscall: write descriptor, flip PTEs read-only.
+    pub fn seal(&self, start: usize, len: usize, proc: ProcId) -> Result<SealHandle> {
+        let c = &self.charger;
+        c.charge_ns(c.cost.seal_syscall_ns + self.pages(start, len) * c.cost.pte_flip_per_page_ns);
+        let idx = self.ring.alloc()?;
+        let d = self.ring.desc(idx);
+        // Kernel writes descriptor fields before publishing state.
+        unsafe {
+            let dm = d as *const SealDescriptor as *mut SealDescriptor;
+            (*dm).start = start as u64;
+            (*dm).len = len as u64;
+        }
+        d.state.store(DESC_SEALED, Ordering::Release);
+        self.heap.seal_range(start, len, proc);
+        Ok(SealHandle { idx, start, len, proc })
+    }
+
+    /// Receiver-side verification (`rpc_call::isSealed()`): read the
+    /// descriptor over CXL and check it covers the argument range.
+    pub fn verify(&self, idx: u64, start: usize, len: usize) -> bool {
+        self.charger.charge_cxl_load();
+        let d = self.ring.desc(idx);
+        if d.state.load(Ordering::Acquire) != DESC_SEALED {
+            return false;
+        }
+        let ds = d.start as usize;
+        let de = ds + d.len as usize;
+        ds <= start && start + len <= de
+    }
+
+    /// Receiver marks the RPC complete (receiver has RW on the ring).
+    pub fn complete(&self, idx: u64) {
+        let d = self.ring.desc(idx);
+        d.state.store(DESC_COMPLETE, Ordering::Release);
+    }
+
+    /// The `release()` syscall: kernel refuses unless COMPLETE, then
+    /// restores write access (PTE flips + TLB shootdown).
+    pub fn release(&self, h: SealHandle) -> Result<()> {
+        let d = self.ring.desc(h.idx);
+        if d.state.load(Ordering::Acquire) != DESC_COMPLETE {
+            return Err(RpcError::ReleaseDenied(h.idx));
+        }
+        let c = &self.charger;
+        c.charge_ns(
+            c.cost.seal_syscall_ns
+                + self.pages(h.start, h.len) * c.cost.pte_flip_per_page_ns
+                + c.cost.tlb_shootdown_ns,
+        );
+        self.heap.unseal_range(h.start, h.len, h.proc);
+        d.state.store(DESC_FREE, Ordering::Release);
+        Ok(())
+    }
+
+    /// Batched release: one syscall + one TLB shootdown for the whole
+    /// batch (paper §5.3 "Optimizing Sealing").
+    pub fn release_batch(&self, hs: &[SealHandle]) -> Result<()> {
+        if hs.is_empty() {
+            return Ok(());
+        }
+        // Verify all are complete first — a single incomplete RPC
+        // blocks the batch (callers may fall back to single release).
+        for h in hs {
+            if self.ring.desc(h.idx).state.load(Ordering::Acquire) != DESC_COMPLETE {
+                return Err(RpcError::ReleaseDenied(h.idx));
+            }
+        }
+        let c = &self.charger;
+        let total_pages: u64 = hs.iter().map(|h| self.pages(h.start, h.len)).sum();
+        c.charge_ns(
+            c.cost.seal_syscall_ns
+                + total_pages * c.cost.pte_flip_per_page_ns
+                + c.cost.tlb_shootdown_ns,
+        );
+        for h in hs {
+            self.heap.unseal_range(h.start, h.len, h.proc);
+            self.ring.desc(h.idx).state.store(DESC_FREE, Ordering::Release);
+        }
+        Ok(())
+    }
+
+    pub fn heap(&self) -> &Arc<Heap> {
+        &self.heap
+    }
+}
+
+// ------------------------------------------------------------ scope pool
+
+/// A pooled scope checked out of a `ScopePool`.
+pub struct PooledScope {
+    pub scope: Scope,
+}
+
+/// Scope pool with batched seal release (paper §5.3): pop a scope,
+/// build arguments, send sealed; on completion hand the scope back
+/// with its seal handle — the pool releases seals in batches, and only
+/// then do scopes become reusable.
+pub struct ScopePool {
+    heap: Arc<Heap>,
+    sealer: Arc<Sealer>,
+    scope_bytes: usize,
+    threshold: usize,
+    free: Mutex<Vec<Scope>>,
+    pending: Mutex<Vec<(Scope, SealHandle)>>,
+    flushes: AtomicU64,
+}
+
+impl ScopePool {
+    pub fn new(
+        heap: Arc<Heap>,
+        sealer: Arc<Sealer>,
+        scope_bytes: usize,
+        threshold: usize,
+    ) -> Arc<ScopePool> {
+        Arc::new(ScopePool {
+            heap,
+            sealer,
+            scope_bytes,
+            threshold: threshold.max(1),
+            free: Mutex::new(Vec::new()),
+            pending: Mutex::new(Vec::new()),
+            flushes: AtomicU64::new(0),
+        })
+    }
+
+    /// Pop a scope (allocating if the pool is dry).
+    pub fn pop(&self) -> Result<Scope> {
+        if let Some(s) = self.free.lock().unwrap().pop() {
+            return Ok(s);
+        }
+        Scope::create(&self.heap, self.scope_bytes)
+    }
+
+    /// Return a scope whose seal is complete; released in a batch once
+    /// the threshold accumulates.
+    pub fn push_sealed(&self, scope: Scope, handle: SealHandle) -> Result<()> {
+        let flush = {
+            let mut pending = self.pending.lock().unwrap();
+            pending.push((scope, handle));
+            pending.len() >= self.threshold
+        };
+        if flush {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Return an unsealed scope directly to the free list.
+    pub fn push(&self, scope: Scope) {
+        scope.reset();
+        self.free.lock().unwrap().push(scope);
+    }
+
+    /// Release every pending seal in one batch.
+    pub fn flush(&self) -> Result<()> {
+        let drained: Vec<(Scope, SealHandle)> =
+            { self.pending.lock().unwrap().drain(..).collect() };
+        if drained.is_empty() {
+            return Ok(());
+        }
+        let handles: Vec<SealHandle> = drained.iter().map(|(_, h)| *h).collect();
+        self.sealer.release_batch(&handles)?;
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        let mut free = self.free.lock().unwrap();
+        for (scope, _) in drained {
+            scope.reset();
+            free.push(scope);
+        }
+        Ok(())
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.flushes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::pool::Pool;
+    use crate::memory::ptr::ShmPtr;
+    use crate::simproc;
+
+    fn setup() -> (Arc<Pool>, Arc<Heap>, Arc<Sealer>) {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "seal", 32 << 20).unwrap();
+        let sealer = Sealer::new(&cfg, Arc::clone(&heap), Arc::clone(&pool.charger)).unwrap();
+        (pool, heap, sealer)
+    }
+
+    #[test]
+    fn seal_protocol_happy_path() {
+        simproc::set_enforcement(true);
+        let (_p, heap, sealer) = setup();
+        let scope = Scope::create(&heap, 4096).unwrap();
+        let arg = scope.new_val(41u64).unwrap();
+        simproc::with_identity(5, 0, || {
+            let h = sealer.seal(scope.base(), scope.len(), 5).unwrap();
+            // Sender can no longer write the argument.
+            let p: ShmPtr<u64> = ShmPtr::from_addr(arg);
+            assert!(p.write(99).is_err());
+            // Receiver verifies, processes, completes.
+            assert!(sealer.verify(h.idx, arg, 8));
+            sealer.complete(h.idx);
+            // Sender releases, write access restored.
+            sealer.release(h).unwrap();
+            assert!(p.write(99).is_ok());
+        });
+    }
+
+    #[test]
+    fn release_before_complete_denied() {
+        let (_p, heap, sealer) = setup();
+        let scope = Scope::create(&heap, 4096).unwrap();
+        let h = sealer.seal(scope.base(), scope.len(), 1).unwrap();
+        assert_eq!(sealer.release(h), Err(RpcError::ReleaseDenied(h.idx)));
+        sealer.complete(h.idx);
+        assert!(sealer.release(h).is_ok());
+    }
+
+    #[test]
+    fn verify_rejects_unsealed_and_uncovered() {
+        let (_p, heap, sealer) = setup();
+        let scope = Scope::create(&heap, 2 * 4096).unwrap();
+        assert!(!sealer.verify(3, scope.base(), 64), "nothing sealed yet");
+        let h = sealer.seal(scope.base(), 4096, 1).unwrap();
+        assert!(sealer.verify(h.idx, scope.base(), 4096));
+        assert!(
+            !sealer.verify(h.idx, scope.base(), 2 * 4096),
+            "args extend past the sealed range"
+        );
+        sealer.complete(h.idx);
+        sealer.release(h).unwrap();
+    }
+
+    #[test]
+    fn batch_release_amortizes_shootdowns() {
+        let (_p, heap, sealer) = setup();
+        let n = 64;
+        let mut handles = Vec::new();
+        let scopes: Vec<Scope> = (0..n).map(|_| Scope::create(&heap, 4096).unwrap()).collect();
+        for s in &scopes {
+            let h = sealer.seal(s.base(), s.len(), 1).unwrap();
+            sealer.complete(h.idx);
+            handles.push(h);
+        }
+        let before = heap.pool().charger.total_charged_ns();
+        sealer.release_batch(&handles).unwrap();
+        let batch_cost = heap.pool().charger.total_charged_ns() - before;
+        // One shootdown, not 64.
+        let single = CostModelProbe::single_release_cost(&sealer, &heap);
+        assert!(
+            batch_cost < single * n as u64 / 4,
+            "batch {batch_cost}ns should be ≪ {n}×single {single}ns"
+        );
+        assert_eq!(heap.sealed_count(), 0);
+    }
+
+    struct CostModelProbe;
+    impl CostModelProbe {
+        fn single_release_cost(sealer: &Arc<Sealer>, heap: &Arc<Heap>) -> u64 {
+            let s = Scope::create(heap, 4096).unwrap();
+            let h = sealer.seal(s.base(), s.len(), 2).unwrap();
+            sealer.complete(h.idx);
+            let before = heap.pool().charger.total_charged_ns();
+            sealer.release(h).unwrap();
+            heap.pool().charger.total_charged_ns() - before
+        }
+    }
+
+    #[test]
+    fn scope_pool_flushes_at_threshold() {
+        let (_p, heap, sealer) = setup();
+        let pool = ScopePool::new(Arc::clone(&heap), Arc::clone(&sealer), 4096, 8);
+        for i in 0..20 {
+            let scope = pool.pop().unwrap();
+            let h = sealer.seal(scope.base(), scope.len(), 1).unwrap();
+            sealer.complete(h.idx);
+            pool.push_sealed(scope, h).unwrap();
+            let _ = i;
+        }
+        assert_eq!(pool.flushes(), 2, "two threshold flushes at 8 and 16");
+        assert_eq!(pool.pending_len(), 4);
+        pool.flush().unwrap();
+        assert_eq!(pool.pending_len(), 0);
+        assert_eq!(heap.sealed_count(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_reuses_slots() {
+        let (_p, heap, sealer) = setup();
+        let scope = Scope::create(&heap, 4096).unwrap();
+        // Far more seals than ring slots; each released promptly.
+        for _ in 0..10_000 {
+            let h = sealer.seal(scope.base(), scope.len(), 1).unwrap();
+            sealer.complete(h.idx);
+            sealer.release(h).unwrap();
+        }
+        assert_eq!(heap.sealed_count(), 0);
+    }
+}

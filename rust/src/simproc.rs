@@ -1,0 +1,206 @@
+//! Simulated process/thread context.
+//!
+//! Real RPCool runs across OS processes on CXL-connected hosts; the
+//! simulation runs "procs" as threads of this process (DESIGN.md §6).
+//! Each thread carries a context naming the proc and host it belongs
+//! to, plus the thread's protection state: the simulated PKRU register
+//! and the active sandbox windows. `check_access` is the single
+//! enforcement hook the `ShmPtr`/container layer consults.
+//!
+//! Enforcement has two modes (config `enforce_protection`):
+//!  * enforced — every checked access consults sandbox + seal state
+//!    (unit/integration tests, functional runs);
+//!  * trusted — checks are skipped, as on real hardware where MPK/PTE
+//!    enforcement is free at access time (benchmarks).
+
+use crate::error::{Result, RpcError};
+use crate::memory::heap::{heap_for_addr, ProcId};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+/// Global enforcement switch (set by `Rack::new` from config).
+static ENFORCE: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enforcement(on: bool) {
+    ENFORCE.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enforcement_on() -> bool {
+    ENFORCE.load(Ordering::Relaxed)
+}
+
+/// An address window the current thread may touch while sandboxed.
+#[derive(Clone, Copy, Debug)]
+pub struct Window {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+#[derive(Default)]
+pub struct ThreadCtx {
+    pub proc: ProcId,
+    pub host: u32,
+    /// Active sandbox windows (empty = not sandboxed). Includes the
+    /// sandboxed region itself plus the sandbox temp heap.
+    pub sandbox_windows: Vec<Window>,
+    /// Depth of nested sandboxes (paper allows one per key; we track
+    /// nesting to catch unmatched SB_END).
+    pub sandbox_depth: u32,
+}
+
+thread_local! {
+    static CTX: RefCell<ThreadCtx> = RefCell::new(ThreadCtx::default());
+}
+
+static NEXT_PROC: AtomicU32 = AtomicU32::new(1);
+
+/// Allocate a fresh proc id (used by Rack when spawning procs).
+pub fn fresh_proc_id() -> ProcId {
+    NEXT_PROC.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Bind the current thread to a simulated proc/host.
+pub fn bind(proc: ProcId, host: u32) {
+    CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        c.proc = proc;
+        c.host = host;
+    });
+}
+
+pub fn current_proc() -> ProcId {
+    CTX.with(|c| c.borrow().proc)
+}
+
+pub fn current_host() -> u32 {
+    CTX.with(|c| c.borrow().host)
+}
+
+pub fn in_sandbox() -> bool {
+    CTX.with(|c| c.borrow().sandbox_depth > 0)
+}
+
+/// Install sandbox windows for this thread (called by `sandbox::SB_BEGIN`).
+pub fn push_sandbox(windows: Vec<Window>) {
+    CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        c.sandbox_windows = windows;
+        c.sandbox_depth += 1;
+    });
+}
+
+/// Remove sandbox windows (called by `sandbox::SB_END`).
+pub fn pop_sandbox() {
+    CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.sandbox_depth > 0 {
+            c.sandbox_depth -= 1;
+        }
+        if c.sandbox_depth == 0 {
+            c.sandbox_windows.clear();
+        }
+    });
+}
+
+/// The enforcement hook: may the current thread access
+/// `[addr, addr+len)`? `write` additionally consults seal state.
+///
+/// On real hardware the MPK/PTE check is performed by the MMU and a
+/// violation raises SIGSEGV; here it surfaces as an `Err` the RPC
+/// layer converts into an RPC error response (paper §5.2: "the process
+/// handles the signal and uses it to respond to the RPC").
+#[inline]
+pub fn check_access(addr: usize, len: usize, write: bool) -> Result<()> {
+    if !enforcement_on() {
+        return Ok(());
+    }
+    check_access_enforced(addr, len, write)
+}
+
+#[cold]
+fn sandbox_violation(addr: usize, w: &[Window]) -> RpcError {
+    let (lo, hi) = w.first().map(|w| (w.lo, w.hi)).unwrap_or((0, 0));
+    RpcError::SandboxViolation { addr, lo, hi }
+}
+
+fn check_access_enforced(addr: usize, len: usize, write: bool) -> Result<()> {
+    CTX.with(|c| {
+        let c = c.borrow();
+        if c.sandbox_depth > 0 {
+            let end = addr + len;
+            let ok = c.sandbox_windows.iter().any(|w| addr >= w.lo && end <= w.hi);
+            if !ok {
+                return Err(sandbox_violation(addr, &c.sandbox_windows));
+            }
+        }
+        if write {
+            if let Some(heap) = heap_for_addr(addr) {
+                heap.check_write(addr, len, c.proc)?;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Run `f` bound to (proc, host), restoring the previous binding after.
+pub fn with_identity<R>(proc: ProcId, host: u32, f: impl FnOnce() -> R) -> R {
+    let (old_p, old_h) = (current_proc(), current_host());
+    bind(proc, host);
+    let r = f();
+    bind(old_p, old_h);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::heap::Heap;
+    use crate::memory::pool::Pool;
+
+    #[test]
+    fn bind_and_identity() {
+        with_identity(42, 3, || {
+            assert_eq!(current_proc(), 42);
+            assert_eq!(current_host(), 3);
+        });
+    }
+
+    #[test]
+    fn sandbox_windows_deny_outside() {
+        set_enforcement(true);
+        push_sandbox(vec![Window { lo: 0x1000, hi: 0x2000 }]);
+        assert!(check_access(0x1800, 8, false).is_ok());
+        assert!(check_access(0x3000, 8, false).is_err());
+        assert!(check_access(0x1ff9, 8, false).is_err(), "straddles the boundary");
+        pop_sandbox();
+        assert!(check_access(0x3000, 8, false).is_ok());
+    }
+
+    #[test]
+    fn write_check_consults_seals() {
+        set_enforcement(true);
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "ctx", 1 << 20).unwrap();
+        let a = heap.alloc_bytes(64).unwrap();
+        with_identity(7, 0, || {
+            assert!(check_access(a, 8, true).is_ok());
+            heap.seal_range(a, 64, 7);
+            assert!(check_access(a, 8, true).is_err());
+            assert!(check_access(a, 8, false).is_ok(), "reads still allowed");
+            heap.unseal_range(a, 64, 7);
+        });
+    }
+
+    #[test]
+    fn nested_sandboxes_track_depth() {
+        push_sandbox(vec![Window { lo: 0, hi: usize::MAX }]);
+        push_sandbox(vec![Window { lo: 0, hi: usize::MAX }]);
+        assert!(in_sandbox());
+        pop_sandbox();
+        assert!(in_sandbox());
+        pop_sandbox();
+        assert!(!in_sandbox());
+    }
+}

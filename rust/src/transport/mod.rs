@@ -1,0 +1,27 @@
+//! Simulated network transports (DESIGN.md §1: the RDMA / TCP / UDS
+//! substitution).
+//!
+//! Every baseline RPC framework and RPCool's RDMA fallback move bytes
+//! through a `SimNic`: an in-process message queue that charges the
+//! calibrated wire costs (one-way latency + per-page bandwidth) of the
+//! link it models. Figure 1's RTT ladder (CXL < RDMA < TCP) comes from
+//! these models; the endpoint code on top is what differs per
+//! framework (serialization, framing, coherence).
+
+pub mod simnet;
+
+pub use simnet::{LinkKind, SimNic, SimNicPair};
+
+use crate::error::Result;
+
+/// A bidirectional byte transport between two endpoints.
+pub trait Transport: Send + Sync {
+    /// Send a message (blocking; charges wire costs).
+    fn send(&self, payload: &[u8]) -> Result<()>;
+    /// Receive the next message (blocking with timeout).
+    fn recv(&self, timeout: std::time::Duration) -> Result<Vec<u8>>;
+    /// Non-blocking receive.
+    fn try_recv(&self) -> Option<Vec<u8>>;
+    /// The link this transport models (for reporting).
+    fn kind(&self) -> LinkKind;
+}

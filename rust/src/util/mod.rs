@@ -1,0 +1,9 @@
+//! Small self-contained utilities: PRNG, calibrated spin-waits, and a
+//! mini property-testing kit (the offline build has no rand/proptest).
+
+pub mod prop;
+pub mod rng;
+pub mod spin;
+
+pub use rng::Rng;
+pub use spin::{spin_ns, spin_us};

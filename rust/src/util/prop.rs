@@ -1,0 +1,144 @@
+//! Minimal property-testing kit (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `cases` random inputs drawn from a
+//! generator; on failure it performs greedy shrinking via the
+//! generator's `shrink` hook and reports the minimal counterexample
+//! with the seed needed to replay it.
+
+use super::rng::Rng;
+
+/// A generator of random values with an optional shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs. Panics with the minimal
+/// counterexample (after greedy shrinking) on failure.
+pub fn forall<G: Gen>(name: &str, seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let min = shrink_loop(gen, v, &prop);
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}).\n  minimal counterexample: {min:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy descent: keep taking the first failing shrink candidate.
+    'outer: loop {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        return v;
+    }
+}
+
+/// u64 in [lo, hi], shrinking toward lo.
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range(self.0, self.1 + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of T with length in [0, max_len], shrinking by halving & element-drop.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let n = rng.next_below(self.max_len as u64 + 1) as usize;
+        (0..n).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        if v.len() > 1 {
+            let mut without_first = v.clone();
+            without_first.remove(0);
+            out.push(without_first);
+            let mut without_last = v.clone();
+            without_last.pop();
+            out.push(without_last);
+        }
+        out
+    }
+}
+
+/// Pairs.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", 1, 200, &PairGen(U64Range(0, 1000), U64Range(0, 1000)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        forall("lt-100", 2, 500, &U64Range(0, 10_000), |v| *v < 100);
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let mut rng = Rng::new(3);
+        let g = VecGen { elem: U64Range(0, 5), max_len: 7 };
+        for _ in 0..100 {
+            assert!(g.generate(&mut rng).len() <= 7);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Calibrated busy-wait used to charge simulated hardware costs.
+//!
+//! Every latency in the cost model (CXL far-load, RDMA wire time, TLB
+//! shootdown, PKRU write, ...) is *charged* by spinning the CPU for the
+//! modelled duration, so all measurements flow through the real
+//! measurement harness instead of being added up analytically. The spin
+//! is calibrated once per process against `Instant`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Iterations of the spin kernel per microsecond, calibrated lazily.
+static ITERS_PER_US: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn spin_kernel(iters: u64) -> u64 {
+    // A data-dependent chain the optimizer cannot collapse.
+    let mut x = 0x9E3779B97F4A7C15u64;
+    for i in 0..iters {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+        std::hint::black_box(x);
+    }
+    x
+}
+
+fn calibrate() -> u64 {
+    // Run the kernel long enough to dominate timer overhead, a few
+    // times, and keep the fastest (least-interrupted) run.
+    let mut best = u64::MAX;
+    for _ in 0..5 {
+        let iters = 2_000_000u64;
+        let t0 = Instant::now();
+        std::hint::black_box(spin_kernel(iters));
+        let el = t0.elapsed();
+        let per_us = (iters as f64 / el.as_secs_f64() / 1e6) as u64;
+        best = best.min(per_us.max(1));
+    }
+    best.max(1)
+}
+
+/// Iterations/us, calibrating on first use.
+pub fn iters_per_us() -> u64 {
+    let v = ITERS_PER_US.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let c = calibrate();
+    ITERS_PER_US.store(c, Ordering::Relaxed);
+    c
+}
+
+/// Busy-wait approximately `ns` nanoseconds.
+///
+/// Below ~100ns the spin-kernel granularity dominates; we fall through
+/// to a handful of iterations which is the right order of magnitude.
+#[inline]
+pub fn spin_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let iters = (iters_per_us().saturating_mul(ns)) / 1000;
+    std::hint::black_box(spin_kernel(iters.max(1)));
+}
+
+/// Busy-wait approximately `us` microseconds (checked against Instant
+/// for longer waits where drift would accumulate).
+pub fn spin_us(us: u64) {
+    if us >= 50 {
+        // Long waits: trust the clock, not the calibration.
+        let t0 = Instant::now();
+        let target = std::time::Duration::from_micros(us);
+        while t0.elapsed() < target {
+            std::hint::spin_loop();
+        }
+    } else {
+        spin_ns(us * 1000);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn calibration_is_positive() {
+        assert!(iters_per_us() > 0);
+    }
+
+    #[test]
+    fn spin_us_roughly_accurate() {
+        // warm up calibration
+        iters_per_us();
+        let t0 = Instant::now();
+        spin_us(200);
+        let el = t0.elapsed();
+        assert!(el >= Duration::from_micros(100), "spun only {el:?}");
+        assert!(el <= Duration::from_millis(50), "spun way too long {el:?}");
+    }
+
+    #[test]
+    fn spin_zero_is_free() {
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            spin_ns(0);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generators: YCSB A–F (Figs. 9–10), NoBench documents
+//! (Fig. 11), and the key-choice distributions underneath.
+
+pub mod nobench;
+pub mod ycsb;
+pub mod zipf;
+
+pub use nobench::{NoBench, NumRangeQuery};
+pub use ycsb::{Op, OpSpec, WorkloadKind, Ycsb};
+pub use zipf::{KeyDist, Zipfian};

@@ -1,0 +1,151 @@
+//! NoBench-style JSON document generator (Chasseur et al., WebDB'13)
+//! — the load generator the paper uses to populate CoolDB with 100K
+//! documents and drive 1K search queries (Figure 11).
+//!
+//! Documents follow NoBench's schema: common string/numeric/bool
+//! attributes, a dynamically-typed attribute, a nested array of
+//! strings, a nested object, and sparse attributes drawn from a wide
+//! space so most documents lack most of them.
+
+use crate::apps::doc::Val;
+use crate::util::rng::Rng;
+
+pub struct NoBench {
+    rng: Rng,
+    next_id: u64,
+}
+
+impl NoBench {
+    pub fn new(seed: u64) -> NoBench {
+        NoBench { rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// Generate the next document.
+    pub fn doc(&mut self) -> Val {
+        let id = self.next_id;
+        self.next_id += 1;
+        let r = &mut self.rng;
+
+        let mut fields: Vec<(String, Val)> = vec![
+            ("_id".into(), Val::Num(id as f64)),
+            ("str1".into(), Val::Str(r.alnum_string(12))),
+            ("str2".into(), Val::Str(format!("GROUP-{}", r.next_below(100)))),
+            ("num".into(), Val::Num(r.next_below(100_000) as f64)),
+            ("bool".into(), Val::Bool(r.chance(0.5))),
+        ];
+
+        // dyn1: dynamically typed (string or number).
+        fields.push((
+            "dyn1".into(),
+            if r.chance(0.5) {
+                Val::Str(r.alnum_string(8))
+            } else {
+                Val::Num(r.next_below(1000) as f64)
+            },
+        ));
+
+        // nested_arr: array of strings (variable length).
+        let alen = 1 + r.next_below(8) as usize;
+        fields.push((
+            "nested_arr".into(),
+            Val::Arr((0..alen).map(|_| Val::Str(r.alnum_string(6))).collect()),
+        ));
+
+        // nested_obj: object with two inner fields.
+        fields.push((
+            "nested_obj".into(),
+            Val::Obj(vec![
+                ("str".into(), Val::Str(r.alnum_string(10))),
+                ("num".into(), Val::Num(r.next_below(10_000) as f64)),
+            ]),
+        ));
+
+        // Sparse attributes: 10 of 1000 possible, clustered by id.
+        let cluster = (id % 100) * 10;
+        for j in 0..10 {
+            fields.push((
+                format!("sparse_{:03}", cluster + j),
+                Val::Str(r.alnum_string(8)),
+            ));
+        }
+
+        Val::Obj(fields)
+    }
+
+    /// Generate `n` documents keyed "key<id>".
+    pub fn corpus(&mut self, n: usize) -> Vec<(String, Val)> {
+        (0..n)
+            .map(|_| {
+                let d = self.doc();
+                let id = d.get("_id").and_then(Val::as_num).unwrap() as u64;
+                (format!("key{id}"), d)
+            })
+            .collect()
+    }
+}
+
+/// A NoBench-style search predicate: `num` within a range — the
+/// query shape of the paper's "search" phase.
+#[derive(Clone, Copy, Debug)]
+pub struct NumRangeQuery {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl NumRangeQuery {
+    pub fn random(rng: &mut Rng) -> NumRangeQuery {
+        let lo = rng.next_below(90_000) as f64;
+        NumRangeQuery { lo, hi: lo + 1000.0 }
+    }
+
+    pub fn matches(&self, doc: &Val) -> bool {
+        doc.get("num").and_then(Val::as_num).map(|n| n >= self.lo && n < self.hi).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn docs_have_nobench_schema() {
+        let mut g = NoBench::new(1);
+        let d = g.doc();
+        for key in ["_id", "str1", "str2", "num", "bool", "dyn1", "nested_arr", "nested_obj"] {
+            assert!(d.get(key).is_some(), "missing {key}");
+        }
+        // 8 common + 10 sparse
+        if let Val::Obj(f) = &d {
+            assert_eq!(f.len(), 18);
+        } else {
+            panic!("doc must be an object");
+        }
+    }
+
+    #[test]
+    fn ids_are_sequential_and_corpus_keys_match() {
+        let mut g = NoBench::new(2);
+        let c = g.corpus(100);
+        assert_eq!(c.len(), 100);
+        assert_eq!(c[37].0, "key37");
+        assert_eq!(c[37].1.get("_id").unwrap().as_num(), Some(37.0));
+    }
+
+    #[test]
+    fn sparse_attrs_are_sparse() {
+        let mut g = NoBench::new(3);
+        let docs = g.corpus(200);
+        let with_sparse_000 =
+            docs.iter().filter(|(_, d)| d.get("sparse_000").is_some()).count();
+        assert!(with_sparse_000 < 10, "sparse_000 in {with_sparse_000}/200 docs");
+    }
+
+    #[test]
+    fn range_query_selects_subset() {
+        let mut g = NoBench::new(4);
+        let docs = g.corpus(1000);
+        let q = NumRangeQuery { lo: 0.0, hi: 1000.0 };
+        let hits = docs.iter().filter(|(_, d)| q.matches(d)).count();
+        assert!(hits > 0 && hits < 100, "selectivity off: {hits}");
+    }
+}

@@ -1,0 +1,233 @@
+//! YCSB core workloads A–F (Cooper et al., SoCC'10) — the generator
+//! behind Figures 9 and 10.
+//!
+//! Paper setup: 100K keys loaded, 1M operations per workload.
+//! Memcached cannot run E (no SCAN); MongoDB runs all six.
+
+use crate::util::rng::Rng;
+use crate::workloads::zipf::KeyDist;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    Read,
+    Update,
+    Insert,
+    Scan { len: usize },
+    ReadModifyWrite,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    A, // 50/50 read/update, zipfian
+    B, // 95/5 read/update, zipfian
+    C, // 100 read, zipfian
+    D, // 95/5 read/insert, latest
+    E, // 95/5 scan/insert, zipfian
+    F, // 50/50 read/rmw, zipfian
+}
+
+impl WorkloadKind {
+    pub fn all() -> [WorkloadKind; 6] {
+        [
+            WorkloadKind::A,
+            WorkloadKind::B,
+            WorkloadKind::C,
+            WorkloadKind::D,
+            WorkloadKind::E,
+            WorkloadKind::F,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::A => "A",
+            WorkloadKind::B => "B",
+            WorkloadKind::C => "C",
+            WorkloadKind::D => "D",
+            WorkloadKind::E => "E",
+            WorkloadKind::F => "F",
+        }
+    }
+
+    pub fn has_scan(&self) -> bool {
+        matches!(self, WorkloadKind::E)
+    }
+}
+
+/// Operation stream for one workload.
+pub struct Ycsb {
+    kind: WorkloadKind,
+    dist: KeyDist,
+    rng: Rng,
+    /// Keys currently loaded (inserts grow it).
+    pub nkeys: u64,
+    pub value_len: usize,
+    max_scan: usize,
+}
+
+/// One concrete operation against keyspace key ids.
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub op: Op,
+    pub key: u64,
+}
+
+impl Ycsb {
+    pub fn new(kind: WorkloadKind, nkeys: u64, seed: u64) -> Ycsb {
+        let dist = match kind {
+            WorkloadKind::D => KeyDist::latest(nkeys),
+            _ => KeyDist::zipfian(nkeys),
+        };
+        Ycsb { kind, dist, rng: Rng::new(seed), nkeys, value_len: 100, max_scan: 100 }
+    }
+
+    /// YCSB key format.
+    pub fn key_name(id: u64) -> String {
+        format!("user{id:019}")
+    }
+
+    /// Deterministic value bytes for a key (load phase).
+    pub fn value_for(&mut self, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+
+    pub fn next_op(&mut self) -> OpSpec {
+        let p = self.rng.next_f64();
+        let (op, key) = match self.kind {
+            WorkloadKind::A => {
+                if p < 0.5 {
+                    (Op::Read, self.pick())
+                } else {
+                    (Op::Update, self.pick())
+                }
+            }
+            WorkloadKind::B => {
+                if p < 0.95 {
+                    (Op::Read, self.pick())
+                } else {
+                    (Op::Update, self.pick())
+                }
+            }
+            WorkloadKind::C => (Op::Read, self.pick()),
+            WorkloadKind::D => {
+                if p < 0.95 {
+                    (Op::Read, self.pick())
+                } else {
+                    (Op::Insert, self.insert_key())
+                }
+            }
+            WorkloadKind::E => {
+                if p < 0.95 {
+                    let len = 1 + self.rng.next_below(self.max_scan as u64) as usize;
+                    (Op::Scan { len }, self.pick())
+                } else {
+                    (Op::Insert, self.insert_key())
+                }
+            }
+            WorkloadKind::F => {
+                if p < 0.5 {
+                    (Op::Read, self.pick())
+                } else {
+                    (Op::ReadModifyWrite, self.pick())
+                }
+            }
+        };
+        OpSpec { op, key }
+    }
+
+    fn pick(&mut self) -> u64 {
+        self.dist.next(&mut self.rng, self.nkeys)
+    }
+
+    fn insert_key(&mut self) -> u64 {
+        let k = self.nkeys;
+        self.nkeys += 1;
+        k
+    }
+}
+
+/// Mix statistics (for tests and reporting).
+pub fn mix_of(kind: WorkloadKind, n: usize, seed: u64) -> std::collections::HashMap<&'static str, usize> {
+    let mut w = Ycsb::new(kind, 1000, seed);
+    let mut m = std::collections::HashMap::new();
+    for _ in 0..n {
+        let name = match w.next_op().op {
+            Op::Read => "read",
+            Op::Update => "update",
+            Op::Insert => "insert",
+            Op::Scan { .. } => "scan",
+            Op::ReadModifyWrite => "rmw",
+        };
+        *m.entry(name).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn share(m: &std::collections::HashMap<&str, usize>, k: &str, n: usize) -> f64 {
+        *m.get(k).unwrap_or(&0) as f64 / n as f64
+    }
+
+    #[test]
+    fn workload_a_is_50_50() {
+        let m = mix_of(WorkloadKind::A, 20_000, 1);
+        assert!((share(&m, "read", 20_000) - 0.5).abs() < 0.02);
+        assert!((share(&m, "update", 20_000) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn workload_b_reads_dominate() {
+        let m = mix_of(WorkloadKind::B, 20_000, 2);
+        assert!((share(&m, "read", 20_000) - 0.95).abs() < 0.01);
+    }
+
+    #[test]
+    fn workload_c_read_only() {
+        let m = mix_of(WorkloadKind::C, 5_000, 3);
+        assert_eq!(share(&m, "read", 5_000), 1.0);
+    }
+
+    #[test]
+    fn workload_d_inserts_grow_keyspace() {
+        let mut w = Ycsb::new(WorkloadKind::D, 1000, 4);
+        let n0 = w.nkeys;
+        for _ in 0..10_000 {
+            w.next_op();
+        }
+        assert!(w.nkeys > n0 + 300, "inserts grew only to {}", w.nkeys);
+    }
+
+    #[test]
+    fn workload_e_scans() {
+        let mut w = Ycsb::new(WorkloadKind::E, 1000, 5);
+        let mut scans = 0;
+        for _ in 0..1000 {
+            if let Op::Scan { len } = w.next_op().op {
+                assert!(len >= 1 && len <= 100);
+                scans += 1;
+            }
+        }
+        assert!(scans > 900);
+    }
+
+    #[test]
+    fn keys_within_space() {
+        for kind in WorkloadKind::all() {
+            let mut w = Ycsb::new(kind, 500, 6);
+            for _ in 0..5_000 {
+                let op = w.next_op();
+                assert!(op.key < w.nkeys, "{kind:?} key {} ≥ {}", op.key, w.nkeys);
+            }
+        }
+    }
+
+    #[test]
+    fn key_names_stable() {
+        assert_eq!(Ycsb::key_name(7), "user0000000000000000007");
+    }
+}

@@ -1,0 +1,165 @@
+//! Key-choice distributions for YCSB (Cooper et al., SoCC'10):
+//! scrambled Zipfian (the default "zipfian"), "latest", and uniform.
+//!
+//! The Zipfian sampler is the standard Gray et al. rejection-free
+//! construction used by the reference YCSB implementation, with FNV
+//! scrambling so hot keys are spread across the keyspace.
+
+use crate::util::rng::{mix64, Rng};
+
+pub const ZIPF_THETA: f64 = 0.99;
+
+/// Rejection-free Zipfian over [0, n).
+#[derive(Clone, Debug)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    zetan: f64,
+    zeta2: f64,
+    alpha: f64,
+    eta: f64,
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    // Direct sum; n ≤ a few million in our experiments.
+    let mut z = 0.0;
+    for i in 1..=n {
+        z += 1.0 / (i as f64).powf(theta);
+    }
+    z
+}
+
+impl Zipfian {
+    pub fn new(n: u64) -> Zipfian {
+        Self::with_theta(n, ZIPF_THETA)
+    }
+
+    pub fn with_theta(n: u64, theta: f64) -> Zipfian {
+        assert!(n > 0);
+        let zetan = zeta(n, theta);
+        let zeta2 = zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipfian { n, theta, zetan, zeta2, alpha, eta }
+    }
+
+    /// Next rank (0 = most popular).
+    pub fn next(&self, rng: &mut Rng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let v = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        v.min(self.n - 1)
+    }
+
+    #[inline]
+    pub fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+/// YCSB key-choice distributions.
+#[derive(Clone, Debug)]
+pub enum KeyDist {
+    Uniform { n: u64 },
+    /// Scrambled Zipfian: popular *ranks* hashed over the keyspace.
+    Zipfian(Zipfian),
+    /// "Latest": Zipfian biased toward the most recently inserted key.
+    Latest(Zipfian),
+}
+
+impl KeyDist {
+    pub fn uniform(n: u64) -> KeyDist {
+        KeyDist::Uniform { n }
+    }
+    pub fn zipfian(n: u64) -> KeyDist {
+        KeyDist::Zipfian(Zipfian::new(n))
+    }
+    pub fn latest(n: u64) -> KeyDist {
+        KeyDist::Latest(Zipfian::new(n))
+    }
+
+    /// Sample a key in [0, current_n).
+    pub fn next(&self, rng: &mut Rng, current_n: u64) -> u64 {
+        match self {
+            KeyDist::Uniform { .. } => rng.next_below(current_n.max(1)),
+            KeyDist::Zipfian(z) => {
+                let rank = z.next(rng);
+                mix64(rank) % current_n.max(1)
+            }
+            KeyDist::Latest(z) => {
+                let back = z.next(rng);
+                current_n.saturating_sub(1).saturating_sub(back % current_n.max(1))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipfian_is_skewed() {
+        let z = Zipfian::new(10_000);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0u64; 10_000];
+        for _ in 0..100_000 {
+            counts[z.next(&mut rng) as usize] += 1;
+        }
+        // Rank 0 should dominate; top-10 ranks take a large share.
+        let top10: u64 = counts[..10].iter().sum();
+        assert!(counts[0] > counts[100] * 5, "rank0={} rank100={}", counts[0], counts[100]);
+        assert!(top10 as f64 / 100_000.0 > 0.15, "top10 share {top10}");
+    }
+
+    #[test]
+    fn zipfian_within_bounds() {
+        let z = Zipfian::new(100);
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            assert!(z.next(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn scrambled_spreads_hotkeys() {
+        let d = KeyDist::zipfian(1000);
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            seen.insert(d.next(&mut rng, 1000));
+        }
+        // Scrambling must not collapse onto a handful of keys.
+        assert!(seen.len() > 100, "only {} distinct keys", seen.len());
+    }
+
+    #[test]
+    fn latest_prefers_recent() {
+        let d = KeyDist::latest(10_000);
+        let mut rng = Rng::new(4);
+        let mut newer = 0;
+        for _ in 0..10_000 {
+            if d.next(&mut rng, 10_000) >= 5_000 {
+                newer += 1;
+            }
+        }
+        assert!(newer > 7_000, "latest skew too weak: {newer}");
+    }
+
+    #[test]
+    fn uniform_covers_space() {
+        let d = KeyDist::uniform(100);
+        let mut rng = Rng::new(5);
+        let mut counts = [0u32; 100];
+        for _ in 0..100_000 {
+            counts[d.next(&mut rng, 100) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "uniform too lumpy");
+    }
+}

@@ -1,0 +1,269 @@
+//! Adversarial tests: the attack scenarios the paper's safety
+//! mechanisms exist to stop (§4.3–§4.5, §5.5). Every test stages an
+//! actual attack against a live server and asserts containment.
+
+use rpcool::channel::{ChannelOpts, Connection, Rpc, RpcServer};
+use rpcool::memory::{ShmList, ShmPtr};
+use rpcool::orchestrator::Acl;
+use rpcool::{Rack, RpcError, SimConfig};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// §4.3's headline attack: a linked list whose tail points at a
+/// secret inside the server's address space. The sandboxed handler
+/// must fail the traversal rather than aggregate the secret.
+#[test]
+fn linked_list_tail_aimed_at_server_secret() {
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "atk/list").unwrap();
+
+    // The server's "secret key" lives in the connection heap region
+    // the server uses for its own state (outside any argument scope).
+    let leaked = Arc::new(AtomicU64::new(0));
+    let l2 = Arc::clone(&leaked);
+    server.add(1, move |ctx| {
+        let list: ShmList<u64> = ctx.arg_ptr::<ShmList<u64>>().read()?;
+        let sum: u64 = list.iter_collect()?.iter().sum();
+        l2.store(sum, Ordering::Relaxed); // would include the secret
+        Ok(sum)
+    });
+    let t = server.spawn_listener();
+
+    let cenv = rack.proc_env(1);
+    let conn = Rpc::connect(&cenv, "atk/list").unwrap();
+    cenv.run(|| {
+        let secret_addr = conn.heap().new_val(0x5EC_0001u64).unwrap();
+        let scope = conn.create_scope(8192).unwrap();
+        let mut evil: ShmList<u64> = ShmList::new();
+        for i in 1..=3 {
+            evil.push_back(&scope, i).unwrap();
+        }
+        evil.corrupt_tail(secret_addr).unwrap();
+        let addr = scope.new_val(evil).unwrap();
+
+        // Without the sandbox the traversal would reach the secret;
+        // with it, the RPC returns a sandbox-violation error.
+        let r = conn.call_secure(1, &scope, addr, 64);
+        assert!(
+            matches!(r, Err(RpcError::SandboxViolation { .. })),
+            "attack must be contained: {r:?}"
+        );
+    });
+    assert_eq!(leaked.load(Ordering::Relaxed), 0, "secret must not be aggregated");
+    drop(conn);
+    server.stop();
+    t.join().unwrap();
+}
+
+/// §4.5: a sender mutating arguments mid-flight. With sealing the
+/// mutation is blocked; the unsealed control shows the race is real.
+#[test]
+fn toctou_argument_swap_blocked_by_seal() {
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "atk/toctou").unwrap();
+    // Validate-then-use handler: reads a length field twice.
+    server.add(1, |ctx| {
+        let p: ShmPtr<u64> = ctx.arg_ptr();
+        let validated = p.read()?;
+        if validated > 100 {
+            return Err(RpcError::Remote("rejected at validation".into()));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let used = p.read()?; // TOCTOU window
+        Ok((validated == used) as u64)
+    });
+    let t = server.spawn_listener();
+
+    let cenv = rack.proc_env(1);
+    let conn = Arc::new(Rpc::connect(&cenv, "atk/toctou").unwrap());
+    let scope = conn.create_scope(4096).unwrap();
+    let addr = scope.new_val(5u64).unwrap();
+
+    // Attacker thread flips the value during the handler's window.
+    let stop = Arc::new(AtomicU64::new(0));
+    let attacker = {
+        let stop = Arc::clone(&stop);
+        let env2 = cenv.clone();
+        std::thread::spawn(move || {
+            env2.enter();
+            let p: ShmPtr<u64> = ShmPtr::from_addr(addr);
+            while stop.load(Ordering::Acquire) == 0 {
+                let _ = p.write(10_000); // bypass validation if it lands
+                std::hint::spin_loop();
+            }
+        })
+    };
+
+    // Sealed call: the attacker cannot write; handler sees one value.
+    let stable = cenv.run(|| conn.call_sealed(1, &scope, addr, 8)).unwrap();
+    assert_eq!(stable, 1, "sealed argument must be immutable in flight");
+    stop.store(1, Ordering::Release);
+    attacker.join().unwrap();
+    drop(scope);
+    drop(conn);
+    server.stop();
+    t.join().unwrap();
+}
+
+/// A sender lying about a seal: FLAG_SEALED with a bogus descriptor
+/// index must be rejected by receiver-side verification (§5.3).
+#[test]
+fn forged_seal_descriptor_rejected() {
+    use rpcool::channel::ring::{FLAG_SEALED, SLOT_RESPONSE, ST_SEAL_INVALID};
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "atk/forge").unwrap();
+    server.add(1, |_| Ok(42));
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, "atk/forge").unwrap();
+    conn.attach_inline(&server);
+    cenv.enter();
+
+    // Handcraft a "sealed" request with a descriptor idx that was
+    // never sealed.
+    let arg = conn.heap().new_val(7u64).unwrap();
+    let ring = &conn.shared.ring;
+    let slot = ring.claim().unwrap();
+    ring.publish(slot, 1, FLAG_SEALED, 12345, arg, 8);
+    // Drive the server inline.
+    while ring.slot(slot).state.load(Ordering::Acquire) != SLOT_RESPONSE {
+        if let Some(i) = ring.take_request() {
+            server.core().handle_slot(&conn.shared, i);
+        }
+    }
+    let (status, _) = ring.consume(slot);
+    assert_eq!(status, ST_SEAL_INVALID, "forged seal must be refused");
+    drop(conn);
+    server.stop();
+}
+
+/// §5.5: applications may not mprotect connection-heap pages (that
+/// would let a sender unseal its own pages behind the kernel's back).
+#[test]
+fn app_mprotect_on_heap_denied() {
+    let rack = Rack::for_tests();
+    let daemon = rpcool::daemon::Daemon::new(0, Arc::clone(&rack.orch));
+    let heap = daemon.create_heap("atk/mprot", 1 << 20, 1).unwrap();
+    let e = daemon.try_app_mprotect(heap.base());
+    assert!(matches!(e, Err(RpcError::AccessDenied(_))));
+}
+
+/// ACL bypass attempt: a uid without connect permission.
+#[test]
+fn acl_gates_connection() {
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let mut opts = ChannelOpts::from_config(&rack.cfg);
+    let mut acl = Acl::private(senv.uid);
+    // Grant exactly one other uid.
+    let friend = rack.proc_env(1);
+    acl.grant(friend.uid, rpcool::orchestrator::Mode::RWC);
+    opts.acl = Some(acl);
+    let server = RpcServer::open(&senv, "atk/acl", opts).unwrap();
+    server.add(1, |_| Ok(0));
+    let _t = server.spawn_listener();
+
+    assert!(Connection::connect(&friend, "atk/acl").is_ok());
+    let stranger = rack.proc_env(2);
+    assert!(matches!(
+        Connection::connect(&stranger, "atk/acl"),
+        Err(RpcError::AccessDenied(_))
+    ));
+    server.stop();
+}
+
+/// Resource-exhaustion: a malicious client trying to hoard shared
+/// memory across many connections is stopped by the quota; a scope
+/// bomb inside one heap is stopped by heap exhaustion, not pool death.
+#[test]
+fn hoarding_and_scope_bombs_contained() {
+    let mut cfg = SimConfig::for_tests();
+    cfg.heap_bytes = 1 << 20;
+    cfg.quota_bytes = 4 << 20;
+    let rack = Rack::new(cfg);
+    let senv = rack.proc_env(0);
+    let mut servers = Vec::new();
+    for i in 0..8 {
+        let s = Rpc::open(&senv, &format!("atk/hoard{i}")).unwrap();
+        s.add(1, |_| Ok(0));
+        servers.push(s);
+    }
+    let attacker = rack.proc_env(1);
+    let mut conns = Vec::new();
+    let mut denied = false;
+    for i in 0..8 {
+        match Rpc::connect(&attacker, &format!("atk/hoard{i}")) {
+            Ok(c) => {
+                c.attach_inline(&servers[i]);
+                conns.push(c)
+            }
+            Err(RpcError::QuotaExceeded { .. }) => {
+                denied = true;
+                break;
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(denied, "quota must stop the hoarder");
+    assert!(conns.len() >= 2, "some connections must fit the quota");
+
+    // Scope bomb within one heap: exhausts that heap only.
+    let victim_conn = &conns[0];
+    let mut scopes = Vec::new();
+    loop {
+        match victim_conn.create_scope(64 * 1024) {
+            Ok(s) => scopes.push(s),
+            Err(RpcError::OutOfMemory { .. }) => break,
+            Err(e) => panic!("unexpected: {e}"),
+        }
+        assert!(scopes.len() < 1000, "heap must exhaust before the pool");
+    }
+    // Other connections still work.
+    attacker.run(|| conns[1].call(1, 0, 0)).unwrap();
+}
+
+/// Malicious *document*: a ShmVal whose string points at an arbitrary
+/// address. Sandboxed processing reports an error; the checked reads
+/// never touch the wild address unsandboxed either (bounds unknown).
+#[test]
+fn wild_document_string_contained() {
+    use rpcool::apps::doc::{ShmVal, TAG_STR};
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "atk/doc").unwrap();
+    server.add(1, |ctx| {
+        let doc: ShmVal = ctx.arg_ptr::<ShmVal>().read()?;
+        // Server tries to materialize the document (validation pass).
+        let v = doc.to_host()?;
+        Ok(v.weight() as u64)
+    });
+    let t = server.spawn_listener();
+    let cenv = rack.proc_env(1);
+    let conn = Rpc::connect(&cenv, "atk/doc").unwrap();
+    cenv.run(|| {
+        let scope = conn.create_scope(4096).unwrap();
+        // Build a string whose backing vector we then corrupt to point
+        // outside the sandbox (at the connection heap's private area).
+        let secret = conn.heap().new_val([0xABu8; 32]).unwrap();
+        let evil = ShmVal::str(&scope, "harmless").unwrap();
+        assert_eq!(evil.tag, TAG_STR);
+        let addr = scope.new_val(evil).unwrap();
+        unsafe {
+            // ShmVal.str's ShmVec data pointer is the first word of
+            // the struct after the tag/num fields; forge it to target
+            // the secret.
+            let sptr = (addr + std::mem::offset_of!(ShmVal, str)) as *mut usize;
+            *sptr = secret;
+        }
+        let r = conn.call_secure(1, &scope, addr, std::mem::size_of::<ShmVal>());
+        assert!(
+            matches!(r, Err(RpcError::SandboxViolation { .. })),
+            "forged string pointer must violate the sandbox: {r:?}"
+        );
+    });
+    drop(conn);
+    server.stop();
+    t.join().unwrap();
+}

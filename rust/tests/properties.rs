@@ -1,0 +1,294 @@
+//! Property-based tests over the coordinator's core invariants
+//! (mini-proptest from `rpcool::util::prop`): allocator soundness,
+//! seal state machine, DSM single-owner protocol, distribution
+//! bounds, and representation round-trips.
+
+use rpcool::apps::doc::Val;
+use rpcool::baselines::wire::Wire;
+use rpcool::config::SimConfig;
+use rpcool::dsm::{DsmState, NODE_CLIENT, NODE_SERVER};
+use rpcool::memory::{Heap, Pool, Scope};
+use rpcool::seal::Sealer;
+use rpcool::util::prop::{forall, Gen, PairGen, U64Range, VecGen};
+use rpcool::util::Rng;
+use rpcool::workloads::zipf::{KeyDist, Zipfian};
+use std::sync::Arc;
+
+fn pool() -> Arc<Pool> {
+    Pool::new(&SimConfig::for_tests()).unwrap()
+}
+
+// ---------------------------------------------------------- allocator
+
+/// Random alloc/free interleavings never hand out overlapping blocks
+/// and never lose memory permanently.
+#[test]
+fn prop_allocator_no_overlap_random_interleavings() {
+    let sizes = VecGen { elem: U64Range(1, 20_000), max_len: 120 };
+    forall("alloc-no-overlap", 0xA110C, 40, &sizes, |szs| {
+        let p = pool();
+        let h = Heap::new(&p, "prop", 8 << 20).unwrap();
+        let mut live: Vec<(usize, usize)> = Vec::new();
+        let mut rng = Rng::new(szs.len() as u64 + 1);
+        for &sz in szs {
+            let sz = sz as usize;
+            // Randomly free one live alloc ~40% of the time.
+            if !live.is_empty() && rng.chance(0.4) {
+                let i = rng.next_below(live.len() as u64) as usize;
+                let (addr, _) = live.swap_remove(i);
+                h.free_bytes(addr);
+            }
+            let Ok(addr) = h.alloc_bytes(sz) else { continue };
+            for &(b, bsz) in &live {
+                if addr < b + bsz && b < addr + sz {
+                    return false; // overlap!
+                }
+            }
+            live.push((addr, sz));
+        }
+        for (a, _) in live {
+            h.free_bytes(a);
+        }
+        h.live_allocs() == 0
+    });
+}
+
+/// Full free returns the heap to a state where the original largest
+/// allocation still fits (no permanent fragmentation from page-class
+/// allocs of the same sizes).
+#[test]
+fn prop_allocator_recovers_after_free() {
+    let sizes = VecGen { elem: U64Range(4_097, 100_000), max_len: 30 };
+    forall("alloc-recovers", 0xF4EE, 30, &sizes, |szs| {
+        let p = pool();
+        let h = Heap::new(&p, "prop2", 8 << 20).unwrap();
+        let before = h.free_page_bytes();
+        let mut live = Vec::new();
+        for &sz in szs {
+            if let Ok(a) = h.alloc_bytes(sz as usize) {
+                live.push(a);
+            }
+        }
+        for a in live {
+            h.free_bytes(a);
+        }
+        h.free_page_bytes() == before
+    });
+}
+
+// ---------------------------------------------------------- sealing
+
+/// Random seal/complete/release sequences: release only ever succeeds
+/// after complete; sealed ranges always block sender writes; the
+/// sealed-count returns to zero when every handle is released.
+#[test]
+fn prop_seal_state_machine() {
+    let ops = VecGen { elem: U64Range(0, 2), max_len: 60 };
+    forall("seal-fsm", 0x5EA1, 40, &ops, |ops| {
+        let cfg = SimConfig::for_tests();
+        let p = pool();
+        let h = Heap::new(&p, "seal", 8 << 20).unwrap();
+        let sealer = Sealer::new(&cfg, Arc::clone(&h), Arc::clone(&p.charger)).unwrap();
+        let scope = Scope::create(&h, 4096).unwrap();
+        let mut active: Vec<(rpcool::seal::SealHandle, bool)> = Vec::new();
+        for &op in ops {
+            match op {
+                0 => {
+                    // seal (limit in-flight to avoid ring pressure)
+                    if active.len() < 16 {
+                        let hdl = sealer.seal(scope.base(), scope.len(), 1).unwrap();
+                        if h.check_write(scope.base(), 8, 1).is_ok() {
+                            return false; // seal must block sender writes
+                        }
+                        active.push((hdl, false));
+                    }
+                }
+                1 => {
+                    // complete the oldest incomplete
+                    if let Some(e) = active.iter_mut().find(|e| !e.1) {
+                        sealer.complete(e.0.idx);
+                        e.1 = true;
+                    }
+                }
+                _ => {
+                    // try release the oldest
+                    if !active.is_empty() {
+                        let (hdl, completed) = active[0];
+                        let r = sealer.release(hdl);
+                        if completed != r.is_ok() {
+                            return false; // release iff completed
+                        }
+                        if r.is_ok() {
+                            active.remove(0);
+                        }
+                    }
+                }
+            }
+        }
+        // Drain.
+        for (hdl, completed) in active {
+            if !completed {
+                sealer.complete(hdl.idx);
+            }
+            sealer.release(hdl).unwrap();
+        }
+        h.sealed_count() == 0 && h.check_write(scope.base(), 8, 1).is_ok()
+    });
+}
+
+// ---------------------------------------------------------- DSM
+
+/// Random two-node access sequences: every page always has exactly one
+/// valid owner; a node that just ensured ownership reads its own
+/// writes; fault count equals actual ownership flips.
+#[test]
+fn prop_dsm_single_owner() {
+    let accesses = VecGen {
+        elem: PairGen(U64Range(0, 1), U64Range(0, 63)),
+        max_len: 200,
+    };
+    forall("dsm-single-owner", 0xD5A, 40, &accesses, |ops| {
+        let cfg = SimConfig::for_tests();
+        let p = pool();
+        let h = Heap::new(&p, "dsm", 64 * 4096).unwrap();
+        let d = DsmState::new(&h, cfg.page_bytes);
+        let mut owner = vec![NODE_CLIENT; 64];
+        let mut expected_faults = 0u64;
+        for &(node, page) in ops {
+            let node = if node == 0 { NODE_CLIENT } else { NODE_SERVER };
+            let addr = h.base() + page as usize * 4096;
+            let moved = d.ensure_owned(node, addr, 8).unwrap();
+            if owner[page as usize] != node {
+                expected_faults += 1;
+                if moved != 1 {
+                    return false;
+                }
+                owner[page as usize] = node;
+            } else if moved != 0 {
+                return false;
+            }
+        }
+        let (faults, pages) = d.stats();
+        d.owners_valid() && faults == expected_faults && pages == expected_faults
+    });
+}
+
+// ------------------------------------------------ distributions & misc
+
+#[test]
+fn prop_zipfian_in_bounds_any_n() {
+    forall("zipf-bounds", 0x21F, 60, &U64Range(1, 50_000), |&n| {
+        let z = Zipfian::new(n);
+        let mut rng = Rng::new(n ^ 7);
+        (0..500).all(|_| z.next(&mut rng) < n)
+    });
+}
+
+#[test]
+fn prop_keydist_latest_prefers_tail() {
+    forall("latest-tail", 0x1A7E57, 20, &U64Range(1_000, 100_000), |&n| {
+        let d = KeyDist::latest(n);
+        let mut rng = Rng::new(n);
+        let hits = (0..2_000).filter(|_| d.next(&mut rng, n) >= n / 2).count();
+        hits > 1_200
+    });
+}
+
+/// Host ⇄ wire ⇄ host round-trip for randomly generated documents.
+#[test]
+fn prop_doc_wire_roundtrip() {
+    struct DocGen;
+    impl Gen for DocGen {
+        type Value = Val;
+        fn generate(&self, rng: &mut Rng) -> Val {
+            random_doc(rng, 3)
+        }
+    }
+    forall("doc-wire-roundtrip", 0xD0C, 200, &DocGen, |doc| {
+        match Val::from_bytes(&doc.to_bytes()) {
+            Ok(back) => back == *doc,
+            Err(_) => false,
+        }
+    });
+}
+
+/// Host ⇄ shared-memory ⇄ host round-trip for random documents.
+#[test]
+fn prop_doc_shm_roundtrip() {
+    struct DocGen;
+    impl Gen for DocGen {
+        type Value = Val;
+        fn generate(&self, rng: &mut Rng) -> Val {
+            random_doc(rng, 3)
+        }
+    }
+    let p = pool();
+    let h = Heap::new(&p, "docs", 32 << 20).unwrap();
+    forall("doc-shm-roundtrip", 0x5D0C, 120, &DocGen, |doc| {
+        let Ok(shm) = doc.to_shm(h.as_ref()) else { return false };
+        let ok = matches!(shm.to_host(), Ok(back) if back == *doc);
+        let mut shm = shm;
+        shm.deep_free(h.as_ref()).unwrap();
+        ok
+    });
+}
+
+fn random_doc(rng: &mut Rng, depth: usize) -> Val {
+    match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+        0 => Val::Null,
+        1 => Val::Bool(rng.chance(0.5)),
+        2 => Val::Num(rng.next_f64() * 1e6),
+        3 => {
+            let n = rng.next_below(24) as usize;
+            Val::Str(rng.alnum_string(n))
+        }
+        4 => {
+            let n = rng.next_below(5) as usize;
+            Val::Arr((0..n).map(|_| random_doc(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.next_below(5) as usize;
+            Val::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), random_doc(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+/// Histogram percentiles are monotone and bounded by min/max.
+#[test]
+fn prop_histogram_percentiles_monotone() {
+    let samples = VecGen { elem: U64Range(1, 10_000_000), max_len: 300 };
+    forall("hist-monotone", 0x415, 60, &samples, |xs| {
+        if xs.is_empty() {
+            return true;
+        }
+        let h = rpcool::metrics::Histogram::new();
+        for &x in xs {
+            h.record_ns(x);
+        }
+        let p25 = h.percentile_ns(25.0);
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        p25 <= p50 && p50 <= p99 && p99 <= h.max_ns() * 2
+    });
+}
+
+/// Wire encoding round-trips arbitrary nested vectors of pairs.
+#[test]
+fn prop_wire_nested_roundtrip() {
+    let gen = VecGen {
+        elem: PairGen(U64Range(0, u64::MAX / 2), U64Range(0, 255)),
+        max_len: 64,
+    };
+    forall("wire-nested", 0x3172, 150, &gen, |v| {
+        let strings: Vec<(u64, String)> =
+            v.iter().map(|(a, b)| (*a, "x".repeat(*b as usize % 40))).collect();
+        matches!(
+            <Vec<(u64, String)> as Wire>::from_bytes(&strings.to_bytes()),
+            Ok(back) if back == strings
+        )
+    });
+}
