@@ -12,7 +12,7 @@
 use rpcool::baselines::netrpc::{pair, Flavor};
 use rpcool::baselines::zhang::ZhangClient;
 use rpcool::benchkit::{fmt_ns, time_op, Table};
-use rpcool::channel::{Connection, Rpc, TransportSel};
+use rpcool::channel::{CallOpts, Connection, Rpc, TransportSel};
 use rpcool::{Rack, SimConfig};
 use std::sync::Arc;
 
@@ -32,7 +32,7 @@ fn main() {
     conn.attach_inline(&server);
     cenv.enter();
     let (mean, _) = time_op(1000, n, false, || {
-        conn.call(1, 0, 0).unwrap();
+        conn.invoke(1, (), CallOpts::new()).unwrap();
     });
     table.row(&[
         "RPCool".into(),
@@ -45,7 +45,7 @@ fn main() {
     let scope = conn.create_scope(4096).unwrap();
     let addr = scope.new_val(0u64).unwrap();
     let (mean_sb, _) = time_op(1000, n / 2, false, || {
-        conn.call_secure(1, &scope, addr, 8).unwrap();
+        conn.invoke(1, (addr, 8), CallOpts::secure(&scope)).unwrap();
     });
     table.row(&[
         "RPCool (Seal+Sandbox)".into(),
@@ -70,7 +70,7 @@ fn main() {
     let scope = conn.create_scope(4096).unwrap();
     let addr = scope.new_val(0u64).unwrap();
     let (mean_rdma, _) = time_op(100, n / 10, false, || {
-        conn.call(1, addr, 8).unwrap();
+        conn.invoke(1, (addr, 8), CallOpts::new()).unwrap();
         // Touch the page client-side so the next call faults it back.
         rpcool::memory::ShmPtr::<u64>::from_addr(addr).write(1).unwrap();
     });

@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench table1b_ops` (add `-- --quick`).
 
 use rpcool::benchkit::{fmt_ns, time_op, Table};
-use rpcool::channel::{ChannelOpts, Connection, Rpc, RpcServer, TransportSel};
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc, RpcServer, TransportSel};
 use rpcool::memory::Scope;
 use rpcool::sandbox::SandboxMgr;
 use rpcool::seal::{ScopePool, Sealer};
@@ -36,14 +36,14 @@ fn main() {
         conn.attach_inline(&server);
         cenv.enter();
         let (m, _) = time_op(1000, n, false, || {
-            conn.call(1, 0, 0).unwrap();
+            conn.invoke(1, (), CallOpts::new()).unwrap();
         });
         t.row(&["No-op RPCool RPC (CXL)".into(), fmt_ns(m), "1.5 µs".into()]);
 
         let scope = conn.create_scope(4096).unwrap();
         let a = scope.new_val(0u64).unwrap();
         let (m, _) = time_op(1000, n / 4, false, || {
-            conn.call_secure(1, &scope, a, 8).unwrap();
+            conn.invoke(1, (a, 8), CallOpts::secure(&scope)).unwrap();
         });
         t.row(&["No-op Sealed+Sandboxed RPC (CXL, 1 page)".into(), fmt_ns(m), "2.6 µs".into()]);
         drop(scope);
@@ -61,7 +61,7 @@ fn main() {
         let scope = conn.create_scope(4096).unwrap();
         let a = scope.new_val(0u64).unwrap();
         let (m, _) = time_op(100, n / 20, false, || {
-            conn.call(1, a, 8).unwrap();
+            conn.invoke(1, (a, 8), CallOpts::new()).unwrap();
             rpcool::memory::ShmPtr::<u64>::from_addr(a).write(1).unwrap();
         });
         t.row(&["No-op RPCool RPC (RDMA)".into(), fmt_ns(m), "17.25 µs".into()]);
@@ -76,7 +76,8 @@ fn main() {
         let env = rack.proc_env(0);
         let mut i = 0;
         let (m, _) = time_op(0, reps, true, || {
-            let s = RpcServer::open(&env, &format!("t1b/ch{i}"), ChannelOpts::from_config(&rack.cfg))
+            let s = ChannelBuilder::from_config(&rack.cfg)
+                .open(&env, &format!("t1b/ch{i}"))
                 .unwrap();
             std::hint::black_box(&s);
             std::mem::forget(s); // destroy timed separately
@@ -86,7 +87,8 @@ fn main() {
 
         let servers: Vec<RpcServer> = (0..reps)
             .map(|j| {
-                RpcServer::open(&env, &format!("t1b/chd{j}"), ChannelOpts::from_config(&rack.cfg))
+                ChannelBuilder::from_config(&rack.cfg)
+                    .open(&env, &format!("t1b/chd{j}"))
                     .unwrap()
             })
             .collect();
@@ -96,7 +98,7 @@ fn main() {
         });
         t.row(&["Destroy Channel".into(), fmt_ns(m), "38.4 ms".into()]);
 
-        let server = RpcServer::open(&env, "t1b/conn", ChannelOpts::from_config(&rack.cfg)).unwrap();
+        let server = ChannelBuilder::from_config(&rack.cfg).open(&env, "t1b/conn").unwrap();
         server.add(1, |_| Ok(0));
         let reps = if quick { 2 } else { 5 };
         let mut conns = Vec::new();

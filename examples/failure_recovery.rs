@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example failure_recovery`
 
-use rpcool::channel::Rpc;
+use rpcool::channel::{CallOpts, Rpc};
 use rpcool::orchestrator::Notification;
 use rpcool::{Rack, SimConfig};
 use std::time::Duration;
@@ -19,17 +19,14 @@ fn main() -> rpcool::Result<()> {
     // Scenario (a): server crash orphans its heap (Fig. 5a).
     let server_env = rack.proc_env(0);
     let server = Rpc::open(&server_env, "fragile")?;
-    server.add(1, |ctx| {
-        let v: u64 = ctx.arg_val()?;
-        Ok(v * 2)
-    });
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v * 2));
     let listener = server.spawn_listener();
 
     let client_env = rack.proc_env(1);
     let conn = Rpc::connect(&client_env, "fragile")?;
     client_env.enter();
     let arg = conn.new_val(21u64)?;
-    println!("call before crash: 21*2 = {}", conn.call_ptr(1, arg)?);
+    println!("call before crash: 21*2 = {}", conn.invoke(1, arg, CallOpts::new())?);
     println!("live heaps: {}", rack.orch.live_heaps());
 
     // The server "crashes": its listener stops, its leases lapse.

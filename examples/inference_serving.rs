@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (DESIGN.md §3, EXPERIMENTS.md §e2e): load the
+//! END-TO-END DRIVER (DESIGN.md §3): load the
 //! AOT-compiled transformer (L2 JAX + L1 Pallas, exported as HLO
 //! text), serve it behind an RPCool channel (L3), and drive batched
 //! next-token requests from multiple clients — reporting latency

@@ -1,14 +1,16 @@
-//! Quickstart: the paper's Figure 6 ping-pong program, verbatim shape.
+//! Quickstart: the paper's Figure 6 ping-pong program, typed API.
 //!
 //! A server opens channel "mychannel" and registers `process_fn` under
-//! id 100; a client connects, builds a `string` in the connection's
-//! shared heap, and calls — the argument crosses as a native pointer,
-//! no serialization anywhere.
+//! id 100 with `serve::<ShmString, ShmString>`; a client connects,
+//! builds a `string` in the connection's shared heap, and calls with
+//! `call_typed` — the argument crosses as a native pointer, no
+//! serialization anywhere, and the reply comes back as a typed
+//! `Reply<ShmString>` (no raw address casts in this whole program).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use rpcool::channel::Rpc;
-use rpcool::memory::{ShmPtr, ShmString};
+use rpcool::channel::{CallOpts, Rpc};
+use rpcool::memory::ShmString;
 use rpcool::{Rack, SimConfig};
 
 fn main() -> rpcool::Result<()> {
@@ -18,11 +20,10 @@ fn main() -> rpcool::Result<()> {
     // --- Server (Fig. 6a) ---
     let server_env = rack.proc_env(0);
     let rpc = Rpc::open(&server_env, "mychannel")?;
-    rpc.add(100, |ctx| {
+    rpc.serve::<ShmString, ShmString>(100, |ctx, ping| {
         // process_fn: read the ping, answer with a heap-allocated pong.
-        let ping: ShmString = ctx.arg_val()?;
         assert!(ping.eq_str("ping"));
-        ctx.reply_string("pong")
+        ShmString::from_str(ctx.heap, "pong")
     });
     // --- Client (Fig. 6b) ---
     let client_env = rack.proc_env(1);
@@ -35,9 +36,8 @@ fn main() -> rpcool::Result<()> {
     let t0 = std::time::Instant::now();
     let n = 10_000;
     for _ in 0..n {
-        let arg = conn.new_string("ping")?;
-        let ret = conn.call_ptr(100, arg)?;
-        let pong: ShmString = ShmPtr::<ShmString>::from_addr(ret as usize).read()?;
+        let ping = ShmString::from_str(conn.heap().as_ref(), "ping")?;
+        let pong: ShmString = conn.call_typed(100, &ping, CallOpts::new())?.take()?;
         assert!(pong.eq_str("pong"));
     }
     let el = t0.elapsed();

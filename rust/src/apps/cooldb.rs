@@ -15,7 +15,7 @@
 use crate::apps::doc::{ShmVal, Val};
 use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
 use crate::baselines::wire::{Wire, WireBuf, WireCur};
-use crate::channel::{ChannelOpts, Connection, RpcServer, TransportSel};
+use crate::channel::{CallOpts, ChannelBuilder, Connection, Reply, RpcServer, TransportSel};
 use crate::error::{Result, RpcError};
 use crate::memory::containers::{ShmString, ShmVec};
 use crate::memory::pod::Pod;
@@ -68,15 +68,14 @@ unsafe impl Pod for SearchArg {}
 /// Open a CoolDB server over a channel-wide shared heap (clients
 /// allocate documents straight into it — Fig. 4b topology).
 pub fn serve_rpcool(env: &ProcEnv, name: &str, index: Arc<CoolIndex>) -> Result<RpcServer> {
-    let mut opts = ChannelOpts::from_config(&env.rack.cfg);
-    opts.shared_heap = true;
-    // Documents accumulate: give CoolDB a big heap.
-    opts.heap_bytes = opts.heap_bytes.max(192 << 20);
-    let server = RpcServer::open(env, name, opts)?;
+    let server = ChannelBuilder::for_env(env)
+        .shared_heap(true)
+        // Documents accumulate: give CoolDB a big heap.
+        .heap_bytes(env.rack.cfg.heap_bytes.max(192 << 20))
+        .open(env, name)?;
 
     let idx = Arc::clone(&index);
-    server.add(F_PUT, move |ctx| {
-        let arg: PutArg = ctx.arg_val()?;
+    server.serve_scalar::<PutArg>(F_PUT, move |_ctx, arg| {
         let key = arg.key.to_string()?;
         // Ownership transfer: CoolDB records the pointer. Zero copy.
         idx.map.write().unwrap().insert(key, arg.doc.addr());
@@ -85,17 +84,18 @@ pub fn serve_rpcool(env: &ProcEnv, name: &str, index: Arc<CoolIndex>) -> Result<
 
     let idx = Arc::clone(&index);
     server.add(F_GET, move |ctx| {
-        let key: ShmString = ctx.arg_val()?;
+        // Returns a *borrowed* pointer into CoolDB's shared state (the
+        // client must not free it); misses are the null reply.
+        let key: ShmString = ctx.arg_typed()?;
         let key = key.to_string()?;
         match idx.map.read().unwrap().get(&key) {
             Some(addr) => Ok(*addr as u64),
-            None => Ok(u64::MAX),
+            None => ctx.reply_none(),
         }
     });
 
     let idx = Arc::clone(&index);
-    server.add(F_SEARCH, move |ctx| {
-        let q: SearchArg = ctx.arg_val()?;
+    server.serve::<SearchArg, ShmVec<ShmPtr<ShmVal>>>(F_SEARCH, move |ctx, q| {
         // Walk every document tree in shared memory; collect pointers
         // to matches (the zero-serialization search path).
         let addrs: Vec<usize> = { idx.map.read().unwrap().values().copied().collect() };
@@ -112,7 +112,7 @@ pub fn serve_rpcool(env: &ProcEnv, name: &str, index: Arc<CoolIndex>) -> Result<
                 }
             }
         }
-        ctx.reply_val(hits)
+        Ok(hits)
     });
 
     Ok(server)
@@ -174,27 +174,22 @@ impl CoolClient for RpcoolCool {
                 key: ShmString::from_str(&scope, key)?,
                 doc: ShmPtr::from_addr(doc_addr),
             };
-            let a = scope.new_val(arg)?;
-            self.conn.call_secure(F_PUT, &scope, a, std::mem::size_of::<PutArg>())?;
+            self.conn.call_scalar(F_PUT, &arg, CallOpts::secure(&scope))?;
         } else {
             let arg = PutArg {
                 key: ShmString::from_str(heap.as_ref(), key)?,
                 doc: ShmPtr::from_addr(doc_addr),
             };
-            let a = heap.new_val(arg)?;
-            self.conn.call(F_PUT, a, std::mem::size_of::<PutArg>())?;
-            heap.free_bytes(a);
+            self.conn.call_scalar(F_PUT, &arg, CallOpts::new())?;
         }
         Ok(())
     }
 
     fn search(&self, q: NumRangeQuery) -> Result<usize> {
         let heap = self.conn.heap();
-        let a = heap.new_val(SearchArg { lo: q.lo, hi: q.hi })?;
-        let ret = self.conn.call(F_SEARCH, a, std::mem::size_of::<SearchArg>())?;
-        heap.free_bytes(a);
-        let mut hits: ShmVec<ShmPtr<ShmVal>> =
-            ShmPtr::<ShmVec<ShmPtr<ShmVal>>>::from_addr(ret as usize).read()?;
+        let reply: Reply<ShmVec<ShmPtr<ShmVal>>> =
+            self.conn.call_typed(F_SEARCH, &SearchArg { lo: q.lo, hi: q.hi }, CallOpts::new())?;
+        let mut hits = reply.read()?;
         let n = hits.len();
         // The client can dereference every hit directly — prove it by
         // touching the first one.
@@ -203,21 +198,19 @@ impl CoolClient for RpcoolCool {
             let _doc: ShmVal = first.read()?;
         }
         hits.destroy(heap.as_ref());
-        heap.free_bytes(ret as usize);
+        reply.free();
         Ok(n)
     }
 
     fn get_num(&self, key: &str) -> Result<Option<f64>> {
         let heap = self.conn.heap();
         let k = ShmString::from_str(heap.as_ref(), key)?;
-        let a = heap.new_val(k)?;
-        let ret = self.conn.call(F_GET, a, std::mem::size_of::<ShmString>())?;
-        heap.free_bytes(a);
-        if ret == u64::MAX {
-            return Ok(None);
+        // The reply borrows CoolDB's own document — read, never free.
+        let reply: Reply<ShmVal> = self.conn.call_typed(F_GET, &k, CallOpts::new())?;
+        match reply.opt()? {
+            None => Ok(None),
+            Some(doc) => Ok(doc.get("num")?.and_then(|v| v.as_num())),
         }
-        let doc: ShmVal = ShmPtr::<ShmVal>::from_addr(ret as usize).read()?;
-        Ok(doc.get("num")?.and_then(|v| v.as_num()))
     }
 
     fn transport_name(&self) -> &'static str {
@@ -264,41 +257,34 @@ impl CoolClient for ZhangCool {
             key: ShmString::from_str(heap.as_ref(), key)?,
             doc: ShmPtr::from_addr(doc_addr),
         };
-        let a = heap.new_val(arg)?;
         self.charger.charge_ns(self.charger.cost.zhang_commit_ns);
-        self.conn.call(F_PUT, a, std::mem::size_of::<PutArg>())?;
-        heap.free_bytes(a);
+        self.conn.call_scalar(F_PUT, &arg, CallOpts::new())?;
         Ok(())
     }
 
     fn search(&self, q: NumRangeQuery) -> Result<usize> {
         let heap = self.conn.heap();
-        let a = heap.new_val(SearchArg { lo: q.lo, hi: q.hi })?;
         self.charger.charge_ns(self.charger.cost.zhang_commit_ns);
-        let ret = self.conn.call(F_SEARCH, a, std::mem::size_of::<SearchArg>())?;
-        heap.free_bytes(a);
-        let mut hits: ShmVec<ShmPtr<ShmVal>> =
-            ShmPtr::<ShmVec<ShmPtr<ShmVal>>>::from_addr(ret as usize).read()?;
+        let reply: Reply<ShmVec<ShmPtr<ShmVal>>> =
+            self.conn.call_typed(F_SEARCH, &SearchArg { lo: q.lo, hi: q.hi }, CallOpts::new())?;
+        let mut hits = reply.read()?;
         // Dereferencing through fat refs costs per access.
         self.charger.charge_ns(hits.len() as u64 * self.charger.cost.zhang_obj_ns);
         let n = hits.len();
         hits.destroy(heap.as_ref());
-        heap.free_bytes(ret as usize);
+        reply.free();
         Ok(n)
     }
 
     fn get_num(&self, key: &str) -> Result<Option<f64>> {
         let heap = self.conn.heap();
         let k = ShmString::from_str(heap.as_ref(), key)?;
-        let a = heap.new_val(k)?;
         self.charger.charge_ns(self.charger.cost.zhang_commit_ns);
-        let ret = self.conn.call(F_GET, a, std::mem::size_of::<ShmString>())?;
-        heap.free_bytes(a);
-        if ret == u64::MAX {
-            return Ok(None);
+        let reply: Reply<ShmVal> = self.conn.call_typed(F_GET, &k, CallOpts::new())?;
+        match reply.opt()? {
+            None => Ok(None),
+            Some(doc) => Ok(doc.get("num")?.and_then(|v| v.as_num())),
         }
-        let doc: ShmVal = ShmPtr::<ShmVal>::from_addr(ret as usize).read()?;
-        Ok(doc.get("num")?.and_then(|v| v.as_num()))
     }
 
     fn transport_name(&self) -> &'static str {

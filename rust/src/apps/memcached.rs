@@ -10,12 +10,11 @@
 
 use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
 use crate::baselines::wire::{WireBuf, WireCur};
-use crate::channel::{ChannelOpts, Connection, RpcServer};
+use crate::channel::{CallOpts, ChannelBuilder, Connection, Reply, RpcServer};
 use crate::error::{Result, RpcError};
 use crate::memory::containers::{ShmString, ShmVec};
 use crate::memory::pod::Pod;
 use crate::memory::pool::Charger;
-use crate::memory::ptr::ShmPtr;
 use crate::rack::ProcEnv;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
@@ -88,14 +87,12 @@ unsafe impl Pod for KvPair {}
 
 /// Spin up a memcached server behind an RPCool channel.
 pub fn serve_rpcool(env: &ProcEnv, name: &str, cache: Arc<Cache>) -> Result<RpcServer> {
-    let opts = ChannelOpts::from_config(&env.rack.cfg);
-    let server = RpcServer::open(env, name, opts)?;
+    let server = ChannelBuilder::for_env(env).open(env, name)?;
     let charger: Arc<Charger> = Arc::clone(&env.rack.pool.charger);
 
     let c = Arc::clone(&cache);
     let ch = Arc::clone(&charger);
-    server.add(F_SET, move |ctx| {
-        let pair: KvPair = ctx.arg_val()?;
+    server.serve_scalar::<KvPair>(F_SET, move |_ctx, pair| {
         // memcpy out of shared memory (charged as CXL bulk reads).
         let key = pair.key.to_string()?;
         let val = pair.val.to_vec()?;
@@ -106,8 +103,7 @@ pub fn serve_rpcool(env: &ProcEnv, name: &str, cache: Arc<Cache>) -> Result<RpcS
 
     let c = Arc::clone(&cache);
     let ch = Arc::clone(&charger);
-    server.add(F_GET, move |ctx| {
-        let key: ShmString = ctx.arg_val()?;
+    server.serve_opt::<ShmString, ShmVec<u8>>(F_GET, move |ctx, key| {
         let key = key.to_string()?;
         match c.get(&key) {
             Some(val) => {
@@ -116,15 +112,14 @@ pub fn serve_rpcool(env: &ProcEnv, name: &str, cache: Arc<Cache>) -> Result<RpcS
                 ch.charge_cxl_copy(val.len());
                 let mut out: ShmVec<u8> = ShmVec::with_capacity(ctx.heap, val.len())?;
                 out.extend_from_slice(ctx.heap, &val)?;
-                ctx.reply_val(out)
+                Ok(Some(out))
             }
-            None => Ok(u64::MAX),
+            None => Ok(None),
         }
     });
 
     let c = Arc::clone(&cache);
-    server.add(F_DEL, move |ctx| {
-        let key: ShmString = ctx.arg_val()?;
+    server.serve_scalar::<ShmString>(F_DEL, move |_ctx, key| {
         Ok(c.delete(&key.to_string()?) as u64)
     });
 
@@ -164,7 +159,7 @@ impl KvClient for RpcoolKv {
         let mut v: ShmVec<u8> = ShmVec::with_capacity(&*scope, val.len())?;
         v.extend_from_slice(&*scope, val)?;
         let arg = scope.new_val(KvPair { key: k, val: v })?;
-        self.conn.call(F_SET, arg, std::mem::size_of::<KvPair>())?;
+        self.conn.invoke(F_SET, (arg, std::mem::size_of::<KvPair>()), CallOpts::new())?;
         Ok(())
     }
 
@@ -173,16 +168,17 @@ impl KvClient for RpcoolKv {
         scope.reset();
         let k = ShmString::from_str(&*scope, key)?;
         let arg = scope.new_val(k)?;
-        let ret = self.conn.call(F_GET, arg, std::mem::size_of::<ShmString>())?;
-        if ret == u64::MAX {
+        let ret =
+            self.conn.invoke(F_GET, (arg, std::mem::size_of::<ShmString>()), CallOpts::new())?;
+        let reply: Reply<ShmVec<u8>> = self.conn.reply_from(ret);
+        let Some(out) = reply.opt()? else {
             return Ok(None);
-        }
-        let out: ShmVec<u8> = ShmPtr::<ShmVec<u8>>::from_addr(ret as usize).read()?;
+        };
         let bytes = out.to_vec()?;
         // Server-allocated reply buffer: free it after copying out.
         let mut out = out;
         out.destroy(self.conn.heap().as_ref());
-        self.conn.heap().free_bytes(ret as usize);
+        reply.free();
         Ok(Some(bytes))
     }
 
@@ -191,7 +187,8 @@ impl KvClient for RpcoolKv {
         scope.reset();
         let k = ShmString::from_str(&*scope, key)?;
         let arg = scope.new_val(k)?;
-        Ok(self.conn.call(F_DEL, arg, std::mem::size_of::<ShmString>())? == 1)
+        Ok(self.conn.invoke(F_DEL, (arg, std::mem::size_of::<ShmString>()), CallOpts::new())?
+            == 1)
     }
 
     fn transport_name(&self) -> &'static str {

@@ -11,12 +11,11 @@
 use crate::apps::doc::{ShmVal, Val};
 use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
 use crate::baselines::wire::{Wire, WireBuf, WireCur};
-use crate::channel::{ChannelOpts, Connection, RpcServer};
+use crate::channel::{CallOpts, ChannelBuilder, Connection, Reply, RpcServer};
 use crate::error::{Result, RpcError};
 use crate::memory::containers::{ShmString, ShmVec};
 use crate::memory::pod::Pod;
 use crate::memory::pool::Charger;
-use crate::memory::ptr::ShmPtr;
 use crate::rack::ProcEnv;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, RwLock};
@@ -114,14 +113,12 @@ pub struct ScanArg {
 unsafe impl Pod for ScanArg {}
 
 pub fn serve_rpcool(env: &ProcEnv, name: &str, store: Arc<DocStore>) -> Result<RpcServer> {
-    let opts = ChannelOpts::from_config(&env.rack.cfg);
-    let server = RpcServer::open(env, name, opts)?;
+    let server = ChannelBuilder::for_env(env).open(env, name)?;
     let charger: Arc<Charger> = Arc::clone(&env.rack.pool.charger);
 
     let s = Arc::clone(&store);
     let ch = Arc::clone(&charger);
-    server.add(F_INSERT, move |ctx| {
-        let arg: InsertArg = ctx.arg_val()?;
+    server.serve_scalar::<InsertArg>(F_INSERT, move |_ctx, arg| {
         let key = arg.key.to_string()?;
         // Engine copies the document into its own memory (charged as
         // CXL reads of the pointer-rich tree).
@@ -133,30 +130,26 @@ pub fn serve_rpcool(env: &ProcEnv, name: &str, store: Arc<DocStore>) -> Result<R
 
     let s = Arc::clone(&store);
     let ch = Arc::clone(&charger);
-    server.add(F_READ, move |ctx| {
-        let key: ShmString = ctx.arg_val()?;
+    server.serve_opt::<ShmString, ShmVal>(F_READ, move |ctx, key| {
         match s.read(&key.to_string()?) {
             Some(doc) => {
                 // Materialize the reply into the connection heap as a
                 // pointer-rich tree the client reads directly.
                 ch.charge_cxl_copy(doc.weight());
-                let shm = doc.to_shm(ctx.heap.as_ref())?;
-                ctx.reply_val(shm)
+                Ok(Some(doc.to_shm(ctx.heap.as_ref())?))
             }
-            None => Ok(u64::MAX),
+            None => Ok(None),
         }
     });
 
     let s = Arc::clone(&store);
-    server.add(F_UPDATE, move |ctx| {
-        let arg: UpdateArg = ctx.arg_val()?;
+    server.serve_scalar::<UpdateArg>(F_UPDATE, move |_ctx, arg| {
         Ok(s.update_field(&arg.key.to_string()?, &arg.field.to_string()?, arg.value) as u64)
     });
 
     let s = Arc::clone(&store);
     let ch = Arc::clone(&charger);
-    server.add(F_SCAN, move |ctx| {
-        let arg: ScanArg = ctx.arg_val()?;
+    server.serve::<ScanArg, ShmVec<ShmVal>>(F_SCAN, move |ctx, arg| {
         let rows = s.scan(&arg.start.to_string()?, arg.len as usize);
         let mut out: ShmVec<ShmVal> = ShmVec::with_capacity(ctx.heap.as_ref(), rows.len())?;
         for (_k, doc) in &rows {
@@ -164,7 +157,7 @@ pub fn serve_rpcool(env: &ProcEnv, name: &str, store: Arc<DocStore>) -> Result<R
             let shm = doc.to_shm(ctx.heap.as_ref())?;
             out.push(ctx.heap.as_ref(), shm)?;
         }
-        ctx.reply_val(out)
+        Ok(out)
     });
 
     Ok(server)
@@ -200,7 +193,7 @@ impl DocClient for RpcoolDoc {
             doc: doc.to_shm(&*scope)?,
         };
         let a = scope.new_val(arg)?;
-        self.conn.call(F_INSERT, a, std::mem::size_of::<InsertArg>())?;
+        self.conn.invoke(F_INSERT, (a, std::mem::size_of::<InsertArg>()), CallOpts::new())?;
         Ok(())
     }
 
@@ -209,16 +202,17 @@ impl DocClient for RpcoolDoc {
         scope.reset();
         let k = ShmString::from_str(&*scope, key)?;
         let a = scope.new_val(k)?;
-        let ret = self.conn.call(F_READ, a, std::mem::size_of::<ShmString>())?;
-        if ret == u64::MAX {
+        let ret =
+            self.conn.invoke(F_READ, (a, std::mem::size_of::<ShmString>()), CallOpts::new())?;
+        let reply: Reply<ShmVal> = self.conn.reply_from(ret);
+        let Some(mut shm) = reply.opt()? else {
             return Ok(None);
-        }
-        let mut shm: ShmVal = ShmPtr::<ShmVal>::from_addr(ret as usize).read()?;
+        };
         let doc = shm.to_host()?;
         // The reply tree was server-allocated in the connection heap:
         // free it all once materialized.
         shm.deep_free(self.conn.heap().as_ref())?;
-        self.conn.heap().free_bytes(ret as usize);
+        reply.free();
         Ok(Some(doc))
     }
 
@@ -231,7 +225,8 @@ impl DocClient for RpcoolDoc {
             value: v,
         };
         let a = scope.new_val(arg)?;
-        Ok(self.conn.call(F_UPDATE, a, std::mem::size_of::<UpdateArg>())? == 1)
+        Ok(self.conn.invoke(F_UPDATE, (a, std::mem::size_of::<UpdateArg>()), CallOpts::new())?
+            == 1)
     }
 
     fn scan(&self, start: &str, len: usize) -> Result<Vec<Val>> {
@@ -239,8 +234,9 @@ impl DocClient for RpcoolDoc {
         scope.reset();
         let arg = ScanArg { start: ShmString::from_str(&*scope, start)?, len: len as u64 };
         let a = scope.new_val(arg)?;
-        let ret = self.conn.call(F_SCAN, a, std::mem::size_of::<ScanArg>())?;
-        let mut rows: ShmVec<ShmVal> = ShmPtr::<ShmVec<ShmVal>>::from_addr(ret as usize).read()?;
+        let ret = self.conn.invoke(F_SCAN, (a, std::mem::size_of::<ScanArg>()), CallOpts::new())?;
+        let reply: Reply<ShmVec<ShmVal>> = self.conn.reply_from(ret);
+        let mut rows = reply.read()?;
         let mut out = Vec::with_capacity(rows.len());
         for i in 0..rows.len() {
             let mut row = rows.get(i)?;
@@ -248,7 +244,7 @@ impl DocClient for RpcoolDoc {
             row.deep_free(self.conn.heap().as_ref())?;
         }
         rows.destroy(self.conn.heap().as_ref());
-        self.conn.heap().free_bytes(ret as usize);
+        reply.free();
         Ok(out)
     }
 

@@ -21,7 +21,7 @@ use crate::apps::memcached::Cache;
 use crate::apps::mongodb::DocStore;
 use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
 use crate::baselines::wire::{Wire, WireBuf, WireCur};
-use crate::channel::{waiter::SleepPolicy, ChannelOpts, Connection, RpcServer};
+use crate::channel::{waiter::SleepPolicy, CallOpts, ChannelBuilder, Connection, RpcServer};
 use crate::error::Result;
 use crate::memory::containers::ShmString;
 use crate::memory::pod::Pod;
@@ -183,12 +183,11 @@ impl RpcoolSocial {
     ) -> Result<RpcoolSocial> {
         let mut servers = Vec::new();
         let mut listeners = Vec::new();
-        let mut opts = ChannelOpts::from_config(&rack.cfg);
-        opts.sleep = sleep;
+        let builder = ChannelBuilder::from_config(&rack.cfg).sleep(sleep);
 
         // UniqueId service.
         let env = rack.proc_env(1);
-        let s = RpcServer::open(&env, &format!("social/{tag}/unique"), opts.clone())?;
+        let s = builder.clone().open(&env, &format!("social/{tag}/unique"))?;
         let st = Arc::clone(&state);
         s.add(F_UNIQUE, move |_ctx| Ok(st.unique.fetch_add(1, Ordering::Relaxed)));
         listeners.push(s.spawn_listener());
@@ -196,10 +195,10 @@ impl RpcoolSocial {
 
         // User service.
         let env = rack.proc_env(2);
-        let s = RpcServer::open(&env, &format!("social/{tag}/user"), opts.clone())?;
+        let s = builder.clone().open(&env, &format!("social/{tag}/user"))?;
         let st = Arc::clone(&state);
         s.add(F_USER, move |ctx| {
-            let uid: u64 = ctx.arg_val()?;
+            let uid: u64 = ctx.arg_typed()?;
             let users = st.users.read().unwrap();
             let name = users.get(uid as usize).cloned().unwrap_or_default();
             ctx.reply_string(&name)
@@ -209,9 +208,8 @@ impl RpcoolSocial {
 
         // Text service (urls + mentions).
         let env = rack.proc_env(3);
-        let s = RpcServer::open(&env, &format!("social/{tag}/text"), opts.clone())?;
-        s.add(F_TEXT, move |ctx| {
-            let text: ShmString = ctx.arg_val()?;
+        let s = builder.clone().open(&env, &format!("social/{tag}/text"))?;
+        s.serve_scalar::<ShmString>(F_TEXT, move |_ctx, text| {
             let (mentions, urls) = process_text(&text.to_string()?);
             Ok((mentions.len() + urls.len()) as u64)
         });
@@ -220,11 +218,10 @@ impl RpcoolSocial {
 
         // Post storage + timelines + fanout.
         let env = rack.proc_env(4);
-        let s = RpcServer::open(&env, &format!("social/{tag}/storage"), opts.clone())?;
+        let s = builder.clone().open(&env, &format!("social/{tag}/storage"))?;
         let st = Arc::clone(&state);
         let ch = Arc::clone(&rack.pool.charger);
-        s.add(F_STORE_POST, move |ctx| {
-            let arg: StorePostArg = ctx.arg_val()?;
+        s.serve_scalar::<StorePostArg>(F_STORE_POST, move |_ctx, arg| {
             let text = arg.text.to_string()?;
             do_db_work(&st, &ch, arg.user_id, arg.post_id, &text);
             Ok(0)
@@ -273,23 +270,17 @@ impl RpcoolSocial {
         if self.secure {
             let scope = c.create_scope(4096)?;
             let t = ShmString::from_str(&scope, text)?;
-            let addr = scope.new_val(t)?;
-            c.call_secure(F_TEXT, &scope, addr, std::mem::size_of::<ShmString>())?;
+            c.call_scalar(F_TEXT, &t, CallOpts::secure(&scope))?;
         } else {
             let t = ShmString::from_str(c.heap().as_ref(), text)?;
-            let addr = c.heap().new_val(t)?;
-            c.call(F_TEXT, addr, std::mem::size_of::<ShmString>())?;
-            c.heap().free_bytes(addr);
+            c.call_scalar(F_TEXT, &t, CallOpts::new())?;
         }
 
         // UniqueId.
-        let post_id = self.conns.unique.call(F_UNIQUE, 0, 0)?;
+        let post_id = self.conns.unique.invoke(F_UNIQUE, (), CallOpts::new())?;
 
         // User lookup.
-        let c = &self.conns.user;
-        let addr = c.heap().new_val(user_id)?;
-        c.call(F_USER, addr, 8)?;
-        c.heap().free_bytes(addr);
+        self.conns.user.call_scalar(F_USER, &user_id, CallOpts::new())?;
 
         // Storage chain (post + user timeline + home fanout).
         let c = &self.conns.storage;
@@ -300,17 +291,14 @@ impl RpcoolSocial {
                 post_id,
                 text: ShmString::from_str(&scope, text)?,
             };
-            let addr = scope.new_val(arg)?;
-            c.call_secure(F_STORE_POST, &scope, addr, std::mem::size_of::<StorePostArg>())?;
+            c.call_scalar(F_STORE_POST, &arg, CallOpts::secure(&scope))?;
         } else {
             let arg = StorePostArg {
                 user_id,
                 post_id,
                 text: ShmString::from_str(c.heap().as_ref(), text)?,
             };
-            let addr = c.heap().new_val(arg)?;
-            c.call(F_STORE_POST, addr, std::mem::size_of::<StorePostArg>())?;
-            c.heap().free_bytes(addr);
+            c.call_scalar(F_STORE_POST, &arg, CallOpts::new())?;
         }
         Ok(post_id)
     }

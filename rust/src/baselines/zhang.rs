@@ -12,7 +12,7 @@
 //! We reproduce that object model over our CXL substrate and charge
 //! the calibrated costs for the header/ref/link/commit work.
 
-use crate::channel::{CallCtx, Connection, RpcServer};
+use crate::channel::{CallCtx, CallOpts, Connection, RpcServer};
 use crate::error::Result;
 use crate::memory::heap::Heap;
 use crate::memory::pod::Pod;
@@ -121,7 +121,7 @@ impl ZhangClient {
     pub fn call<T: Pod>(&self, func: u32, arg: CxlRef<T>) -> Result<u64> {
         let charger = &self.conn.heap().pool().charger;
         charger.charge_ns(charger.cost.zhang_commit_ns);
-        self.conn.call(func, arg.addr, std::mem::size_of::<T>())
+        self.conn.invoke(func, (arg.addr, std::mem::size_of::<T>()), CallOpts::new())
     }
 }
 

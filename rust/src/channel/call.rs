@@ -1,0 +1,233 @@
+//! The composable call surface: `CallOpts`, `CallArg`, and `Reply`.
+//!
+//! The paper presents sealing (§4.5) and sandboxing (§4.4) as
+//! *orthogonal, per-RPC* choices. `CallOpts` encodes that directly: a
+//! builder whose `sealed` / `sandboxed` / `timeout` / `transport`
+//! knobs compose freely, replacing the old fixed matrix of
+//! `call` / `call_sealed` / `call_sandboxed` / `call_secure` methods
+//! with one `Connection::invoke` core.
+//!
+//! `Reply<R>` is the typed view of a pointer-returning RPC: it borrows
+//! the connection (so it cannot outlive the heap the pointer targets)
+//! and decodes the return address through the checked-MMU path instead
+//! of leaving callers to cast raw `u64`s.
+
+use crate::error::{Result, RpcError};
+use crate::memory::pod::Pod;
+use crate::memory::ptr::{ShmPtr, ShmView};
+use crate::memory::scope::Scope;
+use std::marker::PhantomData;
+use std::time::Duration;
+
+use super::{Connection, TransportSel};
+
+/// An RPC argument: a native shared-memory pointer plus its byte
+/// length. Built from whatever the caller has on hand:
+///
+/// * `()` — no argument (`addr = 0`);
+/// * `ShmPtr<T>` — length inferred from `T`;
+/// * `(addr, len)` — the raw escape hatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CallArg {
+    pub addr: usize,
+    pub len: usize,
+}
+
+impl CallArg {
+    /// The empty argument (no shared-memory payload).
+    pub const NONE: CallArg = CallArg { addr: 0, len: 0 };
+
+    pub fn new(addr: usize, len: usize) -> CallArg {
+        CallArg { addr, len }
+    }
+}
+
+impl From<()> for CallArg {
+    fn from(_: ()) -> CallArg {
+        CallArg::NONE
+    }
+}
+
+impl From<(usize, usize)> for CallArg {
+    fn from((addr, len): (usize, usize)) -> CallArg {
+        CallArg { addr, len }
+    }
+}
+
+impl<T: Pod> From<ShmPtr<T>> for CallArg {
+    fn from(p: ShmPtr<T>) -> CallArg {
+        CallArg { addr: p.addr(), len: std::mem::size_of::<T>() }
+    }
+}
+
+/// Per-call options. All knobs are orthogonal; any combination is
+/// valid (the paper's "RPCool (Secure)" configuration is simply
+/// `sealed + sandboxed`).
+///
+/// ```ignore
+/// conn.invoke(F_PUT, arg, CallOpts::new())?;                   // plain
+/// conn.invoke(F_PUT, arg, CallOpts::new().sealed(&scope))?;    // §4.5
+/// conn.invoke(F_PUT, arg, CallOpts::new().sandboxed())?;       // §4.4
+/// conn.invoke(F_PUT, arg, CallOpts::secure(&scope))?;          // both
+/// ```
+#[derive(Clone, Copy, Default)]
+pub struct CallOpts<'s> {
+    pub(super) seal: Option<&'s Scope>,
+    pub(super) sandbox: bool,
+    pub(super) timeout: Option<Duration>,
+    pub(super) transport: TransportSel,
+}
+
+impl<'s> CallOpts<'s> {
+    /// Plain call: no seal, no sandbox, connection-default timeout,
+    /// whatever transport the connection negotiated.
+    pub fn new() -> CallOpts<'s> {
+        CallOpts::default()
+    }
+
+    /// The paper's "RPCool (Secure)" shape: sealed *and* sandboxed.
+    pub fn secure(scope: &'s Scope) -> CallOpts<'s> {
+        CallOpts::new().sealed(scope).sandboxed()
+    }
+
+    /// Seal the scope's touched pages for the duration of the call
+    /// (sender loses write access until the receiver completes).
+    /// Standard single release on return.
+    pub fn sealed(mut self, scope: &'s Scope) -> CallOpts<'s> {
+        self.seal = Some(scope);
+        self
+    }
+
+    /// Run the handler inside an MPK sandbox over the argument window.
+    pub fn sandboxed(mut self) -> CallOpts<'s> {
+        self.sandbox = true;
+        self
+    }
+
+    /// Override the connection's default call timeout for this call.
+    pub fn timeout(mut self, d: Duration) -> CallOpts<'s> {
+        self.timeout = Some(d);
+        self
+    }
+
+    /// Pin the call to a fabric. `Auto` (the default) accepts whatever
+    /// the connection negotiated; `Cxl` / `Rdma` fail fast with
+    /// `RpcError::Config` if the connection rides the other fabric.
+    pub fn transport(mut self, t: TransportSel) -> CallOpts<'s> {
+        self.transport = t;
+        self
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.seal.is_some()
+    }
+
+    pub fn is_sandboxed(&self) -> bool {
+        self.sandbox
+    }
+
+    pub fn transport_sel(&self) -> TransportSel {
+        self.transport
+    }
+
+    /// The scope this call seals, if any.
+    pub fn seal_scope(&self) -> Option<&'s Scope> {
+        self.seal
+    }
+}
+
+/// The typed result of a pointer-returning RPC (`call_typed`).
+///
+/// The handler side allocated an `R` in the connection heap (via
+/// `CallCtx::reply_val` / `RpcServer::serve`) and returned its
+/// address; `Reply` wraps that address with the connection borrow so
+/// the pointer cannot outlive the heap, and decodes it through the
+/// checked-MMU read path.
+///
+/// Replies that carry *no* value (optional results, see
+/// `RpcServer::serve_opt`) come back as the null address; test with
+/// [`Reply::is_none`] or decode with [`Reply::opt`].
+///
+/// Ownership: `Reply` does **not** free the reply buffer on drop —
+/// whether the address points at a fresh server allocation (reclaim
+/// it with [`Reply::free`] / [`Reply::take`]) or at long-lived shared
+/// state (e.g. CoolDB documents — just read it) is a protocol-level
+/// contract between client and handler.
+#[must_use = "a Reply borrows the reply buffer; read it (and `free`/`take` server-allocated buffers)"]
+pub struct Reply<'c, R: Pod> {
+    conn: &'c Connection,
+    addr: usize,
+    _m: PhantomData<fn() -> R>,
+}
+
+impl<'c, R: Pod> Reply<'c, R> {
+    pub(super) fn new(conn: &'c Connection, addr: usize) -> Reply<'c, R> {
+        Reply { conn, addr, _m: PhantomData }
+    }
+
+    /// The raw return word, as the legacy surface exposed it.
+    pub fn raw(&self) -> u64 {
+        self.addr as u64
+    }
+
+    pub fn addr(&self) -> usize {
+        self.addr
+    }
+
+    /// Did the handler decline to attach a value (null reply)?
+    pub fn is_none(&self) -> bool {
+        self.addr == 0
+    }
+
+    /// Typed pointer to the reply value.
+    pub fn ptr(&self) -> ShmPtr<R> {
+        ShmPtr::from_addr(self.addr)
+    }
+
+    /// Lifetime-bound typed view (cannot outlive this reply's borrow
+    /// of the connection heap).
+    pub fn view(&self) -> ShmView<'_, R> {
+        ShmView::new(self.ptr(), self)
+    }
+
+    /// Checked read of the reply value.
+    pub fn read(&self) -> Result<R> {
+        if self.is_none() {
+            return Err(RpcError::Serialization("null reply (handler attached no value)".into()));
+        }
+        self.ptr().read()
+    }
+
+    /// Decode an optional reply: `None` when the handler attached no
+    /// value, `Some(read()?)` otherwise.
+    pub fn opt(&self) -> Result<Option<R>> {
+        if self.is_none() {
+            return Ok(None);
+        }
+        Ok(Some(self.ptr().read()?))
+    }
+
+    /// Reclaim a *server-allocated* reply buffer (the top-level `R`
+    /// block only; interior container data must be destroyed by the
+    /// caller first, exactly as with any heap value).
+    pub fn free(self) {
+        if self.addr != 0 {
+            self.conn.heap().free_bytes(self.addr);
+        }
+    }
+
+    /// Read the value and reclaim the server-allocated buffer in one
+    /// step (the buffer is reclaimed even when the read fails, so a
+    /// decode error doesn't leak it).
+    pub fn take(self) -> Result<R> {
+        let v = self.read();
+        self.free();
+        v
+    }
+}
+
+impl<R: Pod> std::fmt::Debug for Reply<'_, R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Reply<{}>({:#x})", std::any::type_name::<R>(), self.addr)
+    }
+}

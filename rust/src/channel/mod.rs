@@ -12,9 +12,52 @@
 //! **sandboxed** (the handler runs inside an MPK window over the
 //! argument scope, §4.4) — orthogonal, per-RPC choices, exactly as in
 //! the paper.
+//!
+//! # Typed API
+//!
+//! One core call path, composable per-call options, typed endpoints:
+//!
+//! * [`Connection::invoke`]`(func, arg, CallOpts)` — the raw core.
+//!   `arg` is anything convertible to [`CallArg`]: `()`, a
+//!   `ShmPtr<T>`, or `(addr, len)`.
+//! * [`CallOpts`] — `sealed(&scope)`, `sandboxed()`, `timeout(d)`,
+//!   `transport(sel)`; all orthogonal. `CallOpts::secure(&scope)` is
+//!   the paper's sealed+sandboxed configuration.
+//! * [`Connection::call_typed`]`::<A, R>(func, &A, opts)` — allocates
+//!   the argument (in the sealed scope when one is given, else the
+//!   connection heap), invokes, and wraps the returned address in a
+//!   [`Reply<R>`] that borrows the connection and decodes through the
+//!   checked-MMU path. [`Connection::call_scalar`]`::<A>` is the same
+//!   with a raw `u64` reply.
+//! * [`RpcServer::serve`]`::<A, R>(func, |ctx, arg: &A| ...)` — typed
+//!   handler registration layered over [`RpcServer::add`]; the reply
+//!   value is allocated in the connection heap for the client's
+//!   `Reply<R>`. `serve_opt` maps `Ok(None)` to the null reply;
+//!   `serve_scalar` keeps the raw `u64` return word.
+//! * [`ChannelBuilder`] — fluent construction of [`ChannelOpts`]
+//!   (heap size, shared-heap topology, ACL, ring slots, sleep policy,
+//!   call timeout).
+//!
+//! ## Migration from the legacy `call_*` variants
+//!
+//! | old (deprecated)                               | new                                                   |
+//! |------------------------------------------------|-------------------------------------------------------|
+//! | `conn.call(f, addr, len)`                      | `conn.invoke(f, (addr, len), CallOpts::new())`        |
+//! | `conn.call_ptr(f, ptr)`                        | `conn.invoke(f, ptr, CallOpts::new())`                |
+//! | `conn.call_sealed(f, &scope, addr, len)`       | `conn.invoke(f, (addr, len), CallOpts::new().sealed(&scope))` |
+//! | `conn.call_sandboxed(f, addr, len)`            | `conn.invoke(f, (addr, len), CallOpts::new().sandboxed())`    |
+//! | `conn.call_secure(f, &scope, addr, len)`       | `conn.invoke(f, (addr, len), CallOpts::secure(&scope))`       |
+//! | `conn.call_sealed_pooled(f, &pool, scope, addr, len)` | `conn.invoke_pooled(f, &pool, scope, (addr, len), CallOpts::new())` |
+//!
+//! Typed call sites shrink further: hand-rolled
+//! `heap.new_val(arg)? … ShmPtr::from_addr(ret as usize).read()?`
+//! plumbing becomes `conn.call_typed::<A, R>(f, &arg, opts)?.read()?`.
 
+pub mod call;
 pub mod ring;
 pub mod waiter;
+
+pub use call::{CallArg, CallOpts, Reply};
 
 use crate::config::SimConfig;
 use crate::daemon::Daemon;
@@ -93,6 +136,74 @@ impl ChannelOpts {
     }
 }
 
+/// Fluent construction of [`ChannelOpts`] — prefer this over
+/// struct-literal mutation of the options.
+///
+/// ```ignore
+/// let server = ChannelBuilder::for_env(&env)
+///     .shared_heap(true)
+///     .heap_bytes(192 << 20)
+///     .open(&env, "cooldb")?;
+/// ```
+#[derive(Clone)]
+pub struct ChannelBuilder {
+    opts: ChannelOpts,
+}
+
+impl ChannelBuilder {
+    pub fn from_config(cfg: &SimConfig) -> ChannelBuilder {
+        ChannelBuilder { opts: ChannelOpts::from_config(cfg) }
+    }
+
+    /// Defaults derived from the environment's rack configuration.
+    pub fn for_env(env: &ProcEnv) -> ChannelBuilder {
+        Self::from_config(&env.rack.cfg)
+    }
+
+    /// Per-connection heap size (or the single shared heap's size).
+    pub fn heap_bytes(mut self, bytes: usize) -> ChannelBuilder {
+        self.opts.heap_bytes = bytes;
+        self
+    }
+
+    /// One heap shared channel-wide (Fig. 4b) vs per-connection (4a).
+    pub fn shared_heap(mut self, shared: bool) -> ChannelBuilder {
+        self.opts.shared_heap = shared;
+        self
+    }
+
+    pub fn acl(mut self, acl: Acl) -> ChannelBuilder {
+        self.opts.acl = Some(acl);
+        self
+    }
+
+    pub fn ring_slots(mut self, slots: usize) -> ChannelBuilder {
+        self.opts.ring_slots = slots;
+        self
+    }
+
+    pub fn sleep(mut self, policy: SleepPolicy) -> ChannelBuilder {
+        self.opts.sleep = policy;
+        self
+    }
+
+    /// Client-side default call timeout (per-call override:
+    /// [`CallOpts::timeout`]).
+    pub fn call_timeout(mut self, d: Duration) -> ChannelBuilder {
+        self.opts.call_timeout = d;
+        self
+    }
+
+    pub fn opts(&self) -> &ChannelOpts {
+        &self.opts
+    }
+
+    /// Open the channel with these options.
+    pub fn open(self, env: &ProcEnv, name: &str) -> Result<RpcServer> {
+        RpcServer::open(env, name, self.opts)
+    }
+}
+
 // ---------------------------------------------------------------------
 // handler interface
 
@@ -120,6 +231,26 @@ impl<'a> CallCtx<'a> {
         self.arg_ptr::<T>().read()
     }
 
+    /// Checked typed decode of the argument: rejects a null pointer
+    /// and a declared length too short for `T` before the MMU-checked
+    /// read (the decode path `RpcServer::serve` uses).
+    pub fn arg_typed<T: Pod>(&self) -> Result<T> {
+        if self.arg == 0 {
+            return Err(RpcError::Serialization(format!(
+                "handler {}: null argument for typed decode",
+                self.func
+            )));
+        }
+        let need = std::mem::size_of::<T>();
+        if self.arg_len < need {
+            return Err(RpcError::Serialization(format!(
+                "handler {}: argument is {} bytes, typed decode needs {need}",
+                self.func, self.arg_len
+            )));
+        }
+        self.arg_ptr::<T>().read()
+    }
+
     /// Allocate a reply value in the connection heap; returns its
     /// address for the `ret` slot.
     pub fn reply_val<T: Pod>(&self, v: T) -> Result<u64> {
@@ -131,11 +262,31 @@ impl<'a> CallCtx<'a> {
         Ok(self.heap.new_val(shm)? as u64)
     }
 
-    /// In-sandbox allocation (fails when not sandboxed).
+    /// Reply with a vector materialized in the connection heap
+    /// (symmetric with `Connection::new_vec`).
+    pub fn reply_vec<T: Pod>(&self, xs: &[T]) -> Result<u64> {
+        let mut v: ShmVec<T> = ShmVec::with_capacity(self.heap.as_ref(), xs.len())?;
+        v.extend_from_slice(self.heap.as_ref(), xs)?;
+        self.reply_val(v)
+    }
+
+    /// The null reply: the handler attaches no value. Clients see
+    /// `Reply::is_none()` / `Reply::opt() == Ok(None)`.
+    pub fn reply_none(&self) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// In-sandbox allocation: redirects to the sandbox's temp heap.
+    /// Outside a sandbox there is no temp heap to redirect to, so this
+    /// fails — allocate from `self.heap` (or use the `reply_*`
+    /// helpers) instead.
     pub fn malloc(&self, size: usize) -> Result<usize> {
         match self.temp {
             Some(t) => t.alloc_bytes(size),
-            None => self.heap.alloc_bytes(size),
+            None => Err(RpcError::Runtime(
+                "CallCtx::malloc requires a sandboxed call; use ctx.heap or reply_* outside a sandbox"
+                    .into(),
+            )),
         }
     }
 }
@@ -247,8 +398,51 @@ impl RpcServer {
     }
 
     /// Register a handler under a function id (the paper's `rpc.add`).
+    /// The raw registration: the handler decodes `CallCtx::arg` itself
+    /// and returns the raw `ret` word (a scalar or a native shm
+    /// pointer). The typed layers (`serve`, `serve_opt`,
+    /// `serve_scalar`) are built on top of this.
     pub fn add(&self, func: u32, f: impl Fn(&CallCtx) -> Result<u64> + Send + Sync + 'static) {
         self.core.handlers.write().unwrap().insert(func, Box::new(f));
+    }
+
+    /// Typed handler registration: decode the argument as `A`, run the
+    /// handler, allocate its `R` reply in the connection heap. Clients
+    /// receive it as a [`Reply<R>`] via `Connection::call_typed` (and
+    /// own the reply buffer: `Reply::take`/`Reply::free` reclaim it).
+    pub fn serve<A: Pod, R: Pod>(
+        &self,
+        func: u32,
+        f: impl Fn(&CallCtx, &A) -> Result<R> + Send + Sync + 'static,
+    ) {
+        self.add(func, move |ctx| {
+            let arg = ctx.arg_typed::<A>()?;
+            let reply = f(ctx, &arg)?;
+            ctx.reply_val(reply)
+        });
+    }
+
+    /// Typed handler with an optional reply: `Ok(None)` becomes the
+    /// null reply (`Reply::is_none()` on the client).
+    pub fn serve_opt<A: Pod, R: Pod>(
+        &self,
+        func: u32,
+        f: impl Fn(&CallCtx, &A) -> Result<Option<R>> + Send + Sync + 'static,
+    ) {
+        self.add(func, move |ctx| match f(ctx, &ctx.arg_typed::<A>()?)? {
+            Some(reply) => ctx.reply_val(reply),
+            None => ctx.reply_none(),
+        });
+    }
+
+    /// Typed argument, raw `u64` return word (for value-returning
+    /// handlers where a heap-allocated reply would be overhead).
+    pub fn serve_scalar<A: Pod>(
+        &self,
+        func: u32,
+        f: impl Fn(&CallCtx, &A) -> Result<u64> + Send + Sync + 'static,
+    ) {
+        self.add(func, move |ctx| f(ctx, &ctx.arg_typed::<A>()?));
     }
 
     /// Block until a client connects; returns its connection.
@@ -622,34 +816,159 @@ impl Connection {
         )
     }
 
-    /// The raw call: argument is a native pointer into the connection
-    /// heap. Returns the handler's `ret` word.
-    pub fn call(&self, func: u32, arg: usize, arg_len: usize) -> Result<u64> {
-        self.call_inner(func, 0, NO_SEAL, arg, arg_len)
+    /// The fabric this connection resolved to: `Cxl` for in-rack
+    /// shared memory, `Rdma` for the DSM fallback (§4.7). Never `Auto`.
+    pub fn transport(&self) -> TransportSel {
+        if self.shared.is_dsm() {
+            TransportSel::Rdma
+        } else {
+            TransportSel::Cxl
+        }
     }
 
-    /// Typed convenience: pass a pointer, get the return word.
-    pub fn call_ptr<T: Pod>(&self, func: u32, arg: ShmPtr<T>) -> Result<u64> {
-        self.call(func, arg.addr(), std::mem::size_of::<T>())
+    fn check_transport(&self, want: TransportSel) -> Result<()> {
+        let have = self.transport();
+        if want == TransportSel::Auto || want == have {
+            return Ok(());
+        }
+        Err(RpcError::Config(format!(
+            "call pinned to {want:?} but connection negotiated {have:?}"
+        )))
     }
 
-    /// Sealed call over a scope: seals exactly the scope's pages,
-    /// calls, and releases (standard single release) on return.
-    pub fn call_sealed(&self, func: u32, scope: &Scope, arg: usize, arg_len: usize) -> Result<u64> {
-        let h = self.seal_scope(scope)?;
-        let r = self.call_inner(func, FLAG_SEALED, h.idx, arg, arg_len);
-        // Release even on error if the receiver completed; on seal
-        // rejection the receiver never completes, so force-complete to
-        // reclaim (sender-side abort path).
+    /// The one call core: argument is a native pointer into the
+    /// connection heap (or a sealed scope), behaviour is composed from
+    /// [`CallOpts`]. Returns the handler's raw `ret` word; the typed
+    /// layers ([`Connection::call_typed`], [`Connection::call_scalar`])
+    /// build on this.
+    pub fn invoke(&self, func: u32, arg: impl Into<CallArg>, opts: CallOpts) -> Result<u64> {
+        let arg = arg.into();
+        self.check_transport(opts.transport)?;
+        let mut flags = 0u32;
+        if opts.sandbox {
+            flags |= FLAG_SANDBOXED;
+        }
+        match opts.seal {
+            None => self.call_inner(func, flags, NO_SEAL, arg.addr, arg.len, opts.timeout),
+            Some(scope) => {
+                let h = self.seal_scope(scope)?;
+                let r =
+                    self.call_inner(func, flags | FLAG_SEALED, h.idx, arg.addr, arg.len, opts.timeout);
+                self.release_seal_forced(h);
+                r
+            }
+        }
+    }
+
+    /// Release a seal after the call finished or aborted: normally the
+    /// receiver marked it complete and `release` succeeds; on seal
+    /// rejection (or any path where the receiver never completed)
+    /// force-complete first so the sender reclaims write access.
+    fn release_seal_forced(&self, h: SealHandle) {
         if self.shared.sealer.release(h).is_err() {
             self.shared.sealer.complete(h.idx);
             let _ = self.shared.sealer.release(h);
         }
+    }
+
+    /// Sealed call with *batched* release: `scope` is sealed for the
+    /// call and then parked (still sealed) in `pool`; the pool
+    /// releases a whole batch with one TLB shootdown when its
+    /// threshold hits (§5.3). Composes with the remaining [`CallOpts`]
+    /// knobs; the seal comes from `scope`, so passing
+    /// `opts.sealed(..)` here is a contradiction and is rejected.
+    pub fn invoke_pooled(
+        &self,
+        func: u32,
+        pool: &ScopePool,
+        scope: Scope,
+        arg: impl Into<CallArg>,
+        opts: CallOpts,
+    ) -> Result<u64> {
+        let arg = arg.into();
+        if opts.seal.is_some() {
+            return Err(RpcError::Config(
+                "invoke_pooled seals the pooled scope itself; don't pass CallOpts::sealed".into(),
+            ));
+        }
+        self.check_transport(opts.transport)?;
+        let mut flags = FLAG_SEALED;
+        if opts.sandbox {
+            flags |= FLAG_SANDBOXED;
+        }
+        let h = self.seal_scope(&scope)?;
+        match self.call_inner(func, flags, h.idx, arg.addr, arg.len, opts.timeout) {
+            Ok(r) => {
+                pool.push_sealed(scope, h)?;
+                Ok(r)
+            }
+            Err(e) => {
+                // Don't park a failed call in the pool — release the
+                // seal now so the scope's pages go back to the heap
+                // writable.
+                self.release_seal_forced(h);
+                Err(e)
+            }
+        }
+    }
+
+    /// Typed-argument call with a raw `u64` reply: allocates a copy of
+    /// `arg` (in the sealed scope when `opts` carries one — so the
+    /// argument is actually covered by the seal — else in the
+    /// connection heap, freed after the call) and invokes.
+    pub fn call_scalar<A: Pod>(&self, func: u32, arg: &A, opts: CallOpts) -> Result<u64> {
+        let (addr, owned) = match opts.seal {
+            Some(scope) => (scope.new_val(*arg)?, false),
+            None => (self.shared.heap.new_val(*arg)?, true),
+        };
+        let r = self.invoke(func, (addr, std::mem::size_of::<A>()), opts);
+        if owned {
+            self.shared.heap.free_bytes(addr);
+        }
         r
     }
 
-    /// Sealed call with *batched* release: the scope+seal go back to
-    /// the pool, released when the batch threshold hits.
+    /// Fully typed call: `A` in, [`Reply<R>`] out. The reply borrows
+    /// this connection and decodes the returned address through the
+    /// checked-MMU path — no raw casts in user code.
+    pub fn call_typed<'c, A: Pod, R: Pod>(
+        &'c self,
+        func: u32,
+        arg: &A,
+        opts: CallOpts,
+    ) -> Result<Reply<'c, R>> {
+        let ret = self.call_scalar(func, arg, opts)?;
+        Ok(Reply::new(self, ret as usize))
+    }
+
+    /// Wrap a raw `ret` word (from [`Connection::invoke`]) as a typed
+    /// [`Reply<R>`] — for call sites that build their argument by hand
+    /// (e.g. in a scratch scope) but still want the safe reply decode.
+    pub fn reply_from<R: Pod>(&self, ret: u64) -> Reply<'_, R> {
+        Reply::new(self, ret as usize)
+    }
+
+    /// The raw call. Deprecated: use [`Connection::invoke`].
+    #[deprecated(note = "use `invoke(func, (arg, arg_len), CallOpts::new())`")]
+    pub fn call(&self, func: u32, arg: usize, arg_len: usize) -> Result<u64> {
+        self.invoke(func, (arg, arg_len), CallOpts::new())
+    }
+
+    /// Deprecated: use [`Connection::invoke`] (or `call_typed`).
+    #[deprecated(note = "use `invoke(func, ptr, CallOpts::new())` or `call_typed`")]
+    pub fn call_ptr<T: Pod>(&self, func: u32, arg: ShmPtr<T>) -> Result<u64> {
+        self.invoke(func, arg, CallOpts::new())
+    }
+
+    /// Deprecated: use [`Connection::invoke`] with
+    /// `CallOpts::new().sealed(&scope)`.
+    #[deprecated(note = "use `invoke(func, (arg, arg_len), CallOpts::new().sealed(scope))`")]
+    pub fn call_sealed(&self, func: u32, scope: &Scope, arg: usize, arg_len: usize) -> Result<u64> {
+        self.invoke(func, (arg, arg_len), CallOpts::new().sealed(scope))
+    }
+
+    /// Deprecated: use [`Connection::invoke_pooled`].
+    #[deprecated(note = "use `invoke_pooled(func, pool, scope, (arg, arg_len), CallOpts::new())`")]
     pub fn call_sealed_pooled(
         &self,
         func: u32,
@@ -658,26 +977,21 @@ impl Connection {
         arg: usize,
         arg_len: usize,
     ) -> Result<u64> {
-        let h = self.seal_scope(&scope)?;
-        let r = self.call_inner(func, FLAG_SEALED, h.idx, arg, arg_len)?;
-        pool.push_sealed(scope, h)?;
-        Ok(r)
+        self.invoke_pooled(func, pool, scope, (arg, arg_len), CallOpts::new())
     }
 
-    /// Sealed + sandboxed call (paper's "RPCool (Secure)" config).
+    /// Deprecated: use [`Connection::invoke`] with
+    /// `CallOpts::secure(&scope)`.
+    #[deprecated(note = "use `invoke(func, (arg, arg_len), CallOpts::secure(scope))`")]
     pub fn call_secure(&self, func: u32, scope: &Scope, arg: usize, arg_len: usize) -> Result<u64> {
-        let h = self.seal_scope(scope)?;
-        let r = self.call_inner(func, FLAG_SEALED | FLAG_SANDBOXED, h.idx, arg, arg_len);
-        if self.shared.sealer.release(h).is_err() {
-            self.shared.sealer.complete(h.idx);
-            let _ = self.shared.sealer.release(h);
-        }
-        r
+        self.invoke(func, (arg, arg_len), CallOpts::secure(scope))
     }
 
-    /// Sandbox-only call (receiver protects itself; sender trusted).
+    /// Deprecated: use [`Connection::invoke`] with
+    /// `CallOpts::new().sandboxed()`.
+    #[deprecated(note = "use `invoke(func, (arg, arg_len), CallOpts::new().sandboxed())`")]
     pub fn call_sandboxed(&self, func: u32, arg: usize, arg_len: usize) -> Result<u64> {
-        self.call_inner(func, FLAG_SANDBOXED, NO_SEAL, arg, arg_len)
+        self.invoke(func, (arg, arg_len), CallOpts::new().sandboxed())
     }
 
     fn seal_scope(&self, scope: &Scope) -> Result<SealHandle> {
@@ -695,7 +1009,9 @@ impl Connection {
         seal_idx: u64,
         arg: usize,
         arg_len: usize,
+        timeout: Option<Duration>,
     ) -> Result<u64> {
+        let timeout = timeout.unwrap_or(self.opts.call_timeout);
         if self.shared.closed() {
             return Err(RpcError::ConnectionClosed);
         }
@@ -714,11 +1030,10 @@ impl Connection {
             Some(i) => i,
             None => {
                 let mut got = None;
-                let out =
-                    waiter::wait_until(self.opts.sleep, self.opts.call_timeout, None, || {
-                        got = ring.claim();
-                        got.is_some()
-                    });
+                let out = waiter::wait_until(self.opts.sleep, timeout, None, || {
+                    got = ring.claim();
+                    got.is_some()
+                });
                 if out == WaitOutcome::TimedOut {
                     return Err(RpcError::Timeout("rpc slot".into()));
                 }
@@ -736,7 +1051,7 @@ impl Connection {
                 });
             }
         }
-        let out = waiter::wait_until(self.opts.sleep, self.opts.call_timeout, None, || {
+        let out = waiter::wait_until(self.opts.sleep, timeout, None, || {
             ring.response_ready(slot) || self.shared.closed()
         });
         if out == WaitOutcome::TimedOut {
@@ -808,28 +1123,37 @@ mod tests {
     fn serve_echo(rack: &Arc<Rack>, name: &str) -> (RpcServer, std::thread::JoinHandle<()>) {
         let env = rack.proc_env(0);
         let server = Rpc::open(&env, name).unwrap();
-        // 100 = ping→pong; 101 = read u64 arg, return arg+1.
+        // 100 = ping→pong; 101 = typed u64 increment.
         server.add(100, |ctx| ctx.reply_string("pong"));
-        server.add(101, |ctx| {
-            let v: u64 = ctx.arg_val()?;
-            Ok(v + 1)
-        });
+        server.serve::<u64, u64>(101, |_ctx, v| Ok(*v + 1));
+        let t = server.spawn_listener();
+        (server, t)
+    }
+
+    /// An echo channel whose handler 1 reports which safety flags the
+    /// call arrived with: bit 0 = sealed, bit 1 = sandboxed.
+    fn serve_flags(rack: &Arc<Rack>, name: &str) -> (RpcServer, std::thread::JoinHandle<()>) {
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, name).unwrap();
+        server.add(1, |ctx| Ok((ctx.sealed as u64) | ((ctx.sandboxed as u64) << 1)));
         let t = server.spawn_listener();
         (server, t)
     }
 
     #[test]
     fn ping_pong_roundtrip() {
-        // The paper's Fig. 6 program, end to end.
+        // The paper's Fig. 6 program, end to end — typed, no raw casts.
         let rack = Rack::for_tests();
         let (server, t) = serve_echo(&rack, "mychannel");
         let cenv = rack.proc_env(1);
         let conn = Rpc::connect(&cenv, "mychannel").unwrap();
         cenv.run(|| {
-            let arg = conn.new_string("ping").unwrap();
-            let ret = conn.call_ptr(100, arg).unwrap();
-            let s: ShmPtr<ShmString> = ShmPtr::from_addr(ret as usize);
-            assert_eq!(s.read().unwrap().to_string().unwrap(), "pong");
+            let ping = ShmString::from_str(conn.heap().as_ref(), "ping").unwrap();
+            let reply = conn.call_typed::<ShmString, ShmString>(100, &ping, CallOpts::new()).unwrap();
+            // Lifetime-bound view first, then take ownership of the buffer.
+            assert!(reply.view().read().unwrap().eq_str("pong"));
+            let pong: ShmString = reply.take().unwrap();
+            assert_eq!(pong.to_string().unwrap(), "pong");
         });
         drop(conn);
         server.stop();
@@ -844,8 +1168,8 @@ mod tests {
         let conn = Rpc::connect(&cenv, "nums").unwrap();
         cenv.run(|| {
             for i in 0..200u64 {
-                let arg = conn.new_val(i).unwrap();
-                assert_eq!(conn.call_ptr(101, arg).unwrap(), i + 1);
+                let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();
+                assert_eq!(r.take().unwrap(), i + 1);
             }
         });
         assert_eq!(conn.calls_made(), 200);
@@ -865,14 +1189,183 @@ mod tests {
             Err(RpcError::ChannelNotFound(_))
         ));
         let conn = Rpc::connect(&cenv, "known").unwrap();
-        let e = cenv.run(|| {
-            let arg = conn.new_val(1u64).unwrap();
-            conn.call_ptr(999, arg)
-        });
+        let e = cenv.run(|| conn.call_scalar::<u64>(999, &1, CallOpts::new()));
         assert!(matches!(e, Err(RpcError::NoSuchHandler(999))));
         drop(conn);
         server.stop();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn callopts_compose_all_legacy_variants() {
+        // The four legacy call shapes are exactly the 2×2 seal/sandbox
+        // matrix — all expressible (and composable) through CallOpts,
+        // including the sealed+sandboxed "secure" combination.
+        let rack = Rack::for_tests();
+        let (server, t) = serve_flags(&rack, "compose");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "compose").unwrap();
+        cenv.run(|| {
+            let scope = conn.create_scope(4096).unwrap();
+            let addr = scope.new_val(0u64).unwrap();
+            // plain (old `call`)
+            assert_eq!(conn.invoke(1, (), CallOpts::new()).unwrap(), 0b00);
+            // sealed only (old `call_sealed`)
+            assert_eq!(
+                conn.invoke(1, (addr, 8), CallOpts::new().sealed(&scope)).unwrap(),
+                0b01
+            );
+            // sandboxed only (old `call_sandboxed`)
+            assert_eq!(
+                conn.invoke(1, (addr, 8), CallOpts::new().sandboxed()).unwrap(),
+                0b10
+            );
+            // sealed + sandboxed (old `call_secure`)
+            assert_eq!(conn.invoke(1, (addr, 8), CallOpts::secure(&scope)).unwrap(), 0b11);
+            let o = CallOpts::secure(&scope);
+            assert!(o.is_sealed() && o.is_sandboxed());
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shims_route_through_invoke() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_flags(&rack, "shims");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "shims").unwrap();
+        cenv.run(|| {
+            let scope = conn.create_scope(4096).unwrap();
+            let addr = scope.new_val(0u64).unwrap();
+            assert_eq!(conn.call(1, 0, 0).unwrap(), 0b00);
+            assert_eq!(conn.call_ptr(1, ShmPtr::<u64>::from_addr(addr)).unwrap(), 0b00);
+            assert_eq!(conn.call_sealed(1, &scope, addr, 8).unwrap(), 0b01);
+            assert_eq!(conn.call_sandboxed(1, addr, 8).unwrap(), 0b10);
+            assert_eq!(conn.call_secure(1, &scope, addr, 8).unwrap(), 0b11);
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ctx_malloc_requires_sandbox() {
+        // Regression: `CallCtx::malloc` used to silently fall back to
+        // the connection heap outside a sandbox; it must now fail.
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "malloc").unwrap();
+        server.add(2, |ctx| Ok(ctx.malloc(64)? as u64));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "malloc").unwrap();
+        cenv.run(|| {
+            let addr = conn.heap().new_val(0u64).unwrap();
+            let e = conn.invoke(2, (addr, 8), CallOpts::new());
+            assert!(
+                matches!(e, Err(RpcError::Remote(_))),
+                "unsandboxed malloc must surface a handler error: {e:?}"
+            );
+            let a = conn.invoke(2, (addr, 8), CallOpts::new().sandboxed()).unwrap();
+            assert_ne!(a, 0, "sandboxed malloc allocates from the temp heap");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn typed_optional_reply() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "optional").unwrap();
+        server.serve_opt::<u64, u64>(9, |_ctx, v| {
+            Ok(if *v == 0 { None } else { Some(*v * 7) })
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "optional").unwrap();
+        cenv.run(|| {
+            let some = conn.call_typed::<u64, u64>(9, &6, CallOpts::new()).unwrap();
+            assert_eq!(some.opt().unwrap(), Some(42));
+            some.free();
+            let none = conn.call_typed::<u64, u64>(9, &0, CallOpts::new()).unwrap();
+            assert!(none.is_none());
+            assert_eq!(none.opt().unwrap(), None);
+            assert!(none.read().is_err(), "reading a null reply must fail, not cast");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn reply_vec_roundtrip() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "vecs").unwrap();
+        server.add(5, |ctx| {
+            let n: u64 = ctx.arg_typed()?;
+            let xs: Vec<u64> = (0..n).collect();
+            ctx.reply_vec(&xs)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "vecs").unwrap();
+        cenv.run(|| {
+            let reply = conn.call_typed::<u64, ShmVec<u64>>(5, &4, CallOpts::new()).unwrap();
+            let mut v = reply.read().unwrap();
+            assert_eq!(v.to_vec().unwrap(), vec![0, 1, 2, 3]);
+            v.destroy(conn.heap().as_ref());
+            reply.free();
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn typed_sealed_arg_lands_in_scope() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "typed-sealed");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "typed-sealed").unwrap();
+        cenv.run(|| {
+            let scope = conn.create_scope(4096).unwrap();
+            let before = scope.used();
+            let r = conn
+                .call_typed::<u64, u64>(101, &4, CallOpts::new().sealed(&scope))
+                .unwrap();
+            assert_eq!(r.take().unwrap(), 5);
+            assert!(scope.used() > before, "typed arg must land in the sealed scope");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn per_call_timeout_overrides_default() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "slow").unwrap();
+        server.add(1, |_| Ok(0));
+        // No listener thread, no inline serving: no response arrives.
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "slow").unwrap();
+        let t0 = std::time::Instant::now();
+        let e =
+            cenv.run(|| conn.invoke(1, (), CallOpts::new().timeout(Duration::from_millis(50))));
+        assert!(matches!(e, Err(RpcError::Timeout(_))));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "50ms per-call timeout must override the 10s connection default"
+        );
+        drop(conn);
+        server.stop();
     }
 
     #[test]
@@ -894,7 +1387,7 @@ mod tests {
         cenv.run(|| {
             let scope = conn.create_scope(4096).unwrap();
             let addr = scope.new_val(21u64).unwrap();
-            let ret = conn.call_sealed(7, &scope, addr, 8).unwrap();
+            let ret = conn.invoke(7, (addr, 8), CallOpts::new().sealed(&scope)).unwrap();
             assert_eq!(ret, 42);
             // After release the sender can write again.
             let p: ShmPtr<u64> = ShmPtr::from_addr(addr);
@@ -928,7 +1421,7 @@ mod tests {
                 list.push_back(&scope, i).unwrap();
             }
             let laddr = scope.new_val(list).unwrap();
-            assert_eq!(conn.call_secure(8, &scope, laddr, 24).unwrap(), 10);
+            assert_eq!(conn.invoke(8, (laddr, 24), CallOpts::secure(&scope)).unwrap(), 10);
 
             // Malicious list: tail points outside the scope (at the
             // connection heap — could be a server secret). The sandbox
@@ -941,7 +1434,7 @@ mod tests {
             let secret = conn.heap().new_val(0xDEAD_u64).unwrap();
             evil.corrupt_tail(secret).unwrap();
             let eaddr = scope2.new_val(evil).unwrap();
-            let e = conn.call_secure(8, &scope2, eaddr, 24);
+            let e = conn.invoke(8, (eaddr, 24), CallOpts::secure(&scope2));
             assert!(
                 matches!(e, Err(RpcError::SandboxViolation { .. })),
                 "expected sandbox violation, got {e:?}"
@@ -964,8 +1457,8 @@ mod tests {
                 let conn = Rpc::connect(&cenv, "multi").unwrap();
                 cenv.run(|| {
                     for i in 0..50u64 {
-                        let arg = conn.new_val(i).unwrap();
-                        assert_eq!(conn.call_ptr(101, arg).unwrap(), i + 1);
+                        let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();
+                        assert_eq!(r.take().unwrap(), i + 1);
                     }
                 });
             }));
@@ -983,9 +1476,10 @@ mod tests {
     fn shared_heap_mode_single_heap() {
         let rack = Rack::for_tests();
         let env = rack.proc_env(0);
-        let mut opts = ChannelOpts::from_config(&rack.cfg);
-        opts.shared_heap = true;
-        let server = RpcServer::open(&env, "shared-heap", opts).unwrap();
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .shared_heap(true)
+            .open(&env, "shared-heap")
+            .unwrap();
         server.add(1, |_| Ok(0));
         let t = server.spawn_listener();
         let c1 = Connection::connect(&rack.proc_env(1), "shared-heap").unwrap();
@@ -1000,13 +1494,52 @@ mod tests {
     fn acl_blocks_unauthorized_connect() {
         let rack = Rack::for_tests();
         let env = rack.proc_env(0);
-        let mut opts = ChannelOpts::from_config(&rack.cfg);
-        opts.acl = Some(Acl::private(env.uid));
-        let server = RpcServer::open(&env, "private-ch", opts).unwrap();
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .acl(Acl::private(env.uid))
+            .open(&env, "private-ch")
+            .unwrap();
         let _t = server.spawn_listener();
         let e = Connection::connect(&rack.proc_env(1), "private-ch");
         assert!(matches!(e, Err(RpcError::AccessDenied(_))));
         server.stop();
+    }
+
+    #[test]
+    fn transport_auto_selection_and_pinning() {
+        // Paper §4.7 through the CallOpts.transport path: Auto resolves
+        // to CXL in-rack and to the DSM/RDMA fallback beyond it; a call
+        // pinned to the other fabric fails fast.
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "tsel");
+
+        let near = rack.proc_env(1);
+        let c1 = Connection::connect_with(&near, "tsel", TransportSel::Auto).unwrap();
+        assert_eq!(c1.transport(), TransportSel::Cxl, "same rack ⇒ CXL");
+        near.run(|| {
+            let r = c1
+                .call_typed::<u64, u64>(101, &1, CallOpts::new().transport(TransportSel::Cxl))
+                .unwrap();
+            assert_eq!(r.take().unwrap(), 2);
+            let e = c1.invoke(101, (), CallOpts::new().transport(TransportSel::Rdma));
+            assert!(matches!(e, Err(RpcError::Config(_))));
+        });
+
+        let far = rack.remote_proc_env();
+        let c2 = Connection::connect_with(&far, "tsel", TransportSel::Auto).unwrap();
+        assert_eq!(c2.transport(), TransportSel::Rdma, "out of rack ⇒ DSM fallback");
+        assert!(c2.shared.is_dsm());
+        far.run(|| {
+            let r = c2
+                .call_typed::<u64, u64>(101, &5, CallOpts::new().transport(TransportSel::Rdma))
+                .unwrap();
+            assert_eq!(r.take().unwrap(), 6);
+            let e = c2.invoke(101, (), CallOpts::new().transport(TransportSel::Cxl));
+            assert!(matches!(e, Err(RpcError::Config(_))));
+        });
+
+        drop((c1, c2));
+        server.stop();
+        t.join().unwrap();
     }
 
     #[test]
@@ -1020,8 +1553,8 @@ mod tests {
         assert!(conn.shared.is_dsm(), "out-of-rack ⇒ DSM transport");
         cenv.run(|| {
             for i in 0..20u64 {
-                let arg = conn.new_val(i).unwrap();
-                assert_eq!(conn.call_ptr(101, arg).unwrap(), i + 1);
+                let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();
+                assert_eq!(r.take().unwrap(), i + 1);
             }
         });
         let (faults, pages) = conn.shared.dsm.as_ref().unwrap().stats();
@@ -1057,7 +1590,7 @@ mod tests {
         cenv.run(|| {
             let scope = conn.create_scope(4096).unwrap();
             let addr = scope.new_val(1u64).unwrap();
-            assert_eq!(conn.call_secure(7, &scope, addr, 8).unwrap(), 101);
+            assert_eq!(conn.invoke(7, (addr, 8), CallOpts::secure(&scope)).unwrap(), 101);
         });
         drop(conn);
         server.stop();
@@ -1065,16 +1598,13 @@ mod tests {
     }
 
     #[test]
-    fn call_sealed_pooled_batches_releases() {
+    fn invoke_pooled_batches_releases() {
         let mut cfg = SimConfig::for_tests();
         cfg.batch_release_threshold = 16;
         let rack = Rack::new(cfg);
         let env = rack.proc_env(0);
-        let server = RpcServer::open(&env, "pooled", ChannelOpts::from_config(&rack.cfg)).unwrap();
-        server.add(1, |ctx| {
-            let v: u64 = ctx.arg_val()?;
-            Ok(v)
-        });
+        let server = ChannelBuilder::from_config(&rack.cfg).open(&env, "pooled").unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v));
         let t = server.spawn_listener();
         let cenv = rack.proc_env(1);
         let conn = Connection::connect(&cenv, "pooled").unwrap();
@@ -1083,7 +1613,10 @@ mod tests {
             for i in 0..40u64 {
                 let scope = pool.pop().unwrap();
                 let addr = scope.new_val(i).unwrap();
-                assert_eq!(conn.call_sealed_pooled(1, &pool, scope, addr, 8).unwrap(), i);
+                assert_eq!(
+                    conn.invoke_pooled(1, &pool, scope, (addr, 8), CallOpts::new()).unwrap(),
+                    i
+                );
             }
         });
         assert_eq!(pool.flushes(), 2, "40 calls / threshold 16 = 2 flushes");

@@ -5,76 +5,81 @@
 //! lease/quota denials (§5.4), transport failures, and the RDMA
 //! fallback's two-node restriction (§5.6).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RpcError {
-    #[error("out of shared memory: requested {requested} bytes from heap '{heap}'")]
     OutOfMemory { heap: String, requested: usize },
-
-    #[error("scope exhausted: requested {requested} bytes, {available} available")]
     ScopeExhausted { requested: usize, available: usize },
-
-    #[error("seal verification failed: {0}")]
     SealInvalid(String),
-
-    #[error("release denied: RPC {0} not yet marked complete")]
     ReleaseDenied(u64),
-
-    #[error("sandbox violation: access to {addr:#x} outside sandbox [{lo:#x}, {hi:#x})")]
     SandboxViolation { addr: usize, lo: usize, hi: usize },
-
-    #[error("protection fault: write to sealed/read-only page {page}")]
     ProtectionFault { page: usize },
-
-    #[error("no protection keys available (16-key limit, 14 cached sandboxes)")]
     NoKeysAvailable,
-
-    #[error("channel '{0}' not found")]
     ChannelNotFound(String),
-
-    #[error("channel '{0}' already exists")]
     ChannelExists(String),
-
-    #[error("connection closed")]
     ConnectionClosed,
-
-    #[error("connection refused by '{0}': {1}")]
     ConnectionRefused(String, String),
-
-    #[error("quota exceeded: proc {proc} holds {held} bytes, quota {quota}, wanted {wanted}")]
     QuotaExceeded { proc: u32, held: usize, quota: usize, wanted: usize },
-
-    #[error("lease expired for heap {0}")]
     LeaseExpired(u64),
-
-    #[error("peer failed: {0}")]
     PeerFailed(String),
-
-    #[error("access denied: {0}")]
     AccessDenied(String),
-
-    #[error("RDMA fallback supports exactly two nodes per heap ({0})")]
     DsmTwoNodeLimit(String),
-
-    #[error("timeout waiting for {0}")]
     Timeout(String),
-
-    #[error("serialization error: {0}")]
     Serialization(String),
-
-    #[error("handler {0} not registered on channel")]
     NoSuchHandler(u32),
-
-    #[error("remote handler error: {0}")]
     Remote(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("config error: {0}")]
     Config(String),
 }
+
+impl fmt::Display for RpcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use RpcError::*;
+        match self {
+            OutOfMemory { heap, requested } => {
+                write!(f, "out of shared memory: requested {requested} bytes from heap '{heap}'")
+            }
+            ScopeExhausted { requested, available } => {
+                write!(f, "scope exhausted: requested {requested} bytes, {available} available")
+            }
+            SealInvalid(s) => write!(f, "seal verification failed: {s}"),
+            ReleaseDenied(id) => write!(f, "release denied: RPC {id} not yet marked complete"),
+            SandboxViolation { addr, lo, hi } => write!(
+                f,
+                "sandbox violation: access to {addr:#x} outside sandbox [{lo:#x}, {hi:#x})"
+            ),
+            ProtectionFault { page } => {
+                write!(f, "protection fault: write to sealed/read-only page {page}")
+            }
+            NoKeysAvailable => {
+                write!(f, "no protection keys available (16-key limit, 14 cached sandboxes)")
+            }
+            ChannelNotFound(name) => write!(f, "channel '{name}' not found"),
+            ChannelExists(name) => write!(f, "channel '{name}' already exists"),
+            ConnectionClosed => write!(f, "connection closed"),
+            ConnectionRefused(name, why) => write!(f, "connection refused by '{name}': {why}"),
+            QuotaExceeded { proc, held, quota, wanted } => write!(
+                f,
+                "quota exceeded: proc {proc} holds {held} bytes, quota {quota}, wanted {wanted}"
+            ),
+            LeaseExpired(id) => write!(f, "lease expired for heap {id}"),
+            PeerFailed(s) => write!(f, "peer failed: {s}"),
+            AccessDenied(s) => write!(f, "access denied: {s}"),
+            DsmTwoNodeLimit(s) => {
+                write!(f, "RDMA fallback supports exactly two nodes per heap ({s})")
+            }
+            Timeout(s) => write!(f, "timeout waiting for {s}"),
+            Serialization(s) => write!(f, "serialization error: {s}"),
+            NoSuchHandler(func) => write!(f, "handler {func} not registered on channel"),
+            Remote(s) => write!(f, "remote handler error: {s}"),
+            Runtime(s) => write!(f, "runtime error: {s}"),
+            Config(s) => write!(f, "config error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for RpcError {}
 
 pub type Result<T> = std::result::Result<T, RpcError>;
 

@@ -8,10 +8,9 @@
 //! This is RPCool applied to the serving workload its introduction
 //! motivates (microservices calling a model service).
 
-use crate::channel::{ChannelOpts, Connection, RpcServer};
+use crate::channel::{CallOpts, ChannelBuilder, Connection, Reply, RpcServer};
 use crate::error::{Result, RpcError};
 use crate::memory::containers::ShmVec;
-use crate::memory::ptr::ShmPtr;
 use crate::rack::ProcEnv;
 use crate::runtime::ModelBundle;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,14 +23,12 @@ pub const F_LOGITS: u32 = 41;
 /// the connection rings and are drained by the listener — the same
 /// FIFO batching discipline a serving stack's scheduler applies.
 pub fn serve_model(env: &ProcEnv, name: &str, model: Arc<ModelBundle>) -> Result<RpcServer> {
-    let opts = ChannelOpts::from_config(&env.rack.cfg);
-    let server = RpcServer::open(env, name, opts)?;
+    let server = ChannelBuilder::for_env(env).open(env, name)?;
     let requests = Arc::new(AtomicU64::new(0));
 
     let m = Arc::clone(&model);
     let reqs = Arc::clone(&requests);
-    server.add(F_NEXT_TOKEN, move |ctx| {
-        let tokens: ShmVec<i32> = ctx.arg_val()?;
+    server.serve_scalar::<ShmVec<i32>>(F_NEXT_TOKEN, move |_ctx, tokens| {
         let toks = tokens.to_vec()?;
         reqs.fetch_add(1, Ordering::Relaxed);
         let next = m.next_token(&toks).map_err(|e| RpcError::Remote(e.to_string()))?;
@@ -40,12 +37,10 @@ pub fn serve_model(env: &ProcEnv, name: &str, model: Arc<ModelBundle>) -> Result
 
     let m = Arc::clone(&model);
     server.add(F_LOGITS, move |ctx| {
-        let tokens: ShmVec<i32> = ctx.arg_val()?;
+        let tokens: ShmVec<i32> = ctx.arg_typed()?;
         let toks = tokens.to_vec()?;
         let logits = m.infer(&toks).map_err(|e| RpcError::Remote(e.to_string()))?;
-        let mut out: ShmVec<f32> = ShmVec::with_capacity(ctx.heap.as_ref(), logits.len())?;
-        out.extend_from_slice(ctx.heap.as_ref(), &logits)?;
-        ctx.reply_val(out)
+        ctx.reply_vec(&logits)
     });
 
     Ok(server)
@@ -81,10 +76,8 @@ impl InferenceClient {
         let heap = self.conn.heap();
         let mut shm: ShmVec<i32> = ShmVec::with_capacity(heap.as_ref(), w.len())?;
         shm.extend_from_slice(heap.as_ref(), &w)?;
-        let addr = heap.new_val(shm)?;
-        let ret = self.conn.call(F_NEXT_TOKEN, addr, std::mem::size_of::<ShmVec<i32>>());
+        let ret = self.conn.call_scalar(F_NEXT_TOKEN, &shm, CallOpts::new());
         shm.destroy(heap.as_ref());
-        heap.free_bytes(addr);
         Ok(ret? as i32)
     }
 
@@ -94,14 +87,13 @@ impl InferenceClient {
         let heap = self.conn.heap();
         let mut shm: ShmVec<i32> = ShmVec::with_capacity(heap.as_ref(), w.len())?;
         shm.extend_from_slice(heap.as_ref(), &w)?;
-        let addr = heap.new_val(shm)?;
-        let ret = self.conn.call(F_LOGITS, addr, std::mem::size_of::<ShmVec<i32>>())?;
+        let reply: Result<Reply<ShmVec<f32>>> = self.conn.call_typed(F_LOGITS, &shm, CallOpts::new());
         shm.destroy(heap.as_ref());
-        heap.free_bytes(addr);
-        let mut out: ShmVec<f32> = ShmPtr::<ShmVec<f32>>::from_addr(ret as usize).read()?;
+        let reply = reply?;
+        let mut out = reply.read()?;
         let v = out.to_vec()?;
         out.destroy(heap.as_ref());
-        heap.free_bytes(ret as usize);
+        reply.free();
         Ok(v)
     }
 

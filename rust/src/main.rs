@@ -16,7 +16,7 @@
 //! `SimConfig::apply_kv`) for ablations.
 
 use rpcool::benchkit::fmt_ns;
-use rpcool::channel::{Connection, Rpc};
+use rpcool::channel::{CallOpts, Connection, Rpc};
 use rpcool::inference::{serve_model, InferenceClient};
 use rpcool::metrics::Histogram;
 use rpcool::runtime::{ModelBundle, PjrtRuntime};
@@ -138,11 +138,11 @@ fn cmd_noop(args: &[String], cfg: SimConfig) {
     conn.attach_inline(&server);
     cenv.enter();
     for _ in 0..1000 {
-        conn.call(1, 0, 0).unwrap();
+        conn.invoke(1, (), CallOpts::new()).unwrap();
     }
     let t0 = Instant::now();
     for _ in 0..n {
-        conn.call(1, 0, 0).unwrap();
+        conn.invoke(1, (), CallOpts::new()).unwrap();
     }
     let el = t0.elapsed();
     let per = el.as_nanos() as f64 / n as f64;

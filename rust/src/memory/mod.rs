@@ -13,5 +13,5 @@ pub use containers::{ListNode, MapNode, ShmKey, ShmList, ShmMap, ShmString, ShmV
 pub use heap::{heap_for_addr, Heap, ProcId};
 pub use pod::Pod;
 pub use pool::{Charger, Pool, Segment};
-pub use ptr::{copy_from_shm, copy_into_shm, ShmPtr};
+pub use ptr::{copy_from_shm, copy_into_shm, ShmPtr, ShmView};
 pub use scope::{Scope, ShmAlloc};

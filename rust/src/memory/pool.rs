@@ -134,16 +134,21 @@ impl FreeList {
 
 /// The rack's shared CXL memory device.
 pub struct Pool {
+    /// Page-aligned base of the pool (inside the raw allocation).
     map_base: *mut u8,
     map_len: usize,
+    /// The raw (unaligned) allocation backing the pool, for dealloc.
+    alloc_base: *mut u8,
+    alloc_len: usize,
     page: usize,
     segments: Mutex<FreeList>,
     pub charger: Arc<Charger>,
 }
 
-// The raw pointer is to an mmap region we own for our whole lifetime;
-// all mutation of pool *data* is done by simulated procs which carry
-// their own synchronization (that is the point of the simulation).
+// The raw pointer is to a page-aligned region we own for our whole
+// lifetime; all mutation of pool *data* is done by simulated procs
+// which carry their own synchronization (that is the point of the
+// simulation).
 unsafe impl Send for Pool {}
 unsafe impl Sync for Pool {}
 
@@ -152,23 +157,30 @@ impl Pool {
         let len = cfg.pool_bytes;
         let page = cfg.page_bytes;
         assert!(page.is_power_of_two());
-        let ptr = unsafe {
-            libc::mmap(
-                std::ptr::null_mut(),
-                len,
-                libc::PROT_READ | libc::PROT_WRITE,
-                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE,
-                -1,
-                0,
-            )
-        };
-        if ptr == libc::MAP_FAILED {
-            return Err(RpcError::OutOfMemory { heap: "<pool mmap>".into(), requested: len });
+        assert!(len > 0, "pool size must be non-zero");
+        // Zero-filled and — like the anonymous mmap it models — lazily
+        // committed. Alignment matters: a small-alignment alloc_zeroed
+        // routes to calloc, which mmaps allocations this large so
+        // untouched pages cost nothing; requesting page alignment from
+        // the allocator instead would force an alloc + explicit memset
+        // that commits the whole pool up front. So over-allocate by a
+        // page at minimal alignment and align the base by hand.
+        // (Unlike the old mmap(MAP_NORESERVE), this path is subject to
+        // the kernel's overcommit accounting — pool_bytes far beyond
+        // RAM+swap may be refused where the raw mmap succeeded.)
+        let alloc_len = len + page;
+        let layout = std::alloc::Layout::from_size_align(alloc_len, 1)
+            .map_err(|_| RpcError::Config(format!("bad pool layout: {alloc_len}B")))?;
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        if raw.is_null() {
+            return Err(RpcError::OutOfMemory { heap: "<pool alloc>".into(), requested: len });
         }
-        let base = ptr as usize;
+        let base = (raw as usize + page - 1) & !(page - 1);
         Ok(Arc::new(Pool {
-            map_base: ptr as *mut u8,
+            map_base: base as *mut u8,
             map_len: len,
+            alloc_base: raw,
+            alloc_len,
             page,
             segments: Mutex::new(FreeList { free: vec![(base, len)] }),
             charger: Arc::new(Charger::new(cfg.cost.clone(), cfg.charge)),
@@ -228,8 +240,10 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
+        // SAFETY: same size/align as the Layout used in `new`.
         unsafe {
-            libc::munmap(self.map_base as *mut libc::c_void, self.map_len);
+            let layout = std::alloc::Layout::from_size_align_unchecked(self.alloc_len, 1);
+            std::alloc::dealloc(self.alloc_base, layout);
         }
     }
 }

@@ -131,6 +131,54 @@ impl<T: Pod> ShmPtr<T> {
     }
 }
 
+/// A lifetime-bound typed view of a shared-memory value.
+///
+/// Where `ShmPtr<T>` is a bare address (freely copyable, forgeable,
+/// and unaware of what keeps its pages alive), `ShmView` ties the
+/// pointer to a borrow of whatever owns the backing memory — a heap,
+/// a scope, or an RPC `Reply` — so the view cannot outlive it. Reads
+/// still go through the simulated MMU (`simproc::check_access`), so
+/// seals and sandbox windows are enforced.
+pub struct ShmView<'a, T: Pod> {
+    ptr: ShmPtr<T>,
+    _owner: PhantomData<&'a ()>,
+}
+
+impl<'a, T: Pod> ShmView<'a, T> {
+    /// Bind `ptr` to the lifetime of `owner` (any reference whose
+    /// borrow guarantees the backing pages stay alive).
+    pub fn new<O: ?Sized>(ptr: ShmPtr<T>, owner: &'a O) -> ShmView<'a, T> {
+        let _ = owner;
+        ShmView { ptr, _owner: PhantomData }
+    }
+
+    pub fn ptr(&self) -> ShmPtr<T> {
+        self.ptr
+    }
+
+    pub fn addr(&self) -> usize {
+        self.ptr.addr()
+    }
+
+    /// Checked read through the simulated MMU.
+    pub fn read(&self) -> Result<T> {
+        self.ptr.read()
+    }
+}
+
+impl<T: Pod> Clone for ShmView<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Pod> Copy for ShmView<'_, T> {}
+
+impl<T: Pod> fmt::Debug for ShmView<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ShmView({:#x})", self.ptr.addr())
+    }
+}
+
 /// Checked bulk copy helpers for byte ranges in shared memory.
 pub fn copy_into_shm(dst: usize, src: &[u8]) -> Result<()> {
     simproc::check_access(dst, src.len(), true)?;

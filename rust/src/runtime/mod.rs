@@ -6,59 +6,14 @@
 //! HLO on the PJRT CPU client and materializes the parameters as
 //! literals → `infer()` executes per request. Interchange is HLO
 //! *text* (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos).
-
-use crate::error::{Result, RpcError};
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-fn xe(e: xla::Error) -> RpcError {
-    RpcError::Runtime(e.to_string())
-}
-
-/// A compiled HLO module on the PJRT CPU client.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
-
-/// The PJRT client + executable loader.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<PjrtRuntime> {
-        Ok(PjrtRuntime { client: xla::PjRtClient::cpu().map_err(xe)? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file.
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| RpcError::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(xe)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(xe)?;
-        Ok(Executable { exe, path: path.to_path_buf() })
-    }
-}
-
-impl Executable {
-    /// Execute with literal arguments; returns the tuple elements of
-    /// the (return_tuple=True) output.
-    pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(args).map_err(xe)?;
-        let lit = result[0][0].to_literal_sync().map_err(xe)?;
-        lit.to_tuple1().map_err(xe)
-    }
-}
-
-// ---------------------------------------------------------------- model
+//!
+//! The PJRT backend needs the `xla` crate, which pulls a native
+//! xla_extension the default build cannot assume. The real
+//! implementation is therefore gated behind `--cfg pjrt_runtime`
+//! (add the `xla` dependency to `Cargo.toml` and build with
+//! `RUSTFLAGS="--cfg pjrt_runtime"`); without it, a stub with the
+//! same API surfaces a clear runtime error, and the serving stack,
+//! channels, and benchmarks all build and run dependency-free.
 
 /// One named parameter: shape + where its data lives in params.bin.
 #[derive(Clone, Debug)]
@@ -96,199 +51,339 @@ impl ModelCfg {
     }
 }
 
-/// The loaded model: executable + parameter literals + calling
-/// convention (tokens first, then params in sorted-name order).
-pub struct ModelBundle {
-    pub exe: Executable,
-    pub cfg: ModelCfg,
-    pub specs: Vec<ParamSpec>,
-    param_literals: Vec<xla::Literal>,
-    /// PJRT executables are not Sync; inference is serialized.
-    lock: Mutex<()>,
+#[cfg(pjrt_runtime)]
+mod pjrt {
+    use super::{ModelCfg, ParamSpec};
+    use crate::error::{Result, RpcError};
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    fn xe(e: xla::Error) -> RpcError {
+        RpcError::Runtime(e.to_string())
+    }
+
+    /// A compiled HLO module on the PJRT CPU client.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: PathBuf,
+    }
+
+    /// The PJRT client + executable loader.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Ok(PjrtRuntime { client: xla::PjRtClient::cpu().map_err(xe)? })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file.
+        pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| RpcError::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(xe)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xe)?;
+            Ok(Executable { exe, path: path.to_path_buf() })
+        }
+    }
+
+    impl Executable {
+        /// Execute with literal arguments; returns the tuple elements of
+        /// the (return_tuple=True) output.
+        pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+            let result = self.exe.execute::<xla::Literal>(args).map_err(xe)?;
+            let lit = result[0][0].to_literal_sync().map_err(xe)?;
+            lit.to_tuple1().map_err(xe)
+        }
+    }
+
+    /// The loaded model: executable + parameter literals + calling
+    /// convention (tokens first, then params in sorted-name order).
+    pub struct ModelBundle {
+        pub exe: Executable,
+        pub cfg: ModelCfg,
+        pub specs: Vec<ParamSpec>,
+        param_literals: Vec<xla::Literal>,
+        /// PJRT executables are not Sync; inference is serialized.
+        lock: Mutex<()>,
+    }
+
+    // SAFETY: the underlying PJRT executable and literals are only touched
+    // inside `infer`/`next_token`, which hold `lock` — all cross-thread
+    // access is serialized. (XLA's PjRtLoadedExecutable::Execute is itself
+    // thread-safe; the mutex is belt and braces for the literal clones.)
+    unsafe impl Send for ModelBundle {}
+    unsafe impl Sync for ModelBundle {}
+
+    impl ModelBundle {
+        /// Load `model.hlo.txt` + `model_meta.txt` + `params.bin` from an
+        /// artifacts directory.
+        pub fn load(rt: &PjrtRuntime, dir: impl AsRef<Path>) -> Result<ModelBundle> {
+            let dir = dir.as_ref();
+            let exe = rt.load(dir.join("model.hlo.txt"))?;
+            let meta = std::fs::read_to_string(dir.join("model_meta.txt"))
+                .map_err(|e| RpcError::Runtime(format!("model_meta.txt: {e}")))?;
+
+            let mut specs = Vec::new();
+            let mut cfg = ModelCfg::default();
+            let mut offset = 0usize;
+            for line in meta.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if let Some(rest) = line.strip_prefix("# cfg ") {
+                    for kv in rest.split_whitespace() {
+                        let (k, v) = kv.split_once('=').unwrap_or(("", "0"));
+                        let v: usize = v.parse().unwrap_or(0);
+                        match k {
+                            "vocab" => cfg.vocab = v,
+                            "d_model" => cfg.d_model = v,
+                            "n_heads" => cfg.n_heads = v,
+                            "n_layers" => cfg.n_layers = v,
+                            "d_ff" => cfg.d_ff = v,
+                            "seq" => cfg.seq = v,
+                            _ => {}
+                        }
+                    }
+                    continue;
+                }
+                let mut parts = line.split_whitespace();
+                let name = parts.next().unwrap_or("").to_string();
+                let dtype = parts.next().unwrap_or("");
+                let dims: Vec<usize> = parts
+                    .next()
+                    .unwrap_or("")
+                    .split('x')
+                    .filter_map(|d| d.parse().ok())
+                    .collect();
+                if name == "tokens" {
+                    continue; // runtime input, not a parameter
+                }
+                if dtype != "f32" {
+                    return Err(RpcError::Runtime(format!("unsupported dtype {dtype}")));
+                }
+                let spec = ParamSpec { name, dims, offset_f32: offset };
+                offset += spec.numel();
+                specs.push(spec);
+            }
+
+            // Read params.bin and materialize literals per spec.
+            let bytes = std::fs::read(dir.join("params.bin"))
+                .map_err(|e| RpcError::Runtime(format!("params.bin: {e}")))?;
+            if bytes.len() != offset * 4 {
+                return Err(RpcError::Runtime(format!(
+                    "params.bin is {} bytes, meta expects {}",
+                    bytes.len(),
+                    offset * 4
+                )));
+            }
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let mut param_literals = Vec::with_capacity(specs.len());
+            for s in &specs {
+                let data = &floats[s.offset_f32..s.offset_f32 + s.numel()];
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = s.dims.iter().map(|d| *d as i64).collect();
+                let lit =
+                    if s.dims.len() > 1 { lit.reshape(&dims_i64).map_err(xe)? } else { lit };
+                param_literals.push(lit);
+            }
+
+            Ok(ModelBundle { exe, cfg, specs, param_literals, lock: Mutex::new(()) })
+        }
+
+        /// Run the model on a token window; returns flat logits
+        /// (seq × vocab, row-major).
+        pub fn infer(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+            if tokens.len() != self.cfg.seq {
+                return Err(RpcError::Runtime(format!(
+                    "expected {} tokens, got {}",
+                    self.cfg.seq,
+                    tokens.len()
+                )));
+            }
+            let _g = self.lock.lock().unwrap();
+            let mut args = Vec::with_capacity(1 + self.param_literals.len());
+            args.push(xla::Literal::vec1(tokens));
+            for lit in &self.param_literals {
+                // Literal clone = host-side copy; params are small and the
+                // alternative (re-creating from floats) is slower.
+                args.push(lit.clone());
+            }
+            let out = self.exe.run(&args)?;
+            out.to_vec::<f32>().map_err(xe)
+        }
+
+        /// Greedy next-token from the last position's logits.
+        pub fn next_token(&self, tokens: &[i32]) -> Result<i32> {
+            let logits = self.infer(tokens)?;
+            let vocab = self.cfg.vocab;
+            let last = &logits[(self.cfg.seq - 1) * vocab..];
+            let mut best = 0usize;
+            for i in 1..vocab {
+                if last[i] > last[best] {
+                    best = i;
+                }
+            }
+            Ok(best as i32)
+        }
+    }
 }
 
-// SAFETY: the underlying PJRT executable and literals are only touched
-// inside `infer`/`next_token`, which hold `lock` — all cross-thread
-// access is serialized. (XLA's PjRtLoadedExecutable::Execute is itself
-// thread-safe; the mutex is belt and braces for the literal clones.)
-unsafe impl Send for ModelBundle {}
-unsafe impl Sync for ModelBundle {}
+#[cfg(pjrt_runtime)]
+pub use pjrt::{Executable, ModelBundle, PjrtRuntime};
 
-impl ModelBundle {
-    /// Load `model.hlo.txt` + `model_meta.txt` + `params.bin` from an
-    /// artifacts directory.
-    pub fn load(rt: &PjrtRuntime, dir: impl AsRef<Path>) -> Result<ModelBundle> {
-        let dir = dir.as_ref();
-        let exe = rt.load(dir.join("model.hlo.txt"))?;
-        let meta = std::fs::read_to_string(dir.join("model_meta.txt"))
-            .map_err(|e| RpcError::Runtime(format!("model_meta.txt: {e}")))?;
+#[cfg(not(pjrt_runtime))]
+mod stub {
+    use super::{ModelCfg, ParamSpec};
+    use crate::error::{Result, RpcError};
+    use std::path::{Path, PathBuf};
 
-        let mut specs = Vec::new();
-        let mut cfg = ModelCfg::default();
-        let mut offset = 0usize;
-        for line in meta.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            if let Some(rest) = line.strip_prefix("# cfg ") {
-                for kv in rest.split_whitespace() {
-                    let (k, v) = kv.split_once('=').unwrap_or(("", "0"));
-                    let v: usize = v.parse().unwrap_or(0);
-                    match k {
-                        "vocab" => cfg.vocab = v,
-                        "d_model" => cfg.d_model = v,
-                        "n_heads" => cfg.n_heads = v,
-                        "n_layers" => cfg.n_layers = v,
-                        "d_ff" => cfg.d_ff = v,
-                        "seq" => cfg.seq = v,
-                        _ => {}
-                    }
-                }
-                continue;
-            }
-            let mut parts = line.split_whitespace();
-            let name = parts.next().unwrap_or("").to_string();
-            let dtype = parts.next().unwrap_or("");
-            let dims: Vec<usize> = parts
-                .next()
-                .unwrap_or("")
-                .split('x')
-                .filter_map(|d| d.parse().ok())
-                .collect();
-            if name == "tokens" {
-                continue; // runtime input, not a parameter
-            }
-            if dtype != "f32" {
-                return Err(RpcError::Runtime(format!("unsupported dtype {dtype}")));
-            }
-            let spec = ParamSpec { name, dims, offset_f32: offset };
-            offset += spec.numel();
-            specs.push(spec);
-        }
-
-        // Read params.bin and materialize literals per spec.
-        let bytes = std::fs::read(dir.join("params.bin"))
-            .map_err(|e| RpcError::Runtime(format!("params.bin: {e}")))?;
-        if bytes.len() != offset * 4 {
-            return Err(RpcError::Runtime(format!(
-                "params.bin is {} bytes, meta expects {}",
-                bytes.len(),
-                offset * 4
-            )));
-        }
-        let floats: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        let mut param_literals = Vec::with_capacity(specs.len());
-        for s in &specs {
-            let data = &floats[s.offset_f32..s.offset_f32 + s.numel()];
-            let lit = xla::Literal::vec1(data);
-            let dims_i64: Vec<i64> = s.dims.iter().map(|d| *d as i64).collect();
-            let lit = if s.dims.len() > 1 { lit.reshape(&dims_i64).map_err(xe)? } else { lit };
-            param_literals.push(lit);
-        }
-
-        Ok(ModelBundle { exe, cfg, specs, param_literals, lock: Mutex::new(()) })
+    fn unavailable() -> RpcError {
+        RpcError::Runtime(
+            "built without the PJRT runtime: add the `xla` dependency and build with \
+             RUSTFLAGS=\"--cfg pjrt_runtime\""
+                .into(),
+        )
     }
 
-    /// Run the model on a token window; returns flat logits
-    /// (seq × vocab, row-major).
-    pub fn infer(&self, tokens: &[i32]) -> Result<Vec<f32>> {
-        if tokens.len() != self.cfg.seq {
-            return Err(RpcError::Runtime(format!(
-                "expected {} tokens, got {}",
-                self.cfg.seq,
-                tokens.len()
-            )));
-        }
-        let _g = self.lock.lock().unwrap();
-        let mut args = Vec::with_capacity(1 + self.param_literals.len());
-        args.push(xla::Literal::vec1(tokens));
-        for lit in &self.param_literals {
-            // Literal clone = host-side copy; params are small and the
-            // alternative (re-creating from floats) is slower.
-            args.push(lit.clone());
-        }
-        let out = self.exe.run(&args)?;
-        out.to_vec::<f32>().map_err(xe)
+    /// API-compatible stand-in for the PJRT client; every operation
+    /// reports the runtime as unavailable.
+    pub struct PjrtRuntime {
+        _private: (),
     }
 
-    /// Greedy next-token from the last position's logits.
-    pub fn next_token(&self, tokens: &[i32]) -> Result<i32> {
-        let logits = self.infer(tokens)?;
-        let vocab = self.cfg.vocab;
-        let last = &logits[(self.cfg.seq - 1) * vocab..];
-        let mut best = 0usize;
-        for i in 1..vocab {
-            if last[i] > last[best] {
-                best = i;
-            }
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Err(unavailable())
         }
-        Ok(best as i32)
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn load(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+            Err(unavailable())
+        }
     }
+
+    pub struct Executable {
+        pub path: PathBuf,
+    }
+
+    pub struct ModelBundle {
+        pub exe: Executable,
+        pub cfg: ModelCfg,
+        pub specs: Vec<ParamSpec>,
+    }
+
+    impl ModelBundle {
+        pub fn load(_rt: &PjrtRuntime, _dir: impl AsRef<Path>) -> Result<ModelBundle> {
+            Err(unavailable())
+        }
+
+        pub fn infer(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+
+        pub fn next_token(&self, _tokens: &[i32]) -> Result<i32> {
+            Err(unavailable())
+        }
+    }
+}
+
+#[cfg(not(pjrt_runtime))]
+pub use stub::{Executable, ModelBundle, PjrtRuntime};
+
+/// Quick capability probe: is the real PJRT backend compiled in?
+pub fn pjrt_available() -> bool {
+    cfg!(pjrt_runtime)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> Option<PathBuf> {
-        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        d.join("model.hlo.txt").exists().then_some(d)
+    #[cfg(not(pjrt_runtime))]
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!pjrt_available());
+        let e = PjrtRuntime::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT"), "got: {e}");
     }
 
-    #[test]
-    fn pjrt_client_boots() {
-        let rt = PjrtRuntime::cpu().unwrap();
-        assert_eq!(rt.platform(), "cpu");
-    }
+    #[cfg(pjrt_runtime)]
+    mod with_pjrt {
+        use super::super::*;
+        use std::path::PathBuf;
 
-    #[test]
-    fn load_and_run_matmul_kernel() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let rt = PjrtRuntime::cpu().unwrap();
-        let exe = rt.load(dir.join("matmul.hlo.txt")).unwrap();
-        // act(x @ w + b) with x = I, w = diag(2), b = 0 → gelu(2) on diag.
-        let n = 128usize;
-        let mut x = vec![0f32; n * n];
-        let mut w = vec![0f32; n * n];
-        for i in 0..n {
-            x[i * n + i] = 1.0;
-            w[i * n + i] = 2.0;
+        fn artifacts_dir() -> Option<PathBuf> {
+            let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            d.join("model.hlo.txt").exists().then_some(d)
         }
-        let b = vec![0f32; n];
-        let args = [
-            xla::Literal::vec1(&x).reshape(&[n as i64, n as i64]).unwrap(),
-            xla::Literal::vec1(&w).reshape(&[n as i64, n as i64]).unwrap(),
-            xla::Literal::vec1(&b),
-        ];
-        let out = exe.run(&args).unwrap().to_vec::<f32>().unwrap();
-        // gelu(2.0) ≈ 1.954; off-diagonal gelu(0) = 0.
-        assert!((out[0] - 1.9545977).abs() < 1e-3, "got {}", out[0]);
-        assert!(out[1].abs() < 1e-6);
-    }
 
-    #[test]
-    fn model_bundle_infer_shapes_and_determinism() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let rt = PjrtRuntime::cpu().unwrap();
-        let model = ModelBundle::load(&rt, &dir).unwrap();
-        assert!(model.cfg.seq > 0 && model.cfg.vocab > 0);
-        let tokens: Vec<i32> = (0..model.cfg.seq as i32).collect();
-        let a = model.infer(&tokens).unwrap();
-        assert_eq!(a.len(), model.cfg.seq * model.cfg.vocab);
-        assert!(a.iter().all(|x| x.is_finite()));
-        let b = model.infer(&tokens).unwrap();
-        assert_eq!(a, b, "inference must be deterministic");
-        let t = model.next_token(&tokens).unwrap();
-        assert!((t as usize) < model.cfg.vocab);
+        #[test]
+        fn pjrt_client_boots() {
+            let rt = PjrtRuntime::cpu().unwrap();
+            assert_eq!(rt.platform(), "cpu");
+        }
+
+        #[test]
+        fn load_and_run_matmul_kernel() {
+            let Some(dir) = artifacts_dir() else {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            };
+            let rt = PjrtRuntime::cpu().unwrap();
+            let exe = rt.load(dir.join("matmul.hlo.txt")).unwrap();
+            // act(x @ w + b) with x = I, w = diag(2), b = 0 → gelu(2) on diag.
+            let n = 128usize;
+            let mut x = vec![0f32; n * n];
+            let mut w = vec![0f32; n * n];
+            for i in 0..n {
+                x[i * n + i] = 1.0;
+                w[i * n + i] = 2.0;
+            }
+            let b = vec![0f32; n];
+            let args = [
+                xla::Literal::vec1(&x).reshape(&[n as i64, n as i64]).unwrap(),
+                xla::Literal::vec1(&w).reshape(&[n as i64, n as i64]).unwrap(),
+                xla::Literal::vec1(&b),
+            ];
+            let out = exe.run(&args).unwrap().to_vec::<f32>().unwrap();
+            // gelu(2.0) ≈ 1.954; off-diagonal gelu(0) = 0.
+            assert!((out[0] - 1.9545977).abs() < 1e-3, "got {}", out[0]);
+            assert!(out[1].abs() < 1e-6);
+        }
+
+        #[test]
+        fn model_bundle_infer_shapes_and_determinism() {
+            let Some(dir) = artifacts_dir() else {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            };
+            let rt = PjrtRuntime::cpu().unwrap();
+            let model = ModelBundle::load(&rt, &dir).unwrap();
+            assert!(model.cfg.seq > 0 && model.cfg.vocab > 0);
+            let tokens: Vec<i32> = (0..model.cfg.seq as i32).collect();
+            let a = model.infer(&tokens).unwrap();
+            assert_eq!(a.len(), model.cfg.seq * model.cfg.vocab);
+            assert!(a.iter().all(|x| x.is_finite()));
+            let b = model.infer(&tokens).unwrap();
+            assert_eq!(a, b, "inference must be deterministic");
+            let t = model.next_token(&tokens).unwrap();
+            assert!((t as usize) < model.cfg.vocab);
+        }
     }
 }

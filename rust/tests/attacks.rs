@@ -2,7 +2,7 @@
 //! mechanisms exist to stop (§4.3–§4.5, §5.5). Every test stages an
 //! actual attack against a live server and asserts containment.
 
-use rpcool::channel::{ChannelOpts, Connection, Rpc, RpcServer};
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc};
 use rpcool::memory::{ShmList, ShmPtr};
 use rpcool::orchestrator::Acl;
 use rpcool::{Rack, RpcError, SimConfig};
@@ -44,7 +44,7 @@ fn linked_list_tail_aimed_at_server_secret() {
 
         // Without the sandbox the traversal would reach the secret;
         // with it, the RPC returns a sandbox-violation error.
-        let r = conn.call_secure(1, &scope, addr, 64);
+        let r = conn.invoke(1, (addr, 64), CallOpts::secure(&scope));
         assert!(
             matches!(r, Err(RpcError::SandboxViolation { .. })),
             "attack must be contained: {r:?}"
@@ -97,7 +97,8 @@ fn toctou_argument_swap_blocked_by_seal() {
     };
 
     // Sealed call: the attacker cannot write; handler sees one value.
-    let stable = cenv.run(|| conn.call_sealed(1, &scope, addr, 8)).unwrap();
+    let stable =
+        cenv.run(|| conn.invoke(1, (addr, 8), CallOpts::new().sealed(&scope))).unwrap();
     assert_eq!(stable, 1, "sealed argument must be immutable in flight");
     stop.store(1, Ordering::Release);
     attacker.join().unwrap();
@@ -155,13 +156,11 @@ fn app_mprotect_on_heap_denied() {
 fn acl_gates_connection() {
     let rack = Rack::for_tests();
     let senv = rack.proc_env(0);
-    let mut opts = ChannelOpts::from_config(&rack.cfg);
     let mut acl = Acl::private(senv.uid);
     // Grant exactly one other uid.
     let friend = rack.proc_env(1);
     acl.grant(friend.uid, rpcool::orchestrator::Mode::RWC);
-    opts.acl = Some(acl);
-    let server = RpcServer::open(&senv, "atk/acl", opts).unwrap();
+    let server = ChannelBuilder::from_config(&rack.cfg).acl(acl).open(&senv, "atk/acl").unwrap();
     server.add(1, |_| Ok(0));
     let _t = server.spawn_listener();
 
@@ -221,7 +220,7 @@ fn hoarding_and_scope_bombs_contained() {
         assert!(scopes.len() < 1000, "heap must exhaust before the pool");
     }
     // Other connections still work.
-    attacker.run(|| conns[1].call(1, 0, 0)).unwrap();
+    attacker.run(|| conns[1].invoke(1, (), CallOpts::new())).unwrap();
 }
 
 /// Malicious *document*: a ShmVal whose string points at an arbitrary
@@ -257,7 +256,7 @@ fn wild_document_string_contained() {
             let sptr = (addr + std::mem::offset_of!(ShmVal, str)) as *mut usize;
             *sptr = secret;
         }
-        let r = conn.call_secure(1, &scope, addr, std::mem::size_of::<ShmVal>());
+        let r = conn.invoke(1, (addr, std::mem::size_of::<ShmVal>()), CallOpts::secure(&scope));
         assert!(
             matches!(r, Err(RpcError::SandboxViolation { .. })),
             "forged string pointer must violate the sandbox: {r:?}"

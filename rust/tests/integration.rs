@@ -5,7 +5,7 @@
 use rpcool::apps::cooldb::{serve_rpcool as cooldb_serve, CoolClient, CoolIndex, RpcoolCool};
 use rpcool::apps::doc::Val;
 use rpcool::apps::memcached::{serve_rpcool as mc_serve, Cache, KvClient, RpcoolKv};
-use rpcool::channel::{Connection, Rpc, TransportSel};
+use rpcool::channel::{CallOpts, Connection, Rpc, TransportSel};
 use rpcool::memory::{ShmPtr, ShmString};
 use rpcool::orchestrator::Notification;
 use rpcool::workloads::nobench::NumRangeQuery;
@@ -20,19 +20,18 @@ fn fig6_pingpong_with_live_listener() {
     let rack = Rack::for_tests();
     let env = rack.proc_env(0);
     let rpc = Rpc::open(&env, "it/mychannel").unwrap();
-    rpc.add(100, |ctx| {
-        let s: ShmString = ctx.arg_val()?;
-        assert!(s.eq_str("ping"));
-        ctx.reply_string("pong")
+    rpc.serve::<ShmString, ShmString>(100, |ctx, ping| {
+        assert!(ping.eq_str("ping"));
+        ShmString::from_str(ctx.heap, "pong")
     });
     let t = rpc.spawn_listener();
     let cenv = rack.proc_env(1);
     let conn = Rpc::connect(&cenv, "it/mychannel").unwrap();
     cenv.run(|| {
         for _ in 0..100 {
-            let arg = conn.new_string("ping").unwrap();
-            let ret = conn.call_ptr(100, arg).unwrap();
-            let pong: ShmString = ShmPtr::<ShmString>::from_addr(ret as usize).read().unwrap();
+            let ping = ShmString::from_str(conn.heap().as_ref(), "ping").unwrap();
+            let pong: ShmString =
+                conn.call_typed(100, &ping, CallOpts::new()).unwrap().take().unwrap();
             assert!(pong.eq_str("pong"));
         }
     });
@@ -58,7 +57,7 @@ fn crash_recovery_with_background_ticker() {
 
     let cenv = rack.proc_env(1);
     let conn = Rpc::connect(&cenv, "it/fragile").unwrap();
-    assert_eq!(cenv.run(|| conn.call(1, 0, 0)).unwrap(), 7);
+    assert_eq!(cenv.run(|| conn.invoke(1, (), CallOpts::new())).unwrap(), 7);
     let heap_id = conn.heap().id;
 
     // Keep the client's lease fresh while the server dies.
@@ -89,7 +88,7 @@ fn crash_recovery_with_background_ticker() {
     );
 
     // Calls now fail (connection closed by channel teardown).
-    let e = cenv.run(|| conn.call(1, 0, 0));
+    let e = cenv.run(|| conn.invoke(1, (), CallOpts::new()));
     assert!(e.is_err());
     drop(conn);
     daemon_renewal.join().unwrap();
@@ -164,7 +163,8 @@ fn seal_blocks_concurrent_sender_mutation() {
         })
     };
     std::thread::sleep(Duration::from_millis(5));
-    let consistent = cenv.run(|| conn.call_sealed(1, &scope, addr, 8)).unwrap();
+    let consistent =
+        cenv.run(|| conn.invoke(1, (addr, 8), CallOpts::new().sealed(&scope))).unwrap();
     assert_eq!(consistent, 1, "handler must see a stable sealed value");
     stop.store(1, Ordering::Release);
     let blocked = racer.join().unwrap();
@@ -197,11 +197,11 @@ fn mixed_transport_clients() {
 
     near.run(|| {
         let a = c1.new_val(10u64).unwrap();
-        assert_eq!(c1.call_ptr(1, a).unwrap(), 11);
+        assert_eq!(c1.invoke(1, a, CallOpts::new()).unwrap(), 11);
     });
     far.run(|| {
         let a = c2.new_val(20u64).unwrap();
-        assert_eq!(c2.call_ptr(1, a).unwrap(), 21);
+        assert_eq!(c2.invoke(1, a, CallOpts::new()).unwrap(), 21);
     });
     let (faults, _) = c2.shared.dsm.as_ref().unwrap().stats();
     assert!(faults > 0);
@@ -296,7 +296,7 @@ fn config_overrides_flow_to_charges() {
     let conn = Rpc::connect(&cenv, "it/knob").unwrap();
     conn.attach_inline(&server);
     let before = rack.pool.charger.total_charged_ns();
-    cenv.run(|| conn.call(1, 0, 0)).unwrap();
+    cenv.run(|| conn.invoke(1, (), CallOpts::new())).unwrap();
     let delta = rack.pool.charger.total_charged_ns() - before;
     assert!(delta >= 10_000, "2× overridden signal cost must be charged, got {delta}");
 }
