@@ -9,7 +9,7 @@
 
 use rpcool::apps::mongodb::{run_ycsb, serve_net, serve_rpcool, DocStore, RpcoolDoc};
 use rpcool::baselines::netrpc::Flavor;
-use rpcool::benchkit::Table;
+use rpcool::benchkit::{BenchReport, Table};
 use rpcool::channel::TransportSel;
 use rpcool::workloads::ycsb::WorkloadKind;
 use rpcool::{Rack, SimConfig};
@@ -27,6 +27,7 @@ fn main() {
     };
     let rack = Rack::new(SimConfig::for_bench());
     let mut t = Table::new(&["Workload", "RPCool", "UDS", "spd", "RPCool(DSM)", "TCP(IPoIB)", "spd"]);
+    let mut rep = BenchReport::new("fig10_mongodb");
 
     for kind in WorkloadKind::all() {
         // RPCool (CXL).
@@ -82,9 +83,21 @@ fn main() {
             format!("{tcp:.2?}"),
             format!("{:.2}×", tcp.as_secs_f64() / dsm.as_secs_f64()),
         ]);
+        for (transport, wall) in
+            [("rpcool_cxl", cxl), ("uds", uds), ("rpcool_dsm", dsm), ("tcp", tcp)]
+        {
+            rep.row(
+                &format!("ycsb_{}/{}", kind.name(), transport),
+                0.0,
+                0.0,
+                wall.as_nanos() as f64 / nops as f64,
+                nops as f64 / wall.as_secs_f64(),
+            );
+        }
     }
 
     t.print(&format!(
         "Figure 10 — MongoDB YCSB ({nkeys} keys, {nops} ops; paper: RPCool wins except E; DSM ≥1.34× vs TCP)"
     ));
+    rep.emit();
 }

@@ -12,7 +12,7 @@ use rpcool::apps::cooldb::{
     run_fig11, serve_net, serve_rpcool, CoolIndex, RpcoolCool, ZhangCool,
 };
 use rpcool::baselines::netrpc::Flavor;
-use rpcool::benchkit::Table;
+use rpcool::benchkit::{BenchReport, Table};
 use rpcool::channel::TransportSel;
 use rpcool::{Rack, SimConfig};
 use std::sync::Arc;
@@ -31,6 +31,11 @@ fn main() {
     cfg.pool_bytes = 1 << 31; // room for the corpus (shared heap)
     let rack = Rack::new(cfg);
     let mut t = Table::new(&["Framework", "build", "search"]);
+    let mut rep = BenchReport::new("fig11_cooldb");
+    let rep_row = |rep: &mut BenchReport, label: &str, b: std::time::Duration, s: std::time::Duration| {
+        rep.row(&format!("{label}/build"), 0.0, 0.0, b.as_nanos() as f64, 0.0);
+        rep.row(&format!("{label}/search"), 0.0, 0.0, s.as_nanos() as f64, 0.0);
+    };
 
     // ---- RPCool (CXL) ----
     let env = rack.proc_env(0);
@@ -42,6 +47,7 @@ fn main() {
     cenv.enter();
     let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
     t.row(&["RPCool".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    rep_row(&mut rep, "rpcool_cxl", b, s);
     let (rp_b, rp_s) = (b, s);
     drop(db);
     server.stop();
@@ -56,6 +62,7 @@ fn main() {
     cenv.enter();
     let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
     t.row(&["RPCool (Secure)".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    rep_row(&mut rep, "rpcool_secure", b, s);
     drop(db);
     server.stop();
 
@@ -76,6 +83,7 @@ fn main() {
         format!("{:.2?} (×4 scaled)", b * 4),
         format!("{s:.2?}"),
     ]);
+    rep_row(&mut rep, "rpcool_rdma_x4", b * 4, s);
     drop(db);
     server.stop();
 
@@ -89,6 +97,7 @@ fn main() {
     cenv.enter();
     let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
     t.row(&["ZhangRPC".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    rep_row(&mut rep, "zhang", b, s);
     drop(db);
     server.stop();
 
@@ -97,6 +106,7 @@ fn main() {
     db.client_inline(&srv);
     let (b, s) = run_fig11(&db, ndocs, nsearches, 42).unwrap();
     t.row(&["eRPC".into(), format!("{b:.2?}"), format!("{s:.2?}")]);
+    rep_row(&mut rep, "erpc", b, s);
     srv.stop();
     let (er_b, er_s) = (b, s);
 
@@ -108,4 +118,5 @@ fn main() {
         er_b.as_secs_f64() / rp_b.as_secs_f64(),
         er_s.as_secs_f64() / rp_s.as_secs_f64(),
     );
+    rep.emit();
 }

@@ -10,7 +10,7 @@
 //! Run: `cargo bench --bench fig12_deathstar [-- --quick|--full]`
 
 use rpcool::apps::socialnet::{sample_post, RpcoolSocial, SocialState, ThriftSocial};
-use rpcool::benchkit::Table;
+use rpcool::benchkit::{BenchReport, Table};
 use rpcool::channel::waiter::SleepPolicy;
 use rpcool::metrics::Histogram;
 use rpcool::util::Rng;
@@ -64,6 +64,7 @@ fn main() {
     let nusers = 1_000;
     let rack = Rack::new(SimConfig::for_bench());
     let mut t = Table::new(&["Backend", "offered req/s", "achieved", "p50", "p99"]);
+    let mut rep = BenchReport::new("fig12_deathstar");
 
     // RPCool and RPCool (Secure).
     for secure in [false, true] {
@@ -83,6 +84,13 @@ fn main() {
                 Histogram::fmt_ns(p50),
                 Histogram::fmt_ns(p99),
             ]);
+            rep.row(
+                &format!("{}/offered{rate:.0}", if secure { "rpcool_secure" } else { "rpcool" }),
+                p50 as f64,
+                p99 as f64,
+                0.0,
+                ach,
+            );
         }
         net.stop();
     }
@@ -100,8 +108,10 @@ fn main() {
             Histogram::fmt_ns(p50),
             Histogram::fmt_ns(p99),
         ]);
+        rep.row(&format!("thrift/offered{rate:.0}"), p50 as f64, p99 as f64, 0.0, ach);
     }
     net.stop();
 
     t.print("Figure 12 — SocialNetwork compose-post latency vs offered load (paper: RPCool ≈ Thrift, higher peak)");
+    rep.emit();
 }

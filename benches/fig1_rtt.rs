@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench fig1_rtt`
 
-use rpcool::benchkit::{fmt_ns, time_op, Table};
+use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
 use rpcool::transport::{LinkKind, SimNicPair, Transport};
 use rpcool::{Rack, SimConfig};
 use std::sync::Arc;
@@ -16,6 +16,7 @@ fn main() {
     let rack = Rack::new(SimConfig::for_bench());
     let charger = Arc::clone(&rack.pool.charger);
     let mut t = Table::new(&["Protocol", "RTT", "Note"]);
+    let mut rep = BenchReport::new("fig1_rtt");
 
     // CXL: a dependent far-memory load pair (request/response via
     // shared memory — two one-way signal latencies).
@@ -24,6 +25,7 @@ fn main() {
         charger.charge_cxl_signal();
     });
     t.row(&["CXL ld/st".into(), fmt_ns(m), "2× far-memory signal".into()]);
+    rep.row("CXL ld/st", 0.0, 0.0, m, 1e9 / m);
 
     // RDMA / TCP / HTTP2: message out + message back through the NIC
     // model (inline send+recv, costs charged on send).
@@ -42,8 +44,10 @@ fn main() {
             let _ = pair.a.recv(Duration::from_secs(1)).unwrap();
         });
         t.row(&[label.into(), fmt_ns(m), note.into()]);
+        rep.row(label, 0.0, 0.0, m, 1e9 / m);
     }
 
     t.print("Figure 1 — RTT comparison of communication protocols");
+    rep.emit();
     println!("\nexpected ladder: CXL < RDMA < UDS < TCP < HTTP (paper Fig. 1).");
 }

@@ -10,7 +10,7 @@
 
 use rpcool::apps::memcached::{run_ycsb, serve_net, serve_rpcool, Cache, RpcoolKv};
 use rpcool::baselines::netrpc::Flavor;
-use rpcool::benchkit::Table;
+use rpcool::benchkit::{BenchReport, Table};
 use rpcool::channel::TransportSel;
 use rpcool::workloads::ycsb::WorkloadKind;
 use rpcool::{Rack, SimConfig};
@@ -28,6 +28,7 @@ fn main() {
     };
     let rack = Rack::new(SimConfig::for_bench());
     let mut t = Table::new(&["Workload", "RPCool", "UDS", "spd", "RPCool(DSM)", "TCP(IPoIB)", "spd"]);
+    let mut rep = BenchReport::new("fig9_memcached");
 
     let workloads =
         [WorkloadKind::A, WorkloadKind::B, WorkloadKind::C, WorkloadKind::D, WorkloadKind::F];
@@ -89,9 +90,21 @@ fn main() {
             format!("{tcp:.2?}"),
             format!("{:.2}×", tcp.as_secs_f64() / dsm.as_secs_f64()),
         ]);
+        for (transport, wall) in
+            [("rpcool_cxl", cxl), ("uds", uds), ("rpcool_dsm", dsm), ("tcp", tcp)]
+        {
+            rep.row(
+                &format!("ycsb_{}/{}", kind.name(), transport),
+                0.0,
+                0.0,
+                wall.as_nanos() as f64 / nops as f64,
+                nops as f64 / wall.as_secs_f64(),
+            );
+        }
     }
 
     t.print(&format!(
         "Figure 9 — Memcached YCSB ({nkeys} keys, {nops} ops; paper: RPCool ≥6.0× vs UDS, DSM ≥2.1× vs TCP)"
     ));
+    rep.emit();
 }

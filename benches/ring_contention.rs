@@ -1,0 +1,168 @@
+//! RING CONTENTION: multi-threaded clients hammering one connection's
+//! slot ring — the workload the indexed MPMC redesign targets. Not a
+//! paper figure; this is the repo's own perf trajectory for the hot
+//! path (see ISSUE 2 / DESIGN.md "Hot path anatomy").
+//!
+//! Two layers:
+//! * `ring/raw/*` — the bare `RpcRing` with latency charging off, so
+//!   the *structural* cost (ticket CAS, slot touch, padding) is what
+//!   is measured, across 1–8 client threads on an 8-slot ring.
+//! * `conn/charged/*` — full `call_typed` round trips through a
+//!   shared connection with the cost model charging, including the
+//!   lock-free argument arena.
+//!
+//! Each row reports throughput and per-op latency percentiles;
+//! `charged_ns_per_op` must stay constant across hot-path refactors
+//! (same number of doorbell events per RPC — the acceptance guard).
+//!
+//! Run: `cargo bench --bench ring_contention [-- --quick]`
+
+use rpcool::benchkit::{BenchReport, Table};
+use rpcool::channel::ring::{RpcRing, NO_SEAL, ST_OK};
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection};
+use rpcool::memory::Heap;
+use rpcool::metrics::Histogram;
+use rpcool::{ChargePolicy, Rack, SimConfig};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn ring_raw(threads: u64, ops_per_thread: u64) -> (f64, Histogram) {
+    let mut cfg = SimConfig::for_tests(); // Skip charging: raw structure
+    cfg.charge = ChargePolicy::Skip;
+    let pool = rpcool::memory::pool::Pool::new(&cfg).unwrap();
+    let heap = Heap::new(&pool, "contend", 1 << 20).unwrap();
+    let ring = Arc::new(RpcRing::create(&heap, 8).unwrap());
+
+    let server = Arc::clone(&ring);
+    let total = threads * ops_per_thread;
+    let srv = std::thread::spawn(move || {
+        let mut served = 0u64;
+        while served < total {
+            if let Some(i) = server.take_request() {
+                let f = server.slot(i).func.load(Ordering::Relaxed);
+                server.respond(i, ST_OK, f as u64 + 1);
+                served += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    });
+
+    let hist = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for tid in 0..threads {
+        let ring = Arc::clone(&ring);
+        let hist = Arc::clone(&hist);
+        clients.push(std::thread::spawn(move || {
+            for k in 0..ops_per_thread {
+                let t = Instant::now();
+                let i = loop {
+                    if let Some(i) = ring.claim() {
+                        break i;
+                    }
+                    std::hint::spin_loop();
+                };
+                ring.publish(i, (tid * ops_per_thread + k) as u32, 0, NO_SEAL, 0, 0);
+                while !ring.response_ready(i) {
+                    std::hint::spin_loop();
+                }
+                let (st, _ret) = ring.consume(i);
+                assert_eq!(st, ST_OK);
+                hist.record(t.elapsed());
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    srv.join().unwrap();
+    let wall = t0.elapsed();
+    (total as f64 / wall.as_secs_f64(), Arc::try_unwrap(hist).ok().unwrap())
+}
+
+fn conn_charged(threads: u64, ops_per_thread: u64) -> (f64, Histogram, f64) {
+    let rack = Rack::new(SimConfig::for_bench());
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_slots(8)
+        .open(&env, "contend")
+        .unwrap();
+    server.serve::<u64, u64>(1, |_ctx, v| Ok(*v + 1));
+    let listener = server.spawn_listener();
+    let cenv = rack.proc_env(1);
+    let conn = Arc::new(Connection::connect(&cenv, "contend").unwrap());
+
+    let charged_before = rack.pool.charger.total_charged_ns();
+    let hist = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for tid in 0..threads {
+        let conn = Arc::clone(&conn);
+        let hist = Arc::clone(&hist);
+        let env = cenv.clone();
+        clients.push(std::thread::spawn(move || {
+            env.run(|| {
+                for k in 0..ops_per_thread {
+                    let v = tid * 1_000_000 + k;
+                    let t = Instant::now();
+                    let r = conn.call_typed::<u64, u64>(1, &v, CallOpts::new()).unwrap();
+                    assert_eq!(r.take().unwrap(), v + 1);
+                    hist.record(t.elapsed());
+                }
+            });
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let total = threads * ops_per_thread;
+    let charged = (rack.pool.charger.total_charged_ns() - charged_before) as f64 / total as f64;
+    drop(conn);
+    server.stop();
+    listener.join().unwrap();
+    (total as f64 / wall.as_secs_f64(), Arc::try_unwrap(hist).ok().unwrap(), charged)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let raw_ops: u64 = if quick { 20_000 } else { 200_000 };
+    let conn_ops: u64 = if quick { 2_000 } else { 20_000 };
+    let mut t = Table::new(&["Scenario", "threads", "ops/s", "p50", "p99", "charged ns/op"]);
+    let mut rep = BenchReport::new("ring_contention");
+
+    for threads in [1u64, 2, 4, 8] {
+        let (thr, hist) = ring_raw(threads, raw_ops / threads);
+        t.row(&[
+            "ring/raw".into(),
+            format!("{threads}"),
+            format!("{thr:.0}"),
+            Histogram::fmt_ns(hist.median_ns()),
+            Histogram::fmt_ns(hist.p99_ns()),
+            "-".into(),
+        ]);
+        rep.row_hist(&format!("ring/raw/t{threads}"), &hist, thr);
+    }
+
+    for threads in [1u64, 4] {
+        let (thr, hist, charged) = conn_charged(threads, conn_ops / threads);
+        t.row(&[
+            "conn/charged".into(),
+            format!("{threads}"),
+            format!("{thr:.0}"),
+            Histogram::fmt_ns(hist.median_ns()),
+            Histogram::fmt_ns(hist.p99_ns()),
+            format!("{charged:.0}"),
+        ]);
+        rep.row_hist(&format!("conn/charged/t{threads}"), &hist, thr);
+        rep.extra("charged_ns_per_op", charged);
+    }
+
+    t.print("Ring contention — MPMC slot ring under multi-threaded clients");
+    println!(
+        "\ninvariant: charged ns/op stays at 2 doorbell signals per RPC across refactors."
+    );
+    rep.emit();
+}

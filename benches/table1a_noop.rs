@@ -11,7 +11,7 @@
 
 use rpcool::baselines::netrpc::{pair, Flavor};
 use rpcool::baselines::zhang::ZhangClient;
-use rpcool::benchkit::{fmt_ns, time_op, Table};
+use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
 use rpcool::channel::{CallOpts, Connection, Rpc, TransportSel};
 use rpcool::{Rack, SimConfig};
 use std::sync::Arc;
@@ -22,6 +22,7 @@ fn main() {
     let n_slow = if quick { 20 } else { 200 }; // for gRPC's ms-class RTT
     let rack = Rack::new(SimConfig::for_bench());
     let mut table = Table::new(&["Framework", "No-op RTT", "Throughput (K req/s)", "Transport"]);
+    let mut rep = BenchReport::new("table1a_noop");
 
     // ---- RPCool (CXL) ----
     let env = rack.proc_env(0);
@@ -34,6 +35,12 @@ fn main() {
     let (mean, _) = time_op(1000, n, false, || {
         conn.invoke(1, (), CallOpts::new()).unwrap();
     });
+    // Short per-op-timed pass for real p50/p99 in the JSON record
+    // (timer overhead is <2% at µs-scale RTTs).
+    let (_, hist) = time_op(0, n / 10, true, || {
+        conn.invoke(1, (), CallOpts::new()).unwrap();
+    });
+    rep.row_hist("RPCool", &hist, 1e9 / mean);
     table.row(&[
         "RPCool".into(),
         fmt_ns(mean),
@@ -47,6 +54,10 @@ fn main() {
     let (mean_sb, _) = time_op(1000, n / 2, false, || {
         conn.invoke(1, (addr, 8), CallOpts::secure(&scope)).unwrap();
     });
+    let (_, hist_sb) = time_op(0, n / 20, true, || {
+        conn.invoke(1, (addr, 8), CallOpts::secure(&scope)).unwrap();
+    });
+    rep.row_hist("RPCool (Seal+Sandbox)", &hist_sb, 1e9 / mean_sb);
     table.row(&[
         "RPCool (Seal+Sandbox)".into(),
         fmt_ns(mean_sb),
@@ -74,6 +85,7 @@ fn main() {
         // Touch the page client-side so the next call faults it back.
         rpcool::memory::ShmPtr::<u64>::from_addr(addr).write(1).unwrap();
     });
+    rep.row("RPCool (RDMA)", 0.0, 0.0, mean_rdma, 1e9 / mean_rdma);
     table.row(&[
         "RPCool (RDMA)".into(),
         fmt_ns(mean_rdma),
@@ -91,6 +103,7 @@ fn main() {
     let (mean_erpc, _) = time_op(1000, n / 2, false, || {
         cli.call(1, &[]).unwrap();
     });
+    rep.row("eRPC", 0.0, 0.0, mean_erpc, 1e9 / mean_erpc);
     table.row(&[
         "eRPC".into(),
         fmt_ns(mean_erpc),
@@ -111,6 +124,7 @@ fn main() {
     let (mean_z, _) = time_op(1000, n / 10, false, || {
         zc.call(1, obj).unwrap();
     });
+    rep.row("ZhangRPC", 0.0, 0.0, mean_z, 1e9 / mean_z);
     table.row(&[
         "ZhangRPC".into(),
         fmt_ns(mean_z),
@@ -127,6 +141,7 @@ fn main() {
     let (mean_g, _) = time_op(2, n_slow, false, || {
         cli.call(1, &[]).unwrap();
     });
+    rep.row("gRPC", 0.0, 0.0, mean_g, 1e9 / mean_g);
     table.row(&[
         "gRPC".into(),
         fmt_ns(mean_g),
@@ -136,4 +151,5 @@ fn main() {
     srv.stop();
 
     table.print("Table 1a — no-op latency & throughput (paper: 1.5µs/642.75 · 2.6µs/377.79 · 17.25µs/57.99 · 2.9µs/334.03 · 10.9µs/99.69 · 5.5ms/0.18)");
+    rep.emit();
 }

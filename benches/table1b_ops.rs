@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo bench --bench table1b_ops` (add `-- --quick`).
 
-use rpcool::benchkit::{fmt_ns, time_op, Table};
+use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
 use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc, RpcServer, TransportSel};
 use rpcool::memory::Scope;
 use rpcool::sandbox::SandboxMgr;
@@ -25,6 +25,7 @@ fn main() {
     let n = if quick { 20_000 } else { 500_000 };
     let rack = Rack::new(SimConfig::for_bench());
     let mut t = Table::new(&["Operation", "Mean Latency", "Paper"]);
+    let mut rep = BenchReport::new("table1b_ops");
 
     // ---------------- RPC ops ----------------
     {
@@ -39,6 +40,7 @@ fn main() {
             conn.invoke(1, (), CallOpts::new()).unwrap();
         });
         t.row(&["No-op RPCool RPC (CXL)".into(), fmt_ns(m), "1.5 µs".into()]);
+        rep.row("No-op RPCool RPC (CXL)", 0.0, 0.0, m, 0.0);
 
         let scope = conn.create_scope(4096).unwrap();
         let a = scope.new_val(0u64).unwrap();
@@ -46,6 +48,7 @@ fn main() {
             conn.invoke(1, (a, 8), CallOpts::secure(&scope)).unwrap();
         });
         t.row(&["No-op Sealed+Sandboxed RPC (CXL, 1 page)".into(), fmt_ns(m), "2.6 µs".into()]);
+        rep.row("No-op Sealed+Sandboxed RPC (CXL, 1 page)", 0.0, 0.0, m, 0.0);
         drop(scope);
         drop(conn);
         server.stop();
@@ -65,6 +68,7 @@ fn main() {
             rpcool::memory::ShmPtr::<u64>::from_addr(a).write(1).unwrap();
         });
         t.row(&["No-op RPCool RPC (RDMA)".into(), fmt_ns(m), "17.25 µs".into()]);
+        rep.row("No-op RPCool RPC (RDMA)", 0.0, 0.0, m, 0.0);
         drop(scope);
         drop(conn);
         server.stop();
@@ -84,6 +88,7 @@ fn main() {
             i += 1;
         });
         t.row(&["Create Channel".into(), fmt_ns(m), "26.5 ms".into()]);
+        rep.row("Create Channel", 0.0, 0.0, m, 0.0);
 
         let servers: Vec<RpcServer> = (0..reps)
             .map(|j| {
@@ -97,6 +102,7 @@ fn main() {
             drop(it.next().unwrap());
         });
         t.row(&["Destroy Channel".into(), fmt_ns(m), "38.4 ms".into()]);
+        rep.row("Destroy Channel", 0.0, 0.0, m, 0.0);
 
         let server = ChannelBuilder::from_config(&rack.cfg).open(&env, "t1b/conn").unwrap();
         server.add(1, |_| Ok(0));
@@ -107,6 +113,7 @@ fn main() {
             conns.push(Connection::connect(&cenv, "t1b/conn").unwrap());
         });
         t.row(&["Connect Channel".into(), fmt_ns(m), "0.4 s".into()]);
+        rep.row("Connect Channel", 0.0, 0.0, m, 0.0);
         drop(conns);
         server.stop();
     }
@@ -123,6 +130,7 @@ fn main() {
             drop(g);
         });
         t.row(&["Cached Sandbox Enter+Exit (1 page)".into(), fmt_ns(m), "0.35 µs".into()]);
+        rep.row("Cached Sandbox Enter+Exit (1 page)", 0.0, 0.0, m, 0.0);
 
         let scope1k = Scope::create(&heap, 1024 * 4096).unwrap();
         let (m, _) = time_op(100, n, false, || {
@@ -130,6 +138,7 @@ fn main() {
             drop(g);
         });
         t.row(&["Cached Sandbox Enter+Exit (1024 pages)".into(), fmt_ns(m), "0.35 µs".into()]);
+        rep.row("Cached Sandbox Enter+Exit (1024 pages)", 0.0, 0.0, m, 0.0);
 
         // 8 distinct cached sandboxes, cycled — no key reassignment.
         let scopes8: Vec<Scope> =
@@ -142,6 +151,7 @@ fn main() {
             drop(g);
         });
         t.row(&["Cached Multiple Sandbox Enter+Exit (1 page)".into(), fmt_ns(m), "0.47 µs".into()]);
+        rep.row("Cached Multiple Sandbox Enter+Exit (1 page)", 0.0, 0.0, m, 0.0);
 
         // 32 distinct regions with only 14 keys: every entry reassigns.
         let scopes32: Vec<Scope> =
@@ -154,6 +164,7 @@ fn main() {
             drop(g);
         });
         t.row(&["Uncached Sandbox Enter+Exit (1 page)".into(), fmt_ns(m), "25.57 µs".into()]);
+        rep.row("Uncached Sandbox Enter+Exit (1 page)", 0.0, 0.0, m, 0.0);
     }
 
     // ------------- seal / release / memcpy -------------
@@ -173,6 +184,7 @@ fn main() {
                 sealer.release(h).unwrap();
             });
             t.row(&[label.into(), fmt_ns(m), paper.into()]);
+            rep.row(label, 0.0, 0.0, m, 0.0);
         }
 
         for (pages, label, paper) in
@@ -197,6 +209,7 @@ fn main() {
             });
             pool.flush().unwrap();
             t.row(&[label.into(), fmt_ns(m), paper.into()]);
+            rep.row(label, 0.0, 0.0, m, 0.0);
         }
 
         // Remote-remote memcpy (both ends in CXL memory).
@@ -215,9 +228,11 @@ fn main() {
                 }
             });
             t.row(&[label.into(), fmt_ns(m), paper.into()]);
+            rep.row(label, 0.0, 0.0, m, 0.0);
         }
     }
 
     t.print("Table 1b — RPCool operation latencies");
+    rep.emit();
     println!("\ncrossover check (paper §6.2): seal+sandbox beats memcpy beyond ~2 pages.");
 }

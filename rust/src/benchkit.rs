@@ -1,6 +1,9 @@
 //! Bench harness shared by `benches/*` (criterion is unavailable in
 //! the offline build; this provides the same discipline: warmup,
-//! repeated timed runs, percentile reporting, markdown rows).
+//! repeated timed runs, percentile reporting, markdown rows) — plus
+//! machine-readable output: every bench emits a `BENCH_<name>.json`
+//! via [`BenchReport`], so the repo accumulates a perf trajectory
+//! (CI uploads them as artifacts; compare runs with a diff).
 
 use crate::metrics::Histogram;
 use std::time::{Duration, Instant};
@@ -104,6 +107,142 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------
+// machine-readable reports
+
+/// One measured configuration in a bench run.
+#[derive(Clone, Debug, Default)]
+pub struct BenchRow {
+    pub label: String,
+    /// Median / p99 latency in ns (0 = not measured).
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub mean_ns: f64,
+    /// Operations per second (0 = not measured).
+    pub throughput_ops: f64,
+    /// Free-form extra metrics (name, value).
+    pub extra: Vec<(String, f64)>,
+}
+
+/// Collects rows and writes `BENCH_<name>.json` — the committed /
+/// CI-uploaded perf record. JSON is hand-rolled (the build is
+/// dependency-free by design).
+pub struct BenchReport {
+    name: String,
+    rows: Vec<BenchRow>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/Inf; clamp to 0 so emitted files always parse.
+fn json_num(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Record a latency-style row (throughput derived where the bench
+    /// knows it; pass 0.0 for unmeasured fields).
+    pub fn row(&mut self, label: &str, p50_ns: f64, p99_ns: f64, mean_ns: f64, thr: f64) {
+        self.rows.push(BenchRow {
+            label: label.to_string(),
+            p50_ns,
+            p99_ns,
+            mean_ns,
+            throughput_ops: thr,
+            extra: Vec::new(),
+        });
+    }
+
+    /// Record a row from a histogram + ops/sec.
+    pub fn row_hist(&mut self, label: &str, hist: &Histogram, thr: f64) {
+        self.row(
+            label,
+            hist.median_ns() as f64,
+            hist.p99_ns() as f64,
+            hist.mean_ns(),
+            thr,
+        );
+    }
+
+    /// Attach an extra metric to the most recent row.
+    pub fn extra(&mut self, key: &str, value: f64) {
+        if let Some(r) = self.rows.last_mut() {
+            r.extra.push((key.to_string(), value));
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": \"{}\", \"p50_ns\": {}, \"p99_ns\": {}, \"mean_ns\": {}, \"throughput_ops\": {}",
+                json_escape(&r.label),
+                json_num(r.p50_ns),
+                json_num(r.p99_ns),
+                json_num(r.mean_ns),
+                json_num(r.throughput_ops),
+            ));
+            for (k, v) in &r.extra {
+                s.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+            }
+            s.push('}');
+            if i + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_OUT` (or the current
+    /// directory) and return the path. Failures are reported, not
+    /// fatal — a read-only checkout must not kill the bench.
+    pub fn emit(&self) -> Option<std::path::PathBuf> {
+        let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".into());
+        self.emit_to(std::path::Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into an explicit directory.
+    pub fn emit_to(&self, dir: &std::path::Path) -> Option<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => {
+                println!("\n[bench] wrote {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("[bench] could not write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +276,38 @@ mod tests {
         assert_eq!(fmt_ns(500.0), "500 ns");
         assert_eq!(fmt_ns(1500.0), "1.50 µs");
         assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+    }
+
+    #[test]
+    fn report_json_is_wellformed() {
+        let mut r = BenchReport::new("unit");
+        r.row("plain \"quoted\"", 1500.0, 9000.0, 2000.0, 650_000.0);
+        r.extra("wakeups", 3.5);
+        r.row("nan-guard", f64::NAN, f64::INFINITY, 0.0, 0.0);
+        let j = r.to_json();
+        assert!(j.contains("\"bench\": \"unit\""));
+        assert!(j.contains("plain \\\"quoted\\\""));
+        assert!(j.contains("\"wakeups\": 3.5"));
+        assert!(!j.contains("NaN") && !j.contains("inf"), "numbers must stay JSON-legal");
+        // Separator discipline: one comma between the two rows.
+        assert_eq!(j.matches("},\n").count(), 1);
+        // Round-trip sanity without a JSON dep: balanced braces/brackets.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn report_emits_to_dir() {
+        // emit_to, not emit: tests must not mutate process-global env
+        // (BENCH_OUT) while the harness runs suites concurrently.
+        let dir = std::env::temp_dir().join(format!("benchkit-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = BenchReport::new("emit-test");
+        r.row("x", 1.0, 2.0, 1.5, 0.0);
+        let path = r.emit_to(&dir).expect("writable dir");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"emit-test\""));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
     }
 }

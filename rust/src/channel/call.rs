@@ -209,10 +209,13 @@ impl<'c, R: Pod> Reply<'c, R> {
 
     /// Reclaim a *server-allocated* reply buffer (the top-level `R`
     /// block only; interior container data must be destroyed by the
-    /// caller first, exactly as with any heap value).
+    /// caller first, exactly as with any heap value). Provenance is
+    /// resolved by the connection: replies the handler bump-allocated
+    /// in the argument arena recycle lock-free, heap replies go back
+    /// through the heap free list.
     pub fn free(self) {
         if self.addr != 0 {
-            self.conn.heap().free_bytes(self.addr);
+            self.conn.free_reply(self.addr);
         }
     }
 

@@ -63,6 +63,7 @@ use crate::config::SimConfig;
 use crate::daemon::Daemon;
 use crate::dsm::{DsmState, NODE_CLIENT, NODE_SERVER};
 use crate::error::{Result, RpcError};
+use crate::memory::arena::ArgArena;
 use crate::memory::containers::{ShmString, ShmVec};
 use crate::memory::heap::Heap;
 use crate::memory::pod::Pod;
@@ -77,7 +78,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
 use std::time::Duration;
-use waiter::{SleepPolicy, WaitOutcome, LOAD};
+use waiter::{Doorbell, SleepPolicy, WaitOutcome, LOAD, PARK_SLICE_US, PARK_SPIN_POLLS};
 
 // ---------------------------------------------------------------------
 // channel directory (how connect() finds a live server in-process)
@@ -121,6 +122,10 @@ pub struct ChannelOpts {
     pub sleep: SleepPolicy,
     /// Client-side call timeout.
     pub call_timeout: Duration,
+    /// Per-connection lock-free argument-arena size (0 disables the
+    /// arena; typed-call arguments and replies then always take the
+    /// heap mutex).
+    pub arg_arena_bytes: usize,
 }
 
 impl ChannelOpts {
@@ -132,6 +137,7 @@ impl ChannelOpts {
             ring_slots: 64,
             sleep: SleepPolicy::from_config(cfg),
             call_timeout: Duration::from_secs(10),
+            arg_arena_bytes: 256 << 10,
         }
     }
 }
@@ -194,6 +200,12 @@ impl ChannelBuilder {
         self
     }
 
+    /// Per-connection argument-arena size (0 disables it).
+    pub fn arg_arena_bytes(mut self, bytes: usize) -> ChannelBuilder {
+        self.opts.arg_arena_bytes = bytes;
+        self
+    }
+
     pub fn opts(&self) -> &ChannelOpts {
         &self.opts
     }
@@ -210,6 +222,10 @@ impl ChannelBuilder {
 /// What a handler sees: the connection heap and the argument pointer.
 pub struct CallCtx<'a> {
     pub heap: &'a Arc<Heap>,
+    /// The connection's lock-free argument arena, if one exists;
+    /// `reply_*` allocate from it first so the reply path skips the
+    /// heap mutex (clients recycle it through `Reply::free`/`take`).
+    pub arena: Option<&'a ArgArena>,
     pub func: u32,
     pub arg: usize,
     pub arg_len: usize,
@@ -251,9 +267,16 @@ impl<'a> CallCtx<'a> {
         self.arg_ptr::<T>().read()
     }
 
-    /// Allocate a reply value in the connection heap; returns its
-    /// address for the `ret` slot.
+    /// Allocate a reply value for the `ret` slot: lock-free from the
+    /// connection's argument arena when it has room, else from the
+    /// heap. Clients reclaim either through `Reply::free`/`take`
+    /// (provenance is resolved there).
     pub fn reply_val<T: Pod>(&self, v: T) -> Result<u64> {
+        if let Some(arena) = self.arena {
+            if let Some(addr) = arena.alloc_val(v) {
+                return Ok(addr as u64);
+            }
+        }
         Ok(self.heap.new_val(v)? as u64)
     }
 
@@ -300,6 +323,10 @@ pub struct ConnShared {
     pub id: u64,
     pub heap: Arc<Heap>,
     pub ring: RpcRing,
+    /// Lock-free bump arena for typed-call arguments and replies
+    /// (None when creation failed or was disabled: all allocation
+    /// falls back to the heap).
+    pub arena: Option<ArgArena>,
     pub sealer: Arc<Sealer>,
     pub sandbox: Arc<SandboxMgr>,
     pub client_proc: u32,
@@ -317,6 +344,25 @@ impl ConnShared {
 
     pub fn is_dsm(&self) -> bool {
         self.dsm.is_some()
+    }
+
+    /// Reclaim the reply of a response that was discarded into an
+    /// abandoned (timed-out) lap. Only arena provenance is provably
+    /// an owned allocation — a heap `ret` word may be a scalar or a
+    /// borrowed pointer — and the call's own argument range is
+    /// excluded: a handler may echo its argument pointer back, and
+    /// that memory belongs to the caller (reclaimed through the
+    /// quarantine), so releasing it here would double-release.
+    pub(crate) fn reclaim_discarded_reply(&self, ret: u64, arg: usize, arg_len: usize) {
+        let addr = ret as usize;
+        if addr >= arg && addr < arg + arg_len.max(1) {
+            return;
+        }
+        if let Some(a) = &self.arena {
+            if a.contains(addr) {
+                a.release(addr);
+            }
+        }
     }
 }
 
@@ -353,6 +399,10 @@ pub struct ServerCore {
     /// The shared channel-wide heap, if `opts.shared_heap`.
     shared_heap: Mutex<Option<Arc<Heap>>>,
     served: AtomicU64,
+    /// Channel-wide request doorbell: every connection's `publish()`
+    /// rings it, so a single parked listener wakes for any of them
+    /// (`SleepPolicy::Park`).
+    bell: Arc<Doorbell>,
 }
 
 /// Server-side channel handle (the paper's `RPC rpc; rpc.open(...)`).
@@ -382,6 +432,7 @@ impl RpcServer {
             daemon,
             shared_heap: Mutex::new(None),
             served: AtomicU64::new(0),
+            bell: Doorbell::new_arc(),
         });
 
         // Register with the orchestrator: a placeholder heap id is
@@ -473,8 +524,18 @@ impl RpcServer {
     pub fn listen(&self) {
         self.core.env.enter();
         let policy = self.core.opts.sleep;
+        let park = policy == SleepPolicy::Park;
+        // Armed only while this listener is idle enough to park, so
+        // the loaded case keeps every publish()'s `ring()` at a
+        // single atomic load.
+        let mut armed = false;
+        let mut idle_polls: u32 = 0;
         LOAD.enter();
         while !self.core.stop.load(Ordering::Acquire) {
+            // Epoch *before* the work scan (once armed): a publish
+            // that lands mid-scan advances it, so the park below
+            // returns immediately instead of missing the request.
+            let seen = if armed { self.core.bell.epoch() } else { 0 };
             // Accept anything pending without blocking.
             {
                 let mut acc = self.core.accepting.lock().unwrap();
@@ -491,7 +552,32 @@ impl RpcServer {
                     self.core.handle_slot(conn, slot);
                 }
             }
-            if !progress {
+            if progress {
+                idle_polls = 0;
+                if armed {
+                    self.core.bell.disarm();
+                    armed = false;
+                }
+            } else if park {
+                idle_polls += 1;
+                if idle_polls >= PARK_SPIN_POLLS {
+                    if !armed {
+                        // Arm, then rescan once with the bell live —
+                        // a publish between the scan and arming would
+                        // otherwise be missed until the slice expires.
+                        self.core.bell.arm();
+                        armed = true;
+                        continue;
+                    }
+                    // Block on the channel doorbell (sliced so stop()
+                    // and new connections are never missed for long).
+                    LOAD.exit();
+                    self.core
+                        .bell
+                        .wait_past(seen, Duration::from_micros(PARK_SLICE_US));
+                    LOAD.enter();
+                }
+            } else {
                 let us = policy.sleep_us(LOAD.load());
                 if us > 0 {
                     std::thread::sleep(Duration::from_micros(us));
@@ -501,6 +587,9 @@ impl RpcServer {
             }
         }
         LOAD.exit();
+        if armed {
+            self.core.bell.disarm();
+        }
     }
 
     /// Spawn the listen loop on a server thread.
@@ -512,6 +601,9 @@ impl RpcServer {
     pub fn stop(&self) {
         self.core.stop.store(true, Ordering::Release);
         self.core.accept_cv.notify_all();
+        // Wake a parked listener so it observes the stop flag now
+        // rather than at the end of its park slice.
+        self.core.bell.ring();
     }
 
     /// Accept all pending connections without blocking (used together
@@ -605,6 +697,7 @@ impl ServerCore {
                 Ok(guard) => {
                     let ctx = CallCtx {
                         heap: &conn.heap,
+                        arena: conn.arena.as_ref(),
                         func,
                         arg,
                         arg_len,
@@ -621,6 +714,7 @@ impl ServerCore {
         } else {
             let ctx = CallCtx {
                 heap: &conn.heap,
+                arena: conn.arena.as_ref(),
                 func,
                 arg,
                 arg_len,
@@ -639,17 +733,41 @@ impl ServerCore {
 
         self.served.fetch_add(1, Ordering::Relaxed);
         match result {
-            Ok(ret) => conn.ring.respond(slot, ST_OK, ret),
-            Err(RpcError::SandboxViolation { .. }) => {
-                conn.ring.respond(slot, ST_SANDBOX_VIOLATION, 0)
+            Ok(ret) => {
+                let discarded = conn.ring.respond(slot, ST_OK, ret);
+                // The caller timed out and this response went nowhere:
+                // reclaim an arena-allocated reply so one abandoned
+                // call can't pin the arena forever.
+                if discarded {
+                    conn.reclaim_discarded_reply(ret, arg, arg_len);
+                }
             }
-            Err(_) => conn.ring.respond(slot, ST_HANDLER_ERROR, 0),
+            Err(RpcError::SandboxViolation { addr, lo, hi }) => {
+                // Carry the real fault back: address in `ret`, the
+                // sandbox window in the (now dead) argument words.
+                conn.ring.respond_fault(
+                    slot,
+                    ST_SANDBOX_VIOLATION,
+                    addr as u64,
+                    lo as u64,
+                    hi as u64,
+                );
+            }
+            Err(_) => {
+                conn.ring.respond(slot, ST_HANDLER_ERROR, 0);
+            }
         }
     }
 }
 
 // ---------------------------------------------------------------------
 // client connection
+
+/// Timeout-detail marker for a claim-phase timeout (ring full, no
+/// slot ever claimed): distinguishes "argument never published — safe
+/// to release now" from a response timeout, where the server may
+/// still read the argument and it must be quarantined.
+pub(crate) const TIMEOUT_SLOT: &str = "rpc slot";
 
 /// Client-side connection handle (the paper's `conn`).
 pub struct Connection {
@@ -666,6 +784,13 @@ pub struct Connection {
     /// spinning either way. Benchmarks use this; concurrency tests use
     /// `spawn_listener`.
     inline_server: Mutex<Option<Arc<ServerCore>>>,
+    /// Arguments of timed-out calls the server may still read. They
+    /// are released (recycling the arena) on a later call once the
+    /// ring is quiescent — i.e. provably nobody is reading them.
+    quarantine: Mutex<Vec<usize>>,
+    /// Lock-free gate for the quarantine sweep (0 = nothing pending,
+    /// so the hot path pays one relaxed load).
+    quarantined: AtomicU64,
 }
 
 impl Connection {
@@ -727,17 +852,32 @@ impl Connection {
             TransportSel::Rdma => true,
             TransportSel::Auto => !rack.same_cxl_domain(env.host, core.env.host),
         };
+        // Every ring's publish() rings the channel's bell, so one
+        // parked listener covers all connections.
+        let bell = Some(Arc::clone(&core.bell));
         let (ring, dsm) = if use_dsm {
             let ring =
-                RpcRing::create_with_signal(&heap, opts.ring_slots, cfg.cost.rdma_oneway_ns)?;
+                RpcRing::create_opts(&heap, opts.ring_slots, cfg.cost.rdma_oneway_ns, bell)?;
             (ring, Some(DsmState::new(&heap, cfg.page_bytes)))
         } else {
-            (RpcRing::create(&heap, opts.ring_slots)?, None)
+            let ring =
+                RpcRing::create_opts(&heap, opts.ring_slots, cfg.cost.cxl_signal_ns, bell)?;
+            (ring, None)
+        };
+
+        // The lock-free argument arena rides in the connection heap;
+        // cap it so small heaps keep most of their space, and degrade
+        // to heap-only allocation if the carve fails.
+        let arena = if opts.arg_arena_bytes == 0 {
+            None
+        } else {
+            ArgArena::create(&heap, opts.arg_arena_bytes.min(heap.len() / 8)).ok()
         };
 
         let shared = Arc::new(ConnShared {
             id: core.next_conn_id.fetch_add(1, Ordering::Relaxed),
             ring,
+            arena,
             sealer: Sealer::new(cfg, Arc::clone(&heap), Arc::clone(charger))?,
             sandbox: SandboxMgr::new(cfg, Arc::clone(&heap), Arc::clone(charger)),
             heap,
@@ -763,6 +903,8 @@ impl Connection {
             acc.queue.push(Arc::clone(&shared));
             core.accept_cv.notify_one();
         }
+        // A parked listener must wake to adopt the new connection.
+        core.bell.ring();
         shared.accepted.store(true, Ordering::Release);
 
         Ok(Connection {
@@ -772,6 +914,8 @@ impl Connection {
             daemon: Arc::clone(&core.daemon),
             calls: AtomicU64::new(0),
             inline_server: Mutex::new(None),
+            quarantine: Mutex::new(Vec::new()),
+            quarantined: AtomicU64::new(0),
         })
     }
 
@@ -914,18 +1058,96 @@ impl Connection {
 
     /// Typed-argument call with a raw `u64` reply: allocates a copy of
     /// `arg` (in the sealed scope when `opts` carries one — so the
-    /// argument is actually covered by the seal — else in the
-    /// connection heap, freed after the call) and invokes.
+    /// argument is actually covered by the seal — else lock-free from
+    /// the connection's argument arena, spilling to the heap only
+    /// when the arena is full) and invokes. The argument is released
+    /// as soon as the call returns; arena space recycles when the
+    /// last outstanding argument/reply is dropped.
     pub fn call_scalar<A: Pod>(&self, func: u32, arg: &A, opts: CallOpts) -> Result<u64> {
-        let (addr, owned) = match opts.seal {
-            Some(scope) => (scope.new_val(*arg)?, false),
-            None => (self.shared.heap.new_val(*arg)?, true),
+        #[derive(Clone, Copy)]
+        enum Prov {
+            Scope,
+            Arena(usize),
+            Heap(usize),
+        }
+        // A dead connection fails fast *before* allocating, so retry
+        // loops against it can't grow the quarantine (post-publish
+        // teardown still quarantines, bounded by in-flight calls).
+        if self.shared.closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        self.sweep_quarantine();
+        let (addr, prov) = match opts.seal {
+            Some(scope) => (scope.new_val(*arg)?, Prov::Scope),
+            None => match self.shared.arena.as_ref().and_then(|a| a.alloc_val(*arg)) {
+                Some(addr) => (addr, Prov::Arena(addr)),
+                None => {
+                    let addr = self.shared.heap.new_val(*arg)?;
+                    (addr, Prov::Heap(addr))
+                }
+            },
         };
         let r = self.invoke(func, (addr, std::mem::size_of::<A>()), opts);
-        if owned {
-            self.shared.heap.free_bytes(addr);
+        // On a response timeout / teardown the request may still be
+        // queued or in flight server-side — recycling the argument
+        // now would hand the server freshly-reused memory (the arena
+        // resets to offset 0 on its last release, making reuse
+        // immediate, and the heap free list is just as unsafe). Such
+        // arguments go to the quarantine and are released once the
+        // ring is provably quiet. A claim-phase timeout (TIMEOUT_SLOT)
+        // never published the address, so it releases right away, as
+        // does every outcome where the server finished.
+        let outstanding = match &r {
+            Err(RpcError::Timeout(what)) => what != TIMEOUT_SLOT,
+            Err(RpcError::ConnectionClosed) => true,
+            _ => false,
+        };
+        let is_arena = matches!(prov, Prov::Arena(_));
+        match prov {
+            Prov::Scope => {}
+            Prov::Arena(a) | Prov::Heap(a) => {
+                if outstanding {
+                    let mut q = self.quarantine.lock().unwrap();
+                    q.push(a);
+                    // Counter maintained under the lock: it's only an
+                    // advisory fast-path gate, but keeping it exact
+                    // avoids under/overflow races with the sweep.
+                    self.quarantined.store(q.len() as u64, Ordering::Release);
+                } else if is_arena {
+                    self.shared.arena.as_ref().unwrap().release(a);
+                } else {
+                    self.shared.heap.free_bytes(a);
+                }
+            }
         }
         r
+    }
+
+    /// Release quarantined (timed-out) arguments once nothing is in
+    /// flight on the ring — at that point no handler can still be
+    /// reading them. Called from the call path behind a single atomic
+    /// load, so the common (empty-quarantine) case is free.
+    fn sweep_quarantine(&self) {
+        if self.quarantined.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let pending = {
+            // The quiescence check must run under the quarantine lock:
+            // entries are pushed under the same lock, so everything in
+            // the vec at check time belongs to a call whose slot we
+            // are observing — a fresh timeout can't slip its (still
+            // in-flight) argument into the batch after the check.
+            let mut q = self.quarantine.lock().unwrap();
+            if q.is_empty() || !self.shared.ring.quiescent() {
+                return;
+            }
+            let taken = std::mem::take(&mut *q);
+            self.quarantined.store(0, Ordering::Release);
+            taken
+        };
+        for addr in pending {
+            self.free_reply(addr); // provenance-aware: arena or heap
+        }
     }
 
     /// Fully typed call: `A` in, [`Reply<R>`] out. The reply borrows
@@ -946,6 +1168,18 @@ impl Connection {
     /// (e.g. in a scratch scope) but still want the safe reply decode.
     pub fn reply_from<R: Pod>(&self, ret: u64) -> Reply<'_, R> {
         Reply::new(self, ret as usize)
+    }
+
+    /// Reclaim a server-allocated reply buffer, resolving its
+    /// provenance: arena replies recycle lock-free, heap replies go
+    /// back through `free_bytes`. (`Reply::free`/`take` route here —
+    /// arena addresses must never reach the heap's header-tagged
+    /// free path.)
+    pub(crate) fn free_reply(&self, addr: usize) {
+        match &self.shared.arena {
+            Some(a) if a.contains(addr) => a.release(addr),
+            _ => self.shared.heap.free_bytes(addr),
+        }
     }
 
     /// The raw call. Deprecated: use [`Connection::invoke`].
@@ -1025,46 +1259,84 @@ impl Connection {
             }
         }
         let ring = &self.shared.ring;
-        // Claim a slot (waiting out a full ring).
+        // Claim a slot (a full ring parks on the response doorbell —
+        // consume() rings it when a slot frees).
         let slot = match ring.claim() {
             Some(i) => i,
             None => {
                 let mut got = None;
-                let out = waiter::wait_until(self.opts.sleep, timeout, None, || {
-                    got = ring.claim();
-                    got.is_some()
-                });
+                let out = waiter::wait_on(
+                    self.opts.sleep,
+                    timeout,
+                    None,
+                    Some(ring.resp_bell()),
+                    || {
+                        got = ring.claim();
+                        got.is_some()
+                    },
+                );
                 if out == WaitOutcome::TimedOut {
-                    return Err(RpcError::Timeout("rpc slot".into()));
+                    return Err(RpcError::Timeout(TIMEOUT_SLOT.into()));
                 }
                 got.unwrap()
             }
         };
         ring.publish(slot, func, flags, seal_idx, arg, arg_len);
-        // Inline serving: run the server's handler on this thread
+        // Inline serving: run the server's handlers on this thread
         // under the server's identity (the sequential-RTT model).
-        if let Some(core) = self.inline_server.lock().unwrap().as_ref() {
-            while !ring.response_ready(slot) {
-                let Some(i) = ring.take_request() else { break };
-                crate::simproc::with_identity(core.env.proc, core.env.host, || {
-                    core.handle_slot(&self.shared, i)
-                });
-            }
-        }
-        let out = waiter::wait_until(self.opts.sleep, timeout, None, || {
-            ring.response_ready(slot) || self.shared.closed()
-        });
+        // Serving stays *inside* the wait loop: requests are taken in
+        // FIFO order, so this thread may need to drain other threads'
+        // earlier requests before its own comes up.
+        let inline: Option<Arc<ServerCore>> =
+            self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
+        let out = waiter::wait_on(
+            self.opts.sleep,
+            timeout,
+            None,
+            Some(ring.resp_bell()),
+            || {
+                if ring.response_ready(slot) || self.shared.closed() {
+                    return true;
+                }
+                if let Some(core) = &inline {
+                    while let Some(i) = ring.take_request() {
+                        crate::simproc::with_identity(core.env.proc, core.env.host, || {
+                            core.handle_slot(&self.shared, i)
+                        });
+                        if ring.response_ready(slot) {
+                            return true;
+                        }
+                    }
+                }
+                false
+            },
+        );
         if out == WaitOutcome::TimedOut {
+            // We will never consume this slot: leave a tombstone so a
+            // late response retires the lap instead of wedging the
+            // sequence-gated ring once `head` wraps back around.
+            self.abandon_and_reclaim(slot, arg, arg_len);
             return Err(RpcError::Timeout(format!("rpc response (func {func})")));
         }
         if self.shared.closed() && !ring.response_ready(slot) {
+            self.abandon_and_reclaim(slot, arg, arg_len);
             return Err(RpcError::ConnectionClosed);
         }
-        let (status, ret) = ring.consume(slot);
+        let (status, ret, aux_lo, aux_hi) = ring.consume_detail(slot);
         match status {
             ST_OK => Ok(ret),
-            ST_NO_HANDLER => Err(RpcError::NoSuchHandler(func)),
-            other => Err(status_to_error(other)),
+            other => Err(status_to_error(other, func, ret, aux_lo, aux_hi)),
+        }
+    }
+
+    /// Abandon a slot this caller will never consume and reclaim the
+    /// orphaned reply if the response had already landed (only an OK
+    /// response carries one; provenance resolved by `ConnShared`).
+    fn abandon_and_reclaim(&self, slot: usize, arg: usize, arg_len: usize) {
+        if let Some((st, ret)) = self.shared.ring.abandon(slot) {
+            if st == ST_OK {
+                self.shared.reclaim_discarded_reply(ret, arg, arg_len);
+            }
         }
     }
 
@@ -1621,6 +1893,181 @@ mod tests {
         });
         assert_eq!(pool.flushes(), 2, "40 calls / threshold 16 = 2 flushes");
         pool.flush().unwrap();
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// N threads share ONE connection whose ring is far smaller than
+    /// the in-flight demand: the MPMC ticket protocol must deliver
+    /// every response to exactly its caller across many ring laps,
+    /// and a full ring must block claims, never corrupt them.
+    #[test]
+    fn concurrent_callers_share_ring_across_laps() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_slots(4)
+            .open(&env, "mpmc")
+            .unwrap();
+        server.serve::<u64, u64>(101, |_ctx, v| Ok(*v + 1));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Arc::new(Rpc::connect(&cenv, "mpmc").unwrap());
+
+        const THREADS: u64 = 4;
+        const CALLS: u64 = 64; // 256 calls through a 4-slot ring
+        let mut handles = Vec::new();
+        for tid in 0..THREADS {
+            let conn = Arc::clone(&conn);
+            let env = cenv.clone();
+            handles.push(std::thread::spawn(move || {
+                env.run(|| {
+                    for k in 0..CALLS {
+                        let v = tid * 10_000 + k;
+                        let r = conn.call_typed::<u64, u64>(101, &v, CallOpts::new()).unwrap();
+                        assert_eq!(r.take().unwrap(), v + 1, "thread {tid} call {k}");
+                    }
+                });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.served(), THREADS * CALLS);
+        assert_eq!(conn.calls_made(), THREADS * CALLS);
+        assert!(conn.shared.ring.quiescent(), "all laps retired");
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn park_policy_serves_and_wakes() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .sleep(SleepPolicy::Park)
+            .open(&env, "parked")
+            .unwrap();
+        server.serve::<u64, u64>(101, |_ctx, v| Ok(*v * 2));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "parked").unwrap();
+        cenv.run(|| {
+            // Two bursts separated by an idle window long enough for
+            // the listener to park: the publish doorbell must wake it.
+            for burst in 0..2u64 {
+                for i in 0..20u64 {
+                    let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();
+                    assert_eq!(r.take().unwrap(), i * 2, "burst {burst}");
+                }
+                std::thread::sleep(Duration::from_millis(30));
+            }
+        });
+        assert_eq!(server.served(), 40);
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn sandbox_violation_carries_fault_detail() {
+        use crate::memory::containers::ShmList;
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "fault-detail").unwrap();
+        server.add(8, |ctx| {
+            let list: ShmList<u64> = ctx.arg_ptr::<ShmList<u64>>().read()?;
+            Ok(list.iter_collect()?.iter().sum())
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "fault-detail").unwrap();
+        cenv.run(|| {
+            let scope = conn.create_scope(8192).unwrap();
+            let mut evil: ShmList<u64> = ShmList::new();
+            for i in 1..=4 {
+                evil.push_back(&scope, i).unwrap();
+            }
+            let secret = conn.heap().new_val(0xDEAD_u64).unwrap();
+            evil.corrupt_tail(secret).unwrap();
+            let eaddr = scope.new_val(evil).unwrap();
+            let e = conn.invoke(8, (eaddr, 24), CallOpts::secure(&scope));
+            match e {
+                Err(RpcError::SandboxViolation { addr, lo, hi }) => {
+                    // The satellite fix: real remote detail, not zeros.
+                    assert_eq!(addr, secret, "fault address must name the wild pointer");
+                    assert!(lo != 0 && hi > lo, "sandbox window must come back: [{lo:#x},{hi:#x})");
+                    assert!(
+                        addr < lo || addr >= hi,
+                        "reported address must lie outside the reported window"
+                    );
+                }
+                other => panic!("expected detailed sandbox violation, got {other:?}"),
+            }
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// A timed-out call's argument may still be read by the (slow)
+    /// server, so it must be quarantined, not recycled — and then
+    /// reclaimed once the ring is quiet, so one timeout doesn't
+    /// disable the arena for the connection's lifetime.
+    #[test]
+    fn timed_out_argument_quarantined_then_reclaimed() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "slowpoke").unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| {
+            std::thread::sleep(Duration::from_millis(120));
+            Ok(*v)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "slowpoke").unwrap();
+        let arena = conn.shared.arena.as_ref().expect("arena on");
+        cenv.run(|| {
+            let e = conn.call_scalar::<u64>(
+                1,
+                &7,
+                CallOpts::new().timeout(Duration::from_millis(20)),
+            );
+            assert!(matches!(e, Err(RpcError::Timeout(_))), "got {e:?}");
+            assert_eq!(arena.live(), 1, "argument quarantined, not recycled");
+            // Let the slow handler finish; its (stale) response
+            // retires the abandoned lap.
+            std::thread::sleep(Duration::from_millis(500));
+            // The next call sweeps the quarantine once the ring is
+            // quiet, then completes normally.
+            let r = conn.call_scalar::<u64>(1, &8, CallOpts::new()).unwrap();
+            assert_eq!(r, 8);
+            assert_eq!(arena.live(), 0, "quarantined argument reclaimed");
+            assert_eq!(arena.used(), 0, "arena reset after reclamation");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn arena_recycles_typed_call_allocations() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "arena");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "arena").unwrap();
+        let arena = conn.shared.arena.as_ref().expect("default opts carve an arena");
+        cenv.run(|| {
+            for i in 0..200u64 {
+                let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();
+                assert_eq!(r.take().unwrap(), i + 1);
+            }
+        });
+        assert_eq!(arena.live(), 0, "args and replies all released");
+        assert_eq!(arena.used(), 0, "arena fully recycled in place");
+        assert_eq!(arena.spills(), 0, "steady-state traffic never hits the heap mutex");
+        assert!(arena.resets() > 0, "recycling actually happened");
         drop(conn);
         server.stop();
         t.join().unwrap();

@@ -8,15 +8,49 @@
 //! the "doorbell" the server's busy-wait loop observes across the CXL
 //! fabric. Responses flow back through the same slot.
 //!
-//! Slot states cycle EMPTY → CLAIMED → REQUEST → PROCESSING →
-//! RESPONSE → EMPTY. Multiple client threads may share a connection
-//! (slots are claimed by CAS); each slot is single-producer
-//! single-consumer once claimed.
+//! # Indexed MPMC protocol
+//!
+//! The ring is a sequence-numbered MPMC queue (crossbeam-style
+//! tickets), not a scanned array. Two cache-padded cursors index it:
+//!
+//! * `head` — the **claim ticket** counter. A client thread reads the
+//!   head ticket `t`, checks that slot `t & (n-1)` has sequence `t`
+//!   (meaning the previous lap's occupant has been consumed), and
+//!   CASes `head` to `t + 1`. One ticket CAS and one slot touch — no
+//!   scan, no O(n) anything. If the slot's sequence is *behind* the
+//!   ticket, the ring is full and the claim fails (callers park on
+//!   the doorbell, they never corrupt state).
+//! * `tail` — the **service cursor**. The server checks exactly one
+//!   slot (`tail & (n-1)`): if it holds a published `REQUEST`, a CAS
+//!   to `PROCESSING` takes it and the cursor advances. Requests are
+//!   therefore served in publish order (FIFO), and `take_request` is
+//!   one slot touch.
+//!
+//! Slot states still cycle EMPTY → CLAIMED → REQUEST → PROCESSING →
+//! RESPONSE → EMPTY within a lap; the per-slot `seq` counter decides
+//! *which lap* a ticket may enter the slot. `consume()` retires the
+//! lap by bumping `seq` to `ticket + n`, which is what re-opens the
+//! slot to the claim side one full ring-cycle later.
+//!
+//! Each `Slot` is `#[repr(align(64))]` so neighbouring doorbells never
+//! share a cache line — on real CXL hardware a shared line would
+//! ping-pong between hosts on every publish/poll pair, exactly the
+//! coherence traffic §4.2/§5.8 set out to avoid.
+//!
+//! Two [`Doorbell`]s make the ring park-aware (§5.8's idle case):
+//! `publish()` rings the request bell (shared with the channel's
+//! server loop) and the response bell (inline-serving waiters drain
+//! requests from inside their response wait, so peer publishes must
+//! wake them); `respond()`/`consume()` ring the response bell that
+//! claim- and completion-waiters park on. When nobody parks, a ring
+//! is one atomic load.
 
 use crate::error::{Result, RpcError};
 use crate::memory::heap::Heap;
 use crate::memory::pool::Charger;
-use std::sync::atomic::{AtomicU32, Ordering};
+use crate::util::CachePadded;
+use crate::channel::waiter::Doorbell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 pub const SLOT_EMPTY: u32 = 0;
@@ -33,20 +67,43 @@ pub const FLAG_SANDBOXED: u32 = 1 << 1;
 pub const NO_SEAL: u64 = u64::MAX;
 
 /// One request/response slot, resident in shared memory.
-#[repr(C)]
+///
+/// Cache-line aligned *and* cache-line sized: two slots never share a
+/// line, so one connection's doorbell store never invalidates a
+/// neighbouring slot a different client thread is polling.
+#[repr(C, align(64))]
 pub struct Slot {
+    /// Lap sequence (the MPMC ticket gate): equals the claim ticket
+    /// that may enter this slot; bumped by `n` on consume.
+    pub seq: AtomicU64,
     pub state: AtomicU32,
     pub func: AtomicU32,
     pub flags: AtomicU32,
     pub status: AtomicU32,
+    /// Abandonment tombstone: set by a timed-out caller that will
+    /// never consume; whoever loses the `swap` race (caller vs.
+    /// `respond`) does nothing, the winner retires the lap. Keeps one
+    /// slow RPC from wedging the whole sequence-gated ring.
+    pub abandoned: AtomicU32,
     /// Seal descriptor index (NO_SEAL if none).
-    pub seal_idx: std::sync::atomic::AtomicU64,
-    /// Argument pointer + byte length (a native shm pointer!).
-    pub arg: std::sync::atomic::AtomicU64,
-    pub arg_len: std::sync::atomic::AtomicU64,
-    /// Return value (scalar or native shm pointer).
-    pub ret: std::sync::atomic::AtomicU64,
+    pub seal_idx: AtomicU64,
+    /// Argument pointer + byte length (a native shm pointer!). On an
+    /// error response these double as the fault-detail words (sandbox
+    /// window bounds), written by `respond_fault`.
+    pub arg: AtomicU64,
+    pub arg_len: AtomicU64,
+    /// Return value (scalar or native shm pointer); fault address on
+    /// sandbox-violation responses.
+    pub ret: AtomicU64,
 }
+
+// Layout guards: future field additions must not silently reintroduce
+// cache-line sharing between slots.
+const _: () = assert!(
+    std::mem::size_of::<Slot>() % 64 == 0,
+    "Slot must stay a whole number of cache lines"
+);
+const _: () = assert!(std::mem::align_of::<Slot>() == 64, "Slot must stay cache-line aligned");
 
 /// Status codes carried back in `Slot::status`.
 pub const ST_OK: u32 = 0;
@@ -56,41 +113,90 @@ pub const ST_SANDBOX_VIOLATION: u32 = 3;
 pub const ST_HANDLER_ERROR: u32 = 4;
 pub const ST_CLOSED: u32 = 5;
 
-pub fn status_to_error(status: u32) -> RpcError {
+/// Decode an error response. `func` is the function id the request
+/// carried; `ret`/`aux_lo`/`aux_hi` are the slot's return and
+/// argument words, which error responses reuse to carry the remote
+/// detail (fault address and sandbox window — see
+/// [`RpcRing::respond_fault`]) instead of discarding it.
+pub fn status_to_error(status: u32, func: u32, ret: u64, aux_lo: u64, aux_hi: u64) -> RpcError {
     match status {
-        ST_NO_HANDLER => RpcError::NoSuchHandler(0),
+        ST_NO_HANDLER => RpcError::NoSuchHandler(func),
         ST_SEAL_INVALID => RpcError::SealInvalid("receiver-side seal verification failed".into()),
-        ST_SANDBOX_VIOLATION => {
-            RpcError::SandboxViolation { addr: 0, lo: 0, hi: 0 }
-        }
+        ST_SANDBOX_VIOLATION => RpcError::SandboxViolation {
+            addr: ret as usize,
+            lo: aux_lo as usize,
+            hi: aux_hi as usize,
+        },
         ST_CLOSED => RpcError::ConnectionClosed,
-        _ => RpcError::Remote(format!("handler error (status {status})")),
+        _ => RpcError::Remote(format!("handler error (status {status}, func {func})")),
     }
 }
 
-/// The ring itself: `n` slots in the connection heap.
+/// The ring itself: `n` slots in the connection heap plus two local
+/// ticket cursors (each on its own cache line).
 pub struct RpcRing {
     base: usize,
     n: usize,
+    mask: u64,
     charger: Arc<Charger>,
     /// One-way doorbell cost: CXL signal for in-rack connections, an
     /// RDMA message for DSM-fallback connections.
     signal_ns: u64,
+    /// Claim tickets (client side).
+    head: CachePadded<AtomicU64>,
+    /// Service cursor (server side).
+    tail: CachePadded<AtomicU64>,
+    /// Rung by `publish()`; the channel's serving loop parks here.
+    req_bell: Arc<Doorbell>,
+    /// Rung by `respond()`/`consume()`; claim- and completion-waiters
+    /// park here.
+    resp_bell: Arc<Doorbell>,
 }
 
 impl RpcRing {
     pub fn create(heap: &Arc<Heap>, n: usize) -> Result<RpcRing> {
         let ns = heap.pool().charger.cost.cxl_signal_ns;
-        Self::create_with_signal(heap, n, ns)
+        Self::create_opts(heap, n, ns, None)
     }
 
     /// Ring whose doorbell models a different link (RDMA fallback).
     pub fn create_with_signal(heap: &Arc<Heap>, n: usize, signal_ns: u64) -> Result<RpcRing> {
+        Self::create_opts(heap, n, signal_ns, None)
+    }
+
+    /// Full-control constructor: `req_bell` lets a channel share one
+    /// request doorbell across all of its connections' rings, so a
+    /// single parked listener wakes for any of them.
+    pub fn create_opts(
+        heap: &Arc<Heap>,
+        n: usize,
+        signal_ns: u64,
+        req_bell: Option<Arc<Doorbell>>,
+    ) -> Result<RpcRing> {
         let n = n.next_power_of_two().max(4);
         let bytes = n * std::mem::size_of::<Slot>();
-        let base = heap.alloc_bytes(bytes)?;
+        // Page-backed so the 64-byte slot alignment actually holds
+        // (`alloc_bytes` only guarantees 16).
+        let seg = heap.alloc_pages(bytes.div_ceil(heap.page_size()))?;
+        let base = seg.base;
+        debug_assert_eq!(base % 64, 0);
         unsafe { std::ptr::write_bytes(base as *mut u8, 0, bytes) };
-        Ok(RpcRing { base, n, charger: Arc::clone(&heap.pool().charger), signal_ns })
+        let ring = RpcRing {
+            base,
+            n,
+            mask: (n - 1) as u64,
+            charger: Arc::clone(&heap.pool().charger),
+            signal_ns,
+            head: CachePadded::new(AtomicU64::new(0)),
+            tail: CachePadded::new(AtomicU64::new(0)),
+            req_bell: req_bell.unwrap_or_else(Doorbell::new_arc),
+            resp_bell: Doorbell::new_arc(),
+        };
+        // Open every slot to lap 0: slot i admits ticket i.
+        for i in 0..n {
+            ring.slot(i).seq.store(i as u64, Ordering::Relaxed);
+        }
+        Ok(ring)
     }
 
     #[inline]
@@ -98,9 +204,24 @@ impl RpcRing {
         self.n
     }
 
+    /// No in-flight work in any slot (the inverse of "occupied", not
+    /// of capacity — see `quiescent`).
     #[inline]
     pub fn is_empty(&self) -> bool {
-        false
+        self.quiescent()
+    }
+
+    /// The doorbell `publish()` rings (the serving side parks on it).
+    #[inline]
+    pub fn req_bell(&self) -> &Arc<Doorbell> {
+        &self.req_bell
+    }
+
+    /// The doorbell `respond()`/`consume()` ring (claim- and
+    /// completion-waiters park on it).
+    #[inline]
+    pub fn resp_bell(&self) -> &Arc<Doorbell> {
+        &self.resp_bell
     }
 
     #[inline]
@@ -109,18 +230,41 @@ impl RpcRing {
         unsafe { &*((self.base + i * std::mem::size_of::<Slot>()) as *const Slot) }
     }
 
-    /// Client side: claim an EMPTY slot (CAS scan).
+    /// Client side: claim a slot. One ticket CAS plus one slot touch —
+    /// never a scan. `None` means the ring is full (every lap ticket
+    /// up to `head` is still in flight); callers wait on the response
+    /// doorbell, and the claim that would overwrite live state simply
+    /// cannot happen (the sequence gate refuses it).
     pub fn claim(&self) -> Option<usize> {
-        for i in 0..self.n {
+        let mut t = self.head.load(Ordering::Relaxed);
+        loop {
+            let i = (t & self.mask) as usize;
             let s = self.slot(i);
-            if s.state
-                .compare_exchange(SLOT_EMPTY, SLOT_CLAIMED, Ordering::AcqRel, Ordering::Relaxed)
-                .is_ok()
-            {
-                return Some(i);
+            let seq = s.seq.load(Ordering::Acquire);
+            match seq.cmp(&t) {
+                std::cmp::Ordering::Equal => {
+                    match self.head.compare_exchange_weak(
+                        t,
+                        t + 1,
+                        Ordering::AcqRel,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            // The sequence gate made us the slot's
+                            // only owner for this lap; a plain store
+                            // suffices.
+                            s.state.store(SLOT_CLAIMED, Ordering::Relaxed);
+                            return Some(i);
+                        }
+                        Err(h) => t = h,
+                    }
+                }
+                // Previous lap not yet consumed: full.
+                std::cmp::Ordering::Less => return None,
+                // Another claimer advanced head past us; catch up.
+                std::cmp::Ordering::Greater => t = self.head.load(Ordering::Relaxed),
             }
         }
-        None
     }
 
     /// Client side: fill the claimed slot and ring the doorbell.
@@ -144,35 +288,112 @@ impl RpcRing {
         // The doorbell: one cross-fabric signal (or RDMA message).
         self.charger.charge_ns(self.signal_ns);
         s.state.store(SLOT_REQUEST, Ordering::Release);
+        self.req_bell.ring();
+        // Inline-serving waiters (who drain requests from inside their
+        // own response wait) park on the response bell — a peer's
+        // publish must wake them too, or it stalls a full park slice.
+        // Un-armed, this is one extra atomic load.
+        self.resp_bell.ring();
     }
 
-    /// Server side: find a pending request, transition it to PROCESSING.
+    /// Server side: take the next pending request in publish order,
+    /// transitioning it to PROCESSING. One slot touch at the service
+    /// cursor — never a scan.
     pub fn take_request(&self) -> Option<usize> {
-        for i in 0..self.n {
+        loop {
+            let t = self.tail.load(Ordering::Acquire);
+            let i = (t & self.mask) as usize;
             let s = self.slot(i);
-            if s.state.load(Ordering::Acquire) == SLOT_REQUEST
-                && s.state
-                    .compare_exchange(
-                        SLOT_REQUEST,
-                        SLOT_PROCESSING,
-                        Ordering::AcqRel,
-                        Ordering::Relaxed,
-                    )
-                    .is_ok()
+            if s.state.load(Ordering::Acquire) != SLOT_REQUEST {
+                // Nothing published at the cursor (earlier tickets may
+                // be claimed-but-unpublished; FIFO waits for them).
+                return None;
+            }
+            if s.state
+                .compare_exchange(
+                    SLOT_REQUEST,
+                    SLOT_PROCESSING,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
             {
+                // Lap guard (ABA): between our tail read and the CAS
+                // the slot may have completed an entire lap, making
+                // the REQUEST we just took belong to ticket t+n, not
+                // t. The slot's seq still equals its claim ticket
+                // until consume, so a mismatch is detectable — put
+                // the request back and retry from the fresh cursor.
+                if s.seq.load(Ordering::Acquire) != t {
+                    s.state.store(SLOT_REQUEST, Ordering::Release);
+                    continue;
+                }
+                // We are ticket t's rightful taker, and only the
+                // rightful taker advances t → t+1, so this cannot
+                // race another advance of the same ticket.
+                let _ = self.tail.compare_exchange(
+                    t,
+                    t + 1,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
                 return Some(i);
             }
+            // Lost the take race; the winner is advancing the cursor —
+            // retry from the new tail.
         }
-        None
     }
 
-    /// Server side: write the response and signal the client.
-    pub fn respond(&self, i: usize, status: u32, ret: u64) {
+    /// Retire a slot's lap: free the state machine and re-open the
+    /// slot to the claim ticket one ring-cycle ahead. The EMPTY store
+    /// must precede the Release seq store — the sequence store is
+    /// what hands the slot to the next claimer. The EMPTY store is
+    /// itself Release: `quiescent()`'s Acquire loads gate the
+    /// argument-quarantine sweep, which needs a happens-before edge
+    /// covering the handler's argument reads (they precede the
+    /// retirer's access to the slot on every path). Callers ring the
+    /// response bell afterwards (a freed slot may unblock a full-ring
+    /// claim waiter).
+    #[inline]
+    fn retire_lap(&self, s: &Slot) {
+        s.state.store(SLOT_EMPTY, Ordering::Release);
+        let t = s.seq.load(Ordering::Relaxed);
+        s.seq.store(t + self.n as u64, Ordering::Release);
+    }
+
+    /// Server side: write the response and signal the client. Returns
+    /// `true` when the caller had abandoned the call (timeout) and
+    /// this response retired the lap on its behalf — the response
+    /// (including any `ret` the handler allocated) was discarded, so
+    /// the serving layer must reclaim an owned reply buffer itself.
+    pub fn respond(&self, i: usize, status: u32, ret: u64) -> bool {
         let s = self.slot(i);
         s.ret.store(ret, Ordering::Relaxed);
         s.status.store(status, Ordering::Relaxed);
         self.charger.charge_ns(self.signal_ns);
         s.state.store(SLOT_RESPONSE, Ordering::Release);
+        // A timed-out caller will never consume: if it left its
+        // tombstone, retire the lap on its behalf (the swap decides a
+        // race with a concurrent `abandon` exactly once).
+        let discarded = s.abandoned.swap(0, Ordering::SeqCst) == 1;
+        if discarded {
+            self.retire_lap(s);
+        }
+        self.resp_bell.ring();
+        discarded
+    }
+
+    /// Server side: error response carrying remote detail. The slot's
+    /// `arg`/`arg_len` words are dead on a response, so they carry the
+    /// auxiliary fault data (e.g. the sandbox window bounds) back to
+    /// the client instead of being discarded. Returns `true` when the
+    /// response was discarded into an abandoned lap (see
+    /// [`RpcRing::respond`]).
+    pub fn respond_fault(&self, i: usize, status: u32, ret: u64, aux_lo: u64, aux_hi: u64) -> bool {
+        let s = self.slot(i);
+        s.arg.store(aux_lo, Ordering::Relaxed);
+        s.arg_len.store(aux_hi, Ordering::Relaxed);
+        self.respond(i, status, ret)
     }
 
     /// Client side: is the response ready?
@@ -183,11 +404,49 @@ impl RpcRing {
 
     /// Client side: consume the response, freeing the slot.
     pub fn consume(&self, i: usize) -> (u32, u64) {
+        let (status, ret, _, _) = self.consume_detail(i);
+        (status, ret)
+    }
+
+    /// Like [`RpcRing::consume`], but also returns the auxiliary
+    /// detail words (`arg`/`arg_len`) an error response may carry —
+    /// see [`RpcRing::respond_fault`].
+    pub fn consume_detail(&self, i: usize) -> (u32, u64, u64, u64) {
         let s = self.slot(i);
         let status = s.status.load(Ordering::Relaxed);
         let ret = s.ret.load(Ordering::Relaxed);
-        s.state.store(SLOT_EMPTY, Ordering::Release);
-        (status, ret)
+        let aux_lo = s.arg.load(Ordering::Relaxed);
+        let aux_hi = s.arg_len.load(Ordering::Relaxed);
+        self.retire_lap(s);
+        self.resp_bell.ring();
+        (status, ret, aux_lo, aux_hi)
+    }
+
+    /// Client side: give up on a slot that will never be consumed
+    /// (response timeout, connection closed mid-call). Without this,
+    /// one abandoned ticket would wedge the sequence-gated ring as
+    /// soon as `head` wraps back to its slot. If the server already
+    /// responded, the lap retires here and the discarded response's
+    /// `(status, ret)` is returned so the caller can reclaim an owned
+    /// reply buffer; otherwise a tombstone is left and `respond()`
+    /// retires the lap when the (stale) response lands. The request
+    /// may still be served in the meantime — same semantics as a late
+    /// server pickup before this redesign.
+    pub fn abandon(&self, i: usize) -> Option<(u32, u64)> {
+        let s = self.slot(i);
+        s.abandoned.store(1, Ordering::SeqCst);
+        if s.state.load(Ordering::SeqCst) == SLOT_RESPONSE
+            && s.abandoned.swap(0, Ordering::SeqCst) == 1
+        {
+            // Response already landed (and respond() lost or never saw
+            // the tombstone race): retire the lap ourselves.
+            let status = s.status.load(Ordering::Relaxed);
+            let ret = s.ret.load(Ordering::Relaxed);
+            self.retire_lap(s);
+            self.resp_bell.ring();
+            return Some((status, ret));
+        }
+        None
     }
 
     /// Any in-flight work? (used by drain/shutdown paths)
@@ -211,6 +470,16 @@ mod tests {
     }
 
     #[test]
+    fn slot_layout_is_padded() {
+        assert_eq!(std::mem::size_of::<Slot>(), 64);
+        assert_eq!(std::mem::align_of::<Slot>(), 64);
+        let (_p, _h, r) = ring();
+        assert_eq!((r.slot(0) as *const Slot as usize) % 64, 0);
+        let d = r.slot(1) as *const Slot as usize - r.slot(0) as *const Slot as usize;
+        assert_eq!(d, 64, "adjacent slots must not share a cache line");
+    }
+
+    #[test]
     fn request_response_cycle() {
         let (_p, _h, r) = ring();
         let i = r.claim().unwrap();
@@ -228,6 +497,22 @@ mod tests {
     }
 
     #[test]
+    fn is_empty_tracks_occupancy() {
+        let (_p, _h, r) = ring();
+        assert!(r.is_empty(), "fresh ring holds no work");
+        let i = r.claim().unwrap();
+        assert!(!r.is_empty(), "claimed slot counts as occupied");
+        r.publish(i, 1, 0, NO_SEAL, 0, 0);
+        assert!(!r.is_empty());
+        let j = r.take_request().unwrap();
+        r.respond(j, ST_OK, 0);
+        assert!(!r.is_empty(), "unconsumed response still occupies its slot");
+        r.consume(i);
+        assert!(r.is_empty());
+        assert_eq!(r.is_empty(), r.quiescent());
+    }
+
+    #[test]
     fn slots_exhaust_then_recycle() {
         let (_p, _h, r) = ring();
         let claimed: Vec<usize> = (0..r.len()).map(|_| r.claim().unwrap()).collect();
@@ -239,6 +524,50 @@ mod tests {
         r.respond(i, ST_OK, 0);
         r.consume(i);
         assert!(r.claim().is_some());
+    }
+
+    #[test]
+    fn full_ring_blocks_claims_without_corruption() {
+        let (_p, _h, r) = ring();
+        // Fill every slot, then hammer claim: it must refuse (not
+        // recycle a live slot) every time.
+        let claimed: Vec<usize> = (0..r.len()).map(|_| r.claim().unwrap()).collect();
+        for _ in 0..100 {
+            assert!(r.claim().is_none());
+        }
+        // Publish everything; the server drains in FIFO order and the
+        // ring recycles cleanly.
+        for (k, &i) in claimed.iter().enumerate() {
+            r.publish(i, k as u32, 0, NO_SEAL, 0, 0);
+        }
+        for _ in 0..r.len() {
+            let i = r.take_request().unwrap();
+            let f = r.slot(i).func.load(Ordering::Relaxed);
+            r.respond(i, ST_OK, f as u64);
+        }
+        for &i in &claimed {
+            let (st, ret) = r.consume(i);
+            assert_eq!(st, ST_OK);
+            assert_eq!(ret, r.slot(i).func.load(Ordering::Relaxed) as u64);
+        }
+        assert!(r.quiescent());
+        assert!(r.claim().is_some(), "drained ring claims again");
+    }
+
+    #[test]
+    fn wraparound_many_laps_single_thread() {
+        let (_p, _h, r) = ring();
+        // 10 laps of the 8-slot ring through the full lifecycle.
+        for k in 0..80u32 {
+            let i = r.claim().expect("never full with one in flight");
+            r.publish(i, k, 0, NO_SEAL, 0, 0);
+            let j = r.take_request().unwrap();
+            assert_eq!(i, j, "single-stream FIFO serves the slot just published");
+            r.respond(j, ST_OK, k as u64 * 3);
+            let (st, ret) = r.consume(i);
+            assert_eq!((st, ret), (ST_OK, k as u64 * 3));
+        }
+        assert!(r.quiescent());
     }
 
     #[test]
@@ -272,5 +601,116 @@ mod tests {
             assert_eq!(ret, k as u64 + 1);
         }
         t.join().unwrap();
+    }
+
+    /// N client threads × M calls with M·N ≫ ring size: every response
+    /// must reach exactly the caller that published its request — no
+    /// lost, duplicated, or cross-wired responses across laps.
+    #[test]
+    fn contended_wraparound_no_lost_or_duplicated_responses() {
+        const THREADS: u64 = 4;
+        const CALLS: u64 = 64; // 256 calls through an 8-slot ring
+        let (_p, h, _unused) = ring();
+        let r = Arc::new(RpcRing::create(&h, 8).unwrap());
+
+        let server = Arc::clone(&r);
+        let srv = std::thread::spawn(move || {
+            let mut served = 0u64;
+            while served < THREADS * CALLS {
+                if let Some(i) = server.take_request() {
+                    let f = server.slot(i).func.load(Ordering::Relaxed);
+                    // Echo a value derived from the request so the
+                    // caller can detect cross-wired responses.
+                    server.respond(i, ST_OK, f as u64 * 7 + 1);
+                    served += 1;
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        });
+
+        let mut clients = Vec::new();
+        for tid in 0..THREADS {
+            let r = Arc::clone(&r);
+            clients.push(std::thread::spawn(move || {
+                for k in 0..CALLS {
+                    let func = (tid * CALLS + k) as u32; // globally unique
+                    let i = loop {
+                        if let Some(i) = r.claim() {
+                            break i;
+                        }
+                        std::hint::spin_loop();
+                    };
+                    r.publish(i, func, 0, NO_SEAL, 0, 0);
+                    while !r.response_ready(i) {
+                        std::hint::spin_loop();
+                    }
+                    let (st, ret) = r.consume(i);
+                    assert_eq!(st, ST_OK);
+                    assert_eq!(
+                        ret,
+                        func as u64 * 7 + 1,
+                        "thread {tid} call {k}: response cross-wired"
+                    );
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        srv.join().unwrap();
+        assert!(r.quiescent(), "all laps retired");
+        // The cursors agree on the total traffic.
+        assert_eq!(r.head.load(Ordering::Relaxed), THREADS * CALLS);
+        assert_eq!(r.tail.load(Ordering::Relaxed), THREADS * CALLS);
+    }
+
+    /// A timed-out caller never consumes; its tombstone must let the
+    /// ring keep cycling instead of wedging once `head` wraps back to
+    /// the abandoned slot (regression for the sequence-gate redesign).
+    #[test]
+    fn abandoned_slots_are_reclaimed_not_wedged() {
+        let (_p, _h, r) = ring();
+        // 3+ full laps of an 8-slot ring, abandoning every call
+        // before the server picks it up: the late response must
+        // retire each lap.
+        for k in 0..28u32 {
+            let i = r.claim().unwrap_or_else(|| panic!("ring wedged at call {k}"));
+            r.publish(i, k, 0, NO_SEAL, 0, 0);
+            let discarded = r.abandon(i); // caller gave up while still queued
+            assert!(discarded.is_none(), "no response landed yet");
+            let j = r.take_request().expect("abandoned request still served");
+            assert!(r.respond(j, ST_OK, 0), "respond() must retire the abandoned lap");
+        }
+        assert!(r.quiescent(), "late responses retired every abandoned lap");
+
+        // Abandon *after* the response landed: the caller retires it
+        // and receives the discarded response for reply reclamation.
+        let i = r.claim().unwrap();
+        r.publish(i, 1, 0, NO_SEAL, 0, 0);
+        let j = r.take_request().unwrap();
+        assert!(!r.respond(j, ST_OK, 77), "no tombstone yet: normal response");
+        assert_eq!(r.abandon(i), Some((ST_OK, 77)), "caller gets the orphaned reply");
+        assert!(r.quiescent());
+        assert!(r.claim().is_some(), "ring still cycles after both abandon orders");
+    }
+
+    #[test]
+    fn error_detail_roundtrip() {
+        let (_p, _h, r) = ring();
+        let i = r.claim().unwrap();
+        r.publish(i, 9, 0, NO_SEAL, 0xF00, 8);
+        let j = r.take_request().unwrap();
+        r.respond_fault(j, ST_SANDBOX_VIOLATION, 0xBAD, 0x1000, 0x2000);
+        let (st, ret, lo, hi) = r.consume_detail(i);
+        assert_eq!(st, ST_SANDBOX_VIOLATION);
+        let e = status_to_error(st, 9, ret, lo, hi);
+        assert_eq!(
+            e,
+            RpcError::SandboxViolation { addr: 0xBAD, lo: 0x1000, hi: 0x2000 },
+            "fault detail must survive the wire"
+        );
+        let e = status_to_error(ST_NO_HANDLER, 42, 0, 0, 0);
+        assert_eq!(e, RpcError::NoSuchHandler(42), "func id must survive the wire");
     }
 }

@@ -1,4 +1,4 @@
-//! Busy-waiting with adaptive sleep (paper §5.8).
+//! Busy-waiting with adaptive sleep (paper §5.8) and parking.
 //!
 //! RPCool busy-polls shared memory for new RPCs and completions. To
 //! keep CPU burn bounded, it sleeps between iterations depending on
@@ -9,8 +9,25 @@
 //! Load here is the fraction of hardware threads occupied by active
 //! pollers/workers (a `LoadMonitor` EWMA), standing in for the
 //! system-wide CPU load the paper samples.
+//!
+//! # Parking (`SleepPolicy::Park`)
+//!
+//! The fourth point on the paper's tradeoff curve: instead of timed
+//! sleeps, an idle poller *parks* on a [`Doorbell`] — a futex-style
+//! wait object the producer side rings from `publish()`/`respond()`.
+//! A parked poller burns zero CPU and wakes on the next doorbell ring
+//! rather than at the next sleep tick. The loaded case keeps the
+//! spin-first behaviour (a short poll burst before parking), so hot
+//! connections never pay the wake-up latency.
+//!
+//! The doorbell's fast path is wait-free for producers: when no
+//! poller has armed the bell, `ring()` is a single atomic load. The
+//! residual store-buffer race (a producer may miss a poller arming
+//! concurrently) is bounded by `PARK_SLICE_US`: parked waits are
+//! sliced, so a lost wake-up costs at most one slice, never a hang.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Global count of threads currently spinning/working, and the
@@ -54,6 +71,108 @@ impl Default for LoadMonitor {
 /// Process-wide monitor (simulated hosts share the physical CPU).
 pub static LOAD: LoadMonitor = LoadMonitor::new();
 
+/// Spin iterations before a `Park` waiter actually parks. Keeps the
+/// no-wake fast path for responses that arrive within the RTT of a
+/// hot connection.
+pub const PARK_SPIN_POLLS: u32 = 256;
+
+/// Upper bound on one parked wait. Slicing bounds the cost of the
+/// (rare, store-buffer-window) lost wake-up race and lets waiters
+/// re-check timeouts/shutdown flags.
+pub const PARK_SLICE_US: u64 = 1_000;
+
+/// A futex-style wake-up object: producers `ring()` it after
+/// publishing work; idle pollers park on it instead of burning CPU.
+///
+/// Protocol: a waiter `arm()`s the bell, snapshots `epoch()`, checks
+/// its ready condition, and — still finding nothing — calls
+/// `wait_past(seen)`, which blocks only while the epoch still equals
+/// `seen`. Any ring between the snapshot and the wait advances the
+/// epoch, so the wait returns immediately instead of missing the
+/// event. `ring()` with no armed waiter is a single atomic load.
+pub struct Doorbell {
+    gen: AtomicU64,
+    /// Threads currently inside a park-capable wait section.
+    armed: AtomicU32,
+    /// Threads currently blocked in `wait_past`.
+    parked: AtomicU32,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Doorbell {
+    pub fn new() -> Doorbell {
+        Doorbell {
+            gen: AtomicU64::new(0),
+            armed: AtomicU32::new(0),
+            parked: AtomicU32::new(0),
+            mu: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn new_arc() -> Arc<Doorbell> {
+        Arc::new(Doorbell::new())
+    }
+
+    /// Producer side: wake any parked waiters. Wait-free (one atomic
+    /// load) when nobody is armed — the doorbell costs the hot path
+    /// nothing unless a poller actually parks.
+    #[inline]
+    pub fn ring(&self) {
+        if self.armed.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        self.gen.fetch_add(1, Ordering::SeqCst);
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            // Empty critical section: a waiter between its epoch
+            // re-check and `cv.wait` holds `mu`, so this lock ensures
+            // the notify cannot land in that gap and get lost.
+            drop(self.mu.lock().unwrap());
+            self.cv.notify_all();
+        }
+    }
+
+    /// Enter a park-capable wait section (see struct docs).
+    pub fn arm(&self) {
+        self.armed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn disarm(&self) {
+        self.armed.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Current ring count. Snapshot *before* checking the ready
+    /// condition; pass to [`Doorbell::wait_past`].
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.gen.load(Ordering::SeqCst)
+    }
+
+    /// Park until the bell rings past `seen`, at most `slice`.
+    /// Callers must hold an `arm()` and should loop, re-checking their
+    /// ready condition and timeout between slices.
+    pub fn wait_past(&self, seen: u64, slice: Duration) {
+        self.parked.fetch_add(1, Ordering::SeqCst);
+        let g = self.mu.lock().unwrap();
+        if self.gen.load(Ordering::SeqCst) == seen {
+            let _ = self.cv.wait_timeout(g, slice).unwrap();
+        }
+        self.parked.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Test/telemetry hook: is anyone parked right now?
+    pub fn parked(&self) -> u32 {
+        self.parked.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for Doorbell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SleepPolicy {
     /// Paper §5.8 default: 0 / mid / high µs by load band.
@@ -62,6 +181,10 @@ pub enum SleepPolicy {
     Fixed(u64),
     /// Never sleep.
     Spin,
+    /// Spin briefly, then block on the connection's [`Doorbell`] until
+    /// `publish()`/`respond()` rings it. Zero CPU burn when idle, no
+    /// sleep-tick latency when loaded.
+    Park,
 }
 
 impl SleepPolicy {
@@ -74,10 +197,11 @@ impl SleepPolicy {
         }
     }
 
-    /// Sleep duration for the current load.
+    /// Sleep duration for the current load. (`Park` reports 0: parking
+    /// is driven by the doorbell in [`wait_on`], not by timed sleeps.)
     pub fn sleep_us(&self, load: f64) -> u64 {
         match *self {
-            SleepPolicy::Spin => 0,
+            SleepPolicy::Spin | SleepPolicy::Park => 0,
             SleepPolicy::Fixed(us) => us,
             SleepPolicy::Adaptive { load_mid, load_high, sleep_mid_us, sleep_high_us } => {
                 if load < load_mid {
@@ -107,25 +231,84 @@ pub struct WaitStats {
 }
 
 /// Busy-wait until `ready()` or `timeout`. The paper's poll loop.
+/// `SleepPolicy::Park` degrades to a 5µs fixed sleep here because no
+/// doorbell is supplied — use [`wait_on`] on paths that have one.
 pub fn wait_until(
     policy: SleepPolicy,
     timeout: Duration,
     stats: Option<&WaitStats>,
+    ready: impl FnMut() -> bool,
+) -> WaitOutcome {
+    wait_on(policy, timeout, stats, None, ready)
+}
+
+/// Busy-wait until `ready()` or `timeout`, parking on `bell` when the
+/// policy is `Park`. The wait is doorbell-correct: the epoch is
+/// snapshotted before every `ready()` check, so a ring that lands
+/// between the check and the park wakes the waiter immediately.
+pub fn wait_on(
+    policy: SleepPolicy,
+    timeout: Duration,
+    stats: Option<&WaitStats>,
+    bell: Option<&Doorbell>,
     mut ready: impl FnMut() -> bool,
 ) -> WaitOutcome {
     let start = Instant::now();
+    let park = policy == SleepPolicy::Park && bell.is_some();
+    // Armed lazily, only when this waiter is actually about to park:
+    // while any waiter is armed, every producer-side `ring()` pays an
+    // epoch bump, so the spin phase (the loaded case) keeps the bell
+    // silent and `ring()` stays a single load.
+    let mut armed = false;
+    let mut polls: u32 = 0;
     LOAD.enter();
     let out = loop {
+        // Epoch snapshot before the ready check (once armed): a ring
+        // that lands between the check and the park advances it, so
+        // the park returns immediately.
+        let seen = if armed { bell.unwrap().epoch() } else { 0 };
         if ready() {
             break WaitOutcome::Ready;
         }
         if let Some(s) = stats {
             s.polls.fetch_add(1, Ordering::Relaxed);
         }
-        if start.elapsed() >= timeout {
+        let elapsed = start.elapsed();
+        if elapsed >= timeout {
             break WaitOutcome::TimedOut;
         }
-        let us = policy.sleep_us(LOAD.load());
+        if park {
+            polls += 1;
+            if polls < PARK_SPIN_POLLS {
+                std::hint::spin_loop();
+                continue;
+            }
+            if !armed {
+                bell.unwrap().arm();
+                armed = true;
+                // Re-check ready with the bell armed before parking —
+                // an event between the last check and arming would
+                // otherwise be missed.
+                continue;
+            }
+            let slice = (timeout - elapsed).min(Duration::from_micros(PARK_SLICE_US));
+            if let Some(s) = stats {
+                s.sleeps.fetch_add(1, Ordering::Relaxed);
+            }
+            // A parked thread occupies no core: leave the load count
+            // while blocked so adaptive pollers elsewhere see the
+            // freed CPU.
+            LOAD.exit();
+            bell.unwrap().wait_past(seen, slice);
+            LOAD.enter();
+            continue;
+        }
+        let us = match policy {
+            // Park without a bell: nothing to park on; a short fixed
+            // sleep keeps the semantics (yield the core when idle).
+            SleepPolicy::Park => 5,
+            p => p.sleep_us(LOAD.load()),
+        };
         if us > 0 {
             if let Some(s) = stats {
                 s.sleeps.fetch_add(1, Ordering::Relaxed);
@@ -138,6 +321,9 @@ pub fn wait_until(
         }
     };
     LOAD.exit();
+    if armed {
+        bell.unwrap().disarm();
+    }
     out
 }
 
@@ -158,6 +344,7 @@ mod tests {
         assert_eq!(p.sleep_us(0.10), 0);
         assert_eq!(p.sleep_us(0.30), 5);
         assert_eq!(p.sleep_us(0.80), 150);
+        assert_eq!(SleepPolicy::Park.sleep_us(0.80), 0);
     }
 
     #[test]
@@ -180,6 +367,58 @@ mod tests {
         let out =
             wait_until(SleepPolicy::Fixed(1), Duration::from_millis(5), None, || false);
         assert_eq!(out, WaitOutcome::TimedOut);
+    }
+
+    #[test]
+    fn park_wait_times_out_without_bell() {
+        let out = wait_until(SleepPolicy::Park, Duration::from_millis(5), None, || false);
+        assert_eq!(out, WaitOutcome::TimedOut);
+    }
+
+    #[test]
+    fn parked_waiter_wakes_on_ring() {
+        let bell = Doorbell::new_arc();
+        let flag = Arc::new(AtomicBool::new(false));
+        let (b2, f2) = (Arc::clone(&bell), Arc::clone(&flag));
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            f2.store(true, Ordering::Release);
+            b2.ring();
+        });
+        let t0 = Instant::now();
+        let out = wait_on(SleepPolicy::Park, Duration::from_secs(5), None, Some(&bell), || {
+            flag.load(Ordering::Acquire)
+        });
+        assert_eq!(out, WaitOutcome::Ready);
+        // Must wake well before a 5s timeout; the ring (or at worst
+        // one park slice) bounds the latency.
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ring_without_waiters_is_cheap_and_safe() {
+        let bell = Doorbell::new();
+        // Not armed: epoch must not advance (fast path short-circuits).
+        bell.ring();
+        assert_eq!(bell.epoch(), 0);
+        bell.arm();
+        bell.ring();
+        assert!(bell.epoch() > 0);
+        bell.disarm();
+        assert_eq!(bell.parked(), 0);
+    }
+
+    #[test]
+    fn wait_past_returns_immediately_on_stale_epoch() {
+        let bell = Doorbell::new();
+        bell.arm();
+        let seen = bell.epoch();
+        bell.ring(); // epoch moves past `seen`
+        let t0 = Instant::now();
+        bell.wait_past(seen, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_millis(500), "stale epoch must not block");
+        bell.disarm();
     }
 
     #[test]

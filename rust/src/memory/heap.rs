@@ -5,10 +5,12 @@
 //! The allocator is Boost.Interprocess-class: segregated size-class
 //! free lists with intrusive links stored *inside* the shared memory
 //! itself, plus a page-granular first-fit region for large objects and
-//! scopes. A single mutex per heap serializes metadata updates —
-//! allocation is not the RPC hot path (arguments are typically built
-//! once and shared by pointer), but CoolDB's build phase does stress
-//! it, so the fast path is kept short.
+//! scopes. A single mutex per heap serializes metadata updates — kept
+//! OFF the RPC hot path: per-call argument/reply bytes come from the
+//! connection's lock-free [`crate::memory::arena::ArgArena`] (carved
+//! from this heap), so this allocator only sees structure builds,
+//! scopes, and arena spill/refill traffic. CoolDB's build phase does
+//! stress it, so the fast path is kept short.
 //!
 //! The heap is also the **seal enforcement point**: `seal_range` flips
 //! simulated PTE write-permission bits for one proc's address-space

@@ -2,6 +2,7 @@
 //! heaps, scopes, native `ShmPtr` pointers, and shm containers.
 //! See DESIGN.md §1 for how this substitutes for real CXL 3.0 hardware.
 
+pub mod arena;
 pub mod containers;
 pub mod heap;
 pub mod pod;
@@ -9,6 +10,7 @@ pub mod pool;
 pub mod ptr;
 pub mod scope;
 
+pub use arena::ArgArena;
 pub use containers::{ListNode, MapNode, ShmKey, ShmList, ShmMap, ShmString, ShmVec};
 pub use heap::{heap_for_addr, Heap, ProcId};
 pub use pod::Pod;

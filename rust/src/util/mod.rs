@@ -7,3 +7,34 @@ pub mod spin;
 
 pub use rng::Rng;
 pub use spin::{spin_ns, spin_us};
+
+/// Pads and aligns a value to a 64-byte cache line, so hot atomics
+/// (ring head/tail tickets, arena bump state) don't false-share a
+/// line with their neighbours — the cross-host coherence traffic the
+/// paper's §4.2 layout is designed to avoid.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct CachePadded<T>(pub T);
+
+impl<T> CachePadded<T> {
+    pub const fn new(v: T) -> CachePadded<T> {
+        CachePadded(v)
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+const _: () = assert!(std::mem::align_of::<CachePadded<u64>>() == 64);
