@@ -1,23 +1,30 @@
 //! RING CONTENTION: multi-threaded clients hammering one connection's
-//! slot ring — the workload the indexed MPMC redesign targets. Not a
-//! paper figure; this is the repo's own perf trajectory for the hot
-//! path (see ISSUE 2 / DESIGN.md "Hot path anatomy").
+//! data path — the workload the indexed MPMC redesign (ISSUE 2) and
+//! the shard striping + batched submission work (ISSUE 3) target. Not
+//! a paper figure; this is the repo's own perf trajectory for the hot
+//! path (DESIGN.md §7–§8).
 //!
-//! Two layers:
+//! Three layers:
 //! * `ring/raw/*` — the bare `RpcRing` with latency charging off, so
 //!   the *structural* cost (ticket CAS, slot touch, padding) is what
 //!   is measured, across 1–8 client threads on an 8-slot ring.
-//! * `conn/charged/*` — full `call_typed` round trips through a
-//!   shared connection with the cost model charging, including the
-//!   lock-free argument arena.
+//! * `conn/charged/s{S}/t{T}` — full `call_typed` round trips through
+//!   a shared connection with the cost model charging, swept over
+//!   `ring_shards` ∈ {1, 4} × threads ∈ {1, 4, 8}. Each row carries
+//!   per-shard claim counts (`shard{i}_claims`) so the striping is
+//!   visible in the JSON record; throughput scaling from s1 → s4 at
+//!   t4/t8 is the tentpole's acceptance signal.
+//! * `conn/batched/b16` — `call_scalar_batch` pipelining 16 calls per
+//!   doorbell on one thread: the amortized-submission point.
 //!
-//! Each row reports throughput and per-op latency percentiles;
-//! `charged_ns_per_op` must stay constant across hot-path refactors
-//! (same number of doorbell events per RPC — the acceptance guard).
+//! `charged_ns_per_op` must stay at 2 doorbell signals per RPC for
+//! the unbatched rows across hot-path refactors (the batched row is
+//! *below* that — 1/16th of a signal on the publish side — which is
+//! the whole point).
 //!
 //! Run: `cargo bench --bench ring_contention [-- --quick]`
 
-use rpcool::benchkit::{BenchReport, Table};
+use rpcool::benchkit::{fanout, BenchReport, Table};
 use rpcool::channel::ring::{RpcRing, NO_SEAL, ST_OK};
 use rpcool::channel::{CallOpts, ChannelBuilder, Connection};
 use rpcool::memory::Heap;
@@ -50,47 +57,47 @@ fn ring_raw(threads: u64, ops_per_thread: u64) -> (f64, Histogram) {
     });
 
     let hist = Arc::new(Histogram::new());
-    let t0 = Instant::now();
-    let mut clients = Vec::new();
-    for tid in 0..threads {
-        let ring = Arc::clone(&ring);
-        let hist = Arc::clone(&hist);
-        clients.push(std::thread::spawn(move || {
-            for k in 0..ops_per_thread {
-                let t = Instant::now();
-                let i = loop {
-                    if let Some(i) = ring.claim() {
-                        break i;
-                    }
-                    std::hint::spin_loop();
-                };
-                ring.publish(i, (tid * ops_per_thread + k) as u32, 0, NO_SEAL, 0, 0);
-                while !ring.response_ready(i) {
-                    std::hint::spin_loop();
+    let wall = fanout(threads as usize, |tid| {
+        let tid = tid as u64;
+        for k in 0..ops_per_thread {
+            let t = Instant::now();
+            let i = loop {
+                if let Some(i) = ring.claim() {
+                    break i;
                 }
-                let (st, _ret) = ring.consume(i);
-                assert_eq!(st, ST_OK);
-                hist.record(t.elapsed());
+                std::hint::spin_loop();
+            };
+            ring.publish(i, (tid * ops_per_thread + k) as u32, 0, NO_SEAL, 0, 0);
+            while !ring.response_ready(i) {
+                std::hint::spin_loop();
             }
-        }));
-    }
-    for c in clients {
-        c.join().unwrap();
-    }
+            let (st, _ret) = ring.consume(i);
+            assert_eq!(st, ST_OK);
+            hist.record(t.elapsed());
+        }
+    });
     srv.join().unwrap();
-    let wall = t0.elapsed();
     (total as f64 / wall.as_secs_f64(), Arc::try_unwrap(hist).ok().unwrap())
 }
 
-fn conn_charged(threads: u64, ops_per_thread: u64) -> (f64, Histogram, f64) {
+/// Full `call_typed` round trips with the cost model charging,
+/// through a connection with `shards` ring shards served by `shards`
+/// listener workers. Returns (ops/s, latency hist, charged ns/op,
+/// per-shard claim counts).
+fn conn_charged(
+    threads: u64,
+    ops_per_thread: u64,
+    shards: usize,
+) -> (f64, Histogram, f64, Vec<u64>) {
     let rack = Rack::new(SimConfig::for_bench());
     let env = rack.proc_env(0);
     let server = ChannelBuilder::from_config(&rack.cfg)
         .ring_slots(8)
+        .ring_shards(shards)
         .open(&env, "contend")
         .unwrap();
     server.serve::<u64, u64>(1, |_ctx, v| Ok(*v + 1));
-    let listener = server.spawn_listener();
+    let listeners = server.spawn_listeners(shards);
     let cenv = rack.proc_env(1);
     let conn = Arc::new(Connection::connect(&cenv, "contend").unwrap());
 
@@ -120,10 +127,47 @@ fn conn_charged(threads: u64, ops_per_thread: u64) -> (f64, Histogram, f64) {
     let wall = t0.elapsed();
     let total = threads * ops_per_thread;
     let charged = (rack.pool.charger.total_charged_ns() - charged_before) as f64 / total as f64;
+    let claims = conn.shared.shard_claims();
+    drop(conn);
+    server.stop();
+    for l in listeners {
+        l.join().unwrap();
+    }
+    (total as f64 / wall.as_secs_f64(), Arc::try_unwrap(hist).ok().unwrap(), charged, claims)
+}
+
+/// Amortized submission: one thread pipelining `batch` calls per
+/// doorbell through `call_scalar_batch`. Returns (ops/s, charged
+/// ns/op).
+fn conn_batched(batch: usize, ops: u64) -> (f64, f64) {
+    let rack = Rack::new(SimConfig::for_bench());
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_slots(64)
+        .open(&env, "contend-batch")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let listener = server.spawn_listener();
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, "contend-batch").unwrap();
+
+    let charged_before = rack.pool.charger.total_charged_ns();
+    let vals: Vec<u64> = (0..batch as u64).collect();
+    let rounds = ops / batch as u64;
+    let t0 = Instant::now();
+    cenv.run(|| {
+        for _ in 0..rounds {
+            let rets = conn.call_scalar_batch::<u64>(1, &vals, CallOpts::new()).unwrap();
+            assert_eq!(rets.len(), batch);
+        }
+    });
+    let wall = t0.elapsed();
+    let total = rounds * batch as u64;
+    let charged = (rack.pool.charger.total_charged_ns() - charged_before) as f64 / total as f64;
     drop(conn);
     server.stop();
     listener.join().unwrap();
-    (total as f64 / wall.as_secs_f64(), Arc::try_unwrap(hist).ok().unwrap(), charged)
+    (total as f64 / wall.as_secs_f64(), charged)
 }
 
 fn main() {
@@ -146,23 +190,44 @@ fn main() {
         rep.row_hist(&format!("ring/raw/t{threads}"), &hist, thr);
     }
 
-    for threads in [1u64, 4] {
-        let (thr, hist, charged) = conn_charged(threads, conn_ops / threads);
-        t.row(&[
-            "conn/charged".into(),
-            format!("{threads}"),
-            format!("{thr:.0}"),
-            Histogram::fmt_ns(hist.median_ns()),
-            Histogram::fmt_ns(hist.p99_ns()),
-            format!("{charged:.0}"),
-        ]);
-        rep.row_hist(&format!("conn/charged/t{threads}"), &hist, thr);
-        rep.extra("charged_ns_per_op", charged);
+    // The tentpole sweep: does striping the data path convert
+    // per-ring throughput into per-connection scalability?
+    for shards in [1usize, 4] {
+        for threads in [1u64, 4, 8] {
+            let (thr, hist, charged, claims) = conn_charged(threads, conn_ops / threads, shards);
+            t.row(&[
+                format!("conn/charged/s{shards}"),
+                format!("{threads}"),
+                format!("{thr:.0}"),
+                Histogram::fmt_ns(hist.median_ns()),
+                Histogram::fmt_ns(hist.p99_ns()),
+                format!("{charged:.0}"),
+            ]);
+            rep.row_hist(&format!("conn/charged/s{shards}/t{threads}"), &hist, thr);
+            rep.extra("charged_ns_per_op", charged);
+            for (i, c) in claims.iter().enumerate() {
+                rep.extra(&format!("shard{i}_claims"), *c as f64);
+            }
+        }
     }
 
-    t.print("Ring contention — MPMC slot ring under multi-threaded clients");
+    let (thr_b, charged_b) = conn_batched(16, conn_ops);
+    t.row(&[
+        "conn/batched/b16".into(),
+        "1".into(),
+        format!("{thr_b:.0}"),
+        "-".into(),
+        "-".into(),
+        format!("{charged_b:.0}"),
+    ]);
+    rep.row("conn/batched/b16", 0.0, 0.0, 1e9 / thr_b, thr_b);
+    rep.extra("charged_ns_per_op", charged_b);
+
+    t.print("Ring contention — sharded MPMC data path under multi-threaded clients");
     println!(
-        "\ninvariant: charged ns/op stays at 2 doorbell signals per RPC across refactors."
+        "\ninvariants: unbatched charged ns/op stays at 2 doorbell signals per RPC; the\n\
+         batched row amortizes the publish signal across its batch; s4 rows at t4/t8\n\
+         must beat their s1 counterparts (per-connection scalability)."
     );
     rep.emit();
 }

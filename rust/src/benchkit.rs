@@ -38,6 +38,20 @@ pub fn time_op(warmup: usize, n: usize, per_op: bool, mut op: impl FnMut()) -> (
     }
 }
 
+/// Fan out `threads` copies of `work(thread_idx)` on scoped threads
+/// and return the wall-clock of the whole fan-out (i.e. the slowest
+/// worker). The multi-threaded benches' shared harness.
+pub fn fanout(threads: usize, work: impl Fn(usize) + Sync) -> Duration {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let w = &work;
+            s.spawn(move || w(t));
+        }
+    });
+    t0.elapsed()
+}
+
 /// Run `op` repeatedly for at least `dur`, returning ops/sec.
 pub fn throughput(dur: Duration, mut op: impl FnMut()) -> f64 {
     let t0 = Instant::now();
@@ -254,6 +268,18 @@ mod tests {
         });
         assert!(mean > 5_000.0, "mean {mean}");
         assert!(hist.count() == 100);
+    }
+
+    #[test]
+    fn fanout_runs_every_worker() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hits = AtomicU64::new(0);
+        let wall = fanout(4, |t| {
+            hits.fetch_add(1 + t as u64, Ordering::Relaxed);
+        });
+        // Each worker t contributes 1 + t: 1 + 2 + 3 + 4.
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        assert!(wall > Duration::ZERO);
     }
 
     #[test]

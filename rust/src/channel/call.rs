@@ -17,9 +17,12 @@ use crate::memory::pod::Pod;
 use crate::memory::ptr::{ShmPtr, ShmView};
 use crate::memory::scope::Scope;
 use std::marker::PhantomData;
+use std::sync::Arc;
 use std::time::Duration;
 
-use super::{Connection, TransportSel};
+use super::ring::{status_to_error, RpcRing, ST_OK};
+use super::waiter::{self, WaitOutcome};
+use super::{Connection, ServerCore, TransportSel};
 
 /// An RPC argument: a native shared-memory pointer plus its byte
 /// length. Built from whatever the caller has on hand:
@@ -232,5 +235,171 @@ impl<'c, R: Pod> Reply<'c, R> {
 impl<R: Pod> std::fmt::Debug for Reply<'_, R> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "Reply<{}>({:#x})", std::any::type_name::<R>(), self.addr)
+    }
+}
+
+/// An in-flight asynchronous RPC (`Connection::invoke_async` /
+/// `call_scalar_async`): the request is already published; the
+/// completion is collected through this handle. Poll with
+/// [`CallHandle::ready`]/[`CallHandle::poll`], or block (park-aware,
+/// against the shard's response-doorbell epoch) with
+/// [`CallHandle::wait`].
+///
+/// Dropping an unfinished handle **abandons** the call: the slot gets
+/// a tombstone so a late response retires the lap (the ring can never
+/// wedge), and an argument owned by the handle is quarantined until
+/// the rings are quiescent (the server may still read it).
+#[must_use = "an async call completes through its handle; dropping it abandons the call"]
+pub struct CallHandle<'c> {
+    conn: &'c Connection,
+    shard: usize,
+    slot: usize,
+    func: u32,
+    arg: CallArg,
+    /// Does the handle own the argument allocation (typed path)?
+    own_arg: bool,
+    timeout: Duration,
+    done: bool,
+}
+
+impl<'c> CallHandle<'c> {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn new(
+        conn: &'c Connection,
+        shard: usize,
+        slot: usize,
+        func: u32,
+        arg: CallArg,
+        own_arg: bool,
+        timeout: Duration,
+    ) -> CallHandle<'c> {
+        CallHandle { conn, shard, slot, func, arg, own_arg, timeout, done: false }
+    }
+
+    #[inline]
+    fn ring(&self) -> &RpcRing {
+        &self.conn.shared.shards[self.shard].ring
+    }
+
+    /// The function id this call invoked.
+    pub fn func(&self) -> u32 {
+        self.func
+    }
+
+    /// The shard the call rode (telemetry/tests).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Has the response landed? One atomic load; never blocks.
+    pub fn ready(&self) -> bool {
+        self.ring().response_ready(self.slot)
+    }
+
+    /// Non-blocking completion attempt: `None` while the response is
+    /// in flight, `Some(result)` once it landed (consuming the slot —
+    /// the handle is finished afterwards and drops inert).
+    pub fn poll(&mut self) -> Option<Result<u64>> {
+        if self.done || !self.ready() {
+            return None;
+        }
+        Some(self.finish())
+    }
+
+    /// Block until the response lands (parking on the shard's
+    /// response doorbell; the submission-time timeout bounds the
+    /// wait), then consume it. Inline-attached servers are driven
+    /// from this thread exactly as in synchronous calls.
+    pub fn wait(mut self) -> Result<u64> {
+        let conn = self.conn;
+        let (shard, slot) = (self.shard, self.slot);
+        let ring = &conn.shared.shards[shard].ring;
+        let inline: Option<Arc<ServerCore>> =
+            conn.inline_server.lock().unwrap().as_ref().map(Arc::clone);
+        let out = waiter::wait_on(
+            conn.opts.sleep,
+            self.timeout,
+            None,
+            Some(ring.resp_bell()),
+            || {
+                if ring.response_ready(slot) || conn.shared.closed() {
+                    return true;
+                }
+                if let Some(core) = &inline {
+                    conn.drain_inline(core, Some((shard, slot)));
+                    if ring.response_ready(slot) {
+                        return true;
+                    }
+                }
+                false
+            },
+        );
+        if out == WaitOutcome::TimedOut {
+            self.abandon();
+            return Err(RpcError::Timeout(format!("rpc response (func {})", self.func)));
+        }
+        if conn.shared.closed() && !ring.response_ready(slot) {
+            self.abandon();
+            return Err(RpcError::ConnectionClosed);
+        }
+        self.finish()
+    }
+
+    /// Consume the landed response, release an owned argument, and
+    /// decode the status.
+    fn finish(&mut self) -> Result<u64> {
+        self.done = true;
+        let (status, ret, aux_lo, aux_hi) =
+            self.conn.shared.shards[self.shard].ring.consume_detail(self.slot);
+        if self.own_arg {
+            // The server is done with the call: the argument releases
+            // immediately, against the shard it was allocated on.
+            self.conn.release_arg(self.shard, self.arg.addr);
+        }
+        match status {
+            ST_OK => Ok(ret),
+            other => Err(status_to_error(other, self.func, ret, aux_lo, aux_hi)),
+        }
+    }
+
+    /// Give up on the call: tombstone the slot (a late response
+    /// retires the lap) and quarantine an owned argument the server
+    /// may still read.
+    fn abandon(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let completed =
+            self.conn.abandon_and_reclaim(self.shard, self.slot, self.arg.addr, self.arg.len);
+        if self.own_arg {
+            if completed {
+                // The response had landed: the server is done with the
+                // argument, release it now (the common drop-after-
+                // completion path never touches the quarantine).
+                self.conn.release_arg(self.shard, self.arg.addr);
+            } else {
+                self.conn.quarantine_arg(self.arg.addr);
+            }
+        }
+    }
+}
+
+impl Drop for CallHandle<'_> {
+    fn drop(&mut self) {
+        self.abandon();
+    }
+}
+
+impl std::fmt::Debug for CallHandle<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CallHandle(func {}, shard {}, slot {}, {})",
+            self.func,
+            self.shard,
+            self.slot,
+            if self.done { "done" } else if self.ready() { "ready" } else { "in flight" }
+        )
     }
 }

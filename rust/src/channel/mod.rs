@@ -52,12 +52,37 @@
 //! Typed call sites shrink further: hand-rolled
 //! `heap.new_val(arg)? … ShmPtr::from_addr(ret as usize).read()?`
 //! plumbing becomes `conn.call_typed::<A, R>(f, &arg, opts)?.read()?`.
+//!
+//! # Sharded data path, batched and async submission
+//!
+//! A connection's data path is an array of [`Shard`]s (ring + arg
+//! arena), sized by [`ChannelBuilder::ring_shards`]. Caller threads
+//! stripe across shards by thread id — FIFO still holds *within* a
+//! shard, which is exactly the per-thread program order that matters
+//! — so N threads no longer funnel through one ring's ticket CAS.
+//! Listeners ([`RpcServer::listen`], or `k` of them via
+//! [`RpcServer::spawn_listeners`]) drain every shard of every
+//! connection fairly: one request per shard per pass, each worker
+//! starting its sweep at a different shard offset.
+//!
+//! Submission amortizes on top of that:
+//!
+//! * [`Connection::invoke_batch`] / [`Connection::call_scalar_batch`]
+//!   publish a slice of calls to this thread's shard with **one**
+//!   doorbell signal per chunk (`publish_quiet` × k + `flush_publish`)
+//!   instead of one per call.
+//! * [`Connection::invoke_async`] / [`Connection::call_scalar_async`]
+//!   return a [`CallHandle`]: publish now, `poll()`/`wait()` the
+//!   completion later (park-aware, against the shard's response
+//!   doorbell epoch), so apps pipeline RPCs instead of blocking
+//!   per call. Dropping an unfinished handle abandons the slot —
+//!   it can never wedge the ring.
 
 pub mod call;
 pub mod ring;
 pub mod waiter;
 
-pub use call::{CallArg, CallOpts, Reply};
+pub use call::{CallArg, CallHandle, CallOpts, Reply};
 
 use crate::config::SimConfig;
 use crate::daemon::Daemon;
@@ -75,9 +100,9 @@ use crate::sandbox::SandboxMgr;
 use crate::seal::{ScopePool, SealHandle, Sealer};
 use ring::*;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use waiter::{Doorbell, SleepPolicy, WaitOutcome, LOAD, PARK_SLICE_US, PARK_SPIN_POLLS};
 
 // ---------------------------------------------------------------------
@@ -107,6 +132,24 @@ fn directory_get(rack_id: u64, name: &str) -> Option<Arc<ServerCore>> {
 }
 
 // ---------------------------------------------------------------------
+// thread striping (which shard a caller thread rides)
+
+/// Monotonic stripe ids handed to threads on first use. Round-robin
+/// assignment spreads concurrently spawned callers across shards; the
+/// id is stable for the thread's lifetime, so a thread always returns
+/// to the same shard (per-thread FIFO order is preserved).
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static STRIPE: usize = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed);
+}
+
+/// This thread's stripe id (assigned on first call, stable after).
+pub(crate) fn thread_stripe() -> usize {
+    STRIPE.with(|s| *s)
+}
+
+// ---------------------------------------------------------------------
 // options
 
 #[derive(Clone)]
@@ -117,14 +160,18 @@ pub struct ChannelOpts {
     pub shared_heap: bool,
     /// ACL; defaults to world-connectable.
     pub acl: Option<Acl>,
-    /// RPC ring slots per connection.
+    /// RPC ring slots per connection (per shard).
     pub ring_slots: usize,
+    /// Ring+arena shards per connection (rounded up to a power of
+    /// two, capped at 64). Caller threads stripe across shards by
+    /// thread id; listeners drain all shards.
+    pub ring_shards: usize,
     pub sleep: SleepPolicy,
     /// Client-side call timeout.
     pub call_timeout: Duration,
-    /// Per-connection lock-free argument-arena size (0 disables the
-    /// arena; typed-call arguments and replies then always take the
-    /// heap mutex).
+    /// Per-connection lock-free argument-arena budget, split evenly
+    /// across the shards (0 disables the arenas; typed-call arguments
+    /// and replies then always take the heap mutex).
     pub arg_arena_bytes: usize,
 }
 
@@ -135,6 +182,7 @@ impl ChannelOpts {
             shared_heap: false,
             acl: None,
             ring_slots: 64,
+            ring_shards: cfg.ring_shards,
             sleep: SleepPolicy::from_config(cfg),
             call_timeout: Duration::from_secs(10),
             arg_arena_bytes: 256 << 10,
@@ -185,6 +233,16 @@ impl ChannelBuilder {
 
     pub fn ring_slots(mut self, slots: usize) -> ChannelBuilder {
         self.opts.ring_slots = slots;
+        self
+    }
+
+    /// Shard the connection data path: `n` independent rings + arg
+    /// arenas per connection (rounded up to a power of two, capped at
+    /// 64). Caller threads stripe across shards by thread id, so the
+    /// per-connection serialization point scales with `n`; pair with
+    /// [`RpcServer::spawn_listeners`] on the serving side.
+    pub fn ring_shards(mut self, n: usize) -> ChannelBuilder {
+        self.opts.ring_shards = n;
         self
     }
 
@@ -319,14 +377,24 @@ pub type Handler = Box<dyn Fn(&CallCtx) -> Result<u64> + Send + Sync>;
 // ---------------------------------------------------------------------
 // connection state shared by both endpoints (models shm + kernels)
 
+/// One stripe of a connection's data path: a slot ring plus the
+/// lock-free argument arena that feeds it. A connection owns
+/// `ring_shards` of these; caller threads stripe across them by
+/// thread id and listeners drain them all, so the per-connection
+/// serialization point scales with the shard count.
+pub struct Shard {
+    pub ring: RpcRing,
+    /// Lock-free bump arena for typed-call arguments and replies
+    /// (None when creation failed or was disabled: allocation falls
+    /// back to the heap).
+    pub arena: Option<ArgArena>,
+}
+
 pub struct ConnShared {
     pub id: u64,
     pub heap: Arc<Heap>,
-    pub ring: RpcRing,
-    /// Lock-free bump arena for typed-call arguments and replies
-    /// (None when creation failed or was disabled: all allocation
-    /// falls back to the heap).
-    pub arena: Option<ArgArena>,
+    /// The sharded data path (never empty; single-shard by default).
+    pub shards: Vec<Shard>,
     pub sealer: Arc<Sealer>,
     pub sandbox: Arc<SandboxMgr>,
     pub client_proc: u32,
@@ -346,6 +414,46 @@ impl ConnShared {
         self.dsm.is_some()
     }
 
+    /// Shard 0's ring — the entire data path on single-shard
+    /// connections (tests and handcrafted-request call sites).
+    #[inline]
+    pub fn ring(&self) -> &RpcRing {
+        &self.shards[0].ring
+    }
+
+    #[inline]
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard this thread stripes to (stable per thread, so FIFO
+    /// within a shard covers per-thread program order).
+    #[inline]
+    pub(crate) fn shard_for_thread(&self) -> (usize, &Shard) {
+        // `shards.len()` is forced to a power of two at connect time.
+        let i = thread_stripe() & (self.shards.len() - 1);
+        (i, &self.shards[i])
+    }
+
+    /// No in-flight work on any shard (drain/shutdown paths and the
+    /// argument-quarantine sweep).
+    pub fn quiescent(&self) -> bool {
+        self.shards.iter().all(|s| s.ring.quiescent())
+    }
+
+    /// Per-shard claim-ticket counts — how traffic actually striped
+    /// (bench/test telemetry).
+    pub fn shard_claims(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.ring.claimed()).collect()
+    }
+
+    /// The shard arena holding `addr`, if any (reply/argument
+    /// provenance: arena addresses must never reach the heap's
+    /// header-tagged free path).
+    fn arena_containing(&self, addr: usize) -> Option<&ArgArena> {
+        self.shards.iter().filter_map(|s| s.arena.as_ref()).find(|a| a.contains(addr))
+    }
+
     /// Reclaim the reply of a response that was discarded into an
     /// abandoned (timed-out) lap. Only arena provenance is provably
     /// an owned allocation — a heap `ret` word may be a scalar or a
@@ -358,10 +466,8 @@ impl ConnShared {
         if addr >= arg && addr < arg + arg_len.max(1) {
             return;
         }
-        if let Some(a) = &self.arena {
-            if a.contains(addr) {
-                a.release(addr);
-            }
+        if let Some(a) = self.arena_containing(addr) {
+            a.release(addr);
         }
     }
 }
@@ -522,6 +628,16 @@ impl RpcServer {
     /// `conn->listen()`, generalized over all of the channel's
     /// connections (one event-loop thread, busy-waiting per §5.8).
     pub fn listen(&self) {
+        self.listen_worker(0);
+    }
+
+    /// One worker of a (possibly multi-worker) serving loop. Drains
+    /// every connection's shards *fairly*: one request per shard per
+    /// pass, each worker starting its sweep at a different shard
+    /// offset so `k` workers don't convoy on shard 0. FIFO within a
+    /// shard is preserved even with several workers on the same shard
+    /// — `take_request` hands out requests in ticket order.
+    pub fn listen_worker(&self, worker: usize) {
         self.core.env.enter();
         let policy = self.core.opts.sleep;
         let park = policy == SleepPolicy::Park;
@@ -547,9 +663,20 @@ impl RpcServer {
             let conns: Vec<Arc<ConnShared>> = self.core.conns.lock().unwrap().clone();
             let mut progress = false;
             for conn in &conns {
-                while let Some(slot) = conn.ring.take_request() {
+                let nsh = conn.shards.len();
+                loop {
+                    let mut took = false;
+                    for k in 0..nsh {
+                        let si = (worker + k) % nsh;
+                        if let Some(slot) = conn.shards[si].ring.take_request() {
+                            took = true;
+                            self.core.handle_slot(conn, si, slot);
+                        }
+                    }
+                    if !took {
+                        break;
+                    }
                     progress = true;
-                    self.core.handle_slot(conn, slot);
                 }
             }
             if progress {
@@ -596,6 +723,20 @@ impl RpcServer {
     pub fn spawn_listener(&self) -> std::thread::JoinHandle<()> {
         let s = RpcServer { core: Arc::clone(&self.core) };
         std::thread::spawn(move || s.listen())
+    }
+
+    /// Spawn `k` listener workers serving the channel in parallel
+    /// (the multi-worker drain a sharded data path is built for).
+    /// Worker `i` starts its shard sweep at offset `i`; all workers
+    /// may take from any shard, so one stalled shard never idles the
+    /// rest. Join all handles after `stop()`.
+    pub fn spawn_listeners(&self, k: usize) -> Vec<std::thread::JoinHandle<()>> {
+        (0..k.max(1))
+            .map(|w| {
+                let s = RpcServer { core: Arc::clone(&self.core) };
+                std::thread::spawn(move || s.listen_worker(w))
+            })
+            .collect()
     }
 
     pub fn stop(&self) {
@@ -653,10 +794,11 @@ impl Drop for RpcServer {
 }
 
 impl ServerCore {
-    /// Process one request slot (the server's hot path). Public so
-    /// inline serving can drive it from the caller thread.
-    pub fn handle_slot(&self, conn: &Arc<ConnShared>, slot: usize) {
-        let s = conn.ring.slot(slot);
+    /// Process one request slot of one shard (the server's hot path).
+    /// Public so inline serving can drive it from the caller thread.
+    pub fn handle_slot(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize) {
+        let sh = &conn.shards[shard];
+        let s = sh.ring.slot(slot);
         let func = s.func.load(Ordering::Relaxed);
         let flags = s.flags.load(Ordering::Relaxed);
         let seal_idx = s.seal_idx.load(Ordering::Relaxed);
@@ -669,7 +811,7 @@ impl ServerCore {
             if arg != 0 {
                 if let Err(e) = dsm.ensure_owned(NODE_SERVER, arg, arg_len.max(1)) {
                     let _ = e;
-                    conn.ring.respond(slot, ST_HANDLER_ERROR, 0);
+                    sh.ring.respond(slot, ST_HANDLER_ERROR, 0);
                     return;
                 }
             }
@@ -679,13 +821,13 @@ impl ServerCore {
         // if the sender claims a seal that doesn't check out.
         let sealed = flags & FLAG_SEALED != 0;
         if sealed && !conn.sealer.verify(seal_idx, arg, arg_len.max(1)) {
-            conn.ring.respond(slot, ST_SEAL_INVALID, 0);
+            sh.ring.respond(slot, ST_SEAL_INVALID, 0);
             return;
         }
 
         let handlers = self.handlers.read().unwrap();
         let Some(handler) = handlers.get(&func) else {
-            conn.ring.respond(slot, ST_NO_HANDLER, 0);
+            sh.ring.respond(slot, ST_NO_HANDLER, 0);
             return;
         };
 
@@ -697,7 +839,7 @@ impl ServerCore {
                 Ok(guard) => {
                     let ctx = CallCtx {
                         heap: &conn.heap,
-                        arena: conn.arena.as_ref(),
+                        arena: sh.arena.as_ref(),
                         func,
                         arg,
                         arg_len,
@@ -714,7 +856,7 @@ impl ServerCore {
         } else {
             let ctx = CallCtx {
                 heap: &conn.heap,
-                arena: conn.arena.as_ref(),
+                arena: sh.arena.as_ref(),
                 func,
                 arg,
                 arg_len,
@@ -734,7 +876,7 @@ impl ServerCore {
         self.served.fetch_add(1, Ordering::Relaxed);
         match result {
             Ok(ret) => {
-                let discarded = conn.ring.respond(slot, ST_OK, ret);
+                let discarded = sh.ring.respond(slot, ST_OK, ret);
                 // The caller timed out and this response went nowhere:
                 // reclaim an arena-allocated reply so one abandoned
                 // call can't pin the arena forever.
@@ -745,7 +887,7 @@ impl ServerCore {
             Err(RpcError::SandboxViolation { addr, lo, hi }) => {
                 // Carry the real fault back: address in `ret`, the
                 // sandbox window in the (now dead) argument words.
-                conn.ring.respond_fault(
+                sh.ring.respond_fault(
                     slot,
                     ST_SANDBOX_VIOLATION,
                     addr as u64,
@@ -754,7 +896,7 @@ impl ServerCore {
                 );
             }
             Err(_) => {
-                conn.ring.respond(slot, ST_HANDLER_ERROR, 0);
+                sh.ring.respond(slot, ST_HANDLER_ERROR, 0);
             }
         }
     }
@@ -768,6 +910,18 @@ impl ServerCore {
 /// to release now" from a response timeout, where the server may
 /// still read the argument and it must be quarantined.
 pub(crate) const TIMEOUT_SLOT: &str = "rpc slot";
+
+/// Does this call outcome leave its argument(s) possibly still
+/// readable by the server? A response timeout or mid-call teardown ⇒
+/// yes (quarantine); a claim-phase timeout ([`TIMEOUT_SLOT`] — the
+/// address was never published) or any completed outcome ⇒ no.
+fn arg_outstanding<T>(r: &Result<T>) -> bool {
+    match r {
+        Err(RpcError::Timeout(what)) => what != TIMEOUT_SLOT,
+        Err(RpcError::ConnectionClosed) => true,
+        _ => false,
+    }
+}
 
 /// Client-side connection handle (the paper's `conn`).
 pub struct Connection {
@@ -852,32 +1006,42 @@ impl Connection {
             TransportSel::Rdma => true,
             TransportSel::Auto => !rack.same_cxl_domain(env.host, core.env.host),
         };
-        // Every ring's publish() rings the channel's bell, so one
-        // parked listener covers all connections.
-        let bell = Some(Arc::clone(&core.bell));
-        let (ring, dsm) = if use_dsm {
-            let ring =
-                RpcRing::create_opts(&heap, opts.ring_slots, cfg.cost.rdma_oneway_ns, bell)?;
-            (ring, Some(DsmState::new(&heap, cfg.page_bytes)))
+        // Sharded data path: `ring_shards` rings + arg arenas, every
+        // ring's publish() ringing the channel's bell so one parked
+        // listener covers all connections and all shards.
+        let signal_ns = if use_dsm { cfg.cost.rdma_oneway_ns } else { cfg.cost.cxl_signal_ns };
+        let nshards = opts.ring_shards.clamp(1, 64).next_power_of_two();
+        // The lock-free argument arenas ride in the connection heap;
+        // cap the total so small heaps keep most of their space, and
+        // degrade to heap-only allocation when a carve fails — or when
+        // the per-shard share would round up past the cap (an arena is
+        // at least one page, so many shards over a small heap would
+        // otherwise multiply the carve beyond the budget).
+        let arena_bytes = if opts.arg_arena_bytes == 0 {
+            0
         } else {
-            let ring =
-                RpcRing::create_opts(&heap, opts.ring_slots, cfg.cost.cxl_signal_ns, bell)?;
-            (ring, None)
+            opts.arg_arena_bytes.min(heap.len() / 8) / nshards
         };
-
-        // The lock-free argument arena rides in the connection heap;
-        // cap it so small heaps keep most of their space, and degrade
-        // to heap-only allocation if the carve fails.
-        let arena = if opts.arg_arena_bytes == 0 {
-            None
-        } else {
-            ArgArena::create(&heap, opts.arg_arena_bytes.min(heap.len() / 8)).ok()
-        };
+        let mut shards = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let ring = RpcRing::create_opts(
+                &heap,
+                opts.ring_slots,
+                signal_ns,
+                Some(Arc::clone(&core.bell)),
+            )?;
+            let arena = if arena_bytes < heap.page_size() {
+                None
+            } else {
+                ArgArena::create(&heap, arena_bytes).ok()
+            };
+            shards.push(Shard { ring, arena });
+        }
+        let dsm = if use_dsm { Some(DsmState::new(&heap, cfg.page_bytes)) } else { None };
 
         let shared = Arc::new(ConnShared {
             id: core.next_conn_id.fetch_add(1, Ordering::Relaxed),
-            ring,
-            arena,
+            shards,
             sealer: Sealer::new(cfg, Arc::clone(&heap), Arc::clone(charger))?,
             sandbox: SandboxMgr::new(cfg, Arc::clone(&heap), Arc::clone(charger)),
             heap,
@@ -1064,12 +1228,6 @@ impl Connection {
     /// as soon as the call returns; arena space recycles when the
     /// last outstanding argument/reply is dropped.
     pub fn call_scalar<A: Pod>(&self, func: u32, arg: &A, opts: CallOpts) -> Result<u64> {
-        #[derive(Clone, Copy)]
-        enum Prov {
-            Scope,
-            Arena(usize),
-            Heap(usize),
-        }
         // A dead connection fails fast *before* allocating, so retry
         // loops against it can't grow the quarantine (post-publish
         // teardown still quarantines, bounded by in-flight calls).
@@ -1077,15 +1235,12 @@ impl Connection {
             return Err(RpcError::ConnectionClosed);
         }
         self.sweep_quarantine();
-        let (addr, prov) = match opts.seal {
-            Some(scope) => (scope.new_val(*arg)?, Prov::Scope),
-            None => match self.shared.arena.as_ref().and_then(|a| a.alloc_val(*arg)) {
-                Some(addr) => (addr, Prov::Arena(addr)),
-                None => {
-                    let addr = self.shared.heap.new_val(*arg)?;
-                    (addr, Prov::Heap(addr))
-                }
-            },
+        let (addr, owned_on) = match opts.seal {
+            Some(scope) => (scope.new_val(*arg)?, None),
+            None => {
+                let (si, addr) = self.alloc_arg(*arg)?;
+                (addr, Some(si))
+            }
         };
         let r = self.invoke(func, (addr, std::mem::size_of::<A>()), opts);
         // On a response timeout / teardown the request may still be
@@ -1094,33 +1249,57 @@ impl Connection {
         // resets to offset 0 on its last release, making reuse
         // immediate, and the heap free list is just as unsafe). Such
         // arguments go to the quarantine and are released once the
-        // ring is provably quiet. A claim-phase timeout (TIMEOUT_SLOT)
-        // never published the address, so it releases right away, as
-        // does every outcome where the server finished.
-        let outstanding = match &r {
-            Err(RpcError::Timeout(what)) => what != TIMEOUT_SLOT,
-            Err(RpcError::ConnectionClosed) => true,
-            _ => false,
-        };
-        let is_arena = matches!(prov, Prov::Arena(_));
-        match prov {
-            Prov::Scope => {}
-            Prov::Arena(a) | Prov::Heap(a) => {
-                if outstanding {
-                    let mut q = self.quarantine.lock().unwrap();
-                    q.push(a);
-                    // Counter maintained under the lock: it's only an
-                    // advisory fast-path gate, but keeping it exact
-                    // avoids under/overflow races with the sweep.
-                    self.quarantined.store(q.len() as u64, Ordering::Release);
-                } else if is_arena {
-                    self.shared.arena.as_ref().unwrap().release(a);
-                } else {
-                    self.shared.heap.free_bytes(a);
-                }
+        // rings are provably quiet. A claim-phase timeout
+        // (TIMEOUT_SLOT) never published the address, so it releases
+        // right away, as does every outcome where the server finished.
+        if let Some(si) = owned_on {
+            if arg_outstanding(&r) {
+                self.quarantine_arg(addr);
+            } else {
+                self.release_arg(si, addr);
             }
         }
         r
+    }
+
+    /// Allocate a typed-call argument: lock-free from this thread's
+    /// shard arena, spilling to the heap mutex only when the arena is
+    /// full. Returns `(shard index, address)` — the shard is the
+    /// release hint for [`Connection::release_arg`], so the common
+    /// release is one range check instead of a scan over every
+    /// shard's arena.
+    fn alloc_arg<A: Pod>(&self, arg: A) -> Result<(usize, usize)> {
+        let (si, shard) = self.shared.shard_for_thread();
+        match shard.arena.as_ref().and_then(|a| a.alloc_val(arg)) {
+            Some(addr) => Ok((si, addr)),
+            None => Ok((si, self.shared.heap.new_val(arg)?)),
+        }
+    }
+
+    /// Release an owned typed-call argument allocated by `alloc_arg`
+    /// on shard `si` (the shard recorded at allocation time, so the
+    /// hint stays exact even when a `CallHandle` completes on another
+    /// thread): one arena range check, falling back to the heap for
+    /// spilled allocations. Quarantined releases still route through
+    /// `free_reply`'s full scan.
+    pub(super) fn release_arg(&self, si: usize, addr: usize) {
+        if let Some(a) = &self.shared.shards[si].arena {
+            if a.contains(addr) {
+                a.release(addr);
+                return;
+            }
+        }
+        self.shared.heap.free_bytes(addr);
+    }
+
+    /// Park a (possibly still server-readable) argument address for
+    /// release once the rings are quiescent. Counter maintained under
+    /// the lock: it's only an advisory fast-path gate, but keeping it
+    /// exact avoids under/overflow races with the sweep.
+    fn quarantine_arg(&self, addr: usize) {
+        let mut q = self.quarantine.lock().unwrap();
+        q.push(addr);
+        self.quarantined.store(q.len() as u64, Ordering::Release);
     }
 
     /// Release quarantined (timed-out) arguments once nothing is in
@@ -1137,8 +1316,10 @@ impl Connection {
             // the vec at check time belongs to a call whose slot we
             // are observing — a fresh timeout can't slip its (still
             // in-flight) argument into the batch after the check.
+            // All shards must be quiet: the quarantined call rode one
+            // of them, and we don't track which.
             let mut q = self.quarantine.lock().unwrap();
-            if q.is_empty() || !self.shared.ring.quiescent() {
+            if q.is_empty() || !self.shared.quiescent() {
                 return;
             }
             let taken = std::mem::take(&mut *q);
@@ -1170,15 +1351,316 @@ impl Connection {
         Reply::new(self, ret as usize)
     }
 
-    /// Reclaim a server-allocated reply buffer, resolving its
-    /// provenance: arena replies recycle lock-free, heap replies go
-    /// back through `free_bytes`. (`Reply::free`/`take` route here —
-    /// arena addresses must never reach the heap's header-tagged
+    // -----------------------------------------------------------------
+    // amortized submission: batched and asynchronous calls
+
+    /// Batched submission: publish a slice of calls (same `func`,
+    /// same `opts`) to this thread's shard with **one** doorbell
+    /// signal per published chunk instead of one per call, then
+    /// collect every response. Returns the raw `ret` words in
+    /// argument order.
+    ///
+    /// Sealing is rejected (a seal's release is tied to a single
+    /// call's return); compose per-call seals with [`Connection::invoke`].
+    /// If any call in the batch fails, the first error is returned
+    /// after every published slot has been consumed — arena-allocated
+    /// replies of the other calls are reclaimed, so a failed batch
+    /// cannot pin the arena. On a response timeout the remaining
+    /// slots are abandoned (tombstoned) and the arguments may still
+    /// be read by the server — callers that own them must quarantine,
+    /// as [`Connection::call_scalar_batch`] does.
+    pub fn invoke_batch(&self, func: u32, args: &[CallArg], opts: CallOpts) -> Result<Vec<u64>> {
+        if opts.seal.is_some() {
+            return Err(RpcError::Config(
+                "invoke_batch cannot seal; use invoke for per-call seals".into(),
+            ));
+        }
+        self.check_transport(opts.transport)?;
+        if self.shared.closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        if args.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.sweep_quarantine();
+        let timeout = opts.timeout.unwrap_or(self.opts.call_timeout);
+        let deadline = Instant::now() + timeout;
+        let mut flags = 0u32;
+        if opts.sandbox {
+            flags |= FLAG_SANDBOXED;
+        }
+        self.calls.fetch_add(args.len() as u64, Ordering::Relaxed);
+        if let Some(dsm) = &self.shared.dsm {
+            for a in args {
+                if a.addr != 0 {
+                    dsm.ensure_owned(NODE_CLIENT, a.addr, a.len.max(1))?;
+                }
+            }
+        }
+        let (shard_idx, shard) = self.shared.shard_for_thread();
+        let ring = &shard.ring;
+        let inline: Option<Arc<ServerCore>> =
+            self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
+
+        let mut out: Vec<u64> = Vec::with_capacity(args.len());
+        let mut first_err: Option<RpcError> = None;
+        let mut idx = 0;
+        while idx < args.len() && first_err.is_none() {
+            // Claim a chunk: at least one slot (waiting on the
+            // response doorbell if the ring is full), then as many
+            // more as are free right now.
+            let mut slots = Vec::new();
+            match ring.claim() {
+                Some(i) => slots.push(i),
+                None => {
+                    let remain = deadline.saturating_duration_since(Instant::now());
+                    match self.claim_slow(ring, remain, inline.as_ref()) {
+                        Ok(i) => slots.push(i),
+                        Err(e) => {
+                            // Nothing of this chunk published; earlier
+                            // chunks were fully consumed — reclaim
+                            // their replies, which would otherwise
+                            // leak through the error return.
+                            self.reclaim_batch_replies(&out, args);
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+            while slots.len() < args.len() - idx {
+                match ring.claim() {
+                    Some(i) => slots.push(i),
+                    None => break,
+                }
+            }
+            // k quiet publishes, one flush: the whole point.
+            for (k, &slot) in slots.iter().enumerate() {
+                let a = args[idx + k];
+                ring.publish_quiet(slot, func, flags, NO_SEAL, a.addr, a.len);
+            }
+            ring.flush_publish();
+            // Collect the chunk in claim order.
+            for (k, &slot) in slots.iter().enumerate() {
+                let a = args[idx + k];
+                let remain = deadline.saturating_duration_since(Instant::now());
+                let w = waiter::wait_on(self.opts.sleep, remain, None, Some(ring.resp_bell()), || {
+                    if ring.response_ready(slot) || self.shared.closed() {
+                        return true;
+                    }
+                    if let Some(core) = &inline {
+                        self.drain_inline(core, Some((shard_idx, slot)));
+                        if ring.response_ready(slot) {
+                            return true;
+                        }
+                    }
+                    false
+                });
+                if w == WaitOutcome::TimedOut
+                    || (self.shared.closed() && !ring.response_ready(slot))
+                {
+                    // Abandon this and every later slot of the chunk
+                    // (the late responses retire the laps), and
+                    // reclaim the replies already collected — the
+                    // batch fails as a whole, so they would leak
+                    // through the error return.
+                    for (j, &s) in slots.iter().enumerate().skip(k) {
+                        let aj = args[idx + j];
+                        self.abandon_and_reclaim(shard_idx, s, aj.addr, aj.len);
+                    }
+                    self.reclaim_batch_replies(&out, args);
+                    return Err(if w == WaitOutcome::TimedOut {
+                        RpcError::Timeout(format!("rpc batch response (func {func})"))
+                    } else {
+                        RpcError::ConnectionClosed
+                    });
+                }
+                let (st, ret, lo, hi) = ring.consume_detail(slot);
+                if st == ST_OK {
+                    if first_err.is_some() {
+                        // The batch already failed: don't leak this
+                        // call's arena reply into the error return.
+                        self.shared.reclaim_discarded_reply(ret, a.addr, a.len);
+                    } else {
+                        out.push(ret);
+                    }
+                } else if first_err.is_none() {
+                    first_err = Some(status_to_error(st, func, ret, lo, hi));
+                    // Replies collected before the failure would leak
+                    // through the error return too.
+                    self.reclaim_batch_replies(&out, args);
+                    out.clear();
+                }
+            }
+            idx += slots.len();
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// A failing batch returns `Err`, so the replies it already
+    /// collected have no owner — reclaim the provably-owned (arena)
+    /// ones so a failed batch cannot pin a shard arena. `out[j]`
+    /// corresponds to `args[j]`: replies are collected in argument
+    /// order and only while no error has been recorded.
+    fn reclaim_batch_replies(&self, out: &[u64], args: &[CallArg]) {
+        for (j, &r) in out.iter().enumerate() {
+            let aj = args[j];
+            self.shared.reclaim_discarded_reply(r, aj.addr, aj.len);
+        }
+    }
+
+    /// Typed batched submission: allocate every argument (lock-free
+    /// from this thread's shard arena, spilling to the heap), submit
+    /// the whole slice with one doorbell per chunk, return the raw
+    /// `ret` words in order. Arguments are released when the batch
+    /// completes; on a response timeout / teardown they are
+    /// quarantined exactly like [`Connection::call_scalar`]'s.
+    pub fn call_scalar_batch<A: Pod>(
+        &self,
+        func: u32,
+        args: &[A],
+        opts: CallOpts,
+    ) -> Result<Vec<u64>> {
+        if opts.seal.is_some() {
+            return Err(RpcError::Config(
+                "call_scalar_batch cannot seal; use call_scalar for per-call seals".into(),
+            ));
+        }
+        if self.shared.closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        self.sweep_quarantine();
+        let mut addrs = Vec::with_capacity(args.len());
+        let mut cargs = Vec::with_capacity(args.len());
+        let mut stripe = 0;
+        for a in args {
+            match self.alloc_arg(*a) {
+                Ok((si, addr)) => {
+                    stripe = si; // same thread throughout: one stripe
+                    addrs.push(addr);
+                    cargs.push(CallArg::new(addr, std::mem::size_of::<A>()));
+                }
+                Err(e) => {
+                    // Nothing published yet: the already-allocated
+                    // arguments release immediately.
+                    for &p in &addrs {
+                        self.release_arg(stripe, p);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let r = self.invoke_batch(func, &cargs, opts);
+        if arg_outstanding(&r) {
+            // Some slot may still be read by the server; which ones is
+            // unknowable here, so quarantine the lot (the sweep frees
+            // them once the rings are quiet).
+            for &p in &addrs {
+                self.quarantine_arg(p);
+            }
+        } else {
+            for &p in &addrs {
+                self.release_arg(stripe, p);
+            }
+        }
+        r
+    }
+
+    /// Asynchronous submission: claim + publish now, return a
+    /// [`CallHandle`] to `poll()`/`wait()` the completion later —
+    /// callers pipeline RPCs instead of blocking one at a time.
+    /// Sealing is rejected (its release is tied to a synchronous
+    /// return); sandbox/timeout/transport compose as usual. Dropping
+    /// the handle abandons the call safely.
+    pub fn invoke_async(
+        &self,
+        func: u32,
+        arg: impl Into<CallArg>,
+        opts: CallOpts,
+    ) -> Result<CallHandle<'_>> {
+        self.submit_async(func, arg.into(), opts, false)
+    }
+
+    /// Typed asynchronous submission: the argument is allocated like
+    /// [`Connection::call_scalar`]'s and owned by the handle — it is
+    /// released when the call completes (or quarantined if the handle
+    /// is dropped while the server may still read it).
+    pub fn call_scalar_async<A: Pod>(
+        &self,
+        func: u32,
+        arg: &A,
+        opts: CallOpts,
+    ) -> Result<CallHandle<'_>> {
+        // Seal/transport rejection lives in submit_async (one place);
+        // a dead connection still fails fast before allocating, like
+        // call_scalar.
+        if self.shared.closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        self.sweep_quarantine();
+        let (si, addr) = self.alloc_arg(*arg)?;
+        match self.submit_async(func, CallArg::new(addr, std::mem::size_of::<A>()), opts, true) {
+            Ok(h) => Ok(h),
+            Err(e) => {
+                // Every submit failure precedes the publish, so the
+                // argument is provably unread and releases now.
+                self.release_arg(si, addr);
+                Err(e)
+            }
+        }
+    }
+
+    fn submit_async(
+        &self,
+        func: u32,
+        arg: CallArg,
+        opts: CallOpts,
+        own_arg: bool,
+    ) -> Result<CallHandle<'_>> {
+        if opts.seal.is_some() {
+            return Err(RpcError::Config(
+                "async calls cannot seal; use invoke for sealed calls".into(),
+            ));
+        }
+        self.check_transport(opts.transport)?;
+        if self.shared.closed() {
+            return Err(RpcError::ConnectionClosed);
+        }
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let timeout = opts.timeout.unwrap_or(self.opts.call_timeout);
+        if let Some(dsm) = &self.shared.dsm {
+            if arg.addr != 0 {
+                dsm.ensure_owned(NODE_CLIENT, arg.addr, arg.len.max(1))?;
+            }
+        }
+        let mut flags = 0u32;
+        if opts.sandbox {
+            flags |= FLAG_SANDBOXED;
+        }
+        let (shard_idx, shard) = self.shared.shard_for_thread();
+        let ring = &shard.ring;
+        let inline: Option<Arc<ServerCore>> =
+            self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
+        let slot = match ring.claim() {
+            Some(i) => i,
+            None => self.claim_slow(ring, timeout, inline.as_ref())?,
+        };
+        ring.publish(slot, func, flags, NO_SEAL, arg.addr, arg.len);
+        Ok(CallHandle::new(self, shard_idx, slot, func, arg, own_arg, timeout))
+    }
+
+    /// Reclaim a server-allocated reply buffer (or an owned typed-call
+    /// argument), resolving its provenance: arena addresses recycle
+    /// lock-free in whichever shard arena holds them, heap addresses
+    /// go back through `free_bytes`. (`Reply::free`/`take` route here
+    /// — arena addresses must never reach the heap's header-tagged
     /// free path.)
     pub(crate) fn free_reply(&self, addr: usize) {
-        match &self.shared.arena {
-            Some(a) if a.contains(addr) => a.release(addr),
-            _ => self.shared.heap.free_bytes(addr),
+        match self.shared.arena_containing(addr) {
+            Some(a) => a.release(addr),
+            None => self.shared.heap.free_bytes(addr),
         }
     }
 
@@ -1258,37 +1740,23 @@ impl Connection {
                 dsm.ensure_owned(NODE_CLIENT, arg, arg_len.max(1))?;
             }
         }
-        let ring = &self.shared.ring;
+        let (shard_idx, shard) = self.shared.shard_for_thread();
+        let ring = &shard.ring;
+        // Inline serving: run the server's handlers on this thread
+        // under the server's identity (the sequential-RTT model).
+        // Serving stays *inside* the wait loops: requests are taken
+        // in FIFO order per shard, so this thread may need to drain
+        // other threads' earlier requests — on any shard — before its
+        // own comes up.
+        let inline: Option<Arc<ServerCore>> =
+            self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
         // Claim a slot (a full ring parks on the response doorbell —
         // consume() rings it when a slot frees).
         let slot = match ring.claim() {
             Some(i) => i,
-            None => {
-                let mut got = None;
-                let out = waiter::wait_on(
-                    self.opts.sleep,
-                    timeout,
-                    None,
-                    Some(ring.resp_bell()),
-                    || {
-                        got = ring.claim();
-                        got.is_some()
-                    },
-                );
-                if out == WaitOutcome::TimedOut {
-                    return Err(RpcError::Timeout(TIMEOUT_SLOT.into()));
-                }
-                got.unwrap()
-            }
+            None => self.claim_slow(ring, timeout, inline.as_ref())?,
         };
         ring.publish(slot, func, flags, seal_idx, arg, arg_len);
-        // Inline serving: run the server's handlers on this thread
-        // under the server's identity (the sequential-RTT model).
-        // Serving stays *inside* the wait loop: requests are taken in
-        // FIFO order, so this thread may need to drain other threads'
-        // earlier requests before its own comes up.
-        let inline: Option<Arc<ServerCore>> =
-            self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
         let out = waiter::wait_on(
             self.opts.sleep,
             timeout,
@@ -1299,13 +1767,9 @@ impl Connection {
                     return true;
                 }
                 if let Some(core) = &inline {
-                    while let Some(i) = ring.take_request() {
-                        crate::simproc::with_identity(core.env.proc, core.env.host, || {
-                            core.handle_slot(&self.shared, i)
-                        });
-                        if ring.response_ready(slot) {
-                            return true;
-                        }
+                    self.drain_inline(core, Some((shard_idx, slot)));
+                    if ring.response_ready(slot) {
+                        return true;
                     }
                 }
                 false
@@ -1315,11 +1779,11 @@ impl Connection {
             // We will never consume this slot: leave a tombstone so a
             // late response retires the lap instead of wedging the
             // sequence-gated ring once `head` wraps back around.
-            self.abandon_and_reclaim(slot, arg, arg_len);
+            self.abandon_and_reclaim(shard_idx, slot, arg, arg_len);
             return Err(RpcError::Timeout(format!("rpc response (func {func})")));
         }
         if self.shared.closed() && !ring.response_ready(slot) {
-            self.abandon_and_reclaim(slot, arg, arg_len);
+            self.abandon_and_reclaim(shard_idx, slot, arg, arg_len);
             return Err(RpcError::ConnectionClosed);
         }
         let (status, ret, aux_lo, aux_hi) = ring.consume_detail(slot);
@@ -1329,15 +1793,76 @@ impl Connection {
         }
     }
 
+    /// Wait for a claim ticket on a full ring, draining the server
+    /// inline while waiting (without the drain, inline-served
+    /// responses could never land and free a slot).
+    fn claim_slow(
+        &self,
+        ring: &RpcRing,
+        timeout: Duration,
+        inline: Option<&Arc<ServerCore>>,
+    ) -> Result<usize> {
+        let mut got = None;
+        let out = waiter::wait_on(self.opts.sleep, timeout, None, Some(ring.resp_bell()), || {
+            if let Some(core) = inline {
+                self.drain_inline(core, None);
+            }
+            got = ring.claim();
+            got.is_some()
+        });
+        if out == WaitOutcome::TimedOut {
+            return Err(RpcError::Timeout(TIMEOUT_SLOT.into()));
+        }
+        Ok(got.unwrap())
+    }
+
+    /// Inline serving: drain pending requests across ALL shards
+    /// (another thread's earlier request may sit on a different
+    /// shard). With a `watch`ed `(shard, slot)`, stop as soon as that
+    /// slot's response lands; with `None` (claim-phase waits), drain
+    /// until nothing is pending.
+    pub(super) fn drain_inline(&self, core: &Arc<ServerCore>, watch: Option<(usize, usize)>) {
+        loop {
+            let mut progress = false;
+            for (si, sh) in self.shared.shards.iter().enumerate() {
+                while let Some(i) = sh.ring.take_request() {
+                    progress = true;
+                    crate::simproc::with_identity(core.env.proc, core.env.host, || {
+                        core.handle_slot(&self.shared, si, i)
+                    });
+                    if let Some((ws, slot)) = watch {
+                        if self.shared.shards[ws].ring.response_ready(slot) {
+                            return;
+                        }
+                    }
+                }
+            }
+            if !progress {
+                return;
+            }
+        }
+    }
+
     /// Abandon a slot this caller will never consume and reclaim the
     /// orphaned reply if the response had already landed (only an OK
     /// response carries one; provenance resolved by `ConnShared`).
-    fn abandon_and_reclaim(&self, slot: usize, arg: usize, arg_len: usize) {
-        if let Some((st, ret)) = self.shared.ring.abandon(slot) {
+    /// Returns `true` when the response had landed — the server is
+    /// provably done with the call, so its argument may be released
+    /// immediately instead of quarantined.
+    pub(super) fn abandon_and_reclaim(
+        &self,
+        shard: usize,
+        slot: usize,
+        arg: usize,
+        arg_len: usize,
+    ) -> bool {
+        if let Some((st, ret)) = self.shared.shards[shard].ring.abandon(slot) {
             if st == ST_OK {
                 self.shared.reclaim_discarded_reply(ret, arg, arg_len);
             }
+            return true;
         }
+        false
     }
 
     /// Clean close: unmap the heap (lease surrendered, quota credited).
@@ -1936,7 +2461,7 @@ mod tests {
         }
         assert_eq!(server.served(), THREADS * CALLS);
         assert_eq!(conn.calls_made(), THREADS * CALLS);
-        assert!(conn.shared.ring.quiescent(), "all laps retired");
+        assert!(conn.shared.quiescent(), "all laps retired");
         server.stop();
         t.join().unwrap();
     }
@@ -2027,7 +2552,7 @@ mod tests {
         let t = server.spawn_listener();
         let cenv = rack.proc_env(1);
         let conn = Rpc::connect(&cenv, "slowpoke").unwrap();
-        let arena = conn.shared.arena.as_ref().expect("arena on");
+        let arena = conn.shared.shards[0].arena.as_ref().expect("arena on");
         cenv.run(|| {
             let e = conn.call_scalar::<u64>(
                 1,
@@ -2051,13 +2576,235 @@ mod tests {
         t.join().unwrap();
     }
 
+    /// Thread striping is deterministic: a thread always lands on
+    /// `stripe % nshards`, and repeated lookups agree (per-thread
+    /// FIFO order depends on this stability).
+    #[test]
+    fn shard_striping_is_stable_per_thread() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(4)
+            .open(&env, "striping")
+            .unwrap();
+        server.add(1, |_| Ok(0));
+        let t = server.spawn_listener();
+        let conn = Arc::new(Rpc::connect(&rack.proc_env(1), "striping").unwrap());
+        assert_eq!(conn.shared.shard_count(), 4);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let conn = Arc::clone(&conn);
+            handles.push(std::thread::spawn(move || {
+                let (i1, _) = conn.shared.shard_for_thread();
+                let (i2, _) = conn.shared.shard_for_thread();
+                assert_eq!(i1, i2, "stripe must be stable within a thread");
+                assert_eq!(i1, thread_stripe() & 3, "stripe must be thread-id derived");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// The tentpole end to end: a 4-shard connection served by two
+    /// listener workers under multi-threaded callers. Every response
+    /// reaches its caller, all shards retire, and the per-shard claim
+    /// counters account for every call.
+    #[test]
+    fn sharded_connection_scales_across_threads_and_workers() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(4)
+            .ring_slots(4)
+            .open(&env, "sharded")
+            .unwrap();
+        server.serve::<u64, u64>(101, |_ctx, v| Ok(*v + 1));
+        let listeners = server.spawn_listeners(2);
+        let cenv = rack.proc_env(1);
+        let conn = Arc::new(Rpc::connect(&cenv, "sharded").unwrap());
+
+        const THREADS: u64 = 8;
+        const CALLS: u64 = 48; // 384 calls through 4×4-slot rings
+        let mut handles = Vec::new();
+        for tid in 0..THREADS {
+            let conn = Arc::clone(&conn);
+            let env = cenv.clone();
+            handles.push(std::thread::spawn(move || {
+                env.run(|| {
+                    for k in 0..CALLS {
+                        let v = tid * 10_000 + k;
+                        let r = conn.call_typed::<u64, u64>(101, &v, CallOpts::new()).unwrap();
+                        assert_eq!(r.take().unwrap(), v + 1, "thread {tid} call {k}");
+                    }
+                });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.served(), THREADS * CALLS);
+        assert!(conn.shared.quiescent(), "every shard retired every lap");
+        let claims = conn.shared.shard_claims();
+        assert_eq!(claims.iter().sum::<u64>(), THREADS * CALLS, "claims account: {claims:?}");
+        server.stop();
+        for l in listeners {
+            l.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_calls_roundtrip_and_recycle_arena() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "batched");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "batched").unwrap();
+        let arena = conn.shared.shards[0].arena.as_ref().expect("arena on");
+        cenv.run(|| {
+            assert_eq!(
+                conn.invoke_batch(101, &[], CallOpts::new()).unwrap(),
+                Vec::<u64>::new(),
+                "empty batch is a no-op"
+            );
+            let vals: Vec<u64> = (0..20).collect();
+            let rets = conn.call_scalar_batch::<u64>(101, &vals, CallOpts::new()).unwrap();
+            assert_eq!(rets.len(), vals.len());
+            for (v, ret) in vals.iter().zip(&rets) {
+                let reply: Reply<u64> = conn.reply_from(*ret);
+                assert_eq!(reply.take().unwrap(), v + 1);
+            }
+        });
+        assert_eq!(server.served(), 20);
+        assert_eq!(arena.live(), 0, "batch args and replies all released");
+        assert_eq!(arena.used(), 0, "arena fully recycled after the batch");
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn batch_surfaces_errors_and_rejects_seal() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "batch-err");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "batch-err").unwrap();
+        cenv.run(|| {
+            let e = conn.call_scalar_batch::<u64>(999, &[1, 2, 3], CallOpts::new());
+            assert!(matches!(e, Err(RpcError::NoSuchHandler(999))), "got {e:?}");
+            // The failed batch must not wedge the shard.
+            let r = conn.call_typed::<u64, u64>(101, &5, CallOpts::new()).unwrap();
+            assert_eq!(r.take().unwrap(), 6);
+            assert!(conn.shared.quiescent());
+            let scope = conn.create_scope(4096).unwrap();
+            let e = conn.call_scalar_batch::<u64>(101, &[1], CallOpts::new().sealed(&scope));
+            assert!(matches!(e, Err(RpcError::Config(_))), "sealed batches are rejected: {e:?}");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn async_calls_pipeline_and_complete_out_of_order() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "async").unwrap();
+        server.serve_scalar::<u64>(7, |_ctx, v| Ok(*v * 3));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "async").unwrap();
+        let arena = conn.shared.shards[0].arena.as_ref().expect("arena on");
+        cenv.run(|| {
+            // Pipeline 4 calls, then complete them newest-first.
+            let mut handles: Vec<CallHandle> = (0..4u64)
+                .map(|i| conn.call_scalar_async(7, &i, CallOpts::new()).unwrap())
+                .collect();
+            let mut expect: Vec<u64> = (0..4u64).map(|i| i * 3).collect();
+            while let (Some(h), Some(want)) = (handles.pop(), expect.pop()) {
+                assert_eq!(h.wait().unwrap(), want);
+            }
+            // poll() completes without blocking once the response lands.
+            let mut h = conn.call_scalar_async(7, &11u64, CallOpts::new()).unwrap();
+            let got = loop {
+                if let Some(r) = h.poll() {
+                    break r;
+                }
+                std::hint::spin_loop();
+            };
+            assert_eq!(got.unwrap(), 33);
+        });
+        assert_eq!(server.served(), 5);
+        assert!(conn.shared.quiescent());
+        assert_eq!(arena.live(), 0, "async args released on completion");
+        assert_eq!(arena.used(), 0);
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// Dropping an unfinished handle must abandon the slot (ring keeps
+    /// cycling) and quarantine the argument (server may still read it)
+    /// — a dropped handle can never wedge or corrupt the connection.
+    #[test]
+    fn dropped_async_handle_abandons_cleanly() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "async-drop").unwrap();
+        server.serve_scalar::<u64>(7, |_ctx, v| {
+            std::thread::sleep(Duration::from_millis(60));
+            Ok(*v)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "async-drop").unwrap();
+        let arena = conn.shared.shards[0].arena.as_ref().expect("arena on");
+        cenv.run(|| {
+            let h = conn.call_scalar_async(7, &1u64, CallOpts::new()).unwrap();
+            drop(h); // give up while the call is still in flight
+            assert_eq!(arena.live(), 1, "abandoned argument quarantined, not recycled");
+            // Let the slow handler finish; its response retires the lap.
+            std::thread::sleep(Duration::from_millis(400));
+            let r = conn.call_scalar::<u64>(7, &2, CallOpts::new()).unwrap();
+            assert_eq!(r, 2);
+            assert_eq!(arena.live(), 0, "quarantined argument reclaimed");
+            assert_eq!(arena.used(), 0, "arena reset after reclamation");
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn batch_and_async_drive_inline_serving() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = Rpc::open(&env, "inline-batch").unwrap();
+        server.serve_scalar::<u64>(7, |_ctx, v| Ok(*v + 100));
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "inline-batch").unwrap();
+        conn.attach_inline(&server); // no listener thread at all
+        cenv.run(|| {
+            let vals: Vec<u64> = (0..8).collect();
+            let rets = conn.call_scalar_batch::<u64>(7, &vals, CallOpts::new()).unwrap();
+            assert_eq!(rets, (100..108).collect::<Vec<u64>>());
+            let h = conn.call_scalar_async(7, &1u64, CallOpts::new()).unwrap();
+            assert_eq!(h.wait().unwrap(), 101, "wait() must drain the server inline");
+        });
+        assert_eq!(server.served(), 9);
+        assert!(conn.shared.quiescent());
+        drop(conn);
+        server.stop();
+    }
+
     #[test]
     fn arena_recycles_typed_call_allocations() {
         let rack = Rack::for_tests();
         let (server, t) = serve_echo(&rack, "arena");
         let cenv = rack.proc_env(1);
         let conn = Rpc::connect(&cenv, "arena").unwrap();
-        let arena = conn.shared.arena.as_ref().expect("default opts carve an arena");
+        let arena = conn.shared.shards[0].arena.as_ref().expect("default opts carve an arena");
         cenv.run(|| {
             for i in 0..200u64 {
                 let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();

@@ -296,6 +296,55 @@ impl RpcRing {
         self.resp_bell.ring();
     }
 
+    /// Batched client side: fill a claimed slot *without* ringing or
+    /// charging the doorbell. The batch submitter publishes a whole
+    /// chunk of slots this way and then pays one cross-fabric signal
+    /// via [`RpcRing::flush_publish`] — the amortization behind
+    /// `Connection::invoke_batch`. The REQUEST store is still Release,
+    /// so a server that happens to poll the slot sees a fully written
+    /// descriptor; only the wakeup is deferred to the flush.
+    #[allow(clippy::too_many_arguments)]
+    pub fn publish_quiet(
+        &self,
+        i: usize,
+        func: u32,
+        flags: u32,
+        seal_idx: u64,
+        arg: usize,
+        arg_len: usize,
+    ) {
+        let s = self.slot(i);
+        s.func.store(func, Ordering::Relaxed);
+        s.flags.store(flags, Ordering::Relaxed);
+        s.seal_idx.store(seal_idx, Ordering::Relaxed);
+        s.arg.store(arg as u64, Ordering::Relaxed);
+        s.arg_len.store(arg_len as u64, Ordering::Relaxed);
+        s.status.store(ST_OK, Ordering::Relaxed);
+        s.state.store(SLOT_REQUEST, Ordering::Release);
+    }
+
+    /// One doorbell signal covering every preceding
+    /// [`RpcRing::publish_quiet`]: k slot writes, one wakeup (and one
+    /// charged cross-fabric signal) for the whole batch.
+    pub fn flush_publish(&self) {
+        self.charger.charge_ns(self.signal_ns);
+        self.req_bell.ring();
+        self.resp_bell.ring();
+    }
+
+    /// Claim tickets issued so far (the head cursor) — per-shard
+    /// traffic telemetry for benches and tests.
+    #[inline]
+    pub fn claimed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Requests taken so far (the service cursor).
+    #[inline]
+    pub fn taken(&self) -> u64 {
+        self.tail.load(Ordering::Relaxed)
+    }
+
     /// Server side: take the next pending request in publish order,
     /// transitioning it to PROCESSING. One slot touch at the service
     /// cursor — never a scan.
@@ -693,6 +742,31 @@ mod tests {
         assert_eq!(r.abandon(i), Some((ST_OK, 77)), "caller gets the orphaned reply");
         assert!(r.quiescent());
         assert!(r.claim().is_some(), "ring still cycles after both abandon orders");
+    }
+
+    /// Batched submission at the ring level: k quiet publishes, one
+    /// flush — the server sees every descriptor, FIFO order holds,
+    /// and each caller still gets exactly its own response.
+    #[test]
+    fn quiet_publish_then_flush_serves_whole_batch() {
+        let (_p, _h, r) = ring();
+        let slots: Vec<usize> = (0..4).map(|_| r.claim().unwrap()).collect();
+        for (k, &i) in slots.iter().enumerate() {
+            r.publish_quiet(i, k as u32, 0, NO_SEAL, 0, 0);
+        }
+        r.flush_publish();
+        for _ in 0..slots.len() {
+            let j = r.take_request().expect("flushed batch must be fully visible");
+            let f = r.slot(j).func.load(Ordering::Relaxed);
+            r.respond(j, ST_OK, f as u64 + 10);
+        }
+        for (k, &i) in slots.iter().enumerate() {
+            let (st, ret) = r.consume(i);
+            assert_eq!((st, ret), (ST_OK, k as u64 + 10), "batch member {k} cross-wired");
+        }
+        assert!(r.quiescent());
+        assert_eq!(r.claimed(), 4);
+        assert_eq!(r.taken(), 4);
     }
 
     #[test]

@@ -421,6 +421,85 @@ mod tests {
         bell.disarm();
     }
 
+    /// Seed for the doorbell property tests: `PROP_SEED` env var, so
+    /// CI can sweep schedules and failures replay exactly.
+    fn prop_seed() -> u64 {
+        std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xD00B)
+    }
+
+    /// The arm/epoch/park protocol's core guarantee: a ring that
+    /// lands anywhere between `arm()` and `wait_past()` must wake the
+    /// waiter promptly — never cost the full wait. The 5s slice makes
+    /// a missed ring visible (the sliced 1ms production wait would
+    /// mask it); random spin jitter on both sides sweeps the racy
+    /// window around the epoch snapshot.
+    #[test]
+    fn prop_park_never_misses_ring_between_arm_and_park() {
+        use crate::util::prop::{forall, PairGen, U64Range};
+        let jitter = PairGen(U64Range(0, 4000), U64Range(0, 4000));
+        forall("doorbell-arm-vs-ring", prop_seed(), 32, &jitter, |&(wjit, rjit)| {
+            let bell = Doorbell::new_arc();
+            let flag = Arc::new(AtomicBool::new(false));
+            let (b2, f2) = (Arc::clone(&bell), Arc::clone(&flag));
+            let ringer = std::thread::spawn(move || {
+                for _ in 0..rjit {
+                    std::hint::spin_loop();
+                }
+                f2.store(true, Ordering::Release);
+                b2.ring();
+            });
+            bell.arm();
+            let seen = bell.epoch();
+            for _ in 0..wjit {
+                std::hint::spin_loop();
+            }
+            let t0 = Instant::now();
+            // flag false here ⇒ the ring has not happened yet (the
+            // store precedes it) ⇒ the coming ring must end the wait.
+            if !flag.load(Ordering::Acquire) {
+                bell.wait_past(seen, Duration::from_secs(5));
+            }
+            let waked_fast = t0.elapsed() < Duration::from_secs(2);
+            ringer.join().unwrap();
+            bell.disarm();
+            waked_fast && flag.load(Ordering::Acquire)
+        });
+    }
+
+    /// Full `wait_on(Park)` protocol under a jittered producer: every
+    /// step of a produce/consume sequence must come back `Ready` —
+    /// across repeated arm/park/disarm cycles, sliced parks, and
+    /// producer sleeps straddling the ready-check/park window.
+    #[test]
+    fn prop_sliced_park_roundtrips_with_jittered_producer() {
+        use crate::util::prop::{forall, U64Range};
+        use crate::util::rng::Rng;
+        forall("doorbell-produce-consume", prop_seed(), 8, &U64Range(0, u64::MAX / 2), |&salt| {
+            const STEPS: u64 = 20;
+            let bell = Doorbell::new_arc();
+            let produced = Arc::new(AtomicU64::new(0));
+            let (b2, p2) = (Arc::clone(&bell), Arc::clone(&produced));
+            let producer = std::thread::spawn(move || {
+                let mut rng = Rng::new(salt);
+                for _ in 0..STEPS {
+                    std::thread::sleep(Duration::from_micros(rng.next_below(500)));
+                    p2.fetch_add(1, Ordering::Release);
+                    b2.ring();
+                }
+            });
+            let mut ok = true;
+            for k in 1..=STEPS {
+                let out =
+                    wait_on(SleepPolicy::Park, Duration::from_secs(5), None, Some(&bell), || {
+                        produced.load(Ordering::Acquire) >= k
+                    });
+                ok &= out == WaitOutcome::Ready;
+            }
+            producer.join().unwrap();
+            ok && produced.load(Ordering::Acquire) == STEPS
+        });
+    }
+
     #[test]
     fn load_monitor_counts() {
         let m = LoadMonitor::new();

@@ -181,6 +181,9 @@ pub struct SimConfig {
     pub busywait_sleep_high_us: u64,
     /// Hosts per rack reachable over CXL (paper assumes ≤32).
     pub rack_hosts: usize,
+    /// Default ring+arena shards per connection (power of two; the
+    /// per-channel override is `ChannelBuilder::ring_shards`).
+    pub ring_shards: usize,
     /// Enforce permissions on every shm access (tests) vs trust+charge (benches).
     pub enforce_protection: bool,
 }
@@ -204,6 +207,7 @@ impl Default for SimConfig {
             busywait_sleep_mid_us: 5,
             busywait_sleep_high_us: 150,
             rack_hosts: 32,
+            ring_shards: 1,
             enforce_protection: true,
         }
     }
@@ -320,6 +324,7 @@ impl SimConfig {
             "busywait_sleep_mid_us" => self.busywait_sleep_mid_us = pu64(value)?,
             "busywait_sleep_high_us" => self.busywait_sleep_high_us = pu64(value)?,
             "rack_hosts" => self.rack_hosts = pusize(value)?,
+            "ring_shards" => self.ring_shards = pusize(value)?,
             "enforce_protection" => self.enforce_protection = value == "true" || value == "1",
             other => return Err(RpcError::Config(format!("unknown key '{other}'"))),
         }
@@ -340,6 +345,7 @@ impl SimConfig {
         m.insert("pool_bytes", self.pool_bytes.to_string());
         m.insert("heap_bytes", self.heap_bytes.to_string());
         m.insert("page_bytes", self.page_bytes.to_string());
+        m.insert("ring_shards", self.ring_shards.to_string());
         m.insert(
             "charge",
             match self.charge {
@@ -371,6 +377,8 @@ mod tests {
         assert_eq!(cfg.cost.cxl_load_ns, 123);
         cfg.apply_kv("charge", "off").unwrap();
         assert_eq!(cfg.charge, ChargePolicy::Skip);
+        cfg.apply_kv("ring_shards", "4").unwrap();
+        assert_eq!(cfg.ring_shards, 4);
         assert!(cfg.apply_kv("nonsense", "1").is_err());
         assert!(cfg.apply_kv("cxl_load_ns", "abc").is_err());
     }

@@ -42,8 +42,8 @@ pub mod util;
 pub mod workloads;
 
 pub use channel::{
-    CallArg, CallCtx, CallOpts, ChannelBuilder, ChannelOpts, Connection, Reply, Rpc, RpcServer,
-    TransportSel,
+    CallArg, CallCtx, CallHandle, CallOpts, ChannelBuilder, ChannelOpts, Connection, Reply, Rpc,
+    RpcServer, Shard, TransportSel,
 };
 pub use rack::{ProcEnv, Rack};
 

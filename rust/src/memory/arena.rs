@@ -244,6 +244,193 @@ mod tests {
         a.release(addr);
     }
 
+    /// Seed for the arena property tests: `PROP_SEED` env var, so CI
+    /// can sweep schedules and failures replay exactly.
+    fn prop_seed() -> u64 {
+        std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xA12E)
+    }
+
+    /// Concurrent alloc/release must never hand out overlapping
+    /// ranges and never reset under a live allocation. Each thread
+    /// tags both ends of every allocation and re-verifies the tags
+    /// after a randomized hold window — any overlap or premature
+    /// reset clobbers a tag.
+    #[test]
+    fn prop_concurrent_allocations_never_overlap() {
+        use crate::util::prop::{forall, Gen};
+        use crate::util::rng::Rng;
+
+        #[derive(Clone, Debug)]
+        struct Plan {
+            threads: u64,
+            iters: u64,
+            max_size: u64,
+            hold: usize,
+            salt: u64,
+        }
+        struct PlanGen;
+        impl Gen for PlanGen {
+            type Value = Plan;
+            fn generate(&self, rng: &mut Rng) -> Plan {
+                Plan {
+                    threads: rng.range(2, 5),
+                    iters: rng.range(50, 400),
+                    max_size: rng.range(16, 256),
+                    hold: rng.range(0, 5) as usize,
+                    salt: rng.next_u64(),
+                }
+            }
+            fn shrink(&self, v: &Plan) -> Vec<Plan> {
+                let mut out = Vec::new();
+                if v.iters > 50 {
+                    out.push(Plan { iters: v.iters / 2, ..v.clone() });
+                }
+                if v.threads > 2 {
+                    out.push(Plan { threads: v.threads - 1, ..v.clone() });
+                }
+                if v.hold > 0 {
+                    out.push(Plan { hold: 0, ..v.clone() });
+                }
+                out
+            }
+        }
+
+        forall("arena-no-overlap", prop_seed(), 24, &PlanGen, |plan| {
+            let (_p, _h, a) = arena(16 << 10);
+            let a = Arc::new(a);
+            let ok = Arc::new(std::sync::atomic::AtomicBool::new(true));
+            std::thread::scope(|s| {
+                for tid in 0..plan.threads {
+                    let a = Arc::clone(&a);
+                    let ok = Arc::clone(&ok);
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        let mut rng = Rng::new(plan.salt ^ (tid.wrapping_mul(0x9E37_79B9)));
+                        let mut held: Vec<(usize, usize, u64)> = Vec::new();
+                        // Tag reads/writes use unaligned ops: sizes
+                        // are arbitrary, so the tail slot of an odd
+                        // size is not 8-aligned.
+                        let verify = |(addr, size, tag): (usize, usize, u64)| {
+                            let head = unsafe { std::ptr::read_unaligned(addr as *const u64) };
+                            let tail = unsafe {
+                                std::ptr::read_unaligned((addr + size - 8) as *const u64)
+                            };
+                            head == tag && tail == tag
+                        };
+                        for k in 0..plan.iters {
+                            let size = rng.range(16, plan.max_size + 1) as usize;
+                            match a.alloc(size) {
+                                Some(addr) => {
+                                    let tag = (tid << 48) | k;
+                                    unsafe {
+                                        std::ptr::write_unaligned(addr as *mut u64, tag);
+                                        std::ptr::write_unaligned(
+                                            (addr + size - 8) as *mut u64,
+                                            tag,
+                                        );
+                                    }
+                                    held.push((addr, size, tag));
+                                }
+                                None => {
+                                    // Exhausted: drain one held slot so
+                                    // the run keeps making progress.
+                                    if let Some(h) = held.pop() {
+                                        if !verify(h) {
+                                            ok.store(false, Ordering::Relaxed);
+                                        }
+                                        a.release(h.0);
+                                    }
+                                }
+                            }
+                            while held.len() > plan.hold {
+                                let h = held.remove(0);
+                                if !verify(h) {
+                                    ok.store(false, Ordering::Relaxed);
+                                }
+                                a.release(h.0);
+                            }
+                        }
+                        for h in held.drain(..) {
+                            if !verify(h) {
+                                ok.store(false, Ordering::Relaxed);
+                            }
+                            a.release(h.0);
+                        }
+                    });
+                }
+            });
+            ok.load(Ordering::Relaxed) && a.live() == 0 && a.used() == 0
+        });
+    }
+
+    /// The reset rule, exactly: the bump offset must hold steady
+    /// through every release *except* the last live one, which must
+    /// reset it to zero (and count one reset).
+    #[test]
+    fn prop_reset_exactly_on_last_release() {
+        use crate::util::prop::{forall, U64Range, VecGen};
+        let sizes = VecGen { elem: U64Range(8, 256), max_len: 24 };
+        forall("arena-reset-on-last", prop_seed(), 64, &sizes, |sizes| {
+            let (_p, _h, a) = arena(16 << 10);
+            let mut live: Vec<usize> = Vec::new();
+            for s in sizes {
+                match a.alloc(*s as usize) {
+                    Some(addr) => live.push(addr),
+                    None => break, // exhausted: the held set still exercises the rule
+                }
+            }
+            let resets_before = a.resets();
+            let mut ok = a.live() == live.len() as u64;
+            let high_water = a.used();
+            while let Some(addr) = live.pop() {
+                a.release(addr);
+                if live.is_empty() {
+                    ok &= a.used() == 0 && a.live() == 0;
+                } else {
+                    // Not the last: offset must NOT move.
+                    ok &= a.used() == high_water && a.live() == live.len() as u64;
+                }
+            }
+            let expected_resets = u64::from(high_water > 0);
+            ok && a.resets() - resets_before == expected_resets
+        });
+    }
+
+    /// Exhaustion must spill (return `None`, count it) without ever
+    /// corrupting held allocations, and the arena must come back
+    /// fully usable after the holders release.
+    #[test]
+    fn prop_spill_keeps_arena_consistent() {
+        use crate::util::prop::{forall, U64Range, VecGen};
+        let sizes = VecGen { elem: U64Range(64, 2048), max_len: 16 };
+        forall("arena-spill-consistent", prop_seed(), 48, &sizes, |sizes| {
+            let (_p, _h, a) = arena(4096);
+            let mut held: Vec<(usize, usize, u64)> = Vec::new();
+            let mut spills = 0u64;
+            for (k, s) in sizes.iter().enumerate() {
+                let size = *s as usize;
+                match a.alloc(size) {
+                    Some(addr) => {
+                        let tag = 0xFEED_0000 + k as u64;
+                        unsafe {
+                            std::ptr::write_unaligned(addr as *mut u64, tag);
+                            std::ptr::write_unaligned((addr + size - 8) as *mut u64, tag);
+                        }
+                        held.push((addr, size, tag));
+                    }
+                    None => spills += 1,
+                }
+            }
+            let mut ok = a.spills() == spills;
+            for (addr, size, tag) in held.drain(..) {
+                ok &= unsafe { std::ptr::read_unaligned(addr as *const u64) } == tag;
+                ok &= unsafe { std::ptr::read_unaligned((addr + size - 8) as *const u64) } == tag;
+                a.release(addr);
+            }
+            ok && a.live() == 0 && a.used() == 0 && a.alloc(64).is_some()
+        });
+    }
+
     #[test]
     fn concurrent_alloc_release_hammer() {
         let (_p, _h, a) = arena(64 << 10);

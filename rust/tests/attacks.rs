@@ -123,21 +123,75 @@ fn forged_seal_descriptor_rejected() {
     cenv.enter();
 
     // Handcraft a "sealed" request with a descriptor idx that was
-    // never sealed.
+    // never sealed (shard 0's ring; the attack bypasses striping).
     let arg = conn.heap().new_val(7u64).unwrap();
-    let ring = &conn.shared.ring;
+    let ring = conn.shared.ring();
     let slot = ring.claim().unwrap();
     ring.publish(slot, 1, FLAG_SEALED, 12345, arg, 8);
     // Drive the server inline.
     while ring.slot(slot).state.load(Ordering::Acquire) != SLOT_RESPONSE {
         if let Some(i) = ring.take_request() {
-            server.core().handle_slot(&conn.shared, i);
+            server.core().handle_slot(&conn.shared, 0, i);
         }
     }
     let (status, _) = ring.consume(slot);
     assert_eq!(status, ST_SEAL_INVALID, "forged seal must be refused");
     drop(conn);
     server.stop();
+}
+
+/// PR 2's fault plumbing, staged as an attack: when a sandboxed
+/// handler chases an attacker-controlled pointer out of its window,
+/// the *real* fault address and the *real* sandbox window must
+/// round-trip through `respond_fault`/`consume_detail` to the
+/// caller's `RpcError::SandboxViolation` — and an unknown function id
+/// must come back verbatim in `NoSuchHandler`. Runs on a sharded
+/// connection with two listener workers, so the detail words survive
+/// the striped data path too.
+#[test]
+fn fault_detail_reaches_caller_with_real_addresses() {
+    let mut cfg = SimConfig::for_tests();
+    cfg.ring_shards = 2;
+    let rack = Rack::new(cfg);
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "atk/fault-detail").unwrap();
+    // The handler dereferences whatever address the argument names —
+    // the attacker aims it at a server-side secret.
+    server.add(1, |ctx| {
+        let target: u64 = ctx.arg_val()?;
+        let v: u64 = ShmPtr::<u64>::from_addr(target as usize).read()?;
+        Ok(v)
+    });
+    let listeners = server.spawn_listeners(2);
+
+    let cenv = rack.proc_env(1);
+    let conn = Rpc::connect(&cenv, "atk/fault-detail").unwrap();
+    assert_eq!(conn.shared.shard_count(), 2, "config shard knob must reach the connection");
+    cenv.run(|| {
+        let secret = conn.heap().new_val(0x5EC2u64).unwrap();
+        let scope = conn.create_scope(4096).unwrap();
+        let addr = scope.new_val(secret as u64).unwrap();
+        match conn.invoke(1, (addr, 8), CallOpts::secure(&scope)) {
+            Err(RpcError::SandboxViolation { addr: fault, lo, hi }) => {
+                assert_eq!(fault, secret, "fault address must name the attacked secret");
+                assert!(lo != 0 && hi > lo, "sandbox window must come back: [{lo:#x},{hi:#x})");
+                assert!(
+                    fault < lo || fault >= hi,
+                    "reported address must lie outside the reported window"
+                );
+            }
+            other => panic!("expected detailed sandbox violation, got {other:?}"),
+        }
+        // Func-id plumbing: the id of a missing handler survives the
+        // wire into the typed error.
+        let e = conn.call_scalar::<u64>(0xBEEF, &1, CallOpts::new());
+        assert!(matches!(e, Err(RpcError::NoSuchHandler(0xBEEF))), "got {e:?}");
+    });
+    drop(conn);
+    server.stop();
+    for l in listeners {
+        l.join().unwrap();
+    }
 }
 
 /// §5.5: applications may not mprotect connection-heap pages (that

@@ -1,0 +1,280 @@
+//! Seeded stress/property suite for the lock-free MPMC slot ring —
+//! the most delicate concurrency code in the repo (claim/publish/
+//! take_request/respond/consume plus the abandon-tombstone protocol).
+//!
+//! Every test draws randomized multi-threaded schedules from
+//! `util::prop::forall`, seeded by the `PROP_SEED` env var (CI sweeps
+//! four seeds in debug and release). A failure prints the seed and
+//! the shrunk scenario; rerunning with `PROP_SEED=<seed>` replays the
+//! same generated schedules. (Thread interleavings themselves are the
+//! OS's — the seed pins every *generated* parameter: ring size,
+//! thread counts, call counts, abandon rates, and the jitter streams
+//! both sides draw from.)
+//!
+//! Invariants checked on every scenario:
+//!
+//! * every consumed response carries exactly its caller's value — no
+//!   lost, duplicated, or cross-wired responses across laps;
+//! * every abandoned lap is retired exactly once (the client's
+//!   `abandon` and the server's `respond` split them perfectly);
+//! * the ring ends quiescent with `claimed == taken == total`;
+//! * nothing wedges — a watchdog deadline fails the property instead
+//!   of hanging the suite.
+
+use rpcool::channel::ring::{RpcRing, NO_SEAL, ST_OK};
+use rpcool::memory::pool::Pool;
+use rpcool::memory::Heap;
+use rpcool::util::prop::{forall, Gen, U64Range};
+use rpcool::util::rng::Rng;
+use rpcool::SimConfig;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Seed source: `PROP_SEED` env var (CI matrix), fixed default.
+fn prop_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED)
+}
+
+/// One randomized schedule over the ring protocol.
+#[derive(Clone, Debug)]
+struct Scenario {
+    /// Ring size = 1 << ring_pow (4..=16 slots).
+    ring_pow: u32,
+    clients: u64,
+    /// Calls per client.
+    calls: u64,
+    /// Percent of calls the caller abandons instead of consuming.
+    abandon_pct: u64,
+    /// Max server-side spin jitter before responding.
+    sjit: u64,
+    /// Max client-side spin jitter (pre-abandon / between calls).
+    cjit: u64,
+    /// Salt for the per-run jitter streams.
+    salt: u64,
+}
+
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Value = Scenario;
+    fn generate(&self, rng: &mut Rng) -> Scenario {
+        Scenario {
+            ring_pow: rng.range(2, 5) as u32,
+            clients: rng.range(1, 5),
+            calls: rng.range(8, 81),
+            abandon_pct: rng.range(0, 41),
+            sjit: rng.range(0, 65),
+            cjit: rng.range(0, 65),
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &Scenario) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        if v.calls > 8 {
+            out.push(Scenario { calls: v.calls / 2, ..v.clone() });
+        }
+        if v.clients > 1 {
+            out.push(Scenario { clients: v.clients - 1, ..v.clone() });
+        }
+        if v.abandon_pct > 0 {
+            out.push(Scenario { abandon_pct: 0, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// Run one scenario; `true` iff every invariant held.
+fn run_scenario(sc: &Scenario) -> bool {
+    let cfg = SimConfig::for_tests();
+    let pool = Pool::new(&cfg).unwrap();
+    let heap = Heap::new(&pool, "stress", 1 << 20).unwrap();
+    let ring = Arc::new(RpcRing::create(&heap, 1usize << sc.ring_pow).unwrap());
+    let total = sc.clients * sc.calls;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let failed = Arc::new(AtomicBool::new(false));
+    let server_discards = Arc::new(AtomicU64::new(0));
+    let client_discards = Arc::new(AtomicU64::new(0));
+    let abandons = Arc::new(AtomicU64::new(0));
+
+    // Server: serve exactly `total` requests (abandoned calls are
+    // still published, so they are still served), echoing a value
+    // derived from the request so cross-wiring is detectable.
+    let srv = {
+        let ring = Arc::clone(&ring);
+        let failed = Arc::clone(&failed);
+        let discards = Arc::clone(&server_discards);
+        let sjit = sc.sjit;
+        let salt = sc.salt;
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(salt ^ 0x5EC0_5EC0);
+            let mut served = 0u64;
+            while served < total {
+                if Instant::now() > deadline {
+                    eprintln!("stress: server wedged at {served}/{total}");
+                    failed.store(true, Ordering::Relaxed);
+                    return;
+                }
+                if let Some(i) = ring.take_request() {
+                    let f = ring.slot(i).func.load(Ordering::Relaxed);
+                    for _ in 0..rng.next_below(sjit + 1) {
+                        std::hint::spin_loop();
+                    }
+                    if ring.respond(i, ST_OK, f as u64 * 7 + 1) {
+                        discards.fetch_add(1, Ordering::Relaxed);
+                    }
+                    served += 1;
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        })
+    };
+
+    let mut clients = Vec::new();
+    for tid in 0..sc.clients {
+        let ring = Arc::clone(&ring);
+        let failed = Arc::clone(&failed);
+        let discards = Arc::clone(&client_discards);
+        let abandons = Arc::clone(&abandons);
+        let sc = sc.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(sc.salt ^ tid.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            for k in 0..sc.calls {
+                let func = (tid * sc.calls + k) as u32; // globally unique
+                let want = func as u64 * 7 + 1;
+                let i = loop {
+                    if Instant::now() > deadline {
+                        eprintln!("stress: client {tid} wedged claiming at call {k}");
+                        failed.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    if let Some(i) = ring.claim() {
+                        break i;
+                    }
+                    std::hint::spin_loop();
+                };
+                ring.publish(i, func, 0, NO_SEAL, 0, 0);
+                if rng.next_below(100) < sc.abandon_pct {
+                    // Timed-out caller: tombstone the slot at a random
+                    // point in the request's lifetime and move on.
+                    abandons.fetch_add(1, Ordering::Relaxed);
+                    for _ in 0..rng.next_below(sc.cjit + 1) {
+                        std::hint::spin_loop();
+                    }
+                    if let Some((st, ret)) = ring.abandon(i) {
+                        // The response had landed: it must be OURS.
+                        if st != ST_OK || ret != want {
+                            eprintln!(
+                                "stress: client {tid} call {k}: abandoned response cross-wired \
+                                 (st {st}, ret {ret}, want {want})"
+                            );
+                            failed.store(true, Ordering::Relaxed);
+                            return;
+                        }
+                        discards.fetch_add(1, Ordering::Relaxed);
+                    }
+                } else {
+                    while !ring.response_ready(i) {
+                        if Instant::now() > deadline {
+                            eprintln!("stress: client {tid} wedged waiting at call {k}");
+                            failed.store(true, Ordering::Relaxed);
+                            return;
+                        }
+                        std::hint::spin_loop();
+                    }
+                    let (st, ret) = ring.consume(i);
+                    if st != ST_OK || ret != want {
+                        eprintln!(
+                            "stress: client {tid} call {k}: response cross-wired \
+                             (st {st}, ret {ret}, want {want})"
+                        );
+                        failed.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                }
+                for _ in 0..rng.next_below(sc.cjit + 1) {
+                    std::hint::spin_loop();
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    srv.join().unwrap();
+    if failed.load(Ordering::Relaxed) {
+        return false;
+    }
+    // Exactly-once retirement of abandoned laps: whoever lost the
+    // tombstone swap did nothing, whoever won retired — so the two
+    // discard counters must partition the abandons.
+    let sd = server_discards.load(Ordering::Relaxed);
+    let cd = client_discards.load(Ordering::Relaxed);
+    let ab = abandons.load(Ordering::Relaxed);
+    if sd + cd != ab {
+        eprintln!("stress: abandon accounting broke: server {sd} + client {cd} != {ab}");
+        return false;
+    }
+    if !ring.quiescent() {
+        eprintln!("stress: ring not quiescent after all laps");
+        return false;
+    }
+    if ring.claimed() != total || ring.taken() != total {
+        eprintln!(
+            "stress: cursors disagree: claimed {} taken {} total {total}",
+            ring.claimed(),
+            ring.taken()
+        );
+        return false;
+    }
+    true
+}
+
+/// The main randomized sweep: ring sizes, client counts, abandon
+/// rates, and jitter all drawn from the seed.
+#[test]
+fn stress_randomized_schedules() {
+    forall("ring-stress", prop_seed(), 32, &ScenarioGen, run_scenario);
+}
+
+/// Abandon-vs-respond races, concentrated: every call is abandoned at
+/// a jittered instant while the server races to respond. Either side
+/// may win the tombstone swap; the lap must retire exactly once.
+/// (This is the schedule that catches a reintroduced abandon-race bug
+/// — e.g. `respond` ignoring the tombstone, or `abandon` retiring a
+/// lap it lost — as a wedge or a cross-wired late response.)
+#[test]
+fn stress_abandon_vs_respond_race() {
+    forall("ring-abandon-race", prop_seed(), 24, &U64Range(0, 96), |&jit| {
+        run_scenario(&Scenario {
+            ring_pow: 2,
+            clients: 2,
+            calls: 96,
+            abandon_pct: 100,
+            sjit: jit,
+            cjit: jit,
+            salt: prop_seed() ^ jit.wrapping_mul(0xB5AD_4ECE_DA1C_E2A9),
+        })
+    });
+}
+
+/// Full-ring wraparound + cross-lap ABA, concentrated: more clients
+/// than slots on the smallest ring, every slot cycling many laps,
+/// with a slice of abandons mixed in. A stale `take_request` stealing
+/// a later lap's request (the ABA the lap guard exists for) shows up
+/// here as a cross-wired response.
+#[test]
+fn stress_full_ring_wraparound_aba() {
+    forall("ring-wraparound-aba", prop_seed(), 24, &U64Range(0, 64), |&jit| {
+        run_scenario(&Scenario {
+            ring_pow: 2,
+            clients: 4,
+            calls: 128,
+            abandon_pct: 10,
+            sjit: jit,
+            cjit: jit / 2,
+            salt: prop_seed() ^ jit.wrapping_mul(0x2545_F491_4F6C_DD1D),
+        })
+    });
+}
