@@ -95,6 +95,44 @@ fn main() {
         net.stop();
     }
 
+    // Batched compose (ISSUE 4): the whole slice of posts rides
+    // invoke_batch per service hop — one publish doorbell per chunk,
+    // reply doorbells coalesced by the drain-k serving loop. Closed
+    // loop (batching trades per-request latency for throughput), so
+    // the row records peak compose throughput.
+    {
+        const BATCH: usize = 16;
+        let state = SocialState::new(nusers, 16, 7);
+        let net = RpcoolSocial::start(
+            &rack,
+            Arc::clone(&state),
+            SleepPolicy::Fixed(1),
+            false,
+            "f12batch",
+        )
+        .unwrap();
+        net.inline_mode();
+        let mut rng = Rng::new(8);
+        let t0 = Instant::now();
+        let mut done = 0u64;
+        while t0.elapsed() < budget {
+            let posts: Vec<(u64, String)> =
+                (0..BATCH).map(|_| sample_post(&mut rng, nusers)).collect();
+            let ids = net.compose_post_batch(&posts).unwrap();
+            done += ids.len() as u64;
+        }
+        let thr = done as f64 / t0.elapsed().as_secs_f64();
+        t.row(&[
+            format!("RPCool (batched x{BATCH})"),
+            "closed loop".into(),
+            format!("{thr:.0}"),
+            "-".into(),
+            "-".into(),
+        ]);
+        rep.row(&format!("rpcool_batched_b{BATCH}"), 0.0, 0.0, 1e9 / thr, thr);
+        net.stop();
+    }
+
     // Thrift.
     let state = SocialState::new(nusers, 16, 1);
     let net = ThriftSocial::start(Arc::clone(&rack.pool.charger), state);

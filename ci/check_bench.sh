@@ -1,0 +1,106 @@
+#!/usr/bin/env bash
+# CI gates over the bench JSON records (run by the bench-smoke job
+# after the quick benches have produced fresh BENCH_*.json files):
+#
+#  1. Staleness: every freshly produced BENCH_<name>.json must have a
+#     committed counterpart at the repo root that is a real record —
+#     not a pending-first-run stub (no rows / "pending first toolchain
+#     run" note). On failure the fresh file is printed together with a
+#     copy-paste-ready command to commit it.
+#
+#  2. Doorbell invariant: the fresh ring_contention record's batched
+#     drain row (conn/batched/s4/t8/b16/drain16) must stay at or below
+#     1.1 charged doorbell signals per RPC (1 + 1/k + eps for k = 16;
+#     the pre-overhaul hot path charged 2). The bound is the ISSUE 4
+#     acceptance ceiling, kept loose because the achieved coalesce
+#     factor depends on runner scheduling; the *sharp* regression pin
+#     for reply coalescing is the deterministic unit test
+#     channel::tests::drain_k_sweep_coalesces_backlogged_replies,
+#     which the rust CI job runs.
+#
+#  3. Striping invariant: the two-choice per-shard claim spread at
+#     s4/t6 must be at most half the fixed-striping spread measured in
+#     the same run.
+#
+# Usage: check_bench.sh <fresh-json-dir> <repo-root>
+set -euo pipefail
+
+fresh_dir="${1:?usage: check_bench.sh <fresh-json-dir> <repo-root>}"
+repo_root="${2:?usage: check_bench.sh <fresh-json-dir> <repo-root>}"
+fail=0
+
+for f in "$fresh_dir"/BENCH_*.json; do
+    [ -e "$f" ] || { echo "::error::no fresh BENCH_*.json produced in $fresh_dir"; exit 1; }
+    name=$(basename "$f")
+    committed="$repo_root/$name"
+    stale=""
+    if [ ! -f "$committed" ]; then
+        stale="has no committed counterpart"
+    elif grep -q "pending first toolchain run" "$committed"; then
+        stale="is still a pending-first-run stub"
+    elif ! grep -q '"label"' "$committed"; then
+        stale="has no measured rows"
+    fi
+    if [ -n "$stale" ]; then
+        echo "::error file=$name::committed $name $stale."
+        echo ""
+        echo "The committed perf record is stale. Replace it with this run's output:"
+        echo ""
+        echo "    cp bench-out/$name ./$name && git add $name   # then commit"
+        echo ""
+        echo "---- fresh $name (copy-paste source) ----"
+        cat "$f"
+        echo "---- end $name ----"
+        fail=1
+    fi
+done
+
+# Invariants are asserted against the FRESH record (they must hold on
+# every run, not just the committed snapshot).
+python3 - "$fresh_dir/BENCH_ring_contention.json" <<'EOF' || fail=1
+import json, sys
+
+DOORBELL_ROW = "conn/batched/s4/t8/b16/drain16"
+DOORBELL_MAX = 1.1          # 1 + 1/16 + eps
+SPREAD_ROWS = ("conn/charged/s4/t6/fixed", "conn/charged/s4/t6/choice2")
+
+rows = {r["label"]: r for r in json.load(open(sys.argv[1]))["rows"]}
+ok = True
+
+row = rows.get(DOORBELL_ROW)
+if row is None:
+    print(f"::error::{DOORBELL_ROW} row missing from fresh ring_contention record")
+    ok = False
+elif row.get("signals_per_rpc", 99.0) > DOORBELL_MAX:
+    print(
+        f"::error::doorbell invariant broken: {DOORBELL_ROW} charged "
+        f"{row['signals_per_rpc']:.3f} signals/RPC (max {DOORBELL_MAX}); the "
+        f"response path is ringing more than one coalesced bell per drain sweep"
+    )
+    ok = False
+else:
+    print(f"doorbell invariant ok: {row['signals_per_rpc']:.3f} signals/RPC <= {DOORBELL_MAX}")
+
+fixed, choice = (rows.get(l) for l in SPREAD_ROWS)
+if fixed is None or choice is None:
+    print(f"::error::striping comparison rows {SPREAD_ROWS} missing from fresh record")
+    ok = False
+elif "claims_spread" not in fixed or "claims_spread" not in choice:
+    # A missing metric must fail loudly, not read as spread 0.
+    print(f"::error::claims_spread extra missing from {SPREAD_ROWS} — gate would be vacuous")
+    ok = False
+else:
+    fs, cs = fixed["claims_spread"], choice["claims_spread"]
+    if cs > fs / 2:
+        print(
+            f"::error::striping invariant broken: two-choice claim spread {cs:.0f} "
+            f"exceeds half the fixed-striping spread {fs:.0f}"
+        )
+        ok = False
+    else:
+        print(f"striping invariant ok: two-choice spread {cs:.0f} <= fixed {fs:.0f} / 2")
+
+sys.exit(0 if ok else 1)
+EOF
+
+exit $fail

@@ -21,7 +21,9 @@ use crate::apps::memcached::Cache;
 use crate::apps::mongodb::DocStore;
 use crate::baselines::netrpc::{self, Flavor, NetRpcClient, NetRpcServer};
 use crate::baselines::wire::{Wire, WireBuf, WireCur};
-use crate::channel::{waiter::SleepPolicy, CallOpts, ChannelBuilder, Connection, RpcServer};
+use crate::channel::{
+    waiter::SleepPolicy, CallArg, CallOpts, ChannelBuilder, Connection, RpcServer,
+};
 use crate::error::Result;
 use crate::memory::containers::ShmString;
 use crate::memory::pod::Pod;
@@ -303,6 +305,56 @@ impl RpcoolSocial {
         Ok(post_id)
     }
 
+    /// Batched compose: the whole slice of posts walks the same
+    /// service chain, but each hop rides the amortized submission
+    /// path (`invoke_batch`/`call_scalar_batch`) — one publish
+    /// doorbell per chunk per service instead of one per post, with
+    /// the servers' drain-k loops coalescing the reply doorbells.
+    /// Per-post observable semantics are identical to looping
+    /// [`RpcoolSocial::compose_post`]; the secure configuration keeps
+    /// its per-call seals and falls back to exactly that loop.
+    pub fn compose_post_batch(&self, posts: &[(u64, String)]) -> Result<Vec<u64>> {
+        if self.secure || posts.len() < 2 {
+            return posts.iter().map(|(u, t)| self.compose_post(*u, t)).collect();
+        }
+        self.charger.charge_ns(self.charger.cost.nginx_ns * posts.len() as u64);
+
+        // Text service: mention/URL extraction for the whole slice.
+        let c = &self.conns.text;
+        let texts: Vec<ShmString> = posts
+            .iter()
+            .map(|(_, t)| ShmString::from_str(c.heap().as_ref(), t))
+            .collect::<Result<_>>()?;
+        c.call_scalar_batch(F_TEXT, &texts, CallOpts::new())?;
+
+        // UniqueId: one batch of k empty-argument calls, k post ids.
+        let ids = self.conns.unique.invoke_batch(
+            F_UNIQUE,
+            &vec![CallArg::NONE; posts.len()],
+            CallOpts::new(),
+        )?;
+
+        // User lookups.
+        let users: Vec<u64> = posts.iter().map(|(u, _)| *u).collect();
+        self.conns.user.call_scalar_batch(F_USER, &users, CallOpts::new())?;
+
+        // Storage chain (post + user timeline + home fanout).
+        let c = &self.conns.storage;
+        let args: Vec<StorePostArg> = posts
+            .iter()
+            .zip(&ids)
+            .map(|((user_id, text), post_id)| {
+                Ok(StorePostArg {
+                    user_id: *user_id,
+                    post_id: *post_id,
+                    text: ShmString::from_str(c.heap().as_ref(), text)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        c.call_scalar_batch(F_STORE_POST, &args, CallOpts::new())?;
+        Ok(ids)
+    }
+
     pub fn stop(self) {
         drop(self.conns.unique);
         drop(self.conns.user);
@@ -459,6 +511,36 @@ mod tests {
         assert_eq!(state.posts.len(), 20);
         // Fanout reached follower home timelines.
         assert!(state.home_cache.len() > 0);
+        net.stop();
+    }
+
+    #[test]
+    fn batched_compose_matches_loop_semantics() {
+        let rack = Rack::new(SimConfig::for_tests());
+        let state = SocialState::new(100, 8, 9);
+        let net = RpcoolSocial::start(
+            &rack,
+            Arc::clone(&state),
+            SleepPolicy::Fixed(1),
+            false,
+            "tb",
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(10);
+        let posts: Vec<(u64, String)> = (0..24).map(|_| sample_post(&mut rng, 100)).collect();
+        let ids = net.compose_post_batch(&posts).unwrap();
+        assert_eq!(ids.len(), 24);
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 24, "unique ids must stay unique through the batch");
+        assert_eq!(state.composed.load(Ordering::Relaxed), 24);
+        assert_eq!(state.posts.len(), 24);
+        assert!(state.home_cache.len() > 0, "fanout reached follower timelines");
+        // A single-post batch degrades to the plain path.
+        let (user, text) = sample_post(&mut rng, 100);
+        net.compose_post_batch(&[(user, text)]).unwrap();
+        assert_eq!(state.composed.load(Ordering::Relaxed), 25);
         net.stop();
     }
 

@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use super::ring::{status_to_error, RpcRing, ST_OK};
 use super::waiter::{self, WaitOutcome};
-use super::{Connection, ServerCore, TransportSel};
+use super::{Connection, Route, ServerCore, TransportSel};
 
 /// An RPC argument: a native shared-memory pointer plus its byte
 /// length. Built from whatever the caller has on hand:
@@ -252,7 +252,10 @@ impl<R: Pod> std::fmt::Debug for Reply<'_, R> {
 #[must_use = "an async call completes through its handle; dropping it abandons the call"]
 pub struct CallHandle<'c> {
     conn: &'c Connection,
-    shard: usize,
+    /// The shard lease the submission routed on; released exactly
+    /// once, at `finish`/`abandon` (that release is what lets the
+    /// submitting thread re-stripe under two-choice once drained).
+    route: Route,
     slot: usize,
     func: u32,
     arg: CallArg,
@@ -266,19 +269,19 @@ impl<'c> CallHandle<'c> {
     #[allow(clippy::too_many_arguments)]
     pub(super) fn new(
         conn: &'c Connection,
-        shard: usize,
+        route: Route,
         slot: usize,
         func: u32,
         arg: CallArg,
         own_arg: bool,
         timeout: Duration,
     ) -> CallHandle<'c> {
-        CallHandle { conn, shard, slot, func, arg, own_arg, timeout, done: false }
+        CallHandle { conn, route, slot, func, arg, own_arg, timeout, done: false }
     }
 
     #[inline]
     fn ring(&self) -> &RpcRing {
-        &self.conn.shared.shards[self.shard].ring
+        &self.conn.shared.shards[self.route.si].ring
     }
 
     /// The function id this call invoked.
@@ -288,7 +291,7 @@ impl<'c> CallHandle<'c> {
 
     /// The shard the call rode (telemetry/tests).
     pub fn shard(&self) -> usize {
-        self.shard
+        self.route.si
     }
 
     /// Has the response landed? One atomic load; never blocks.
@@ -312,7 +315,7 @@ impl<'c> CallHandle<'c> {
     /// from this thread exactly as in synchronous calls.
     pub fn wait(mut self) -> Result<u64> {
         let conn = self.conn;
-        let (shard, slot) = (self.shard, self.slot);
+        let (shard, slot) = (self.route.si, self.slot);
         let ring = &conn.shared.shards[shard].ring;
         let inline: Option<Arc<ServerCore>> =
             conn.inline_server.lock().unwrap().as_ref().map(Arc::clone);
@@ -345,17 +348,19 @@ impl<'c> CallHandle<'c> {
         self.finish()
     }
 
-    /// Consume the landed response, release an owned argument, and
-    /// decode the status.
+    /// Consume the landed response, release an owned argument and the
+    /// shard lease, and decode the status.
     fn finish(&mut self) -> Result<u64> {
         self.done = true;
+        let shard = self.route.si;
         let (status, ret, aux_lo, aux_hi) =
-            self.conn.shared.shards[self.shard].ring.consume_detail(self.slot);
+            self.conn.shared.shards[shard].ring.consume_detail(self.slot);
         if self.own_arg {
             // The server is done with the call: the argument releases
             // immediately, against the shard it was allocated on.
-            self.conn.release_arg(self.shard, self.arg.addr);
+            self.conn.release_arg(shard, self.arg.addr);
         }
+        self.conn.unroute(&self.route);
         match status {
             ST_OK => Ok(ret),
             other => Err(status_to_error(other, self.func, ret, aux_lo, aux_hi)),
@@ -363,25 +368,27 @@ impl<'c> CallHandle<'c> {
     }
 
     /// Give up on the call: tombstone the slot (a late response
-    /// retires the lap) and quarantine an owned argument the server
-    /// may still read.
+    /// retires the lap), quarantine an owned argument the server
+    /// may still read, and release the shard lease.
     fn abandon(&mut self) {
         if self.done {
             return;
         }
         self.done = true;
+        let shard = self.route.si;
         let completed =
-            self.conn.abandon_and_reclaim(self.shard, self.slot, self.arg.addr, self.arg.len);
+            self.conn.abandon_and_reclaim(shard, self.slot, self.arg.addr, self.arg.len);
         if self.own_arg {
             if completed {
                 // The response had landed: the server is done with the
                 // argument, release it now (the common drop-after-
                 // completion path never touches the quarantine).
-                self.conn.release_arg(self.shard, self.arg.addr);
+                self.conn.release_arg(shard, self.arg.addr);
             } else {
                 self.conn.quarantine_arg(self.arg.addr);
             }
         }
+        self.conn.unroute(&self.route);
     }
 }
 
@@ -397,9 +404,66 @@ impl std::fmt::Debug for CallHandle<'_> {
             f,
             "CallHandle(func {}, shard {}, slot {}, {})",
             self.func,
-            self.shard,
+            self.route.si,
             self.slot,
             if self.done { "done" } else if self.ready() { "ready" } else { "in flight" }
         )
+    }
+}
+
+/// An in-flight **typed** asynchronous RPC
+/// (`Connection::call_typed_async::<A, R>`): the same submission and
+/// completion machinery as [`CallHandle`], resolving to the
+/// [`Reply<R>`] a synchronous `call_typed` would have returned — so
+/// apps pipeline pointer-returning RPCs with no raw `u64` casts.
+///
+/// Dropping an unfinished handle abandons the call exactly like
+/// dropping a [`CallHandle`] (the inner handle's `Drop` runs).
+#[must_use = "a typed async call completes through its handle; dropping it abandons the call"]
+pub struct TypedCallHandle<'c, R: Pod> {
+    inner: CallHandle<'c>,
+    _m: PhantomData<fn() -> R>,
+}
+
+impl<'c, R: Pod> TypedCallHandle<'c, R> {
+    pub(super) fn new(inner: CallHandle<'c>) -> TypedCallHandle<'c, R> {
+        TypedCallHandle { inner, _m: PhantomData }
+    }
+
+    /// The function id this call invoked.
+    pub fn func(&self) -> u32 {
+        self.inner.func()
+    }
+
+    /// The shard the call rode (telemetry/tests).
+    pub fn shard(&self) -> usize {
+        self.inner.shard()
+    }
+
+    /// Has the response landed? One atomic load; never blocks.
+    pub fn ready(&self) -> bool {
+        self.inner.ready()
+    }
+
+    /// Non-blocking completion attempt: `None` while in flight,
+    /// `Some(Ok(Reply<R>))` once the response landed (consuming the
+    /// slot; the handle drops inert afterwards).
+    pub fn poll(&mut self) -> Option<Result<Reply<'c, R>>> {
+        let conn = self.inner.conn;
+        self.inner.poll().map(|r| r.map(|ret| Reply::new(conn, ret as usize)))
+    }
+
+    /// Block until the response lands (park-aware, like
+    /// [`CallHandle::wait`]) and decode it as a typed [`Reply<R>`].
+    pub fn wait(self) -> Result<Reply<'c, R>> {
+        let conn = self.inner.conn;
+        let ret = self.inner.wait()?;
+        Ok(Reply::new(conn, ret as usize))
+    }
+}
+
+impl<R: Pod> std::fmt::Debug for TypedCallHandle<'_, R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Typed{:?}<{}>", self.inner, std::any::type_name::<R>())
     }
 }

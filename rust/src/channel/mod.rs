@@ -57,13 +57,28 @@
 //!
 //! A connection's data path is an array of [`Shard`]s (ring + arg
 //! arena), sized by [`ChannelBuilder::ring_shards`]. Caller threads
-//! stripe across shards by thread id — FIFO still holds *within* a
-//! shard, which is exactly the per-thread program order that matters
-//! — so N threads no longer funnel through one ring's ticket CAS.
+//! stripe across shards — FIFO still holds *within* a shard, which is
+//! exactly the per-thread program order that matters — so N threads
+//! no longer funnel through one ring's ticket CAS. With
+//! [`ChannelBuilder::two_choice`] (the default) the stripe is
+//! **load-aware**: a thread with nothing in flight picks the
+//! less-loaded of its home shard and one random probe shard
+//! (power-of-two-choices over `depth + claim_fails`), and stays
+//! pinned to its pick while it has calls in flight — the pin is what
+//! keeps per-thread FIFO intact across re-striping, and the
+//! contention signal is what routes new callers around a wedged or
+//! flooded shard.
+//!
 //! Listeners ([`RpcServer::listen`], or `k` of them via
-//! [`RpcServer::spawn_listeners`]) drain every shard of every
-//! connection fairly: one request per shard per pass, each worker
-//! starting its sweep at a different shard offset.
+//! [`RpcServer::spawn_listeners`]) run a **drain-k serving loop**:
+//! each sweep takes up to [`ChannelBuilder::drain_k`] requests per
+//! shard per connection, answers them with `respond_quiet`, and rings
+//! the shard's response doorbell **once** per sweep
+//! (`flush_respond`) — the reply-side mirror of the request side's
+//! `publish_quiet`/`flush_publish` amortization, taking the charged
+//! doorbell cost of one RPC from 2 signals to 1 + 1/B (B ≤ k the
+//! achieved coalesce factor). Each worker starts its sweep at a
+//! different shard offset so `k` workers don't convoy on shard 0.
 //!
 //! Submission amortizes on top of that:
 //!
@@ -77,12 +92,15 @@
 //!   doorbell epoch), so apps pipeline RPCs instead of blocking
 //!   per call. Dropping an unfinished handle abandons the slot —
 //!   it can never wedge the ring.
+//!   [`Connection::call_typed_async`] is the fully typed variant: a
+//!   [`TypedCallHandle<R>`] resolving to the same [`Reply<R>`] a
+//!   synchronous `call_typed` returns.
 
 pub mod call;
 pub mod ring;
 pub mod waiter;
 
-pub use call::{CallArg, CallHandle, CallOpts, Reply};
+pub use call::{CallArg, CallHandle, CallOpts, Reply, TypedCallHandle};
 
 use crate::config::SimConfig;
 use crate::daemon::Daemon;
@@ -150,6 +168,39 @@ pub(crate) fn thread_stripe() -> usize {
 }
 
 // ---------------------------------------------------------------------
+// load-aware two-choice routing (which shard a call actually rides)
+
+/// Per-(thread × connection) pin: while this thread has calls in
+/// flight on a connection, every new call rides the same shard —
+/// that is exactly what keeps per-thread FIFO order intact across
+/// load-aware re-striping (responses within one shard complete in
+/// publish order; across shards they would not).
+struct PinEntry {
+    /// `Arc::as_ptr` of the connection's `ConnShared` — unique while
+    /// the connection lives, and entries are pruned once drained.
+    key: usize,
+    shard: usize,
+    /// In-flight weight this thread routed to `shard`. Decremented by
+    /// whoever completes the call (possibly another thread holding a
+    /// moved `CallHandle`), hence the shared atomic.
+    outstanding: Arc<AtomicU64>,
+}
+
+thread_local! {
+    static SHARD_PINS: std::cell::RefCell<Vec<PinEntry>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// A routed call's shard lease: which shard the call rides, plus the
+/// bookkeeping to undo at completion. `weight == 0` marks an
+/// untracked (fixed-striping) route whose release is a no-op.
+pub(crate) struct Route {
+    pub(crate) si: usize,
+    weight: u64,
+    pin: Option<Arc<AtomicU64>>,
+}
+
+// ---------------------------------------------------------------------
 // options
 
 #[derive(Clone)]
@@ -173,6 +224,16 @@ pub struct ChannelOpts {
     /// across the shards (0 disables the arenas; typed-call arguments
     /// and replies then always take the heap mutex).
     pub arg_arena_bytes: usize,
+    /// Server drain budget: up to `drain_k` requests taken per shard
+    /// per serving sweep, answered with `respond_quiet`, then one
+    /// coalesced response-doorbell signal per shard per sweep
+    /// (`flush_respond`). 1 restores one reply signal per RPC.
+    pub drain_k: usize,
+    /// Load-aware power-of-two-choices striping: a caller thread with
+    /// nothing in flight picks the less-loaded of its home shard and
+    /// one probe shard; while it has calls in flight it stays pinned
+    /// to its current shard (per-thread FIFO). No-op with one shard.
+    pub two_choice: bool,
 }
 
 impl ChannelOpts {
@@ -186,6 +247,8 @@ impl ChannelOpts {
             sleep: SleepPolicy::from_config(cfg),
             call_timeout: Duration::from_secs(10),
             arg_arena_bytes: 256 << 10,
+            drain_k: cfg.drain_k,
+            two_choice: cfg.two_choice,
         }
     }
 }
@@ -261,6 +324,23 @@ impl ChannelBuilder {
     /// Per-connection argument-arena size (0 disables it).
     pub fn arg_arena_bytes(mut self, bytes: usize) -> ChannelBuilder {
         self.opts.arg_arena_bytes = bytes;
+        self
+    }
+
+    /// Server drain budget per shard per serving sweep: up to `k`
+    /// requests are answered quietly and one coalesced response
+    /// doorbell rings per shard per sweep — the reply-side charged
+    /// cost per RPC drops from 1 signal to 1/B, where B ≤ k is the
+    /// achieved coalesce factor. `k = 1` restores per-reply signals.
+    pub fn drain_k(mut self, k: usize) -> ChannelBuilder {
+        self.opts.drain_k = k.max(1);
+        self
+    }
+
+    /// Toggle load-aware two-choice shard striping (see
+    /// [`ChannelOpts::two_choice`]; default from the config).
+    pub fn two_choice(mut self, on: bool) -> ChannelBuilder {
+        self.opts.two_choice = on;
         self
     }
 
@@ -388,6 +468,48 @@ pub struct Shard {
     /// (None when creation failed or was disabled: allocation falls
     /// back to the heap).
     pub arena: Option<ArgArena>,
+    /// In-flight calls currently routed to this shard (two-choice
+    /// occupancy signal; maintained by `Connection::route`/`unroute`
+    /// only when two-choice striping is on).
+    pub depth: AtomicU64,
+    /// Contention signal: claim attempts that found this shard's ring
+    /// full. Halved on each later first-try claim success, so a past
+    /// congestion episode decays once the shard sees traffic again —
+    /// while a wedged shard (held claims) stays penalized, which is
+    /// the point. The decay is traffic-driven on purpose: under light
+    /// load a once-congested shard can sit exiled (siblings' depth
+    /// never exceeds its stale counter), which merely consolidates
+    /// light traffic on fewer shards; under the loads where spreading
+    /// matters, sibling depth climbs past the stale counter, the
+    /// shard gets re-picked, the first claim succeeds, and decay
+    /// resumes. Only a claim success can distinguish "stale" from
+    /// "wedged", so decaying on any other signal would re-route
+    /// callers into a wedged shard's claim timeout.
+    pub claim_fails: AtomicU64,
+}
+
+impl Shard {
+    fn new(ring: RpcRing, arena: Option<ArgArena>) -> Shard {
+        Shard { ring, arena, depth: AtomicU64::new(0), claim_fails: AtomicU64::new(0) }
+    }
+
+    /// The two-choice load estimate: occupancy + recent contention.
+    /// One relaxed load each; cheap enough to probe on every pick.
+    #[inline]
+    pub fn load_estimate(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed) + self.claim_fails.load(Ordering::Relaxed)
+    }
+
+    /// Halve the contention penalty after a first-try claim success
+    /// (racy-lossy on purpose: it is only a heuristic, and lost decays
+    /// self-correct on the next success).
+    #[inline]
+    fn decay_claim_fails(&self) {
+        let f = self.claim_fails.load(Ordering::Relaxed);
+        if f > 0 {
+            self.claim_fails.store(f / 2, Ordering::Relaxed);
+        }
+    }
 }
 
 pub struct ConnShared {
@@ -631,16 +753,23 @@ impl RpcServer {
         self.listen_worker(0);
     }
 
-    /// One worker of a (possibly multi-worker) serving loop. Drains
-    /// every connection's shards *fairly*: one request per shard per
-    /// pass, each worker starting its sweep at a different shard
-    /// offset so `k` workers don't convoy on shard 0. FIFO within a
-    /// shard is preserved even with several workers on the same shard
-    /// — `take_request` hands out requests in ticket order.
+    /// One worker of a (possibly multi-worker) serving loop — the
+    /// **drain-k** server: each sweep takes up to `drain_k` requests
+    /// per shard per connection, answers them with `respond_quiet`,
+    /// and rings the shard's response doorbell **once** per sweep
+    /// (`flush_respond`), so the reply-side charged cost per RPC is
+    /// 1/B signals (B ≤ k the achieved coalesce factor) instead of 1.
+    /// Each worker starts its sweep at a different shard offset so `k`
+    /// workers don't convoy on shard 0, and the per-sweep budget keeps
+    /// the sweep fair — one flooded shard can't starve its siblings
+    /// for more than k requests. FIFO within a shard is preserved even
+    /// with several workers — `take_request` hands out requests in
+    /// ticket order.
     pub fn listen_worker(&self, worker: usize) {
         self.core.env.enter();
         let policy = self.core.opts.sleep;
         let park = policy == SleepPolicy::Park;
+        let drain_k = self.core.opts.drain_k.max(1);
         // Armed only while this listener is idle enough to park, so
         // the loaded case keeps every publish()'s `ring()` at a
         // single atomic load.
@@ -668,9 +797,28 @@ impl RpcServer {
                     let mut took = false;
                     for k in 0..nsh {
                         let si = (worker + k) % nsh;
-                        if let Some(slot) = conn.shards[si].ring.take_request() {
+                        let sh = &conn.shards[si];
+                        // Drain up to k requests from this shard with
+                        // quiet replies...
+                        let mut drained = 0usize;
+                        while drained < drain_k {
+                            match sh.ring.take_request() {
+                                Some(slot) => {
+                                    self.core.handle_slot_quiet(conn, si, slot);
+                                    drained += 1;
+                                }
+                                None => break,
+                            }
+                        }
+                        // ...then one coalesced doorbell for the whole
+                        // sweep. This MUST run before the worker moves
+                        // on (and certainly before it parks): every
+                        // quiet respond is covered by a flush on its
+                        // own shard, which is the no-lost-wakeup
+                        // invariant the waiters rely on.
+                        if drained > 0 {
+                            sh.ring.flush_respond();
                             took = true;
-                            self.core.handle_slot(conn, si, slot);
                         }
                     }
                     if !took {
@@ -794,9 +942,23 @@ impl Drop for RpcServer {
 }
 
 impl ServerCore {
-    /// Process one request slot of one shard (the server's hot path).
-    /// Public so inline serving can drive it from the caller thread.
+    /// Process one request slot of one shard (the server's hot path),
+    /// ringing the response doorbell per reply. Public so inline
+    /// serving can drive it from the caller thread (inline serving
+    /// stays eager: the caller *is* the waiter, so deferring its
+    /// wakeup would only add latency).
     pub fn handle_slot(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize) {
+        self.handle_slot_opts(conn, shard, slot, false)
+    }
+
+    /// Quiet variant for the drain-k serving loop: replies via
+    /// `respond_quiet`/`respond_fault_quiet`, leaving the single
+    /// coalesced `flush_respond` per shard per sweep to the caller.
+    pub fn handle_slot_quiet(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize) {
+        self.handle_slot_opts(conn, shard, slot, true)
+    }
+
+    fn handle_slot_opts(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize, quiet: bool) {
         let sh = &conn.shards[shard];
         let s = sh.ring.slot(slot);
         let func = s.func.load(Ordering::Relaxed);
@@ -805,13 +967,30 @@ impl ServerCore {
         let arg = s.arg.load(Ordering::Relaxed) as usize;
         let arg_len = s.arg_len.load(Ordering::Relaxed) as usize;
 
+        // Reply through the quiet (sweep-flushed) or eager doorbell,
+        // same tombstone arbitration either way.
+        let reply = |st: u32, ret: u64| -> bool {
+            if quiet {
+                sh.ring.respond_quiet(slot, st, ret)
+            } else {
+                sh.ring.respond(slot, st, ret)
+            }
+        };
+        let reply_fault = |st: u32, ret: u64, aux_lo: u64, aux_hi: u64| -> bool {
+            if quiet {
+                sh.ring.respond_fault_quiet(slot, st, ret, aux_lo, aux_hi)
+            } else {
+                sh.ring.respond_fault(slot, st, ret, aux_lo, aux_hi)
+            }
+        };
+
         // RDMA fallback: fault the argument pages over to the server
         // (paper §5.6 — load triggers fault, fetch, re-execute).
         if let Some(dsm) = &conn.dsm {
             if arg != 0 {
                 if let Err(e) = dsm.ensure_owned(NODE_SERVER, arg, arg_len.max(1)) {
                     let _ = e;
-                    sh.ring.respond(slot, ST_HANDLER_ERROR, 0);
+                    reply(ST_HANDLER_ERROR, 0);
                     return;
                 }
             }
@@ -821,13 +1000,13 @@ impl ServerCore {
         // if the sender claims a seal that doesn't check out.
         let sealed = flags & FLAG_SEALED != 0;
         if sealed && !conn.sealer.verify(seal_idx, arg, arg_len.max(1)) {
-            sh.ring.respond(slot, ST_SEAL_INVALID, 0);
+            reply(ST_SEAL_INVALID, 0);
             return;
         }
 
         let handlers = self.handlers.read().unwrap();
         let Some(handler) = handlers.get(&func) else {
-            sh.ring.respond(slot, ST_NO_HANDLER, 0);
+            reply(ST_NO_HANDLER, 0);
             return;
         };
 
@@ -876,7 +1055,7 @@ impl ServerCore {
         self.served.fetch_add(1, Ordering::Relaxed);
         match result {
             Ok(ret) => {
-                let discarded = sh.ring.respond(slot, ST_OK, ret);
+                let discarded = reply(ST_OK, ret);
                 // The caller timed out and this response went nowhere:
                 // reclaim an arena-allocated reply so one abandoned
                 // call can't pin the arena forever.
@@ -887,16 +1066,10 @@ impl ServerCore {
             Err(RpcError::SandboxViolation { addr, lo, hi }) => {
                 // Carry the real fault back: address in `ret`, the
                 // sandbox window in the (now dead) argument words.
-                sh.ring.respond_fault(
-                    slot,
-                    ST_SANDBOX_VIOLATION,
-                    addr as u64,
-                    lo as u64,
-                    hi as u64,
-                );
+                reply_fault(ST_SANDBOX_VIOLATION, addr as u64, lo as u64, hi as u64);
             }
             Err(_) => {
-                sh.ring.respond(slot, ST_HANDLER_ERROR, 0);
+                reply(ST_HANDLER_ERROR, 0);
             }
         }
     }
@@ -1035,7 +1208,7 @@ impl Connection {
             } else {
                 ArgArena::create(&heap, arena_bytes).ok()
             };
-            shards.push(Shard { ring, arena });
+            shards.push(Shard::new(ring, arena));
         }
         let dsm = if use_dsm { Some(DsmState::new(&heap, cfg.page_bytes)) } else { None };
 
@@ -1144,24 +1317,126 @@ impl Connection {
         )))
     }
 
+    /// Route a call (or a batch of `weight` calls) to a shard. With
+    /// two-choice striping off — or a single shard — this is the
+    /// fixed thread stripe and the lease is untracked (`weight 0`).
+    /// With it on: if this thread already has calls in flight on this
+    /// connection, the call **stays pinned** to that shard (responses
+    /// within one shard complete in publish order, so the pin is what
+    /// preserves per-thread FIFO across re-striping); once the thread
+    /// has drained, it re-picks the less-loaded of its home shard and
+    /// one random probe shard (power of two choices).
+    ///
+    /// Every `route` must be balanced by exactly one
+    /// [`Connection::unroute`] when the routed call(s) complete —
+    /// that is what keeps the `depth` occupancy signal honest.
+    pub(crate) fn route(&self, weight: u64) -> Route {
+        let n = self.shared.shards.len();
+        if n == 1 || !self.opts.two_choice {
+            let (si, _) = self.shared.shard_for_thread();
+            return Route { si, weight: 0, pin: None };
+        }
+        let weight = weight.max(1);
+        let key = Arc::as_ptr(&self.shared) as usize;
+        let (si, pin) = SHARD_PINS.with(|cell| {
+            let mut pins = cell.borrow_mut();
+            if let Some(e) = pins.iter_mut().find(|e| e.key == key) {
+                if e.outstanding.load(Ordering::Relaxed) == 0 {
+                    // Drained: this thread is free to re-stripe.
+                    e.shard = self.pick_two_choice(n);
+                }
+                e.outstanding.fetch_add(weight, Ordering::Relaxed);
+                // The Arc clone is what lets a CallHandle moved to
+                // another thread balance the books at completion —
+                // one refcount bump here, one drop at unroute.
+                (e.shard, Arc::clone(&e.outstanding))
+            } else {
+                // Miss (first call on this connection from this
+                // thread): prune drained entries of dead connections
+                // here, off the per-call hit path, so the table stays
+                // a handful of live rows without a scan per call.
+                pins.retain(|e| e.outstanding.load(Ordering::Relaxed) > 0);
+                let si = self.pick_two_choice(n);
+                let out = Arc::new(AtomicU64::new(weight));
+                let pin = Arc::clone(&out);
+                pins.push(PinEntry { key, shard: si, outstanding: out });
+                (si, pin)
+            }
+        });
+        self.shared.shards[si].depth.fetch_add(weight, Ordering::Relaxed);
+        Route { si, weight, pin: Some(pin) }
+    }
+
+    /// Release a shard lease at call completion (consume, abandon, or
+    /// any error after routing). Safe from any thread — a moved
+    /// `CallHandle` completes elsewhere and still balances the books.
+    pub(crate) fn unroute(&self, r: &Route) {
+        if r.weight == 0 {
+            return;
+        }
+        self.shared.shards[r.si].depth.fetch_sub(r.weight, Ordering::Relaxed);
+        if let Some(p) = &r.pin {
+            p.fetch_sub(r.weight, Ordering::Relaxed);
+        }
+    }
+
+    /// The pick itself: home = thread stripe, probe = a pseudo-random
+    /// *other* shard (salted by the call counter so repeated picks
+    /// probe different shards), less-loaded wins, home wins ties.
+    fn pick_two_choice(&self, n: usize) -> usize {
+        let home = thread_stripe() & (n - 1);
+        let salt = crate::util::rng::mix64(
+            self.calls
+                .load(Ordering::Relaxed)
+                .wrapping_add(1)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ ((thread_stripe() as u64) << 17)
+                ^ self.shared.id,
+        );
+        let probe = (home + 1 + (salt as usize % (n - 1))) & (n - 1);
+        if self.shared.shards[probe].load_estimate() < self.shared.shards[home].load_estimate() {
+            probe
+        } else {
+            home
+        }
+    }
+
     /// The one call core: argument is a native pointer into the
     /// connection heap (or a sealed scope), behaviour is composed from
     /// [`CallOpts`]. Returns the handler's raw `ret` word; the typed
     /// layers ([`Connection::call_typed`], [`Connection::call_scalar`])
     /// build on this.
     pub fn invoke(&self, func: u32, arg: impl Into<CallArg>, opts: CallOpts) -> Result<u64> {
-        let arg = arg.into();
+        let route = self.route(1);
+        let r = self.invoke_routed(&route, func, arg.into(), opts);
+        self.unroute(&route);
+        r
+    }
+
+    /// [`Connection::invoke`] against a pre-picked shard (the typed
+    /// layers route first so the argument allocation and the
+    /// descriptor ride the same shard).
+    fn invoke_routed(&self, route: &Route, func: u32, arg: CallArg, opts: CallOpts) -> Result<u64> {
         self.check_transport(opts.transport)?;
         let mut flags = 0u32;
         if opts.sandbox {
             flags |= FLAG_SANDBOXED;
         }
         match opts.seal {
-            None => self.call_inner(func, flags, NO_SEAL, arg.addr, arg.len, opts.timeout),
+            None => {
+                self.call_inner_on(route, func, flags, NO_SEAL, arg.addr, arg.len, opts.timeout)
+            }
             Some(scope) => {
                 let h = self.seal_scope(scope)?;
-                let r =
-                    self.call_inner(func, flags | FLAG_SEALED, h.idx, arg.addr, arg.len, opts.timeout);
+                let r = self.call_inner_on(
+                    route,
+                    func,
+                    flags | FLAG_SEALED,
+                    h.idx,
+                    arg.addr,
+                    arg.len,
+                    opts.timeout,
+                );
                 self.release_seal_forced(h);
                 r
             }
@@ -1205,7 +1480,10 @@ impl Connection {
             flags |= FLAG_SANDBOXED;
         }
         let h = self.seal_scope(&scope)?;
-        match self.call_inner(func, flags, h.idx, arg.addr, arg.len, opts.timeout) {
+        let route = self.route(1);
+        let r = self.call_inner_on(&route, func, flags, h.idx, arg.addr, arg.len, opts.timeout);
+        self.unroute(&route);
+        match r {
             Ok(r) => {
                 pool.push_sealed(scope, h)?;
                 Ok(r)
@@ -1235,44 +1513,52 @@ impl Connection {
             return Err(RpcError::ConnectionClosed);
         }
         self.sweep_quarantine();
-        let (addr, owned_on) = match opts.seal {
-            Some(scope) => (scope.new_val(*arg)?, None),
-            None => {
-                let (si, addr) = self.alloc_arg(*arg)?;
-                (addr, Some(si))
+        // Route before allocating: the argument must come from the
+        // arena of the shard the descriptor will actually ride, so
+        // the release hint stays exact under two-choice re-striping.
+        let route = self.route(1);
+        let r = (|| {
+            let (addr, owned_on) = match opts.seal {
+                Some(scope) => (scope.new_val(*arg)?, None),
+                None => (self.alloc_arg_on(route.si, *arg)?, Some(route.si)),
+            };
+            let r = self.invoke_routed(
+                &route,
+                func,
+                CallArg::new(addr, std::mem::size_of::<A>()),
+                opts,
+            );
+            // On a response timeout / teardown the request may still be
+            // queued or in flight server-side — recycling the argument
+            // now would hand the server freshly-reused memory (the arena
+            // resets to offset 0 on its last release, making reuse
+            // immediate, and the heap free list is just as unsafe). Such
+            // arguments go to the quarantine and are released once the
+            // rings are provably quiet. A claim-phase timeout
+            // (TIMEOUT_SLOT) never published the address, so it releases
+            // right away, as does every outcome where the server finished.
+            if let Some(si) = owned_on {
+                if arg_outstanding(&r) {
+                    self.quarantine_arg(addr);
+                } else {
+                    self.release_arg(si, addr);
+                }
             }
-        };
-        let r = self.invoke(func, (addr, std::mem::size_of::<A>()), opts);
-        // On a response timeout / teardown the request may still be
-        // queued or in flight server-side — recycling the argument
-        // now would hand the server freshly-reused memory (the arena
-        // resets to offset 0 on its last release, making reuse
-        // immediate, and the heap free list is just as unsafe). Such
-        // arguments go to the quarantine and are released once the
-        // rings are provably quiet. A claim-phase timeout
-        // (TIMEOUT_SLOT) never published the address, so it releases
-        // right away, as does every outcome where the server finished.
-        if let Some(si) = owned_on {
-            if arg_outstanding(&r) {
-                self.quarantine_arg(addr);
-            } else {
-                self.release_arg(si, addr);
-            }
-        }
+            r
+        })();
+        self.unroute(&route);
         r
     }
 
-    /// Allocate a typed-call argument: lock-free from this thread's
-    /// shard arena, spilling to the heap mutex only when the arena is
-    /// full. Returns `(shard index, address)` — the shard is the
-    /// release hint for [`Connection::release_arg`], so the common
-    /// release is one range check instead of a scan over every
-    /// shard's arena.
-    fn alloc_arg<A: Pod>(&self, arg: A) -> Result<(usize, usize)> {
-        let (si, shard) = self.shared.shard_for_thread();
-        match shard.arena.as_ref().and_then(|a| a.alloc_val(arg)) {
-            Some(addr) => Ok((si, addr)),
-            None => Ok((si, self.shared.heap.new_val(arg)?)),
+    /// Allocate a typed-call argument on shard `si`: lock-free from
+    /// that shard's arena, spilling to the heap mutex only when the
+    /// arena is full. The shard index doubles as the release hint for
+    /// [`Connection::release_arg`], so the common release is one
+    /// range check instead of a scan over every shard's arena.
+    fn alloc_arg_on<A: Pod>(&self, si: usize, arg: A) -> Result<usize> {
+        match self.shared.shards[si].arena.as_ref().and_then(|a| a.alloc_val(arg)) {
+            Some(addr) => Ok(addr),
+            None => self.shared.heap.new_val(arg),
         }
     }
 
@@ -1383,6 +1669,22 @@ impl Connection {
             return Ok(Vec::new());
         }
         self.sweep_quarantine();
+        let route = self.route(args.len() as u64);
+        let r = self.invoke_batch_on(&route, func, args, opts);
+        self.unroute(&route);
+        r
+    }
+
+    /// [`Connection::invoke_batch`] against a pre-picked shard (the
+    /// typed batch layer routes first, for the same argument/descriptor
+    /// shard-coherence reason as `call_scalar`).
+    fn invoke_batch_on(
+        &self,
+        route: &Route,
+        func: u32,
+        args: &[CallArg],
+        opts: CallOpts,
+    ) -> Result<Vec<u64>> {
         let timeout = opts.timeout.unwrap_or(self.opts.call_timeout);
         let deadline = Instant::now() + timeout;
         let mut flags = 0u32;
@@ -1397,7 +1699,8 @@ impl Connection {
                 }
             }
         }
-        let (shard_idx, shard) = self.shared.shard_for_thread();
+        let shard_idx = route.si;
+        let shard = &self.shared.shards[shard_idx];
         let ring = &shard.ring;
         let inline: Option<Arc<ServerCore>> =
             self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
@@ -1410,21 +1713,16 @@ impl Connection {
             // response doorbell if the ring is full), then as many
             // more as are free right now.
             let mut slots = Vec::new();
-            match ring.claim() {
-                Some(i) => slots.push(i),
-                None => {
-                    let remain = deadline.saturating_duration_since(Instant::now());
-                    match self.claim_slow(ring, remain, inline.as_ref()) {
-                        Ok(i) => slots.push(i),
-                        Err(e) => {
-                            // Nothing of this chunk published; earlier
-                            // chunks were fully consumed — reclaim
-                            // their replies, which would otherwise
-                            // leak through the error return.
-                            self.reclaim_batch_replies(&out, args);
-                            return Err(e);
-                        }
-                    }
+            let remain = deadline.saturating_duration_since(Instant::now());
+            match self.claim_tracked(route, remain, inline.as_ref()) {
+                Ok(i) => slots.push(i),
+                Err(e) => {
+                    // Nothing of this chunk published; earlier chunks
+                    // were fully consumed — reclaim their replies,
+                    // which would otherwise leak through the error
+                    // return.
+                    self.reclaim_batch_replies(&out, args);
+                    return Err(e);
                 }
             }
             while slots.len() < args.len() - idx {
@@ -1528,17 +1826,23 @@ impl Connection {
                 "call_scalar_batch cannot seal; use call_scalar for per-call seals".into(),
             ));
         }
+        self.check_transport(opts.transport)?;
         if self.shared.closed() {
             return Err(RpcError::ConnectionClosed);
         }
+        if args.is_empty() {
+            return Ok(Vec::new());
+        }
         self.sweep_quarantine();
+        // Route the whole batch once (one shard, pinned while in
+        // flight), then stage every argument on that shard's arena.
+        let route = self.route(args.len() as u64);
+        let stripe = route.si;
         let mut addrs = Vec::with_capacity(args.len());
         let mut cargs = Vec::with_capacity(args.len());
-        let mut stripe = 0;
         for a in args {
-            match self.alloc_arg(*a) {
-                Ok((si, addr)) => {
-                    stripe = si; // same thread throughout: one stripe
+            match self.alloc_arg_on(stripe, *a) {
+                Ok(addr) => {
                     addrs.push(addr);
                     cargs.push(CallArg::new(addr, std::mem::size_of::<A>()));
                 }
@@ -1548,11 +1852,13 @@ impl Connection {
                     for &p in &addrs {
                         self.release_arg(stripe, p);
                     }
+                    self.unroute(&route);
                     return Err(e);
                 }
             }
         }
-        let r = self.invoke_batch(func, &cargs, opts);
+        let r = self.invoke_batch_on(&route, func, &cargs, opts);
+        self.unroute(&route);
         if arg_outstanding(&r) {
             // Some slot may still be read by the server; which ones is
             // unknowable here, so quarantine the lot (the sweep frees
@@ -1580,7 +1886,8 @@ impl Connection {
         arg: impl Into<CallArg>,
         opts: CallOpts,
     ) -> Result<CallHandle<'_>> {
-        self.submit_async(func, arg.into(), opts, false)
+        let route = self.route(1);
+        self.submit_async(route, func, arg.into(), opts, false)
     }
 
     /// Typed asynchronous submission: the argument is allocated like
@@ -1600,25 +1907,71 @@ impl Connection {
             return Err(RpcError::ConnectionClosed);
         }
         self.sweep_quarantine();
-        let (si, addr) = self.alloc_arg(*arg)?;
-        match self.submit_async(func, CallArg::new(addr, std::mem::size_of::<A>()), opts, true) {
+        let route = self.route(1);
+        let addr = match self.alloc_arg_on(route.si, *arg) {
+            Ok(a) => a,
+            Err(e) => {
+                self.unroute(&route);
+                return Err(e);
+            }
+        };
+        let si = route.si;
+        match self.submit_async(route, func, CallArg::new(addr, std::mem::size_of::<A>()), opts, true)
+        {
             Ok(h) => Ok(h),
             Err(e) => {
                 // Every submit failure precedes the publish, so the
-                // argument is provably unread and releases now.
+                // argument is provably unread and releases now (the
+                // route was already released inside submit_async).
                 self.release_arg(si, addr);
                 Err(e)
             }
         }
     }
 
+    /// Fully typed asynchronous submission: `A` in now, a
+    /// [`TypedCallHandle<R>`] out, which resolves to the same
+    /// [`Reply<R>`] a synchronous [`Connection::call_typed`] returns —
+    /// apps pipeline pointer-returning RPCs (reads, scans, document
+    /// fetches) instead of blocking one at a time. Completion, drop,
+    /// and abandon semantics are [`CallHandle`]'s.
+    pub fn call_typed_async<'c, A: Pod, R: Pod>(
+        &'c self,
+        func: u32,
+        arg: &A,
+        opts: CallOpts,
+    ) -> Result<TypedCallHandle<'c, R>> {
+        Ok(TypedCallHandle::new(self.call_scalar_async(func, arg, opts)?))
+    }
+
+    /// Takes ownership of `route` and releases it itself on every
+    /// pre-publish failure; after a successful publish the lease
+    /// transfers to the returned handle (released at `finish`/
+    /// `abandon`).
     fn submit_async(
         &self,
+        route: Route,
         func: u32,
         arg: CallArg,
         opts: CallOpts,
         own_arg: bool,
     ) -> Result<CallHandle<'_>> {
+        match self.submit_async_inner(&route, func, arg, opts) {
+            Ok((slot, timeout)) => Ok(CallHandle::new(self, route, slot, func, arg, own_arg, timeout)),
+            Err(e) => {
+                self.unroute(&route);
+                Err(e)
+            }
+        }
+    }
+
+    fn submit_async_inner(
+        &self,
+        route: &Route,
+        func: u32,
+        arg: CallArg,
+        opts: CallOpts,
+    ) -> Result<(usize, Duration)> {
         if opts.seal.is_some() {
             return Err(RpcError::Config(
                 "async calls cannot seal; use invoke for sealed calls".into(),
@@ -1639,16 +1992,12 @@ impl Connection {
         if opts.sandbox {
             flags |= FLAG_SANDBOXED;
         }
-        let (shard_idx, shard) = self.shared.shard_for_thread();
-        let ring = &shard.ring;
+        let shard = &self.shared.shards[route.si];
         let inline: Option<Arc<ServerCore>> =
             self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
-        let slot = match ring.claim() {
-            Some(i) => i,
-            None => self.claim_slow(ring, timeout, inline.as_ref())?,
-        };
-        ring.publish(slot, func, flags, NO_SEAL, arg.addr, arg.len);
-        Ok(CallHandle::new(self, shard_idx, slot, func, arg, own_arg, timeout))
+        let slot = self.claim_tracked(route, timeout, inline.as_ref())?;
+        shard.ring.publish(slot, func, flags, NO_SEAL, arg.addr, arg.len);
+        Ok((slot, timeout))
     }
 
     /// Reclaim a server-allocated reply buffer (or an owned typed-call
@@ -1718,8 +2067,10 @@ impl Connection {
         self.shared.sealer.seal(scope.base(), len, self.env.proc)
     }
 
-    fn call_inner(
+    #[allow(clippy::too_many_arguments)]
+    fn call_inner_on(
         &self,
+        route: &Route,
         func: u32,
         flags: u32,
         seal_idx: u64,
@@ -1740,7 +2091,8 @@ impl Connection {
                 dsm.ensure_owned(NODE_CLIENT, arg, arg_len.max(1))?;
             }
         }
-        let (shard_idx, shard) = self.shared.shard_for_thread();
+        let shard_idx = route.si;
+        let shard = &self.shared.shards[shard_idx];
         let ring = &shard.ring;
         // Inline serving: run the server's handlers on this thread
         // under the server's identity (the sequential-RTT model).
@@ -1751,11 +2103,10 @@ impl Connection {
         let inline: Option<Arc<ServerCore>> =
             self.inline_server.lock().unwrap().as_ref().map(Arc::clone);
         // Claim a slot (a full ring parks on the response doorbell —
-        // consume() rings it when a slot frees).
-        let slot = match ring.claim() {
-            Some(i) => i,
-            None => self.claim_slow(ring, timeout, inline.as_ref())?,
-        };
+        // consume() rings it when a slot frees). A full ring feeds
+        // the shard's contention signal, which is what steers later
+        // two-choice picks away from it.
+        let slot = self.claim_tracked(route, timeout, inline.as_ref())?;
         ring.publish(slot, func, flags, seal_idx, arg, arg_len);
         let out = waiter::wait_on(
             self.opts.sleep,
@@ -1790,6 +2141,37 @@ impl Connection {
         match status {
             ST_OK => Ok(ret),
             other => Err(status_to_error(other, func, ret, aux_lo, aux_hi)),
+        }
+    }
+
+    /// Claim a slot on the routed shard, feeding the two-choice
+    /// contention signal: a first-try success decays the stale
+    /// penalty, a full ring charges it once before falling into the
+    /// doorbell-parked slow path. Every connection claim site routes
+    /// through here so the load signal can't drift between call
+    /// flavours. Untracked (fixed-striping) routes skip the counters
+    /// entirely — the fixed baseline pays nothing, as documented.
+    fn claim_tracked(
+        &self,
+        route: &Route,
+        timeout: Duration,
+        inline: Option<&Arc<ServerCore>>,
+    ) -> Result<usize> {
+        let shard = &self.shared.shards[route.si];
+        let tracked = route.weight != 0;
+        match shard.ring.claim() {
+            Some(i) => {
+                if tracked {
+                    shard.decay_claim_fails();
+                }
+                Ok(i)
+            }
+            None => {
+                if tracked {
+                    shard.claim_fails.fetch_add(1, Ordering::Relaxed);
+                }
+                self.claim_slow(&shard.ring, timeout, inline)
+            }
         }
     }
 
@@ -2796,6 +3178,280 @@ mod tests {
         assert!(conn.shared.quiescent());
         drop(conn);
         server.stop();
+    }
+
+    /// The response-path tentpole, charged end to end: a batch
+    /// submitted through one publish doorbell and served by the
+    /// drain-k loop must cost far fewer than the historical 2 signals
+    /// per RPC. Even the worst serving interleaving (one flush per
+    /// reply) is ≤ 1 + 1/32; the old behaviour was exactly 2.
+    #[test]
+    fn drain_k_coalesces_reply_doorbells() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_slots(64)
+            .drain_k(16)
+            .open(&env, "drain-k")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "drain-k").unwrap();
+        let charger = Arc::clone(&rack.pool.charger);
+        let signal = rack.cfg.cost.cxl_signal_ns as f64;
+        cenv.run(|| {
+            let vals: Vec<u64> = (0..32).collect();
+            let before = charger.total_charged_ns();
+            let rets = conn.call_scalar_batch::<u64>(1, &vals, CallOpts::new()).unwrap();
+            let charged = (charger.total_charged_ns() - before) as f64;
+            for (v, r) in vals.iter().zip(&rets) {
+                assert_eq!(*r, v + 1);
+            }
+            let per_rpc = charged / signal / vals.len() as f64;
+            assert!(
+                per_rpc > 0.0 && per_rpc <= 1.2,
+                "batched submit + drain-k replies must amortize both doorbells \
+                 (got {per_rpc} signals/RPC, pre-batching was 2)"
+            );
+        });
+        assert_eq!(server.served(), 32);
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// drain_k(1) must restore the pre-batching accounting exactly:
+    /// one publish signal + one reply signal per unbatched RPC.
+    #[test]
+    fn drain_k_one_restores_per_reply_signals() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .drain_k(1)
+            .open(&env, "drain-1")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "drain-1").unwrap();
+        let charger = Arc::clone(&rack.pool.charger);
+        let signal = rack.cfg.cost.cxl_signal_ns;
+        cenv.run(|| {
+            let before = charger.total_charged_ns();
+            for i in 0..20u64 {
+                assert_eq!(conn.call_scalar::<u64>(1, &i, CallOpts::new()).unwrap(), i);
+            }
+            // The final sweep's flush_respond may still be in flight
+            // on the listener thread when the last call returns.
+            std::thread::sleep(Duration::from_millis(50));
+            let charged = charger.total_charged_ns() - before;
+            assert_eq!(
+                charged,
+                2 * 20 * signal,
+                "drain_k=1 keeps the historical 2-signals-per-RPC accounting"
+            );
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// The sharp coalescing pin (the statistical bounds above can't
+    /// distinguish per-reply flushing from real coalescing): stage a
+    /// 32-call backlog with no listener running, then serve it — the
+    /// drain-16 loop must answer it in exactly ceil(32/16) = 2 sweeps
+    /// = 2 coalesced reply doorbells. Per-reply flushing would charge
+    /// 32; this is the regression tripwire for the ISSUE 4 tentpole.
+    #[test]
+    fn drain_k_sweep_coalesces_backlogged_replies() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_slots(64)
+            .drain_k(16)
+            .open(&env, "drain-backlog")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "drain-backlog").unwrap();
+        let charger = Arc::clone(&rack.pool.charger);
+        let signal = rack.cfg.cost.cxl_signal_ns;
+        cenv.run(|| {
+            // Stage the backlog first: 32 eager publishes, no replies.
+            let handles: Vec<CallHandle> = (0..32u64)
+                .map(|v| conn.call_scalar_async(1, &v, CallOpts::new()).unwrap())
+                .collect();
+            let staged = charger.total_charged_ns();
+            // Only now start serving: the whole backlog is visible to
+            // the listener's first pass, so the sweep count (and with
+            // it the reply-signal count) is deterministic.
+            let t = server.spawn_listener();
+            for (h, v) in handles.into_iter().zip(0..32u64) {
+                assert_eq!(h.wait().unwrap(), v + 1);
+            }
+            // The final sweep's flush may trail the last consume.
+            std::thread::sleep(Duration::from_millis(50));
+            let reply_signals = (charger.total_charged_ns() - staged) / signal;
+            assert_eq!(
+                reply_signals, 2,
+                "a 32-deep backlog under drain-16 must cost exactly 2 coalesced reply \
+                 doorbells (per-reply flushing charges 32)"
+            );
+            server.stop();
+            t.join().unwrap();
+        });
+        drop(conn);
+    }
+
+    /// Two-choice striping routes new callers around a wedged shard
+    /// (its held claims never publish, so its ring stays full and its
+    /// contention counter stays hot) while preserving per-thread FIFO
+    /// across the reroute: the rerouted calls ride one pinned shard
+    /// and are served in submission order.
+    #[test]
+    fn two_choice_reroutes_around_wedged_shard_preserving_fifo() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let order = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(2)
+            .ring_slots(8)
+            .two_choice(true)
+            .open(&env, "wedge")
+            .unwrap();
+        let ord = Arc::clone(&order);
+        server.serve_scalar::<u64>(1, move |_ctx, v| {
+            ord.lock().unwrap().push(*v);
+            Ok(*v)
+        });
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "wedge").unwrap();
+        cenv.run(|| {
+            let (home, _) = conn.shared.shard_for_thread();
+            let probe = home ^ 1;
+            // Wedge the home shard: hold every claim ticket (claimed,
+            // never published) so its ring is full and stays full.
+            let held: Vec<usize> =
+                (0..8).map(|_| conn.shared.shards[home].ring.claim().unwrap()).collect();
+            assert_eq!(held.len(), 8);
+            assert!(conn.shared.shards[home].ring.claim().is_none(), "home shard wedged");
+
+            // First call still probes home (no contention recorded
+            // yet, ties go home): it fails at the claim phase, which
+            // is exactly what charges the wedged shard's counter.
+            let e = conn.call_scalar::<u64>(
+                1,
+                &0,
+                CallOpts::new().timeout(Duration::from_millis(30)),
+            );
+            assert!(matches!(e, Err(RpcError::Timeout(_))), "got {e:?}");
+            assert!(
+                conn.shared.shards[home].claim_fails.load(Ordering::Relaxed) > 0,
+                "failed claim must charge the contention signal"
+            );
+
+            // New calls now reroute to the probe shard — and because
+            // they pipeline (async, all in flight from one thread),
+            // the pin keeps every one of them on that single shard.
+            let before = conn.shared.shard_claims();
+            let handles: Vec<CallHandle> = (1..=6u64)
+                .map(|v| conn.call_scalar_async(1, &v, CallOpts::new()).unwrap())
+                .collect();
+            for (h, want) in handles.into_iter().zip(1..=6u64) {
+                assert_eq!(h.shard(), probe, "rerouted call must ride the probe shard");
+                assert_eq!(h.wait().unwrap(), want);
+            }
+            let after = conn.shared.shard_claims();
+            assert_eq!(after[home], before[home], "wedged shard gets no new claims");
+            assert_eq!(after[probe], before[probe] + 6, "all rerouted calls rode the probe");
+            // FIFO across the reroute: service order == submission
+            // order (the wedged call 0 was never published, so it
+            // never appears).
+            assert_eq!(*order.lock().unwrap(), (1..=6).collect::<Vec<u64>>());
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// With two-choice off, the fixed thread stripe routes every call
+    /// of one thread to its home shard — the load-aware path must not
+    /// engage (regression guard for the fixed-striping baseline).
+    #[test]
+    fn fixed_striping_ignores_load() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(2)
+            .two_choice(false)
+            .open(&env, "fixed")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "fixed").unwrap();
+        cenv.run(|| {
+            let (home, _) = conn.shared.shard_for_thread();
+            for i in 0..10u64 {
+                assert_eq!(conn.call_scalar::<u64>(1, &i, CallOpts::new()).unwrap(), i);
+            }
+            let claims = conn.shared.shard_claims();
+            assert_eq!(claims[home], 10, "fixed striping pins the thread to its home shard");
+            assert_eq!(claims[home ^ 1], 0);
+            assert_eq!(
+                conn.shared.shards[home].depth.load(Ordering::Relaxed),
+                0,
+                "untracked routes must not touch the occupancy counter"
+            );
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// Typed async replies (the ROADMAP satellite): pipeline
+    /// pointer-returning RPCs, resolve each handle to a `Reply<R>`,
+    /// out of order, with the arena fully recycled afterwards.
+    #[test]
+    fn typed_async_resolves_to_replies() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "typed-async");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "typed-async").unwrap();
+        let arena = conn.shared.shards[0].arena.as_ref().expect("arena on");
+        cenv.run(|| {
+            // Pipeline 4 typed calls, then complete them newest-first.
+            let mut handles: Vec<TypedCallHandle<u64>> = (0..4u64)
+                .map(|i| conn.call_typed_async::<u64, u64>(101, &i, CallOpts::new()).unwrap())
+                .collect();
+            let mut expect: Vec<u64> = (0..4u64).map(|i| i + 1).collect();
+            while let (Some(h), Some(want)) = (handles.pop(), expect.pop()) {
+                let reply = h.wait().unwrap();
+                assert_eq!(reply.take().unwrap(), want);
+            }
+            // poll() path, plus the null-reply decode through opt().
+            let mut h = conn.call_typed_async::<u64, u64>(101, &10, CallOpts::new()).unwrap();
+            let reply = loop {
+                if let Some(r) = h.poll() {
+                    break r.unwrap();
+                }
+                std::hint::spin_loop();
+            };
+            assert_eq!(reply.take().unwrap(), 11);
+            // Dropping an unfinished typed handle abandons cleanly.
+            let h = conn.call_typed_async::<u64, u64>(101, &20, CallOpts::new()).unwrap();
+            drop(h);
+            std::thread::sleep(Duration::from_millis(100));
+            let r = conn.call_typed::<u64, u64>(101, &30, CallOpts::new()).unwrap();
+            assert_eq!(r.take().unwrap(), 31, "connection healthy after dropped typed handle");
+        });
+        assert!(conn.shared.quiescent());
+        assert_eq!(arena.live(), 0, "typed async args and replies all released");
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
     }
 
     #[test]

@@ -416,10 +416,31 @@ impl RpcRing {
     /// (including any `ret` the handler allocated) was discarded, so
     /// the serving layer must reclaim an owned reply buffer itself.
     pub fn respond(&self, i: usize, status: u32, ret: u64) -> bool {
+        self.respond_inner(i, status, ret, false)
+    }
+
+    /// Batched server side: write the response *without* ringing or
+    /// charging the response doorbell — the reply-side mirror of
+    /// [`RpcRing::publish_quiet`]. A drain-k serving sweep answers up
+    /// to k requests this way and then pays one cross-fabric signal
+    /// via [`RpcRing::flush_respond`] for the whole sweep. The
+    /// RESPONSE store is still Release (a polling caller that touches
+    /// the slot sees a complete reply); only the wakeup is deferred —
+    /// every quiet respond MUST be followed by a `flush_respond` on
+    /// this ring before the server blocks, or a parked waiter stalls
+    /// a park slice. The abandon-tombstone arbitration is identical
+    /// to [`RpcRing::respond`]'s.
+    pub fn respond_quiet(&self, i: usize, status: u32, ret: u64) -> bool {
+        self.respond_inner(i, status, ret, true)
+    }
+
+    fn respond_inner(&self, i: usize, status: u32, ret: u64, quiet: bool) -> bool {
         let s = self.slot(i);
         s.ret.store(ret, Ordering::Relaxed);
         s.status.store(status, Ordering::Relaxed);
-        self.charger.charge_ns(self.signal_ns);
+        if !quiet {
+            self.charger.charge_ns(self.signal_ns);
+        }
         s.state.store(SLOT_RESPONSE, Ordering::Release);
         // A timed-out caller will never consume: if it left its
         // tombstone, retire the lap on its behalf (the swap decides a
@@ -428,8 +449,23 @@ impl RpcRing {
         if discarded {
             self.retire_lap(s);
         }
-        self.resp_bell.ring();
+        if !quiet {
+            self.resp_bell.ring();
+        }
         discarded
+    }
+
+    /// One response-doorbell signal covering every preceding
+    /// [`RpcRing::respond_quiet`] of a serving sweep: k reply writes,
+    /// one wakeup (and one charged cross-fabric signal) for the whole
+    /// sweep — the reply-side mirror of [`RpcRing::flush_publish`].
+    /// Wakes completion waiters, claim waiters blocked on a lap a
+    /// quiet respond retired, and inline-serving waiters alike; each
+    /// re-scans its own slot (coalesced epochs are the waiter
+    /// protocol's normal case, see `waiter.rs`).
+    pub fn flush_respond(&self) {
+        self.charger.charge_ns(self.signal_ns);
+        self.resp_bell.ring();
     }
 
     /// Server side: error response carrying remote detail. The slot's
@@ -443,6 +479,22 @@ impl RpcRing {
         s.arg.store(aux_lo, Ordering::Relaxed);
         s.arg_len.store(aux_hi, Ordering::Relaxed);
         self.respond(i, status, ret)
+    }
+
+    /// Quiet variant of [`RpcRing::respond_fault`] (see
+    /// [`RpcRing::respond_quiet`] for the flush contract).
+    pub fn respond_fault_quiet(
+        &self,
+        i: usize,
+        status: u32,
+        ret: u64,
+        aux_lo: u64,
+        aux_hi: u64,
+    ) -> bool {
+        let s = self.slot(i);
+        s.arg.store(aux_lo, Ordering::Relaxed);
+        s.arg_len.store(aux_hi, Ordering::Relaxed);
+        self.respond_quiet(i, status, ret)
     }
 
     /// Client side: is the response ready?
@@ -767,6 +819,103 @@ mod tests {
         assert!(r.quiescent());
         assert_eq!(r.claimed(), 4);
         assert_eq!(r.taken(), 4);
+    }
+
+    /// Batched replies at the ring level: k quiet responds, one
+    /// flush — every caller consumes exactly its own reply, and the
+    /// charged doorbell accounting drops from k signals to one.
+    #[test]
+    fn quiet_respond_then_flush_answers_whole_sweep() {
+        let (_p, _h, r) = ring();
+        let slots: Vec<usize> = (0..4).map(|_| r.claim().unwrap()).collect();
+        for (k, &i) in slots.iter().enumerate() {
+            r.publish_quiet(i, k as u32, 0, NO_SEAL, 0, 0);
+        }
+        r.flush_publish();
+        let charged_before = r.charger.total_charged_ns();
+        let mut taken = Vec::new();
+        for _ in 0..slots.len() {
+            let j = r.take_request().unwrap();
+            let f = r.slot(j).func.load(Ordering::Relaxed);
+            assert!(!r.respond_quiet(j, ST_OK, f as u64 + 5), "no tombstones here");
+            taken.push(j);
+        }
+        r.flush_respond();
+        let charged = r.charger.total_charged_ns() - charged_before;
+        assert_eq!(
+            charged,
+            r.signal_ns,
+            "4 quiet responds + 1 flush must charge exactly one doorbell signal"
+        );
+        for (k, &i) in slots.iter().enumerate() {
+            assert!(r.response_ready(i), "quiet RESPONSE store must be visible pre-flush");
+            let (st, ret) = r.consume(i);
+            assert_eq!((st, ret), (ST_OK, k as u64 + 5), "sweep member {k} cross-wired");
+        }
+        assert!(r.quiescent());
+    }
+
+    /// The abandon race is arbitration-identical under quiet responds:
+    /// whichever of {abandoning caller, quiet respond} wins the
+    /// tombstone swap retires the lap exactly once, and a wholly
+    /// quiet sweep still recycles every abandoned slot.
+    #[test]
+    fn quiet_respond_retires_abandoned_laps() {
+        let (_p, _h, r) = ring();
+        for k in 0..24u32 {
+            let i = r.claim().unwrap_or_else(|| panic!("ring wedged at call {k}"));
+            r.publish(i, k, 0, NO_SEAL, 0, 0);
+            assert!(r.abandon(i).is_none(), "no response landed yet");
+            let j = r.take_request().expect("abandoned request still served");
+            assert!(r.respond_quiet(j, ST_OK, 0), "quiet respond must retire the abandoned lap");
+        }
+        r.flush_respond();
+        assert!(r.quiescent(), "quiet responses retired every abandoned lap");
+        assert!(r.claim().is_some(), "ring still cycles after a fully-quiet abandon storm");
+    }
+
+    /// A parked waiter must wake from the sweep's single coalesced
+    /// flush, not from per-reply rings that no longer happen.
+    #[test]
+    fn parked_waiter_wakes_on_flush_respond() {
+        use crate::channel::waiter::{wait_on, SleepPolicy, WaitOutcome};
+        let (_p, h, _unused) = ring();
+        let r = Arc::new(RpcRing::create(&h, 4).unwrap());
+        let i = r.claim().unwrap();
+        r.publish(i, 1, 0, NO_SEAL, 0, 0);
+        let server = Arc::clone(&r);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let j = server.take_request().unwrap();
+            server.respond_quiet(j, ST_OK, 9);
+            server.flush_respond();
+        });
+        let out = wait_on(
+            SleepPolicy::Park,
+            std::time::Duration::from_secs(5),
+            None,
+            Some(r.resp_bell()),
+            || r.response_ready(i),
+        );
+        assert_eq!(out, WaitOutcome::Ready, "flush_respond must wake the parked waiter");
+        assert_eq!(r.consume(i), (ST_OK, 9));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn quiet_fault_detail_roundtrip() {
+        let (_p, _h, r) = ring();
+        let i = r.claim().unwrap();
+        r.publish(i, 9, 0, NO_SEAL, 0xF00, 8);
+        let j = r.take_request().unwrap();
+        r.respond_fault_quiet(j, ST_SANDBOX_VIOLATION, 0xBAD, 0x1000, 0x2000);
+        r.flush_respond();
+        let (st, ret, lo, hi) = r.consume_detail(i);
+        assert_eq!(
+            status_to_error(st, 9, ret, lo, hi),
+            RpcError::SandboxViolation { addr: 0xBAD, lo: 0x1000, hi: 0x2000 },
+            "fault detail must survive the quiet reply path"
+        );
     }
 
     #[test]

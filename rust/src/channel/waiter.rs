@@ -90,6 +90,17 @@ pub const PARK_SLICE_US: u64 = 1_000;
 /// `seen`. Any ring between the snapshot and the wait advances the
 /// epoch, so the wait returns immediately instead of missing the
 /// event. `ring()` with no armed waiter is a single atomic load.
+///
+/// **Coalesced epochs** are the protocol's normal case, not an edge:
+/// one ring may cover many completions (the drain-k server's
+/// `flush_respond` answers a whole sweep with one signal), and one
+/// epoch bump wakes *every* parked waiter (`notify_all`). Each waiter
+/// re-scans its own ready condition on every wake and — still not
+/// ready — re-parks against a *fresh* epoch snapshot, never the stale
+/// one. A waiter whose completion was not in the flushed batch
+/// therefore cannot be lost: its own completion is covered by a later
+/// flush, which bumps the epoch past whatever snapshot the waiter
+/// last took (see DESIGN.md §9 for the full argument).
 pub struct Doorbell {
     gen: AtomicU64,
     /// Threads currently inside a park-capable wait section.
@@ -497,6 +508,73 @@ mod tests {
             }
             producer.join().unwrap();
             ok && produced.load(Ordering::Acquire) == STEPS
+        });
+    }
+
+    /// Coalesced response epochs (the drain-k server's shape): N
+    /// waiters park on ONE bell; the producer completes them in
+    /// random batches with a single ring per batch. Every waiter must
+    /// come back Ready — one bump wakes all, each re-scans its own
+    /// slot, the not-yet-served re-park against a fresh epoch and are
+    /// woken by a later batch's single ring. A lost wakeup would
+    /// surface as a full 5 s wait (the sliced production park would
+    /// mask it at 1 ms, so the property uses raw wait_on semantics
+    /// with a deadline assertion instead).
+    #[test]
+    fn prop_coalesced_ring_wakes_every_waiter() {
+        use crate::util::prop::{forall, U64Range};
+        use crate::util::rng::Rng;
+        forall("doorbell-coalesced-epochs", prop_seed(), 8, &U64Range(0, u64::MAX / 2), |&salt| {
+            const WAITERS: u64 = 4;
+            const ROUNDS: u64 = 8; // each waiter completes once per round
+            let bell = Doorbell::new_arc();
+            let done = Arc::new((0..WAITERS).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
+            let (b2, d2) = (Arc::clone(&bell), Arc::clone(&done));
+            let producer = std::thread::spawn(move || {
+                let mut rng = Rng::new(salt ^ 0xC0A1E5CE);
+                for round in 1..=ROUNDS {
+                    // Serve the round in 1..=WAITERS random batches,
+                    // one coalesced ring per batch (never per waiter).
+                    let mut order: Vec<usize> = (0..WAITERS as usize).collect();
+                    for i in (1..order.len()).rev() {
+                        order.swap(i, rng.next_below(i as u64 + 1) as usize);
+                    }
+                    let mut served = 0usize;
+                    while served < order.len() {
+                        let batch = 1 + rng.next_below((order.len() - served) as u64) as usize;
+                        std::thread::sleep(Duration::from_micros(rng.next_below(300)));
+                        for &w in &order[served..served + batch] {
+                            d2[w].store(round, Ordering::Release);
+                        }
+                        b2.ring(); // ONE signal for the whole batch
+                        served += batch;
+                    }
+                }
+            });
+            let mut workers = Vec::new();
+            for w in 0..WAITERS as usize {
+                let bell = Arc::clone(&bell);
+                let done = Arc::clone(&done);
+                workers.push(std::thread::spawn(move || {
+                    let mut ok = true;
+                    for round in 1..=ROUNDS {
+                        let t0 = Instant::now();
+                        let out = wait_on(
+                            SleepPolicy::Park,
+                            Duration::from_secs(10),
+                            None,
+                            Some(&bell),
+                            || done[w].load(Ordering::Acquire) >= round,
+                        );
+                        ok &= out == WaitOutcome::Ready
+                            && t0.elapsed() < Duration::from_secs(5);
+                    }
+                    ok
+                }));
+            }
+            let ok = workers.into_iter().all(|t| t.join().unwrap());
+            producer.join().unwrap();
+            ok
         });
     }
 

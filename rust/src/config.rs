@@ -184,6 +184,14 @@ pub struct SimConfig {
     /// Default ring+arena shards per connection (power of two; the
     /// per-channel override is `ChannelBuilder::ring_shards`).
     pub ring_shards: usize,
+    /// Server drain budget: requests taken per shard per serving sweep
+    /// before the shard's coalesced response doorbell rings (1 =
+    /// pre-batching behaviour, one reply signal per RPC).
+    pub drain_k: usize,
+    /// Load-aware power-of-two-choices striping: callers pick the
+    /// less-loaded of their home shard and one probe shard instead of
+    /// always using the home shard (no-op on single-shard channels).
+    pub two_choice: bool,
     /// Enforce permissions on every shm access (tests) vs trust+charge (benches).
     pub enforce_protection: bool,
 }
@@ -208,6 +216,8 @@ impl Default for SimConfig {
             busywait_sleep_high_us: 150,
             rack_hosts: 32,
             ring_shards: 1,
+            drain_k: 16,
+            two_choice: true,
             enforce_protection: true,
         }
     }
@@ -325,6 +335,8 @@ impl SimConfig {
             "busywait_sleep_high_us" => self.busywait_sleep_high_us = pu64(value)?,
             "rack_hosts" => self.rack_hosts = pusize(value)?,
             "ring_shards" => self.ring_shards = pusize(value)?,
+            "drain_k" => self.drain_k = pusize(value)?,
+            "two_choice" => self.two_choice = value == "true" || value == "1",
             "enforce_protection" => self.enforce_protection = value == "true" || value == "1",
             other => return Err(RpcError::Config(format!("unknown key '{other}'"))),
         }
@@ -346,6 +358,8 @@ impl SimConfig {
         m.insert("heap_bytes", self.heap_bytes.to_string());
         m.insert("page_bytes", self.page_bytes.to_string());
         m.insert("ring_shards", self.ring_shards.to_string());
+        m.insert("drain_k", self.drain_k.to_string());
+        m.insert("two_choice", (self.two_choice as u8).to_string());
         m.insert(
             "charge",
             match self.charge {
@@ -379,6 +393,12 @@ mod tests {
         assert_eq!(cfg.charge, ChargePolicy::Skip);
         cfg.apply_kv("ring_shards", "4").unwrap();
         assert_eq!(cfg.ring_shards, 4);
+        cfg.apply_kv("drain_k", "8").unwrap();
+        assert_eq!(cfg.drain_k, 8);
+        cfg.apply_kv("two_choice", "false").unwrap();
+        assert!(!cfg.two_choice);
+        cfg.apply_kv("two_choice", "1").unwrap();
+        assert!(cfg.two_choice);
         assert!(cfg.apply_kv("nonsense", "1").is_err());
         assert!(cfg.apply_kv("cxl_load_ns", "abc").is_err());
     }

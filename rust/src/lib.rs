@@ -43,7 +43,7 @@ pub mod workloads;
 
 pub use channel::{
     CallArg, CallCtx, CallHandle, CallOpts, ChannelBuilder, ChannelOpts, Connection, Reply, Rpc,
-    RpcServer, Shard, TransportSel,
+    RpcServer, Shard, TransportSel, TypedCallHandle,
 };
 pub use rack::{ProcEnv, Rack};
 
