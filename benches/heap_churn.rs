@@ -1,0 +1,172 @@
+//! HEAP CHURN: multi-threaded clients hammering one heap's memory
+//! plane — the workload the memory-plane overhaul targets (ISSUE 5:
+//! thread-cached magazines, the O(1) page-granular seal index, and the
+//! lock-free scope pool; DESIGN.md §10). Not a paper figure; this is
+//! the repo's perf trajectory for the allocation/permission layer the
+//! CoolDB build phase and sealed multi-threaded workloads sit on.
+//!
+//! Layers (latency charging off throughout — like `ring/raw/*`, the
+//! *structural* cost is what is measured):
+//!
+//! * `alloc/fixed/t{1,4,8}` — `magazine_cap = 0`: every alloc/free
+//!   takes the heap's central mutex (the pre-overhaul path). Each row
+//!   carries `locks_per_alloc` (central-lock acquisitions ÷ alloc/free
+//!   ops — 1.0 by construction here).
+//! * `alloc/mag/t{1,4,8}` — the default magazine cap: the same churn
+//!   through per-thread size-class magazines. `locks_per_alloc` must
+//!   come in at or below 1/8 (CI's memory-plane invariant; the
+//!   steady-state expectation at cap 64 is ~2/64).
+//! * `check_write/{indexed,scan}/seals{0,1024}` — one write-permission
+//!   probe against a heap holding 0 vs 1024 live seals, through the
+//!   page-word index (`check_write`) and through the reference O(n)
+//!   scan (`check_write_scan`). Each row carries `check_write_ns`;
+//!   the indexed rows must not grow with the seal count (CI gate),
+//!   while the scan rows document exactly why the index exists.
+//! * `scope/pool/t{1,4}` — pop → seal → complete → push_sealed churn
+//!   through the lock-free `ScopePool` (batched release at the
+//!   default 1024 threshold), threads racing the Treiber free list
+//!   and the pending swap-drain.
+//!
+//! Run: `cargo bench --bench heap_churn [-- --quick]`
+
+use rpcool::benchkit::{fanout, time_op, BenchReport, Table};
+use rpcool::memory::heap::Heap;
+use rpcool::memory::pool::Pool;
+use rpcool::seal::{ScopePool, Sealer};
+use rpcool::util::rng::Rng;
+use rpcool::SimConfig;
+use std::sync::Arc;
+
+/// Threaded alloc/free churn; returns (ops/s, locks-per-op).
+fn alloc_churn(threads: u64, ops_per_thread: u64, magazine_cap: usize) -> (f64, f64) {
+    let cfg = SimConfig::for_tests();
+    let pool = Pool::new(&cfg).unwrap();
+    let heap = Heap::new_opts(&pool, "churn", 64 << 20, magazine_cap).unwrap();
+    let wall = fanout(threads as usize, |tid| {
+        let mut rng = Rng::new(0xC0FFEE ^ (tid as u64) << 13);
+        let mut held: Vec<usize> = Vec::with_capacity(8);
+        for _ in 0..ops_per_thread {
+            // Mixed small classes (the CoolDB build shape); hold a few
+            // so free order differs from alloc order.
+            let size = rng.range(16, 2049) as usize;
+            if let Ok(a) = heap.alloc_bytes(size) {
+                held.push(a);
+            }
+            if held.len() >= 8 {
+                // Free oldest-first: worst case for a bump-style
+                // cache, honest for a free list.
+                heap.free_bytes(held.remove(0));
+            }
+        }
+        for a in held.drain(..) {
+            heap.free_bytes(a);
+        }
+    });
+    let total_ops = heap.alloc_ops() as f64;
+    let locks_per_op = heap.central_locks() as f64 / total_ops.max(1.0);
+    (total_ops / wall.as_secs_f64(), locks_per_op)
+}
+
+/// Mean ns of one `check_write` probe with `nseals` live seals, via
+/// the page-word index or the O(n) reference scan.
+fn check_write_ns(nseals: usize, scan: bool, iters: usize) -> f64 {
+    let cfg = SimConfig::for_tests();
+    let pool = Pool::new(&cfg).unwrap();
+    let heap = Heap::new(&pool, "seals", 64 << 20).unwrap();
+    // One page per seal, sealed for proc 1; probes run as proc 2
+    // against a mix of sealed-by-other and unsealed pages (the common
+    // server-side shape: somebody else's seals are live, yours are
+    // not the one being checked).
+    let npages = (nseals + 16).next_power_of_two();
+    let region = heap.alloc_pages(npages).unwrap();
+    for i in 0..nseals {
+        heap.seal_range(region.base + i * 4096, 64, 1);
+    }
+    let mut rng = Rng::new(0x5EA1);
+    let addrs: Vec<usize> = (0..256)
+        .map(|_| region.base + rng.next_below(npages as u64) as usize * 4096 + 8)
+        .collect();
+    let mut k = 0usize;
+    let (mean, _hist) = time_op(iters / 10, iters, false, || {
+        let addr = addrs[k & 255];
+        k += 1;
+        let r = if scan {
+            heap.check_write_scan(addr, 8, 2)
+        } else {
+            heap.check_write(addr, 8, 2)
+        };
+        std::hint::black_box(r.is_ok());
+    });
+    for i in 0..nseals {
+        heap.unseal_range(region.base + i * 4096, 64, 1);
+    }
+    mean
+}
+
+/// Scope churn through the lock-free pool; returns ops/s.
+fn scope_churn(threads: u64, ops_per_thread: u64) -> f64 {
+    let cfg = SimConfig::for_tests();
+    let pool = Pool::new(&cfg).unwrap();
+    let heap = Heap::new(&pool, "scopes", 128 << 20).unwrap();
+    let sealer = Sealer::new(&cfg, Arc::clone(&heap), Arc::clone(&pool.charger)).unwrap();
+    let sp = ScopePool::new(
+        Arc::clone(&heap),
+        Arc::clone(&sealer),
+        4096,
+        cfg.batch_release_threshold,
+    );
+    let wall = fanout(threads as usize, |_tid| {
+        for _ in 0..ops_per_thread {
+            let scope = sp.pop().unwrap();
+            let h = sealer.seal(scope.base(), scope.len(), 1).unwrap();
+            sealer.complete(h.idx);
+            sp.push_sealed(scope, h).unwrap();
+        }
+    });
+    sp.flush().unwrap();
+    (threads * ops_per_thread) as f64 / wall.as_secs_f64()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let alloc_ops: u64 = if quick { 40_000 } else { 400_000 };
+    let probe_iters: usize = if quick { 200_000 } else { 2_000_000 };
+    let scope_ops: u64 = if quick { 10_000 } else { 100_000 };
+
+    let mut report = BenchReport::new("heap_churn");
+    let mut table = Table::new(&["config", "ops/s", "locks/alloc", "check_write ns"]);
+
+    for (label, cap) in [("fixed", 0usize), ("mag", rpcool::memory::heap::DEFAULT_MAGAZINE_CAP)] {
+        for threads in [1u64, 4, 8] {
+            let (ops, lpa) = alloc_churn(threads, alloc_ops, cap);
+            let row = format!("alloc/{label}/t{threads}");
+            table.row(&[row.clone(), format!("{ops:.0}"), format!("{lpa:.4}"), "-".into()]);
+            report.row(&row, 0.0, 0.0, 1e9 / ops.max(1.0), ops);
+            report.extra("locks_per_alloc", lpa);
+        }
+    }
+
+    for (label, scan) in [("indexed", false), ("scan", true)] {
+        for nseals in [0usize, 1024] {
+            // The scan at 1024 seals is O(n) per probe — trim iters so
+            // the bench stays quick while the row stays honest.
+            let iters = if scan && nseals > 0 { probe_iters / 50 } else { probe_iters };
+            let ns = check_write_ns(nseals, scan, iters.max(1000));
+            let row = format!("check_write/{label}/seals{nseals}");
+            table.row(&[row.clone(), "-".into(), "-".into(), format!("{ns:.1}")]);
+            report.row(&row, 0.0, 0.0, ns, 0.0);
+            report.extra("check_write_ns", ns);
+            report.extra("live_seals", nseals as f64);
+        }
+    }
+
+    for threads in [1u64, 4] {
+        let ops = scope_churn(threads, scope_ops);
+        let row = format!("scope/pool/t{threads}");
+        table.row(&[row.clone(), format!("{ops:.0}"), "-".into(), "-".into()]);
+        report.row(&row, 0.0, 0.0, 1e9 / ops.max(1.0), ops);
+    }
+
+    table.print("heap_churn — memory-plane structural costs (charging off)");
+    report.emit();
+}

@@ -22,6 +22,14 @@
 #     s4/t6 must be at most half the fixed-striping spread measured in
 #     the same run.
 #
+#  4. Memory-plane invariants (fresh heap_churn record): the
+#     magazine-path alloc rows must take the central heap lock on at
+#     most 1/8 of alloc/free ops (steady state at the default cap 64
+#     is ~2/64), and the indexed check_write row must not grow with
+#     the live seal count (seals1024 <= 3x seals0 + 100ns noise
+#     headroom — the O(n)-scan rows exist in the same record to show
+#     the contrast).
+#
 # Usage: check_bench.sh <fresh-json-dir> <repo-root>
 set -euo pipefail
 
@@ -99,6 +107,58 @@ else:
         ok = False
     else:
         print(f"striping invariant ok: two-choice spread {cs:.0f} <= fixed {fs:.0f} / 2")
+
+sys.exit(0 if ok else 1)
+EOF
+
+python3 - "$fresh_dir/BENCH_heap_churn.json" <<'EOF' || fail=1
+import json, sys
+
+MAG_ROWS = ("alloc/mag/t1", "alloc/mag/t4", "alloc/mag/t8")
+LOCKS_MAX = 1.0 / 8.0
+IDX_ROWS = ("check_write/indexed/seals0", "check_write/indexed/seals1024")
+
+rows = {r["label"]: r for r in json.load(open(sys.argv[1]))["rows"]}
+ok = True
+
+for label in MAG_ROWS:
+    row = rows.get(label)
+    if row is None:
+        print(f"::error::{label} row missing from fresh heap_churn record")
+        ok = False
+        continue
+    if "locks_per_alloc" not in row:
+        # A missing metric must fail loudly, not read as 0 locks.
+        print(f"::error::locks_per_alloc extra missing from {label} — gate would be vacuous")
+        ok = False
+    elif row["locks_per_alloc"] > LOCKS_MAX:
+        print(
+            f"::error::magazine invariant broken: {label} took the central heap lock on "
+            f"{row['locks_per_alloc']:.4f} of alloc/free ops (max {LOCKS_MAX:.4f}); the "
+            f"thread-cached refill/spill amortization is gone"
+        )
+        ok = False
+    else:
+        print(f"magazine invariant ok: {label} locks/alloc {row['locks_per_alloc']:.4f} <= {LOCKS_MAX:.4f}")
+
+i0, i1024 = (rows.get(l) for l in IDX_ROWS)
+if i0 is None or i1024 is None:
+    print(f"::error::indexed check_write rows {IDX_ROWS} missing from fresh record")
+    ok = False
+elif "check_write_ns" not in i0 or "check_write_ns" not in i1024:
+    print(f"::error::check_write_ns extra missing from {IDX_ROWS} — gate would be vacuous")
+    ok = False
+else:
+    n0, n1024 = i0["check_write_ns"], i1024["check_write_ns"]
+    if n1024 > 3.0 * n0 + 100.0:
+        print(
+            f"::error::seal-index invariant broken: check_write at 1024 live seals costs "
+            f"{n1024:.1f}ns vs {n0:.1f}ns at 0 — the cost must not grow with the seal count "
+            f"(did a scan sneak back onto the check path?)"
+        )
+        ok = False
+    else:
+        print(f"seal-index invariant ok: check_write {n1024:.1f}ns @1024 seals vs {n0:.1f}ns @0")
 
 sys.exit(0 if ok else 1)
 EOF

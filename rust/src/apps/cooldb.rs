@@ -236,9 +236,13 @@ impl CoolClient for RpcoolCool {
     /// exactly as in `put` (the build IS the serialization), but the
     /// descriptors ride `call_scalar_batch` — one publish doorbell
     /// per chunk instead of one per document, and the drain-k server
-    /// answers the chunk with coalesced reply doorbells. The secure
-    /// configuration keeps per-call seals (a seal's release is tied
-    /// to a single call's return), so it falls back to the loop.
+    /// answers the chunk with coalesced reply doorbells. The tree
+    /// build itself is the memory-plane hot path: every node comes
+    /// from the shared heap's thread-cached small-object magazines,
+    /// so concurrent builders don't serialize on the heap mutex
+    /// (`heap_churn`'s alloc rows measure exactly this shape). The
+    /// secure configuration keeps per-call seals (a seal's release is
+    /// tied to a single call's return), so it falls back to the loop.
     fn put_many(&self, docs: &[(String, Val)]) -> Result<()> {
         if self.secure {
             for (k, d) in docs {

@@ -82,6 +82,14 @@ pub trait KvClient: Send + Sync {
         }
         Ok(())
     }
+
+    /// Bulk GET, results in key order (`None` = miss). The default
+    /// loops one blocking RPC per key; transports with pipelined
+    /// replies (RPCool's `call_typed_async`) override it so a window
+    /// of GETs is in flight before the first reply is awaited.
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Vec<u8>>>> {
+        keys.iter().map(|k| self.get(k)).collect()
+    }
 }
 
 // ------------------------------------------------------------- RPCool
@@ -232,6 +240,52 @@ impl KvClient for RpcoolKv {
         }
         Ok(())
     }
+
+    /// Pipelined GET (the ROADMAP "batched/pipelined reads" item):
+    /// stage a window of keys in the scratch scope, issue every GET
+    /// through `call_typed_async` *before* the first wait, then
+    /// resolve the typed replies in order — the server's drain-k loop
+    /// answers the whole window with coalesced reply doorbells, so a
+    /// read-heavy phase stops paying one blocking round trip per key.
+    /// Windowed so the scratch scope bounds staging memory; the scope
+    /// resets only after the previous window fully completed (every
+    /// reply consumed ⇒ the server is done reading the staged keys).
+    fn get_many(&self, keys: &[String]) -> Result<Vec<Option<Vec<u8>>>> {
+        const WINDOW: usize = 16;
+        let scope = self.scratch.lock().unwrap();
+        let mut out = Vec::with_capacity(keys.len());
+        for window in keys.chunks(WINDOW) {
+            scope.reset();
+            let mut handles = Vec::with_capacity(window.len());
+            for key in window {
+                let k = ShmString::from_str(&*scope, key)?;
+                handles.push(self.conn.call_typed_async::<ShmString, ShmVec<u8>>(
+                    F_GET,
+                    &k,
+                    CallOpts::new(),
+                )?);
+            }
+            for h in handles {
+                let reply = h.wait()?;
+                match reply.opt()? {
+                    Some(val) => {
+                        let bytes = val.to_vec()?;
+                        // Server-allocated reply buffer: free it after
+                        // copying out, exactly as `get` does.
+                        let mut val = val;
+                        val.destroy(self.conn.heap().as_ref());
+                        reply.free();
+                        out.push(Some(bytes));
+                    }
+                    None => {
+                        reply.free();
+                        out.push(None);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
 }
 
 // ------------------------------------------------------- socket flavors
@@ -352,18 +406,37 @@ pub fn run_ycsb(
     }
     let load = t0.elapsed();
     let t1 = std::time::Instant::now();
+    // The read phase rides the pipelined path: consecutive READs
+    // accumulate and flush through `get_many` (one in-flight window
+    // instead of one blocking round trip per key). Any write flushes
+    // the pending reads first, so the observable read/write order is
+    // exactly the sequential schedule's.
+    const READ_WINDOW: usize = 16;
+    let mut reads: Vec<String> = Vec::with_capacity(READ_WINDOW);
     for _ in 0..nops {
         let spec = w.next_op();
         let key = Ycsb::key_name(spec.key);
         match spec.op {
             Op::Read => {
-                client.get(&key)?;
+                reads.push(key);
+                if reads.len() == READ_WINDOW {
+                    client.get_many(&reads)?;
+                    reads.clear();
+                }
             }
             Op::Update | Op::Insert => {
+                if !reads.is_empty() {
+                    client.get_many(&reads)?;
+                    reads.clear();
+                }
                 let v = w.value_for(100);
                 client.set(&key, &v)?;
             }
             Op::ReadModifyWrite => {
+                if !reads.is_empty() {
+                    client.get_many(&reads)?;
+                    reads.clear();
+                }
                 let mut v = client.get(&key)?.unwrap_or_default();
                 if v.is_empty() {
                     v = w.value_for(100);
@@ -373,6 +446,9 @@ pub fn run_ycsb(
             }
             Op::Scan { .. } => unreachable!(),
         }
+    }
+    if !reads.is_empty() {
+        client.get_many(&reads)?;
     }
     Ok((load, t1.elapsed()))
 }
@@ -442,6 +518,46 @@ mod tests {
         });
         assert_eq!(cache.len(), 40);
         assert!(kv.conn().shared.quiescent());
+        drop(kv);
+        server.stop();
+        for l in listeners {
+            l.join().unwrap();
+        }
+    }
+
+    /// The pipelined read path end to end, on a sharded channel with
+    /// two listener workers: hits and misses come back in key order,
+    /// the window boundary (17 keys > one window of 16) is exercised,
+    /// and the connection is fully recycled afterwards. The socket
+    /// transports' default per-key loop must agree on semantics.
+    #[test]
+    fn get_many_pipelines_reads_in_order() {
+        let mut cfg = SimConfig::for_tests();
+        cfg.ring_shards = 2;
+        let rack = Rack::new(cfg);
+        let env = rack.proc_env(0);
+        let cache = Cache::new(8);
+        let server = serve_rpcool(&env, "mc-getmany", Arc::clone(&cache)).unwrap();
+        let listeners = server.spawn_listeners(2);
+        let cenv = rack.proc_env(1);
+        let kv = RpcoolKv::connect(&cenv, "mc-getmany").unwrap();
+        cenv.run(|| {
+            for i in 0..12 {
+                kv.set(&format!("gk{i}"), format!("gv{i}").as_bytes()).unwrap();
+            }
+            // 17 keys: every third one a miss; spans two windows.
+            let keys: Vec<String> = (0..17).map(|i| format!("gk{i}")).collect();
+            let got = kv.get_many(&keys).unwrap();
+            assert_eq!(got.len(), 17);
+            for (i, v) in got.iter().enumerate() {
+                if i < 12 {
+                    assert_eq!(v.as_deref(), Some(format!("gv{i}").as_bytes()), "key gk{i}");
+                } else {
+                    assert_eq!(v.as_deref(), None, "gk{i} must miss");
+                }
+            }
+        });
+        assert!(kv.conn().shared.quiescent(), "pipelined window fully drained");
         drop(kv);
         server.stop();
         for l in listeners {

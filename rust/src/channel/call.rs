@@ -215,7 +215,8 @@ impl<'c, R: Pod> Reply<'c, R> {
     /// caller first, exactly as with any heap value). Provenance is
     /// resolved by the connection: replies the handler bump-allocated
     /// in the argument arena recycle lock-free, heap replies go back
-    /// through the heap free list.
+    /// through the heap's thread-cached free path (a magazine push —
+    /// the central heap mutex is involved only on a magazine spill).
     pub fn free(self) {
         if self.addr != 0 {
             self.conn.free_reply(self.addr);

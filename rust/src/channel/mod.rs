@@ -234,6 +234,10 @@ pub struct ChannelOpts {
     /// one probe shard; while it has calls in flight it stays pinned
     /// to its current shard (per-thread FIFO). No-op with one shard.
     pub two_choice: bool,
+    /// Per-heap override of the thread-magazine capacity for this
+    /// channel's heap(s) (`None` = config `magazine_cap`; `Some(0)` =
+    /// fixed always-lock allocation, the pre-overhaul path).
+    pub magazine_cap: Option<usize>,
 }
 
 impl ChannelOpts {
@@ -249,6 +253,7 @@ impl ChannelOpts {
             arg_arena_bytes: 256 << 10,
             drain_k: cfg.drain_k,
             two_choice: cfg.two_choice,
+            magazine_cap: None,
         }
     }
 }
@@ -341,6 +346,15 @@ impl ChannelBuilder {
     /// [`ChannelOpts::two_choice`]; default from the config).
     pub fn two_choice(mut self, on: bool) -> ChannelBuilder {
         self.opts.two_choice = on;
+        self
+    }
+
+    /// Thread-magazine capacity for this channel's heap(s): how many
+    /// free blocks per size class each thread caches in front of the
+    /// heap's central lock (`0` = fixed always-lock allocation).
+    /// Default from the config's `magazine_cap`.
+    pub fn magazine_cap(mut self, cap: usize) -> ChannelBuilder {
+        self.opts.magazine_cap = Some(cap);
         self
     }
 
@@ -476,21 +490,70 @@ pub struct Shard {
     /// full. Halved on each later first-try claim success, so a past
     /// congestion episode decays once the shard sees traffic again —
     /// while a wedged shard (held claims) stays penalized, which is
-    /// the point. The decay is traffic-driven on purpose: under light
-    /// load a once-congested shard can sit exiled (siblings' depth
-    /// never exceeds its stale counter), which merely consolidates
-    /// light traffic on fewer shards; under the loads where spreading
-    /// matters, sibling depth climbs past the stale counter, the
-    /// shard gets re-picked, the first claim succeeds, and decay
-    /// resumes. Only a claim success can distinguish "stale" from
-    /// "wedged", so decaying on any other signal would re-route
-    /// callers into a wedged shard's claim timeout.
+    /// the point. Traffic-driven decay alone had a blind spot: under
+    /// light load a once-congested shard could sit exiled forever
+    /// (siblings' depth never climbs past its stale counter, so it is
+    /// never re-picked and never gets the claim success that decays
+    /// it). A lazy **time-based** decay closes it: whenever the
+    /// two-choice pick examines a shard, the counter is halved once
+    /// per elapsed [`CLAIM_FAIL_DECAY`] window since the last recorded
+    /// fail/decay. A *wedged* shard still stays penalized in practice:
+    /// each re-pick that hits its full ring re-charges the counter
+    /// (and stamps the clock), so the penalty only drains while the
+    /// shard stops failing claims — exactly the "merely stale" case.
     pub claim_fails: AtomicU64,
+    /// Nanoseconds (on the connection's clock) of the last claim-fail
+    /// charge or time-decay sweep — the lazy-decay reference point.
+    fail_stamp_ns: AtomicU64,
 }
+
+/// Half-life window of the time-based `claim_fails` decay. Long
+/// relative to a claim timeout burst (so a shard that *just* trapped
+/// callers stays exiled while they reroute) but short relative to a
+/// workload's lifetime — a stale penalty drains in a few hundred ms
+/// even if the shard never sees the claim success that traffic-driven
+/// decay needs. The cost of decaying a *truly* wedged shard is
+/// bounded: one re-picked caller per half-life re-charges the counter
+/// (and re-stamps the clock) at its first failed claim.
+pub(crate) const CLAIM_FAIL_DECAY: Duration = Duration::from_millis(100);
 
 impl Shard {
     fn new(ring: RpcRing, arena: Option<ArgArena>) -> Shard {
-        Shard { ring, arena, depth: AtomicU64::new(0), claim_fails: AtomicU64::new(0) }
+        Shard {
+            ring,
+            arena,
+            depth: AtomicU64::new(0),
+            claim_fails: AtomicU64::new(0),
+            fail_stamp_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Charge one claim fail (ring found full) and stamp the clock so
+    /// time-based decay measures from the most recent congestion.
+    #[inline]
+    fn note_claim_fail(&self, now_ns: u64) {
+        self.claim_fails.fetch_add(1, Ordering::Relaxed);
+        self.fail_stamp_ns.store(now_ns, Ordering::Relaxed);
+    }
+
+    /// Lazy time-based decay: halve `claim_fails` once per elapsed
+    /// [`CLAIM_FAIL_DECAY`] window since the last fail/decay. Racy-
+    /// lossy like the success decay (a heuristic; lost updates
+    /// self-correct on the next sweep).
+    pub(crate) fn decay_claim_fails_by_time(&self, now_ns: u64) {
+        let f = self.claim_fails.load(Ordering::Relaxed);
+        if f == 0 {
+            return;
+        }
+        let last = self.fail_stamp_ns.load(Ordering::Relaxed);
+        let win = CLAIM_FAIL_DECAY.as_nanos() as u64;
+        let elapsed = now_ns.saturating_sub(last);
+        if elapsed < win {
+            return;
+        }
+        let halvings = (elapsed / win).min(63) as u32;
+        self.claim_fails.store(f >> halvings, Ordering::Relaxed);
+        self.fail_stamp_ns.store(now_ns, Ordering::Relaxed);
     }
 
     /// The two-choice load estimate: occupancy + recent contention.
@@ -523,6 +586,9 @@ pub struct ConnShared {
     pub server_proc: u32,
     /// RDMA-fallback page-ownership state (None ⇒ CXL connection).
     pub dsm: Option<Arc<DsmState>>,
+    /// Connection birth — the clock the shards' lazy claim-fail decay
+    /// measures against.
+    born: Instant,
     closed: AtomicBool,
     accepted: AtomicBool,
 }
@@ -530,6 +596,12 @@ pub struct ConnShared {
 impl ConnShared {
     pub fn closed(&self) -> bool {
         self.closed.load(Ordering::Acquire)
+    }
+
+    /// Nanoseconds since the connection was created (shard decay clock).
+    #[inline]
+    pub(crate) fn now_ns(&self) -> u64 {
+        self.born.elapsed().as_nanos() as u64
     }
 
     pub fn is_dsm(&self) -> bool {
@@ -1151,10 +1223,11 @@ impl Connection {
                     Arc::clone(h)
                 }
                 None => {
-                    let h = core.daemon.create_heap(
+                    let h = core.daemon.create_heap_opts(
                         &format!("{name}/shared"),
                         opts.heap_bytes,
                         core.env.proc,
+                        opts.magazine_cap,
                     )?;
                     core.daemon.map_heap(h.id, env.proc)?;
                     *sh = Some(Arc::clone(&h));
@@ -1163,10 +1236,11 @@ impl Connection {
             }
         } else {
             let id = core.next_conn_id.load(Ordering::Relaxed);
-            let h = core.daemon.create_heap(
+            let h = core.daemon.create_heap_opts(
                 &format!("{name}/conn{id}"),
                 opts.heap_bytes,
                 core.env.proc,
+                opts.magazine_cap,
             )?;
             core.daemon.map_heap(h.id, env.proc)?;
             h
@@ -1221,6 +1295,7 @@ impl Connection {
             client_proc: env.proc,
             server_proc: core.env.proc,
             dsm,
+            born: Instant::now(),
             closed: AtomicBool::new(false),
             accepted: AtomicBool::new(false),
         });
@@ -1394,6 +1469,12 @@ impl Connection {
                 ^ self.shared.id,
         );
         let probe = (home + 1 + (salt as usize % (n - 1))) & (n - 1);
+        // Lazy time-based decay on both candidates: a once-congested
+        // shard must not sit exiled behind a stale counter when light
+        // traffic never gives it the claim success that would decay it.
+        let now = self.shared.now_ns();
+        self.shared.shards[home].decay_claim_fails_by_time(now);
+        self.shared.shards[probe].decay_claim_fails_by_time(now);
         if self.shared.shards[probe].load_estimate() < self.shared.shards[home].load_estimate() {
             probe
         } else {
@@ -2168,7 +2249,7 @@ impl Connection {
             }
             None => {
                 if tracked {
-                    shard.claim_fails.fetch_add(1, Ordering::Relaxed);
+                    shard.note_claim_fail(self.shared.now_ns());
                 }
                 self.claim_slow(&shard.ring, timeout, inline)
             }
@@ -3370,6 +3451,75 @@ mod tests {
             // order (the wedged call 0 was never published, so it
             // never appears).
             assert_eq!(*order.lock().unwrap(), (1..=6).collect::<Vec<u64>>());
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// The lazy time-based claim-fail decay (ROADMAP open item): one
+    /// halving per elapsed window, nothing inside a window, stamp
+    /// advanced so repeated sweeps don't over-decay.
+    #[test]
+    fn claim_fail_decay_halves_per_elapsed_window() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "decay-unit");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "decay-unit").unwrap();
+        let sh = &conn.shared.shards[0];
+        let win = CLAIM_FAIL_DECAY.as_nanos() as u64;
+
+        sh.note_claim_fail(0);
+        sh.claim_fails.store(8, Ordering::Relaxed);
+        sh.decay_claim_fails_by_time(win / 2);
+        assert_eq!(sh.claim_fails.load(Ordering::Relaxed), 8, "inside the window: no decay");
+        sh.decay_claim_fails_by_time(3 * win + win / 2);
+        assert_eq!(sh.claim_fails.load(Ordering::Relaxed), 1, "three windows → three halvings");
+        // The stamp advanced: an immediate re-sweep must not decay again.
+        sh.decay_claim_fails_by_time(3 * win + win / 2 + 1);
+        assert_eq!(sh.claim_fails.load(Ordering::Relaxed), 1);
+        // A fresh fail re-stamps the clock, restarting the half-life.
+        sh.note_claim_fail(4 * win);
+        sh.decay_claim_fails_by_time(4 * win + win / 2);
+        assert_eq!(sh.claim_fails.load(Ordering::Relaxed), 2, "no decay inside the new window");
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// End to end: a once-congested shard decays back under *light*
+    /// traffic — routing alone (no claim success on the exiled shard)
+    /// clears the stale penalty after the half-life elapses. This was
+    /// the traffic-driven decay's blind spot.
+    #[test]
+    fn time_decay_reclaims_exiled_shard_under_light_traffic() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(2)
+            .two_choice(true)
+            .open(&env, "decay-reclaim")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "decay-reclaim").unwrap();
+        cenv.run(|| {
+            let (home, _) = conn.shared.shard_for_thread();
+            // A past congestion episode, stamped on the real clock.
+            conn.shared.shards[home].note_claim_fail(conn.shared.now_ns());
+            conn.shared.shards[home].claim_fails.store(8, Ordering::Relaxed);
+            std::thread::sleep(CLAIM_FAIL_DECAY * 3);
+            // One light-traffic routing decision is enough: the pick
+            // path lazily decays both candidates (no claim success on
+            // the home shard required).
+            let route = conn.route(1);
+            conn.unroute(&route);
+            assert!(
+                conn.shared.shards[home].claim_fails.load(Ordering::Relaxed) <= 2,
+                "stale penalty must drain by half-lives, got {}",
+                conn.shared.shards[home].claim_fails.load(Ordering::Relaxed)
+            );
         });
         drop(conn);
         server.stop();

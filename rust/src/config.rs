@@ -174,6 +174,13 @@ pub struct SimConfig {
     pub quota_bytes: usize,
     /// Batch-release threshold (paper: 1024).
     pub batch_release_threshold: usize,
+    /// Per-(thread × size-class) heap magazine capacity: the
+    /// thread-cached allocation layer in front of every heap's central
+    /// free lists (one central-lock refill buys `cap / 2` blocks).
+    /// `0` = fixed path — every alloc/free takes the central mutex,
+    /// exactly the pre-overhaul allocator. Per-channel override:
+    /// `ChannelBuilder::magazine_cap`.
+    pub magazine_cap: usize,
     /// Busy-wait adaptive-sleep thresholds (paper §5.8).
     pub busywait_load_mid: f64,
     pub busywait_load_high: f64,
@@ -210,6 +217,7 @@ impl Default for SimConfig {
             lease_renew_ms: 50,
             quota_bytes: 256 << 20,
             batch_release_threshold: 1024,
+            magazine_cap: crate::memory::heap::DEFAULT_MAGAZINE_CAP,
             busywait_load_mid: 0.25,
             busywait_load_high: 0.50,
             busywait_sleep_mid_us: 5,
@@ -329,6 +337,7 @@ impl SimConfig {
             "lease_renew_ms" => self.lease_renew_ms = pu64(value)?,
             "quota_bytes" => self.quota_bytes = pusize(value)?,
             "batch_release_threshold" => self.batch_release_threshold = pusize(value)?,
+            "magazine_cap" => self.magazine_cap = pusize(value)?,
             "busywait_load_mid" => self.busywait_load_mid = pf64(value)?,
             "busywait_load_high" => self.busywait_load_high = pf64(value)?,
             "busywait_sleep_mid_us" => self.busywait_sleep_mid_us = pu64(value)?,
@@ -359,6 +368,7 @@ impl SimConfig {
         m.insert("page_bytes", self.page_bytes.to_string());
         m.insert("ring_shards", self.ring_shards.to_string());
         m.insert("drain_k", self.drain_k.to_string());
+        m.insert("magazine_cap", self.magazine_cap.to_string());
         m.insert("two_choice", (self.two_choice as u8).to_string());
         m.insert(
             "charge",
@@ -395,6 +405,10 @@ mod tests {
         assert_eq!(cfg.ring_shards, 4);
         cfg.apply_kv("drain_k", "8").unwrap();
         assert_eq!(cfg.drain_k, 8);
+        cfg.apply_kv("magazine_cap", "0").unwrap();
+        assert_eq!(cfg.magazine_cap, 0, "0 = fixed (always-lock) allocation path");
+        cfg.apply_kv("magazine_cap", "128").unwrap();
+        assert_eq!(cfg.magazine_cap, 128);
         cfg.apply_kv("two_choice", "false").unwrap();
         assert!(!cfg.two_choice);
         cfg.apply_kv("two_choice", "1").unwrap();

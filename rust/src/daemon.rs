@@ -59,7 +59,19 @@ impl Daemon {
 
     /// Create + map a fresh heap (server opening a channel).
     pub fn create_heap(&self, name: &str, bytes: usize, proc: ProcId) -> Result<Arc<Heap>> {
-        let (heap, lease) = self.orch.create_heap(name, bytes, proc)?;
+        self.create_heap_opts(name, bytes, proc, None)
+    }
+
+    /// [`Daemon::create_heap`] with a per-heap thread-magazine override
+    /// (channel builders pass `ChannelOpts::magazine_cap` through here).
+    pub fn create_heap_opts(
+        &self,
+        name: &str,
+        bytes: usize,
+        proc: ProcId,
+        magazine_cap: Option<usize>,
+    ) -> Result<Arc<Heap>> {
+        let (heap, lease) = self.orch.create_heap_opts(name, bytes, proc, magazine_cap)?;
         self.mappings
             .lock()
             .unwrap()

@@ -19,8 +19,10 @@
 //!   arguments and replies are bounded-lifetime (released when the
 //!   reply is dropped).
 //! * When the chunk is exhausted (deep pipelining, leaked replies),
-//!   `alloc` returns `None` and callers fall back to the heap — the
-//!   mutex is only ever hit on this spill path.
+//!   `alloc` returns `None` and callers fall back to the heap. Since
+//!   the memory-plane overhaul even that spill is usually lock-free:
+//!   small spills ride the heap's per-thread magazines, so the central
+//!   heap mutex is touched only ~2/`magazine_cap` of the time.
 //!
 //! The packed-word trick means alloc, release, and the
 //! reset-on-last-release are all lock-free and ABA-safe (the count

@@ -7,7 +7,10 @@
 //!
 //! Containers don't own an allocator reference (that would not be
 //! `Pod`); mutation methods take any `ShmAlloc` (heap or scope), like
-//! C++ polymorphic allocators.
+//! C++ polymorphic allocators. Growth against a heap rides the
+//! thread-cached small-object path (DESIGN.md §10), so concurrent
+//! structure builds — the CoolDB build phase is the canonical one —
+//! no longer serialize on the heap mutex.
 
 use crate::error::Result;
 use crate::memory::pod::Pod;

@@ -6,7 +6,8 @@
 //! scope is a dedicated run of pages with its own bump allocator:
 //! applications build an RPC's arguments entirely inside a scope and
 //! seal exactly that page range. `reset()` recycles the scope for the
-//! next request (scope pools batch this, see `seal::pool`).
+//! next request; `seal::ScopePool` batches seal release and recycles
+//! whole scopes through a lock-free free list (DESIGN.md §10).
 
 use crate::error::{Result, RpcError};
 use crate::memory::heap::Heap;

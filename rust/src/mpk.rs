@@ -18,6 +18,7 @@ use crate::config::SimConfig;
 use crate::error::{Result, RpcError};
 use crate::memory::pool::Charger;
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Key indices are small (hardware: 0..16).
@@ -45,9 +46,17 @@ struct KeyTableInner {
 }
 
 /// Process-level key table: which pages each key guards.
+///
+/// Key *allocation* is a lock-free bitmask claim (part of the
+/// memory-plane overhaul: sandbox setup races many threads on shared
+/// channels, and the free-key scan was the last mutex on that path);
+/// the region table behind it stays mutex-guarded — it is only read
+/// by diagnostics and the uncached reassign path.
 pub struct KeyTable {
     nkeys: usize,
     reserved: usize,
+    /// Bit `k` set ⇔ key `k` is free (reserved keys' bits stay clear).
+    free_keys: AtomicU64,
     inner: Mutex<KeyTableInner>,
     charger: Arc<Charger>,
     page_bytes: usize,
@@ -66,9 +75,15 @@ impl KeyTable {
         // regions, respectively").
         assigned[KEY_PRIVATE as usize] = Some(KeyRegion { lo: 0, hi: 0 });
         assigned[KEY_SHM as usize] = Some(KeyRegion { lo: 0, hi: 0 });
+        // Free mask covers keys [reserved, nkeys).
+        let mut mask = 0u64;
+        for k in cfg.mpk_reserved_keys..cfg.mpk_keys.min(64) {
+            mask |= 1 << k;
+        }
         KeyTable {
             nkeys: cfg.mpk_keys,
             reserved: cfg.mpk_reserved_keys,
+            free_keys: AtomicU64::new(mask),
             inner: Mutex::new(KeyTableInner { assigned, reassignments: 0 }),
             charger,
             page_bytes: cfg.page_bytes,
@@ -84,14 +99,26 @@ impl KeyTable {
     /// `pkey_mprotect`-class cost. Returns `NoKeysAvailable` when all
     /// 14 sandbox keys are in use — callers then *reuse* a key
     /// (`reassign`), which is the uncached-sandbox slow path.
+    ///
+    /// The claim itself is one CAS on the free-key bitmask — no lock;
+    /// the region record behind it is written under the mutex after
+    /// the key is already exclusively ours.
     pub fn assign(&self, region: KeyRegion) -> Result<Key> {
-        let mut inner = self.inner.lock().unwrap();
-        let key = inner.assigned[self.reserved..]
-            .iter()
-            .position(|a| a.is_none())
-            .map(|i| i + self.reserved)
-            .ok_or(RpcError::NoKeysAvailable)?;
-        inner.assigned[key] = Some(region);
+        let key = loop {
+            let m = self.free_keys.load(Ordering::Relaxed);
+            if m == 0 {
+                return Err(RpcError::NoKeysAvailable);
+            }
+            let k = m.trailing_zeros() as usize;
+            if self
+                .free_keys
+                .compare_exchange_weak(m, m & !(1 << k), Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                break k;
+            }
+        };
+        self.inner.lock().unwrap().assigned[key] = Some(region);
         self.charge_assign(region);
         Ok(key as Key)
     }
@@ -113,12 +140,16 @@ impl KeyTable {
     }
 
     pub fn free(&self, key: Key) {
-        if (key as usize) < self.reserved {
+        if (key as usize) < self.reserved || (key as usize) >= self.nkeys.min(64) {
             return; // reserved keys are never freed
         }
         let mut inner = self.inner.lock().unwrap();
         if let Some(slot) = inner.assigned.get_mut(key as usize) {
-            *slot = None;
+            if slot.take().is_some() {
+                // Publish the key back only if it was actually held —
+                // a double free must not mint a second owner.
+                self.free_keys.fetch_or(1 << key, Ordering::AcqRel);
+            }
         }
     }
 
@@ -234,6 +265,57 @@ mod tests {
         let delta = charger.total_charged_ns() - before;
         assert!(delta >= CostModel::default().key_assign_base_ns);
         assert_eq!(t.region_of(k), Some(KeyRegion { lo: 0, hi: 64 * 4096 }));
+    }
+
+    #[test]
+    fn concurrent_assign_never_double_grants() {
+        let cfg = SimConfig::for_tests();
+        let charger = Arc::new(Charger::new(CostModel::default(), ChargePolicy::Skip));
+        let t = Arc::new(KeyTable::new(&cfg, charger));
+        let held = Arc::new(std::sync::Mutex::new(std::collections::HashSet::<Key>::new()));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let t = Arc::clone(&t);
+                let held = Arc::clone(&held);
+                s.spawn(move || {
+                    for i in 0..500usize {
+                        match t.assign(KeyRegion { lo: 0, hi: 4096 }) {
+                            Ok(k) => {
+                                assert!(
+                                    held.lock().unwrap().insert(k),
+                                    "key {k} granted to two holders at once"
+                                );
+                                if i % 3 != 0 {
+                                    // Guarded: the exhaustion branch of
+                                    // another thread may have freed (and
+                                    // a third thread re-acquired) k —
+                                    // free only if we still own it.
+                                    if held.lock().unwrap().remove(&k) {
+                                        t.free(k);
+                                    }
+                                }
+                            }
+                            Err(RpcError::NoKeysAvailable) => {
+                                // Pool exhausted under contention: give
+                                // one back so progress resumes.
+                                let give = held.lock().unwrap().iter().next().copied();
+                                if let Some(k) = give {
+                                    if held.lock().unwrap().remove(&k) {
+                                        t.free(k);
+                                    }
+                                }
+                            }
+                            Err(e) => panic!("unexpected {e:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        let leftover: Vec<Key> = held.lock().unwrap().iter().copied().collect();
+        for k in leftover {
+            t.free(k);
+        }
+        assert_eq!(t.keys_in_use(), 2, "only the reserved keys remain");
     }
 
     #[test]

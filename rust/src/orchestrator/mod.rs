@@ -88,14 +88,29 @@ impl Orchestrator {
 
     // ---------------- heaps ----------------
 
-    /// Create a heap at a cluster-unique address and lease it to `proc`.
+    /// Create a heap at a cluster-unique address and lease it to
+    /// `proc`, with the configured thread-magazine capacity.
     pub fn create_heap(
         &self,
         name: &str,
         bytes: usize,
         proc: ProcId,
     ) -> Result<(Arc<Heap>, LeaseId)> {
-        let heap = Heap::new(&self.pool, name, bytes)?;
+        self.create_heap_opts(name, bytes, proc, None)
+    }
+
+    /// [`Orchestrator::create_heap`] with a per-heap magazine-capacity
+    /// override (`None` = the config's `magazine_cap`; `Some(0)` =
+    /// fixed always-lock allocation).
+    pub fn create_heap_opts(
+        &self,
+        name: &str,
+        bytes: usize,
+        proc: ProcId,
+        magazine_cap: Option<usize>,
+    ) -> Result<(Arc<Heap>, LeaseId)> {
+        let cap = magazine_cap.unwrap_or(self.cfg.magazine_cap);
+        let heap = Heap::new_opts(&self.pool, name, bytes, cap)?;
         let mut inner = self.inner.lock().unwrap();
         inner.quotas.charge(proc, heap.id, heap.len())?;
         let lease = inner.leases.grant(heap.id, proc, Instant::now());

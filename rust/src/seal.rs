@@ -23,8 +23,9 @@ use crate::error::{Result, RpcError};
 use crate::memory::heap::{Heap, ProcId};
 use crate::memory::pool::Charger;
 use crate::memory::scope::Scope;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Descriptor states (stored in shared memory).
 pub const DESC_FREE: u32 = 0;
@@ -209,19 +210,121 @@ pub struct PooledScope {
     pub scope: Scope,
 }
 
+// ---- lock-free plumbing for the pool ----
+
+/// Low 48 bits of a stack head word hold the node pointer; the top 16
+/// are a monotonically bumped ABA tag (user-space addresses fit 48
+/// bits on the Linux/x86-64 class machines this simulation targets).
+const STACK_PTR: u64 = (1 << 48) - 1;
+
+#[inline]
+fn stack_word(tag_src: u64, ptr: u64) -> u64 {
+    debug_assert_eq!(ptr & !STACK_PTR, 0, "node pointer above 2^48");
+    ((tag_src >> 48).wrapping_add(1) << 48) | ptr
+}
+
+/// One pool node. Nodes are heap-boxed once and **never deallocated
+/// while the pool lives** (popped nodes park on the spare stack for
+/// reuse) — that is what makes the Treiber `pop`'s read of a possibly
+/// already-popped node's `next` safe: the memory stays valid, and the
+/// tag CAS rejects any stale read (the classic ABA defence).
+struct PoolNode {
+    /// `Some` exactly while the node sits on `free`/`pending`; the
+    /// handle is `Some` only for pending (sealed) scopes. Exclusive
+    /// access alternates owner via the stacks' AcqRel CASes.
+    item: UnsafeCell<Option<(Scope, Option<SealHandle>)>>,
+    /// Untagged address of the next node down-stack (0 = end).
+    next: AtomicU64,
+}
+
+/// Tagged Treiber stack of [`PoolNode`]s.
+struct TaggedStack {
+    head: AtomicU64,
+}
+
+impl TaggedStack {
+    const fn new() -> TaggedStack {
+        TaggedStack { head: AtomicU64::new(0) }
+    }
+
+    fn push(&self, node: *mut PoolNode) {
+        let naddr = node as u64;
+        let mut cur = self.head.load(Ordering::Relaxed);
+        loop {
+            unsafe { (*node).next.store(cur & STACK_PTR, Ordering::Relaxed) };
+            match self.head.compare_exchange_weak(
+                cur,
+                stack_word(cur, naddr),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    fn pop(&self) -> Option<*mut PoolNode> {
+        let mut cur = self.head.load(Ordering::Acquire);
+        loop {
+            let ptr = (cur & STACK_PTR) as *mut PoolNode;
+            if ptr.is_null() {
+                return None;
+            }
+            // Node memory is never freed while the pool lives, so
+            // this read is valid even if `ptr` was popped concurrently;
+            // the tagged CAS below fails on any interleaving that
+            // could have made the value stale.
+            let next = unsafe { (*ptr).next.load(Ordering::Relaxed) };
+            match self.head.compare_exchange_weak(
+                cur,
+                stack_word(cur, next),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(ptr),
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
 /// Scope pool with batched seal release (paper §5.3): pop a scope,
 /// build arguments, send sealed; on completion hand the scope back
 /// with its seal handle — the pool releases seals in batches, and only
 /// then do scopes become reusable.
+///
+/// **Lock-free** since the memory-plane overhaul: the free list is a
+/// tagged Treiber stack, the pending set is a push-only list drained
+/// whole by an atomic `swap` (drain-by-swap has no ABA window, and it
+/// hands each pending scope to exactly one flusher — the
+/// exactly-once-release property the stress suite pins), and the
+/// threshold trigger is a plain atomic counter. Seal/release *costs*
+/// and the COMPLETE-gated batched-release protocol are unchanged.
 pub struct ScopePool {
     heap: Arc<Heap>,
     sealer: Arc<Sealer>,
     scope_bytes: usize,
     threshold: usize,
-    free: Mutex<Vec<Scope>>,
-    pending: Mutex<Vec<(Scope, SealHandle)>>,
+    /// Reusable scopes (each node's item = `Some((scope, None))`).
+    free: TaggedStack,
+    /// Empty nodes awaiting reuse — the no-deallocation store backing
+    /// the ABA argument above.
+    spare: TaggedStack,
+    /// Untagged head of the push-only pending list (tags are not
+    /// needed: pushes link to whatever head they observed, and the
+    /// only pop is `swap(0)`).
+    pending: AtomicU64,
+    pending_n: AtomicUsize,
     flushes: AtomicU64,
 }
+
+// Scopes migrate between threads through the node store; they are
+// Send+Sync by construction (Arc<Heap> + segment + atomic bump).
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Scope>();
+};
 
 impl ScopePool {
     pub fn new(
@@ -235,29 +338,71 @@ impl ScopePool {
             sealer,
             scope_bytes,
             threshold: threshold.max(1),
-            free: Mutex::new(Vec::new()),
-            pending: Mutex::new(Vec::new()),
+            free: TaggedStack::new(),
+            spare: TaggedStack::new(),
+            pending: AtomicU64::new(0),
+            pending_n: AtomicUsize::new(0),
             flushes: AtomicU64::new(0),
         })
     }
 
-    /// Pop a scope (allocating if the pool is dry).
+    /// A node to carry `item`: reuse a spare, box a fresh one if none.
+    fn node_with(&self, item: (Scope, Option<SealHandle>)) -> *mut PoolNode {
+        match self.spare.pop() {
+            Some(n) => {
+                unsafe { *(*n).item.get() = Some(item) };
+                n
+            }
+            None => Box::into_raw(Box::new(PoolNode {
+                item: UnsafeCell::new(Some(item)),
+                next: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// Take the item out of a node we exclusively own and park the
+    /// husk on the spare stack.
+    fn take_item(&self, n: *mut PoolNode) -> (Scope, Option<SealHandle>) {
+        let item = unsafe { (*(*n).item.get()).take().expect("pool node without item") };
+        self.spare.push(n);
+        item
+    }
+
+    /// Pop a scope (allocating if the pool is dry). Lock-free.
     pub fn pop(&self) -> Result<Scope> {
-        if let Some(s) = self.free.lock().unwrap().pop() {
-            return Ok(s);
+        if let Some(n) = self.free.pop() {
+            return Ok(self.take_item(n).0);
         }
         Scope::create(&self.heap, self.scope_bytes)
     }
 
     /// Return a scope whose seal is complete; released in a batch once
-    /// the threshold accumulates.
+    /// the threshold accumulates. Lock-free push; the thread whose
+    /// push crosses the threshold runs the flush.
     pub fn push_sealed(&self, scope: Scope, handle: SealHandle) -> Result<()> {
-        let flush = {
-            let mut pending = self.pending.lock().unwrap();
-            pending.push((scope, handle));
-            pending.len() >= self.threshold
-        };
-        if flush {
+        let node = self.node_with((scope, Some(handle)));
+        // Count BEFORE linking: flush only subtracts nodes it actually
+        // drained, and every drained node was counted first (the link
+        // CAS's release publishes the increment to the drainer's
+        // swap-acquire) — so the counter can never run negative. A
+        // counted-but-not-yet-linked node merely lets a concurrent
+        // flush trigger one push early.
+        let n = self.pending_n.fetch_add(1, Ordering::Relaxed) + 1;
+        let naddr = node as u64;
+        let mut cur = self.pending.load(Ordering::Relaxed);
+        loop {
+            unsafe { (*node).next.store(cur, Ordering::Relaxed) };
+            match self.pending.compare_exchange_weak(
+                cur,
+                naddr,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        if n >= self.threshold {
             self.flush()?;
         }
         Ok(())
@@ -266,33 +411,66 @@ impl ScopePool {
     /// Return an unsealed scope directly to the free list.
     pub fn push(&self, scope: Scope) {
         scope.reset();
-        self.free.lock().unwrap().push(scope);
+        let node = self.node_with((scope, None));
+        self.free.push(node);
     }
 
-    /// Release every pending seal in one batch.
+    /// Release every pending seal in one batch. The `swap` hands the
+    /// whole chain to exactly one caller, so concurrent
+    /// threshold-crossers each release a disjoint batch (never the
+    /// same seal twice — a double release would trip the
+    /// COMPLETE-gate as `ReleaseDenied`).
     pub fn flush(&self) -> Result<()> {
-        let drained: Vec<(Scope, SealHandle)> =
-            { self.pending.lock().unwrap().drain(..).collect() };
-        if drained.is_empty() {
+        let head = self.pending.swap(0, Ordering::AcqRel);
+        if head == 0 {
             return Ok(());
         }
+        let mut drained: Vec<(Scope, SealHandle)> = Vec::new();
+        let mut p = head as *mut PoolNode;
+        while !p.is_null() {
+            let next = unsafe { (*p).next.load(Ordering::Relaxed) } as *mut PoolNode;
+            let (scope, h) = self.take_item(p);
+            drained.push((scope, h.expect("pending scope without seal handle")));
+            p = next;
+        }
+        self.pending_n.fetch_sub(drained.len(), Ordering::Relaxed);
         let handles: Vec<SealHandle> = drained.iter().map(|(_, h)| *h).collect();
         self.sealer.release_batch(&handles)?;
         self.flushes.fetch_add(1, Ordering::Relaxed);
-        let mut free = self.free.lock().unwrap();
         for (scope, _) in drained {
             scope.reset();
-            free.push(scope);
+            self.free.push(self.node_with((scope, None)));
         }
         Ok(())
     }
 
     pub fn pending_len(&self) -> usize {
-        self.pending.lock().unwrap().len()
+        self.pending_n.load(Ordering::Relaxed)
     }
 
     pub fn flushes(&self) -> u64 {
         self.flushes.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ScopePool {
+    fn drop(&mut self) {
+        // Reclaim every node (scopes inside drop with them, returning
+        // their pages to the heap). Exclusive access: &mut self.
+        unsafe {
+            while let Some(n) = self.free.pop() {
+                drop(Box::from_raw(n));
+            }
+            let mut p = self.pending.swap(0, Ordering::AcqRel) as *mut PoolNode;
+            while !p.is_null() {
+                let next = (*p).next.load(Ordering::Relaxed) as *mut PoolNode;
+                drop(Box::from_raw(p));
+                p = next;
+            }
+            while let Some(n) = self.spare.pop() {
+                drop(Box::from_raw(n));
+            }
+        }
     }
 }
 
@@ -408,6 +586,51 @@ mod tests {
         pool.flush().unwrap();
         assert_eq!(pool.pending_len(), 0);
         assert_eq!(heap.sealed_count(), 0);
+    }
+
+    #[test]
+    fn scope_pool_pop_push_recycles_lock_free() {
+        let (_p, heap, sealer) = setup();
+        let pool = ScopePool::new(Arc::clone(&heap), Arc::clone(&sealer), 4096, 8);
+        let s1 = pool.pop().unwrap();
+        let base1 = s1.base();
+        pool.push(s1);
+        let s2 = pool.pop().unwrap();
+        assert_eq!(s2.base(), base1, "free stack recycles the scope");
+        pool.push(s2);
+        // Node husks recycle through the spare stack: a long pop/push
+        // run allocates exactly one scope.
+        let free0 = heap.free_page_bytes();
+        for _ in 0..1000 {
+            let s = pool.pop().unwrap();
+            pool.push(s);
+        }
+        assert_eq!(heap.free_page_bytes(), free0);
+    }
+
+    #[test]
+    fn scope_pool_concurrent_batched_release() {
+        let (_p, heap, sealer) = setup();
+        let pool = ScopePool::new(Arc::clone(&heap), Arc::clone(&sealer), 4096, 16);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let sealer = Arc::clone(&sealer);
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let scope = pool.pop().unwrap();
+                        let h = sealer.seal(scope.base(), scope.len(), 1).unwrap();
+                        sealer.complete(h.idx);
+                        // Any double-drain would release a seal twice
+                        // and trip the COMPLETE gate as ReleaseDenied.
+                        pool.push_sealed(scope, h).unwrap();
+                    }
+                });
+            }
+        });
+        pool.flush().unwrap();
+        assert_eq!(pool.pending_len(), 0);
+        assert_eq!(heap.sealed_count(), 0, "every seal released exactly once");
     }
 
     #[test]

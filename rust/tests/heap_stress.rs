@@ -1,0 +1,552 @@
+//! Seeded stress/property suite for the memory plane — the
+//! thread-cached allocator, the page-granular seal index, and the
+//! lock-free scope pool introduced by the memory-plane overhaul
+//! (DESIGN.md §10).
+//!
+//! Like `ring_stress.rs`, every test draws randomized schedules from
+//! `util::prop::forall`, seeded by the `PROP_SEED` env var (CI sweeps
+//! four seeds in debug and release); a failure prints the seed and the
+//! shrunk scenario for exact replay of every *generated* parameter.
+//!
+//! Invariants:
+//!
+//! * concurrent `alloc_bytes`/`free_bytes` never hand out overlapping
+//!   ranges (payload tags survive randomized hold windows), and the
+//!   books balance exactly — `live_allocs == 0`, `live_bytes == 0`,
+//!   and the heap reports empty once everything is freed — across
+//!   magazine capacities including the fixed path (`magazine_cap=0`);
+//! * `check_write` agrees with the O(#seals) scan oracle on every
+//!   probe, under randomized multi-proc seal/unseal churn;
+//! * a write check can never succeed against a stably-sealed page nor
+//!   fail against a stably-unsealed one, while a sealer races it;
+//! * magazine spill/refill keeps blocks intact when allocations are
+//!   freed by a *different* thread than allocated them (the
+//!   cross-thread magazine migration path);
+//! * the lock-free `ScopePool` releases every batched seal exactly
+//!   once under concurrent threshold-crossing pushers (a double drain
+//!   would release a seal twice and trip the COMPLETE gate as
+//!   `ReleaseDenied`).
+
+use rpcool::memory::heap::{Heap, ProcId};
+use rpcool::memory::pool::Pool;
+use rpcool::seal::{ScopePool, Sealer};
+use rpcool::util::prop::{forall, Gen};
+use rpcool::util::rng::Rng;
+use rpcool::SimConfig;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn prop_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x4EA9)
+}
+
+fn pool() -> Arc<Pool> {
+    Pool::new(&SimConfig::for_tests()).unwrap()
+}
+
+// ------------------------------------------------------------------
+// racing alloc/free: overlap freedom + exact accounting
+
+#[derive(Clone, Debug)]
+struct ChurnPlan {
+    threads: u64,
+    iters: u64,
+    /// Allocation sizes are drawn in [16, max_size] — spanning the
+    /// small classes and (≥ 4097) the large page path.
+    max_size: u64,
+    /// Live allocations each thread holds before draining the oldest.
+    hold: usize,
+    magazine_cap: usize,
+    salt: u64,
+}
+
+struct ChurnGen;
+impl Gen for ChurnGen {
+    type Value = ChurnPlan;
+    fn generate(&self, rng: &mut Rng) -> ChurnPlan {
+        ChurnPlan {
+            threads: rng.range(2, 5),
+            iters: rng.range(100, 500),
+            max_size: rng.range(64, 6000),
+            hold: rng.range(0, 8) as usize,
+            magazine_cap: [0usize, 4, 64][rng.range(0, 3) as usize],
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &ChurnPlan) -> Vec<ChurnPlan> {
+        let mut out = Vec::new();
+        if v.iters > 100 {
+            out.push(ChurnPlan { iters: v.iters / 2, ..v.clone() });
+        }
+        if v.threads > 2 {
+            out.push(ChurnPlan { threads: v.threads - 1, ..v.clone() });
+        }
+        if v.hold > 0 {
+            out.push(ChurnPlan { hold: 0, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_concurrent_alloc_free_exact_accounting() {
+    forall("heap-churn-accounting", prop_seed(), 16, &ChurnGen, |plan| {
+        let p = pool();
+        let h = Heap::new_opts(&p, "churn", 16 << 20, plan.magazine_cap).unwrap();
+        let ok = Arc::new(AtomicBool::new(true));
+        std::thread::scope(|s| {
+            for tid in 0..plan.threads {
+                let h = Arc::clone(&h);
+                let ok = Arc::clone(&ok);
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(plan.salt ^ tid.wrapping_mul(0x9E37_79B9));
+                    let mut held: Vec<(usize, usize, u64)> = Vec::new();
+                    let verify = |(addr, size, tag): (usize, usize, u64)| {
+                        let head = unsafe { std::ptr::read_unaligned(addr as *const u64) };
+                        let tail =
+                            unsafe { std::ptr::read_unaligned((addr + size - 8) as *const u64) };
+                        head == tag && tail == tag
+                    };
+                    for k in 0..plan.iters {
+                        let size = rng.range(16, plan.max_size + 1) as usize;
+                        match h.alloc_bytes(size) {
+                            Ok(addr) => {
+                                let tag = (tid << 48) | k;
+                                unsafe {
+                                    std::ptr::write_unaligned(addr as *mut u64, tag);
+                                    std::ptr::write_unaligned((addr + size - 8) as *mut u64, tag);
+                                }
+                                held.push((addr, size, tag));
+                            }
+                            Err(_) => {
+                                // OOM under pressure: drain and go on.
+                                if let Some(e) = held.pop() {
+                                    if !verify(e) {
+                                        ok.store(false, Ordering::Relaxed);
+                                    }
+                                    h.free_bytes(e.0);
+                                }
+                            }
+                        }
+                        while held.len() > plan.hold {
+                            let e = held.remove(0);
+                            if !verify(e) {
+                                ok.store(false, Ordering::Relaxed);
+                            }
+                            h.free_bytes(e.0);
+                        }
+                    }
+                    for e in held.drain(..) {
+                        if !verify(e) {
+                            ok.store(false, Ordering::Relaxed);
+                        }
+                        h.free_bytes(e.0);
+                    }
+                });
+            }
+        });
+        // Exact books: counts and bytes all the way to zero, and the
+        // occupancy view agrees (magazine caches are not occupancy).
+        ok.load(Ordering::Relaxed)
+            && h.live_allocs() == 0
+            && h.live_bytes() == 0
+            && h.is_empty()
+    });
+}
+
+// ------------------------------------------------------------------
+// seal index vs the O(n) scan oracle
+
+#[derive(Clone, Debug)]
+struct SealPlan {
+    ops: u64,
+    pages: usize,
+    procs: u64,
+    salt: u64,
+}
+
+struct SealGen;
+impl Gen for SealGen {
+    type Value = SealPlan;
+    fn generate(&self, rng: &mut Rng) -> SealPlan {
+        SealPlan {
+            ops: rng.range(20, 120),
+            pages: rng.range(2, 16) as usize,
+            procs: rng.range(1, 4),
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &SealPlan) -> Vec<SealPlan> {
+        let mut out = Vec::new();
+        if v.ops > 20 {
+            out.push(SealPlan { ops: v.ops / 2, ..v.clone() });
+        }
+        if v.procs > 1 {
+            out.push(SealPlan { procs: v.procs - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_check_write_matches_scan_oracle() {
+    forall("seal-index-vs-scan", prop_seed(), 32, &SealGen, |plan| {
+        let p = pool();
+        let h = Heap::new(&p, "seals", 8 << 20).unwrap();
+        let region = h.alloc_pages(plan.pages).unwrap();
+        let mut rng = Rng::new(plan.salt);
+        let mut live: Vec<(usize, usize, ProcId)> = Vec::new();
+        let mut ok = true;
+        for _ in 0..plan.ops {
+            if rng.range(0, 2) == 0 || live.is_empty() {
+                let start = region.base + rng.next_below(region.len as u64 - 64) as usize;
+                let len = rng.range(1, 3 * 4096) as usize;
+                let len = len.min(region.base + region.len - start);
+                let proc = rng.range(1, plan.procs + 1) as ProcId;
+                h.seal_range(start, len, proc);
+                live.push((start, len, proc));
+            } else {
+                let i = rng.next_below(live.len() as u64) as usize;
+                let (s, l, pr) = live.swap_remove(i);
+                h.unseal_range(s, l, pr);
+            }
+            for _ in 0..24 {
+                let addr = region.base + rng.next_below(region.len as u64 - 64) as usize;
+                let len = rng.range(1, 128) as usize;
+                let proc = rng.range(1, plan.procs + 2) as ProcId;
+                if h.check_write(addr, len, proc).is_ok()
+                    != h.check_write_scan(addr, len, proc).is_ok()
+                {
+                    ok = false;
+                }
+            }
+        }
+        for (s, l, pr) in live {
+            h.unseal_range(s, l, pr);
+        }
+        ok &= h.sealed_count() == 0;
+        // Fully unsealed again: every probe must pass.
+        for _ in 0..32 {
+            let addr = region.base + rng.next_below(region.len as u64 - 64) as usize;
+            ok &= h.check_write(addr, 8, rng.range(1, plan.procs + 2) as ProcId).is_ok();
+        }
+        h.free_pages(region);
+        ok
+    });
+}
+
+// ------------------------------------------------------------------
+// seal vs check_write under a racing sealer
+
+/// Sealer-side state the writers observe: a **monotonically
+/// increasing** packed word `cycle * 4 + phase`, with phase 0 =
+/// stably unsealed, 1/3 = transitioning, 2 = stably sealed. Phase 2
+/// is stored only *after* `seal_range` returns and left *before*
+/// `unseal_range` starts. Because the word never repeats, a probe
+/// that reads the SAME word before and after its check provably ran
+/// with no sealer store in between — so phase 2 means the check
+/// executed entirely inside a sealed window (and phase 0 entirely
+/// inside an unsealed one). Without the cycle counter a probe
+/// spanning a full seal/unseal cycle could observe the transient
+/// seal yet read "unsealed" on both sides — a false violation.
+const UNSEALED: u64 = 0;
+const SEALED: u64 = 2;
+
+#[derive(Clone, Debug)]
+struct RacePlan {
+    writers: u64,
+    cycles: u64,
+    probes_per_cycle: u64,
+    salt: u64,
+}
+
+struct RaceGen;
+impl Gen for RaceGen {
+    type Value = RacePlan;
+    fn generate(&self, rng: &mut Rng) -> RacePlan {
+        RacePlan {
+            writers: rng.range(1, 4),
+            cycles: rng.range(50, 300),
+            probes_per_cycle: rng.range(4, 32),
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &RacePlan) -> Vec<RacePlan> {
+        let mut out = Vec::new();
+        if v.cycles > 50 {
+            out.push(RacePlan { cycles: v.cycles / 2, ..v.clone() });
+        }
+        if v.writers > 1 {
+            out.push(RacePlan { writers: v.writers - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_write_never_succeeds_against_stably_sealed_page() {
+    forall("seal-vs-check-race", prop_seed(), 12, &RaceGen, |plan| {
+        let p = pool();
+        let h = Heap::new(&p, "race", 4 << 20).unwrap();
+        let region = h.alloc_pages(1).unwrap();
+        let state = Arc::new(std::sync::atomic::AtomicU64::new(UNSEALED));
+        let done = Arc::new(AtomicBool::new(false));
+        let ok = Arc::new(AtomicBool::new(true));
+        const PROC: ProcId = 7;
+        std::thread::scope(|s| {
+            {
+                let h = Arc::clone(&h);
+                let state = Arc::clone(&state);
+                let done = Arc::clone(&done);
+                s.spawn(move || {
+                    for cycle in 0..plan.cycles {
+                        state.store(cycle * 4 + 1, Ordering::SeqCst);
+                        h.seal_range(region.base, 64, PROC);
+                        state.store(cycle * 4 + SEALED, Ordering::SeqCst);
+                        std::hint::spin_loop();
+                        state.store(cycle * 4 + 3, Ordering::SeqCst);
+                        h.unseal_range(region.base, 64, PROC);
+                        state.store((cycle + 1) * 4 + UNSEALED, Ordering::SeqCst);
+                        std::hint::spin_loop();
+                    }
+                    done.store(true, Ordering::SeqCst);
+                });
+            }
+            for w in 0..plan.writers {
+                let h = Arc::clone(&h);
+                let state = Arc::clone(&state);
+                let done = Arc::clone(&done);
+                let ok = Arc::clone(&ok);
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(plan.salt ^ w);
+                    while !done.load(Ordering::SeqCst) {
+                        for _ in 0..plan.probes_per_cycle {
+                            let addr = region.base + rng.next_below(56) as usize;
+                            let before = state.load(Ordering::SeqCst);
+                            let allowed = h.check_write(addr, 8, PROC).is_ok();
+                            let after = state.load(Ordering::SeqCst);
+                            // The word never repeats, so before == after
+                            // pins the whole probe inside one phase.
+                            if before == after {
+                                if before % 4 == SEALED && allowed {
+                                    ok.store(false, Ordering::Relaxed); // wrote through a seal
+                                }
+                                if before % 4 == UNSEALED && !allowed {
+                                    ok.store(false, Ordering::Relaxed); // phantom seal
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        ok.load(Ordering::Relaxed) && h.sealed_count() == 0
+    });
+}
+
+// ------------------------------------------------------------------
+// magazine spill/refill consistency with cross-thread frees
+
+#[derive(Clone, Debug)]
+struct MigratePlan {
+    producers: u64,
+    items: u64,
+    magazine_cap: usize,
+    salt: u64,
+}
+
+struct MigrateGen;
+impl Gen for MigrateGen {
+    type Value = MigratePlan;
+    fn generate(&self, rng: &mut Rng) -> MigratePlan {
+        MigratePlan {
+            producers: rng.range(1, 4),
+            items: rng.range(200, 1200),
+            // Tiny caps force constant refill/spill traffic.
+            magazine_cap: [1usize, 2, 8, 64][rng.range(0, 4) as usize],
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &MigratePlan) -> Vec<MigratePlan> {
+        let mut out = Vec::new();
+        if v.items > 200 {
+            out.push(MigratePlan { items: v.items / 2, ..v.clone() });
+        }
+        if v.producers > 1 {
+            out.push(MigratePlan { producers: v.producers - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_magazine_spill_refill_with_cross_thread_frees() {
+    use std::sync::atomic::AtomicU64;
+    forall("magazine-migrate", prop_seed(), 12, &MigrateGen, |plan| {
+        let p = pool();
+        // 64 MiB: the worst-case backlog (every producer done, nothing
+        // consumed yet) must fit without tripping a spurious OOM.
+        let h = Heap::new_opts(&p, "mig", 64 << 20, plan.magazine_cap).unwrap();
+        // Producers allocate + tag; a consumer verifies + frees, so
+        // every block migrates to the consumer's magazine (and its
+        // spills) rather than back to the allocating thread's.
+        let queue: Arc<Mutex<Vec<(usize, usize, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let ok = Arc::new(AtomicBool::new(true));
+        let producers_left = Arc::new(AtomicU64::new(plan.producers));
+        std::thread::scope(|s| {
+            for t in 0..plan.producers {
+                let h = Arc::clone(&h);
+                let queue = Arc::clone(&queue);
+                let ok = Arc::clone(&ok);
+                let left = Arc::clone(&producers_left);
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(plan.salt ^ (t << 7));
+                    for k in 0..plan.items {
+                        let size = rng.range(16, 4097) as usize; // small classes only
+                        match h.alloc_bytes(size) {
+                            Ok(addr) => {
+                                let tag = (t << 40) | k;
+                                unsafe {
+                                    std::ptr::write_unaligned(addr as *mut u64, tag);
+                                    std::ptr::write_unaligned(
+                                        (addr + size - 8) as *mut u64,
+                                        tag,
+                                    );
+                                }
+                                queue.lock().unwrap().push((addr, size, tag));
+                            }
+                            Err(_) => ok.store(false, Ordering::Relaxed),
+                        }
+                    }
+                    left.fetch_sub(1, Ordering::Release);
+                });
+            }
+            {
+                let h = Arc::clone(&h);
+                let queue = Arc::clone(&queue);
+                let ok = Arc::clone(&ok);
+                let left = Arc::clone(&producers_left);
+                s.spawn(move || loop {
+                    let batch: Vec<(usize, usize, u64)> =
+                        { queue.lock().unwrap().drain(..).collect() };
+                    if batch.is_empty() {
+                        // Done once every producer finished AND the
+                        // queue is provably drained (re-checked under
+                        // the lock after observing the counter).
+                        if left.load(Ordering::Acquire) == 0 && queue.lock().unwrap().is_empty()
+                        {
+                            return;
+                        }
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    for (addr, size, tag) in batch {
+                        let head = unsafe { std::ptr::read_unaligned(addr as *const u64) };
+                        let tail =
+                            unsafe { std::ptr::read_unaligned((addr + size - 8) as *const u64) };
+                        if head != tag || tail != tag {
+                            ok.store(false, Ordering::Relaxed);
+                        }
+                        h.free_bytes(addr);
+                    }
+                });
+            }
+        });
+        // The consumer drained everything (its exit condition); the
+        // books must balance even though no block was freed by the
+        // thread that allocated it.
+        ok.load(Ordering::Relaxed)
+            && queue.lock().unwrap().is_empty()
+            && h.live_allocs() == 0
+            && h.live_bytes() == 0
+    });
+}
+
+// ------------------------------------------------------------------
+// lock-free ScopePool: batched release exactly once
+
+#[derive(Clone, Debug)]
+struct PoolPlan {
+    threads: u64,
+    per_thread: u64,
+    threshold: usize,
+    salt: u64,
+}
+
+struct PoolGen;
+impl Gen for PoolGen {
+    type Value = PoolPlan;
+    fn generate(&self, rng: &mut Rng) -> PoolPlan {
+        PoolPlan {
+            threads: rng.range(2, 5),
+            per_thread: rng.range(50, 400),
+            threshold: rng.range(1, 64) as usize,
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &PoolPlan) -> Vec<PoolPlan> {
+        let mut out = Vec::new();
+        if v.per_thread > 50 {
+            out.push(PoolPlan { per_thread: v.per_thread / 2, ..v.clone() });
+        }
+        if v.threads > 2 {
+            out.push(PoolPlan { threads: v.threads - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_scope_pool_batched_release_exactly_once() {
+    forall("scope-pool-exactly-once", prop_seed(), 12, &PoolGen, |plan| {
+        let cfg = SimConfig::for_tests();
+        let p = pool();
+        let h = Heap::new(&p, "pool", 64 << 20).unwrap();
+        let sealer = Sealer::new(&cfg, Arc::clone(&h), Arc::clone(&p.charger)).unwrap();
+        let sp = ScopePool::new(Arc::clone(&h), Arc::clone(&sealer), 4096, plan.threshold);
+        let ok = Arc::new(AtomicBool::new(true));
+        std::thread::scope(|s| {
+            for t in 0..plan.threads {
+                let sp = Arc::clone(&sp);
+                let sealer = Arc::clone(&sealer);
+                let ok = Arc::clone(&ok);
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(plan.salt ^ (t << 9));
+                    for _ in 0..plan.per_thread {
+                        let scope = match sp.pop() {
+                            Ok(sc) => sc,
+                            Err(_) => {
+                                ok.store(false, Ordering::Relaxed);
+                                return;
+                            }
+                        };
+                        let proc = rng.range(1, 4) as ProcId;
+                        let hdl = match sealer.seal(scope.base(), scope.len(), proc) {
+                            Ok(hd) => hd,
+                            Err(_) => {
+                                ok.store(false, Ordering::Relaxed);
+                                return;
+                            }
+                        };
+                        sealer.complete(hdl.idx);
+                        // A double-drained batch would release some
+                        // seal twice: second release sees DESC_FREE,
+                        // not COMPLETE ⇒ ReleaseDenied surfaces here.
+                        if sp.push_sealed(scope, hdl).is_err() {
+                            ok.store(false, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        if sp.flush().is_err() {
+            return false;
+        }
+        ok.load(Ordering::Relaxed) && sp.pending_len() == 0 && h.sealed_count() == 0
+    });
+}
