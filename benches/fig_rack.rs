@@ -1,0 +1,142 @@
+//! FIG rack: the cluster plane's latency cliff. One rack split into
+//! two CXL pods; the same typed no-op call site runs intra-pod
+//! (Auto → CXL, ~1.5µs) and cross-pod (Auto → RDMA/DSM, ~17µs), then
+//! across workload mixes of 0/25/50/100% cross-pod calls.
+//!
+//! The point of the figure: transport selection is transparent — the
+//! code is identical on both sides of the pod boundary, only the
+//! topology differs — and the cost of crossing it is the paper's
+//! CXL-vs-RDMA gap (§4.7: software coherence over RDMA beyond the
+//! pod), visible in the DSM fault/page counters exported per row.
+//!
+//! Run: `cargo bench --bench fig_rack` (add `-- --quick`).
+
+use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
+use rpcool::channel::{CallOpts, Connection, Rpc};
+use rpcool::memory::ShmPtr;
+use rpcool::{Rack, SimConfig};
+use std::cell::Cell;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 20_000 } else { 200_000 };
+
+    let mut cfg = SimConfig::for_bench();
+    cfg.pods = 2; // hosts 0..15 → pod 0, 16..31 → pod 1
+    let rack = Rack::new(cfg);
+    let mut table = Table::new(&["Mix", "RTT", "Throughput (K req/s)", "Transport"]);
+    let mut rep = BenchReport::new("fig_rack");
+
+    // One server in pod 0; both clients use the identical Auto-mode
+    // call site — the topology alone picks the fabric.
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "bench/rack").unwrap();
+    server.add(1, |_| Ok(0));
+
+    let ienv = rack.proc_env(1); // pod 0: CXL
+    let intra = Connection::connect(&ienv, "bench/rack").unwrap();
+    intra.attach_inline(&server);
+    assert!(!intra.shared.is_dsm(), "in-pod Auto must select CXL");
+
+    let xenv = rack.proc_env(16); // pod 1: RDMA/DSM
+    let cross = Connection::connect(&xenv, "bench/rack").unwrap();
+    cross.attach_inline(&server);
+    assert!(cross.shared.is_dsm(), "cross-pod Auto must select RDMA/DSM");
+    let dsm = cross.shared.dsm.as_ref().unwrap().clone();
+
+    // A realistic cross-pod call ships a small argument scope whose
+    // pages ping-pong between the pods (that IS the DSM cost) — the
+    // client re-touches the page after every call, as in table1a's
+    // RDMA row.
+    xenv.enter();
+    let xscope = cross.create_scope(4096).unwrap();
+    let xaddr = xscope.new_val(0u64).unwrap();
+    ienv.enter();
+    let iscope = intra.create_scope(4096).unwrap();
+    let iaddr = iscope.new_val(0u64).unwrap();
+
+    // The mix loop interleaves both clients on one thread: re-bind the
+    // right proc identity per call (a thread-local store, noise at
+    // µs-scale RTTs).
+    let cross_call = || {
+        xenv.enter();
+        cross.invoke(1, (xaddr, 8), CallOpts::new()).unwrap();
+        ShmPtr::<u64>::from_addr(xaddr).write(1).unwrap();
+    };
+    let intra_call = || {
+        ienv.enter();
+        intra.invoke(1, (iaddr, 8), CallOpts::new()).unwrap();
+    };
+
+    let mut intra_p50 = 0.0f64;
+    let mut cross_p50 = 0.0f64;
+    for &pct in &[0u64, 25, 50, 100] {
+        let label = match pct {
+            0 => "rack/intra",
+            100 => "rack/cross",
+            p if p == 25 => "rack/mix25",
+            _ => "rack/mix50",
+        };
+        // Cross-pod ops dominate the mean, so scale the op count down
+        // as the mix gets more expensive.
+        let ops = if pct == 0 { n } else { n / 10 };
+        let (f0, p0) = dsm.stats();
+        let c0 = dsm.charged_ns();
+        let i = Cell::new(0u64);
+        let op = || {
+            let k = i.get();
+            i.set(k + 1);
+            if (k % 100) < pct {
+                cross_call();
+            } else {
+                intra_call();
+            }
+        };
+        let (mean, _) = time_op(ops / 100 + 10, ops, false, &op);
+        let (_, hist) = time_op(0, ops / 10, true, &op);
+        let (f1, p1) = dsm.stats();
+        rep.row_hist(label, &hist, 1e9 / mean);
+        rep.extra("cross_pct", pct as f64);
+        rep.extra("dsm_faults", (f1 - f0) as f64);
+        rep.extra("dsm_pages_transferred", (p1 - p0) as f64);
+        rep.extra("dsm_charged_ns", (dsm.charged_ns() - c0) as f64);
+        if pct == 0 {
+            intra_p50 = hist.median_ns() as f64;
+        }
+        if pct == 100 {
+            cross_p50 = hist.median_ns() as f64;
+        }
+        table.row(&[
+            label.into(),
+            fmt_ns(mean),
+            format!("{:.2}", 1e6 / mean),
+            match pct {
+                0 => "CXL".into(),
+                100 => "RDMA/DSM".into(),
+                p => format!("CXL+{p}% RDMA"),
+            },
+        ]);
+    }
+
+    table.print(
+        "Fig rack — intra- vs cross-pod no-op RTT (paper: ~1.5µs CXL vs ~17µs RDMA; \
+         the mix rows walk the crossover)",
+    );
+    println!(
+        "[fig_rack] crossover: cross p50 {} vs intra p50 {} ({:.1}x)",
+        fmt_ns(cross_p50),
+        fmt_ns(intra_p50),
+        cross_p50 / intra_p50.max(1.0)
+    );
+    assert!(
+        cross_p50 >= 5.0 * intra_p50,
+        "cross-pod RTT must sit well above intra-pod (CXL vs RDMA gap)"
+    );
+
+    drop(iscope);
+    drop(xscope);
+    drop(intra);
+    drop(cross);
+    server.stop();
+    rep.emit();
+}

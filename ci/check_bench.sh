@@ -22,7 +22,14 @@
 #     s4/t6 must be at most half the fixed-striping spread measured in
 #     the same run.
 #
-#  4. Memory-plane invariants (fresh heap_churn record): the
+#  4. Cluster-plane invariants (fresh fig_rack record): cross-pod p50
+#     RTT must sit at least 5x above intra-pod (the pod boundary is
+#     the paper's CXL-vs-RDMA cliff); the intra-pod row must stay
+#     within 10% of the same run's table1a_noop RPCool row (pod
+#     awareness adds nothing to the in-pod fast path); DSM page
+#     transfers appear exactly on rows with a nonzero cross mix.
+#
+#  5. Memory-plane invariants (fresh heap_churn record): the
 #     magazine-path alloc rows must take the central heap lock on at
 #     most 1/8 of alloc/free ops (steady state at the default cap 64
 #     is ~2/64), and the indexed check_write row must not grow with
@@ -159,6 +166,67 @@ else:
         ok = False
     else:
         print(f"seal-index invariant ok: check_write {n1024:.1f}ns @1024 seals vs {n0:.1f}ns @0")
+
+sys.exit(0 if ok else 1)
+EOF
+
+python3 - "$fresh_dir/BENCH_fig_rack.json" "$fresh_dir/BENCH_table1a_noop.json" <<'EOF' || fail=1
+import json, sys
+
+INTRA, CROSS = "rack/intra", "rack/cross"
+CROSS_MIN_RATIO = 5.0       # the pod boundary IS the CXL-vs-RDMA cliff
+INTRA_TOL = 0.10            # intra-pod must be plain CXL, not a taxed path
+
+rows = {r["label"]: r for r in json.load(open(sys.argv[1]))["rows"]}
+noop = {r["label"]: r for r in json.load(open(sys.argv[2]))["rows"]}
+ok = True
+
+intra, cross = rows.get(INTRA), rows.get(CROSS)
+if intra is None or cross is None:
+    print(f"::error::{INTRA}/{CROSS} rows missing from fresh fig_rack record")
+    ok = False
+else:
+    ip50, cp50 = intra["p50_ns"], cross["p50_ns"]
+    if ip50 <= 0 or cp50 <= 0:
+        print("::error::fig_rack p50s are unmeasured — gate would be vacuous")
+        ok = False
+    elif cp50 < CROSS_MIN_RATIO * ip50:
+        print(
+            f"::error::pod-boundary invariant broken: cross-pod p50 {cp50:.0f}ns is under "
+            f"{CROSS_MIN_RATIO}x intra-pod {ip50:.0f}ns — the DSM path stopped paying its "
+            f"RDMA costs (or intra-pod stopped being CXL)"
+        )
+        ok = False
+    else:
+        print(f"pod-boundary invariant ok: cross p50 {cp50:.0f}ns >= {CROSS_MIN_RATIO}x intra {ip50:.0f}ns")
+    # Transparent selection must not tax the in-pod fast path: the
+    # intra row is the same no-op as table1a's RPCool CXL row.
+    base = noop.get("RPCool")
+    if base is None or base.get("p50_ns", 0) <= 0:
+        print("::error::table1a_noop RPCool row missing/unmeasured — intra-pod comparison vacuous")
+        ok = False
+    elif intra is not None:
+        ip50, b = intra["p50_ns"], base["p50_ns"]
+        if abs(ip50 - b) > INTRA_TOL * b:
+            print(
+                f"::error::intra-pod invariant broken: rack/intra p50 {ip50:.0f}ns deviates "
+                f">{INTRA_TOL:.0%} from table1a RPCool {b:.0f}ns — pod awareness leaked cost "
+                f"into the in-pod CXL path"
+            )
+            ok = False
+        else:
+            print(f"intra-pod invariant ok: rack/intra p50 {ip50:.0f}ns within {INTRA_TOL:.0%} of {b:.0f}ns")
+    # DSM accounting must be visible exactly where crossings happen.
+    for label, r in rows.items():
+        if "cross_pct" not in r or "dsm_pages_transferred" not in r:
+            print(f"::error::{label} missing cross_pct/dsm_pages_transferred extras — gate would be vacuous")
+            ok = False
+        elif (r["cross_pct"] > 0) != (r["dsm_pages_transferred"] > 0):
+            print(
+                f"::error::DSM accounting invariant broken on {label}: cross_pct "
+                f"{r['cross_pct']:.0f} but {r['dsm_pages_transferred']:.0f} pages transferred"
+            )
+            ok = False
 
 sys.exit(0 if ok else 1)
 EOF

@@ -98,6 +98,18 @@ pub trait DocClient: Send + Sync {
         }
         Ok(())
     }
+
+    /// Bulk FIND (YCSB's read-heavy shape). The default loops one
+    /// blocking RPC per key; RPCool pipelines a window of async reads
+    /// (memcached's `get_many` shape).
+    fn read_many(&self, keys: &[String]) -> Result<Vec<Option<Val>>> {
+        keys.iter().map(|k| self.read(k)).collect()
+    }
+
+    /// Bulk SCAN. Default loops; RPCool pipelines.
+    fn scan_many(&self, scans: &[(String, usize)]) -> Result<Vec<Vec<Val>>> {
+        scans.iter().map(|(s, n)| self.scan(s, *n)).collect()
+    }
 }
 
 // ------------------------------------------------------------- RPCool
@@ -292,6 +304,81 @@ impl DocClient for RpcoolDoc {
         }
         Ok(())
     }
+
+    /// Pipelined FIND (memcached's `get_many` shape): stage a window
+    /// of keys in the scratch scope, issue every FIND through
+    /// `call_typed_async` before the first wait, then resolve the
+    /// typed replies in order. The scope resets only between windows —
+    /// every reply of the previous window was consumed, so the server
+    /// is done reading the staged keys.
+    fn read_many(&self, keys: &[String]) -> Result<Vec<Option<Val>>> {
+        const WINDOW: usize = 16;
+        let scope = self.scratch.lock().unwrap();
+        let mut out = Vec::with_capacity(keys.len());
+        for window in keys.chunks(WINDOW) {
+            scope.reset();
+            let mut handles = Vec::with_capacity(window.len());
+            for key in window {
+                let k = ShmString::from_str(&*scope, key)?;
+                handles.push(self.conn.call_typed_async::<ShmString, ShmVal>(
+                    F_READ,
+                    &k,
+                    CallOpts::new(),
+                )?);
+            }
+            for h in handles {
+                let reply = h.wait()?;
+                match reply.opt()? {
+                    Some(mut shm) => {
+                        let doc = shm.to_host()?;
+                        shm.deep_free(self.conn.heap().as_ref())?;
+                        reply.free();
+                        out.push(Some(doc));
+                    }
+                    None => {
+                        reply.free();
+                        out.push(None);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Pipelined SCAN: same windowed shape as `read_many`, with a
+    /// smaller window because each reply is a whole row vector.
+    fn scan_many(&self, scans: &[(String, usize)]) -> Result<Vec<Vec<Val>>> {
+        const WINDOW: usize = 8;
+        let scope = self.scratch.lock().unwrap();
+        let mut out = Vec::with_capacity(scans.len());
+        for window in scans.chunks(WINDOW) {
+            scope.reset();
+            let mut handles = Vec::with_capacity(window.len());
+            for (start, len) in window {
+                let arg =
+                    ScanArg { start: ShmString::from_str(&*scope, start)?, len: *len as u64 };
+                handles.push(self.conn.call_typed_async::<ScanArg, ShmVec<ShmVal>>(
+                    F_SCAN,
+                    &arg,
+                    CallOpts::new(),
+                )?);
+            }
+            for h in handles {
+                let reply = h.wait()?;
+                let mut rows = reply.read()?;
+                let mut vals = Vec::with_capacity(rows.len());
+                for i in 0..rows.len() {
+                    let mut row = rows.get(i)?;
+                    vals.push(row.to_host()?);
+                    row.deep_free(self.conn.heap().as_ref())?;
+                }
+                rows.destroy(self.conn.heap().as_ref());
+                reply.free();
+                out.push(vals);
+            }
+        }
+        Ok(out)
+    }
 }
 
 // ------------------------------------------------------- socket flavors
@@ -455,29 +542,65 @@ pub fn run_ycsb(
     }
     let load = t0.elapsed();
     let t1 = std::time::Instant::now();
+    // Read-only ops accumulate and flush through the pipelined bulk
+    // paths (`read_many`/`scan_many`: one in-flight window instead of
+    // one blocking round trip per op). Any write flushes the pending
+    // reads first, so the observable read/write order is exactly the
+    // sequential schedule's.
+    const READ_WINDOW: usize = 16;
+    let mut reads: Vec<String> = Vec::with_capacity(READ_WINDOW);
+    let mut scans: Vec<(String, usize)> = Vec::with_capacity(READ_WINDOW);
     for opn in 0..nops {
         let spec = w.next_op();
         let key = Ycsb::key_name(spec.key);
         match spec.op {
             Op::Read => {
-                client.read(&key)?;
+                reads.push(key);
+                if reads.len() == READ_WINDOW {
+                    client.read_many(&reads)?;
+                    reads.clear();
+                }
+            }
+            Op::Scan { len } => {
+                scans.push((key, len));
+                if scans.len() == READ_WINDOW {
+                    client.scan_many(&scans)?;
+                    scans.clear();
+                }
             }
             Op::Update => {
+                flush_pending(client, &mut reads, &mut scans)?;
                 client.update(&key, "field0", opn as f64)?;
             }
             Op::Insert => {
+                flush_pending(client, &mut reads, &mut scans)?;
                 client.insert(&key, &ycsb_doc(&mut rng))?;
             }
-            Op::Scan { len } => {
-                client.scan(&key, len)?;
-            }
             Op::ReadModifyWrite => {
+                flush_pending(client, &mut reads, &mut scans)?;
                 client.read(&key)?;
                 client.update(&key, "field0", opn as f64)?;
             }
         }
     }
+    flush_pending(client, &mut reads, &mut scans)?;
     Ok((load, t1.elapsed()))
+}
+
+fn flush_pending(
+    client: &dyn DocClient,
+    reads: &mut Vec<String>,
+    scans: &mut Vec<(String, usize)>,
+) -> Result<()> {
+    if !reads.is_empty() {
+        client.read_many(reads)?;
+        reads.clear();
+    }
+    if !scans.is_empty() {
+        client.scan_many(scans)?;
+        scans.clear();
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -560,6 +683,52 @@ mod tests {
             assert_eq!(db.scan("user005", 6).unwrap().len(), 6);
         });
         assert_eq!(store.len(), 20, "every batched INSERT must land");
+        drop(db);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn pipelined_reads_and_scans_match_loop_semantics() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let store = DocStore::new();
+        let server = serve_rpcool(&env, "mongo-pipe", Arc::clone(&store)).unwrap();
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let db = RpcoolDoc::connect(&cenv, "mongo-pipe").unwrap();
+        cenv.run(|| {
+            let rows: Vec<(String, Val)> =
+                (0..30).map(|i| (format!("user{i:03}"), doc())).collect();
+            db.insert_many(&rows).unwrap();
+            // 40 keys (hits and misses interleaved) cross the WINDOW=16
+            // boundary twice; replies must come back in request order.
+            let keys: Vec<String> = (0..40)
+                .map(|i| if i % 3 == 0 { format!("nope{i:03}") } else { format!("user{i:03}") })
+                .collect();
+            let got = db.read_many(&keys).unwrap();
+            assert_eq!(got.len(), keys.len());
+            for (i, (key, val)) in keys.iter().zip(&got).enumerate() {
+                let expect = db.read(key).unwrap();
+                match (val, &expect) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.get("n").unwrap().as_num(), b.get("n").unwrap().as_num())
+                    }
+                    (None, None) => {}
+                    _ => panic!("reply {i} ({key}) out of order: piped {val:?} vs {expect:?}"),
+                }
+                assert_eq!(val.is_some(), i % 3 != 0 && i < 30, "key {key} hit/miss mismatch");
+            }
+            // Pipelined scans (10 requests cross the WINDOW=8 boundary)
+            // must match the blocking scan row-for-row.
+            let scans: Vec<(String, usize)> =
+                (0..10).map(|i| (format!("user{:03}", i * 2), 4usize)).collect();
+            let piped = db.scan_many(&scans).unwrap();
+            for ((start, len), rows) in scans.iter().zip(&piped) {
+                let looped = db.scan(start, *len).unwrap();
+                assert_eq!(rows.len(), looped.len(), "scan({start},{len}) row count");
+            }
+        });
         drop(db);
         server.stop();
         t.join().unwrap();

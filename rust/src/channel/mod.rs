@@ -102,9 +102,9 @@ pub mod waiter;
 
 pub use call::{CallArg, CallHandle, CallOpts, Reply, TypedCallHandle};
 
+use crate::cluster::{DsmState, MapKind, PodId};
 use crate::config::SimConfig;
 use crate::daemon::Daemon;
-use crate::dsm::{DsmState, NODE_CLIENT, NODE_SERVER};
 use crate::error::{Result, RpcError};
 use crate::memory::arena::ArgArena;
 use crate::memory::containers::{ShmString, ShmVec};
@@ -165,6 +165,30 @@ thread_local! {
 /// This thread's stripe id (assigned on first call, stable after).
 pub(crate) fn thread_stripe() -> usize {
     STRIPE.with(|s| *s)
+}
+
+thread_local! {
+    /// Per-thread probe-RNG state for load-aware striping: seeded from
+    /// the thread's stripe id (xorshift64 needs a nonzero word), so
+    /// probe sequences are deterministic per stripe yet uncorrelated
+    /// across threads.
+    static PROBE_RNG: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+/// Next value of this thread's xorshift64 probe stream.
+#[inline]
+fn probe_rng_next() -> u64 {
+    PROBE_RNG.with(|cell| {
+        let mut x = cell.get();
+        if x == 0 {
+            x = crate::util::rng::mix64(thread_stripe() as u64 + 1) | 1;
+        }
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        cell.set(x);
+        x
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -586,6 +610,11 @@ pub struct ConnShared {
     pub server_proc: u32,
     /// RDMA-fallback page-ownership state (None ⇒ CXL connection).
     pub dsm: Option<Arc<DsmState>>,
+    /// DSM node ids of the two endpoints (the client's pod and the
+    /// server's — made distinct even when a DSM transport is forced
+    /// inside one pod). Meaningless when `dsm` is None.
+    pub client_node: PodId,
+    pub server_node: PodId,
     /// Connection birth — the clock the shards' lazy claim-fail decay
     /// measures against.
     born: Instant,
@@ -1060,7 +1089,7 @@ impl ServerCore {
         // (paper §5.6 — load triggers fault, fetch, re-execute).
         if let Some(dsm) = &conn.dsm {
             if arg != 0 {
-                if let Err(e) = dsm.ensure_owned(NODE_SERVER, arg, arg_len.max(1)) {
+                if let Err(e) = dsm.ensure_owned(conn.server_node, arg, arg_len.max(1)) {
                     let _ = e;
                     reply(ST_HANDLER_ERROR, 0);
                     return;
@@ -1195,7 +1224,8 @@ pub struct Connection {
 impl Connection {
     /// Connect to a channel by name (paper Table 1b: 0.4s-class —
     /// daemon maps the heap, orchestrator grants the lease).
-    /// Transport is selected automatically: CXL in-rack, RDMA beyond.
+    /// Transport is selected automatically: CXL inside the server's
+    /// pod, RDMA/DSM across pods or beyond the rack.
     pub fn connect(env: &ProcEnv, name: &str) -> Result<Connection> {
         Self::connect_with(env, name, TransportSel::Auto)
     }
@@ -1211,16 +1241,20 @@ impl Connection {
         let charger = &rack.pool.charger;
         charger.charge_ns(charger.cost.channel_connect_us * 1000);
 
-        // Daemon creates (or reuses the shared) heap and maps it for
-        // both endpoints.
+        // Daemon creates (or reuses the shared) heap — homed in the
+        // server's pod — and maps it for both endpoints. The client's
+        // mapping carries its own pod, so a cross-pod client gets a
+        // DSM-backed mapping instead of a direct CXL one.
         let cfg = &rack.cfg;
         let opts = core.opts.clone();
-        let heap = if opts.shared_heap {
+        let client_pod = rack.pod_of(env.host);
+        let server_pod = rack.pod_of(core.env.host);
+        let (heap, map_kind) = if opts.shared_heap {
             let mut sh = core.shared_heap.lock().unwrap();
             match &*sh {
                 Some(h) => {
-                    core.daemon.map_heap(h.id, env.proc)?;
-                    Arc::clone(h)
+                    let (_, kind) = core.daemon.map_heap_from(h.id, env.proc, client_pod)?;
+                    (Arc::clone(h), kind)
                 }
                 None => {
                     let h = core.daemon.create_heap_opts(
@@ -1229,9 +1263,9 @@ impl Connection {
                         core.env.proc,
                         opts.magazine_cap,
                     )?;
-                    core.daemon.map_heap(h.id, env.proc)?;
+                    let (_, kind) = core.daemon.map_heap_from(h.id, env.proc, client_pod)?;
                     *sh = Some(Arc::clone(&h));
-                    h
+                    (h, kind)
                 }
             }
         } else {
@@ -1242,16 +1276,17 @@ impl Connection {
                 core.env.proc,
                 opts.magazine_cap,
             )?;
-            core.daemon.map_heap(h.id, env.proc)?;
-            h
+            let (_, kind) = core.daemon.map_heap_from(h.id, env.proc, client_pod)?;
+            (h, kind)
         };
 
-        // Fabric selection (paper §4.7): CXL if both ends share the
-        // rack, otherwise the RDMA-fallback coherence layer.
+        // Fabric selection (paper §4.7): CXL if the client's mapping
+        // of the server-pod heap is direct (same pod), otherwise the
+        // RDMA-fallback coherence layer.
         let use_dsm = match sel {
             TransportSel::Cxl => false,
             TransportSel::Rdma => true,
-            TransportSel::Auto => !rack.same_cxl_domain(env.host, core.env.host),
+            TransportSel::Auto => map_kind == MapKind::Dsm,
         };
         // Sharded data path: `ring_shards` rings + arg arenas, every
         // ring's publish() ringing the channel's bell so one parked
@@ -1284,7 +1319,17 @@ impl Connection {
             };
             shards.push(Shard::new(ring, arena));
         }
-        let dsm = if use_dsm { Some(DsmState::new(&heap, cfg.page_bytes)) } else { None };
+        // DSM node ids are the endpoints' pod ids. Forcing an RDMA
+        // transport *inside* one pod (benchmarks, tests) still needs
+        // two distinct nodes for pages to ping-pong between, so the
+        // server side gets a synthetic far id in that case.
+        let client_node = client_pod;
+        let server_node = if server_pod == client_pod { PodId::MAX } else { server_pod };
+        let dsm = if use_dsm {
+            Some(DsmState::new_multi(&heap, cfg.page_bytes, &[client_node, server_node], client_node))
+        } else {
+            None
+        };
 
         let shared = Arc::new(ConnShared {
             id: core.next_conn_id.fetch_add(1, Ordering::Relaxed),
@@ -1295,6 +1340,8 @@ impl Connection {
             client_proc: env.proc,
             server_proc: core.env.proc,
             dsm,
+            client_node,
+            server_node,
             born: Instant::now(),
             closed: AtomicBool::new(false),
             accepted: AtomicBool::new(false),
@@ -1455,31 +1502,40 @@ impl Connection {
         }
     }
 
-    /// The pick itself: home = thread stripe, probe = a pseudo-random
-    /// *other* shard (salted by the call counter so repeated picks
-    /// probe different shards), less-loaded wins, home wins ties.
+    /// The pick itself: home = thread stripe, plus `d-1` pseudo-random
+    /// *other* probe shards (d = 2, growing to 4 on wide channels
+    /// where two choices leave measurable imbalance on the table);
+    /// least-loaded wins, home wins ties.
+    ///
+    /// Probes come from a per-thread xorshift64 stream — no shared
+    /// atomic, no per-call mix of the call counter — so the pick adds
+    /// three shifts and two xors to the fast path instead of a
+    /// cross-core cache-line read.
     fn pick_two_choice(&self, n: usize) -> usize {
         let home = thread_stripe() & (n - 1);
-        let salt = crate::util::rng::mix64(
-            self.calls
-                .load(Ordering::Relaxed)
-                .wrapping_add(1)
-                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                ^ ((thread_stripe() as u64) << 17)
-                ^ self.shared.id,
-        );
-        let probe = (home + 1 + (salt as usize % (n - 1))) & (n - 1);
-        // Lazy time-based decay on both candidates: a once-congested
+        // d-1 distinct-from-home probes; wide channels (≥16 shards)
+        // get d=4 — with only two choices the expected max load still
+        // grows with shard count, and three extra relaxed loads are
+        // cheap next to one mis-striped call.
+        let extra = if n >= 16 { 3 } else { 1 };
+        let now = self.shared.now_ns();
+        // Lazy time-based decay on every candidate: a once-congested
         // shard must not sit exiled behind a stale counter when light
         // traffic never gives it the claim success that would decay it.
-        let now = self.shared.now_ns();
         self.shared.shards[home].decay_claim_fails_by_time(now);
-        self.shared.shards[probe].decay_claim_fails_by_time(now);
-        if self.shared.shards[probe].load_estimate() < self.shared.shards[home].load_estimate() {
-            probe
-        } else {
-            home
+        let mut best = home;
+        let mut best_load = self.shared.shards[home].load_estimate();
+        for _ in 0..extra {
+            let r = probe_rng_next();
+            let probe = (home + 1 + (r as usize % (n - 1))) & (n - 1);
+            self.shared.shards[probe].decay_claim_fails_by_time(now);
+            let load = self.shared.shards[probe].load_estimate();
+            if load < best_load {
+                best = probe;
+                best_load = load;
+            }
         }
+        best
     }
 
     /// The one call core: argument is a native pointer into the
@@ -1776,7 +1832,7 @@ impl Connection {
         if let Some(dsm) = &self.shared.dsm {
             for a in args {
                 if a.addr != 0 {
-                    dsm.ensure_owned(NODE_CLIENT, a.addr, a.len.max(1))?;
+                    dsm.ensure_owned(self.shared.client_node, a.addr, a.len.max(1))?;
                 }
             }
         }
@@ -2066,7 +2122,7 @@ impl Connection {
         let timeout = opts.timeout.unwrap_or(self.opts.call_timeout);
         if let Some(dsm) = &self.shared.dsm {
             if arg.addr != 0 {
-                dsm.ensure_owned(NODE_CLIENT, arg.addr, arg.len.max(1))?;
+                dsm.ensure_owned(self.shared.client_node, arg.addr, arg.len.max(1))?;
             }
         }
         let mut flags = 0u32;
@@ -2169,7 +2225,7 @@ impl Connection {
         // pages the server took on a previous RPC fault back now).
         if let Some(dsm) = &self.shared.dsm {
             if arg != 0 {
-                dsm.ensure_owned(NODE_CLIENT, arg, arg_len.max(1))?;
+                dsm.ensure_owned(self.shared.client_node, arg, arg_len.max(1))?;
             }
         }
         let shard_idx = route.si;
@@ -2852,6 +2908,83 @@ mod tests {
             let addr = scope.new_val(1u64).unwrap();
             assert_eq!(conn.invoke(7, (addr, 8), CallOpts::secure(&scope)).unwrap(), 101);
         });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn pod_aware_auto_transport_across_topology() {
+        // The tentpole invariant: one typed call site under
+        // TransportSel::Auto, unchanged, rides CXL from an in-pod
+        // client and RDMA/DSM from a cross-pod one.
+        let mut cfg = SimConfig::for_tests();
+        cfg.rack_hosts = 4;
+        cfg.pods = 2; // hosts {0,1} = pod 0, {2,3} = pod 1
+        let rack = Rack::new(cfg);
+        assert_eq!(rack.pod_of(1), 0);
+        assert_eq!(rack.pod_of(2), 1);
+        assert!(rack.same_cxl_domain(0, 1));
+        assert!(!rack.same_cxl_domain(1, 2));
+
+        let (server, t) = serve_echo(&rack, "pods"); // server on host 0, pod 0
+
+        let call_site = |env: &ProcEnv, conn: &Connection, v: u64| -> u64 {
+            env.run(|| {
+                conn.call_typed::<u64, u64>(101, &v, CallOpts::new()).unwrap().take().unwrap()
+            })
+        };
+
+        // In-pod client (host 1): Auto ⇒ CXL.
+        let near = rack.pod_env(0, 1);
+        let c_near = Connection::connect(&near, "pods").unwrap();
+        assert_eq!(c_near.transport(), TransportSel::Cxl, "same pod ⇒ CXL");
+        assert!(!c_near.shared.is_dsm());
+        assert_eq!(call_site(&near, &c_near, 7), 8);
+
+        // Cross-pod client (host 2): the very same connect + call
+        // site ⇒ RDMA/DSM.
+        let far = rack.pod_env(1, 0);
+        let c_far = Connection::connect(&far, "pods").unwrap();
+        assert_eq!(c_far.transport(), TransportSel::Rdma, "cross-pod ⇒ RDMA/DSM");
+        assert!(c_far.shared.is_dsm());
+        assert_eq!(call_site(&far, &c_far, 7), 8);
+        assert_eq!(c_far.shared.client_node, 1, "client node = its pod id");
+        assert_eq!(c_far.shared.server_node, 0, "server node = its pod id");
+        let (faults, pages) = c_far.shared.dsm.as_ref().unwrap().stats();
+        assert!(faults > 0 && pages > 0, "argument pages faulted across pods");
+
+        drop((c_near, c_far));
+        server.stop();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wide_channels_probe_more_shards() {
+        // d>2 probing on ≥16 shards: with the home shard artificially
+        // loaded, a fresh pick must escape to some other shard — and
+        // with all loads equal, it must stay home (ties favour home).
+        let mut cfg = SimConfig::for_tests();
+        cfg.ring_shards = 16;
+        let rack = Rack::new(cfg);
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg).open(&env, "wide").unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Connection::connect(&cenv, "wide").unwrap();
+        assert_eq!(conn.shared.shard_count(), 16);
+
+        let n = 16;
+        let home = thread_stripe() & (n - 1);
+        assert_eq!(conn.pick_two_choice(n), home, "all-idle pick stays home");
+        conn.shared.shards[home].depth.fetch_add(1000, Ordering::Relaxed);
+        for _ in 0..8 {
+            let picked = conn.pick_two_choice(n);
+            assert_ne!(picked, home, "probes never return the loaded home shard");
+        }
+        conn.shared.shards[home].depth.fetch_sub(1000, Ordering::Relaxed);
+
         drop(conn);
         server.stop();
         t.join().unwrap();

@@ -1,0 +1,293 @@
+//! RDMA fallback: multi-node software coherence (paper §4.7, §5.6).
+//!
+//! Beyond a CXL pod, hardware coherence is unavailable; RPCool
+//! replaces it with a minimalist page-ownership protocol over RDMA:
+//! every heap page has exactly one owner node; touching a page you
+//! don't own faults, fetches the page from its current owner
+//! (unmapping it there), and remaps it locally. Originally a two-node
+//! client/server sketch, this is now generalized to an arbitrary set
+//! of node ids — in practice the pod ids of the peers sharing the
+//! heap — while keeping the same single-word-per-page protocol: an
+//! atomic `swap` on the owner word is the entire transfer, so each
+//! ownership transition is observed by exactly one racer no matter
+//! how many writers contend.
+//!
+//! The simulation shares physical memory (it's one process), so a
+//! "transfer" is bookkeeping + the calibrated RDMA wire/fault costs —
+//! which is precisely what the paper's numbers are made of: the 17µs
+//! no-op RTT over RDMA vs 1.5µs over CXL is page-fault + transfer
+//! overhead, reproduced here.
+
+use crate::config::CostModel;
+use crate::error::{Result, RpcError};
+use crate::memory::heap::Heap;
+use crate::memory::pool::Charger;
+use crate::metrics::CounterSet;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// A DSM node id. In cross-pod connections this is the pod id of the
+/// participant (plus a synthetic id for the "far" side when a DSM
+/// transport is forced inside one pod).
+pub type NodeId = u32;
+
+/// Legacy node ids for the two-node protocol; `DsmState::new` still
+/// builds exactly that configuration.
+pub const NODE_CLIENT: NodeId = 0;
+pub const NODE_SERVER: NodeId = 1;
+
+/// Names of the exported DSM counters, in [`CounterSet`] order.
+pub const DSM_COUNTERS: [&str; 3] = ["dsm_faults", "dsm_pages_transferred", "dsm_charged_ns"];
+const C_FAULTS: usize = 0;
+const C_PAGES: usize = 1;
+const C_CHARGED_NS: usize = 2;
+
+/// Ownership + cost state for one DSM-backed heap.
+pub struct DsmState {
+    heap_base: usize,
+    page: usize,
+    /// Per-page owner node id.
+    owner: Vec<AtomicU32>,
+    /// Sorted, deduplicated set of valid node ids.
+    nodes: Vec<NodeId>,
+    charger: Arc<Charger>,
+    counters: CounterSet,
+}
+
+impl DsmState {
+    /// Two-node client/server heap; all pages start owned by the
+    /// client (it allocates arguments first).
+    pub fn new(heap: &Arc<Heap>, page_bytes: usize) -> Arc<DsmState> {
+        Self::new_multi(heap, page_bytes, &[NODE_CLIENT, NODE_SERVER], NODE_CLIENT)
+    }
+
+    /// General form: `nodes` is the set of participants (e.g. pod
+    /// ids), `initial` the node that owns every page at the start.
+    pub fn new_multi(
+        heap: &Arc<Heap>,
+        page_bytes: usize,
+        nodes: &[NodeId],
+        initial: NodeId,
+    ) -> Arc<DsmState> {
+        let mut set: Vec<NodeId> = nodes.to_vec();
+        set.sort_unstable();
+        set.dedup();
+        assert!(set.len() >= 2, "DSM needs at least two nodes");
+        assert!(set.contains(&initial), "initial owner must be a participant");
+        let npages = heap.len() / page_bytes;
+        Arc::new(DsmState {
+            heap_base: heap.base(),
+            page: page_bytes,
+            owner: (0..npages).map(|_| AtomicU32::new(initial)).collect(),
+            nodes: set,
+            charger: Arc::clone(&heap.pool().charger),
+            counters: CounterSet::new(&DSM_COUNTERS),
+        })
+    }
+
+    #[inline]
+    fn page_index(&self, addr: usize) -> Option<usize> {
+        let off = addr.checked_sub(self.heap_base)?;
+        let idx = off / self.page;
+        (idx < self.owner.len()).then_some(idx)
+    }
+
+    pub fn owner_of(&self, addr: usize) -> Option<NodeId> {
+        self.page_index(addr).map(|i| self.owner[i].load(Ordering::Acquire))
+    }
+
+    /// Fault in every page of `[addr, addr+len)` that `node` does not
+    /// own: page-fault trap + RDMA fetch + remap, per page (paper
+    /// §5.6: "triggers a page fault, fetches the page from the client,
+    /// and re-executes"). Returns pages transferred.
+    ///
+    /// The `swap` on the owner word makes every transition
+    /// exactly-once under racing writers: whichever racer's swap
+    /// observes a foreign previous owner is the one (and only one)
+    /// charged for that transfer.
+    pub fn ensure_owned(&self, node: NodeId, addr: usize, len: usize) -> Result<usize> {
+        debug_assert!(self.nodes.binary_search(&node).is_ok(), "unknown DSM node {node}");
+        let Some(first) = self.page_index(addr) else {
+            return Err(RpcError::Runtime(format!("address {addr:#x} outside DSM heap")));
+        };
+        let last = self
+            .page_index(addr + len.max(1) - 1)
+            .ok_or_else(|| RpcError::Runtime("range escapes DSM heap".into()))?;
+        let mut moved = 0usize;
+        let cost = &self.charger.cost;
+        for i in first..=last {
+            let prev = self.owner[i].swap(node, Ordering::AcqRel);
+            if prev != node {
+                // Trap + request/response on the wire + one page of
+                // bandwidth + remap.
+                let move_ns = Self::page_move_ns(cost);
+                self.counters.add(C_FAULTS, 1);
+                self.counters.add(C_PAGES, 1);
+                self.counters.add(C_CHARGED_NS, move_ns);
+                self.charger.charge_ns(move_ns);
+                moved += 1;
+            }
+        }
+        Ok(moved)
+    }
+
+    /// Cost of moving one page between nodes.
+    #[inline]
+    pub fn page_move_ns(cost: &CostModel) -> u64 {
+        cost.dsm_fault_ns + 2 * cost.rdma_oneway_ns + cost.rdma_page_ns
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.counters.get(C_FAULTS), self.counters.get(C_PAGES))
+    }
+
+    /// Total nanoseconds this DSM instance charged to the pool's
+    /// charger — always `pages_transferred * page_move_ns`.
+    pub fn charged_ns(&self) -> u64 {
+        self.counters.get(C_CHARGED_NS)
+    }
+
+    /// The exported counters (for `BenchReport` extras).
+    pub fn counters(&self) -> &CounterSet {
+        &self.counters
+    }
+
+    /// Participant node ids (sorted).
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    pub fn npages(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Invariant checker for property tests: every page has exactly
+    /// one owner and it is a valid node id.
+    pub fn owners_valid(&self) -> bool {
+        self.owner
+            .iter()
+            .all(|o| self.nodes.binary_search(&o.load(Ordering::Relaxed)).is_ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::memory::pool::Pool;
+
+    fn dsm() -> (Arc<Pool>, Arc<Heap>, Arc<DsmState>) {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm", 1 << 20).unwrap();
+        let d = DsmState::new(&heap, cfg.page_bytes);
+        (pool, heap, d)
+    }
+
+    #[test]
+    fn pages_start_client_owned() {
+        let (_p, h, d) = dsm();
+        assert_eq!(d.owner_of(h.base()), Some(NODE_CLIENT));
+        assert_eq!(d.npages(), 256);
+        assert!(d.owners_valid());
+        assert_eq!(d.nodes(), &[NODE_CLIENT, NODE_SERVER]);
+    }
+
+    #[test]
+    fn fault_transfers_ownership_once() {
+        let (_p, h, d) = dsm();
+        let addr = h.base() + 5000; // page 1
+        let moved = d.ensure_owned(NODE_SERVER, addr, 100).unwrap();
+        assert_eq!(moved, 1);
+        assert_eq!(d.owner_of(addr), Some(NODE_SERVER));
+        // Second touch: no fault.
+        assert_eq!(d.ensure_owned(NODE_SERVER, addr, 100).unwrap(), 0);
+        let (faults, pages) = d.stats();
+        assert_eq!((faults, pages), (1, 1));
+    }
+
+    #[test]
+    fn range_spanning_pages_moves_each() {
+        let (_p, h, d) = dsm();
+        let moved = d.ensure_owned(NODE_SERVER, h.base(), 3 * 4096 + 1).unwrap();
+        assert_eq!(moved, 4);
+    }
+
+    #[test]
+    fn pingpong_ownership() {
+        let (_p, h, d) = dsm();
+        for round in 0..10 {
+            d.ensure_owned(NODE_SERVER, h.base(), 4096).unwrap();
+            d.ensure_owned(NODE_CLIENT, h.base(), 4096).unwrap();
+            let _ = round;
+        }
+        let (faults, _) = d.stats();
+        assert_eq!(faults, 20, "every bounce faults");
+        assert!(d.owners_valid());
+    }
+
+    #[test]
+    fn out_of_heap_range_rejected() {
+        let (_p, h, d) = dsm();
+        assert!(d.ensure_owned(NODE_SERVER, h.base() + h.len() + 10, 8).is_err());
+        assert!(d.ensure_owned(NODE_SERVER, 0x10, 8).is_err());
+    }
+
+    #[test]
+    fn multi_node_round_robin_faults_each_hop() {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm-multi", 1 << 20).unwrap();
+        let nodes: [NodeId; 4] = [0, 1, 2, 3];
+        let d = DsmState::new_multi(&heap, cfg.page_bytes, &nodes, 2);
+        assert_eq!(d.owner_of(heap.base()), Some(2));
+        // Each hop to a different node is one fault; returning to the
+        // current owner is free.
+        for round in 0..3 {
+            for &n in &nodes {
+                d.ensure_owned(n, heap.base(), 8).unwrap();
+                d.ensure_owned(n, heap.base(), 8).unwrap(); // idempotent
+            }
+            let _ = round;
+        }
+        // Round 1: 0,1,2,3 from initial owner 2 → hops 2→0→1→2→3 = 4
+        // faults... but 2→...→2 passes through 2 itself once (free at
+        // that step only if already owner). Count explicitly: sequence
+        // of owners touched is 0,1,2,3,0,1,2,3,0,1,2,3 starting at 2;
+        // every consecutive pair differs, so 12 faults total.
+        let (faults, pages) = d.stats();
+        assert_eq!(faults, 12);
+        assert_eq!(pages, 12);
+        assert!(d.owners_valid());
+    }
+
+    #[test]
+    fn charged_ns_reconciles_with_pages() {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm-acct", 1 << 20).unwrap();
+        let d = DsmState::new_multi(&heap, cfg.page_bytes, &[5, 9, 13], 5);
+        let before = pool.charger.total_charged_ns();
+        d.ensure_owned(9, heap.base(), 3 * cfg.page_bytes).unwrap();
+        d.ensure_owned(13, heap.base(), cfg.page_bytes).unwrap();
+        let (_, pages) = d.stats();
+        assert_eq!(pages, 4);
+        let per_page = DsmState::page_move_ns(&pool.charger.cost);
+        assert_eq!(d.charged_ns(), pages * per_page);
+        assert_eq!(pool.charger.total_charged_ns() - before, d.charged_ns());
+        // Counter snapshot carries the same numbers under stable names.
+        let snap = d.counters().snapshot();
+        assert_eq!(snap[0], ("dsm_faults", 4));
+        assert_eq!(snap[1], ("dsm_pages_transferred", 4));
+        assert_eq!(snap[2], ("dsm_charged_ns", 4 * per_page));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two nodes")]
+    fn single_node_set_rejected() {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm-one", 1 << 20).unwrap();
+        let _ = DsmState::new_multi(&heap, cfg.page_bytes, &[7, 7], 7);
+    }
+}

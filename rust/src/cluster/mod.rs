@@ -1,0 +1,22 @@
+//! The cluster plane (paper §4.7, §5.6): pods, topology, and the
+//! generalized software-coherence layer that stitches them together.
+//!
+//! A CXL pod does not span a datacenter. This module partitions the
+//! simulated rack into `pods` CXL domains of `hosts_per_pod` hosts
+//! each ([`Topology`]); hardware cache coherence — and therefore the
+//! zero-copy CXL data path — exists only *inside* a pod. A heap is
+//! CXL-mapped only in its home pod; mapping it from any other pod
+//! yields a DSM-backed mapping ([`MapKind::Dsm`]) whose coherence is
+//! software-managed page ownership over RDMA ([`dsm::DsmState`],
+//! generalized here from the original two-node sketch to per-page
+//! owner = pod id).
+//!
+//! `Connection::connect` consumes this layer transparently: the same
+//! `TransportSel::Auto` call site resolves to CXL for an in-pod peer
+//! and to the RDMA/DSM fallback for a cross-pod one.
+
+pub mod dsm;
+pub mod topology;
+
+pub use dsm::{DsmState, NodeId, NODE_CLIENT, NODE_SERVER};
+pub use topology::{MapKind, PodId, Topology};

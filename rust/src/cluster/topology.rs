@@ -1,0 +1,175 @@
+//! Pod map for the simulated rack.
+//!
+//! Hosts `0..rack_hosts` are inside the rack and are partitioned into
+//! `pods` contiguous CXL domains of `hosts_per_pod` hosts each (the
+//! last pod absorbs any remainder). Hosts at or beyond `rack_hosts`
+//! model machines outside the rack entirely; each one is its own
+//! singleton "pod" so nothing is CXL-reachable from them.
+
+use crate::config::SimConfig;
+
+/// Identifier for a CXL pod. Out-of-rack hosts get synthetic pod ids
+/// `pods + k`; they never equal an in-rack pod id.
+pub type PodId = u32;
+
+/// How a heap ended up mapped into a process: directly over the pod's
+/// CXL domain, or via the RDMA-backed software-DSM fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapKind {
+    Cxl,
+    Dsm,
+}
+
+/// Immutable pod layout derived from [`SimConfig`].
+#[derive(Clone, Debug)]
+pub struct Topology {
+    rack_hosts: usize,
+    pods: usize,
+    hosts_per_pod: usize,
+}
+
+impl Topology {
+    pub fn from_config(cfg: &SimConfig) -> Topology {
+        let pods = cfg.pods.max(1);
+        let hosts_per_pod = if cfg.hosts_per_pod == 0 {
+            cfg.rack_hosts.div_ceil(pods).max(1)
+        } else {
+            cfg.hosts_per_pod
+        };
+        Topology { rack_hosts: cfg.rack_hosts, pods, hosts_per_pod }
+    }
+
+    pub fn rack_hosts(&self) -> usize {
+        self.rack_hosts
+    }
+
+    pub fn pod_count(&self) -> usize {
+        self.pods
+    }
+
+    pub fn hosts_per_pod(&self) -> usize {
+        self.hosts_per_pod
+    }
+
+    /// Is `host` one of the rack's CXL-attached machines?
+    pub fn in_rack(&self, host: u32) -> bool {
+        (host as usize) < self.rack_hosts
+    }
+
+    /// Pod id of `host`. In-rack hosts map to `0..pods` (the last pod
+    /// absorbs the remainder when the division is uneven); out-of-rack
+    /// hosts each get a distinct synthetic pod.
+    pub fn pod_of(&self, host: u32) -> PodId {
+        if self.in_rack(host) {
+            ((host as usize / self.hosts_per_pod).min(self.pods - 1)) as PodId
+        } else {
+            (self.pods + (host as usize - self.rack_hosts)) as PodId
+        }
+    }
+
+    /// Hardware cache coherence exists only between two in-rack hosts
+    /// in the same pod.
+    pub fn cxl_reachable(&self, a: u32, b: u32) -> bool {
+        self.in_rack(a) && self.in_rack(b) && self.pod_of(a) == self.pod_of(b)
+    }
+
+    /// The `idx`-th host of `pod` (panics if out of range) — handy for
+    /// tests and benches that want "some host in pod 1".
+    pub fn host_in_pod(&self, pod: PodId, idx: usize) -> u32 {
+        let first = pod as usize * self.hosts_per_pod;
+        let end = if (pod as usize) + 1 == self.pods {
+            self.rack_hosts
+        } else {
+            (first + self.hosts_per_pod).min(self.rack_hosts)
+        };
+        let host = first + idx;
+        assert!(
+            (pod as usize) < self.pods && host < end,
+            "host index {idx} out of range for pod {pod}"
+        );
+        host as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rack_hosts: usize, pods: usize, hosts_per_pod: usize) -> SimConfig {
+        let mut c = SimConfig::for_tests();
+        c.rack_hosts = rack_hosts;
+        c.pods = pods;
+        c.hosts_per_pod = hosts_per_pod;
+        c
+    }
+
+    #[test]
+    fn single_pod_matches_legacy_semantics() {
+        let t = Topology::from_config(&cfg(32, 1, 0));
+        assert_eq!(t.pod_count(), 1);
+        assert_eq!(t.hosts_per_pod(), 32);
+        assert!(t.cxl_reachable(0, 31));
+        assert!(!t.cxl_reachable(0, 32));
+        assert_eq!(t.pod_of(0), 0);
+        assert_eq!(t.pod_of(31), 0);
+        // Out-of-rack hosts get distinct synthetic pods.
+        assert_eq!(t.pod_of(32), 1);
+        assert_eq!(t.pod_of(40), 9);
+        assert!(!t.cxl_reachable(32, 32) || t.in_rack(32));
+    }
+
+    #[test]
+    fn two_pods_partition_the_rack() {
+        let t = Topology::from_config(&cfg(4, 2, 0));
+        assert_eq!(t.hosts_per_pod(), 2);
+        assert_eq!(t.pod_of(0), 0);
+        assert_eq!(t.pod_of(1), 0);
+        assert_eq!(t.pod_of(2), 1);
+        assert_eq!(t.pod_of(3), 1);
+        assert!(t.cxl_reachable(0, 1));
+        assert!(t.cxl_reachable(2, 3));
+        assert!(!t.cxl_reachable(1, 2));
+        assert!(!t.cxl_reachable(0, 3));
+    }
+
+    #[test]
+    fn uneven_division_last_pod_absorbs_remainder() {
+        // 10 hosts over 3 pods: hosts_per_pod = ceil(10/3) = 4, so pods
+        // own hosts [0..4), [4..8), [8..10).
+        let t = Topology::from_config(&cfg(10, 3, 0));
+        assert_eq!(t.hosts_per_pod(), 4);
+        assert_eq!(t.pod_of(3), 0);
+        assert_eq!(t.pod_of(4), 1);
+        assert_eq!(t.pod_of(7), 1);
+        assert_eq!(t.pod_of(8), 2);
+        assert_eq!(t.pod_of(9), 2);
+    }
+
+    #[test]
+    fn explicit_hosts_per_pod_clamps_trailing_pod() {
+        // 8 hosts, pods=2, hosts_per_pod=3: pod 0 = [0..3), pod 1
+        // (last) absorbs [3..8).
+        let t = Topology::from_config(&cfg(8, 2, 3));
+        assert_eq!(t.pod_of(2), 0);
+        assert_eq!(t.pod_of(3), 1);
+        assert_eq!(t.pod_of(7), 1);
+    }
+
+    #[test]
+    fn host_in_pod_roundtrips() {
+        let t = Topology::from_config(&cfg(8, 2, 0));
+        for pod in 0..2u32 {
+            for idx in 0..4 {
+                let h = t.host_in_pod(pod, idx);
+                assert_eq!(t.pod_of(h), pod);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn host_in_pod_rejects_overflow() {
+        let t = Topology::from_config(&cfg(8, 2, 0));
+        t.host_in_pod(0, 4);
+    }
+}

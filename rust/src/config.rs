@@ -188,6 +188,13 @@ pub struct SimConfig {
     pub busywait_sleep_high_us: u64,
     /// Hosts per rack reachable over CXL (paper assumes ≤32).
     pub rack_hosts: usize,
+    /// Number of CXL pods the rack's hosts are partitioned into
+    /// (paper §4.7: a pod doesn't span a datacenter). 1 = the whole
+    /// rack is one coherence domain (legacy behaviour).
+    pub pods: usize,
+    /// Hosts per pod; 0 = divide `rack_hosts` evenly across `pods`
+    /// (the last pod absorbs any remainder).
+    pub hosts_per_pod: usize,
     /// Default ring+arena shards per connection (power of two; the
     /// per-channel override is `ChannelBuilder::ring_shards`).
     pub ring_shards: usize,
@@ -223,6 +230,8 @@ impl Default for SimConfig {
             busywait_sleep_mid_us: 5,
             busywait_sleep_high_us: 150,
             rack_hosts: 32,
+            pods: 1,
+            hosts_per_pod: 0,
             ring_shards: 1,
             drain_k: 16,
             two_choice: true,
@@ -343,6 +352,8 @@ impl SimConfig {
             "busywait_sleep_mid_us" => self.busywait_sleep_mid_us = pu64(value)?,
             "busywait_sleep_high_us" => self.busywait_sleep_high_us = pu64(value)?,
             "rack_hosts" => self.rack_hosts = pusize(value)?,
+            "pods" => self.pods = pusize(value)?,
+            "hosts_per_pod" => self.hosts_per_pod = pusize(value)?,
             "ring_shards" => self.ring_shards = pusize(value)?,
             "drain_k" => self.drain_k = pusize(value)?,
             "two_choice" => self.two_choice = value == "true" || value == "1",
@@ -366,6 +377,8 @@ impl SimConfig {
         m.insert("pool_bytes", self.pool_bytes.to_string());
         m.insert("heap_bytes", self.heap_bytes.to_string());
         m.insert("page_bytes", self.page_bytes.to_string());
+        m.insert("pods", self.pods.to_string());
+        m.insert("hosts_per_pod", self.hosts_per_pod.to_string());
         m.insert("ring_shards", self.ring_shards.to_string());
         m.insert("drain_k", self.drain_k.to_string());
         m.insert("magazine_cap", self.magazine_cap.to_string());
@@ -413,6 +426,12 @@ mod tests {
         assert!(!cfg.two_choice);
         cfg.apply_kv("two_choice", "1").unwrap();
         assert!(cfg.two_choice);
+        assert_eq!(cfg.pods, 1, "default: whole rack is one pod");
+        assert_eq!(cfg.hosts_per_pod, 0, "default: auto-divide");
+        cfg.apply_kv("pods", "4").unwrap();
+        assert_eq!(cfg.pods, 4);
+        cfg.apply_kv("hosts_per_pod", "8").unwrap();
+        assert_eq!(cfg.hosts_per_pod, 8);
         assert!(cfg.apply_kv("nonsense", "1").is_err());
         assert!(cfg.apply_kv("cxl_load_ns", "abc").is_err());
     }

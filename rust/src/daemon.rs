@@ -8,6 +8,7 @@
 //! what stops a malicious sender from un-sealing its own pages behind
 //! the kernel's back.
 
+use crate::cluster::{MapKind, PodId, Topology};
 use crate::error::{Result, RpcError};
 use crate::memory::heap::{Heap, ProcId};
 use crate::orchestrator::{LeaseId, Orchestrator};
@@ -24,6 +25,8 @@ pub struct Mapping {
 
 pub struct Daemon {
     pub host: u32,
+    /// Pod this host (and hence this daemon) lives in.
+    pub pod: PodId,
     orch: Arc<Orchestrator>,
     /// proc → heap_id → mapping.
     mappings: Mutex<HashMap<ProcId, HashMap<u64, Mapping>>>,
@@ -33,8 +36,10 @@ pub struct Daemon {
 
 impl Daemon {
     pub fn new(host: u32, orch: Arc<Orchestrator>) -> Arc<Daemon> {
+        let pod = Topology::from_config(orch.config()).pod_of(host);
         Arc::new(Daemon {
             host,
+            pod,
             orch,
             mappings: Mutex::new(HashMap::new()),
             maps: AtomicU64::new(0),
@@ -44,9 +49,23 @@ impl Daemon {
 
     /// Map a connection heap into `proc`'s address space (daemon-only
     /// syscall; charges the orchestrator handshake via the caller's
-    /// connect-cost accounting).
+    /// connect-cost accounting). Maps from this daemon's own pod.
     pub fn map_heap(&self, heap_id: u64, proc: ProcId) -> Result<Arc<Heap>> {
-        let (heap, lease) = self.orch.map_heap(heap_id, proc)?;
+        let (heap, _kind) = self.map_heap_from(heap_id, proc, self.pod)?;
+        Ok(heap)
+    }
+
+    /// Map a heap on behalf of a proc running in `pod` (the client's
+    /// daemon relays through the server's when connecting cross-pod).
+    /// Returns the heap and whether the mapping is direct CXL or
+    /// DSM-backed.
+    pub fn map_heap_from(
+        &self,
+        heap_id: u64,
+        proc: ProcId,
+        pod: PodId,
+    ) -> Result<(Arc<Heap>, MapKind)> {
+        let (heap, lease, kind) = self.orch.map_heap_from(heap_id, proc, pod)?;
         self.mappings
             .lock()
             .unwrap()
@@ -54,7 +73,7 @@ impl Daemon {
             .or_default()
             .insert(heap_id, Mapping { lease, heap_id });
         self.maps.fetch_add(1, Ordering::Relaxed);
-        Ok(heap)
+        Ok((heap, kind))
     }
 
     /// Create + map a fresh heap (server opening a channel).
@@ -71,7 +90,8 @@ impl Daemon {
         proc: ProcId,
         magazine_cap: Option<usize>,
     ) -> Result<Arc<Heap>> {
-        let (heap, lease) = self.orch.create_heap_opts(name, bytes, proc, magazine_cap)?;
+        let (heap, lease) =
+            self.orch.create_heap_opts_at(name, bytes, proc, magazine_cap, self.pod)?;
         self.mappings
             .lock()
             .unwrap()
@@ -158,6 +178,25 @@ mod tests {
         orch.tick();
         assert_eq!(orch.live_heaps(), 0, "expired lease → heap reclaimed");
         let _ = h;
+    }
+
+    #[test]
+    fn cross_pod_mapping_degrades_to_dsm() {
+        let mut cfg = SimConfig::for_tests();
+        cfg.rack_hosts = 4;
+        cfg.pods = 2;
+        let pool = Pool::new(&cfg).unwrap();
+        let orch = Orchestrator::new(&cfg, pool);
+        let d0 = Daemon::new(0, Arc::clone(&orch)); // pod 0
+        let d1 = Daemon::new(2, Arc::clone(&orch)); // pod 1
+        assert_eq!(d0.pod, 0);
+        assert_eq!(d1.pod, 1);
+        let h = d0.create_heap("pods", 1 << 20, 1).unwrap();
+        assert_eq!(orch.heap_home_pod(h.id), Some(0));
+        let (_h, kind) = d0.map_heap_from(h.id, 2, d0.pod).unwrap();
+        assert_eq!(kind, MapKind::Cxl, "in-pod mapping is direct CXL");
+        let (_h, kind) = d1.map_heap_from(h.id, 3, d1.pod).unwrap();
+        assert_eq!(kind, MapKind::Dsm, "cross-pod mapping is DSM-backed");
     }
 
     #[test]

@@ -1,175 +1,6 @@
-//! RDMA fallback: two-node software coherence (paper §4.7, §5.6).
-//!
-//! Beyond the rack, CXL coherence is unavailable; RPCool replaces it
-//! with a minimalist page-ownership protocol over RDMA: every heap
-//! page has exactly one owner node; touching a page you don't own
-//! faults, fetches the page from the peer (unmapping it there), and
-//! remaps it locally. Deliberately two-node only — multi-node
-//! invalidation would need DSM-class machinery (ArgoDSM) the paper
-//! explicitly avoids.
-//!
-//! The simulation shares physical memory (it's one process), so a
-//! "transfer" is bookkeeping + the calibrated RDMA wire/fault costs —
-//! which is precisely what the paper's numbers are made of: the 17µs
-//! no-op RTT over RDMA vs 1.5µs over CXL is page-fault + transfer
-//! overhead, reproduced here.
+//! Compatibility re-export: the DSM layer moved into the cluster
+//! plane ([`crate::cluster::dsm`]) when it was generalized from the
+//! two-node client/server sketch to per-page owner = pod id. Existing
+//! `rpcool::dsm::*` imports keep working through this alias.
 
-use crate::config::CostModel;
-use crate::error::{Result, RpcError};
-use crate::memory::heap::Heap;
-use crate::memory::pool::Charger;
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::Arc;
-
-/// Node ids in the two-node protocol.
-pub const NODE_CLIENT: u8 = 0;
-pub const NODE_SERVER: u8 = 1;
-
-/// Ownership + cost state for one DSM-backed heap.
-pub struct DsmState {
-    heap_base: usize,
-    page: usize,
-    /// Per-page owner (NODE_CLIENT / NODE_SERVER).
-    owner: Vec<AtomicU8>,
-    charger: Arc<Charger>,
-    pub faults: AtomicU64,
-    pub pages_transferred: AtomicU64,
-}
-
-impl DsmState {
-    /// All pages start owned by the client (it allocates arguments first).
-    pub fn new(heap: &Arc<Heap>, page_bytes: usize) -> Arc<DsmState> {
-        let npages = heap.len() / page_bytes;
-        Arc::new(DsmState {
-            heap_base: heap.base(),
-            page: page_bytes,
-            owner: (0..npages).map(|_| AtomicU8::new(NODE_CLIENT)).collect(),
-            charger: Arc::clone(&heap.pool().charger),
-            faults: AtomicU64::new(0),
-            pages_transferred: AtomicU64::new(0),
-        })
-    }
-
-    #[inline]
-    fn page_index(&self, addr: usize) -> Option<usize> {
-        let off = addr.checked_sub(self.heap_base)?;
-        let idx = off / self.page;
-        (idx < self.owner.len()).then_some(idx)
-    }
-
-    pub fn owner_of(&self, addr: usize) -> Option<u8> {
-        self.page_index(addr).map(|i| self.owner[i].load(Ordering::Acquire))
-    }
-
-    /// Fault in every page of `[addr, addr+len)` that `node` does not
-    /// own: page-fault trap + RDMA fetch + remap, per page (paper
-    /// §5.6: "triggers a page fault, fetches the page from the client,
-    /// and re-executes"). Returns pages transferred.
-    pub fn ensure_owned(&self, node: u8, addr: usize, len: usize) -> Result<usize> {
-        let Some(first) = self.page_index(addr) else {
-            return Err(RpcError::Runtime(format!("address {addr:#x} outside DSM heap")));
-        };
-        let last = self
-            .page_index(addr + len.max(1) - 1)
-            .ok_or_else(|| RpcError::Runtime("range escapes DSM heap".into()))?;
-        let mut moved = 0usize;
-        let cost = &self.charger.cost;
-        for i in first..=last {
-            let prev = self.owner[i].swap(node, Ordering::AcqRel);
-            if prev != node {
-                // Trap + request/response on the wire + one page of
-                // bandwidth + remap.
-                self.faults.fetch_add(1, Ordering::Relaxed);
-                self.pages_transferred.fetch_add(1, Ordering::Relaxed);
-                self.charger.charge_ns(Self::page_move_ns(cost));
-                moved += 1;
-            }
-        }
-        Ok(moved)
-    }
-
-    /// Cost of moving one page between nodes.
-    #[inline]
-    pub fn page_move_ns(cost: &CostModel) -> u64 {
-        cost.dsm_fault_ns + 2 * cost.rdma_oneway_ns + cost.rdma_page_ns
-    }
-
-    pub fn stats(&self) -> (u64, u64) {
-        (self.faults.load(Ordering::Relaxed), self.pages_transferred.load(Ordering::Relaxed))
-    }
-
-    pub fn npages(&self) -> usize {
-        self.owner.len()
-    }
-
-    /// Invariant checker for property tests: every page has exactly
-    /// one owner and it is a valid node id.
-    pub fn owners_valid(&self) -> bool {
-        self.owner
-            .iter()
-            .all(|o| matches!(o.load(Ordering::Relaxed), NODE_CLIENT | NODE_SERVER))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::SimConfig;
-    use crate::memory::pool::Pool;
-
-    fn dsm() -> (Arc<Pool>, Arc<Heap>, Arc<DsmState>) {
-        let cfg = SimConfig::for_tests();
-        let pool = Pool::new(&cfg).unwrap();
-        let heap = Heap::new(&pool, "dsm", 1 << 20).unwrap();
-        let d = DsmState::new(&heap, cfg.page_bytes);
-        (pool, heap, d)
-    }
-
-    #[test]
-    fn pages_start_client_owned() {
-        let (_p, h, d) = dsm();
-        assert_eq!(d.owner_of(h.base()), Some(NODE_CLIENT));
-        assert_eq!(d.npages(), 256);
-        assert!(d.owners_valid());
-    }
-
-    #[test]
-    fn fault_transfers_ownership_once() {
-        let (_p, h, d) = dsm();
-        let addr = h.base() + 5000; // page 1
-        let moved = d.ensure_owned(NODE_SERVER, addr, 100).unwrap();
-        assert_eq!(moved, 1);
-        assert_eq!(d.owner_of(addr), Some(NODE_SERVER));
-        // Second touch: no fault.
-        assert_eq!(d.ensure_owned(NODE_SERVER, addr, 100).unwrap(), 0);
-        let (faults, pages) = d.stats();
-        assert_eq!((faults, pages), (1, 1));
-    }
-
-    #[test]
-    fn range_spanning_pages_moves_each() {
-        let (_p, h, d) = dsm();
-        let moved = d.ensure_owned(NODE_SERVER, h.base(), 3 * 4096 + 1).unwrap();
-        assert_eq!(moved, 4);
-    }
-
-    #[test]
-    fn pingpong_ownership() {
-        let (_p, h, d) = dsm();
-        for round in 0..10 {
-            d.ensure_owned(NODE_SERVER, h.base(), 4096).unwrap();
-            d.ensure_owned(NODE_CLIENT, h.base(), 4096).unwrap();
-            let _ = round;
-        }
-        let (faults, _) = d.stats();
-        assert_eq!(faults, 20, "every bounce faults");
-        assert!(d.owners_valid());
-    }
-
-    #[test]
-    fn out_of_heap_range_rejected() {
-        let (_p, h, d) = dsm();
-        assert!(d.ensure_owned(NODE_SERVER, h.base() + h.len() + 10, 8).is_err());
-        assert!(d.ensure_owned(NODE_SERVER, 0x10, 8).is_err());
-    }
-}
+pub use crate::cluster::dsm::{DsmState, NodeId, DSM_COUNTERS, NODE_CLIENT, NODE_SERVER};

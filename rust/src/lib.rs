@@ -7,9 +7,12 @@
 //! pointer-rich data structures in (simulated) CXL shared memory,
 //! made safe by **seals** (senders lose write access to in-flight
 //! arguments) and **MPK sandboxes** (receivers dereference untrusted
-//! pointers inside a memory window), scaled beyond the rack by an
-//! **RDMA-fallback** software-coherence layer, and kept leak-free by a
-//! global **orchestrator** (leases, quotas, orphaned-heap GC).
+//! pointers inside a memory window), scaled beyond a CXL pod by the
+//! **cluster plane** (`cluster`): a pod-aware rack topology whose
+//! cross-pod data path is an RDMA-backed software-coherence (DSM)
+//! layer, and kept leak-free by a global **orchestrator** (leases,
+//! quotas, orphaned-heap GC). The same `TransportSel::Auto` call site
+//! rides CXL inside a pod and RDMA/DSM across pods.
 //!
 //! See `DESIGN.md` at the repository root for the
 //! hardware-substitution map and the per-experiment index.
@@ -23,6 +26,7 @@ pub mod apps;
 pub mod baselines;
 pub mod benchkit;
 pub mod channel;
+pub mod cluster;
 pub mod config;
 pub mod daemon;
 pub mod dsm;

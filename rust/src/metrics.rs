@@ -140,6 +140,36 @@ impl Default for Histogram {
     }
 }
 
+/// A fixed set of named monotonic counters, lock-free. Subsystems
+/// (e.g. the cluster DSM layer) expose their accounting through one
+/// of these so benches can lift the values straight into
+/// `BenchReport` extras without knowing the subsystem's internals.
+pub struct CounterSet {
+    names: &'static [&'static str],
+    vals: Vec<AtomicU64>,
+}
+
+impl CounterSet {
+    pub fn new(names: &'static [&'static str]) -> CounterSet {
+        CounterSet { names, vals: names.iter().map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    #[inline]
+    pub fn add(&self, idx: usize, n: u64) {
+        self.vals[idx].fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> u64 {
+        self.vals[idx].load(Ordering::Relaxed)
+    }
+
+    /// (name, value) pairs in declaration order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        self.names.iter().zip(&self.vals).map(|(n, v)| (*n, v.load(Ordering::Relaxed))).collect()
+    }
+}
+
 /// Throughput helper: ops over a wall-clock window.
 pub struct Throughput {
     pub ops: u64,
@@ -194,6 +224,34 @@ mod tests {
         assert_eq!(Histogram::fmt_ns(950), "950 ns");
         assert_eq!(Histogram::fmt_ns(1500), "1.50 µs");
         assert_eq!(Histogram::fmt_ns(2_600_000), "2.60 ms");
+    }
+
+    #[test]
+    fn counter_set_named_snapshot() {
+        static NAMES: [&str; 2] = ["hits", "misses"];
+        let c = CounterSet::new(&NAMES);
+        c.add(0, 3);
+        c.add(1, 1);
+        c.add(0, 2);
+        assert_eq!(c.get(0), 5);
+        assert_eq!(c.snapshot(), vec![("hits", 5), ("misses", 1)]);
+    }
+
+    #[test]
+    fn counter_set_concurrent_adds() {
+        static NAMES: [&str; 1] = ["n"];
+        let c = std::sync::Arc::new(CounterSet::new(&NAMES));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = std::sync::Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.add(0, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(0), 40_000);
     }
 
     #[test]

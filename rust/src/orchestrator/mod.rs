@@ -15,6 +15,7 @@ pub use acl::{Acl, Mode, Perm, Uid};
 pub use lease::{Lease, LeaseId, LeaseTable};
 pub use quota::QuotaTable;
 
+use crate::cluster::{MapKind, PodId};
 use crate::config::SimConfig;
 use crate::error::{Result, RpcError};
 use crate::memory::heap::{Heap, ProcId};
@@ -50,6 +51,9 @@ struct Inner {
     leases: LeaseTable,
     quotas: QuotaTable,
     heaps: HashMap<u64, Arc<Heap>>,
+    /// heap → pod it was created in. The heap is CXL-mapped only from
+    /// this pod; any other pod gets a DSM-backed mapping.
+    heap_pods: HashMap<u64, PodId>,
     /// heap → procs that ever mapped it (for failure notification fan-out).
     participants: HashMap<u64, Vec<ProcId>>,
     channels: HashMap<String, ChannelReg>,
@@ -73,6 +77,7 @@ impl Orchestrator {
                 leases: LeaseTable::new(Duration::from_millis(cfg.lease_ttl_ms)),
                 quotas: QuotaTable::new(cfg.quota_bytes),
                 heaps: HashMap::new(),
+                heap_pods: HashMap::new(),
                 participants: HashMap::new(),
                 channels: HashMap::new(),
                 notifications: HashMap::new(),
@@ -101,7 +106,7 @@ impl Orchestrator {
 
     /// [`Orchestrator::create_heap`] with a per-heap magazine-capacity
     /// override (`None` = the config's `magazine_cap`; `Some(0)` =
-    /// fixed always-lock allocation).
+    /// fixed always-lock allocation). Home pod defaults to pod 0.
     pub fn create_heap_opts(
         &self,
         name: &str,
@@ -109,31 +114,81 @@ impl Orchestrator {
         proc: ProcId,
         magazine_cap: Option<usize>,
     ) -> Result<(Arc<Heap>, LeaseId)> {
+        self.create_heap_opts_at(name, bytes, proc, magazine_cap, 0)
+    }
+
+    /// [`Orchestrator::create_heap_opts`] placing the heap in an
+    /// explicit home pod: the heap's backing CXL memory lives in that
+    /// pod's coherence domain.
+    pub fn create_heap_opts_at(
+        &self,
+        name: &str,
+        bytes: usize,
+        proc: ProcId,
+        magazine_cap: Option<usize>,
+        home_pod: PodId,
+    ) -> Result<(Arc<Heap>, LeaseId)> {
         let cap = magazine_cap.unwrap_or(self.cfg.magazine_cap);
         let heap = Heap::new_opts(&self.pool, name, bytes, cap)?;
         let mut inner = self.inner.lock().unwrap();
         inner.quotas.charge(proc, heap.id, heap.len())?;
         let lease = inner.leases.grant(heap.id, proc, Instant::now());
         inner.participants.entry(heap.id).or_default().push(proc);
+        inner.heap_pods.insert(heap.id, home_pod);
         inner.heaps.insert(heap.id, Arc::clone(&heap));
         Ok((heap, lease.id))
     }
 
-    /// Map an existing heap into another proc's address space.
+    /// Map an existing heap into another proc's address space (pod of
+    /// the mapper unknown — treated as a CXL mapping from the heap's
+    /// home pod, the legacy single-pod behaviour).
     pub fn map_heap(&self, heap_id: u64, proc: ProcId) -> Result<(Arc<Heap>, LeaseId)> {
+        let (heap, lease, _kind) = self.map_heap_inner(heap_id, proc, None)?;
+        Ok((heap, lease))
+    }
+
+    /// Map an existing heap from a specific pod. Returns the mapping
+    /// kind: [`MapKind::Cxl`] if `pod` is the heap's home pod (direct
+    /// load/store coherence), [`MapKind::Dsm`] otherwise (software
+    /// coherence over RDMA).
+    pub fn map_heap_from(
+        &self,
+        heap_id: u64,
+        proc: ProcId,
+        pod: PodId,
+    ) -> Result<(Arc<Heap>, LeaseId, MapKind)> {
+        self.map_heap_inner(heap_id, proc, Some(pod))
+    }
+
+    fn map_heap_inner(
+        &self,
+        heap_id: u64,
+        proc: ProcId,
+        pod: Option<PodId>,
+    ) -> Result<(Arc<Heap>, LeaseId, MapKind)> {
         let mut inner = self.inner.lock().unwrap();
         let heap = inner
             .heaps
             .get(&heap_id)
             .cloned()
             .ok_or(RpcError::LeaseExpired(heap_id))?;
+        let home = inner.heap_pods.get(&heap_id).copied().unwrap_or(0);
+        let kind = match pod {
+            Some(p) if p != home => MapKind::Dsm,
+            _ => MapKind::Cxl,
+        };
         inner.quotas.charge(proc, heap_id, heap.len())?;
         let lease = inner.leases.grant(heap_id, proc, Instant::now());
         let parts = inner.participants.entry(heap_id).or_default();
         if !parts.contains(&proc) {
             parts.push(proc);
         }
-        Ok((heap, lease.id))
+        Ok((heap, lease.id, kind))
+    }
+
+    /// Home pod of a live heap.
+    pub fn heap_home_pod(&self, heap_id: u64) -> Option<PodId> {
+        self.inner.lock().unwrap().heap_pods.get(&heap_id).copied()
     }
 
     /// Voluntary unmap (clean close): surrender lease, credit quota,
@@ -156,6 +211,7 @@ impl Orchestrator {
 
     fn reclaim_heap(inner: &mut Inner, heap_id: u64) {
         if inner.heaps.remove(&heap_id).is_some() {
+            inner.heap_pods.remove(&heap_id);
             inner.reclaimed += 1;
             let parts = inner.participants.remove(&heap_id).unwrap_or_default();
             for p in parts {
@@ -392,6 +448,28 @@ mod tests {
         .is_err());
         assert_eq!(o.list_channels("svc/"), vec!["svc/db".to_string()]);
         assert!(matches!(o.check_connect("nope", 1), Err(RpcError::ChannelNotFound(_))));
+    }
+
+    #[test]
+    fn heap_home_pod_decides_mapping_kind() {
+        let o = orch();
+        let (h, _l) = o
+            .create_heap_opts_at("pod-heap", 1 << 20, 1, None, 1)
+            .unwrap();
+        assert_eq!(o.heap_home_pod(h.id), Some(1));
+        // Mapping from the home pod is direct CXL; from anywhere else
+        // it degrades to DSM.
+        let (_h, _l2, kind_home) = o.map_heap_from(h.id, 2, 1).unwrap();
+        assert_eq!(kind_home, MapKind::Cxl);
+        let (_h, _l3, kind_far) = o.map_heap_from(h.id, 3, 0).unwrap();
+        assert_eq!(kind_far, MapKind::Dsm);
+        // Legacy pod-less mapping stays CXL.
+        let (_h, _l4) = o.map_heap(h.id, 4).unwrap();
+        // Reclaim drops the pod record too.
+        std::thread::sleep(Duration::from_millis(80));
+        o.tick();
+        assert_eq!(o.live_heaps(), 0);
+        assert_eq!(o.heap_home_pod(h.id), None);
     }
 
     #[test]

@@ -1,17 +1,24 @@
 //! The simulated rack: up to ~32 hosts sharing one CXL memory pool
-//! (paper Fig. 2), plus the cluster-global orchestrator.
+//! (paper Fig. 2), partitioned into pods, plus the cluster-global
+//! orchestrator.
 //!
-//! A `Rack` owns the pool and the orchestrator. "Procs" (simulated OS
-//! processes) are created via `proc_env` and run on caller threads; a
-//! `ProcEnv` carries the identity (`ProcId`, uid, host) that the
-//! protection layers key on. Hosts beyond the rack (for RDMA-fallback
-//! experiments) are modelled by marking the env's host id `>= rack_hosts`.
+//! A `Rack` owns the pool, the orchestrator, and a [`Topology`]: the
+//! rack's hosts are split into `cfg.pods` CXL coherence domains, and
+//! only hosts in the same pod see each other over CXL — everything
+//! else (cross-pod, out-of-rack) falls back to RDMA/DSM (see
+//! `crate::cluster`). "Procs" (simulated OS processes) are created via
+//! `proc_env` and run on caller threads; a `ProcEnv` carries the
+//! identity (`ProcId`, uid, host) that the protection layers key on.
+//! Hosts beyond the rack are modelled by host ids `>= rack_hosts`,
+//! each allocated freshly by `remote_proc_env` so distinct remote
+//! machines stay distinct.
 
+use crate::cluster::{PodId, Topology};
 use crate::config::SimConfig;
 use crate::memory::pool::Pool;
 use crate::orchestrator::{Orchestrator, Uid};
 use crate::simproc::{self};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 static NEXT_RACK_ID: AtomicU64 = AtomicU64::new(1);
@@ -21,6 +28,9 @@ pub struct Rack {
     pub cfg: SimConfig,
     pub pool: Arc<Pool>,
     pub orch: Arc<Orchestrator>,
+    pub topo: Topology,
+    /// Next out-of-rack host id handed out by `remote_proc_env`.
+    next_ext_host: AtomicU32,
 }
 
 impl Rack {
@@ -28,7 +38,16 @@ impl Rack {
         let pool = Pool::new(&cfg).expect("pool mmap");
         let orch = Orchestrator::new(&cfg, Arc::clone(&pool));
         simproc::set_enforcement(cfg.enforce_protection);
-        Arc::new(Rack { id: NEXT_RACK_ID.fetch_add(1, Ordering::Relaxed), cfg, pool, orch })
+        let topo = Topology::from_config(&cfg);
+        let next_ext_host = AtomicU32::new(cfg.rack_hosts as u32);
+        Arc::new(Rack {
+            id: NEXT_RACK_ID.fetch_add(1, Ordering::Relaxed),
+            cfg,
+            pool,
+            orch,
+            topo,
+            next_ext_host,
+        })
     }
 
     /// Convenience constructors matching the two standard configs.
@@ -46,14 +65,27 @@ impl Rack {
         ProcEnv { rack: Arc::clone(self), proc, uid: proc, host }
     }
 
-    /// A process on a host *outside* this rack's CXL domain (RDMA only).
+    /// A process on a fresh host *outside* this rack's CXL domains
+    /// (RDMA only). Every call allocates a new out-of-rack host — its
+    /// own singleton pod — so two "remote datacenters" are never
+    /// accidentally coherent with each other.
     pub fn remote_proc_env(self: &Arc<Self>) -> ProcEnv {
-        self.proc_env(self.cfg.rack_hosts as u32 + 1)
+        self.proc_env(self.next_ext_host.fetch_add(1, Ordering::Relaxed))
     }
 
-    /// Are two hosts CXL-reachable (same rack)?
+    /// A process on the `idx`-th host of in-rack pod `pod`.
+    pub fn pod_env(self: &Arc<Self>, pod: PodId, idx: usize) -> ProcEnv {
+        self.proc_env(self.topo.host_in_pod(pod, idx))
+    }
+
+    /// Pod id of `host` (out-of-rack hosts get synthetic singleton pods).
+    pub fn pod_of(&self, host: u32) -> PodId {
+        self.topo.pod_of(host)
+    }
+
+    /// Are two hosts CXL-reachable (same rack *and* same pod)?
     pub fn same_cxl_domain(&self, host_a: u32, host_b: u32) -> bool {
-        (host_a as usize) < self.cfg.rack_hosts && (host_b as usize) < self.cfg.rack_hosts
+        self.topo.cxl_reachable(host_a, host_b)
     }
 }
 
@@ -94,6 +126,11 @@ impl ProcEnv {
     pub fn in_rack(&self) -> bool {
         (self.host as usize) < self.rack.cfg.rack_hosts
     }
+
+    /// This proc's pod.
+    pub fn pod(&self) -> PodId {
+        self.rack.pod_of(self.host)
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +156,35 @@ mod tests {
         let remote = rack.remote_proc_env();
         assert!(!remote.in_rack());
         assert!(!rack.same_cxl_domain(0, remote.host));
+    }
+
+    #[test]
+    fn remote_envs_get_distinct_hosts_and_pods() {
+        let rack = Rack::for_tests();
+        let a = rack.remote_proc_env();
+        let b = rack.remote_proc_env();
+        assert_ne!(a.host, b.host, "no more single magic remote host");
+        assert_ne!(a.pod(), b.pod(), "each remote host is its own pod");
+        assert!(!rack.same_cxl_domain(a.host, b.host));
+    }
+
+    #[test]
+    fn pods_partition_the_rack() {
+        let mut cfg = SimConfig::for_tests();
+        cfg.rack_hosts = 4;
+        cfg.pods = 2;
+        let rack = Rack::new(cfg);
+        assert_eq!(rack.pod_of(0), 0);
+        assert_eq!(rack.pod_of(1), 0);
+        assert_eq!(rack.pod_of(2), 1);
+        assert_eq!(rack.pod_of(3), 1);
+        assert!(rack.same_cxl_domain(0, 1));
+        assert!(rack.same_cxl_domain(2, 3));
+        assert!(!rack.same_cxl_domain(1, 2), "pods are separate CXL domains");
+        let e = rack.pod_env(1, 0);
+        assert_eq!(e.host, 2);
+        assert_eq!(e.pod(), 1);
+        assert!(e.in_rack());
     }
 
     #[test]

@@ -277,6 +277,67 @@ fn hoarding_and_scope_bombs_contained() {
     attacker.run(|| conns[1].invoke(1, (), CallOpts::new())).unwrap();
 }
 
+/// Cross-pod isolation (cluster plane): an attacker in pod 1 holds a
+/// DSM-backed connection to a pod-0 server and sends a dangling
+/// address aimed at a secret inside a heap *its pod never mapped* (a
+/// pod-0-private heap). The transport must have auto-selected
+/// RDMA/DSM for the cross-pod hop, and the sandboxed handler must
+/// refuse the dereference — pod boundaries don't weaken the
+/// connection-heap sandbox, they add a second fence outside it.
+#[test]
+fn cross_pod_dangling_pointer_contained() {
+    let mut cfg = SimConfig::for_tests();
+    cfg.rack_hosts = 4;
+    cfg.pods = 2;
+    let rack = Rack::new(cfg);
+
+    // A pod-0-private heap holding the secret: created through pod 0's
+    // daemon and mapped nowhere else — in particular never into the
+    // attacker's pod.
+    let daemon0 = rpcool::daemon::Daemon::new(0, Arc::clone(&rack.orch));
+    assert_eq!(daemon0.pod, 0);
+    let private = daemon0.create_heap("atk/xpod-private", 1 << 20, 99).unwrap();
+    let secret = private.new_val(0x5EC_2026u64).unwrap();
+
+    // Victim server in pod 0; handler dereferences whatever address
+    // the argument names (the fault-detail handler, reused as bait).
+    let senv = rack.pod_env(0, 0);
+    let server = Rpc::open(&senv, "atk/xpod").unwrap();
+    server.add(1, |ctx| {
+        let target: u64 = ctx.arg_val()?;
+        let v: u64 = ShmPtr::<u64>::from_addr(target as usize).read()?;
+        Ok(v)
+    });
+    let t = server.spawn_listener();
+
+    // Attacker in pod 1: the same `connect` call sites any in-pod
+    // client uses, but the topology forces the DSM data path.
+    let aenv = rack.pod_env(1, 0);
+    assert!(!rack.same_cxl_domain(senv.host, aenv.host), "pods must split the CXL domain");
+    let conn = Rpc::connect(&aenv, "atk/xpod").unwrap();
+    assert!(conn.shared.is_dsm(), "cross-pod connection must ride RDMA/DSM");
+    aenv.run(|| {
+        let scope = conn.create_scope(4096).unwrap();
+        let addr = scope.new_val(secret as u64).unwrap();
+        match conn.invoke(1, (addr, 8), CallOpts::secure(&scope)) {
+            Err(RpcError::SandboxViolation { addr: fault, lo, hi }) => {
+                assert_eq!(fault, secret, "fault must name the pod-0 secret");
+                assert!(
+                    fault < lo || fault >= hi,
+                    "the foreign heap must lie outside the sandbox window"
+                );
+            }
+            other => panic!("cross-pod attack must be contained, got {other:?}"),
+        }
+    });
+    // The DSM machinery moved argument pages, not the foreign heap:
+    // the secret is untouched and still pod-0-private.
+    assert_eq!(unsafe { *(secret as *const u64) }, 0x5EC_2026);
+    drop(conn);
+    server.stop();
+    t.join().unwrap();
+}
+
 /// Malicious *document*: a ShmVal whose string points at an arbitrary
 /// address. Sandboxed processing reports an error; the checked reads
 /// never touch the wild address unsandboxed either (bounds unknown).

@@ -1,0 +1,211 @@
+//! Seeded stress/property suite for the generalized DSM ownership
+//! protocol (the cluster plane's cross-pod data path): racing writers
+//! from several pods hammer one DSM-backed heap while the suite checks
+//! the accounting that the rack benchmarks and `BenchReport` extras
+//! are built on.
+//!
+//! Seeding follows `ring_stress`: every scenario is drawn from
+//! `util::prop::forall` under the `PROP_SEED` env var (CI sweeps four
+//! seeds in debug and release); failures print the seed and the
+//! shrunk scenario.
+//!
+//! Invariants checked on every scenario:
+//!
+//! * **Exactly-once transfers** — the per-writer sums of
+//!   `ensure_owned` return values equal the shared fault/page
+//!   counters: no transition is double-counted or lost no matter how
+//!   many writers race on the same owner word;
+//! * **Owner-map/charger equivalence** — `charged_ns` is exactly
+//!   `pages_transferred * page_move_ns`, and the pool charger's delta
+//!   matches (DSM costs are charged once, to one place);
+//! * **Owner validity** — after the race every page is owned by a
+//!   real participant node;
+//! * **Settle phase** — one sequential sweep by a single node moves
+//!   exactly the pages that node didn't already own, and afterwards
+//!   owns everything (the map is coherent, not just valid).
+
+use rpcool::cluster::DsmState;
+use rpcool::memory::pool::Pool;
+use rpcool::memory::Heap;
+use rpcool::util::prop::{forall, Gen, U64Range};
+use rpcool::util::rng::Rng;
+use rpcool::SimConfig;
+use std::sync::Arc;
+
+/// Seed source: `PROP_SEED` env var (CI matrix), fixed default.
+fn prop_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED)
+}
+
+/// One randomized multi-pod DSM schedule.
+#[derive(Clone, Debug)]
+struct Scenario {
+    /// Participant nodes (pods) sharing the heap.
+    nodes: u64,
+    /// Racing writer threads (assigned round-robin to nodes, so some
+    /// nodes race against themselves too — swaps to the same owner
+    /// must not be charged).
+    writers: u64,
+    /// `ensure_owned` calls per writer.
+    ops: u64,
+    /// Heap size in DSM pages.
+    pages: u64,
+    /// Max touched range per call, in bytes.
+    max_span: u64,
+    /// Salt for the per-writer address streams.
+    salt: u64,
+}
+
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Value = Scenario;
+    fn generate(&self, rng: &mut Rng) -> Scenario {
+        Scenario {
+            nodes: rng.range(2, 6),
+            writers: rng.range(2, 9),
+            ops: rng.range(16, 129),
+            pages: rng.range(8, 65),
+            max_span: rng.range(1, 3 * 4096),
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &Scenario) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        if v.ops > 16 {
+            out.push(Scenario { ops: v.ops / 2, ..v.clone() });
+        }
+        if v.writers > 2 {
+            out.push(Scenario { writers: v.writers - 1, ..v.clone() });
+        }
+        if v.nodes > 2 {
+            out.push(Scenario { nodes: v.nodes - 1, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// Run one racing-writers scenario; `true` iff every invariant held.
+/// The pool is fresh per scenario so the charger delta is attributable
+/// to this DSM instance alone.
+fn run_scenario(sc: &Scenario) -> bool {
+    let cfg = SimConfig::for_tests();
+    let pool = Pool::new(&cfg).unwrap();
+    let heap = Heap::new(&pool, "dsm-stress", sc.pages as usize * cfg.page_bytes).unwrap();
+    // Non-contiguous node ids: pod ids in real topologies need not be
+    // dense, and the owner word stores the id verbatim.
+    let node_ids: Vec<u32> = (0..sc.nodes as u32).map(|i| i * 7 + 3).collect();
+    let dsm = DsmState::new_multi(&heap, cfg.page_bytes, &node_ids, node_ids[0]);
+    let charged_before = pool.charger.total_charged_ns();
+
+    let base = heap.base();
+    let hlen = heap.len();
+    let mut writers = Vec::new();
+    for tid in 0..sc.writers {
+        let dsm = Arc::clone(&dsm);
+        let node = node_ids[(tid % sc.nodes) as usize];
+        let (salt, ops, max_span) = (sc.salt, sc.ops, sc.max_span);
+        writers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(salt ^ tid.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut moved = 0u64;
+            for _ in 0..ops {
+                let off = rng.next_below(hlen as u64) as usize;
+                let span = (1 + rng.next_below(max_span) as usize).min(hlen - off);
+                moved += dsm.ensure_owned(node, base + off, span).unwrap() as u64;
+            }
+            moved
+        }));
+    }
+    let local_sum: u64 = writers.into_iter().map(|w| w.join().unwrap()).sum();
+
+    // Exactly-once: the per-writer sums partition the shared counters.
+    let (faults, pages) = dsm.stats();
+    if faults != local_sum || pages != local_sum {
+        eprintln!("dsm-race: counters (faults {faults}, pages {pages}) != writer sum {local_sum}");
+        return false;
+    }
+    // Owner-map/charger equivalence: DSM charges exactly
+    // pages * page_move_ns, once, to the pool's charger.
+    let per_page = DsmState::page_move_ns(&pool.charger.cost);
+    let charger_delta = pool.charger.total_charged_ns() - charged_before;
+    if dsm.charged_ns() != pages * per_page || charger_delta != pages * per_page {
+        eprintln!(
+            "dsm-race: charge accounting broke: dsm {} charger {} expect {}",
+            dsm.charged_ns(),
+            charger_delta,
+            pages * per_page
+        );
+        return false;
+    }
+    if !dsm.owners_valid() {
+        eprintln!("dsm-race: a page ended up owned by a non-participant");
+        return false;
+    }
+    // Settle: one node sweeps the heap sequentially; it must fault
+    // exactly the pages it doesn't own and then own all of them.
+    let settler = node_ids[0];
+    let foreign = (0..dsm.npages())
+        .filter(|&i| dsm.owner_of(base + i * cfg.page_bytes) != Some(settler))
+        .count();
+    let swept = dsm.ensure_owned(settler, base, hlen).unwrap();
+    if swept != foreign {
+        eprintln!("dsm-race: settle moved {swept} != foreign pages {foreign}");
+        return false;
+    }
+    (0..dsm.npages()).all(|i| dsm.owner_of(base + i * cfg.page_bytes) == Some(settler))
+}
+
+/// The main randomized sweep.
+#[test]
+fn stress_racing_writers_exactly_once() {
+    forall("dsm-race", prop_seed(), 24, &ScenarioGen, run_scenario);
+}
+
+/// Sequential multi-node schedules against a reference model: a plain
+/// `Vec<u32>` owner map replayed op-for-op. `ensure_owned`'s return
+/// value and the observable owner of every touched page must match
+/// the model exactly.
+#[test]
+fn prop_sequential_matches_owner_model() {
+    forall("dsm-model", prop_seed(), 32, &U64Range(0, (1 << 48) - 1), |&salt| {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let pages = 32usize;
+        let heap = Heap::new(&pool, "dsm-model", pages * cfg.page_bytes).unwrap();
+        let nodes: Vec<u32> = vec![2, 5, 11, 17];
+        let dsm = DsmState::new_multi(&heap, cfg.page_bytes, &nodes, 2);
+        let mut model = vec![2u32; pages];
+        let mut rng = Rng::new(salt ^ 0xD5A1);
+        let mut total_model_moves = 0u64;
+        for _ in 0..200 {
+            let node = nodes[rng.next_below(nodes.len() as u64) as usize];
+            let first = rng.next_below(pages as u64) as usize;
+            let span = 1 + rng.next_below(4) as usize;
+            let last = (first + span - 1).min(pages - 1);
+            let addr = heap.base() + first * cfg.page_bytes;
+            let len = (last - first) * cfg.page_bytes + 1;
+            let expect: usize = (first..=last).filter(|&i| model[i] != node).count();
+            for i in first..=last {
+                model[i] = node;
+            }
+            total_model_moves += expect as u64;
+            let moved = dsm.ensure_owned(node, addr, len).unwrap();
+            if moved != expect {
+                eprintln!("dsm-model: moved {moved} != model {expect}");
+                return false;
+            }
+        }
+        for (i, &m) in model.iter().enumerate() {
+            let got = dsm.owner_of(heap.base() + i * cfg.page_bytes);
+            if got != Some(m) {
+                eprintln!("dsm-model: page {i} owner {got:?} != model {m}");
+                return false;
+            }
+        }
+        let (faults, pages_moved) = dsm.stats();
+        faults == total_model_moves
+            && pages_moved == total_model_moves
+            && dsm.charged_ns() == pages_moved * DsmState::page_move_ns(&pool.charger.cost)
+            && dsm.owners_valid()
+    });
+}
