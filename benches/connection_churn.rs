@@ -1,0 +1,410 @@
+//! CONNECTION CHURN & CAPACITY: many channels on one host, served by
+//! the daemon-wide pooled waiter tree (ISSUE 7) instead of dedicated
+//! per-channel listener threads. Not a paper figure; this is the
+//! repo's perf trajectory for the capacity plane (DESIGN.md §12).
+//!
+//! Layers:
+//! * `churn/call/dedicated/c{N}` — N channels × 1 dedicated listener
+//!   thread each (the pre-ISSUE-7 model: threads scale with channel
+//!   count), one connection per channel, a single client sweeping
+//!   round-robin. The capacity baseline.
+//! * `churn/call/pooled/w{K}/c{N}` — the same sweep with zero
+//!   dedicated listeners: every channel registers with the host's
+//!   worker pool (K ≤ 8 threads parked on one aggregated doorbell
+//!   root). CI's capacity gate holds the w8/c1024 row within 15% of
+//!   the dedicated c1024 row — channel count must no longer buy
+//!   thread count.
+//! * `churn/open_close/pooled/w{K}/c{N}` — connect→call→drop storms
+//!   against pooled channels: adoption and retirement churn through
+//!   the waiter tree (slot recycling, closed-conn sweeps).
+//! * `churn/elastic/{on,off}` — 8 client threads over an 8-shard
+//!   connection with a deliberately tiny ring: elastic-on starts at
+//!   one active shard and must earn width from claim-fail pressure
+//!   (`active_shards_end` extra records where it landed).
+//! * `churn/admission/{reject,shed}` — connects beyond `conn_limit`
+//!   under each policy; extras carry the orchestrator's admission
+//!   counters (admitted/rejected/shed).
+//! * `churn/acct/{fixed,elastic_off}` — deterministic single-threaded
+//!   inline-serving accounting rows. The elastic machinery compiled
+//!   in but switched OFF must charge byte-for-byte what the fixed
+//!   path charges; CI asserts the two `charged_ns_per_op` extras are
+//!   exactly equal.
+//!
+//! Charging is skipped (accounting still accumulates): capacity rows
+//! measure the *structural* cost of fanning k workers over N
+//! channels, and a charged 0.4s connect handshake would drown the
+//! open/close storm in simulated sleep.
+//!
+//! Run: `cargo bench --bench connection_churn [-- --quick]`
+
+use rpcool::benchkit::{BenchReport, Table};
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, RpcServer};
+use rpcool::config::AdmissionPolicy;
+use rpcool::metrics::Histogram;
+use rpcool::{ChargePolicy, Rack, SimConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Bench config: structural timing (no charged spins), pool big
+/// enough for 1k+ connection heaps.
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::for_bench();
+    c.charge = ChargePolicy::Skip;
+    c.pool_bytes = 1 << 30;
+    c
+}
+
+/// Open `channels` channels on host 0 — pooled (`workers` > 0, no
+/// listener threads) or dedicated (one listener thread each) — and
+/// sweep one client round-robin across one connection per channel.
+/// Returns (ops/s, per-call latency hist, dedicated listener threads).
+fn capacity(channels: usize, workers: usize, calls_per_chan: u64) -> (f64, Histogram, usize) {
+    let rack = Rack::new(cfg());
+    let env = rack.proc_env(0);
+    let mut servers: Vec<(RpcServer, Vec<std::thread::JoinHandle<()>>)> =
+        Vec::with_capacity(channels);
+    for i in 0..channels {
+        let mut b = ChannelBuilder::from_config(&rack.cfg)
+            .heap_bytes(192 << 10)
+            .ring_slots(8)
+            .ring_shards(1)
+            .arg_arena_bytes(0);
+        if workers > 0 {
+            b = b.pool_workers(workers);
+        }
+        let server = b.open(&env, &format!("cap{i}")).unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        // Pooled channels return no handles — that is the point.
+        let handles = server.spawn_listeners(1);
+        servers.push((server, handles));
+    }
+    let nthreads: usize = servers.iter().map(|(_, h)| h.len()).sum();
+    assert_eq!(nthreads, if workers > 0 { 0 } else { channels });
+
+    let cenv = rack.proc_env(1);
+    let conns: Vec<Connection> = (0..channels)
+        .map(|i| Connection::connect(&cenv, &format!("cap{i}")).unwrap())
+        .collect();
+    let hist = Histogram::new();
+    let t0 = Instant::now();
+    cenv.run(|| {
+        for k in 0..calls_per_chan {
+            for conn in &conns {
+                let t = Instant::now();
+                let r = conn.call_typed::<u64, u64>(1, &k, CallOpts::new()).unwrap();
+                assert_eq!(r.take().unwrap(), k + 1);
+                hist.record(t.elapsed());
+            }
+        }
+    });
+    let wall = t0.elapsed();
+    drop(conns);
+    for (s, handles) in servers {
+        s.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+    let total = channels as u64 * calls_per_chan;
+    (total as f64 / wall.as_secs_f64(), hist, nthreads)
+}
+
+/// Connect→call→drop storm round-robining over pooled channels:
+/// measures full connection lifecycle throughput while the waiter
+/// tree adopts and retires slots. Returns (opens/s, per-open hist).
+fn open_close_storm(channels: usize, workers: usize, rounds: u64) -> (f64, Histogram) {
+    let rack = Rack::new(cfg());
+    let env = rack.proc_env(0);
+    let servers: Vec<RpcServer> = (0..channels)
+        .map(|i| {
+            let s = ChannelBuilder::from_config(&rack.cfg)
+                .heap_bytes(192 << 10)
+                .ring_slots(8)
+                .ring_shards(1)
+                .arg_arena_bytes(0)
+                .pool_workers(workers)
+                .open(&env, &format!("storm{i}"))
+                .unwrap();
+            s.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+            s.spawn_listeners(1); // no-op in pooled mode
+            s
+        })
+        .collect();
+    let cenv = rack.proc_env(1);
+    let hist = Histogram::new();
+    let t0 = Instant::now();
+    cenv.run(|| {
+        for r in 0..rounds {
+            let name = format!("storm{}", r as usize % channels);
+            let t = Instant::now();
+            let conn = Connection::connect(&cenv, &name).unwrap();
+            let ret = conn.call_typed::<u64, u64>(1, &r, CallOpts::new()).unwrap();
+            assert_eq!(ret.take().unwrap(), r + 1);
+            drop(conn);
+            hist.record(t.elapsed());
+        }
+    });
+    let wall = t0.elapsed();
+    for s in &servers {
+        s.stop();
+    }
+    (rounds as f64 / wall.as_secs_f64(), hist)
+}
+
+/// 8 client threads hammering an 8-shard connection with a tiny ring:
+/// elastic-on must earn width under claim-fail pressure. Returns
+/// (ops/s, hist, active shards at the end).
+fn elastic(on: bool, ops_per_thread: u64) -> (f64, Histogram, usize) {
+    let rack = Rack::new(cfg());
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_slots(4)
+        .ring_shards(8)
+        .elastic_shards(on)
+        .open(&env, "elastic")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let listeners = server.spawn_listeners(4);
+    let cenv = rack.proc_env(1);
+    let conn = Arc::new(Connection::connect(&cenv, "elastic").unwrap());
+
+    let hist = Arc::new(Histogram::new());
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for tid in 0..8u64 {
+        let conn = Arc::clone(&conn);
+        let hist = Arc::clone(&hist);
+        let env = cenv.clone();
+        clients.push(std::thread::spawn(move || {
+            env.run(|| {
+                for k in 0..ops_per_thread {
+                    let v = tid * 1_000_000 + k;
+                    let t = Instant::now();
+                    let r = conn.call_typed::<u64, u64>(1, &v, CallOpts::new()).unwrap();
+                    assert_eq!(r.take().unwrap(), v + 1);
+                    hist.record(t.elapsed());
+                }
+            });
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let active = conn.shared.active_shard_count();
+    drop(conn);
+    server.stop();
+    for l in listeners {
+        l.join().unwrap();
+    }
+    let total = 8 * ops_per_thread;
+    (total as f64 / wall.as_secs_f64(), Arc::try_unwrap(hist).ok().unwrap(), active)
+}
+
+/// Connect `attempts` clients against a `conn_limit`-capped channel
+/// under `policy`; returns the orchestrator's (admitted, rejected,
+/// shed) counter deltas.
+fn admission(policy: AdmissionPolicy, limit: usize, attempts: usize) -> (u64, u64, u64) {
+    use rpcool::orchestrator::{ADM_ADMITTED, ADM_REJECTED, ADM_SHED};
+    let rack = Rack::new(cfg());
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .heap_bytes(192 << 10)
+        .ring_slots(8)
+        .ring_shards(1)
+        .arg_arena_bytes(0)
+        .pool_workers(2)
+        .admission(policy)
+        .conn_limit(limit)
+        .open(&env, "admit")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let cenv = rack.proc_env(1);
+    let mut held = Vec::new();
+    for k in 0..attempts {
+        if let Ok(conn) = Connection::connect(&cenv, "admit") {
+            // Shed-class connections still serve — at degraded drain
+            // budget — so exercise one call.
+            let r = conn.call_typed::<u64, u64>(1, &(k as u64), CallOpts::new()).unwrap();
+            assert_eq!(r.take().unwrap(), k as u64 + 1);
+            held.push(conn);
+        }
+    }
+    let adm = rack.orch.admission();
+    let out = (adm.get(ADM_ADMITTED), adm.get(ADM_REJECTED), adm.get(ADM_SHED));
+    drop(held);
+    server.stop();
+    out
+}
+
+/// Deterministic single-threaded inline-serving accounting: charged
+/// ns per op on a fixed 4-shard channel. `explicit_off` routes
+/// through a builder that names the elastic knob (set to off) — the
+/// two variants must charge identically, byte for byte.
+fn acct(explicit_off: bool, ops: u64) -> f64 {
+    let rack = Rack::new(cfg());
+    let env = rack.proc_env(0);
+    let mut b = ChannelBuilder::from_config(&rack.cfg)
+        .ring_slots(8)
+        .ring_shards(4)
+        .two_choice(false);
+    if explicit_off {
+        b = b.elastic_shards(false);
+    }
+    let name = if explicit_off { "acct-off" } else { "acct-fixed" };
+    let server = b.open(&env, name).unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, name).unwrap();
+    conn.attach_inline(&server);
+    let before = rack.pool.charger.total_charged_ns();
+    cenv.run(|| {
+        for k in 0..ops {
+            let r = conn.call_typed::<u64, u64>(1, &k, CallOpts::new()).unwrap();
+            assert_eq!(r.take().unwrap(), k + 1);
+        }
+    });
+    let charged = rack.pool.charger.total_charged_ns() - before;
+    drop(conn);
+    server.stop();
+    charged as f64 / ops as f64
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let calls_per_chan: u64 = if quick { 2 } else { 10 };
+    let storm_rounds: u64 = if quick { 128 } else { 1024 };
+    let elastic_ops: u64 = if quick { 2_000 } else { 20_000 };
+    let acct_ops: u64 = if quick { 2_000 } else { 20_000 };
+
+    let mut t = Table::new(&["Scenario", "ops/s", "p50", "p99", "p99.9", "threads"]);
+    let mut rep = BenchReport::new("connection_churn");
+    // 2ms SLO on every histogram row: the capacity plane is judged on
+    // its deep tail, not its median.
+    rep.slo(2_000_000);
+
+    // Dedicated baseline: threads scale with channels. Only the
+    // gate's comparison point (c1024) spends the thread budget.
+    for channels in [64usize, 1024] {
+        let (thr, hist, nthreads) = capacity(channels, 0, calls_per_chan);
+        t.row(&[
+            format!("churn/call/dedicated/c{channels}"),
+            format!("{thr:.0}"),
+            Histogram::fmt_ns(hist.median_ns()),
+            Histogram::fmt_ns(hist.p99_ns()),
+            Histogram::fmt_ns(hist.p999_ns()),
+            format!("{nthreads}"),
+        ]);
+        rep.row_hist(&format!("churn/call/dedicated/c{channels}"), &hist, thr);
+        rep.extra("listener_threads", nthreads as f64);
+        rep.extra("pool_workers", 0.0);
+        rep.extra("channels", channels as f64);
+    }
+
+    // Pooled: k ≤ 8 workers regardless of channel count; zero
+    // dedicated listener threads (asserted inside `capacity`).
+    for workers in [2usize, 8] {
+        for channels in [64usize, 256, 1024] {
+            let (thr, hist, nthreads) = capacity(channels, workers, calls_per_chan);
+            t.row(&[
+                format!("churn/call/pooled/w{workers}/c{channels}"),
+                format!("{thr:.0}"),
+                Histogram::fmt_ns(hist.median_ns()),
+                Histogram::fmt_ns(hist.p99_ns()),
+                Histogram::fmt_ns(hist.p999_ns()),
+                format!("{nthreads}"),
+            ]);
+            rep.row_hist(&format!("churn/call/pooled/w{workers}/c{channels}"), &hist, thr);
+            rep.extra("listener_threads", nthreads as f64);
+            rep.extra("pool_workers", workers as f64);
+            rep.extra("channels", channels as f64);
+        }
+    }
+
+    // Lifecycle churn through the waiter tree.
+    for (workers, channels) in [(2usize, 64usize), (8, 256)] {
+        let (thr, hist) = open_close_storm(channels, workers, storm_rounds);
+        t.row(&[
+            format!("churn/open_close/pooled/w{workers}/c{channels}"),
+            format!("{thr:.0}"),
+            Histogram::fmt_ns(hist.median_ns()),
+            Histogram::fmt_ns(hist.p99_ns()),
+            Histogram::fmt_ns(hist.p999_ns()),
+            format!("{workers}"),
+        ]);
+        rep.row_hist(&format!("churn/open_close/pooled/w{workers}/c{channels}"), &hist, thr);
+        rep.extra("pool_workers", workers as f64);
+        rep.extra("channels", channels as f64);
+    }
+
+    // Elastic window: on earns width under pressure; off routes the
+    // full capacity from the first call, as always.
+    for on in [false, true] {
+        let label = if on { "churn/elastic/on" } else { "churn/elastic/off" };
+        let (thr, hist, active) = elastic(on, elastic_ops / 8);
+        t.row(&[
+            label.into(),
+            format!("{thr:.0}"),
+            Histogram::fmt_ns(hist.median_ns()),
+            Histogram::fmt_ns(hist.p99_ns()),
+            Histogram::fmt_ns(hist.p999_ns()),
+            "-".into(),
+        ]);
+        rep.row_hist(label, &hist, thr);
+        rep.extra("active_shards_end", active as f64);
+    }
+
+    // Admission policies at the capacity ceiling.
+    let (adm, rej, _) = admission(AdmissionPolicy::Reject, 8, 16);
+    t.row(&[
+        "churn/admission/reject".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{adm} adm / {rej} rej"),
+    ]);
+    rep.row("churn/admission/reject", 0.0, 0.0, 0.0, 0.0);
+    rep.extra("admitted", adm as f64);
+    rep.extra("rejected", rej as f64);
+    let (adm, _, shed) = admission(AdmissionPolicy::Shed, 8, 16);
+    t.row(&[
+        "churn/admission/shed".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{adm} adm / {shed} shed"),
+    ]);
+    rep.row("churn/admission/shed", 0.0, 0.0, 0.0, 0.0);
+    rep.extra("admitted", adm as f64);
+    rep.extra("shed", shed as f64);
+
+    // The elastic-off byte-identity gate: identical deterministic
+    // workload, identical charge — knob present but off must be the
+    // fixed path exactly.
+    let fixed_ns = acct(false, acct_ops);
+    let off_ns = acct(true, acct_ops);
+    for (label, ns) in [("churn/acct/fixed", fixed_ns), ("churn/acct/elastic_off", off_ns)] {
+        t.row(&[
+            label.into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{ns:.1} ns/op charged"),
+        ]);
+        rep.row(label, 0.0, 0.0, 0.0, 0.0);
+        rep.extra("charged_ns_per_op", ns);
+    }
+
+    t.print("Connection churn — pooled capacity plane vs dedicated listeners");
+    println!(
+        "\ninvariants: pooled w8/c1024 throughput must stay within 15% of the\n\
+         dedicated c1024 baseline with zero listener threads (CI gate); the\n\
+         churn/acct rows must charge *exactly* the same ns/op — the elastic\n\
+         knob switched off is the fixed path, byte for byte."
+    );
+    println!("acct fixed {fixed_ns:.3} ns/op vs elastic-off {off_ns:.3} ns/op");
+    rep.emit();
+}

@@ -221,6 +221,9 @@ fn main() {
     let signal_ns = SimConfig::for_bench().cost.cxl_signal_ns as f64;
     let mut t = Table::new(&["Scenario", "threads", "ops/s", "p50", "p99", "signals/RPC"]);
     let mut rep = BenchReport::new("ring_contention");
+    // 2ms latency SLO: every histogram row reports its deep tail
+    // (p999_ns) and how many samples blew the budget (slo_miss).
+    rep.slo(2_000_000);
 
     for threads in [1u64, 2, 4, 8] {
         let (thr, hist) = ring_raw(threads, raw_ops / threads);

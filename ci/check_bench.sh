@@ -29,7 +29,16 @@
 #     awareness adds nothing to the in-pod fast path); DSM page
 #     transfers appear exactly on rows with a nonzero cross mix.
 #
-#  5. Memory-plane invariants (fresh heap_churn record): the
+#  5. Capacity-plane invariants (fresh connection_churn record): the
+#     pooled row (8 workers, 1024 channels, zero dedicated listener
+#     threads) must hold at least 85% of the dedicated-listener
+#     baseline's throughput at the same channel count — worker count
+#     decoupled from channel count may cost at most 15%; and the two
+#     churn/acct accounting rows must charge *exactly* the same
+#     ns/op — the elastic knob compiled in but off must be the fixed
+#     path byte for byte.
+#
+#  6. Memory-plane invariants (fresh heap_churn record): the
 #     magazine-path alloc rows must take the central heap lock on at
 #     most 1/8 of alloc/free ops (steady state at the default cap 64
 #     is ~2/64), and the indexed check_write row must not grow with
@@ -114,6 +123,65 @@ else:
         ok = False
     else:
         print(f"striping invariant ok: two-choice spread {cs:.0f} <= fixed {fs:.0f} / 2")
+
+sys.exit(0 if ok else 1)
+EOF
+
+python3 - "$fresh_dir/BENCH_connection_churn.json" <<'EOF' || fail=1
+import json, sys
+
+DEDICATED = "churn/call/dedicated/c1024"
+POOLED = "churn/call/pooled/w8/c1024"
+PARITY = 0.85               # <= 8 workers may cost at most 15% vs 1024 listeners
+ACCT_ROWS = ("churn/acct/fixed", "churn/acct/elastic_off")
+
+rows = {r["label"]: r for r in json.load(open(sys.argv[1]))["rows"]}
+ok = True
+
+ded, pool = rows.get(DEDICATED), rows.get(POOLED)
+if ded is None or pool is None:
+    print(f"::error::{DEDICATED}/{POOLED} rows missing from fresh connection_churn record")
+    ok = False
+elif ded["throughput_ops"] <= 0 or pool["throughput_ops"] <= 0:
+    print("::error::capacity throughputs are unmeasured — gate would be vacuous")
+    ok = False
+else:
+    d, p = ded["throughput_ops"], pool["throughput_ops"]
+    if pool.get("listener_threads", -1.0) != 0.0:
+        print(f"::error::{POOLED} spawned dedicated listener threads — the pool is not serving")
+        ok = False
+    if p < PARITY * d:
+        print(
+            f"::error::capacity invariant broken: pooled w8/c1024 at {p:.0f} ops/s is under "
+            f"{PARITY:.0%} of the dedicated c1024 baseline {d:.0f} ops/s — the waiter tree "
+            f"stopped paying for itself"
+        )
+        ok = False
+    else:
+        print(f"capacity invariant ok: pooled {p:.0f} ops/s >= {PARITY:.0%} of dedicated {d:.0f} ops/s")
+
+fixed, off = (rows.get(l) for l in ACCT_ROWS)
+if fixed is None or off is None:
+    print(f"::error::accounting rows {ACCT_ROWS} missing from fresh connection_churn record")
+    ok = False
+elif "charged_ns_per_op" not in fixed or "charged_ns_per_op" not in off:
+    # A missing metric must fail loudly, not read as charge 0.
+    print(f"::error::charged_ns_per_op extra missing from {ACCT_ROWS} — gate would be vacuous")
+    ok = False
+else:
+    f_ns, o_ns = fixed["charged_ns_per_op"], off["charged_ns_per_op"]
+    if f_ns <= 0:
+        print("::error::accounting rows charged nothing — gate would be vacuous")
+        ok = False
+    elif f_ns != o_ns:
+        print(
+            f"::error::elastic-off identity broken: fixed path charged {f_ns!r} ns/op but "
+            f"elastic_shards(false) charged {o_ns!r} — the disabled knob must be the fixed "
+            f"path byte for byte"
+        )
+        ok = False
+    else:
+        print(f"elastic-off identity ok: both accounting rows charged {f_ns!r} ns/op")
 
 sys.exit(0 if ok else 1)
 EOF

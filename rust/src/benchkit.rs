@@ -131,9 +131,13 @@ pub struct BenchRow {
     /// Median / p99 latency in ns (0 = not measured).
     pub p50_ns: f64,
     pub p99_ns: f64,
+    /// Deep tail: p99.9 latency in ns (0 = not measured).
+    pub p999_ns: f64,
     pub mean_ns: f64,
     /// Operations per second (0 = not measured).
     pub throughput_ops: f64,
+    /// Samples over the report's SLO threshold (0 when no SLO set).
+    pub slo_miss: f64,
     /// Free-form extra metrics (name, value).
     pub extra: Vec<(String, f64)>,
 }
@@ -144,6 +148,9 @@ pub struct BenchRow {
 pub struct BenchReport {
     name: String,
     rows: Vec<BenchRow>,
+    /// Latency SLO applied by [`BenchReport::row_hist`] to fill each
+    /// row's `slo_miss` column. None → column stays 0.
+    slo_ns: Option<u64>,
 }
 
 fn json_escape(s: &str) -> String {
@@ -171,31 +178,47 @@ fn json_num(v: f64) -> f64 {
 
 impl BenchReport {
     pub fn new(name: &str) -> BenchReport {
-        BenchReport { name: name.to_string(), rows: Vec::new() }
+        BenchReport { name: name.to_string(), rows: Vec::new(), slo_ns: None }
+    }
+
+    /// Set the latency SLO for subsequent [`BenchReport::row_hist`]
+    /// calls: each row's `slo_miss` column becomes the number of
+    /// samples over `ns`.
+    pub fn slo(&mut self, ns: u64) {
+        self.slo_ns = Some(ns);
     }
 
     /// Record a latency-style row (throughput derived where the bench
-    /// knows it; pass 0.0 for unmeasured fields).
+    /// knows it; pass 0.0 for unmeasured fields). The deep-tail /
+    /// SLO columns need a histogram — use [`BenchReport::row_hist`]
+    /// to fill them; here they stay 0.
     pub fn row(&mut self, label: &str, p50_ns: f64, p99_ns: f64, mean_ns: f64, thr: f64) {
         self.rows.push(BenchRow {
             label: label.to_string(),
             p50_ns,
             p99_ns,
+            p999_ns: 0.0,
             mean_ns,
             throughput_ops: thr,
+            slo_miss: 0.0,
             extra: Vec::new(),
         });
     }
 
-    /// Record a row from a histogram + ops/sec.
+    /// Record a row from a histogram + ops/sec, including the deep
+    /// tail (p99.9) and — when an SLO was set via
+    /// [`BenchReport::slo`] — the over-threshold sample count.
     pub fn row_hist(&mut self, label: &str, hist: &Histogram, thr: f64) {
-        self.row(
-            label,
-            hist.median_ns() as f64,
-            hist.p99_ns() as f64,
-            hist.mean_ns(),
-            thr,
-        );
+        self.rows.push(BenchRow {
+            label: label.to_string(),
+            p50_ns: hist.median_ns() as f64,
+            p99_ns: hist.p99_ns() as f64,
+            p999_ns: hist.p999_ns() as f64,
+            mean_ns: hist.mean_ns(),
+            throughput_ops: thr,
+            slo_miss: self.slo_ns.map(|s| hist.count_over_ns(s) as f64).unwrap_or(0.0),
+            extra: Vec::new(),
+        });
     }
 
     /// Attach an extra metric to the most recent row.
@@ -209,16 +232,18 @@ impl BenchReport {
         let mut s = String::new();
         s.push_str("{\n");
         s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.name)));
-        s.push_str("  \"schema\": 1,\n");
+        s.push_str("  \"schema\": 2,\n");
         s.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"label\": \"{}\", \"p50_ns\": {}, \"p99_ns\": {}, \"mean_ns\": {}, \"throughput_ops\": {}",
+                "    {{\"label\": \"{}\", \"p50_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}, \"mean_ns\": {}, \"throughput_ops\": {}, \"slo_miss\": {}",
                 json_escape(&r.label),
                 json_num(r.p50_ns),
                 json_num(r.p99_ns),
+                json_num(r.p999_ns),
                 json_num(r.mean_ns),
                 json_num(r.throughput_ops),
+                json_num(r.slo_miss),
             ));
             for (k, v) in &r.extra {
                 s.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
@@ -312,14 +337,31 @@ mod tests {
         r.row("nan-guard", f64::NAN, f64::INFINITY, 0.0, 0.0);
         let j = r.to_json();
         assert!(j.contains("\"bench\": \"unit\""));
+        assert!(j.contains("\"schema\": 2"));
         assert!(j.contains("plain \\\"quoted\\\""));
         assert!(j.contains("\"wakeups\": 3.5"));
+        assert!(j.contains("\"p999_ns\"") && j.contains("\"slo_miss\""));
         assert!(!j.contains("NaN") && !j.contains("inf"), "numbers must stay JSON-legal");
         // Separator discipline: one comma between the two rows.
         assert_eq!(j.matches("},\n").count(), 1);
         // Round-trip sanity without a JSON dep: balanced braces/brackets.
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn slo_columns_fill_from_histogram() {
+        let h = Histogram::new();
+        for ns in 1..=1000u64 {
+            h.record_ns(ns * 1000); // 1µs..1ms
+        }
+        let mut r = BenchReport::new("slo-unit");
+        r.row_hist("no-slo", &h, 0.0);
+        r.slo(500_000);
+        r.row_hist("with-slo", &h, 0.0);
+        assert_eq!(r.rows[0].slo_miss, 0.0, "no SLO set → column stays 0");
+        assert!(r.rows[1].slo_miss > 0.0, "half the ramp misses a 500µs SLO");
+        assert!(r.rows[1].p999_ns >= r.rows[1].p99_ns);
     }
 
     #[test]

@@ -97,13 +97,14 @@
 //!   synchronous `call_typed` returns.
 
 pub mod call;
+pub mod pool;
 pub mod ring;
 pub mod waiter;
 
 pub use call::{CallArg, CallHandle, CallOpts, Reply, TypedCallHandle};
 
-use crate::cluster::{DsmState, MapKind, PodId};
-use crate::config::SimConfig;
+use crate::cluster::{DsmState, MapKind, PodId, Topology};
+use crate::config::{AdmissionPolicy, SimConfig};
 use crate::daemon::Daemon;
 use crate::error::{Result, RpcError};
 use crate::memory::arena::ArgArena;
@@ -262,6 +263,25 @@ pub struct ChannelOpts {
     /// channel's heap(s) (`None` = config `magazine_cap`; `Some(0)` =
     /// fixed always-lock allocation, the pre-overhaul path).
     pub magazine_cap: Option<usize>,
+    /// Serve this channel from the daemon-wide worker pool instead of
+    /// dedicated listener threads: `k > 0` means "pool with at least
+    /// k workers" (clamped to [`pool::MAX_POOL_WORKERS`]); channels on
+    /// one host share the pool, so worker count stays decoupled from
+    /// channel count. `0` (the default) keeps today's per-channel
+    /// listener model byte for byte.
+    pub pool_workers: usize,
+    /// Elastic shard routing: connections start striping over one
+    /// shard and grow/shrink the *active* window (power-of-two steps,
+    /// within the fixed capacity `ring_shards`) under sustained
+    /// claim-fail pressure / idleness. Off (the default) = today's
+    /// fixed striping, untouched.
+    pub elastic_shards: bool,
+    /// What happens to a connect() beyond `conn_limit` (see
+    /// [`AdmissionPolicy`]); irrelevant while `conn_limit == 0`.
+    pub admission: AdmissionPolicy,
+    /// Live-connection ceiling that arms the admission policy
+    /// (0 = unlimited, the default).
+    pub conn_limit: usize,
 }
 
 impl ChannelOpts {
@@ -278,6 +298,10 @@ impl ChannelOpts {
             drain_k: cfg.drain_k,
             two_choice: cfg.two_choice,
             magazine_cap: None,
+            pool_workers: cfg.pool_workers,
+            elastic_shards: cfg.elastic_shards,
+            admission: cfg.admission,
+            conn_limit: cfg.conn_limit,
         }
     }
 }
@@ -379,6 +403,35 @@ impl ChannelBuilder {
     /// Default from the config's `magazine_cap`.
     pub fn magazine_cap(mut self, cap: usize) -> ChannelBuilder {
         self.opts.magazine_cap = Some(cap);
+        self
+    }
+
+    /// Serve this channel from the daemon-wide worker pool with at
+    /// least `k` workers (clamped to [`pool::MAX_POOL_WORKERS`]; see
+    /// [`ChannelOpts::pool_workers`]). `0` keeps dedicated listeners.
+    pub fn pool_workers(mut self, k: usize) -> ChannelBuilder {
+        self.opts.pool_workers = k;
+        self
+    }
+
+    /// Toggle elastic shard routing (see
+    /// [`ChannelOpts::elastic_shards`]; default from the config).
+    pub fn elastic_shards(mut self, on: bool) -> ChannelBuilder {
+        self.opts.elastic_shards = on;
+        self
+    }
+
+    /// Overload policy once `conn_limit` live connections exist (see
+    /// [`AdmissionPolicy`]).
+    pub fn admission(mut self, policy: AdmissionPolicy) -> ChannelBuilder {
+        self.opts.admission = policy;
+        self
+    }
+
+    /// Live-connection ceiling arming the admission policy
+    /// (0 = unlimited).
+    pub fn conn_limit(mut self, n: usize) -> ChannelBuilder {
+        self.opts.conn_limit = n;
         self
     }
 
@@ -541,6 +594,22 @@ pub struct Shard {
 /// (and re-stamps the clock) at its first failed claim.
 pub(crate) const CLAIM_FAIL_DECAY: Duration = Duration::from_millis(100);
 
+/// Elastic growth trigger: a shard whose `claim_fails` counter reaches
+/// this while routed-to doubles the active window. Low enough that a
+/// congested window reacts within one claim-timeout burst, high
+/// enough that a single full-ring blip doesn't double the footprint.
+pub(crate) const ELASTIC_GROW_FAILS: u64 = 8;
+
+/// Elastic shrink cadence: every this-many route() calls, one caller
+/// checks whether the upper half of the active window is quiescent
+/// (zero depth, zero claim-fails) and halves it if so. Amortizes the
+/// O(active/2) scan to nothing on the hot path.
+pub(crate) const ELASTIC_SHRINK_PERIOD: u64 = 1024;
+
+/// How long a `AdmissionPolicy::Queue` connect waits for a live
+/// connection to close before giving up with a timeout.
+pub(crate) const ADMIT_QUEUE_WAIT: Duration = Duration::from_millis(500);
+
 impl Shard {
     fn new(ring: RpcRing, arena: Option<ArgArena>) -> Shard {
         Shard {
@@ -620,6 +689,24 @@ pub struct ConnShared {
     born: Instant,
     closed: AtomicBool,
     accepted: AtomicBool,
+    /// Elastic shard routing on: callers stripe over the *active*
+    /// window (`active_shards`), which grows/shrinks in power-of-two
+    /// steps inside the fixed capacity `shards.len()`. Off = fixed
+    /// striping over all shards, byte for byte the pre-elastic path.
+    elastic: bool,
+    /// Routing-window width (power of two ≤ `shards.len()`); only
+    /// consulted when `elastic`. Servers always sweep ALL capacity
+    /// shards, so a shrink needs no handoff coordination: in-flight
+    /// requests on deactivated shards complete normally, per-thread
+    /// pins keep FIFO threads on their shard until drained, and new
+    /// routes simply stop picking the upper half.
+    active_shards: AtomicUsize,
+    /// Route-call counter driving the periodic shrink check.
+    route_ops: AtomicU64,
+    /// Admitted shed-class (AdmissionPolicy::Shed over the limit):
+    /// served with minimal drain budget so overload degrades this
+    /// connection first.
+    shed: AtomicBool,
 }
 
 impl ConnShared {
@@ -650,12 +737,98 @@ impl ConnShared {
     }
 
     /// The shard this thread stripes to (stable per thread, so FIFO
-    /// within a shard covers per-thread program order).
+    /// within a shard covers per-thread program order). Elastic
+    /// connections stripe over the active window only.
     #[inline]
     pub(crate) fn shard_for_thread(&self) -> (usize, &Shard) {
-        // `shards.len()` is forced to a power of two at connect time.
-        let i = thread_stripe() & (self.shards.len() - 1);
+        // Both the capacity and the active window are powers of two.
+        let i = thread_stripe() & (self.route_shards() - 1);
         (i, &self.shards[i])
+    }
+
+    /// Width of the routing window: the elastic active count, or the
+    /// full capacity when elastic routing is off (one branch — the
+    /// fixed path pays no atomics).
+    #[inline]
+    pub(crate) fn route_shards(&self) -> usize {
+        if self.elastic {
+            self.active_shards.load(Ordering::Acquire)
+        } else {
+            self.shards.len()
+        }
+    }
+
+    /// Elastic active-window width (== capacity when elastic is off).
+    pub fn active_shard_count(&self) -> usize {
+        self.route_shards()
+    }
+
+    /// Admitted as shed-class (served with minimal budget)?
+    pub fn is_shed(&self) -> bool {
+        self.shed.load(Ordering::Acquire)
+    }
+
+    /// Elastic growth hook, called on a failed claim: sustained
+    /// pressure (ELASTIC_GROW_FAILS fails recorded against the routed
+    /// shard) doubles the active window, up to capacity. The
+    /// triggering shard's counter resets so the *next* doubling needs
+    /// fresh evidence — otherwise one hot shard's backlog would climb
+    /// the window to capacity in one burst.
+    pub(crate) fn note_pressure(&self, si: usize) {
+        if !self.elastic {
+            return;
+        }
+        if self.shards[si].claim_fails.load(Ordering::Relaxed) < ELASTIC_GROW_FAILS {
+            return;
+        }
+        let cur = self.active_shards.load(Ordering::Acquire);
+        if cur >= self.shards.len() {
+            return;
+        }
+        if self
+            .active_shards
+            .compare_exchange(cur, (cur * 2).min(self.shards.len()), Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.shards[si].claim_fails.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Elastic shrink check (amortized: one caller per
+    /// ELASTIC_SHRINK_PERIOD route() calls runs it). Halves the
+    /// active window when its upper half is fully quiescent — no
+    /// in-flight routes, no ring occupancy, no recent claim fails.
+    /// Shrink is advisory: servers sweep all capacity shards
+    /// regardless, so a request that raced onto a deactivated shard
+    /// still completes, and pinned threads drain before re-striping.
+    fn maybe_shrink(&self) {
+        let cur = self.active_shards.load(Ordering::Acquire);
+        if cur <= 1 {
+            return;
+        }
+        let half = cur / 2;
+        for sh in &self.shards[half..cur] {
+            if sh.depth.load(Ordering::Relaxed) != 0
+                || sh.claim_fails.load(Ordering::Relaxed) != 0
+                || !sh.ring.quiescent()
+            {
+                return;
+            }
+        }
+        let _ = self
+            .active_shards
+            .compare_exchange(cur, half, Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    /// Per-route elastic bookkeeping: count the call and run the
+    /// periodic shrink check. No-op (never called) when elastic is
+    /// off.
+    #[inline]
+    pub(crate) fn elastic_tick(&self) {
+        let n = self.route_ops.fetch_add(1, Ordering::Relaxed);
+        if n % ELASTIC_SHRINK_PERIOD == ELASTIC_SHRINK_PERIOD - 1 {
+            self.maybe_shrink();
+        }
     }
 
     /// No in-flight work on any shard (drain/shutdown paths and the
@@ -728,10 +901,15 @@ pub struct ServerCore {
     /// The shared channel-wide heap, if `opts.shared_heap`.
     shared_heap: Mutex<Option<Arc<Heap>>>,
     served: AtomicU64,
-    /// Channel-wide request doorbell: every connection's `publish()`
-    /// rings it, so a single parked listener wakes for any of them
-    /// (`SleepPolicy::Park`).
+    /// Channel-wide request doorbell. Dedicated-listener mode: every
+    /// connection's `publish()` rings it, so a single parked listener
+    /// wakes for any of them (`SleepPolicy::Park`). Pooled mode:
+    /// connections get private per-shard bells instead, and this bell
+    /// carries only accept events into the pool's waiter tree.
     bell: Arc<Doorbell>,
+    /// The daemon-wide worker pool serving this channel
+    /// (`opts.pool_workers > 0`); `None` = dedicated listeners.
+    pool: Option<Arc<pool::WorkerPool>>,
 }
 
 /// Server-side channel handle (the paper's `RPC rpc; rpc.open(...)`).
@@ -748,6 +926,14 @@ impl RpcServer {
         charger.charge_ns(charger.cost.channel_create_us * 1000);
 
         let daemon = Daemon::new(env.host, Arc::clone(&rack.orch));
+        // Pooled serving: channels on one (orchestrator, host) share
+        // the daemon-wide worker pool, so worker count stays
+        // decoupled from channel count.
+        let wpool = if opts.pool_workers > 0 {
+            Some(daemon.worker_pool(opts.pool_workers))
+        } else {
+            None
+        };
         let core = Arc::new(ServerCore {
             name: name.to_string(),
             env: env.clone(),
@@ -762,7 +948,13 @@ impl RpcServer {
             shared_heap: Mutex::new(None),
             served: AtomicU64::new(0),
             bell: Doorbell::new_arc(),
+            pool: wpool,
         });
+        if let Some(p) = &core.pool {
+            // The accept slot: connect()'s channel-bell ring now pops
+            // a pool worker, which adopts the queued connection.
+            p.register_accept(&core);
+        }
 
         // Register with the orchestrator: a placeholder heap id is
         // fine until the first connection exists.
@@ -894,6 +1086,9 @@ impl RpcServer {
             let mut progress = false;
             for conn in &conns {
                 let nsh = conn.shards.len();
+                // Shed-class connections keep only a minimal budget:
+                // admitted under overload, degraded first, by policy.
+                let budget = if conn.is_shed() { 1 } else { drain_k };
                 loop {
                     let mut took = false;
                     for k in 0..nsh {
@@ -902,7 +1097,7 @@ impl RpcServer {
                         // Drain up to k requests from this shard with
                         // quiet replies...
                         let mut drained = 0usize;
-                        while drained < drain_k {
+                        while drained < budget {
                             match sh.ring.take_request() {
                                 Some(slot) => {
                                     self.core.handle_slot_quiet(conn, si, slot);
@@ -980,6 +1175,14 @@ impl RpcServer {
     /// may take from any shard, so one stalled shard never idles the
     /// rest. Join all handles after `stop()`.
     pub fn spawn_listeners(&self, k: usize) -> Vec<std::thread::JoinHandle<()>> {
+        if let Some(p) = &self.core.pool {
+            // Pooled channel: no per-channel threads at all — the
+            // daemon-wide pool (grown to at least k workers, capped
+            // at MAX_POOL_WORKERS) serves this channel through the
+            // waiter tree. Nothing to join.
+            p.ensure_workers(k.max(1));
+            return Vec::new();
+        }
         (0..k.max(1))
             .map(|w| {
                 let s = RpcServer { core: Arc::clone(&self.core) };
@@ -991,6 +1194,12 @@ impl RpcServer {
     pub fn stop(&self) {
         self.core.stop.store(true, Ordering::Release);
         self.core.accept_cv.notify_all();
+        // Pooled channel: withdraw every tree slot now so pool
+        // workers stop touching this core (idempotent; sweeps also
+        // self-clean on the stop flag).
+        if let Some(p) = &self.core.pool {
+            p.forget_core(&self.core);
+        }
         // Wake a parked listener so it observes the stop flag now
         // rather than at the end of its park slice.
         self.core.bell.ring();
@@ -1057,6 +1266,103 @@ impl ServerCore {
     /// coalesced `flush_respond` per shard per sweep to the caller.
     pub fn handle_slot_quiet(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize) {
         self.handle_slot_opts(conn, shard, slot, true)
+    }
+
+    /// Drain up to `budget` requests from one shard with quiet
+    /// replies, then one coalesced response doorbell — the worker
+    /// pool's unit of serving (one shard iteration of
+    /// `listen_worker`'s sweep, factored out). Returns the number
+    /// drained; a full-budget return means the shard may still hold
+    /// requests whose publish rings were already consumed, so pooled
+    /// callers must reschedule it (`WaiterTree::kick`).
+    pub(crate) fn serve_shard(&self, conn: &Arc<ConnShared>, si: usize, budget: usize) -> usize {
+        let sh = &conn.shards[si];
+        let mut drained = 0usize;
+        while drained < budget {
+            match sh.ring.take_request() {
+                Some(slot) => {
+                    self.handle_slot_quiet(conn, si, slot);
+                    drained += 1;
+                }
+                None => break,
+            }
+        }
+        if drained > 0 {
+            sh.ring.flush_respond();
+        }
+        drained
+    }
+
+    /// Accept every queued connection without blocking and return the
+    /// newly accepted batch (the worker pool's adoption path; the
+    /// dedicated listener inlines the same dance in its sweep).
+    pub(crate) fn adopt_pending(&self) -> Vec<Arc<ConnShared>> {
+        let mut out = Vec::new();
+        let mut acc = self.accepting.lock().unwrap();
+        while let Some(c) = acc.queue.pop() {
+            c.accepted.store(true, Ordering::Release);
+            self.conns.lock().unwrap().push(Arc::clone(&c));
+            out.push(c);
+        }
+        out
+    }
+
+    /// Live connections from this channel's point of view: accepted
+    /// and not yet closed, plus anything still queued for accept.
+    fn live_conns(&self) -> usize {
+        self.conns.lock().unwrap().iter().filter(|c| !c.closed()).count()
+            + self.accepting.lock().unwrap().queue.len()
+    }
+
+    /// Admission decision for one incoming connect: what happens once
+    /// `conn_limit` live connections exist (tentpole part 3 — overload
+    /// degrades by policy, not collapse). Returns whether the new
+    /// connection is **shed-class**. Policy table (DESIGN.md §12):
+    /// Open always admits; Reject fails fast; Queue waits (bounded)
+    /// for a slot to free; Shed admits but marks the connection for
+    /// minimal serving budget.
+    fn admit(&self) -> Result<bool> {
+        use crate::orchestrator::{ADM_ADMITTED, ADM_QUEUED, ADM_REJECTED, ADM_SHED};
+        let orch = &self.env.rack.orch;
+        let limit = self.opts.conn_limit;
+        if limit == 0 || self.live_conns() < limit {
+            orch.admission().add(ADM_ADMITTED, 1);
+            return Ok(false);
+        }
+        match self.opts.admission {
+            AdmissionPolicy::Open => {
+                orch.admission().add(ADM_ADMITTED, 1);
+                Ok(false)
+            }
+            AdmissionPolicy::Reject => {
+                orch.admission().add(ADM_REJECTED, 1);
+                Err(RpcError::ConnectionRefused(
+                    self.name.clone(),
+                    format!("admission: channel at capacity ({limit} connections)"),
+                ))
+            }
+            AdmissionPolicy::Queue => {
+                orch.admission().add(ADM_QUEUED, 1);
+                let deadline = Instant::now() + ADMIT_QUEUE_WAIT;
+                while limit != 0 && self.live_conns() >= limit {
+                    if self.stop.load(Ordering::Acquire) {
+                        return Err(RpcError::ConnectionClosed);
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(RpcError::Timeout(
+                            "admission queue (channel at capacity)".into(),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                orch.admission().add(ADM_ADMITTED, 1);
+                Ok(false)
+            }
+            AdmissionPolicy::Shed => {
+                orch.admission().add(ADM_SHED, 1);
+                Ok(true)
+            }
+        }
     }
 
     fn handle_slot_opts(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize, quiet: bool) {
@@ -1238,6 +1544,12 @@ impl Connection {
         // ACL check through the orchestrator.
         rack.orch.check_connect(name, env.uid)?;
 
+        // Admission policy (before any heap is created or cost
+        // charged): over the channel's live-connection ceiling the
+        // connect is rejected, queued, or admitted shed-class — by
+        // policy, never by collapse.
+        let shed = core.admit()?;
+
         let charger = &rack.pool.charger;
         charger.charge_ns(charger.cost.channel_connect_us * 1000);
 
@@ -1306,12 +1618,18 @@ impl Connection {
         };
         let mut shards = Vec::with_capacity(nshards);
         for _ in 0..nshards {
-            let ring = RpcRing::create_opts(
-                &heap,
-                opts.ring_slots,
-                signal_ns,
-                Some(Arc::clone(&core.bell)),
-            )?;
+            // Pooled channel: each shard gets a private request bell,
+            // attached to the pool's waiter tree at adoption — the
+            // tree records *which* shard rang, which the one shared
+            // channel-wide bell cannot carry. Dedicated listeners
+            // keep the shared bell (one parked listener covers all
+            // connections and shards), byte for byte as before.
+            let req_bell = if core.pool.is_some() {
+                Doorbell::new_arc()
+            } else {
+                Arc::clone(&core.bell)
+            };
+            let ring = RpcRing::create_opts(&heap, opts.ring_slots, signal_ns, Some(req_bell))?;
             let arena = if arena_bytes < heap.page_size() {
                 None
             } else {
@@ -1319,12 +1637,10 @@ impl Connection {
             };
             shards.push(Shard::new(ring, arena));
         }
-        // DSM node ids are the endpoints' pod ids. Forcing an RDMA
-        // transport *inside* one pod (benchmarks, tests) still needs
-        // two distinct nodes for pages to ping-pong between, so the
-        // server side gets a synthetic far id in that case.
-        let client_node = client_pod;
-        let server_node = if server_pod == client_pod { PodId::MAX } else { server_pod };
+        // DSM node ids are the endpoints' pod ids; the forced-RDMA
+        // same-pod case is a topology fact (see
+        // `Topology::dsm_peer_nodes`), not a connect-site sentinel.
+        let (client_node, server_node) = Topology::dsm_peer_nodes(client_pod, server_pod);
         let dsm = if use_dsm {
             Some(DsmState::new_multi(&heap, cfg.page_bytes, &[client_node, server_node], client_node))
         } else {
@@ -1345,6 +1661,13 @@ impl Connection {
             born: Instant::now(),
             closed: AtomicBool::new(false),
             accepted: AtomicBool::new(false),
+            elastic: opts.elastic_shards,
+            // Elastic connections start narrow (one shard) and earn
+            // width under pressure; fixed connections route over the
+            // whole capacity from the first call, as always.
+            active_shards: AtomicUsize::new(if opts.elastic_shards { 1 } else { nshards }),
+            route_ops: AtomicU64::new(0),
+            shed: AtomicBool::new(shed),
         });
 
         // Hand the connection to the server. The daemon+orchestrator
@@ -1453,8 +1776,17 @@ impl Connection {
     /// [`Connection::unroute`] when the routed call(s) complete —
     /// that is what keeps the `depth` occupancy signal honest.
     pub(crate) fn route(&self, weight: u64) -> Route {
-        let n = self.shared.shards.len();
-        if n == 1 || !self.opts.two_choice {
+        // Elastic connections always take the tracked path, over the
+        // *active* window: the depth/claim-fail signals are what
+        // drive grow/shrink, so they must be fed even while the
+        // window is one shard wide. The fixed path keeps its
+        // untracked fast outs byte for byte.
+        let elastic = self.shared.elastic;
+        if elastic {
+            self.shared.elastic_tick();
+        }
+        let n = self.shared.route_shards();
+        if !elastic && (n == 1 || !self.opts.two_choice) {
             let (si, _) = self.shared.shard_for_thread();
             return Route { si, weight: 0, pin: None };
         }
@@ -1512,6 +1844,11 @@ impl Connection {
     /// three shifts and two xors to the fast path instead of a
     /// cross-core cache-line read.
     fn pick_two_choice(&self, n: usize) -> usize {
+        // A one-wide window (elastic connections start here) has no
+        // second choice to probe.
+        if n == 1 {
+            return 0;
+        }
         let home = thread_stripe() & (n - 1);
         // d-1 distinct-from-home probes; wide channels (≥16 shards)
         // get d=4 — with only two choices the expected max load still
@@ -2306,6 +2643,10 @@ impl Connection {
             None => {
                 if tracked {
                     shard.note_claim_fail(self.shared.now_ns());
+                    // Elastic growth hook (no-op on fixed
+                    // connections): sustained full-ring pressure on
+                    // the routed shard doubles the active window.
+                    self.shared.note_pressure(route.si);
                 }
                 self.claim_slow(&shard.ring, timeout, inline)
             }
@@ -3755,6 +4096,223 @@ mod tests {
         assert_eq!(arena.spills(), 0, "steady-state traffic never hits the heap mutex");
         assert!(arena.resets() > 0, "recycling actually happened");
         drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// The ISSUE 7 capacity acceptance row as a deterministic unit
+    /// test: one daemon-wide pool of ≤ 8 workers serves 1024
+    /// concurrent channels through the waiter tree, with zero
+    /// per-channel listener threads (`spawn_listeners` returns no
+    /// handles in pooled mode — asserted per channel).
+    #[test]
+    fn pooled_workers_serve_a_thousand_channels_without_listener_threads() {
+        let mut cfg = SimConfig::for_tests();
+        cfg.pool_bytes = 1 << 30; // 1024 connection heaps
+        let rack = Rack::new(cfg);
+        let env = rack.proc_env(0);
+        const CHANNELS: usize = 1024;
+        let mut servers = Vec::with_capacity(CHANNELS);
+        for i in 0..CHANNELS {
+            let s = ChannelBuilder::from_config(&rack.cfg)
+                .heap_bytes(192 << 10)
+                .ring_slots(8)
+                .ring_shards(1)
+                .arg_arena_bytes(0)
+                .pool_workers(8)
+                .open(&env, &format!("pool{i}"))
+                .unwrap();
+            s.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 7));
+            assert!(
+                s.spawn_listeners(4).is_empty(),
+                "pooled channels must not spawn listener threads"
+            );
+            servers.push(s);
+        }
+        let cenv = rack.proc_env(1);
+        let conns: Vec<Connection> = (0..CHANNELS)
+            .map(|i| Rpc::connect(&cenv, &format!("pool{i}")).unwrap())
+            .collect();
+        cenv.run(|| {
+            for round in 0..2u64 {
+                for (i, conn) in conns.iter().enumerate() {
+                    let v = round * 1_000_000 + i as u64;
+                    let r = conn.call_scalar::<u64>(1, &v, CallOpts::new()).unwrap();
+                    assert_eq!(r, v + 7, "channel {i} round {round}");
+                }
+            }
+        });
+        let served: u64 = servers.iter().map(|s| s.served()).sum();
+        assert_eq!(served, 2 * CHANNELS as u64, "every channel served through the pool");
+        drop(conns);
+        for s in &servers {
+            s.stop();
+        }
+    }
+
+    /// Pooled workers must park when idle and wake through the
+    /// aggregated doorbell tree — bursts separated by idle windows
+    /// longer than the park spin budget all get served.
+    #[test]
+    fn pooled_channel_wakes_after_idle() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .pool_workers(2)
+            .sleep(SleepPolicy::Park)
+            .open(&env, "pool-parked")
+            .unwrap();
+        server.serve::<u64, u64>(101, |_ctx, v| Ok(*v * 2));
+        assert!(server.spawn_listeners(1).is_empty());
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "pool-parked").unwrap();
+        cenv.run(|| {
+            for burst in 0..2u64 {
+                for i in 0..20u64 {
+                    let r = conn.call_typed::<u64, u64>(101, &i, CallOpts::new()).unwrap();
+                    assert_eq!(r.take().unwrap(), i * 2, "burst {burst}");
+                }
+                std::thread::sleep(Duration::from_millis(30));
+            }
+        });
+        assert_eq!(server.served(), 40);
+        drop(conn);
+        server.stop();
+    }
+
+    /// Elastic shard-window state machine, driven deterministically
+    /// through its crate-internal hooks: grow doubles under recorded
+    /// claim-fail pressure (resetting the triggering shard's
+    /// evidence), saturates at capacity, and the periodic shrink
+    /// check halves the window only while the upper half is fully
+    /// quiescent — one halving per period.
+    #[test]
+    fn elastic_window_grows_under_pressure_and_shrinks_when_idle() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(4)
+            .ring_slots(4)
+            .elastic_shards(true)
+            .open(&env, "elastic-fsm")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "elastic-fsm").unwrap();
+        let sh = &conn.shared;
+        assert_eq!(sh.shard_count(), 4, "capacity unchanged by elastic");
+        assert_eq!(sh.active_shard_count(), 1, "elastic connections start narrow");
+
+        // Below the evidence threshold nothing moves.
+        sh.shards[0].claim_fails.store(ELASTIC_GROW_FAILS - 1, Ordering::Relaxed);
+        sh.note_pressure(0);
+        assert_eq!(sh.active_shard_count(), 1);
+        // At the threshold the window doubles and the evidence resets.
+        sh.shards[0].claim_fails.store(ELASTIC_GROW_FAILS, Ordering::Relaxed);
+        sh.note_pressure(0);
+        assert_eq!(sh.active_shard_count(), 2);
+        assert_eq!(sh.shards[0].claim_fails.load(Ordering::Relaxed), 0, "evidence consumed");
+        sh.shards[0].claim_fails.store(ELASTIC_GROW_FAILS, Ordering::Relaxed);
+        sh.note_pressure(0);
+        assert_eq!(sh.active_shard_count(), 4);
+        // Saturated: more pressure is a no-op.
+        sh.shards[0].claim_fails.store(ELASTIC_GROW_FAILS, Ordering::Relaxed);
+        sh.note_pressure(0);
+        assert_eq!(sh.active_shard_count(), 4);
+        sh.shards[0].claim_fails.store(0, Ordering::Relaxed);
+
+        // Calls work at full width (servers sweep all capacity
+        // shards, so width changes need no server coordination).
+        cenv.run(|| {
+            for i in 0..8u64 {
+                let r = conn.call_scalar::<u64>(1, &i, CallOpts::new()).unwrap();
+                assert_eq!(r, i + 1);
+            }
+        });
+
+        // Idle: one shrink check fires per ELASTIC_SHRINK_PERIOD
+        // route ticks, each halving at most once — 4 → 2 → 1.
+        for _ in 0..ELASTIC_SHRINK_PERIOD {
+            sh.elastic_tick();
+        }
+        assert_eq!(sh.active_shard_count(), 2, "one period, one halving");
+        for _ in 0..ELASTIC_SHRINK_PERIOD {
+            sh.elastic_tick();
+        }
+        assert_eq!(sh.active_shard_count(), 1, "fully idle window collapses to one shard");
+
+        // And the narrow window still serves.
+        cenv.run(|| {
+            let r = conn.call_scalar::<u64>(1, &99, CallOpts::new()).unwrap();
+            assert_eq!(r, 100);
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// Elastic off (the default): the window is pinned to capacity
+    /// and never moves — the pressure/shrink hooks are inert.
+    #[test]
+    fn elastic_off_pins_window_to_capacity() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .ring_shards(4)
+            .open(&env, "elastic-off")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "elastic-off").unwrap();
+        assert_eq!(conn.shared.active_shard_count(), 4, "full width from the first call");
+        conn.shared.shards[0].claim_fails.store(ELASTIC_GROW_FAILS * 4, Ordering::Relaxed);
+        conn.shared.note_pressure(0);
+        assert_eq!(conn.shared.active_shard_count(), 4, "pressure hook inert");
+        conn.shared.shards[0].claim_fails.store(0, Ordering::Relaxed);
+        cenv.run(|| {
+            for i in 0..4u64 {
+                let r = conn.call_scalar::<u64>(1, &i, CallOpts::new()).unwrap();
+                assert_eq!(r, i + 1);
+            }
+        });
+        drop(conn);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// Admission accounting: the orchestrator's counters partition
+    /// connects exactly across admitted/rejected under `Reject`.
+    #[test]
+    fn admission_counters_partition_connects() {
+        use crate::orchestrator::{ADM_ADMITTED, ADM_REJECTED};
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .admission(AdmissionPolicy::Reject)
+            .conn_limit(2)
+            .open(&env, "adm-count")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        let t = server.spawn_listener();
+        let cenv = rack.proc_env(1);
+        let before_adm = rack.orch.admission().get(ADM_ADMITTED);
+        let before_rej = rack.orch.admission().get(ADM_REJECTED);
+        let held: Vec<Connection> =
+            (0..2).map(|_| Rpc::connect(&cenv, "adm-count").unwrap()).collect();
+        for k in 0..3 {
+            match Rpc::connect(&cenv, "adm-count") {
+                Err(RpcError::ConnectionRefused(name, why)) => {
+                    assert_eq!(name, "adm-count");
+                    assert!(why.contains("admission"), "attempt {k}: {why}");
+                }
+                other => panic!("expected refusal over the ceiling, got {other:?}"),
+            }
+        }
+        assert_eq!(rack.orch.admission().get(ADM_ADMITTED) - before_adm, 2);
+        assert_eq!(rack.orch.admission().get(ADM_REJECTED) - before_rej, 3);
+        drop(held);
         server.stop();
         t.join().unwrap();
     }

@@ -1,0 +1,336 @@
+//! Daemon-wide channel worker pool: k workers serving every pooled
+//! channel on a host through one [`WaiterTree`].
+//!
+//! The dedicated-listener model (`RpcServer::spawn_listeners`) ties
+//! thread count to channel count — fine for a benchmark, fatal for
+//! "one daemon, tens of thousands of channels". Here every pooled
+//! connection's per-shard request bells register into a shared
+//! [`WaiterTree`]; a pool of at most [`MAX_POOL_WORKERS`] workers
+//! parks on the tree's **root** doorbell and sweeps only the slots
+//! that actually rang. Worker count is decoupled from channel count:
+//! k workers serve 10k+ channels, waking only for ready ones.
+//!
+//! Pools are keyed per `(orchestrator, host)` — the unit the paper's
+//! daemon mediates — in a process-wide registry, so every
+//! `RpcServer::open` on one simulated host shares the same pool no
+//! matter how many `Daemon` values it constructs.
+//!
+//! ## Why leftovers can't starve (the budget re-kick)
+//!
+//! A sweep serves at most the server's drain budget per shard, but the
+//! publish rings that announced those requests were consumed when
+//! `pop_ready` swapped the dirty mask out. If the budget was exhausted
+//! with requests still pending, nobody would ever ring again for them
+//! — so the worker re-kicks the shard bit into the tree whenever it
+//! drained its full budget. At worst this costs one spurious re-sweep
+//! (the "maybe more" bit finds an empty ring); in exchange a flooded
+//! shard is rescheduled fairly behind every other ready slot instead
+//! of being drained to exhaustion while its neighbours wait.
+
+use super::waiter::{TreeSlot, WaiterTree, LOAD, PARK_SLICE_US};
+use super::{ConnShared, ServerCore};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::Duration;
+
+/// Hard ceiling on workers per pool — the acceptance bar is "k ≤ 8
+/// workers serve ≥ 1k channels", and a larger pool only re-introduces
+/// the thread-per-channel scaling this layer exists to kill.
+pub const MAX_POOL_WORKERS: usize = 8;
+
+/// What a tree slot maps back to: either a channel's accept queue or
+/// one adopted connection. `Weak<ServerCore>` breaks the cycle — the
+/// core holds the pool, the pool must not hold the core.
+enum Entry {
+    /// Slot for a channel's accept path: bit 0 rings when `connect`
+    /// enqueues a new connection on `core.accepting`.
+    Accept { core: Weak<ServerCore>, slot: Arc<TreeSlot> },
+    /// Slot for one adopted connection: bit i rings when shard i
+    /// publishes a request.
+    Conn {
+        core: Weak<ServerCore>,
+        conn: Arc<ConnShared>,
+        slot: Arc<TreeSlot>,
+    },
+}
+
+impl Clone for Entry {
+    fn clone(&self) -> Entry {
+        match self {
+            Entry::Accept { core, slot } => Entry::Accept {
+                core: Weak::clone(core),
+                slot: Arc::clone(slot),
+            },
+            Entry::Conn { core, conn, slot } => Entry::Conn {
+                core: Weak::clone(core),
+                conn: Arc::clone(conn),
+                slot: Arc::clone(slot),
+            },
+        }
+    }
+}
+
+/// Shared pool state: worker threads hold this (not the
+/// [`WorkerPool`]), so dropping the last pool handle can stop and
+/// join them.
+struct PoolInner {
+    tree: Arc<WaiterTree>,
+    /// Tree-slot id → what to serve when it pops ready.
+    entries: RwLock<HashMap<usize, Entry>>,
+    stop: AtomicBool,
+    nworkers: AtomicUsize,
+}
+
+/// A daemon-wide serving pool (see module docs). Obtained through
+/// `Daemon::worker_pool`; shared by every pooled channel of one
+/// simulated host.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Process-wide pool registry: `(orchestrator ptr, host)` → pool. A
+/// linear Vec (not a map) so the static is const-constructible; the
+/// registry holds weaks and prunes dead entries on every lookup, so a
+/// torn-down rack's pools don't leak.
+static POOLS: Mutex<Vec<((usize, u32), Weak<WorkerPool>)>> = Mutex::new(Vec::new());
+
+impl WorkerPool {
+    /// The pool for `key`, creating it if absent (or if a previous
+    /// pool for the key was dropped), and growing it to at least
+    /// `workers` threads (clamped to [`MAX_POOL_WORKERS`]).
+    pub fn for_key(key: (usize, u32), workers: usize) -> Arc<WorkerPool> {
+        let mut reg = POOLS.lock().unwrap();
+        reg.retain(|(_, w)| w.strong_count() > 0);
+        if let Some((_, w)) = reg.iter().find(|(k, _)| *k == key) {
+            if let Some(pool) = w.upgrade() {
+                pool.ensure_workers(workers);
+                return pool;
+            }
+        }
+        let pool = Arc::new(WorkerPool {
+            inner: Arc::new(PoolInner {
+                tree: WaiterTree::new_arc(),
+                entries: RwLock::new(HashMap::new()),
+                stop: AtomicBool::new(false),
+                nworkers: AtomicUsize::new(0),
+            }),
+            workers: Mutex::new(Vec::new()),
+        });
+        reg.push((key, Arc::downgrade(&pool)));
+        pool.ensure_workers(workers);
+        pool
+    }
+
+    /// Grow the pool to at least `k` workers (never shrinks; never
+    /// exceeds [`MAX_POOL_WORKERS`]). Channels asking for different
+    /// sizes share the high-water mark.
+    pub fn ensure_workers(&self, k: usize) {
+        let want = k.clamp(1, MAX_POOL_WORKERS);
+        loop {
+            let cur = self.inner.nworkers.load(Ordering::Acquire);
+            if cur >= want {
+                return;
+            }
+            if self
+                .inner
+                .nworkers
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            let inner = Arc::clone(&self.inner);
+            let handle = std::thread::spawn(move || worker_loop(inner));
+            self.workers.lock().unwrap().push(handle);
+        }
+    }
+
+    /// Current worker count (tests/telemetry).
+    pub fn worker_count(&self) -> usize {
+        self.inner.nworkers.load(Ordering::Acquire)
+    }
+
+    /// Live tree slots (tests/telemetry): adopted connections plus
+    /// accept slots.
+    pub fn slot_count(&self) -> usize {
+        self.inner.tree.slot_count()
+    }
+
+    /// Register a channel's accept path: the accept slot pops ready
+    /// whenever `connect` rings the channel bell, and serving it
+    /// adopts every queued connection into the tree.
+    pub fn register_accept(&self, core: &Arc<ServerCore>) {
+        let slot = self.inner.tree.register();
+        self.inner.tree.attach(&core.bell, &slot, 0);
+        self.inner.entries.write().unwrap().insert(
+            slot.id(),
+            Entry::Accept { core: Arc::downgrade(core), slot: Arc::clone(&slot) },
+        );
+        // Cover connections that queued before the attach landed.
+        self.inner.tree.kick(&slot, 1);
+    }
+
+    /// Adopt one accepted connection: register a slot, attach every
+    /// shard's request bell at its shard bit, then force-mark all
+    /// shards ready — requests published before the bells were
+    /// attached never rang the tree, and the kick guarantees the
+    /// first sweep finds them anyway.
+    fn adopt(&self, core: &Arc<ServerCore>, conn: Arc<ConnShared>) {
+        let slot = self.inner.tree.register();
+        for (i, sh) in conn.shards.iter().enumerate().take(64) {
+            self.inner.tree.attach(sh.ring.req_bell(), &slot, i as u32);
+        }
+        let n = conn.shards.len();
+        let mask = if n >= 64 { u64::MAX } else { (1u64 << n) - 1 };
+        // Entry must be visible before the kick: a worker may pop the
+        // slot the instant the kick enqueues it.
+        self.inner.entries.write().unwrap().insert(
+            slot.id(),
+            Entry::Conn { core: Arc::downgrade(core), conn, slot: Arc::clone(&slot) },
+        );
+        self.inner.tree.kick(&slot, mask);
+    }
+
+    /// Drop every slot belonging to `core` (channel teardown).
+    /// Idempotent; also called when a sweep finds the core gone.
+    pub fn forget_core(&self, core: &Arc<ServerCore>) {
+        let target = Arc::as_ptr(core) as usize;
+        let mut entries = self.inner.entries.write().unwrap();
+        entries.retain(|_, e| {
+            let (w, slot) = match e {
+                Entry::Accept { core, slot } => (core, slot),
+                Entry::Conn { core, slot, .. } => (core, slot),
+            };
+            let mine = w.as_ptr() as usize == target;
+            if mine {
+                self.inner.tree.deregister(slot);
+            }
+            !mine
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        self.inner.tree.root().ring();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One pool worker: arm the root once for the thread's lifetime,
+/// sweep ready slots, park on the root when a full sweep (queue +
+/// safety-net scan) made no progress. The lost-wakeup argument is the
+/// [`WaiterTree`]'s: any member ring between the epoch snapshot and
+/// the park bumps the root epoch, so the park returns immediately.
+fn worker_loop(inner: Arc<PoolInner>) {
+    let root = Arc::clone(inner.tree.root());
+    root.arm();
+    LOAD.enter();
+    while !inner.stop.load(Ordering::Acquire) {
+        let seen = root.epoch();
+        let mut progress = false;
+        while let Some((sid, mask)) = inner.tree.pop_ready() {
+            progress |= serve_slot(&inner, sid, mask);
+            if inner.stop.load(Ordering::Acquire) {
+                break;
+            }
+        }
+        if !progress {
+            // Idle safety net: any dirty slot the queue somehow
+            // missed (or that a sibling re-kicked mid-pop) gets one
+            // more look before this worker parks.
+            for (sid, mask) in inner.tree.scan_ready() {
+                progress |= serve_slot(&inner, sid, mask);
+            }
+        }
+        if !progress && !inner.stop.load(Ordering::Acquire) {
+            LOAD.exit();
+            root.wait_past(seen, Duration::from_micros(PARK_SLICE_US));
+            LOAD.enter();
+        }
+    }
+    LOAD.exit();
+    root.disarm();
+}
+
+/// Serve one ready tree slot. Returns whether any request was
+/// actually drained (the worker's park decision).
+fn serve_slot(inner: &Arc<PoolInner>, sid: usize, mask: u64) -> bool {
+    let entry = match inner.entries.read().unwrap().get(&sid) {
+        Some(e) => e.clone(),
+        None => return false,
+    };
+    match entry {
+        Entry::Accept { core, slot } => {
+            let core = match core.upgrade() {
+                Some(c) => c,
+                None => {
+                    drop_slot(inner, sid, &slot);
+                    return false;
+                }
+            };
+            if core.stop.load(Ordering::Acquire) {
+                drop_slot(inner, sid, &slot);
+                return false;
+            }
+            let adopted = core.adopt_pending();
+            let any = !adopted.is_empty();
+            let pool = match core.pool.as_ref() {
+                Some(p) => Arc::clone(p),
+                None => return false,
+            };
+            for conn in adopted {
+                pool.adopt(&core, conn);
+            }
+            any
+        }
+        Entry::Conn { core, conn, slot } => {
+            let core = match core.upgrade() {
+                Some(c) => c,
+                None => {
+                    drop_slot(inner, sid, &slot);
+                    return false;
+                }
+            };
+            if conn.closed() || core.stop.load(Ordering::Acquire) {
+                drop_slot(inner, sid, &slot);
+                return false;
+            }
+            // Shed connections get a minimal budget: they stay live
+            // but overload degrades them first, by policy.
+            let budget = if conn.is_shed() { 1 } else { core.opts.drain_k.max(1) };
+            let mut any = false;
+            crate::simproc::with_identity(core.env.proc, core.env.host, || {
+                let mut m = mask;
+                while m != 0 {
+                    let si = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if si >= conn.shards.len() {
+                        continue;
+                    }
+                    let drained = core.serve_shard(&conn, si, budget);
+                    any |= drained > 0;
+                    if drained == budget {
+                        // Budget exhausted with possibly more pending
+                        // whose publish rings were already consumed —
+                        // reschedule the shard (see module docs).
+                        inner.tree.kick(&slot, 1u64 << si);
+                    }
+                }
+            });
+            any
+        }
+    }
+}
+
+/// Remove a dead slot (core gone, channel stopped, connection
+/// closed): deregister from the tree and drop the entry.
+fn drop_slot(inner: &Arc<PoolInner>, sid: usize, slot: &Arc<TreeSlot>) {
+    inner.tree.deregister(slot);
+    inner.entries.write().unwrap().remove(&sid);
+}

@@ -26,8 +26,9 @@
 //! concurrently) is bounded by `PARK_SLICE_US`: parked waits are
 //! sliced, so a lost wake-up costs at most one slice, never a hang.
 
-use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 /// Global count of threads currently spinning/working, and the
@@ -109,6 +110,12 @@ pub struct Doorbell {
     parked: AtomicU32,
     mu: Mutex<()>,
     cv: Condvar,
+    /// Optional aggregation edge: when set, every `ring()` also marks
+    /// this bell's shard bit in its [`WaiterTree`] slot and rings the
+    /// tree root — *before* the local armed fast path, because pool
+    /// workers park on the root and never arm member bells. Unattached
+    /// bells pay one relaxed load (`OnceLock::get`).
+    parent: OnceLock<TreeEdge>,
 }
 
 impl Doorbell {
@@ -119,6 +126,7 @@ impl Doorbell {
             parked: AtomicU32::new(0),
             mu: Mutex::new(()),
             cv: Condvar::new(),
+            parent: OnceLock::new(),
         }
     }
 
@@ -128,9 +136,14 @@ impl Doorbell {
 
     /// Producer side: wake any parked waiters. Wait-free (one atomic
     /// load) when nobody is armed — the doorbell costs the hot path
-    /// nothing unless a poller actually parks.
+    /// nothing unless a poller actually parks. Tree-attached bells
+    /// additionally propagate to their [`WaiterTree`] regardless of
+    /// the local armed count (the tree's waiters live on the root).
     #[inline]
     pub fn ring(&self) {
+        if let Some(edge) = self.parent.get() {
+            edge.tree.notify(&edge.slot, edge.bit);
+        }
         if self.armed.load(Ordering::SeqCst) == 0 {
             return;
         }
@@ -181,6 +194,184 @@ impl Doorbell {
 impl Default for Doorbell {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Doorbell aggregation: the WaiterTree
+
+/// One registered connection (or accept queue) inside a
+/// [`WaiterTree`]: a 64-bit dirty mask (one bit per ring shard) plus
+/// a single-entry guard for the tree's pending queue.
+pub struct TreeSlot {
+    id: usize,
+    /// Bit i set ⇔ shard i rang since the last sweep took the mask.
+    dirty: AtomicU64,
+    /// 1 while the slot sits in the pending queue (at most one entry
+    /// per slot, however many shards ring concurrently).
+    queued: AtomicU32,
+    /// Deregistered: sweeps and scans skip it; queue entries drain
+    /// lazily.
+    dead: AtomicBool,
+}
+
+impl TreeSlot {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+}
+
+/// The edge a member [`Doorbell`] stores: which tree, which slot,
+/// which shard bit.
+pub struct TreeEdge {
+    tree: Arc<WaiterTree>,
+    slot: Arc<TreeSlot>,
+    bit: u32,
+}
+
+/// Epoll-style doorbell aggregation: many connections' request bells
+/// register as [`TreeSlot`]s; every member ring marks its shard bit,
+/// enqueues the slot (once) on a pending queue, and rings the shared
+/// **root** doorbell. A pool of k workers parks on the root alone and
+/// sweeps only ready slots — worker count decouples from channel
+/// count.
+///
+/// # Lost-wakeup argument (extends DESIGN.md §9 across aggregation)
+///
+/// The root bell keeps the coalesced-epoch protocol: workers arm the
+/// root once for their lifetime, snapshot its epoch, sweep, and only
+/// park when the sweep made no progress — so any member ring between
+/// the snapshot and the park bumps the root epoch and the park
+/// returns immediately. Within a slot, `pop_ready` clears `queued`
+/// *before* swapping out the dirty mask; a ring racing the sweep
+/// therefore either lands in the mask the sweep takes, or finds
+/// `queued == 0` and re-enqueues the slot (at worst a benign spurious
+/// pop). Rings are never dropped: `dirty` is only cleared by the swap
+/// that hands the mask to a worker. As a belt-and-braces bound, idle
+/// workers full-scan registered slots before parking
+/// ([`WaiterTree::scan_ready`]), so even a hypothetically missed
+/// queue entry costs at most one park slice.
+pub struct WaiterTree {
+    root: Arc<Doorbell>,
+    slots: RwLock<Vec<Option<Arc<TreeSlot>>>>,
+    /// Slots with (probably) nonzero dirty masks, in ring order. A
+    /// plain mutexed queue: the `queued` flag admits one push per
+    /// sweep per slot, so the lock is off the per-RPC hot path.
+    pending: Mutex<VecDeque<Arc<TreeSlot>>>,
+}
+
+impl WaiterTree {
+    pub fn new_arc() -> Arc<WaiterTree> {
+        Arc::new(WaiterTree {
+            root: Doorbell::new_arc(),
+            slots: RwLock::new(Vec::new()),
+            pending: Mutex::new(VecDeque::new()),
+        })
+    }
+
+    /// The aggregate bell workers arm and park on.
+    pub fn root(&self) -> &Arc<Doorbell> {
+        &self.root
+    }
+
+    /// Register a new slot (lowest free index; registration is rare —
+    /// once per connection — so the write lock is fine).
+    pub fn register(&self) -> Arc<TreeSlot> {
+        let mut slots = self.slots.write().unwrap();
+        let id = slots.iter().position(|s| s.is_none()).unwrap_or(slots.len());
+        let slot = Arc::new(TreeSlot {
+            id,
+            dirty: AtomicU64::new(0),
+            queued: AtomicU32::new(0),
+            dead: AtomicBool::new(false),
+        });
+        if id == slots.len() {
+            slots.push(Some(Arc::clone(&slot)));
+        } else {
+            slots[id] = Some(Arc::clone(&slot));
+        }
+        slot
+    }
+
+    /// Attach a member bell to `slot` at shard `bit` (≤ 63). One-shot:
+    /// a bell belongs to at most one tree for its lifetime.
+    pub fn attach(self: &Arc<Self>, bell: &Doorbell, slot: &Arc<TreeSlot>, bit: u32) {
+        let _ = bell.parent.set(TreeEdge {
+            tree: Arc::clone(self),
+            slot: Arc::clone(slot),
+            bit: bit.min(63),
+        });
+    }
+
+    /// Drop a slot: sweeps skip it from now on; its queue entry (if
+    /// any) drains lazily on the next pop.
+    pub fn deregister(&self, slot: &TreeSlot) {
+        slot.dead.store(true, Ordering::Release);
+        let mut slots = self.slots.write().unwrap();
+        if let Some(entry) = slots.get_mut(slot.id) {
+            *entry = None;
+        }
+    }
+
+    /// Member-ring propagation (called from [`Doorbell::ring`]).
+    fn notify(&self, slot: &Arc<TreeSlot>, bit: u32) {
+        slot.dirty.fetch_or(1u64 << bit, Ordering::Release);
+        if slot.queued.swap(1, Ordering::AcqRel) == 0 {
+            self.pending.lock().unwrap().push_back(Arc::clone(slot));
+        }
+        self.root.ring();
+    }
+
+    /// Force-mark shards ready (adoption: requests published before
+    /// the slot's bells were attached must not be lost).
+    pub fn kick(&self, slot: &Arc<TreeSlot>, mask: u64) {
+        slot.dirty.fetch_or(mask, Ordering::Release);
+        if slot.queued.swap(1, Ordering::AcqRel) == 0 {
+            self.pending.lock().unwrap().push_back(Arc::clone(slot));
+        }
+        self.root.ring();
+    }
+
+    /// Next ready slot: `(slot id, dirty shard mask)`. Clears `queued`
+    /// before taking the mask, so a racing ring either lands in the
+    /// returned mask or re-enqueues the slot.
+    pub fn pop_ready(&self) -> Option<(usize, u64)> {
+        loop {
+            let slot = self.pending.lock().unwrap().pop_front()?;
+            slot.queued.store(0, Ordering::Release);
+            let mask = slot.dirty.swap(0, Ordering::AcqRel);
+            if slot.dead.load(Ordering::Acquire) {
+                continue;
+            }
+            if mask != 0 {
+                return Some((slot.id, mask));
+            }
+        }
+    }
+
+    /// Safety-net full scan (idle workers only): any live slot with a
+    /// nonzero dirty mask, queued or not. Bounds starvation at one
+    /// park slice without putting O(slots) on the hot path.
+    pub fn scan_ready(&self) -> Vec<(usize, u64)> {
+        let slots = self.slots.read().unwrap();
+        let mut out = Vec::new();
+        for s in slots.iter().flatten() {
+            if s.dead.load(Ordering::Acquire) {
+                continue;
+            }
+            if s.dirty.load(Ordering::Acquire) != 0 {
+                let mask = s.dirty.swap(0, Ordering::AcqRel);
+                if mask != 0 {
+                    out.push((s.id, mask));
+                }
+            }
+        }
+        out
+    }
+
+    /// Live registered slots (telemetry/tests).
+    pub fn slot_count(&self) -> usize {
+        self.slots.read().unwrap().iter().flatten().count()
     }
 }
 
@@ -575,6 +766,145 @@ mod tests {
             let ok = workers.into_iter().all(|t| t.join().unwrap());
             producer.join().unwrap();
             ok
+        });
+    }
+
+    #[test]
+    fn tree_ring_marks_dirty_and_pops_once() {
+        let tree = WaiterTree::new_arc();
+        let slot = tree.register();
+        let b0 = Doorbell::new_arc();
+        let b2 = Doorbell::new_arc();
+        tree.attach(&b0, &slot, 0);
+        tree.attach(&b2, &slot, 2);
+        // Unattached-bell behaviour is untouched: ring with no armed
+        // waiter stays epoch-silent on the member bell itself.
+        b0.ring();
+        assert_eq!(b0.epoch(), 0, "member bell's own epoch untouched");
+        b2.ring();
+        b2.ring(); // coalesces into the same pending entry
+        let (id, mask) = tree.pop_ready().expect("slot pending");
+        assert_eq!(id, slot.id());
+        assert_eq!(mask, 0b101, "bits 0 and 2 dirty");
+        assert!(tree.pop_ready().is_none(), "one queue entry per sweep");
+        assert!(tree.scan_ready().is_empty(), "mask consumed");
+    }
+
+    #[test]
+    fn tree_kick_and_deregister() {
+        let tree = WaiterTree::new_arc();
+        let slot = tree.register();
+        tree.kick(&slot, 0xF);
+        assert_eq!(tree.pop_ready(), Some((slot.id(), 0xF)));
+        let dead = tree.register();
+        assert_eq!(tree.slot_count(), 2);
+        tree.kick(&dead, 1);
+        tree.deregister(&dead);
+        assert!(tree.pop_ready().is_none(), "dead slots drain silently");
+        assert_eq!(tree.slot_count(), 1);
+        // Freed index is reused by the next registration.
+        let re = tree.register();
+        assert_eq!(re.id(), dead.id());
+    }
+
+    #[test]
+    fn tree_root_rings_on_member_ring() {
+        let tree = WaiterTree::new_arc();
+        let slot = tree.register();
+        let bell = Doorbell::new_arc();
+        tree.attach(&bell, &slot, 0);
+        tree.root().arm();
+        let seen = tree.root().epoch();
+        bell.ring();
+        assert!(tree.root().epoch() > seen, "member ring bumps the armed root");
+        tree.root().disarm();
+    }
+
+    /// The aggregated lost-wakeup property: producers ring N member
+    /// bells (random slots/shards/timing); one pool-style worker parks
+    /// on the ROOT only — arm once, epoch snapshot, sweep
+    /// (pop + idle scan), park when no progress. Every produced event
+    /// must be served well before the deadline; a wakeup lost across
+    /// the aggregation layer would strand the worker a full park cycle
+    /// per event and blow it.
+    #[test]
+    fn prop_tree_never_loses_member_ring() {
+        use crate::util::prop::{forall, U64Range};
+        use crate::util::rng::Rng;
+        forall("waiter-tree-aggregation", prop_seed(), 8, &U64Range(0, u64::MAX / 2), |&salt| {
+            const SLOTS: usize = 4;
+            const SHARDS: usize = 4;
+            const EVENTS: u64 = 200;
+            let tree = WaiterTree::new_arc();
+            let mut bells = Vec::new();
+            let mut slots = Vec::new();
+            for _ in 0..SLOTS {
+                let slot = tree.register();
+                for bit in 0..SHARDS {
+                    let b = Doorbell::new_arc();
+                    tree.attach(&b, &slot, bit as u32);
+                    bells.push(b);
+                }
+                slots.push(slot);
+            }
+            let produced = Arc::new(AtomicU64::new(0));
+            let served = Arc::new(AtomicU64::new(0));
+            let stop = Arc::new(AtomicBool::new(false));
+            let worker = {
+                let (tree, served, stop) = (Arc::clone(&tree), Arc::clone(&served), Arc::clone(&stop));
+                std::thread::spawn(move || {
+                    let root = Arc::clone(tree.root());
+                    root.arm();
+                    while !stop.load(Ordering::Acquire) {
+                        let seen = root.epoch();
+                        let mut progress = false;
+                        while let Some((_id, mask)) = tree.pop_ready() {
+                            served.fetch_add(mask.count_ones() as u64, Ordering::AcqRel);
+                            progress = true;
+                        }
+                        if !progress {
+                            for (_id, mask) in tree.scan_ready() {
+                                served.fetch_add(mask.count_ones() as u64, Ordering::AcqRel);
+                                progress = true;
+                            }
+                        }
+                        if !progress {
+                            root.wait_past(seen, Duration::from_micros(PARK_SLICE_US));
+                        }
+                    }
+                    root.disarm();
+                })
+            };
+            let mut rng = Rng::new(salt ^ 0x7EE);
+            let deadline = Instant::now() + Duration::from_secs(20);
+            let mut ok = true;
+            for _ in 0..EVENTS {
+                // A "ring" marks at most one new dirty bit per (slot,
+                // shard): only count events the mask tally will see.
+                let b = rng.next_below(bells.len() as u64) as usize;
+                bells[b].ring();
+                produced.fetch_add(1, Ordering::AcqRel);
+                // Wait until the worker caught up — the next ring on
+                // the same bit would otherwise coalesce into this one
+                // and the mask tally would undercount.
+                while served.load(Ordering::Acquire) < produced.load(Ordering::Acquire) {
+                    if Instant::now() > deadline {
+                        ok = false;
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+                if !ok {
+                    break;
+                }
+                if rng.next_below(4) == 0 {
+                    std::thread::sleep(Duration::from_micros(rng.next_below(200)));
+                }
+            }
+            stop.store(true, Ordering::Release);
+            tree.root().ring();
+            worker.join().unwrap();
+            ok && served.load(Ordering::Acquire) == produced.load(Ordering::Acquire)
         });
     }
 

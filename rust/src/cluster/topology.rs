@@ -73,6 +73,29 @@ impl Topology {
         self.in_rack(a) && self.in_rack(b) && self.pod_of(a) == self.pod_of(b)
     }
 
+    /// Synthetic DSM peer id used when an RDMA transport is *forced*
+    /// between two endpoints of the same pod (benchmarks, tests, and
+    /// explicit `TransportSel::Rdma`): the DSM protocol needs two
+    /// distinct node ids for pages to ping-pong between. `PodId::MAX`
+    /// can never collide with a real pod id — in-rack pods are
+    /// `0..pods` and out-of-rack synthetic pods are `pods + k`, both
+    /// bounded by the (host-count-sized) rack configuration.
+    pub const FORCED_DSM_PEER: PodId = PodId::MAX;
+
+    /// DSM node ids for a client/server pod pair: each endpoint's own
+    /// pod when they differ (the genuine cross-pod case), with the
+    /// server remapped to [`Topology::FORCED_DSM_PEER`] when both
+    /// share a pod — forcing RDMA inside one pod still needs two
+    /// distinct coherence nodes. A topology fact, not a connect-site
+    /// sentinel.
+    pub fn dsm_peer_nodes(client_pod: PodId, server_pod: PodId) -> (PodId, PodId) {
+        if server_pod == client_pod {
+            (client_pod, Self::FORCED_DSM_PEER)
+        } else {
+            (client_pod, server_pod)
+        }
+    }
+
     /// The `idx`-th host of `pod` (panics if out of range) — handy for
     /// tests and benches that want "some host in pod 1".
     pub fn host_in_pod(&self, pod: PodId, idx: usize) -> u32 {
@@ -171,5 +194,33 @@ mod tests {
     fn host_in_pod_rejects_overflow() {
         let t = Topology::from_config(&cfg(8, 2, 0));
         t.host_in_pod(0, 4);
+    }
+
+    #[test]
+    fn dsm_peer_nodes_passthrough_across_pods() {
+        // Genuine cross-pod pair: both endpoints keep their own pod.
+        assert_eq!(Topology::dsm_peer_nodes(0, 1), (0, 1));
+        assert_eq!(Topology::dsm_peer_nodes(3, 0), (3, 0));
+    }
+
+    #[test]
+    fn dsm_peer_nodes_forced_same_pod_gets_synthetic_peer() {
+        // Forced RDMA inside one pod: the server side becomes the
+        // synthetic far node so pages have two nodes to move between.
+        let (c, s) = Topology::dsm_peer_nodes(2, 2);
+        assert_eq!(c, 2);
+        assert_eq!(s, Topology::FORCED_DSM_PEER);
+        assert_ne!(c, s);
+    }
+
+    #[test]
+    fn forced_dsm_peer_never_collides_with_real_pods() {
+        // Real pod ids — in-rack (0..pods) and out-of-rack synthetic
+        // (pods + k) — are bounded by host counts; the forced peer
+        // sits at the type's ceiling.
+        let t = Topology::from_config(&cfg(8, 2, 0));
+        for host in 0..64u32 {
+            assert_ne!(t.pod_of(host), Topology::FORCED_DSM_PEER);
+        }
     }
 }

@@ -151,6 +151,51 @@ pub enum ChargePolicy {
     Skip,
 }
 
+/// What happens to a `connect()` once a channel's `conn_limit` live
+/// connections exist — the admission path's policy knob (overload
+/// degrades by policy, never by collapse). Irrelevant while
+/// `conn_limit == 0` (unlimited).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Always admit (the limit is advisory/telemetry only).
+    #[default]
+    Open,
+    /// Fail fast with a connection-refused error.
+    Reject,
+    /// Wait (bounded) for a live connection to close, then admit;
+    /// times out if none does.
+    Queue,
+    /// Admit, but mark the connection shed-class: it is served with a
+    /// minimal drain budget, so overload degrades the newest
+    /// connections first while everything keeps making progress.
+    Shed,
+}
+
+impl AdmissionPolicy {
+    fn parse(v: &str) -> Result<AdmissionPolicy> {
+        Ok(match v {
+            "open" => AdmissionPolicy::Open,
+            "reject" => AdmissionPolicy::Reject,
+            "queue" => AdmissionPolicy::Queue,
+            "shed" => AdmissionPolicy::Shed,
+            other => {
+                return Err(RpcError::Config(format!(
+                    "bad admission_policy '{other}' (open|reject|queue|shed)"
+                )))
+            }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Open => "open",
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::Queue => "queue",
+            AdmissionPolicy::Shed => "shed",
+        }
+    }
+}
+
 /// System-wide knobs.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -208,6 +253,22 @@ pub struct SimConfig {
     pub two_choice: bool,
     /// Enforce permissions on every shm access (tests) vs trust+charge (benches).
     pub enforce_protection: bool,
+    /// Default worker count for pooled channel serving: `k > 0` makes
+    /// every channel ride the daemon-wide worker pool (at least k
+    /// workers, capped at 8) instead of dedicated listener threads;
+    /// `0` keeps the per-channel listener model (per-channel override:
+    /// `ChannelBuilder::pool_workers`).
+    pub pool_workers: usize,
+    /// Elastic shard routing default: connections start striping over
+    /// one shard and grow/shrink the active window under pressure /
+    /// idleness (per-channel override: `ChannelBuilder::elastic_shards`).
+    pub elastic_shards: bool,
+    /// Default admission policy once `conn_limit` is hit (per-channel
+    /// override: `ChannelBuilder::admission`).
+    pub admission: AdmissionPolicy,
+    /// Default live-connection ceiling arming the admission policy
+    /// (0 = unlimited; per-channel override: `ChannelBuilder::conn_limit`).
+    pub conn_limit: usize,
 }
 
 impl Default for SimConfig {
@@ -236,6 +297,10 @@ impl Default for SimConfig {
             drain_k: 16,
             two_choice: true,
             enforce_protection: true,
+            pool_workers: 0,
+            elastic_shards: false,
+            admission: AdmissionPolicy::Open,
+            conn_limit: 0,
         }
     }
 }
@@ -358,6 +423,10 @@ impl SimConfig {
             "drain_k" => self.drain_k = pusize(value)?,
             "two_choice" => self.two_choice = value == "true" || value == "1",
             "enforce_protection" => self.enforce_protection = value == "true" || value == "1",
+            "pool_workers" => self.pool_workers = pusize(value)?,
+            "elastic_shards" => self.elastic_shards = value == "true" || value == "1",
+            "admission_policy" => self.admission = AdmissionPolicy::parse(value)?,
+            "conn_limit" => self.conn_limit = pusize(value)?,
             other => return Err(RpcError::Config(format!("unknown key '{other}'"))),
         }
         Ok(())
@@ -383,6 +452,10 @@ impl SimConfig {
         m.insert("drain_k", self.drain_k.to_string());
         m.insert("magazine_cap", self.magazine_cap.to_string());
         m.insert("two_choice", (self.two_choice as u8).to_string());
+        m.insert("pool_workers", self.pool_workers.to_string());
+        m.insert("elastic_shards", (self.elastic_shards as u8).to_string());
+        m.insert("admission_policy", self.admission.name().to_string());
+        m.insert("conn_limit", self.conn_limit.to_string());
         m.insert(
             "charge",
             match self.charge {
@@ -432,6 +505,19 @@ mod tests {
         assert_eq!(cfg.pods, 4);
         cfg.apply_kv("hosts_per_pod", "8").unwrap();
         assert_eq!(cfg.hosts_per_pod, 8);
+        assert_eq!(cfg.pool_workers, 0, "default: dedicated listeners");
+        assert!(!cfg.elastic_shards, "default: fixed striping");
+        assert_eq!(cfg.admission, AdmissionPolicy::Open);
+        assert_eq!(cfg.conn_limit, 0, "default: unlimited");
+        cfg.apply_kv("pool_workers", "4").unwrap();
+        assert_eq!(cfg.pool_workers, 4);
+        cfg.apply_kv("elastic_shards", "true").unwrap();
+        assert!(cfg.elastic_shards);
+        cfg.apply_kv("admission_policy", "shed").unwrap();
+        assert_eq!(cfg.admission, AdmissionPolicy::Shed);
+        cfg.apply_kv("conn_limit", "256").unwrap();
+        assert_eq!(cfg.conn_limit, 256);
+        assert!(cfg.apply_kv("admission_policy", "nope").is_err());
         assert!(cfg.apply_kv("nonsense", "1").is_err());
         assert!(cfg.apply_kv("cxl_load_ns", "abc").is_err());
     }

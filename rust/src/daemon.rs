@@ -47,6 +47,17 @@ impl Daemon {
         })
     }
 
+    /// The daemon-wide channel worker pool for this host, grown to at
+    /// least `workers` threads. Pools are keyed per (orchestrator,
+    /// host) in a process-wide registry — `RpcServer::open`
+    /// constructs a fresh `Daemon` value per channel, but all of one
+    /// simulated host's channels must share one pool for worker count
+    /// to decouple from channel count.
+    pub fn worker_pool(&self, workers: usize) -> Arc<crate::channel::pool::WorkerPool> {
+        let key = (Arc::as_ptr(&self.orch) as usize, self.host);
+        crate::channel::pool::WorkerPool::for_key(key, workers)
+    }
+
     /// Map a connection heap into `proc`'s address space (daemon-only
     /// syscall; charges the orchestrator handshake via the caller's
     /// connect-cost accounting). Maps from this daemon's own pod.

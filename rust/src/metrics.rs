@@ -110,6 +110,24 @@ impl Histogram {
         self.percentile_ns(99.0)
     }
 
+    /// The deep-tail percentile the SLO columns report: p99.9.
+    pub fn p999_ns(&self) -> u64 {
+        self.percentile_ns(99.9)
+    }
+
+    /// Samples strictly above `ns` (bucket-resolution: a sample
+    /// counts as over the threshold when its bucket's representative
+    /// upper bound exceeds it) — the SLO-miss count.
+    pub fn count_over_ns(&self, ns: u64) -> u64 {
+        let mut over = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            if Self::value(i) > ns {
+                over += b.load(Ordering::Relaxed);
+            }
+        }
+        over
+    }
+
     pub fn reset(&self) {
         for b in &self.buckets {
             b.store(0, Ordering::Relaxed);
@@ -205,6 +223,25 @@ mod tests {
         assert!((p99 / 990_000.0 - 1.0).abs() < 0.10, "p99 {p99}");
         assert_eq!(h.count(), 10_000);
         assert!(h.mean_ns() > 0.0);
+        // Deep tail: p99.9 of the ramp sits near the top, above p99.
+        let p999 = h.p999_ns() as f64;
+        assert!((p999 / 999_000.0 - 1.0).abs() < 0.10, "p999 {p999}");
+        assert!(h.p999_ns() >= h.p99_ns());
+    }
+
+    #[test]
+    fn count_over_threshold_tracks_tail() {
+        let h = Histogram::new();
+        for ns in 1..=1000u64 {
+            h.record_ns(ns * 1000); // 1µs..1ms
+        }
+        // Everything is over 0 and nothing over the max.
+        assert_eq!(h.count_over_ns(0), 1000);
+        assert_eq!(h.count_over_ns(u64::MAX / 2), 0);
+        // Roughly half the ramp exceeds the midpoint (bucket
+        // resolution allows a generous band).
+        let mid = h.count_over_ns(500_000);
+        assert!((300..=700).contains(&mid), "mid {mid}");
     }
 
     #[test]

@@ -61,11 +61,23 @@ struct Inner {
     reclaimed: u64,
 }
 
+/// Admission-counter indices into [`Orchestrator::admission`].
+pub const ADM_ADMITTED: usize = 0;
+pub const ADM_REJECTED: usize = 1;
+pub const ADM_QUEUED: usize = 2;
+pub const ADM_SHED: usize = 3;
+
+static ADMISSION_NAMES: [&str; 4] = ["admitted", "rejected", "queued", "shed"];
+
 pub struct Orchestrator {
     pub pool: Arc<Pool>,
     cfg: SimConfig,
     inner: Mutex<Inner>,
     ticker_stop: AtomicBool,
+    /// Channel-admission accounting (connects admitted / rejected /
+    /// queued / admitted-as-shed), host-wide — benches and tests lift
+    /// it into reports like the DSM transfer counters.
+    admission: crate::metrics::CounterSet,
 }
 
 impl Orchestrator {
@@ -84,11 +96,17 @@ impl Orchestrator {
                 reclaimed: 0,
             }),
             ticker_stop: AtomicBool::new(false),
+            admission: crate::metrics::CounterSet::new(&ADMISSION_NAMES),
         })
     }
 
     pub fn config(&self) -> &SimConfig {
         &self.cfg
+    }
+
+    /// Channel-admission counters (see the `ADM_*` indices).
+    pub fn admission(&self) -> &crate::metrics::CounterSet {
+        &self.admission
     }
 
     // ---------------- heaps ----------------

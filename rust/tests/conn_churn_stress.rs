@@ -1,0 +1,474 @@
+//! Seeded stress/property suite for the capacity plane (ISSUE 7):
+//! pooled waiter-tree serving, connection open/close churn racing
+//! live traffic, elastic shard-window resizing under in-flight
+//! batches/async handles, and admission-denied connect paths.
+//!
+//! Same discipline as `ring_stress`: every test draws randomized
+//! schedules from `util::prop::forall`, seeded by `PROP_SEED` (CI
+//! sweeps four seeds in debug and release); a failure prints the seed
+//! and the shrunk scenario.
+//!
+//! Invariants checked on every scenario:
+//!
+//! * no lost wakeups through the aggregated doorbell tree — k pooled
+//!   workers (no per-channel listeners) must serve every call on
+//!   every channel; a loss surfaces as a call timeout or the
+//!   watchdog;
+//! * open/close storms racing live traffic never wedge the pool,
+//!   cross-wire a response, or strand a connection half-adopted;
+//! * the elastic shard window stays a power of two within
+//!   [1, capacity], and disabled elastic pins it to capacity;
+//! * on clean runs every issued call completes and the per-channel
+//!   served counters sum to exactly the issued count;
+//! * admission over `conn_limit` fails/queues/sheds by policy — never
+//!   by collapse — and shed-class connections still serve.
+
+use rpcool::channel::waiter::SleepPolicy;
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, RpcServer};
+use rpcool::config::AdmissionPolicy;
+use rpcool::error::RpcError;
+use rpcool::rack::Rack;
+use rpcool::util::prop::{forall, Gen, U64Range};
+use rpcool::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Seed source: `PROP_SEED` env var (CI matrix), fixed default.
+fn prop_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED)
+}
+
+/// Channel names must be distinct across scenarios (the in-process
+/// directory is global).
+static CHURN_ID: AtomicUsize = AtomicUsize::new(0);
+
+/// An acceptable per-call outcome while the channel is being torn
+/// down; anything else is a bug.
+fn teardown_ok<T>(r: &Result<T, RpcError>) -> bool {
+    matches!(
+        r,
+        Err(RpcError::Timeout(_))
+            | Err(RpcError::ConnectionClosed)
+            | Err(RpcError::ConnectionRefused(_, _))
+            | Err(RpcError::ChannelNotFound(_))
+    )
+}
+
+/// One randomized capacity-plane schedule.
+#[derive(Clone, Debug)]
+struct ChurnScenario {
+    /// Channels sharing the host's worker pool.
+    channels: u64,
+    /// Pool worker threads (1..=4; the CI capacity row uses 8).
+    workers: u64,
+    /// Shards per connection = 1 << shards_pow.
+    shards_pow: u32,
+    clients: u64,
+    /// Operations per client.
+    ops: u64,
+    /// Percent of ops that are connect→call→drop churn instead of a
+    /// call on the client's long-lived connection.
+    churn_pct: u64,
+    /// Percent of remaining ops that are scalar batches (2..=5).
+    batch_pct: u64,
+    /// Elastic shard window on?
+    elastic: bool,
+    /// Stop every server mid-run; all calls must still terminate.
+    early_stop: bool,
+    salt: u64,
+}
+
+struct ChurnScenarioGen;
+
+impl Gen for ChurnScenarioGen {
+    type Value = ChurnScenario;
+    fn generate(&self, rng: &mut Rng) -> ChurnScenario {
+        ChurnScenario {
+            channels: rng.range(1, 7),
+            workers: rng.range(1, 5),
+            shards_pow: rng.range(0, 3) as u32,
+            clients: rng.range(1, 5),
+            ops: rng.range(8, 33),
+            churn_pct: rng.range(0, 41),
+            batch_pct: rng.range(0, 41),
+            elastic: rng.next_below(2) == 1,
+            early_stop: rng.next_below(4) == 0,
+            salt: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &ChurnScenario) -> Vec<ChurnScenario> {
+        let mut out = Vec::new();
+        if v.ops > 8 {
+            out.push(ChurnScenario { ops: v.ops / 2, ..v.clone() });
+        }
+        if v.clients > 1 {
+            out.push(ChurnScenario { clients: v.clients - 1, ..v.clone() });
+        }
+        if v.channels > 1 {
+            out.push(ChurnScenario { channels: 1, ..v.clone() });
+        }
+        if v.churn_pct > 0 {
+            out.push(ChurnScenario { churn_pct: 0, ..v.clone() });
+        }
+        if v.early_stop {
+            out.push(ChurnScenario { early_stop: false, ..v.clone() });
+        }
+        out
+    }
+}
+
+/// Run one pooled-churn scenario; `true` iff every invariant held.
+fn run_churn_scenario(sc: &ChurnScenario) -> bool {
+    let run = CHURN_ID.fetch_add(1, Ordering::Relaxed);
+    let rack = Rack::for_tests();
+    let env = rack.proc_env(0);
+    let nshards = 1usize << sc.shards_pow;
+    let servers: Vec<RpcServer> = (0..sc.channels)
+        .map(|i| {
+            let s = ChannelBuilder::from_config(&rack.cfg)
+                .ring_shards(nshards)
+                .ring_slots(8)
+                .pool_workers(sc.workers as usize)
+                .elastic_shards(sc.elastic)
+                .sleep(SleepPolicy::Park)
+                .call_timeout(Duration::from_secs(5))
+                .open(&env, &format!("churn-{run}-{i}"))
+                .unwrap();
+            s.serve_scalar::<u64>(1, |_ctx, v| Ok(v.wrapping_mul(3).wrapping_add(1)));
+            // Pooled mode: no dedicated listener threads, ever.
+            assert!(s.spawn_listeners(1).is_empty(), "pooled channel spawned a listener");
+            s
+        })
+        .collect();
+
+    let cenv = rack.proc_env(1);
+    let failed = Arc::new(AtomicBool::new(false));
+    let issued = Arc::new(AtomicU64::new(0));
+    let completed = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for tid in 0..sc.clients {
+        let env = cenv.clone();
+        let failed = Arc::clone(&failed);
+        let issued = Arc::clone(&issued);
+        let completed = Arc::clone(&completed);
+        let sc = sc.clone();
+        clients.push(std::thread::spawn(move || {
+            env.run(|| {
+                let mut rng = Rng::new(sc.salt ^ tid.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let fail = |what: &str| {
+                    eprintln!("churn-stress: client {tid}: {what}");
+                    failed.store(true, Ordering::Relaxed);
+                };
+                let home = format!("churn-{run}-{}", tid % sc.channels);
+                let conn = match Connection::connect(&env, &home) {
+                    Ok(c) => c,
+                    Err(_) if sc.early_stop => return,
+                    Err(e) => {
+                        fail(&format!("home connect failed: {e:?}"));
+                        return;
+                    }
+                };
+                for k in 0..sc.ops {
+                    let base = tid * 1_000_000 + k * 100;
+                    let mode = rng.next_below(100);
+                    if mode < sc.churn_pct {
+                        // Connection churn racing live traffic: a
+                        // fresh conn to a random channel, one call,
+                        // drop — adoption and retirement through the
+                        // waiter tree while other clients keep the
+                        // pool busy.
+                        let target =
+                            format!("churn-{run}-{}", rng.next_below(sc.channels));
+                        issued.fetch_add(1, Ordering::Relaxed);
+                        match Connection::connect(&env, &target) {
+                            Ok(eph) => {
+                                match eph.call_scalar::<u64>(1, &base, CallOpts::new()) {
+                                    Ok(r) => {
+                                        completed.fetch_add(1, Ordering::Relaxed);
+                                        if r != base.wrapping_mul(3).wrapping_add(1) {
+                                            fail(&format!("churn call cross-wired at {base}"));
+                                            return;
+                                        }
+                                    }
+                                    ref e if sc.early_stop && teardown_ok(e) => return,
+                                    Err(e) => {
+                                        fail(&format!("churn call failed: {e:?}"));
+                                        return;
+                                    }
+                                }
+                            }
+                            ref e if sc.early_stop && teardown_ok(e) => return,
+                            Err(e) => {
+                                fail(&format!("churn connect failed: {e:?}"));
+                                return;
+                            }
+                        }
+                    } else if mode < sc.churn_pct + sc.batch_pct {
+                        // Batches keep multiple slots in flight while
+                        // the elastic window may be resizing.
+                        let n = 2 + rng.next_below(4);
+                        let vals: Vec<u64> = (0..n).map(|j| base + j).collect();
+                        issued.fetch_add(n, Ordering::Relaxed);
+                        match conn.call_scalar_batch::<u64>(1, &vals, CallOpts::new()) {
+                            Ok(rets) => {
+                                completed.fetch_add(n, Ordering::Relaxed);
+                                for (v, r) in vals.iter().zip(&rets) {
+                                    if *r != v.wrapping_mul(3).wrapping_add(1) {
+                                        fail(&format!("batch cross-wired at {v}"));
+                                        return;
+                                    }
+                                }
+                            }
+                            ref e if sc.early_stop && teardown_ok(e) => return,
+                            Err(e) => {
+                                fail(&format!("batch failed: {e:?}"));
+                                return;
+                            }
+                        }
+                    } else {
+                        issued.fetch_add(1, Ordering::Relaxed);
+                        match conn.call_scalar::<u64>(1, &base, CallOpts::new()) {
+                            Ok(r) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                                if r != base.wrapping_mul(3).wrapping_add(1) {
+                                    fail(&format!("sync cross-wired at {base}"));
+                                    return;
+                                }
+                            }
+                            ref e if sc.early_stop && teardown_ok(e) => return,
+                            Err(e) => {
+                                fail(&format!("sync call failed: {e:?}"));
+                                return;
+                            }
+                        }
+                    }
+                    // The elastic window must stay a sane power of two
+                    // (pinned to capacity when elastic is off).
+                    let active = conn.shared.active_shard_count();
+                    if !active.is_power_of_two() || active > nshards {
+                        fail(&format!("elastic window insane: {active}/{nshards}"));
+                        return;
+                    }
+                    if !sc.elastic && active != nshards {
+                        fail(&format!("fixed window drifted: {active}/{nshards}"));
+                        return;
+                    }
+                    for _ in 0..rng.next_below(64) {
+                        std::hint::spin_loop();
+                    }
+                }
+            });
+        }));
+    }
+
+    if sc.early_stop {
+        std::thread::sleep(Duration::from_micros(200 + (sc.salt % 3_000)));
+        for s in &servers {
+            s.stop();
+        }
+    }
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for c in clients {
+        if Instant::now() > deadline {
+            eprintln!("churn-stress: watchdog tripped — a client is wedged");
+            return false;
+        }
+        c.join().unwrap();
+    }
+    if !sc.early_stop {
+        for s in &servers {
+            s.stop();
+        }
+    }
+    if failed.load(Ordering::Relaxed) {
+        return false;
+    }
+    if !sc.early_stop {
+        let (i, c) = (issued.load(Ordering::Relaxed), completed.load(Ordering::Relaxed));
+        if i != c {
+            eprintln!("churn-stress: {c}/{i} calls completed without teardown");
+            return false;
+        }
+        let served: u64 = servers.iter().map(|s| s.served()).sum();
+        if served != i {
+            eprintln!("churn-stress: served {served} != issued {i}");
+            return false;
+        }
+    }
+    true
+}
+
+/// The main randomized sweep: channel counts, worker counts, shard
+/// widths, churn/batch mixes, elastic on/off, and teardown all drawn
+/// from the seed.
+#[test]
+fn stress_pooled_churn_schedules() {
+    forall("conn-churn", prop_seed(), 12, &ChurnScenarioGen, run_churn_scenario);
+}
+
+/// Open/close storms concentrated: every op is a churn op, many
+/// channels on few workers — adoption, retirement, and slot recycling
+/// through the waiter tree at maximum rate, swept over the worker
+/// count.
+#[test]
+fn stress_open_close_storm_on_pool() {
+    forall("conn-churn-storm", prop_seed(), 8, &U64Range(1, 5), |&w| {
+        run_churn_scenario(&ChurnScenario {
+            channels: 6,
+            workers: w,
+            shards_pow: 0,
+            clients: 4,
+            ops: 16,
+            churn_pct: 100,
+            batch_pct: 0,
+            elastic: false,
+            early_stop: false,
+            salt: prop_seed() ^ w.wrapping_mul(0xB5AD_4ECE_DA1C_E2A9),
+        })
+    });
+}
+
+/// Elastic resizing concentrated: one channel, wide shard capacity,
+/// tiny rings, batch-heavy clients — the claim-fail pressure that
+/// grows the window and the quiescence that shrinks it, racing
+/// in-flight batches, swept over the client count.
+#[test]
+fn stress_elastic_resize_under_batches() {
+    forall("conn-churn-elastic", prop_seed(), 8, &U64Range(1, 5), |&n| {
+        run_churn_scenario(&ChurnScenario {
+            channels: 1,
+            workers: 2,
+            shards_pow: 2,
+            clients: n,
+            ops: 24,
+            churn_pct: 0,
+            batch_pct: 60,
+            elastic: true,
+            early_stop: false,
+            salt: prop_seed() ^ n.wrapping_mul(0x2545_F491_4F6C_DD1D),
+        })
+    });
+}
+
+// ---------------------------------------------------------------------
+// admission-denied paths (deterministic, but swept over seeds for the
+// connect ordering)
+
+/// Reject: over the ceiling every connect fails with
+/// `ConnectionRefused` and under it every connect succeeds — the
+/// counts partition exactly.
+#[test]
+fn admission_reject_partitions_exactly() {
+    let rack = Rack::for_tests();
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .pool_workers(2)
+        .admission(AdmissionPolicy::Reject)
+        .conn_limit(3)
+        .open(&env, "adm-reject")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let cenv = rack.proc_env(1);
+    let mut held = Vec::new();
+    let mut refused = 0usize;
+    for k in 0..8u64 {
+        match Connection::connect(&cenv, "adm-reject") {
+            Ok(conn) => {
+                let r = conn.call_scalar::<u64>(1, &k, CallOpts::new()).unwrap();
+                assert_eq!(r, k + 1);
+                held.push(conn);
+            }
+            Err(RpcError::ConnectionRefused(name, why)) => {
+                assert_eq!(name, "adm-reject");
+                assert!(why.contains("admission"), "refusal must name the policy: {why}");
+                refused += 1;
+            }
+            Err(e) => panic!("unexpected admission error: {e:?}"),
+        }
+    }
+    assert_eq!(held.len(), 3, "exactly conn_limit connects admitted");
+    assert_eq!(refused, 5, "everything over the ceiling refused");
+    // Capacity freed by a close is immediately reusable.
+    drop(held.pop());
+    let again = Connection::connect(&cenv, "adm-reject").expect("freed capacity readmits");
+    let r = again.call_scalar::<u64>(1, &99, CallOpts::new()).unwrap();
+    assert_eq!(r, 100);
+    server.stop();
+}
+
+/// Shed: over the ceiling connects still succeed but are marked
+/// shed-class (served at degraded drain budget) — and they serve.
+#[test]
+fn admission_shed_degrades_but_serves() {
+    let rack = Rack::for_tests();
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .pool_workers(2)
+        .admission(AdmissionPolicy::Shed)
+        .conn_limit(2)
+        .open(&env, "adm-shed")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let cenv = rack.proc_env(1);
+    let conns: Vec<Connection> =
+        (0..5).map(|_| Connection::connect(&cenv, "adm-shed").unwrap()).collect();
+    let shed: Vec<bool> = conns.iter().map(|c| c.shared.is_shed()).collect();
+    assert_eq!(shed.iter().filter(|s| !**s).count(), 2, "under the ceiling: full-class");
+    assert_eq!(shed.iter().filter(|s| **s).count(), 3, "over the ceiling: shed-class");
+    for (k, conn) in conns.iter().enumerate() {
+        let r = conn.call_scalar::<u64>(1, &(k as u64), CallOpts::new()).unwrap();
+        assert_eq!(r, k as u64 + 1, "shed-class connections still serve");
+    }
+    server.stop();
+}
+
+/// Queue: a connect over the ceiling parks until capacity frees (a
+/// racing close readmits it) or times out with `Timeout` — never an
+/// instant refusal, never a hang past the admission deadline.
+#[test]
+fn admission_queue_waits_for_capacity() {
+    let rack = Rack::for_tests();
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .pool_workers(2)
+        .admission(AdmissionPolicy::Queue)
+        .conn_limit(1)
+        .open(&env, "adm-queue")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let cenv = rack.proc_env(1);
+    let first = Connection::connect(&cenv, "adm-queue").unwrap();
+
+    // A racing close frees the slot: the queued connect must land.
+    let dropper = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        drop(first);
+    });
+    let t0 = Instant::now();
+    let second = Connection::connect(&cenv, "adm-queue").expect("queued connect readmitted");
+    assert!(t0.elapsed() >= Duration::from_millis(30), "connect should have queued");
+    dropper.join().unwrap();
+    let r = second.call_scalar::<u64>(1, &7, CallOpts::new()).unwrap();
+    assert_eq!(r, 8);
+
+    // Nothing frees: the queued connect times out at the admission
+    // deadline instead of hanging.
+    let t0 = Instant::now();
+    match Connection::connect(&cenv, "adm-queue") {
+        Err(RpcError::Timeout(what)) => {
+            assert!(what.contains("admission"), "timeout must name admission: {what}");
+        }
+        other => panic!("expected admission timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() >= Duration::from_millis(400), "must wait out the admission window");
+    assert!(t0.elapsed() < Duration::from_secs(5), "must not hang past the deadline");
+    server.stop();
+}
