@@ -28,6 +28,9 @@ fn main() {
     let rack = Rack::new(SimConfig::for_bench());
     let mut t = Table::new(&["sleep (µs)", "p50", "p99", "req/s", "server poll wakeups/req"]);
     let mut rep = BenchReport::new("fig13_busywait");
+    // 5ms SLO: the 150µs sleep point's tail lives in the hundreds of
+    // µs. Set before any row so slo_miss fills (ISSUE 8 audit).
+    rep.slo(5_000_000);
 
     for (label, policy) in [
         ("0", SleepPolicy::Spin),

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench fig1_rtt`
 
-use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
+use rpcool::benchkit::{fmt_ns, time_op_mean, BenchReport, Table};
 use rpcool::transport::{LinkKind, SimNicPair, Transport};
 use rpcool::{Rack, SimConfig};
 use std::sync::Arc;
@@ -20,7 +20,7 @@ fn main() {
 
     // CXL: a dependent far-memory load pair (request/response via
     // shared memory — two one-way signal latencies).
-    let (m, _) = time_op(1000, n, false, || {
+    let m = time_op_mean(1000, n, || {
         charger.charge_cxl_signal();
         charger.charge_cxl_signal();
     });
@@ -37,7 +37,7 @@ fn main() {
     ] {
         let pair = SimNicPair::new(kind, Arc::clone(&charger));
         let reps = if kind == LinkKind::Http2 { n / 20 } else { n / 4 };
-        let (m, _) = time_op(100, reps, false, || {
+        let m = time_op_mean(100, reps, || {
             pair.a.send(b"ping").unwrap();
             let _ = pair.b.try_recv();
             pair.b.send(b"pong").unwrap();

@@ -26,6 +26,9 @@ fn main() {
     let rack = Rack::new(cfg);
     let mut table = Table::new(&["Mix", "RTT", "Throughput (K req/s)", "Transport"]);
     let mut rep = BenchReport::new("fig_rack");
+    // 100µs SLO: far above the ~17µs cross-pod RTT — misses mean
+    // queueing, not transport. Set before any row (ISSUE 8 audit).
+    rep.slo(100_000);
 
     // One server in pod 0; both clients use the identical Auto-mode
     // call site — the topology alone picks the fabric.
@@ -92,8 +95,11 @@ fn main() {
                 intra_call();
             }
         };
-        let (mean, _) = time_op(ops / 100 + 10, ops, false, &op);
-        let (_, hist) = time_op(0, ops / 10, true, &op);
+        // One per-op-timed population: mean, tail, and the DSM fault
+        // deltas below all describe the same `ops` calls (the old
+        // two-run split paired a full-run mean with a 10×-smaller
+        // run's tail).
+        let (mean, hist) = time_op(ops / 100 + 10, ops, &op);
         let (f1, p1) = dsm.stats();
         rep.row_hist(label, &hist, 1e9 / mean);
         rep.extra("cross_pct", pct as f64);

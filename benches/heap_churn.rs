@@ -29,7 +29,7 @@
 //!
 //! Run: `cargo bench --bench heap_churn [-- --quick]`
 
-use rpcool::benchkit::{fanout, time_op, BenchReport, Table};
+use rpcool::benchkit::{fanout, time_op_mean, BenchReport, Table};
 use rpcool::memory::heap::Heap;
 use rpcool::memory::pool::Pool;
 use rpcool::seal::{ScopePool, Sealer};
@@ -87,7 +87,7 @@ fn check_write_ns(nseals: usize, scan: bool, iters: usize) -> f64 {
         .map(|_| region.base + rng.next_below(npages as u64) as usize * 4096 + 8)
         .collect();
     let mut k = 0usize;
-    let (mean, _hist) = time_op(iters / 10, iters, false, || {
+    let mean = time_op_mean(iters / 10, iters, || {
         let addr = addrs[k & 255];
         k += 1;
         let r = if scan {

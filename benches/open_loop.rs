@@ -1,0 +1,283 @@
+//! OPEN-LOOP LOAD SWEEP: the tail-latency-truth harness (DESIGN.md
+//! §13). Not a paper figure; this is the repo's perf trajectory for
+//! queueing behaviour under offered load.
+//!
+//! Every other bench in this repo is closed-loop: the caller waits
+//! for each reply before issuing the next request, so a server stall
+//! pushes the *rest of the run* back in time and the stall's queueing
+//! delay never lands in any recorded latency — coordinated omission.
+//! This bench runs every scenario both ways at the SAME interarrival
+//! plan and pairs the rows:
+//!
+//! * `…/closed` — gaps paced from the previous completion, latency
+//!   from actual send (the methodology that hides queueing);
+//! * `…/open`   — arrivals fixed on the wall clock, latency from the
+//!   *scheduled* arrival (`benchkit::run_open_loop`), late sends
+//!   counted (`late_sends`/`max_late_ns` extras).
+//!
+//! CI holds `open p99 ≥ closed p99` on every pair — the gap IS the
+//! coordinated omission, and it must be visible, never negative.
+//!
+//! Layers:
+//! * `ol/{dedicated,pooled,elastic}/r{50,90}/{closed,open}` — echo
+//!   RPCs against one channel config at 50% / 90% of its calibrated
+//!   single-worker closed-loop capacity, 4 open-loop workers striping
+//!   one fixed-rate schedule (`Schedule::stripe`).
+//! * `ol/{cfg}/burst/{closed,open}` — same configs under a bursty
+//!   plan (16-deep back-to-back groups at 70% capacity): the burst
+//!   drains fine closed-loop and queues visibly open-loop.
+//! * `ol/mixed/{kv,scan,compose}/{closed,open}` — three tenants of
+//!   `apps::mixed::MixedTenants` (memcached YCSB-B stream, CoolDB
+//!   range scans, socialnet compose storms) loaded *concurrently*
+//!   against one rack, each tenant on its own schedule; compose rides
+//!   a bursty plan (storms), the others fixed-rate.
+//!
+//! Charging is skipped (structural wall-clock timing): the sweep
+//! measures the ring/doorbell/pool machinery's queueing under load,
+//! not simulated CXL spins stacked on top of it.
+//!
+//! Run: `cargo bench --bench open_loop [-- --quick]`
+
+use rpcool::apps::mixed::MixedTenants;
+use rpcool::benchkit::{
+    fanout_load, run_closed_paced, run_open_loop, BenchReport, LoadReport, Schedule, Table,
+};
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, RpcServer};
+use rpcool::metrics::Histogram;
+use rpcool::{ChargePolicy, Rack, SimConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Open-loop workers striping each schedule in the echo sweep.
+const WORKERS: usize = 4;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::for_bench();
+    c.charge = ChargePolicy::Skip;
+    c.pool_bytes = 1 << 30;
+    c
+}
+
+/// Stand up one echo channel in the named configuration. Returns the
+/// server and its dedicated listener handles (empty when pooled).
+fn echo_server(
+    rack: &Arc<Rack>,
+    config: &str,
+    name: &str,
+) -> (RpcServer, Vec<std::thread::JoinHandle<()>>) {
+    let env = rack.proc_env(0);
+    let b = ChannelBuilder::from_config(&rack.cfg).heap_bytes(1 << 20).ring_slots(64);
+    let (server, handles) = match config {
+        "dedicated" => {
+            let s = b.ring_shards(2).open(&env, name).unwrap();
+            let h = s.spawn_listeners(2);
+            (s, h)
+        }
+        "pooled" => {
+            let s = b.ring_shards(2).pool_workers(4).open(&env, name).unwrap();
+            let h = s.spawn_listeners(1); // no-op in pooled mode
+            (s, h)
+        }
+        "elastic" => {
+            let s = b.ring_shards(8).elastic_shards(true).open(&env, name).unwrap();
+            let h = s.spawn_listeners(2);
+            (s, h)
+        }
+        other => panic!("unknown config {other}"),
+    };
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    (server, handles)
+}
+
+/// Single-worker closed-loop capacity estimate, ops/s: `n` unpaced
+/// echo calls. The sweep's offered rates are fractions of
+/// `WORKERS ×` this (optimistic on purpose — r90 *should* flirt with
+/// saturation; that is where open and closed diverge).
+fn calibrate(rack: &Arc<Rack>, name: &str, n: usize) -> f64 {
+    let env = rack.proc_env(7);
+    let conn = Connection::connect(&env, name).unwrap();
+    env.run(|| {
+        let t0 = Instant::now();
+        for k in 0..n as u64 {
+            let r = conn.call_typed::<u64, u64>(1, &k, CallOpts::new()).unwrap();
+            assert_eq!(r.take().unwrap(), k + 1);
+        }
+        n as f64 / t0.elapsed().as_secs_f64()
+    })
+}
+
+/// Run one schedule against the echo channel in both pacing modes and
+/// emit the paired rows. Each worker gets its own proc + connection.
+fn echo_pair(
+    rep: &mut BenchReport,
+    t: &mut Table,
+    rack: &Arc<Rack>,
+    name: &str,
+    label: &str,
+    sched: &Schedule,
+) {
+    let drive = |paced: bool| -> LoadReport {
+        fanout_load(WORKERS, sched, |w, sub| {
+            let env = rack.proc_env(8 + w as u32);
+            let conn = Connection::connect(&env, name).unwrap();
+            env.run(|| {
+                let op = |i: usize| {
+                    let r = conn.call_typed::<u64, u64>(1, &(i as u64), CallOpts::new()).unwrap();
+                    assert_eq!(r.take().unwrap(), i as u64 + 1);
+                };
+                if paced {
+                    run_closed_paced(sub, op)
+                } else {
+                    run_open_loop(sub, op)
+                }
+            })
+        })
+    };
+    let offered = sched.offered_rate();
+    for (mode, load) in [("closed", drive(true)), ("open", drive(false))] {
+        let row = format!("{label}/{mode}");
+        t.row(&[
+            row.clone(),
+            format!("{offered:.0}"),
+            format!("{:.0}", load.throughput()),
+            Histogram::fmt_ns(load.hist.median_ns()),
+            Histogram::fmt_ns(load.hist.p99_ns()),
+            Histogram::fmt_ns(load.hist.p999_ns()),
+            format!("{}", load.late_sends),
+        ]);
+        rep.row_load(&row, &load, offered);
+        rep.extra("workers", WORKERS as f64);
+    }
+}
+
+/// Unpaced closed-loop rate of `n` steps, ops/s.
+fn rate_of(n: usize, mut step: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        step();
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let calib_n = if quick { 300 } else { 2_000 };
+    let sweep_n = if quick { 600 } else { 4_000 };
+
+    let mut t = Table::new(&["Scenario", "offered/s", "done/s", "p50", "p99", "p99.9", "late"]);
+    let mut rep = BenchReport::new("open_loop");
+    // 1ms SLO on every row: at r50 essentially nothing should miss
+    // it; at r90 the open rows show what the closed rows hide.
+    rep.slo(1_000_000);
+
+    // ---- echo sweep: offered load vs channel configuration --------
+    for config in ["dedicated", "pooled", "elastic"] {
+        let rack = Rack::new(cfg());
+        let name = format!("ol-{config}");
+        let (server, handles) = echo_server(&rack, config, &name);
+        let cap = calibrate(&rack, &name, calib_n) * WORKERS as f64;
+        for (tag, frac) in [("r50", 0.5), ("r90", 0.9)] {
+            let sched = Schedule::fixed_rate(sweep_n, cap * frac);
+            echo_pair(&mut rep, &mut t, &rack, &name, &format!("ol/{config}/{tag}"), &sched);
+        }
+        // Bursty plan: 16 back-to-back arrivals per group, 70% of
+        // capacity on average — the group always outruns the server
+        // for a moment, and only the open rows are allowed to see it.
+        let sched = Schedule::bursty(sweep_n, cap * 0.7, 16);
+        echo_pair(&mut rep, &mut t, &rack, &name, &format!("ol/{config}/burst"), &sched);
+        server.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    // ---- mixed tenants: three apps, one rack, concurrent schedules -
+    let rack = Rack::new(cfg());
+    let (nkeys, ndocs, nusers) = if quick { (500, 100, 100) } else { (2_000, 400, 200) };
+    let mixed = MixedTenants::start(&rack, "ol", nkeys, ndocs, nusers, 42).unwrap();
+
+    // Calibrate each tenant's single-worker closed rate.
+    let calib_t = if quick { 60 } else { 300 };
+    let mut kv = mixed.kv_driver(8, 1).unwrap();
+    let mut scan = mixed.scan_driver(9, 2).unwrap();
+    let mut compose = mixed.compose_driver(3);
+    let kv_rate = rate_of(calib_t, || kv.step().unwrap());
+    let scan_rate = rate_of(calib_t / 3 + 1, || {
+        scan.step().unwrap();
+    });
+    let compose_rate = rate_of(calib_t, || {
+        compose.step().unwrap();
+    });
+
+    let (n_kv, n_scan, n_cp) = if quick { (400, 60, 150) } else { (2_500, 400, 1_000) };
+    // 60% of each tenant's solo rate — concurrently, the three
+    // tenants contend for the same daemon, so the effective pressure
+    // is well above 60%.
+    let kv_sched = Schedule::fixed_rate(n_kv, kv_rate * 0.6);
+    let scan_sched = Schedule::fixed_rate(n_scan, scan_rate * 0.6);
+    // Compose storms: 8-post bursts (the "storm" shape).
+    let cp_sched = Schedule::bursty(n_cp, compose_rate * 0.6, 8);
+
+    for paced in [true, false] {
+        let mode = if paced { "closed" } else { "open" };
+        let (kv_load, scan_load, cp_load) = std::thread::scope(|s| {
+            let hk = s.spawn(|| {
+                let op = |_i: usize| kv.step().unwrap();
+                if paced { run_closed_paced(&kv_sched, op) } else { run_open_loop(&kv_sched, op) }
+            });
+            let hs = s.spawn(|| {
+                let op = |_i: usize| {
+                    scan.step().unwrap();
+                };
+                if paced {
+                    run_closed_paced(&scan_sched, op)
+                } else {
+                    run_open_loop(&scan_sched, op)
+                }
+            });
+            let hc = s.spawn(|| {
+                let op = |_i: usize| {
+                    compose.step().unwrap();
+                };
+                if paced {
+                    run_closed_paced(&cp_sched, op)
+                } else {
+                    run_open_loop(&cp_sched, op)
+                }
+            });
+            (hk.join().unwrap(), hs.join().unwrap(), hc.join().unwrap())
+        });
+        for (tenant, load, sched) in [
+            ("kv", kv_load, &kv_sched),
+            ("scan", scan_load, &scan_sched),
+            ("compose", cp_load, &cp_sched),
+        ] {
+            let row = format!("ol/mixed/{tenant}/{mode}");
+            let offered = sched.offered_rate();
+            t.row(&[
+                row.clone(),
+                format!("{offered:.0}"),
+                format!("{:.0}", load.throughput()),
+                Histogram::fmt_ns(load.hist.median_ns()),
+                Histogram::fmt_ns(load.hist.p99_ns()),
+                Histogram::fmt_ns(load.hist.p999_ns()),
+                format!("{}", load.late_sends),
+            ]);
+            rep.row_load(&row, &load, offered);
+            rep.extra("workers", 1.0);
+        }
+    }
+    drop(kv);
+    drop(scan);
+    drop(compose);
+    mixed.stop();
+
+    t.print("Open-loop load sweep — scheduled-arrival latency vs closed-loop pacing");
+    println!(
+        "\ninvariants: on every paired row, open p99 >= closed p99 at the same\n\
+         offered load (CI gate) — the difference is the coordinated omission\n\
+         closed-loop benches hide; late_sends counts arrivals the generator\n\
+         missed by >= 1us, whose backlog the open rows carry in-band."
+    );
+    rep.emit();
+}

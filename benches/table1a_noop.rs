@@ -11,7 +11,7 @@
 
 use rpcool::baselines::netrpc::{pair, Flavor};
 use rpcool::baselines::zhang::ZhangClient;
-use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
+use rpcool::benchkit::{fmt_ns, time_op, time_op_mean, BenchReport, Table};
 use rpcool::channel::{CallArg, CallOpts, Connection, Rpc, TransportSel};
 use rpcool::{Rack, SimConfig};
 use std::sync::Arc;
@@ -23,6 +23,9 @@ fn main() {
     let rack = Rack::new(SimConfig::for_bench());
     let mut table = Table::new(&["Framework", "No-op RTT", "Throughput (K req/s)", "Transport"]);
     let mut rep = BenchReport::new("table1a_noop");
+    // 20µs SLO: generous for the CXL rows (paper: 1.5–2.6µs), set
+    // before any row so slo_miss fills everywhere (ISSUE 8 audit).
+    rep.slo(20_000);
 
     // ---- RPCool (CXL) ----
     let env = rack.proc_env(0);
@@ -32,12 +35,11 @@ fn main() {
     let conn = Connection::connect(&cenv, "bench/noop").unwrap();
     conn.attach_inline(&server);
     cenv.enter();
-    let (mean, _) = time_op(1000, n, false, || {
-        conn.invoke(1, (), CallOpts::new()).unwrap();
-    });
-    // Short per-op-timed pass for real p50/p99 in the JSON record
-    // (timer overhead is <2% at µs-scale RTTs).
-    let (_, hist) = time_op(0, n / 10, true, || {
+    // One per-op-timed population: mean, tail, and throughput all
+    // describe the same n calls (timer overhead is <2% at µs-scale
+    // RTTs). The old split — mean from a big untimed run, tail from a
+    // 10×-smaller timed one — paired numbers from different runs.
+    let (mean, hist) = time_op(1000, n, || {
         conn.invoke(1, (), CallOpts::new()).unwrap();
     });
     rep.row_hist("RPCool", &hist, 1e9 / mean);
@@ -53,7 +55,7 @@ fn main() {
     // through `invoke_batch`. Reported per RPC, not per batch.
     const BATCH: usize = 16;
     let batch_args = [CallArg::NONE; BATCH];
-    let (mean_batch_total, _) = time_op(64, n / BATCH, false, || {
+    let mean_batch_total = time_op_mean(64, n / BATCH, || {
         let rets = conn.invoke_batch(1, &batch_args, CallOpts::new()).unwrap();
         assert_eq!(rets.len(), BATCH);
     });
@@ -69,10 +71,8 @@ fn main() {
     // ---- RPCool (Seal+Sandbox) ----
     let scope = conn.create_scope(4096).unwrap();
     let addr = scope.new_val(0u64).unwrap();
-    let (mean_sb, _) = time_op(1000, n / 2, false, || {
-        conn.invoke(1, (addr, 8), CallOpts::secure(&scope)).unwrap();
-    });
-    let (_, hist_sb) = time_op(0, n / 20, true, || {
+    // Same single-population discipline as the RPCool row.
+    let (mean_sb, hist_sb) = time_op(1000, n / 2, || {
         conn.invoke(1, (addr, 8), CallOpts::secure(&scope)).unwrap();
     });
     rep.row_hist("RPCool (Seal+Sandbox)", &hist_sb, 1e9 / mean_sb);
@@ -98,7 +98,7 @@ fn main() {
     // ping-pong between the nodes (that IS the fallback's cost).
     let scope = conn.create_scope(4096).unwrap();
     let addr = scope.new_val(0u64).unwrap();
-    let (mean_rdma, _) = time_op(100, n / 10, false, || {
+    let mean_rdma = time_op_mean(100, n / 10, || {
         conn.invoke(1, (addr, 8), CallOpts::new()).unwrap();
         // Touch the page client-side so the next call faults it back.
         rpcool::memory::ShmPtr::<u64>::from_addr(addr).write(1).unwrap();
@@ -118,7 +118,7 @@ fn main() {
     let (srv, cli) = pair(Flavor::ERpc, Arc::clone(&rack.pool.charger));
     srv.add(1, |_| Ok(vec![]));
     cli.attach_inline(&srv);
-    let (mean_erpc, _) = time_op(1000, n / 2, false, || {
+    let mean_erpc = time_op_mean(1000, n / 2, || {
         cli.call(1, &[]).unwrap();
     });
     rep.row("eRPC", 0.0, 0.0, mean_erpc, 1e9 / mean_erpc);
@@ -139,7 +139,7 @@ fn main() {
     zc.conn.attach_inline(&server);
     cenv.enter();
     let obj = zc.alloc.create(0u64).unwrap();
-    let (mean_z, _) = time_op(1000, n / 10, false, || {
+    let mean_z = time_op_mean(1000, n / 10, || {
         zc.call(1, obj).unwrap();
     });
     rep.row("ZhangRPC", 0.0, 0.0, mean_z, 1e9 / mean_z);
@@ -156,7 +156,7 @@ fn main() {
     let (srv, cli) = pair(Flavor::Grpc, Arc::clone(&rack.pool.charger));
     srv.add(1, |_| Ok(vec![]));
     cli.attach_inline(&srv);
-    let (mean_g, _) = time_op(2, n_slow, false, || {
+    let mean_g = time_op_mean(2, n_slow, || {
         cli.call(1, &[]).unwrap();
     });
     rep.row("gRPC", 0.0, 0.0, mean_g, 1e9 / mean_g);

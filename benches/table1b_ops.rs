@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo bench --bench table1b_ops` (add `-- --quick`).
 
-use rpcool::benchkit::{fmt_ns, time_op, BenchReport, Table};
+use rpcool::benchkit::{fmt_ns, time_op, time_op_mean, BenchReport, Table};
 use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc, RpcServer, TransportSel};
 use rpcool::memory::Scope;
 use rpcool::sandbox::SandboxMgr;
@@ -36,7 +36,7 @@ fn main() {
         let conn = Connection::connect(&cenv, "t1b/cxl").unwrap();
         conn.attach_inline(&server);
         cenv.enter();
-        let (m, _) = time_op(1000, n, false, || {
+        let m = time_op_mean(1000, n, || {
             conn.invoke(1, (), CallOpts::new()).unwrap();
         });
         t.row(&["No-op RPCool RPC (CXL)".into(), fmt_ns(m), "1.5 µs".into()]);
@@ -44,7 +44,7 @@ fn main() {
 
         let scope = conn.create_scope(4096).unwrap();
         let a = scope.new_val(0u64).unwrap();
-        let (m, _) = time_op(1000, n / 4, false, || {
+        let m = time_op_mean(1000, n / 4, || {
             conn.invoke(1, (a, 8), CallOpts::secure(&scope)).unwrap();
         });
         t.row(&["No-op Sealed+Sandboxed RPC (CXL, 1 page)".into(), fmt_ns(m), "2.6 µs".into()]);
@@ -63,7 +63,7 @@ fn main() {
         renv.enter();
         let scope = conn.create_scope(4096).unwrap();
         let a = scope.new_val(0u64).unwrap();
-        let (m, _) = time_op(100, n / 20, false, || {
+        let m = time_op_mean(100, n / 20, || {
             conn.invoke(1, (a, 8), CallOpts::new()).unwrap();
             rpcool::memory::ShmPtr::<u64>::from_addr(a).write(1).unwrap();
         });
@@ -79,7 +79,7 @@ fn main() {
         let reps = if quick { 3 } else { 10 };
         let env = rack.proc_env(0);
         let mut i = 0;
-        let (m, _) = time_op(0, reps, true, || {
+        let (m, _) = time_op(0, reps, || {
             let s = ChannelBuilder::from_config(&rack.cfg)
                 .open(&env, &format!("t1b/ch{i}"))
                 .unwrap();
@@ -98,7 +98,7 @@ fn main() {
             })
             .collect();
         let mut it = servers.into_iter();
-        let (m, _) = time_op(0, reps, true, || {
+        let (m, _) = time_op(0, reps, || {
             drop(it.next().unwrap());
         });
         t.row(&["Destroy Channel".into(), fmt_ns(m), "38.4 ms".into()]);
@@ -108,7 +108,7 @@ fn main() {
         server.add(1, |_| Ok(0));
         let reps = if quick { 2 } else { 5 };
         let mut conns = Vec::new();
-        let (m, _) = time_op(0, reps, true, || {
+        let (m, _) = time_op(0, reps, || {
             let cenv = rack.proc_env(2);
             conns.push(Connection::connect(&cenv, "t1b/conn").unwrap());
         });
@@ -125,7 +125,7 @@ fn main() {
         simproc::bind(999, 0);
 
         let scope1 = Scope::create(&heap, 4096).unwrap();
-        let (m, _) = time_op(100, n, false, || {
+        let m = time_op_mean(100, n, || {
             let g = mgr.begin(scope1.base(), scope1.len()).unwrap();
             drop(g);
         });
@@ -133,7 +133,7 @@ fn main() {
         rep.row("Cached Sandbox Enter+Exit (1 page)", 0.0, 0.0, m, 0.0);
 
         let scope1k = Scope::create(&heap, 1024 * 4096).unwrap();
-        let (m, _) = time_op(100, n, false, || {
+        let m = time_op_mean(100, n, || {
             let g = mgr.begin(scope1k.base(), scope1k.len()).unwrap();
             drop(g);
         });
@@ -144,7 +144,7 @@ fn main() {
         let scopes8: Vec<Scope> =
             (0..8).map(|_| Scope::create(&heap, 4096).unwrap()).collect();
         let mut k = 0usize;
-        let (m, _) = time_op(100, n, false, || {
+        let m = time_op_mean(100, n, || {
             let s = &scopes8[k & 7];
             k += 1;
             let g = mgr.begin(s.base(), s.len()).unwrap();
@@ -157,7 +157,7 @@ fn main() {
         let scopes32: Vec<Scope> =
             (0..32).map(|_| Scope::create(&heap, 4096).unwrap()).collect();
         let mut k = 0usize;
-        let (m, _) = time_op(32, n / 100, false, || {
+        let m = time_op_mean(32, n / 100, || {
             let s = &scopes32[k & 31];
             k += 1;
             let g = mgr.begin(s.base(), s.len()).unwrap();
@@ -178,7 +178,7 @@ fn main() {
              (1024, "Seal + standard release, no RPC (1024 pages)", "3.46 µs")]
         {
             let scope = Scope::create(&heap, pages * 4096).unwrap();
-            let (m, _) = time_op(100, n / 4, false, || {
+            let m = time_op_mean(100, n / 4, || {
                 let h = sealer.seal(scope.base(), scope.len(), 998).unwrap();
                 sealer.complete(h.idx);
                 sealer.release(h).unwrap();
@@ -201,7 +201,7 @@ fn main() {
                 pages * 4096,
                 threshold,
             );
-            let (m, _) = time_op(100, n / 4, false, || {
+            let m = time_op_mean(100, n / 4, || {
                 let scope = pool.pop().unwrap();
                 let h = sealer.seal(scope.base(), scope.len(), 998).unwrap();
                 sealer.complete(h.idx);
@@ -221,7 +221,7 @@ fn main() {
             let src = heap.alloc_bytes(bytes).unwrap();
             let dst = heap.alloc_bytes(bytes).unwrap();
             let reps = if pages == 1 { n / 2 } else { n / 500 };
-            let (m, _) = time_op(10, reps, false, || {
+            let m = time_op_mean(10, reps, || {
                 rack.pool.charger.charge_cxl_copy(bytes);
                 unsafe {
                     std::ptr::copy_nonoverlapping(src as *const u8, dst as *mut u8, bytes);

@@ -46,6 +46,21 @@
 #     headroom — the O(n)-scan rows exist in the same record to show
 #     the contrast).
 #
+#  7. Open-loop invariants (fresh open_loop record): every ".../open"
+#     row must have a ".../closed" twin at the same offered load, and
+#     on each pair open p99 must be at least 90% of closed p99 (open
+#     latency includes scheduled-arrival lateness, so it can only sit
+#     above closed modulo run-to-run noise; the 10% tolerance covers
+#     unloaded rows where both distributions are the same unqueued
+#     RTT). Open rows must carry the late_sends/max_late_ns lateness
+#     extras, and offered_ops must be present and nonzero.
+#
+#  8. Schema-2 sanity (every fresh record): on any row that carries a
+#     "samples" extra (written by row_hist), 0 <= slo_miss <= samples
+#     — the SLO-miss column can never exceed the population it was
+#     counted over (the Histogram::value() overflow this PR fixed
+#     made this whole column panic in debug and garbage in release).
+#
 # Usage: check_bench.sh <fresh-json-dir> <repo-root>
 set -euo pipefail
 
@@ -296,6 +311,86 @@ else:
             )
             ok = False
 
+sys.exit(0 if ok else 1)
+EOF
+
+python3 - "$fresh_dir/BENCH_open_loop.json" <<'EOF' || fail=1
+import json, sys
+
+P99_TOL = 0.90              # open p99 >= 90% of closed p99 (noise headroom
+                            # for unloaded pairs where both are the bare RTT)
+
+rows = {r["label"]: r for r in json.load(open(sys.argv[1]))["rows"]}
+ok = True
+pairs = 0
+
+for label, opn in sorted(rows.items()):
+    if not label.endswith("/open"):
+        continue
+    closed = rows.get(label[: -len("/open")] + "/closed")
+    if closed is None:
+        print(f"::error::{label} has no /closed twin — the pairing is the whole gate")
+        ok = False
+        continue
+    pairs += 1
+    for extra in ("late_sends", "max_late_ns", "offered_ops", "samples"):
+        if extra not in opn:
+            print(f"::error::{label} missing {extra} extra — gate would be vacuous")
+            ok = False
+    op99, cp99 = opn.get("p99_ns", 0), closed.get("p99_ns", 0)
+    if op99 <= 0 or cp99 <= 0:
+        print(f"::error::{label} pair p99s are unmeasured — gate would be vacuous")
+        ok = False
+    elif op99 < P99_TOL * cp99:
+        print(
+            f"::error::coordinated-omission invariant broken on {label}: open p99 "
+            f"{op99:.0f}ns sits under {P99_TOL:.0%} of closed p99 {cp99:.0f}ns — "
+            f"open-loop latency includes the closed run's latency plus queueing, "
+            f"so the open row can never be meaningfully faster (is the schedule "
+            f"being re-based somewhere?)"
+        )
+        ok = False
+    else:
+        print(f"open/closed pair ok: {label} p99 {op99:.0f}ns vs closed {cp99:.0f}ns")
+    oo, co = opn.get("offered_ops", 0), closed.get("offered_ops", 0)
+    if oo <= 0 or oo != co:
+        print(
+            f"::error::{label} offered load mismatch: open {oo!r} vs closed {co!r} — "
+            f"the pair must run the same arrival plan"
+        )
+        ok = False
+
+if pairs == 0:
+    print("::error::no open/closed pairs in fresh open_loop record — the sweep emitted nothing")
+    ok = False
+else:
+    print(f"open-loop invariants ok over {pairs} pairs")
+
+sys.exit(0 if ok else 1)
+EOF
+
+# Schema-2 sanity across EVERY fresh record: slo_miss counts a subset
+# of the row's recorded samples, so it can never exceed them.
+python3 - "$fresh_dir"/BENCH_*.json <<'EOF' || fail=1
+import json, sys
+
+ok = True
+checked = 0
+for path in sys.argv[1:]:
+    rec = json.load(open(path))
+    for r in rec.get("rows", []):
+        if "samples" not in r:
+            continue            # plain row(): no histogram population
+        checked += 1
+        miss, n = r.get("slo_miss", 0), r["samples"]
+        if not (0 <= miss <= n):
+            print(
+                f"::error::{rec['bench']}/{r['label']}: slo_miss {miss!r} outside "
+                f"[0, samples={n!r}] — the SLO column is counting ghosts"
+            )
+            ok = False
+
+print(f"slo_miss sanity ok over {checked} histogram rows" if ok else "slo_miss sanity FAILED")
 sys.exit(0 if ok else 1)
 EOF
 

@@ -1,0 +1,256 @@
+//! Mixed-tenant deployment: memcached, CoolDB, and the SocialNetwork
+//! compose chain all served **concurrently on one rack**, with
+//! per-tenant step drivers for the open-loop load harness
+//! (`benchkit::Schedule` / `run_open_loop`).
+//!
+//! Every bench before this ran one app at a time, so tenants never
+//! contended for the daemon, the shared pool, or each other's cache
+//! lines. Real daemons multiplex: a YCSB-B get stream, compose-post
+//! storms, and document range scans all land on the same machine at
+//! once, and the tail of each is shaped by the others. `MixedTenants`
+//! stands up all three server sets under one `Rack`, pre-loads their
+//! working sets, and hands out cheap per-worker drivers whose `step()`
+//! issues exactly one tenant op — the unit the arrival `Schedule`
+//! paces.
+//!
+//! Host layout (fixed): SocialNetwork owns hosts 0–4 (front-end on 0,
+//! services on 1–4, chosen inside `RpcoolSocial::start`), memcached
+//! serves on host 5, CoolDB on host 6, the loader runs as host 7.
+//! Driver hosts are caller-chosen; use ids ≥ 8.
+
+use crate::apps::cooldb::{self, CoolClient, CoolIndex, RpcoolCool};
+use crate::apps::memcached::{self, Cache, KvClient, RpcoolKv};
+use crate::apps::socialnet::{sample_post, RpcoolSocial, SocialState};
+use crate::channel::waiter::SleepPolicy;
+use crate::channel::RpcServer;
+use crate::error::Result;
+use crate::rack::{ProcEnv, Rack};
+use crate::util::rng::Rng;
+use crate::workloads::nobench::{NoBench, NumRangeQuery};
+use crate::workloads::ycsb::{Op, WorkloadKind, Ycsb};
+use std::sync::Arc;
+
+const KV_HOST: u32 = 5;
+const COOL_HOST: u32 = 6;
+const LOAD_HOST: u32 = 7;
+
+/// Three tenants, one rack, pre-loaded and serving.
+pub struct MixedTenants {
+    pub rack: Arc<Rack>,
+    /// memcached's backing store (server side).
+    pub cache: Arc<Cache>,
+    /// CoolDB's key → document index (server side).
+    pub index: Arc<CoolIndex>,
+    /// The compose-post service chain (channels `social/<tag>/…`).
+    pub social: RpcoolSocial,
+    pub nkeys: u64,
+    pub nusers: usize,
+    kv_server: RpcServer,
+    cool_server: RpcServer,
+    listeners: Vec<std::thread::JoinHandle<()>>,
+    tag: String,
+}
+
+impl MixedTenants {
+    /// Stand up all three tenants and load their working sets:
+    /// `nkeys` YCSB rows into memcached (batched `set_many`), `ndocs`
+    /// NoBench documents into CoolDB (batched `put_many`), and a
+    /// `nusers`-user social graph.
+    pub fn start(
+        rack: &Arc<Rack>,
+        tag: &str,
+        nkeys: u64,
+        ndocs: usize,
+        nusers: usize,
+        seed: u64,
+    ) -> Result<MixedTenants> {
+        let kv_name = format!("mixed/{tag}/kv");
+        let cool_name = format!("mixed/{tag}/cool");
+
+        let cache = Cache::new(16);
+        let kv_server =
+            memcached::serve_rpcool(&rack.proc_env(KV_HOST), &kv_name, Arc::clone(&cache))?;
+        let index = CoolIndex::new();
+        let cool_server =
+            cooldb::serve_rpcool(&rack.proc_env(COOL_HOST), &cool_name, Arc::clone(&index))?;
+        let listeners = vec![kv_server.spawn_listener(), cool_server.spawn_listener()];
+
+        let state = SocialState::new(nusers, 8, seed);
+        let social = RpcoolSocial::start(rack, state, SleepPolicy::Park, false, tag)?;
+
+        // Load phase, from a dedicated loader proc. Both loads ride
+        // the batched submission paths (one doorbell per chunk).
+        let lenv = rack.proc_env(LOAD_HOST);
+        let kv = RpcoolKv::connect(&lenv, &kv_name)?;
+        let mut w = Ycsb::new(WorkloadKind::B, nkeys, seed);
+        lenv.run(|| -> Result<()> {
+            let mut batch: Vec<(String, Vec<u8>)> = Vec::with_capacity(64);
+            for id in 0..nkeys {
+                batch.push((Ycsb::key_name(id), w.value_for(100)));
+                if batch.len() == 64 {
+                    kv.set_many(&batch)?;
+                    batch.clear();
+                }
+            }
+            if batch.is_empty() { Ok(()) } else { kv.set_many(&batch) }
+        })?;
+        let cool = RpcoolCool::connect(&lenv, &cool_name)?;
+        let corpus = NoBench::new(seed ^ 0xC001).corpus(ndocs);
+        lenv.run(|| cool.put_many(&corpus))?;
+
+        Ok(MixedTenants {
+            rack: Arc::clone(rack),
+            cache,
+            index,
+            social,
+            nkeys,
+            nusers,
+            kv_server,
+            cool_server,
+            listeners,
+            tag: tag.to_string(),
+        })
+    }
+
+    /// A memcached tenant worker: its own connection + YCSB-B stream.
+    pub fn kv_driver(&self, host: u32, seed: u64) -> Result<KvDriver> {
+        let env = self.rack.proc_env(host);
+        let kv = RpcoolKv::connect(&env, &format!("mixed/{}/kv", self.tag))?;
+        Ok(KvDriver { env, kv, w: Ycsb::new(WorkloadKind::B, self.nkeys, seed) })
+    }
+
+    /// A CoolDB tenant worker: its own connection + random range scans.
+    pub fn scan_driver(&self, host: u32, seed: u64) -> Result<ScanDriver> {
+        let env = self.rack.proc_env(host);
+        let cool = RpcoolCool::connect(&env, &format!("mixed/{}/cool", self.tag))?;
+        Ok(ScanDriver { env, cool, rng: Rng::new(seed) })
+    }
+
+    /// A social tenant worker: drives the shared front-end connections
+    /// (compose fans out over four service channels per post).
+    pub fn compose_driver(&self, seed: u64) -> ComposeDriver<'_> {
+        ComposeDriver {
+            env: self.rack.proc_env(0),
+            social: &self.social,
+            rng: Rng::new(seed),
+            nusers: self.nusers,
+        }
+    }
+
+    pub fn stop(self) {
+        self.social.stop();
+        self.kv_server.stop();
+        self.cool_server.stop();
+        for l in self.listeners {
+            let _ = l.join();
+        }
+    }
+}
+
+/// One YCSB-B op per `step()` (95% get / 5% set, zipfian keys).
+pub struct KvDriver {
+    env: ProcEnv,
+    kv: RpcoolKv,
+    w: Ycsb,
+}
+
+impl KvDriver {
+    pub fn step(&mut self) -> Result<()> {
+        self.env.enter();
+        let spec = self.w.next_op();
+        let key = Ycsb::key_name(spec.key);
+        match spec.op {
+            Op::Read => {
+                self.kv.get(&key)?;
+            }
+            Op::Update | Op::Insert => {
+                let v = self.w.value_for(100);
+                self.kv.set(&key, &v)?;
+            }
+            Op::ReadModifyWrite => {
+                let mut v = self.kv.get(&key)?.unwrap_or_default();
+                if v.is_empty() {
+                    v = self.w.value_for(100);
+                }
+                v[0] = v[0].wrapping_add(1);
+                self.kv.set(&key, &v)?;
+            }
+            Op::Scan { .. } => unreachable!("workload B has no scans"),
+        }
+        Ok(())
+    }
+}
+
+/// One compose-post per `step()` (the full four-service chain).
+pub struct ComposeDriver<'a> {
+    env: ProcEnv,
+    social: &'a RpcoolSocial,
+    rng: Rng,
+    nusers: usize,
+}
+
+impl ComposeDriver<'_> {
+    pub fn step(&mut self) -> Result<u64> {
+        self.env.enter();
+        let (user, text) = sample_post(&mut self.rng, self.nusers);
+        self.social.compose_post(user, &text)
+    }
+}
+
+/// One random document range-scan per `step()`.
+pub struct ScanDriver {
+    env: ProcEnv,
+    cool: RpcoolCool,
+    rng: Rng,
+}
+
+impl ScanDriver {
+    pub fn step(&mut self) -> Result<usize> {
+        self.env.enter();
+        self.cool.search(NumRangeQuery::random(&mut self.rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn three_tenants_serve_concurrently_on_one_rack() {
+        let rack = Rack::for_tests();
+        let mixed = MixedTenants::start(&rack, "mx", 200, 60, 50, 7).unwrap();
+        assert!(mixed.cache.len() >= 200, "YCSB load must land in memcached");
+        assert_eq!(mixed.index.len(), 60, "NoBench corpus must land in CoolDB");
+
+        let mut kv = mixed.kv_driver(8, 11).unwrap();
+        let mut scan = mixed.scan_driver(9, 12).unwrap();
+        let mut compose = mixed.compose_driver(13);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..30 {
+                    kv.step().unwrap();
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..10 {
+                    scan.step().unwrap();
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..10 {
+                    compose.step().unwrap();
+                }
+            });
+        });
+        assert_eq!(
+            mixed.social.state.composed.load(Ordering::Relaxed),
+            10,
+            "every compose-post must complete the full chain"
+        );
+        drop(kv);
+        drop(scan);
+        drop(compose);
+        mixed.stop();
+    }
+}

@@ -6,6 +6,7 @@
 pub mod cooldb;
 pub mod doc;
 pub mod memcached;
+pub mod mixed;
 pub mod mongodb;
 pub mod socialnet;
 

@@ -8,34 +8,284 @@
 use crate::metrics::Histogram;
 use std::time::{Duration, Instant};
 
-/// Time `op` over `n` iterations after `warmup` iterations; returns
-/// mean ns/op and a latency histogram (per-op timing only if
-/// `per_op`; otherwise total/n, which is right for sub-µs ops where
-/// timer overhead would dominate).
-pub fn time_op(warmup: usize, n: usize, per_op: bool, mut op: impl FnMut()) -> (f64, Histogram) {
+/// Time `op` over `n` per-op-timed iterations after `warmup`
+/// iterations; returns (mean ns/op over the whole run, per-op latency
+/// histogram). Mean and tail come from the SAME population — pair
+/// them freely in one report row.
+pub fn time_op(warmup: usize, n: usize, mut op: impl FnMut()) -> (f64, Histogram) {
     for _ in 0..warmup {
         op();
     }
     let hist = Histogram::new();
-    if per_op {
-        let t_all = Instant::now();
-        for _ in 0..n {
-            let t = Instant::now();
-            op();
-            hist.record(t.elapsed());
-        }
-        let mean = t_all.elapsed().as_nanos() as f64 / n as f64;
-        (mean, hist)
-    } else {
+    let t_all = Instant::now();
+    for _ in 0..n {
         let t = Instant::now();
-        for _ in 0..n {
-            op();
-        }
-        let total = t.elapsed();
-        let mean = total.as_nanos() as f64 / n as f64;
-        hist.record_ns(mean as u64);
-        (mean, hist)
+        op();
+        hist.record(t.elapsed());
     }
+    let mean = t_all.elapsed().as_nanos() as f64 / n as f64;
+    (mean, hist)
+}
+
+/// Aggregate-only timing: total wall clock / `n`, no per-op
+/// measurements at all — right for sub-µs ops where timer overhead
+/// would dominate. Deliberately returns NO histogram: a mean is not a
+/// latency distribution, and the old shape (a histogram holding one
+/// synthetic mean sample) let benches pair a tail from one run with a
+/// throughput from another and call it a single population (ISSUE 8).
+/// Want tails? Use [`time_op`] or the open-loop runners below.
+pub fn time_op_mean(warmup: usize, n: usize, mut op: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        op();
+    }
+    let t = Instant::now();
+    for _ in 0..n {
+        op();
+    }
+    t.elapsed().as_nanos() as f64 / n as f64
+}
+
+// ---------------------------------------------------------------------
+// open-loop load generation (ISSUE 8 tentpole)
+//
+// Closed-loop benches measure each op from its actual send time and
+// only issue the next op after the reply: a stalled server silently
+// *re-schedules* the offered load, so queueing delay never shows up in
+// the recorded distribution — coordinated omission. The open-loop
+// harness fixes the arrival times up front and measures every op from
+// its *scheduled* arrival: if the generator (or the server) falls
+// behind, the backlog is carried into the recorded latency instead of
+// vanishing. DESIGN.md §13 has the full argument.
+
+/// A send more than this far behind its scheduled arrival counts as
+/// late in [`LoadReport::late_sends`] (spin-wait granularity means
+/// every send is some tens of ns "late"; 1µs is signal, not jitter).
+pub const LATE_SEND_NS: u64 = 1_000;
+
+/// Deterministic arrival plan: offsets in ns from the run's start,
+/// non-decreasing. Construction is pure (no clocks, no global RNG) so
+/// a schedule replays identically across runs and workers.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    arrivals: Vec<u64>,
+}
+
+impl Schedule {
+    /// `n` arrivals at a fixed `rate` per second (uniform interarrival).
+    pub fn fixed_rate(n: usize, rate: f64) -> Schedule {
+        assert!(rate > 0.0, "offered rate must be positive");
+        let gap = 1e9 / rate;
+        Schedule { arrivals: (0..n).map(|i| (i as f64 * gap) as u64).collect() }
+    }
+
+    /// Bursty plan: arrivals come in back-to-back groups of `burst`,
+    /// groups spaced so the long-run offered rate is still `rate` —
+    /// the same load as [`Schedule::fixed_rate`] but maximally clumped.
+    pub fn bursty(n: usize, rate: f64, burst: usize) -> Schedule {
+        assert!(rate > 0.0, "offered rate must be positive");
+        assert!(burst > 0, "burst must be at least 1");
+        let group_gap = burst as f64 * 1e9 / rate;
+        Schedule { arrivals: (0..n).map(|i| ((i / burst) as f64 * group_gap) as u64).collect() }
+    }
+
+    /// Poisson-like plan: interarrival gaps drawn exponential with
+    /// mean `1/rate` from a seeded generator — an open-loop stream
+    /// with natural burstiness, deterministic per seed.
+    pub fn poisson(n: usize, rate: f64, seed: u64) -> Schedule {
+        assert!(rate > 0.0, "offered rate must be positive");
+        let mean_gap = 1e9 / rate;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut at = 0.0f64;
+        let arrivals = (0..n)
+            .map(|_| {
+                let here = at as u64;
+                // Inverse CDF; clamp u away from 0 so ln stays finite.
+                let u = rng.next_f64().max(1e-12);
+                at += -u.ln() * mean_gap;
+                here
+            })
+            .collect();
+        Schedule { arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Scheduled arrival offset of op `i`, ns from the run's start.
+    pub fn arrival_ns(&self, i: usize) -> u64 {
+        self.arrivals[i]
+    }
+
+    /// Span from first to last scheduled arrival.
+    pub fn span_ns(&self) -> u64 {
+        self.arrivals.last().copied().unwrap_or(0)
+    }
+
+    /// The offered load this plan encodes, ops/sec.
+    pub fn offered_rate(&self) -> f64 {
+        if self.arrivals.len() < 2 || self.span_ns() == 0 {
+            return 0.0;
+        }
+        // n arrivals bound (n-1) gaps.
+        (self.arrivals.len() - 1) as f64 * 1e9 / self.span_ns() as f64
+    }
+
+    /// Worker `w` of `k` takes every k-th arrival (stride partition):
+    /// the union of all stripes is exactly the original plan, so the
+    /// aggregate offered load is preserved across a fan-out.
+    pub fn stripe(&self, w: usize, k: usize) -> Schedule {
+        assert!(k > 0 && w < k, "stripe({w}, {k}) out of range");
+        Schedule { arrivals: self.arrivals.iter().copied().skip(w).step_by(k).collect() }
+    }
+}
+
+/// What one load-generator run measured.
+pub struct LoadReport {
+    /// Per-op latency. Open-loop: from *scheduled* arrival (queueing
+    /// visible). Closed-paced: from actual send (queueing hidden —
+    /// kept as the coordinated-omission contrast row).
+    pub hist: Histogram,
+    /// Ops completed.
+    pub ops: u64,
+    /// Wall clock of the whole run.
+    pub wall: Duration,
+    /// Sends that happened ≥ [`LATE_SEND_NS`] after their scheduled
+    /// arrival — the generator fell behind and the recorded latency
+    /// carries the backlog. Always 0 for closed pacing (re-based).
+    pub late_sends: u64,
+    /// Worst send lateness seen, ns.
+    pub max_late_ns: u64,
+}
+
+impl LoadReport {
+    /// Completion rate, ops/sec.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.ops as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Fold another worker's report into this one.
+    pub fn merge(&mut self, other: &LoadReport) {
+        self.hist.merge(&other.hist);
+        self.ops += other.ops;
+        self.wall = self.wall.max(other.wall);
+        self.late_sends += other.late_sends;
+        self.max_late_ns = self.max_late_ns.max(other.max_late_ns);
+    }
+
+    fn empty() -> LoadReport {
+        LoadReport {
+            hist: Histogram::new(),
+            ops: 0,
+            wall: Duration::ZERO,
+            late_sends: 0,
+            max_late_ns: 0,
+        }
+    }
+}
+
+/// Hybrid sleep/spin until `due` (relative to `t0`): sleep the bulk,
+/// spin the last stretch so arrival precision stays at spin (~ns)
+/// rather than scheduler (~ms) granularity.
+fn wait_until(t0: &Instant, due: Duration) {
+    loop {
+        let now = t0.elapsed();
+        if now >= due {
+            return;
+        }
+        let left = due - now;
+        if left > Duration::from_micros(200) {
+            std::thread::sleep(left - Duration::from_micros(100));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Open-loop run: issue `op(i)` once per scheduled arrival; latency
+/// is completion time minus *scheduled* arrival time. An op that
+/// overruns into the next arrival makes the next send late, and that
+/// lateness is carried into the next recorded latency — coordinated
+/// omission becomes a visible number instead of a silent re-schedule.
+pub fn run_open_loop(sched: &Schedule, mut op: impl FnMut(usize)) -> LoadReport {
+    let mut rep = LoadReport::empty();
+    let t0 = Instant::now();
+    for i in 0..sched.len() {
+        let due = Duration::from_nanos(sched.arrival_ns(i));
+        wait_until(&t0, due);
+        let sent = t0.elapsed();
+        let late = (sent.saturating_sub(due)).as_nanos() as u64;
+        if late >= LATE_SEND_NS {
+            rep.late_sends += 1;
+        }
+        rep.max_late_ns = rep.max_late_ns.max(late);
+        op(i);
+        let done = t0.elapsed();
+        rep.hist.record_ns((done - due).as_nanos() as u64);
+        rep.ops += 1;
+    }
+    rep.wall = t0.elapsed();
+    rep
+}
+
+/// Closed-loop twin at matched offered load: the SAME interarrival
+/// plan, but each gap is paced from the previous op's *completion*
+/// and latency is measured from the actual send. This is exactly the
+/// methodology that hides queueing (a stall pushes the whole rest of
+/// the plan back), kept as the contrast row the open-loop gate pairs
+/// against: at matched offered load, open p99 ≥ closed p99, and the
+/// gap IS the coordinated omission.
+pub fn run_closed_paced(sched: &Schedule, mut op: impl FnMut(usize)) -> LoadReport {
+    let mut rep = LoadReport::empty();
+    let t0 = Instant::now();
+    let mut resume_at = Duration::ZERO;
+    let mut prev_arrival = 0u64;
+    for i in 0..sched.len() {
+        let gap = sched.arrival_ns(i) - prev_arrival;
+        prev_arrival = sched.arrival_ns(i);
+        wait_until(&t0, resume_at + Duration::from_nanos(gap));
+        let sent = t0.elapsed();
+        op(i);
+        let done = t0.elapsed();
+        rep.hist.record_ns((done - sent).as_nanos() as u64);
+        rep.ops += 1;
+        resume_at = done; // re-base: the next gap starts at completion
+    }
+    rep.wall = t0.elapsed();
+    rep
+}
+
+/// Multi-worker load driver: `workers` scoped threads each run the
+/// striped sub-plan `sched.stripe(w, workers)` through `run` (which
+/// calls [`run_open_loop`] or [`run_closed_paced`] around its own
+/// client state) and the per-worker reports are merged. Aggregate
+/// offered load equals the full schedule's.
+pub fn fanout_load(
+    workers: usize,
+    sched: &Schedule,
+    run: impl Fn(usize, &Schedule) -> LoadReport + Sync,
+) -> LoadReport {
+    let mut merged = LoadReport::empty();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let sub = sched.stripe(w, workers);
+                let run = &run;
+                s.spawn(move || run(w, &sub))
+            })
+            .collect();
+        for h in handles {
+            merged.merge(&h.join().unwrap());
+        }
+    });
+    merged
 }
 
 /// Fan out `threads` copies of `work(thread_idx)` on scoped threads
@@ -151,6 +401,13 @@ pub struct BenchReport {
     /// Latency SLO applied by [`BenchReport::row_hist`] to fill each
     /// row's `slo_miss` column. None → column stays 0.
     slo_ns: Option<u64>,
+    /// Histogram rows recorded so far — ordering audit: `slo()` after
+    /// the first of these is a bench bug (those rows silently carry
+    /// slo_miss 0).
+    hist_rows: usize,
+    /// One nudge per report when histogram rows accumulate without an
+    /// SLO ever being set.
+    slo_warned: bool,
 }
 
 fn json_escape(s: &str) -> String {
@@ -178,13 +435,35 @@ fn json_num(v: f64) -> f64 {
 
 impl BenchReport {
     pub fn new(name: &str) -> BenchReport {
-        BenchReport { name: name.to_string(), rows: Vec::new(), slo_ns: None }
+        BenchReport {
+            name: name.to_string(),
+            rows: Vec::new(),
+            slo_ns: None,
+            hist_rows: 0,
+            slo_warned: false,
+        }
     }
 
     /// Set the latency SLO for subsequent [`BenchReport::row_hist`]
     /// calls: each row's `slo_miss` column becomes the number of
-    /// samples over `ns`.
+    /// samples over `ns`. Call it BEFORE the first histogram row —
+    /// rows recorded earlier keep slo_miss 0, which is a silent
+    /// all-zero SLO column, so a misordered bench warns in release
+    /// and panics under `cargo test`/debug CI (ISSUE 8 audit).
     pub fn slo(&mut self, ns: u64) {
+        if self.hist_rows > 0 {
+            eprintln!(
+                "[bench] WARNING: {}: slo() set after {} histogram row(s) — their slo_miss \
+                 columns are stuck at 0; move the slo() call before the first row_hist",
+                self.name, self.hist_rows
+            );
+            if cfg!(debug_assertions) {
+                panic!(
+                    "BenchReport::slo() must run before the first row_hist (bench '{}')",
+                    self.name
+                );
+            }
+        }
         self.slo_ns = Some(ns);
     }
 
@@ -207,8 +486,25 @@ impl BenchReport {
 
     /// Record a row from a histogram + ops/sec, including the deep
     /// tail (p99.9) and — when an SLO was set via
-    /// [`BenchReport::slo`] — the over-threshold sample count.
+    /// [`BenchReport::slo`] — the over-threshold sample count. Every
+    /// histogram row also carries a `samples` extra (the population
+    /// size) so CI can sanity-check `slo_miss ≤ samples` on any
+    /// schema-2 record.
     pub fn row_hist(&mut self, label: &str, hist: &Histogram, thr: f64) {
+        assert!(
+            hist.count() > 0,
+            "row_hist('{label}') on an empty histogram — this population measured nothing \
+             (a mean-only timing has no tail; use time_op or the open-loop runners)"
+        );
+        if self.slo_ns.is_none() && !self.rows.is_empty() && !self.slo_warned {
+            eprintln!(
+                "[bench] note: {}: histogram rows accumulating with no SLO set — slo_miss \
+                 columns stay 0 (call BenchReport::slo(ns) before the first row to fill them)",
+                self.name
+            );
+            self.slo_warned = true;
+        }
+        self.hist_rows += 1;
         self.rows.push(BenchRow {
             label: label.to_string(),
             p50_ns: hist.median_ns() as f64,
@@ -217,8 +513,20 @@ impl BenchReport {
             mean_ns: hist.mean_ns(),
             throughput_ops: thr,
             slo_miss: self.slo_ns.map(|s| hist.count_over_ns(s) as f64).unwrap_or(0.0),
-            extra: Vec::new(),
+            extra: vec![("samples".to_string(), hist.count() as f64)],
         });
+    }
+
+    /// Record a load-generator row: latency columns from the report's
+    /// histogram, throughput from completions over wall clock, plus
+    /// the offered-load/lateness extras every open- or closed-loop
+    /// row must carry (`offered_ops` is what the schedule asked for;
+    /// `late_sends`/`max_late_ns` make generator stalls auditable).
+    pub fn row_load(&mut self, label: &str, load: &LoadReport, offered: f64) {
+        self.row_hist(label, &load.hist, load.throughput());
+        self.extra("offered_ops", offered);
+        self.extra("late_sends", load.late_sends as f64);
+        self.extra("max_late_ns", load.max_late_ns as f64);
     }
 
     /// Attach an extra metric to the most recent row.
@@ -288,11 +596,22 @@ mod tests {
 
     #[test]
     fn time_op_measures() {
-        let (mean, hist) = time_op(10, 100, true, || {
+        let (mean, hist) = time_op(10, 100, || {
             crate::util::spin::spin_ns(10_000);
         });
         assert!(mean > 5_000.0, "mean {mean}");
         assert!(hist.count() == 100);
+    }
+
+    #[test]
+    fn time_op_mean_has_no_histogram_to_misuse() {
+        // The ISSUE 8 fix: aggregate-only timing returns a bare f64 —
+        // pairing a mean from one run with a tail from another is now
+        // a compile-time impossibility, not a silent convention.
+        let mean = time_op_mean(10, 100, || {
+            crate::util::spin::spin_ns(5_000);
+        });
+        assert!(mean > 2_500.0, "mean {mean}");
     }
 
     #[test]
@@ -355,13 +674,112 @@ mod tests {
         for ns in 1..=1000u64 {
             h.record_ns(ns * 1000); // 1µs..1ms
         }
+        // No SLO set → column stays 0 (and row_hist warns, not panics).
+        let mut r0 = BenchReport::new("slo-unit-none");
+        r0.row_hist("no-slo", &h, 0.0);
+        assert_eq!(r0.rows[0].slo_miss, 0.0);
+        // Correct ordering: slo() before the first row.
         let mut r = BenchReport::new("slo-unit");
-        r.row_hist("no-slo", &h, 0.0);
         r.slo(500_000);
         r.row_hist("with-slo", &h, 0.0);
-        assert_eq!(r.rows[0].slo_miss, 0.0, "no SLO set → column stays 0");
-        assert!(r.rows[1].slo_miss > 0.0, "half the ramp misses a 500µs SLO");
-        assert!(r.rows[1].p999_ns >= r.rows[1].p99_ns);
+        assert!(r.rows[0].slo_miss > 0.0, "half the ramp misses a 500µs SLO");
+        assert!(r.rows[0].p999_ns >= r.rows[0].p99_ns);
+        // Every histogram row carries its population size for CI's
+        // slo_miss ≤ samples sanity gate.
+        assert!(r.rows[0].extra.iter().any(|(k, v)| k == "samples" && *v == 1000.0));
+        assert!(r.rows[0].slo_miss <= 1000.0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "must run before the first row_hist")]
+    fn slo_after_rows_is_a_bench_bug() {
+        let h = Histogram::new();
+        h.record_ns(1_000);
+        let mut r = BenchReport::new("slo-misordered");
+        r.row_hist("early", &h, 0.0);
+        r.slo(500); // too late: the row above has slo_miss 0 forever
+    }
+
+    #[test]
+    #[should_panic(expected = "empty histogram")]
+    fn row_hist_rejects_empty_population() {
+        let mut r = BenchReport::new("empty-hist");
+        r.row_hist("nothing", &Histogram::new(), 0.0);
+    }
+
+    #[test]
+    fn schedule_plans_are_deterministic_and_partitionable() {
+        let s = Schedule::fixed_rate(100, 1e6); // 1µs gaps
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.arrival_ns(0), 0);
+        assert_eq!(s.arrival_ns(99), 99_000);
+        assert!((s.offered_rate() / 1e6 - 1.0).abs() < 0.01, "rate {}", s.offered_rate());
+        // Stripes partition the plan exactly.
+        let mut union: Vec<u64> = (0..4).flat_map(|w| s.stripe(w, 4).arrivals).collect();
+        union.sort_unstable();
+        assert_eq!(union, s.arrivals);
+        // Bursty: same span/rate, arrivals clumped in groups of 8.
+        let b = Schedule::bursty(64, 1e6, 8);
+        assert_eq!(b.arrival_ns(0), b.arrival_ns(7));
+        assert!(b.arrival_ns(8) > b.arrival_ns(7));
+        assert!((b.arrival_ns(8) - b.arrival_ns(7)) >= 7_000);
+        // Poisson: deterministic per seed, non-decreasing.
+        let p1 = Schedule::poisson(50, 1e6, 7);
+        let p2 = Schedule::poisson(50, 1e6, 7);
+        assert_eq!(p1.arrivals, p2.arrivals);
+        assert!(p1.arrivals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn open_loop_carries_lateness_that_closed_pacing_hides() {
+        // Service time 60µs, offered interarrival 20µs: a 3x-over-
+        // saturated generator. Open-loop must carry the growing
+        // backlog into recorded latency; the closed twin re-bases
+        // after every completion and reports flat ~60µs ops.
+        let sched = Schedule::fixed_rate(40, 50_000.0);
+        let op = |_i: usize| crate::util::spin::spin_ns(60_000);
+        let open = run_open_loop(&sched, op);
+        let closed = run_closed_paced(&sched, op);
+        assert_eq!(open.ops, 40);
+        assert_eq!(closed.ops, 40);
+        assert!(open.late_sends > 10, "saturated generator must fall behind ({})", open.late_sends);
+        assert_eq!(closed.late_sends, 0, "closed pacing re-bases, by construction");
+        // The whole point: at identical offered load the open-loop
+        // tail dwarfs the closed-loop tail (queueing made visible).
+        let (op99, cp99) = (open.hist.p99_ns(), closed.hist.p99_ns());
+        assert!(
+            op99 >= 2 * cp99,
+            "open p99 {op99} must dwarf closed p99 {cp99} under saturation"
+        );
+        assert!(open.max_late_ns > 0);
+    }
+
+    #[test]
+    fn fanout_load_merges_striped_workers() {
+        let sched = Schedule::fixed_rate(64, 200_000.0); // 5µs gaps
+        let merged = fanout_load(4, &sched, |_w, sub| {
+            assert_eq!(sub.len(), 16);
+            run_open_loop(sub, |_i| crate::util::spin::spin_ns(2_000))
+        });
+        assert_eq!(merged.ops, 64);
+        assert_eq!(merged.hist.count(), 64);
+        assert!(merged.wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn row_load_fills_slo_and_lateness_columns() {
+        let sched = Schedule::fixed_rate(32, 100_000.0);
+        let load = run_open_loop(&sched, |_| crate::util::spin::spin_ns(3_000));
+        let mut r = BenchReport::new("load-unit");
+        r.slo(1_000_000);
+        r.row_load("ol/unit/open", &load, sched.offered_rate());
+        let row = &r.rows[0];
+        assert!(row.p50_ns > 0.0);
+        for key in ["samples", "offered_ops", "late_sends", "max_late_ns"] {
+            assert!(row.extra.iter().any(|(k, _)| k == key), "missing extra {key}");
+        }
+        assert!(row.slo_miss <= 32.0);
     }
 
     #[test]

@@ -17,6 +17,14 @@ pub struct Histogram {
 
 const SUB: usize = 16;
 
+/// Highest bucket index [`Histogram::index`] can produce: exponent 63
+/// (the top bit of a u64), sub-bucket 15 ⇒ (63−3)·16 + 15. Buckets
+/// above it exist only as Vec padding and must never be given a
+/// representative value by shifting — `1 << (idx/16 + 3)` overflows
+/// there, which is exactly the `count_over_ns`/`percentile_ns`
+/// full-sweep panic this constant guards against.
+const MAX_IDX: usize = (63 - 3) * SUB + (SUB - 1);
+
 impl Histogram {
     pub fn new() -> Histogram {
         Histogram {
@@ -39,13 +47,26 @@ impl Histogram {
     }
 
     /// Representative (upper-bound) value for a bucket index.
+    /// Total — safe for every `idx < 64 * SUB`, not just the ones
+    /// `index()` can reach: full-domain sweeps (`count_over_ns`,
+    /// `percentile_ns`) call it on all 1024 buckets, and the top of
+    /// the domain saturates at `u64::MAX` instead of shift- or
+    /// add-overflowing (a sample of `u64::MAX` lands in bucket
+    /// `MAX_IDX`, whose exact upper bound 2⁶³ + 2⁶³ does not fit).
     fn value(idx: usize) -> u64 {
         if idx < SUB {
             return idx as u64;
         }
+        if idx > MAX_IDX {
+            // Unreachable from index(); keep value() monotone so the
+            // sweeps stay correct if one is ever visited.
+            return u64::MAX;
+        }
         let exp = idx / SUB + 3;
         let sub = idx % SUB;
-        (1u64 << exp) + ((sub as u64 + 1) << (exp - 4))
+        // exp ≤ 63 here, so both shifts are in range; only the final
+        // add can exceed the domain (top bucket), hence saturating.
+        (1u64 << exp).saturating_add((sub as u64 + 1) << (exp - 4))
     }
 
     pub fn record(&self, d: Duration) {
@@ -126,6 +147,23 @@ impl Histogram {
             }
         }
         over
+    }
+
+    /// Fold another histogram's samples into this one (bucket-wise
+    /// add). Both sides stay usable; concurrent recording into either
+    /// during the merge is safe but the fold is not atomic as a whole.
+    pub fn merge(&self, other: &Histogram) {
+        for (b, o) in self.buckets.iter().zip(&other.buckets) {
+            let n = o.load(Ordering::Relaxed);
+            if n > 0 {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        // An empty `other` holds the MAX sentinel, which fetch_min ignores.
+        self.min_ns.fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn reset(&self) {
@@ -242,6 +280,118 @@ mod tests {
         // resolution allows a generous band).
         let mid = h.count_over_ns(500_000);
         assert!((300..=700).contains(&mid), "mid {mid}");
+    }
+
+    #[test]
+    fn u64_max_sample_survives_full_domain_sweeps() {
+        // Regression (ISSUE 8): a sample in the top bucket used to
+        // shift-overflow `value()` inside `count_over_ns`'s sweep over
+        // all 1024 buckets (debug builds panicked on every slo_miss
+        // computation). The sweep must complete AND count the sample.
+        let h = Histogram::new();
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count_over_ns(0), 1, "the u64::MAX sample must be counted over 0");
+        assert_eq!(h.count_over_ns(u64::MAX), 0, "nothing exceeds a u64::MAX threshold");
+        assert_eq!(h.p999_ns(), u64::MAX, "deep tail saturates at the domain top");
+        assert_eq!(h.percentile_ns(50.0), u64::MAX);
+        // A mixed population keeps both ends visible.
+        h.record_ns(1);
+        assert_eq!(h.count_over_ns(1), 1);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn bucket_values_are_monotone_over_the_whole_table() {
+        // value() is total over all 1024 indices (sweeps visit every
+        // bucket) and non-decreasing, so percentile ordering can never
+        // invert across the reachable/unreachable boundary.
+        let mut prev = 0u64;
+        for idx in 0..64 * SUB {
+            let v = Histogram::value(idx);
+            assert!(v >= prev, "value({idx}) = {v} < value({}) = {prev}", idx - 1);
+            prev = v;
+        }
+        assert_eq!(Histogram::value(64 * SUB - 1), u64::MAX);
+    }
+
+    /// Seed convention shared with the stress suites: PROP_SEED
+    /// replays a failing CI shard locally.
+    fn prop_seed() -> u64 {
+        std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+    }
+
+    #[test]
+    fn prop_histogram_full_domain_invariants() {
+        use crate::util::prop::{forall, U64Range, VecGen};
+        // Deterministic core: every power of two 2^0..2^63 plus
+        // u64::MAX — the full-domain population ISSUE 8 prescribes.
+        // Seeded extension: random u64 samples mixed in on top
+        // (U64Range's upper bound is inclusive and adds 1 internally,
+        // so stop one short of MAX; the deterministic core already
+        // pins the exact top of the domain).
+        let gen = VecGen { elem: U64Range(0, u64::MAX - 1), max_len: 64 };
+        forall("histogram-full-domain", prop_seed(), 32, &gen, |extra| {
+            let h = Histogram::new();
+            let mut samples: Vec<u64> = (0..64).map(|k| 1u64 << k).collect();
+            samples.push(u64::MAX);
+            samples.extend_from_slice(extra);
+            for &s in &samples {
+                // index() must round-trip into an upper bound.
+                let idx = Histogram::index(s);
+                if Histogram::value(idx) < s {
+                    return false;
+                }
+                h.record_ns(s);
+            }
+            // Percentiles are monotone in p, capped by the top
+            // occupied bucket's representative value.
+            let p50 = h.percentile_ns(50.0);
+            let p99 = h.percentile_ns(99.0);
+            let p999 = h.p999_ns();
+            let top = h.percentile_ns(100.0);
+            if !(p50 <= p99 && p99 <= p999 && p999 <= top) {
+                return false;
+            }
+            // count_over_ns is monotone non-increasing in the
+            // threshold, pinned at both extremes.
+            let thresholds =
+                [0u64, 1, 100, 1 << 10, 1 << 30, 1 << 45, 1 << 62, u64::MAX - 1, u64::MAX];
+            let mut prev = u64::MAX;
+            for &t in &thresholds {
+                let c = h.count_over_ns(t);
+                if c > prev {
+                    return false;
+                }
+                prev = c;
+            }
+            h.count_over_ns(u64::MAX) == 0 && h.count_over_ns(0) == h.count() - zeros(&samples)
+        });
+
+        fn zeros(samples: &[u64]) -> u64 {
+            // value(0) = 0 is never strictly over a 0 threshold.
+            samples.iter().filter(|&&s| s == 0).count() as u64
+        }
+    }
+
+    #[test]
+    fn merge_folds_buckets_and_extremes() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_ns(10);
+        a.record_ns(1_000_000);
+        b.record_ns(3);
+        b.record_ns(u64::MAX);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.min_ns(), 3);
+        assert_eq!(a.max_ns(), u64::MAX);
+        assert_eq!(a.count_over_ns(0), 4);
+        assert_eq!(a.count_over_ns(2_000_000), 1);
+        // Merging an empty histogram is a no-op (min sentinel ignored).
+        let before = a.count();
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), before);
+        assert_eq!(a.min_ns(), 3);
     }
 
     #[test]
