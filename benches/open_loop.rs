@@ -26,6 +26,9 @@
 //! * `ol/{cfg}/burst/{closed,open}` — same configs under a bursty
 //!   plan (16-deep back-to-back groups at 70% capacity): the burst
 //!   drains fine closed-loop and queues visibly open-loop.
+//! * `ol/{cfg}/poisson/{closed,open}` — same configs under a seeded
+//!   Poisson plan at 70% capacity: memoryless interarrivals, the
+//!   queueing-theory reference workload.
 //! * `ol/mixed/{kv,scan,compose}/{closed,open}` — three tenants of
 //!   `apps::mixed::MixedTenants` (memcached YCSB-B stream, CoolDB
 //!   range scans, socialnet compose storms) loaded *concurrently*
@@ -185,6 +188,13 @@ fn main() {
         // for a moment, and only the open rows are allowed to see it.
         let sched = Schedule::bursty(sweep_n, cap * 0.7, 16);
         echo_pair(&mut rep, &mut t, &rack, &name, &format!("ol/{config}/burst"), &sched);
+        // Poisson plan at the same average rate: memoryless arrivals
+        // are the textbook open-loop workload — exponential gaps pile
+        // up in runs the fixed-rate plan never produces, so the
+        // open/closed divergence shows queueing under *natural*
+        // variance, not just engineered bursts.
+        let sched = Schedule::poisson(sweep_n, cap * 0.7, 42);
+        echo_pair(&mut rep, &mut t, &rack, &name, &format!("ol/{config}/poisson"), &sched);
         server.stop();
         for h in handles {
             h.join().unwrap();

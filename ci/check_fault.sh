@@ -1,0 +1,87 @@
+#!/usr/bin/env bash
+# CI gate over the crash_stress suite's FAULT_COUNTERS lines (run by
+# the stress job after `cargo test --test crash_stress -- --nocapture`
+# has been tee'd to a log file).
+#
+# Each kill-point test prints one machine-readable line:
+#
+#   FAULT_COUNTERS point=<name> kills=N slots_reaped=N seals_forced=N \
+#       scopes_freed=N mags_flushed=N retries=N reconnects=N recoveries=N
+#
+# The gate asserts the failure plane's books balance on every line:
+#
+#  1. Coverage: all six kill points must report (pre_flush, mid_batch,
+#     holding_seal, holding_scope, mid_serve, parked_worker) — a
+#     silently skipped scenario would read as "covered" otherwise.
+#
+#  2. Counter balance, per line: kills >= 1 (the injected fault
+#     actually fired at this seed) and kills == recoveries (every
+#     corpse was swept exactly once — a shortfall means the sweep
+#     missed a dead proc, an excess means it declared a survivor dead).
+#
+#  3. Point-specific reclamation: pre_flush must reap stranded ring
+#     slots (the victim dies with a full published-but-unflushed
+#     chunk); holding_seal must force-release seals AND sweep the
+#     leaked scope; holding_scope must sweep the leaked scope.
+#
+# Usage: check_fault.sh <crash-stress-log>
+set -euo pipefail
+
+log="${1:?usage: check_fault.sh <crash-stress-log>}"
+
+python3 - "$log" <<'EOF'
+import sys
+
+EXPECTED = {
+    "pre_flush", "mid_batch", "holding_seal",
+    "holding_scope", "mid_serve", "parked_worker",
+}
+
+lines = []
+for raw in open(sys.argv[1], errors="replace"):
+    raw = raw.strip()
+    if not raw.startswith("FAULT_COUNTERS "):
+        continue
+    row = {}
+    for tok in raw.split()[1:]:
+        k, _, v = tok.partition("=")
+        row[k] = v if k == "point" else int(v)
+    lines.append(row)
+
+ok = True
+seen = {r["point"] for r in lines}
+missing = EXPECTED - seen
+if missing:
+    print(f"::error::kill points never reported: {sorted(missing)} — "
+          f"the crash suite silently skipped scenarios")
+    ok = False
+
+for r in lines:
+    p = r["point"]
+    if r["kills"] < 1:
+        print(f"::error::{p}: no injected kill fired — the scenario ran "
+              f"without its fault and proves nothing")
+        ok = False
+    if r["kills"] != r["recoveries"]:
+        print(f"::error::{p}: counter balance broken: kills={r['kills']} but "
+              f"recoveries={r['recoveries']} — the sweep either missed a "
+              f"corpse or declared a survivor dead")
+        ok = False
+    if p == "pre_flush" and r["slots_reaped"] < 1:
+        print(f"::error::pre_flush: no ring slots reaped — the victim died "
+              f"with a published-but-unflushed chunk that must be tombstoned")
+        ok = False
+    if p == "holding_seal" and (r["seals_forced"] < 1 or r["scopes_freed"] < 1):
+        print(f"::error::holding_seal: seals_forced={r['seals_forced']} "
+              f"scopes_freed={r['scopes_freed']} — the corpse's installed "
+              f"seal and leaked scope must both be reclaimed")
+        ok = False
+    if p == "holding_scope" and r["scopes_freed"] < 1:
+        print(f"::error::holding_scope: leaked scope was not swept")
+        ok = False
+
+if ok:
+    print(f"fault counter balance ok over {len(lines)} kill-point scenarios: "
+          f"{sorted(seen)}")
+sys.exit(0 if ok else 1)
+EOF

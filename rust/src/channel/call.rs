@@ -63,6 +63,92 @@ impl<T: Pod> From<ShmPtr<T>> for CallArg {
     }
 }
 
+/// Client-side retry policy (failure plane): bounded attempts with
+/// seeded, jittered exponential backoff.
+///
+/// Which errors qualify is deliberately conservative:
+///
+/// * a **claim-phase timeout** ([`RpcError::Timeout`] carrying the
+///   slot-claim marker) always retries — the request was never
+///   published, so no handler can have observed it;
+/// * **transport-level failures** ([`RpcError::PeerFailed`],
+///   [`RpcError::ConnectionClosed`], response timeouts) retry only
+///   when the caller marked the call [`RetryPolicy::idempotent`]: the
+///   request may already have executed on the (now unreachable) peer;
+/// * application-level errors (handler status, seal/sandbox faults)
+///   never retry — resubmitting would just fail again.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (min 1).
+    pub attempts: u32,
+    /// First backoff; doubles per retry up to `max`.
+    pub base: Duration,
+    pub max: Duration,
+    /// Jitter seed — fixed seed, fixed backoff schedule (the crash
+    /// harness replays retries deterministically).
+    pub seed: u64,
+    /// Caller's declaration that re-executing the RPC is safe.
+    pub idempotent: bool,
+}
+
+impl RetryPolicy {
+    pub fn new(attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            attempts: attempts.max(1),
+            base: Duration::from_micros(200),
+            max: Duration::from_millis(20),
+            seed: 1,
+            idempotent: false,
+        }
+    }
+
+    /// Declare the call idempotent: transport-level failures
+    /// (peer death, closed connection, response timeout) become
+    /// retryable.
+    pub fn idempotent(mut self) -> RetryPolicy {
+        self.idempotent = true;
+        self
+    }
+
+    /// Override the first backoff (doubles per retry, capped at `max`).
+    pub fn backoff_base(mut self, base: Duration, max: Duration) -> RetryPolicy {
+        self.base = base;
+        self.max = max.max(base);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> RetryPolicy {
+        self.seed = seed;
+        self
+    }
+
+    /// Backoff before retry `attempt` (1-based): exponential, capped,
+    /// with deterministic xorshift jitter in the upper half of the
+    /// window so synchronized clients decorrelate.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16).saturating_sub(1));
+        let cap = exp.min(self.max).max(self.base);
+        let mut x = self.seed ^ ((attempt as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let ns = cap.as_nanos() as u64;
+        Duration::from_nanos(ns / 2 + x % (ns / 2 + 1))
+    }
+
+    /// May `e` be retried under this policy? (See the type docs for
+    /// the classification.)
+    pub fn should_retry(&self, e: &RpcError) -> bool {
+        match e {
+            RpcError::Timeout(what) if what == super::TIMEOUT_SLOT => true,
+            RpcError::PeerFailed(_) | RpcError::ConnectionClosed | RpcError::Timeout(_) => {
+                self.idempotent
+            }
+            _ => false,
+        }
+    }
+}
+
 /// Per-call options. All knobs are orthogonal; any combination is
 /// valid (the paper's "RPCool (Secure)" configuration is simply
 /// `sealed + sandboxed`).
@@ -79,6 +165,7 @@ pub struct CallOpts<'s> {
     pub(super) sandbox: bool,
     pub(super) timeout: Option<Duration>,
     pub(super) transport: TransportSel,
+    pub(super) retry: Option<RetryPolicy>,
 }
 
 impl<'s> CallOpts<'s> {
@@ -136,6 +223,18 @@ impl<'s> CallOpts<'s> {
     /// The scope this call seals, if any.
     pub fn seal_scope(&self) -> Option<&'s Scope> {
         self.seal
+    }
+
+    /// Retry the call under `policy` (failure plane): bounded
+    /// attempts, jittered exponential backoff, idempotent-only by
+    /// default — see [`RetryPolicy`] for which errors qualify.
+    pub fn retry(mut self, policy: RetryPolicy) -> CallOpts<'s> {
+        self.retry = Some(policy);
+        self
+    }
+
+    pub fn retry_policy(&self) -> Option<RetryPolicy> {
+        self.retry
     }
 }
 
@@ -342,9 +441,21 @@ impl<'c> CallHandle<'c> {
             self.abandon();
             return Err(RpcError::Timeout(format!("rpc response (func {})", self.func)));
         }
-        if conn.shared.closed() && !ring.response_ready(slot) {
-            self.abandon();
-            return Err(RpcError::ConnectionClosed);
+        if !ring.response_ready(slot) {
+            // Failure plane: distinguish a dead peer (orchestrator
+            // fan-out after lease expiry) from an orderly close, so
+            // retry/reconnect policies can act on it.
+            if conn.shared.peer_failed() {
+                self.abandon();
+                return Err(RpcError::PeerFailed(format!(
+                    "peer died with rpc in flight (func {})",
+                    self.func
+                )));
+            }
+            if conn.shared.closed() {
+                self.abandon();
+                return Err(RpcError::ConnectionClosed);
+            }
         }
         self.finish()
     }
@@ -466,5 +577,56 @@ impl<'c, R: Pod> TypedCallHandle<'c, R> {
 impl<R: Pod> std::fmt::Debug for TypedCallHandle<'_, R> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "Typed{:?}<{}>", self.inner, std::any::type_name::<R>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_policy_classifies_errors() {
+        let p = RetryPolicy::new(3);
+        // Claim-phase timeout: the request was never published —
+        // always retryable, idempotent or not.
+        assert!(p.should_retry(&RpcError::Timeout(super::super::TIMEOUT_SLOT.into())));
+        // Transport-level failures need the idempotent declaration.
+        assert!(!p.should_retry(&RpcError::PeerFailed("x".into())));
+        assert!(!p.should_retry(&RpcError::ConnectionClosed));
+        assert!(!p.should_retry(&RpcError::Timeout("rpc response (func 1)".into())));
+        let p = p.idempotent();
+        assert!(p.should_retry(&RpcError::PeerFailed("x".into())));
+        assert!(p.should_retry(&RpcError::ConnectionClosed));
+        assert!(p.should_retry(&RpcError::Timeout("rpc response (func 1)".into())));
+        // Application-level errors never retry.
+        assert!(!p.should_retry(&RpcError::NoSuchHandler(7)));
+        assert!(!p.should_retry(&RpcError::Remote("handler error".into())));
+    }
+
+    #[test]
+    fn retry_backoff_is_seeded_bounded_exponential() {
+        let p = RetryPolicy::new(8)
+            .backoff_base(Duration::from_micros(100), Duration::from_millis(2))
+            .seed(42);
+        let q = RetryPolicy::new(8)
+            .backoff_base(Duration::from_micros(100), Duration::from_millis(2))
+            .seed(42);
+        for a in 1..8 {
+            let d = p.backoff(a);
+            assert_eq!(d, q.backoff(a), "same seed, same schedule");
+            // Jitter lives in [cap/2, cap]; the cap never exceeds max.
+            assert!(d >= Duration::from_micros(50), "attempt {a}: {d:?} below floor");
+            assert!(d <= Duration::from_millis(2), "attempt {a}: {d:?} above cap");
+        }
+        // The window actually grows before the cap bites.
+        assert!(
+            p.backoff(5) > Duration::from_micros(200),
+            "exponential growth: attempt 5 sits in a wider window"
+        );
+        assert_ne!(
+            p.backoff(1),
+            p.seed(43).backoff(1),
+            "different seeds jitter differently"
+        );
     }
 }

@@ -101,7 +101,7 @@ pub mod pool;
 pub mod ring;
 pub mod waiter;
 
-pub use call::{CallArg, CallHandle, CallOpts, Reply, TypedCallHandle};
+pub use call::{CallArg, CallHandle, CallOpts, Reply, RetryPolicy, TypedCallHandle};
 
 use crate::cluster::{DsmState, MapKind, PodId, Topology};
 use crate::config::{AdmissionPolicy, SimConfig};
@@ -318,11 +318,14 @@ impl ChannelOpts {
 #[derive(Clone)]
 pub struct ChannelBuilder {
     opts: ChannelOpts,
+    /// Crash-fault plan armed when the channel opens (failure-plane
+    /// tests; see [`crate::fault`]).
+    fault: Option<crate::fault::FaultPlan>,
 }
 
 impl ChannelBuilder {
     pub fn from_config(cfg: &SimConfig) -> ChannelBuilder {
-        ChannelBuilder { opts: ChannelOpts::from_config(cfg) }
+        ChannelBuilder { opts: ChannelOpts::from_config(cfg), fault: None }
     }
 
     /// Defaults derived from the environment's rack configuration.
@@ -435,12 +438,25 @@ impl ChannelBuilder {
         self
     }
 
+    /// Arm the deterministic crash-fault injector when this channel
+    /// opens: the plan's kill point fires on its nth crossing and the
+    /// crossing proc dies *without cleanup* — the recovery sweep has
+    /// to pick up the pieces. Kills count on the rack's fault
+    /// counters. One global injector: the last armed plan wins.
+    pub fn fault_plan(mut self, plan: crate::fault::FaultPlan) -> ChannelBuilder {
+        self.fault = Some(plan);
+        self
+    }
+
     pub fn opts(&self) -> &ChannelOpts {
         &self.opts
     }
 
     /// Open the channel with these options.
     pub fn open(self, env: &ProcEnv, name: &str) -> Result<RpcServer> {
+        if let Some(plan) = self.fault {
+            crate::fault::arm_with_sink(plan, Arc::downgrade(&env.rack.orch.fault_counters()));
+        }
         RpcServer::open(env, name, self.opts)
     }
 }
@@ -688,6 +704,12 @@ pub struct ConnShared {
     /// measures against.
     born: Instant,
     closed: AtomicBool,
+    /// Failure plane: set (together with `closed`) when the
+    /// orchestrator's recovery sweep declares the *other* endpoint
+    /// dead. Waiters consult it to surface [`RpcError::PeerFailed`]
+    /// instead of a bare `ConnectionClosed`, so retry/reconnect
+    /// policies can tell a crash from a clean teardown.
+    peer_failed: AtomicBool,
     accepted: AtomicBool,
     /// Elastic shard routing on: callers stripe over the *active*
     /// window (`active_shards`), which grows/shrinks in power-of-two
@@ -712,6 +734,37 @@ pub struct ConnShared {
 impl ConnShared {
     pub fn closed(&self) -> bool {
         self.closed.load(Ordering::Acquire)
+    }
+
+    /// Did the other endpoint die (lease expiry → recovery sweep)?
+    pub fn peer_failed(&self) -> bool {
+        self.peer_failed.load(Ordering::Acquire)
+    }
+
+    /// Recovery sweep: mark the peer dead and wake every waiter. The
+    /// peer flag lands before `closed` so a waiter woken by the close
+    /// can never observe `closed && !peer_failed` and misreport a
+    /// crash as a clean teardown. Every shard's response doorbell
+    /// rings so parked callers re-check promptly instead of riding
+    /// out their full timeout.
+    pub fn fail_peer(&self) {
+        self.peer_failed.store(true, Ordering::Release);
+        self.closed.store(true, Ordering::Release);
+        for sh in &self.shards {
+            sh.ring.resp_bell().ring();
+            sh.ring.req_bell().ring();
+        }
+    }
+
+    /// The error a call on a dead connection surfaces: `PeerFailed`
+    /// when the recovery sweep declared the other endpoint dead,
+    /// plain `ConnectionClosed` for a clean teardown.
+    pub(crate) fn dead_err(&self, what: &str) -> RpcError {
+        if self.peer_failed() {
+            RpcError::PeerFailed(format!("peer process died ({what})"))
+        } else {
+            RpcError::ConnectionClosed
+        }
     }
 
     /// Nanoseconds since the connection was created (shard decay clock).
@@ -966,6 +1019,33 @@ impl RpcServer {
             heap_id: 0,
         })?;
         directory_insert(rack.id, name, &core);
+
+        // Failure plane: when the lease sweep declares a proc dead,
+        // this channel reaps whatever that proc stranded. Weak so a
+        // closed channel prunes itself from the hook list.
+        let weak = Arc::downgrade(&core);
+        let fault = rack.orch.fault_counters();
+        rack.orch.on_proc_death(Box::new(move |dead| {
+            let Some(core) = weak.upgrade() else { return false };
+            if dead == core.env.proc {
+                // The channel owner itself died: stop the core,
+                // withdraw its worker-pool slots, and fail every
+                // surviving client promptly (their in-flight waits
+                // resolve with PeerFailed, not a full timeout).
+                core.stop.store(true, Ordering::Release);
+                core.accept_cv.notify_all();
+                if let Some(p) = &core.pool {
+                    p.forget_core(&core);
+                }
+                for c in core.conns.lock().unwrap().iter() {
+                    c.fail_peer();
+                }
+                core.bell.ring();
+            } else {
+                core.reap_dead_client(dead, &fault);
+            }
+            true
+        }));
         Ok(RpcServer { core })
     }
 
@@ -1307,11 +1387,67 @@ impl ServerCore {
         out
     }
 
-    /// Live connections from this channel's point of view: accepted
-    /// and not yet closed, plus anything still queued for accept.
+    /// The per-host daemon mediating this channel's heap mappings
+    /// (lease renewal rides through it — crash tests drive survivor
+    /// renewals here).
+    pub fn daemon(&self) -> &Arc<Daemon> {
+        &self.daemon
+    }
+
+    /// Live connections from this channel's point of view: accepted,
+    /// not yet closed, **and lease-backed** — a connection whose
+    /// client proc no longer holds a live lease is a crash in
+    /// progress and stops counting against the admission ceiling the
+    /// instant its lease lapses, before the recovery sweep even runs.
+    /// Anything still queued for accept counts too.
     fn live_conns(&self) -> usize {
-        self.conns.lock().unwrap().iter().filter(|c| !c.closed()).count()
+        let orch = &self.env.rack.orch;
+        self.conns
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|c| !c.closed() && orch.proc_holds_lease(c.client_proc))
+            .count()
             + self.accepting.lock().unwrap().queue.len()
+    }
+
+    /// Failure plane: one dead *client* proc's stranded state, reaped
+    /// from every connection it held on this channel. Ring slots it
+    /// left CLAIMED / published / mid-serve are tombstoned
+    /// ([`RpcRing::reap_dead`]), its installed seals are revoked
+    /// through the descriptor ring, the server's own mapping of a
+    /// per-connection heap is released so the orphaned heap can be
+    /// reclaimed, and the dead connections leave the serving list.
+    fn reap_dead_client(&self, dead: u32, fault: &crate::metrics::CounterSet) {
+        use crate::orchestrator::{FLT_SEALS_FORCED, FLT_SLOTS_REAPED};
+        let victims: Vec<Arc<ConnShared>> = {
+            let mut conns = self.conns.lock().unwrap();
+            let v = conns.iter().filter(|c| c.client_proc == dead).cloned().collect();
+            conns.retain(|c| c.client_proc != dead);
+            v
+        };
+        for c in victims {
+            // Peer flag first: a waiter woken by the reap's doorbell
+            // rings must classify the death correctly.
+            c.fail_peer();
+            let mut reaped = 0u64;
+            for sh in &c.shards {
+                reaped += sh.ring.reap_dead();
+            }
+            if reaped > 0 {
+                fault.add(FLT_SLOTS_REAPED, reaped);
+            }
+            let seals = c.sealer.revoke_proc(dead);
+            if seals > 0 {
+                fault.add(FLT_SEALS_FORCED, seals);
+            }
+            // Mirror Connection::drop's server-side unmap: with the
+            // client gone for good, holding our lease would pin the
+            // orphaned per-connection heap forever.
+            if !self.opts.shared_heap {
+                self.daemon.unmap_heap(c.heap.id, self.env.proc);
+            }
+        }
     }
 
     /// Admission decision for one incoming connect: what happens once
@@ -1366,6 +1502,17 @@ impl ServerCore {
     }
 
     fn handle_slot_opts(&self, conn: &Arc<ConnShared>, shard: usize, slot: usize, quiet: bool) {
+        // Kill point: the serving proc dies *after* `take_request`
+        // moved the slot to PROCESSING, before any reply. The slot
+        // stays stranded (no respond, no tombstone) until recovery
+        // tombstones it; the core stops as the dead server's threads
+        // unwind, and the thread's heap magazines strand like a real
+        // crash would leave them.
+        if crate::fault::should_die(crate::fault::KillPoint::MidServe) {
+            self.stop.store(true, Ordering::Release);
+            crate::memory::heap::park_thread_magazines(self.env.proc);
+            return;
+        }
         let sh = &conn.shards[shard];
         let s = sh.ring.slot(slot);
         let func = s.func.load(Ordering::Relaxed);
@@ -1499,6 +1646,11 @@ fn arg_outstanding<T>(r: &Result<T>) -> bool {
     match r {
         Err(RpcError::Timeout(what)) => what != TIMEOUT_SLOT,
         Err(RpcError::ConnectionClosed) => true,
+        // A peer-failure teardown raced the call mid-flight, and an
+        // injected kill abandons whatever it already published — both
+        // leave the address possibly server-readable.
+        Err(RpcError::PeerFailed(_)) => true,
+        Err(RpcError::Killed(_)) => true,
         _ => false,
     }
 }
@@ -1534,6 +1686,38 @@ impl Connection {
     /// pod, RDMA/DSM across pods or beyond the rack.
     pub fn connect(env: &ProcEnv, name: &str) -> Result<Connection> {
         Self::connect_with(env, name, TransportSel::Auto)
+    }
+
+    /// Connect with reconnect semantics (failure plane): a client that
+    /// lost its server to a crash spins here while the replacement
+    /// re-opens the channel. Transient failures — channel not (yet)
+    /// in the directory, admission rejection, a torn-down or
+    /// peer-failed endpoint, timeouts — back off (jittered, seeded)
+    /// and try again, up to the policy's attempt budget; anything
+    /// else (ACL denial, config errors) fails immediately. Each
+    /// re-attempt counts as a reconnect on the rack's fault counters.
+    pub fn connect_retry(env: &ProcEnv, name: &str, policy: RetryPolicy) -> Result<Connection> {
+        let mut attempt = 0u32;
+        loop {
+            let e = match Self::connect(env, name) {
+                Ok(c) => return Ok(c),
+                Err(e) => e,
+            };
+            attempt += 1;
+            let transient = matches!(
+                e,
+                RpcError::ChannelNotFound(_)
+                    | RpcError::ConnectionRefused(_, _)
+                    | RpcError::ConnectionClosed
+                    | RpcError::PeerFailed(_)
+                    | RpcError::Timeout(_)
+            );
+            if attempt >= policy.attempts || !transient {
+                return Err(e);
+            }
+            env.rack.orch.fault().add(crate::orchestrator::FLT_RECONNECTS, 1);
+            std::thread::sleep(policy.backoff(attempt));
+        }
     }
 
     pub fn connect_with(env: &ProcEnv, name: &str, sel: TransportSel) -> Result<Connection> {
@@ -1660,6 +1844,7 @@ impl Connection {
             server_node,
             born: Instant::now(),
             closed: AtomicBool::new(false),
+            peer_failed: AtomicBool::new(false),
             accepted: AtomicBool::new(false),
             elastic: opts.elastic_shards,
             // Elastic connections start narrow (one shard) and earn
@@ -1881,10 +2066,39 @@ impl Connection {
     /// layers ([`Connection::call_typed`], [`Connection::call_scalar`])
     /// build on this.
     pub fn invoke(&self, func: u32, arg: impl Into<CallArg>, opts: CallOpts) -> Result<u64> {
-        let route = self.route(1);
-        let r = self.invoke_routed(&route, func, arg.into(), opts);
-        self.unroute(&route);
-        r
+        let arg = arg.into();
+        self.with_retry(&opts, || {
+            let route = self.route(1);
+            let r = self.invoke_routed(&route, func, arg, opts);
+            self.unroute(&route);
+            r
+        })
+    }
+
+    /// Run one call attempt under `opts`' [`RetryPolicy`] (failure
+    /// plane): without one, exactly one attempt. Each retry counts on
+    /// the rack's fault counters and sleeps the policy's jittered
+    /// backoff first; which errors qualify is the policy's call
+    /// ([`RetryPolicy::should_retry`] — claim-phase timeouts always,
+    /// transport failures only if declared idempotent, app errors
+    /// never).
+    fn with_retry<T>(&self, opts: &CallOpts, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let Some(policy) = opts.retry_policy() else {
+            return f();
+        };
+        let mut attempt = 0u32;
+        loop {
+            let e = match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            attempt += 1;
+            if attempt >= policy.attempts || !policy.should_retry(&e) {
+                return Err(e);
+            }
+            self.env.rack.orch.fault().add(crate::orchestrator::FLT_RETRIES, 1);
+            std::thread::sleep(policy.backoff(attempt));
+        }
     }
 
     /// [`Connection::invoke`] against a pre-picked shard (the typed
@@ -1901,6 +2115,13 @@ impl Connection {
                 self.call_inner_on(route, func, flags, NO_SEAL, arg.addr, arg.len, opts.timeout)
             }
             Some(scope) => {
+                // Kill point: die holding a live scope — its pages
+                // leak until the recovery sweep frees them through
+                // the scope registry.
+                if crate::fault::should_die(crate::fault::KillPoint::HoldingScope) {
+                    crate::memory::heap::park_thread_magazines(self.env.proc);
+                    return Err(crate::fault::killed_err(crate::fault::KillPoint::HoldingScope));
+                }
                 let h = self.seal_scope(scope)?;
                 let r = self.call_inner_on(
                     route,
@@ -1911,6 +2132,13 @@ impl Connection {
                     arg.len,
                     opts.timeout,
                 );
+                // Kill point: die still holding the installed seal —
+                // it is never released, so its page-protection words
+                // stay set until the sweep revokes the descriptor.
+                if crate::fault::should_die(crate::fault::KillPoint::HoldingSeal) {
+                    crate::memory::heap::park_thread_magazines(self.env.proc);
+                    return Err(crate::fault::killed_err(crate::fault::KillPoint::HoldingSeal));
+                }
                 self.release_seal_forced(h);
                 r
             }
@@ -1980,11 +2208,15 @@ impl Connection {
     /// as soon as the call returns; arena space recycles when the
     /// last outstanding argument/reply is dropped.
     pub fn call_scalar<A: Pod>(&self, func: u32, arg: &A, opts: CallOpts) -> Result<u64> {
+        self.with_retry(&opts, || self.call_scalar_once(func, arg, opts))
+    }
+
+    fn call_scalar_once<A: Pod>(&self, func: u32, arg: &A, opts: CallOpts) -> Result<u64> {
         // A dead connection fails fast *before* allocating, so retry
         // loops against it can't grow the quarantine (post-publish
         // teardown still quarantines, bounded by in-flight calls).
         if self.shared.closed() {
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("call"));
         }
         self.sweep_quarantine();
         // Route before allocating: the argument must come from the
@@ -2137,7 +2369,7 @@ impl Connection {
         }
         self.check_transport(opts.transport)?;
         if self.shared.closed() {
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("call"));
         }
         if args.is_empty() {
             return Ok(Vec::new());
@@ -2183,6 +2415,14 @@ impl Connection {
         let mut first_err: Option<RpcError> = None;
         let mut idx = 0;
         while idx < args.len() && first_err.is_none() {
+            // Kill point: die between chunks — earlier chunks are
+            // fully in flight (the server may serve them into
+            // abandoned-nothing), later ones never happen, and no
+            // cleanup of either runs.
+            if idx > 0 && crate::fault::should_die(crate::fault::KillPoint::MidBatch) {
+                crate::memory::heap::park_thread_magazines(self.env.proc);
+                return Err(crate::fault::killed_err(crate::fault::KillPoint::MidBatch));
+            }
             // Claim a chunk: at least one slot (waiting on the
             // response doorbell if the ring is full), then as many
             // more as are free right now.
@@ -2209,6 +2449,13 @@ impl Connection {
             for (k, &slot) in slots.iter().enumerate() {
                 let a = args[idx + k];
                 ring.publish_quiet(slot, func, flags, NO_SEAL, a.addr, a.len);
+            }
+            // Kill point: requests sit fully written in their slots
+            // but the coalesced doorbell never rings — the server
+            // sleeps through them until recovery reaps the ring.
+            if crate::fault::should_die(crate::fault::KillPoint::PreFlush) {
+                crate::memory::heap::park_thread_magazines(self.env.proc);
+                return Err(crate::fault::killed_err(crate::fault::KillPoint::PreFlush));
             }
             ring.flush_publish();
             // Collect the chunk in claim order.
@@ -2243,7 +2490,7 @@ impl Connection {
                     return Err(if w == WaitOutcome::TimedOut {
                         RpcError::Timeout(format!("rpc batch response (func {func})"))
                     } else {
-                        RpcError::ConnectionClosed
+                        self.shared.dead_err("rpc batch response")
                     });
                 }
                 let (st, ret, lo, hi) = ring.consume_detail(slot);
@@ -2295,6 +2542,15 @@ impl Connection {
         args: &[A],
         opts: CallOpts,
     ) -> Result<Vec<u64>> {
+        self.with_retry(&opts, || self.call_scalar_batch_once(func, args, opts))
+    }
+
+    fn call_scalar_batch_once<A: Pod>(
+        &self,
+        func: u32,
+        args: &[A],
+        opts: CallOpts,
+    ) -> Result<Vec<u64>> {
         if opts.seal.is_some() {
             return Err(RpcError::Config(
                 "call_scalar_batch cannot seal; use call_scalar for per-call seals".into(),
@@ -2302,7 +2558,7 @@ impl Connection {
         }
         self.check_transport(opts.transport)?;
         if self.shared.closed() {
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("call"));
         }
         if args.is_empty() {
             return Ok(Vec::new());
@@ -2378,7 +2634,7 @@ impl Connection {
         // a dead connection still fails fast before allocating, like
         // call_scalar.
         if self.shared.closed() {
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("call"));
         }
         self.sweep_quarantine();
         let route = self.route(1);
@@ -2453,7 +2709,7 @@ impl Connection {
         }
         self.check_transport(opts.transport)?;
         if self.shared.closed() {
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("call"));
         }
         self.calls.fetch_add(1, Ordering::Relaxed);
         let timeout = opts.timeout.unwrap_or(self.opts.call_timeout);
@@ -2554,7 +2810,7 @@ impl Connection {
     ) -> Result<u64> {
         let timeout = timeout.unwrap_or(self.opts.call_timeout);
         if self.shared.closed() {
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("call"));
         }
         self.calls.fetch_add(1, Ordering::Relaxed);
         // RDMA fallback: the client must own the argument pages before
@@ -2609,7 +2865,7 @@ impl Connection {
         }
         if self.shared.closed() && !ring.response_ready(slot) {
             self.abandon_and_reclaim(shard_idx, slot, arg, arg_len);
-            return Err(RpcError::ConnectionClosed);
+            return Err(self.shared.dead_err("rpc response"));
         }
         let (status, ret, aux_lo, aux_hi) = ring.consume_detail(slot);
         match status {
@@ -2668,12 +2924,15 @@ impl Connection {
                 self.drain_inline(core, None);
             }
             got = ring.claim();
-            got.is_some()
+            // A connection torn down by the recovery sweep never
+            // frees a slot again — wake and fail instead of parking
+            // until the claim timeout.
+            got.is_some() || self.shared.closed()
         });
         if out == WaitOutcome::TimedOut {
             return Err(RpcError::Timeout(TIMEOUT_SLOT.into()));
         }
-        Ok(got.unwrap())
+        got.ok_or_else(|| self.shared.dead_err(TIMEOUT_SLOT))
     }
 
     /// Inline serving: drain pending requests across ALL shards
@@ -4313,6 +4572,58 @@ mod tests {
         assert_eq!(rack.orch.admission().get(ADM_ADMITTED) - before_adm, 2);
         assert_eq!(rack.orch.admission().get(ADM_REJECTED) - before_rej, 3);
         drop(held);
+        server.stop();
+        t.join().unwrap();
+    }
+
+    /// Failure plane (satellite): a crashed client's connection stops
+    /// counting against `conn_limit` the instant its lease lapses —
+    /// the admission slot frees on expiry alone, with no recovery
+    /// sweep involved.
+    #[test]
+    fn expired_client_lease_frees_admission_slot() {
+        let rack = Rack::for_tests();
+        let env = rack.proc_env(0);
+        let server = ChannelBuilder::from_config(&rack.cfg)
+            .admission(AdmissionPolicy::Reject)
+            .conn_limit(1)
+            .open(&env, "adm-lease")
+            .unwrap();
+        server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+        let c1 = Rpc::connect(&rack.proc_env(1), "adm-lease").unwrap();
+        server.accept_pending();
+        // Slot held and lease live: the next connect bounces.
+        assert!(matches!(
+            Rpc::connect(&rack.proc_env(1), "adm-lease"),
+            Err(RpcError::ConnectionRefused(_, _))
+        ));
+        // The client dies without cleanup; nothing renews its lease.
+        c1.crash();
+        std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 25));
+        let c3 = Rpc::connect(&rack.proc_env(1), "adm-lease").unwrap();
+        drop(c3);
+        server.stop();
+    }
+
+    /// Failure plane: once the sweep declares a proc dead, its
+    /// connections fail as *peer failures* — survivors (and late
+    /// callers) observe `PeerFailed`, not a bland `ConnectionClosed`.
+    #[test]
+    fn sweep_turns_expired_leases_into_peer_failures() {
+        let rack = Rack::for_tests();
+        let (server, t) = serve_echo(&rack, "sweep-pf");
+        let cenv = rack.proc_env(1);
+        let conn = Rpc::connect(&cenv, "sweep-pf").unwrap();
+        server.accept_pending();
+        // Nobody renews: both endpoints' leases lapse and the sweep
+        // declares both procs dead, tearing the connection down with
+        // the peer-failed classification.
+        std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 25));
+        rack.orch.tick();
+        assert!(conn.shared.peer_failed());
+        let e = cenv.run(|| conn.call_scalar::<u64>(101, &1, CallOpts::new()));
+        assert!(matches!(e, Err(RpcError::PeerFailed(_))), "{e:?}");
+        drop(conn);
         server.stop();
         t.join().unwrap();
     }

@@ -80,6 +80,12 @@ struct PoolInner {
     entries: RwLock<HashMap<usize, Entry>>,
     stop: AtomicBool,
     nworkers: AtomicUsize,
+    /// High-water mark of worker counts ever asked for — what `heal`
+    /// restores the pool to after a crash thinned it.
+    want: AtomicUsize,
+    /// Workers lost to injected crashes ([`KillPoint::ParkedWorker`])
+    /// since the last heal.
+    dead: AtomicUsize,
 }
 
 /// A daemon-wide serving pool (see module docs). Obtained through
@@ -88,6 +94,8 @@ struct PoolInner {
 pub struct WorkerPool {
     inner: Arc<PoolInner>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// One heal hook per pool, no matter how many channels open on it.
+    heal_registered: AtomicBool,
 }
 
 /// Process-wide pool registry: `(orchestrator ptr, host)` → pool. A
@@ -115,8 +123,11 @@ impl WorkerPool {
                 entries: RwLock::new(HashMap::new()),
                 stop: AtomicBool::new(false),
                 nworkers: AtomicUsize::new(0),
+                want: AtomicUsize::new(0),
+                dead: AtomicUsize::new(0),
             }),
             workers: Mutex::new(Vec::new()),
+            heal_registered: AtomicBool::new(false),
         });
         reg.push((key, Arc::downgrade(&pool)));
         pool.ensure_workers(workers);
@@ -128,6 +139,7 @@ impl WorkerPool {
     /// sizes share the high-water mark.
     pub fn ensure_workers(&self, k: usize) {
         let want = k.clamp(1, MAX_POOL_WORKERS);
+        self.inner.want.fetch_max(want, Ordering::AcqRel);
         loop {
             let cur = self.inner.nworkers.load(Ordering::Acquire);
             if cur >= want {
@@ -193,6 +205,30 @@ impl WorkerPool {
         self.inner.tree.kick(&slot, mask);
     }
 
+    /// Respawn workers lost to injected crashes, back up to the
+    /// high-water mark. Returns how many were missing (the healed
+    /// count the orchestrator books as recoveries); 0 when the pool
+    /// is whole.
+    pub fn heal(&self) -> u64 {
+        let dead = self.inner.dead.swap(0, Ordering::AcqRel);
+        if dead == 0 {
+            return 0;
+        }
+        self.ensure_workers(self.inner.want.load(Ordering::Acquire));
+        dead as u64
+    }
+
+    /// Hook `heal` into the orchestrator's recovery sweep (phase 4 of
+    /// `Orchestrator::tick`). Idempotent per pool; the hook holds a
+    /// `Weak` so a dropped pool prunes itself from the sweep.
+    pub fn register_heal(self: &Arc<Self>, orch: &crate::orchestrator::Orchestrator) {
+        if self.heal_registered.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let w = Arc::downgrade(self);
+        orch.on_tick(Box::new(move || w.upgrade().map(|p| p.heal())));
+    }
+
     /// Drop every slot belonging to `core` (channel teardown).
     /// Idempotent; also called when a sweep finds the core gone.
     pub fn forget_core(&self, core: &Arc<ServerCore>) {
@@ -249,6 +285,18 @@ fn worker_loop(inner: Arc<PoolInner>) {
             }
         }
         if !progress && !inner.stop.load(Ordering::Acquire) {
+            // Kill point: a pool worker dies at its park decision.
+            // The thread just vanishes (the OS reclaims its stack;
+            // LOAD/arm bookkeeping is the simulated equivalent) and
+            // the pool serves thin until the recovery sweep's heal
+            // hook respawns to the high-water mark.
+            if crate::fault::should_die(crate::fault::KillPoint::ParkedWorker) {
+                LOAD.exit();
+                root.disarm();
+                inner.nworkers.fetch_sub(1, Ordering::AcqRel);
+                inner.dead.fetch_add(1, Ordering::AcqRel);
+                return;
+            }
             LOAD.exit();
             root.wait_past(seen, Duration::from_micros(PARK_SLICE_US));
             LOAD.enter();
@@ -282,7 +330,12 @@ fn serve_slot(inner: &Arc<PoolInner>, sid: usize, mask: u64) -> bool {
             let any = !adopted.is_empty();
             let pool = match core.pool.as_ref() {
                 Some(p) => Arc::clone(p),
-                None => return false,
+                None => {
+                    // A core that lost its pool can never serve this
+                    // slot — leaving the entry would re-ring forever.
+                    drop_slot(inner, sid, &slot);
+                    return false;
+                }
             };
             for conn in adopted {
                 pool.adopt(&core, conn);
@@ -333,4 +386,39 @@ fn serve_slot(inner: &Arc<PoolInner>, sid: usize, mask: u64) -> bool {
 fn drop_slot(inner: &Arc<PoolInner>, sid: usize, slot: &Arc<TreeSlot>) {
     inner.tree.deregister(slot);
     inner.entries.write().unwrap().remove(&sid);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A slot whose core can no longer be upgraded must be *dropped*
+    /// by the sweep, not skipped: a skipped entry stays registered and
+    /// every later kick re-queues it, so the stale slot would spin the
+    /// pool forever.
+    #[test]
+    fn serve_slot_drops_entry_when_core_gone() {
+        let inner = Arc::new(PoolInner {
+            tree: WaiterTree::new_arc(),
+            entries: RwLock::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+            nworkers: AtomicUsize::new(0),
+            want: AtomicUsize::new(0),
+            dead: AtomicUsize::new(0),
+        });
+        let slot = inner.tree.register();
+        inner.entries.write().unwrap().insert(
+            slot.id(),
+            Entry::Accept { core: Weak::new(), slot: Arc::clone(&slot) },
+        );
+        inner.tree.kick(&slot, 1);
+        let mut served = 0;
+        while let Some((sid, mask)) = inner.tree.pop_ready() {
+            assert!(!serve_slot(&inner, sid, mask));
+            served += 1;
+        }
+        assert!(served >= 1, "kicked slot must have popped ready");
+        assert_eq!(inner.tree.slot_count(), 0, "stale slot deregistered");
+        assert!(inner.entries.read().unwrap().is_empty(), "entry dropped");
+    }
 }

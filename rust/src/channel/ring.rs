@@ -554,6 +554,69 @@ impl RpcRing {
     pub fn quiescent(&self) -> bool {
         (0..self.n).all(|i| self.slot(i).state.load(Ordering::Acquire) == SLOT_EMPTY)
     }
+
+    /// Failure plane: reap every slot a dead *client* proc stranded,
+    /// so the sequence-gated ring can never wedge on tickets nobody
+    /// will consume. Called by the surviving server (under the
+    /// orchestrator's death notification) once the peer's lease has
+    /// expired — the dead proc's threads are gone, so the only
+    /// concurrent actors are this server's own workers, and every arm
+    /// below arbitrates against them through the existing
+    /// abandon-tombstone protocol:
+    ///
+    /// * `CLAIMED` — only a crash can strand a claimed-but-never-
+    ///   published ticket; nobody else will ever touch it, retire the
+    ///   lap directly.
+    /// * `REQUEST` — race our own serving loop for it (CAS to
+    ///   PROCESSING, same as `take_request`). Winning, tombstone +
+    ///   self-respond `ST_CLOSED` retires the lap without running the
+    ///   handler; losing, the worker that beat us holds it — leave a
+    ///   tombstone so its `respond()` retires the lap.
+    /// * `PROCESSING` — a worker is mid-serve; tombstone it
+    ///   (`abandon`), its response retires the lap.
+    /// * `RESPONSE` — already answered, never to be consumed;
+    ///   `abandon` retires it immediately.
+    ///
+    /// Returns the number of stranded slots acted on. The service
+    /// cursor is deliberately left behind: this connection's client is
+    /// dead, no new request will ever arrive, and `take_request` at a
+    /// reaped (now EMPTY) slot simply reports "nothing pending".
+    pub fn reap_dead(&self) -> u64 {
+        let mut reaped = 0u64;
+        for i in 0..self.n {
+            let s = self.slot(i);
+            match s.state.load(Ordering::Acquire) {
+                SLOT_CLAIMED => {
+                    self.retire_lap(s);
+                    self.resp_bell.ring();
+                    reaped += 1;
+                }
+                SLOT_REQUEST => {
+                    if s.state
+                        .compare_exchange(
+                            SLOT_REQUEST,
+                            SLOT_PROCESSING,
+                            Ordering::AcqRel,
+                            Ordering::Relaxed,
+                        )
+                        .is_ok()
+                    {
+                        s.abandoned.store(1, Ordering::SeqCst);
+                        self.respond(i, ST_CLOSED, 0);
+                    } else {
+                        self.abandon(i);
+                    }
+                    reaped += 1;
+                }
+                SLOT_PROCESSING | SLOT_RESPONSE => {
+                    self.abandon(i);
+                    reaped += 1;
+                }
+                _ => {}
+            }
+        }
+        reaped
+    }
 }
 
 #[cfg(test)]
@@ -900,6 +963,41 @@ mod tests {
         assert_eq!(out, WaitOutcome::Ready, "flush_respond must wake the parked waiter");
         assert_eq!(r.consume(i), (ST_OK, 9));
         t.join().unwrap();
+    }
+
+    /// Failure plane: a crashed client strands slots in every live
+    /// state; `reap_dead` must retire each one and leave the ring
+    /// quiescent so the surviving server never wedges on them.
+    #[test]
+    fn reap_dead_retires_every_stranded_state() {
+        let (_p, _h, r) = ring();
+        // PROCESSING: taken by a (surviving) worker, not yet answered.
+        let req = r.claim().unwrap();
+        r.publish(req, 1, 0, NO_SEAL, 0, 0);
+        let proc_slot = r.take_request().unwrap();
+        assert_eq!(proc_slot, req, "FIFO serves the published slot");
+        // RESPONSE: answered, never consumed.
+        let req2 = r.claim().unwrap();
+        r.publish(req2, 2, 0, NO_SEAL, 0, 0);
+        let resp = r.take_request().unwrap();
+        assert_eq!(resp, req2);
+        r.respond(resp, ST_OK, 9);
+        // REQUEST: published, never taken.
+        let req3 = r.claim().unwrap();
+        r.publish(req3, 3, 0, NO_SEAL, 0, 0);
+        // CLAIMED: crashed after claim, before publish.
+        let _claimed = r.claim().unwrap();
+
+        assert_eq!(r.reap_dead(), 4, "claimed+request+processing+response slots reaped");
+        // The PROCESSING slot retires when the worker's late response
+        // hits the tombstone reap_dead left behind.
+        assert!(r.respond(proc_slot, ST_OK, 0), "tombstone retires the mid-serve lap");
+        assert!(r.quiescent(), "no stranded lap survives the reap");
+        // The ring still cycles: reaped laps handed their slots to the
+        // next lap's tickets.
+        assert!(r.claim().is_some());
+        assert_eq!(r.reap_dead(), 1, "the fresh claim is itself reapable");
+        assert!(r.quiescent());
     }
 
     #[test]

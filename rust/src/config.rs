@@ -269,6 +269,15 @@ pub struct SimConfig {
     /// Default live-connection ceiling arming the admission policy
     /// (0 = unlimited; per-channel override: `ChannelBuilder::conn_limit`).
     pub conn_limit: usize,
+    /// Crash-fault injection: kill-point name (`fault::KillPoint`
+    /// names, e.g. `pre_flush`), or `"none"` (default) for no
+    /// injection. Armed by `Rack::new` / `ChannelBuilder::open`.
+    pub fault_point: String,
+    /// Fire the injected kill on this (1-based) crossing of the kill
+    /// point; `0` = derive the crossing from `fault_seed`.
+    pub fault_nth: u64,
+    /// Seed for the seed-derived crossing (`fault_nth = 0`).
+    pub fault_seed: u64,
 }
 
 impl Default for SimConfig {
@@ -301,6 +310,9 @@ impl Default for SimConfig {
             elastic_shards: false,
             admission: AdmissionPolicy::Open,
             conn_limit: 0,
+            fault_point: "none".into(),
+            fault_nth: 1,
+            fault_seed: 0,
         }
     }
 }
@@ -427,6 +439,17 @@ impl SimConfig {
             "elastic_shards" => self.elastic_shards = value == "true" || value == "1",
             "admission_policy" => self.admission = AdmissionPolicy::parse(value)?,
             "conn_limit" => self.conn_limit = pusize(value)?,
+            "fault_point" => {
+                if value != "none" && crate::fault::KillPoint::parse(value).is_none() {
+                    return Err(RpcError::Config(format!(
+                        "bad fault_point '{value}' (none|pre_flush|mid_serve|holding_seal|\
+                         holding_scope|mid_batch|parked_worker)"
+                    )));
+                }
+                self.fault_point = value.to_string();
+            }
+            "fault_nth" => self.fault_nth = pu64(value)?,
+            "fault_seed" => self.fault_seed = pu64(value)?,
             other => return Err(RpcError::Config(format!("unknown key '{other}'"))),
         }
         Ok(())
@@ -456,6 +479,9 @@ impl SimConfig {
         m.insert("elastic_shards", (self.elastic_shards as u8).to_string());
         m.insert("admission_policy", self.admission.name().to_string());
         m.insert("conn_limit", self.conn_limit.to_string());
+        m.insert("fault_point", self.fault_point.clone());
+        m.insert("fault_nth", self.fault_nth.to_string());
+        m.insert("fault_seed", self.fault_seed.to_string());
         m.insert(
             "charge",
             match self.charge {
@@ -517,6 +543,14 @@ mod tests {
         assert_eq!(cfg.admission, AdmissionPolicy::Shed);
         cfg.apply_kv("conn_limit", "256").unwrap();
         assert_eq!(cfg.conn_limit, 256);
+        assert_eq!(cfg.fault_point, "none", "default: no fault injection");
+        cfg.apply_kv("fault_point", "mid_batch").unwrap();
+        assert_eq!(cfg.fault_point, "mid_batch");
+        cfg.apply_kv("fault_nth", "3").unwrap();
+        assert_eq!(cfg.fault_nth, 3);
+        cfg.apply_kv("fault_seed", "99").unwrap();
+        assert_eq!(cfg.fault_seed, 99);
+        assert!(cfg.apply_kv("fault_point", "segfault").is_err());
         assert!(cfg.apply_kv("admission_policy", "nope").is_err());
         assert!(cfg.apply_kv("nonsense", "1").is_err());
         assert!(cfg.apply_kv("cxl_load_ns", "abc").is_err());

@@ -55,7 +55,11 @@ impl Daemon {
     /// to decouple from channel count.
     pub fn worker_pool(&self, workers: usize) -> Arc<crate::channel::pool::WorkerPool> {
         let key = (Arc::as_ptr(&self.orch) as usize, self.host);
-        crate::channel::pool::WorkerPool::for_key(key, workers)
+        let pool = crate::channel::pool::WorkerPool::for_key(key, workers);
+        // Failure plane: workers lost to injected crashes respawn from
+        // the orchestrator's recovery sweep (idempotent per pool).
+        pool.register_heal(&self.orch);
+        pool
     }
 
     /// Map a connection heap into `proc`'s address space (daemon-only

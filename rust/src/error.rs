@@ -23,6 +23,10 @@ pub enum RpcError {
     QuotaExceeded { proc: u32, held: usize, quota: usize, wanted: usize },
     LeaseExpired(u64),
     PeerFailed(String),
+    /// Fault injection fired: this simulated process died at a named
+    /// kill point without running any cleanup. Only the crash harness
+    /// produces this — real callers never see it.
+    Killed(String),
     AccessDenied(String),
     DsmTwoNodeLimit(String),
     Timeout(String),
@@ -65,6 +69,7 @@ impl fmt::Display for RpcError {
             ),
             LeaseExpired(id) => write!(f, "lease expired for heap {id}"),
             PeerFailed(s) => write!(f, "peer failed: {s}"),
+            Killed(s) => write!(f, "proc killed: {s}"),
             AccessDenied(s) => write!(f, "access denied: {s}"),
             DsmTwoNodeLimit(s) => {
                 write!(f, "RDMA fallback supports exactly two nodes per heap ({s})")

@@ -1,0 +1,308 @@
+//! Deterministic crash-fault injection: the failure plane's harness.
+//!
+//! The paper's §5.4 failure story (leases detect a dead proc, the
+//! orchestrator notifies survivors and reclaims orphaned heaps) is
+//! only testable if a proc can die at the *worst possible* instants:
+//! holding a claimed-but-unpublished ring slot, holding an installed
+//! seal, mid-batch with half its chunk published, parked inside the
+//! daemon's worker pool. This module threads named [`KillPoint`]s
+//! through those hot paths; a [`FaultPlan`] arms exactly one of them
+//! and fires on a chosen (optionally seed-derived) crossing, after
+//! which the victim path returns [`RpcError::Killed`] *without
+//! running any cleanup* — no abandon tombstone, no seal release, no
+//! scope free, no magazine flush. Recovery then has to happen the way
+//! it would in production: lease expiry → orchestrator sweep.
+//!
+//! Determinism: one global plan, one fire. The crossing counter only
+//! advances on full matches (point + victim filter), so unrelated
+//! traffic cannot consume the shot, and the injector auto-disarms the
+//! instant it fires so recovery code paths can never be re-killed.
+//! With a fixed seed the nth-crossing choice — and therefore the
+//! poisoned state the sweep must clean up — replays exactly.
+//!
+//! Disarmed cost on the hot path is a single relaxed atomic load.
+
+use crate::error::RpcError;
+use crate::memory::heap::ProcId;
+use crate::metrics::CounterSet;
+use crate::orchestrator::FLT_KILLS;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Weak};
+
+/// The named instants a simulated proc can be killed at. Each maps to
+/// one `should_die` probe in the hot path (DESIGN.md §14 has the
+/// site-by-site map of what state each kill strands).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KillPoint {
+    /// Client, batched submission: after the chunk's `publish_quiet`
+    /// loop, before `flush_publish` — requests are visible in slots
+    /// but the doorbell never rings.
+    PreFlush,
+    /// Server, mid-serving: after taking a request (slot PROCESSING),
+    /// before `respond` — the server proc dies with the slot held.
+    MidServe,
+    /// Client: after a sealed call completes, still holding the
+    /// COMPLETE seal — it is never released.
+    HoldingSeal,
+    /// Client: holding a live scope whose pages are never freed.
+    HoldingScope,
+    /// Client, batched submission: between chunks — earlier chunks
+    /// are fully in flight, later ones never happen.
+    MidBatch,
+    /// A parked daemon worker-pool thread dies (thread-level death:
+    /// its CPU share and futex state vanish; nothing it was serving
+    /// is cleaned up).
+    ParkedWorker,
+}
+
+impl KillPoint {
+    /// Parse a config-file name (`fault_point` knob).
+    pub fn parse(v: &str) -> Option<KillPoint> {
+        Some(match v {
+            "pre_flush" => KillPoint::PreFlush,
+            "mid_serve" => KillPoint::MidServe,
+            "holding_seal" => KillPoint::HoldingSeal,
+            "holding_scope" => KillPoint::HoldingScope,
+            "mid_batch" => KillPoint::MidBatch,
+            "parked_worker" => KillPoint::ParkedWorker,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KillPoint::PreFlush => "pre_flush",
+            KillPoint::MidServe => "mid_serve",
+            KillPoint::HoldingSeal => "holding_seal",
+            KillPoint::HoldingScope => "holding_scope",
+            KillPoint::MidBatch => "mid_batch",
+            KillPoint::ParkedWorker => "parked_worker",
+        }
+    }
+
+    /// Every kill point, for sweep-style tests.
+    pub const ALL: [KillPoint; 6] = [
+        KillPoint::PreFlush,
+        KillPoint::MidServe,
+        KillPoint::HoldingSeal,
+        KillPoint::HoldingScope,
+        KillPoint::MidBatch,
+        KillPoint::ParkedWorker,
+    ];
+}
+
+/// One armed kill: which point, which crossing, which victim.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub point: KillPoint,
+    /// Fire on the nth matching crossing (1-based).
+    pub nth: u64,
+    /// Restrict matches to one proc's crossings (`None` = any thread;
+    /// required for `ParkedWorker`, whose threads carry no identity).
+    pub victim: Option<ProcId>,
+}
+
+impl FaultPlan {
+    pub fn new(point: KillPoint) -> FaultPlan {
+        FaultPlan { point, nth: 1, victim: None }
+    }
+
+    /// Fire on the nth crossing instead of the first.
+    pub fn nth(mut self, n: u64) -> FaultPlan {
+        self.nth = n.max(1);
+        self
+    }
+
+    /// Only crossings by `proc` match (and only they advance the
+    /// crossing counter).
+    pub fn victim(mut self, proc: ProcId) -> FaultPlan {
+        self.victim = Some(proc);
+        self
+    }
+
+    /// Derive the crossing from a seed: nth in `[1, max_nth]` via one
+    /// xorshift round, so a seed sweep kills at different depths of
+    /// the same workload, deterministically per seed.
+    pub fn seeded(point: KillPoint, seed: u64, max_nth: u64) -> FaultPlan {
+        let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        FaultPlan { point, nth: 1 + x % max_nth.max(1), victim: None }
+    }
+
+    /// The plan named by the config's `fault_point`/`fault_nth`/
+    /// `fault_seed` knobs; `None` when `fault_point = none`.
+    /// `fault_nth = 0` means seed-derived (crossing in [1, 8]).
+    pub fn from_config(cfg: &crate::config::SimConfig) -> Option<FaultPlan> {
+        if cfg.fault_point == "none" || cfg.fault_point.is_empty() {
+            return None;
+        }
+        let point = KillPoint::parse(&cfg.fault_point)?;
+        Some(if cfg.fault_nth == 0 {
+            FaultPlan::seeded(point, cfg.fault_seed, 8)
+        } else {
+            FaultPlan { point, nth: cfg.fault_nth, victim: None }
+        })
+    }
+}
+
+struct Armed {
+    plan: FaultPlan,
+    crossings: u64,
+    /// Kill-count sink: the owning orchestrator's fault counters.
+    /// Weak so a dropped rack never keeps counters alive, and so kill
+    /// sites with no orchestrator handle (pool workers) still count.
+    sink: Weak<CounterSet>,
+}
+
+/// Hot-path gate: one relaxed load decides "no injection" — the cost
+/// every probe pays while nothing is armed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<Armed>> = Mutex::new(None);
+
+/// Arm a plan with no kill-count sink (unit tests).
+pub fn arm(plan: FaultPlan) {
+    arm_with_sink(plan, Weak::new());
+}
+
+/// Arm a plan; fired kills count on `sink`'s `FLT_KILLS`.
+pub fn arm_with_sink(plan: FaultPlan, sink: Weak<CounterSet>) {
+    *STATE.lock().unwrap() = Some(Armed { plan, crossings: 0, sink });
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Disarm without firing (teardown between test cases).
+pub fn disarm() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    *STATE.lock().unwrap() = None;
+}
+
+pub fn armed() -> bool {
+    ACTIVE.load(Ordering::SeqCst)
+}
+
+/// Probe a kill point: true exactly once, on the armed plan's nth
+/// matching crossing, after which the injector disarms itself. The
+/// caller must then die *without cleanup* — return
+/// [`killed_err`] up the stack (or exit the thread) and leak
+/// everything it holds.
+#[inline]
+pub fn should_die(point: KillPoint) -> bool {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_die_slow(point)
+}
+
+#[cold]
+fn should_die_slow(point: KillPoint) -> bool {
+    let mut st = STATE.lock().unwrap();
+    let armed = match st.as_mut() {
+        Some(a) => a,
+        None => return false,
+    };
+    if armed.plan.point != point {
+        return false;
+    }
+    if let Some(v) = armed.plan.victim {
+        if crate::simproc::current_proc() != v {
+            return false;
+        }
+    }
+    armed.crossings += 1;
+    if armed.crossings < armed.plan.nth {
+        return false;
+    }
+    if let Some(sink) = armed.sink.upgrade() {
+        sink.add(FLT_KILLS, 1);
+    }
+    *st = None;
+    ACTIVE.store(false, Ordering::SeqCst);
+    true
+}
+
+/// The error a killed path surfaces to its own (dead) caller. Only
+/// the crash harness observes it — surviving peers see `PeerFailed`
+/// after the sweep, never `Killed`.
+pub fn killed_err(point: KillPoint) -> RpcError {
+    RpcError::Killed(format!("fault injected at kill point '{}'", point.name()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Every test uses a victim filter with a proc id far outside any
+    // range other lib tests bind, so concurrently running tests that
+    // legitimately cross kill points can neither fire these plans nor
+    // consume their crossing budgets.
+
+    #[test]
+    fn fires_once_on_nth_crossing_then_disarms() {
+        let victim: ProcId = 900_001;
+        crate::simproc::with_identity(victim, 0, || {
+            arm(FaultPlan::new(KillPoint::PreFlush).nth(3).victim(victim));
+            assert!(!should_die(KillPoint::PreFlush));
+            assert!(!should_die(KillPoint::MidBatch), "other points never match");
+            assert!(!should_die(KillPoint::PreFlush));
+            assert!(should_die(KillPoint::PreFlush), "third crossing fires");
+            assert!(!armed(), "auto-disarmed after firing");
+            assert!(!should_die(KillPoint::PreFlush), "recovery can't be re-killed");
+        });
+    }
+
+    #[test]
+    fn victim_filter_neither_fires_nor_counts_for_others() {
+        let victim: ProcId = 900_002;
+        arm(FaultPlan::new(KillPoint::MidServe).victim(victim));
+        crate::simproc::with_identity(victim + 1, 0, || {
+            assert!(!should_die(KillPoint::MidServe), "wrong proc never dies");
+            assert!(!should_die(KillPoint::MidServe));
+        });
+        crate::simproc::with_identity(victim, 0, || {
+            assert!(
+                should_die(KillPoint::MidServe),
+                "non-victim crossings must not have consumed the shot"
+            );
+        });
+        disarm();
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_bounded() {
+        let a = FaultPlan::seeded(KillPoint::MidBatch, 42, 8);
+        let b = FaultPlan::seeded(KillPoint::MidBatch, 42, 8);
+        assert_eq!(a.nth, b.nth, "same seed, same crossing");
+        assert!((1..=8).contains(&a.nth));
+        let c = FaultPlan::seeded(KillPoint::MidBatch, 43, 8);
+        // Not a hard guarantee for every pair, but these two differ.
+        assert_ne!(a.nth, c.nth, "seed 42 vs 43 pick different crossings");
+    }
+
+    #[test]
+    fn kill_point_names_round_trip() {
+        for p in KillPoint::ALL {
+            assert_eq!(KillPoint::parse(p.name()), Some(p));
+        }
+        assert_eq!(KillPoint::parse("none"), None);
+        assert_eq!(KillPoint::parse("bogus"), None);
+    }
+
+    #[test]
+    fn config_plan_resolution() {
+        let mut cfg = crate::config::SimConfig::for_tests();
+        assert!(FaultPlan::from_config(&cfg).is_none(), "default: no injection");
+        cfg.apply_kv("fault_point", "holding_seal").unwrap();
+        cfg.apply_kv("fault_nth", "5").unwrap();
+        let plan = FaultPlan::from_config(&cfg).unwrap();
+        assert_eq!(plan.point, KillPoint::HoldingSeal);
+        assert_eq!(plan.nth, 5);
+        // nth = 0 → seed-derived crossing.
+        cfg.apply_kv("fault_nth", "0").unwrap();
+        cfg.apply_kv("fault_seed", "7").unwrap();
+        let plan = FaultPlan::from_config(&cfg).unwrap();
+        assert_eq!(plan.nth, FaultPlan::seeded(KillPoint::HoldingSeal, 7, 8).nth);
+        assert!(cfg.apply_kv("fault_point", "bogus").is_err());
+    }
+}

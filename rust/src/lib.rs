@@ -31,6 +31,7 @@ pub mod config;
 pub mod daemon;
 pub mod dsm;
 pub mod error;
+pub mod fault;
 pub mod inference;
 pub mod memory;
 pub mod metrics;
@@ -46,8 +47,8 @@ pub mod util;
 pub mod workloads;
 
 pub use channel::{
-    CallArg, CallCtx, CallHandle, CallOpts, ChannelBuilder, ChannelOpts, Connection, Reply, Rpc,
-    RpcServer, Shard, TransportSel, TypedCallHandle,
+    CallArg, CallCtx, CallHandle, CallOpts, ChannelBuilder, ChannelOpts, Connection, Reply,
+    RetryPolicy, Rpc, RpcServer, Shard, TransportSel, TypedCallHandle,
 };
 pub use rack::{ProcEnv, Rack};
 

@@ -756,6 +756,42 @@ impl Heap {
     pub fn sealed_count(&self) -> usize {
         self.sealed_installed.load(Ordering::Relaxed) as usize
     }
+
+    /// Failure plane: drop every seal a dead proc installed on this
+    /// heap, in one sweep (orchestrator recovery, after lease expiry).
+    /// The per-range install counts are discarded whole — the dead
+    /// proc will never run its matching unseals — and every page word
+    /// the ranges covered is recomputed from the surviving table, so
+    /// `check_write` for live procs is exact afterwards (including
+    /// demoted `SEAL_MULTI` pages whose other owner survives). Returns
+    /// the number of seal installations force-released.
+    pub fn force_unseal_proc(&self, proc: ProcId) -> usize {
+        let mut t = self.seals.lock().unwrap();
+        let dead: Vec<((usize, usize, ProcId), u64)> = t
+            .ranges
+            .iter()
+            .filter(|&(&(_, _, p), _)| p == proc)
+            .map(|(&k, &c)| (k, c))
+            .collect();
+        if dead.is_empty() {
+            return 0;
+        }
+        let mut installs = 0u64;
+        for &(k, c) in &dead {
+            t.ranges.remove(&k);
+            installs += c;
+        }
+        self.sealed_installed.fetch_sub(installs, Ordering::Relaxed);
+        let mut idxs: Vec<usize> =
+            dead.iter().flat_map(|&((s, e, _), _)| self.word_span(s, e)).collect();
+        idxs.sort_unstable();
+        idxs.dedup();
+        for idx in idxs {
+            let w = self.recompute_word(&t, idx);
+            self.seal_words[idx].store(w, Ordering::Release);
+        }
+        installs as usize
+    }
 }
 
 #[inline]
@@ -802,6 +838,64 @@ pub fn heap_for_addr(addr: usize) -> Option<Arc<Heap>> {
     } else {
         None
     }
+}
+
+// ---------------- failure plane: dead procs' magazines ----------------
+//
+// A crashed proc's threads never run their TLS destructors in the
+// model: the blocks cached in their magazines are *free* memory the
+// central allocator has lost sight of — the heap-level analogue of an
+// orphaned heap. Kill sites park the dying thread's magazines here
+// (tagged with the dead proc), and the orchestrator's recovery sweep
+// flushes them back to the central free lists.
+
+#[allow(clippy::type_complexity)]
+static DEAD_MAGS: Mutex<Vec<(ProcId, Weak<Heap>, [Vec<usize>; CLASSES.len()])>> =
+    Mutex::new(Vec::new());
+
+/// Kill-site hook: move the current thread's cached blocks (all heaps)
+/// into the dead-magazine store, tagged with the crashed proc. The
+/// thread's magazines are left empty — exactly the state of a proc
+/// whose address space vanished mid-run.
+pub fn park_thread_magazines(proc: ProcId) {
+    let _ = MAGAZINES.try_with(|m| {
+        let mut m = m.borrow_mut();
+        let mut parked = DEAD_MAGS.lock().unwrap();
+        for s in m.slots.iter_mut() {
+            if s.classes.iter().all(|v| v.is_empty()) {
+                continue;
+            }
+            parked.push((proc, s.heap.clone(), std::mem::take(&mut s.classes)));
+        }
+    });
+}
+
+/// Recovery sweep: hand every block a dead proc's parked magazines
+/// held back to its heap's central free lists. Returns the number of
+/// blocks flushed (blocks whose heap already died are simply dropped —
+/// their segment is gone).
+pub fn flush_dead_magazines(proc: ProcId) -> u64 {
+    let drained: Vec<(Weak<Heap>, [Vec<usize>; CLASSES.len()])> = {
+        let mut parked = DEAD_MAGS.lock().unwrap();
+        let mut out = Vec::new();
+        parked.retain_mut(|(p, h, classes)| {
+            if *p == proc {
+                out.push((h.clone(), std::mem::take(classes)));
+                false
+            } else {
+                true
+            }
+        });
+        out
+    };
+    let mut blocks = 0u64;
+    for (w, mut classes) in drained {
+        if let Some(h) = w.upgrade() {
+            blocks += classes.iter().map(|v| v.len() as u64).sum::<u64>();
+            h.take_back_blocks(&mut classes);
+        }
+    }
+    blocks
 }
 
 /// Weak handle to the heap based exactly at `base` (magazine slots
@@ -1116,6 +1210,69 @@ mod tests {
         }
         assert_eq!(h.sealed_count(), 0);
         h.free_pages(base);
+    }
+
+    /// Failure plane: a crashed thread's parked magazines are invisible
+    /// to the allocator until the recovery sweep flushes them back.
+    #[test]
+    fn parked_magazines_flush_on_recovery_sweep() {
+        let (_p, h) = heap();
+        // Use a proc id no other (parallel) test touches: DEAD_MAGS is
+        // process-global.
+        let dead: ProcId = 910_001;
+        let addr = {
+            let h2 = Arc::clone(&h);
+            std::thread::spawn(move || {
+                let a = h2.alloc_bytes(64).unwrap();
+                h2.free_bytes(a); // now cached in this thread's magazine
+                super::park_thread_magazines(dead);
+                // The thread's own magazines are empty: its next alloc
+                // of the class goes central, not to the parked block.
+                let b = h2.alloc_bytes(64).unwrap();
+                assert_ne!(b, a, "parked block must be unreachable");
+                h2.free_bytes(b);
+                a
+            })
+            .join()
+            .unwrap()
+        };
+        let flushed = super::flush_dead_magazines(dead);
+        assert!(flushed >= 1, "parked batch flushed, got {flushed}");
+        assert_eq!(super::flush_dead_magazines(dead), 0, "idempotent");
+        // The parked block leads the central list again (the sweep
+        // pushed it after the thread-exit flush of `b`).
+        let c = h.alloc_bytes(64).unwrap();
+        assert_eq!(c, addr, "flushed block reachable from another thread");
+        h.free_bytes(c);
+    }
+
+    /// Failure plane: force-unseal drops every installation a dead proc
+    /// held — including repeated installs and its share of a
+    /// multi-proc (SEAL_MULTI) page — leaving survivors' checks exact.
+    #[test]
+    fn force_unseal_proc_drops_only_dead_procs_seals() {
+        let (_p, h) = heap();
+        let a = h.alloc_pages(2).unwrap();
+        let dead: ProcId = 31;
+        let alive: ProcId = 32;
+        h.seal_range(a.base, 64, dead);
+        h.seal_range(a.base, 64, dead); // repeated install
+        h.seal_range(a.base + 16, 64, alive); // same page: SEAL_MULTI
+        h.seal_range(a.base + 4096, 64, dead); // second page, dead only
+        assert_eq!(h.sealed_count(), 4);
+
+        assert_eq!(h.force_unseal_proc(dead), 3);
+        assert_eq!(h.sealed_count(), 1);
+        assert!(h.check_write(a.base, 8, dead).is_ok(), "dead proc's seals gone");
+        assert!(h.check_write(a.base + 4096, 8, dead).is_ok());
+        assert!(
+            h.check_write(a.base, 8, alive).is_err(),
+            "survivor's seal intact after the multi-word recompute"
+        );
+        assert_eq!(h.force_unseal_proc(dead), 0, "idempotent");
+        h.unseal_range(a.base + 16, 64, alive);
+        assert_eq!(h.sealed_count(), 0);
+        h.free_pages(a);
     }
 
     #[test]

@@ -10,13 +10,49 @@
 //! whole scopes through a lock-free free list (DESIGN.md §10).
 
 use crate::error::{Result, RpcError};
-use crate::memory::heap::Heap;
+use crate::memory::heap::{Heap, ProcId};
 use crate::memory::pod::Pod;
 use crate::memory::pool::Segment;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Weak};
 
 static NEXT_SCOPE_ID: AtomicU64 = AtomicU64::new(1);
+
+// Failure plane: who owns which live scope. A crashed proc never drops
+// its `Scope` values, so their pages would stay carved out of the heap
+// forever; the orchestrator's recovery sweep frees them through this
+// registry (`release_scopes_of`). `Scope::drop` deregisters first and
+// frees only if its entry was still present — so a normal drop racing
+// a sweep frees the pages exactly once, whichever side gets there.
+#[allow(clippy::type_complexity)]
+static SCOPES: Mutex<Vec<(u64, ProcId, Weak<Heap>, Segment)>> = Mutex::new(Vec::new());
+
+/// Recovery sweep: free every live scope a dead proc still owned.
+/// Returns the number of scopes released (scopes whose heap already
+/// died are dropped from the registry without touching memory).
+pub fn release_scopes_of(proc: ProcId) -> usize {
+    let drained: Vec<(Weak<Heap>, Segment)> = {
+        let mut reg = SCOPES.lock().unwrap();
+        let mut out = Vec::new();
+        reg.retain(|&(_, p, ref h, seg)| {
+            if p == proc {
+                out.push((h.clone(), seg));
+                false
+            } else {
+                true
+            }
+        });
+        out
+    };
+    let mut freed = 0;
+    for (w, seg) in drained {
+        if let Some(h) = w.upgrade() {
+            h.free_pages(seg);
+            freed += 1;
+        }
+    }
+    freed
+}
 
 pub struct Scope {
     pub id: u64,
@@ -31,12 +67,16 @@ impl Scope {
     pub fn create(heap: &Arc<Heap>, bytes: usize) -> Result<Scope> {
         let pages = bytes.div_ceil(heap.page_size()).max(1);
         let seg = heap.alloc_pages(pages)?;
-        Ok(Scope {
-            id: NEXT_SCOPE_ID.fetch_add(1, Ordering::Relaxed),
-            heap: Arc::clone(heap),
+        let id = NEXT_SCOPE_ID.fetch_add(1, Ordering::Relaxed);
+        // Register under the creating proc's identity so a crash can
+        // be swept (see `release_scopes_of`).
+        SCOPES.lock().unwrap().push((
+            id,
+            crate::simproc::current_proc(),
+            Arc::downgrade(heap),
             seg,
-            bump: AtomicUsize::new(seg.base),
-        })
+        ));
+        Ok(Scope { id, heap: Arc::clone(heap), seg, bump: AtomicUsize::new(seg.base) })
     }
 
     #[inline]
@@ -119,7 +159,17 @@ impl Scope {
 
 impl Drop for Scope {
     fn drop(&mut self) {
-        self.heap.free_pages(self.seg);
+        // Deregister-then-free: if the recovery sweep already released
+        // this scope's pages (crashed owner), the entry is gone and
+        // freeing again would corrupt the page free list.
+        let mut reg = SCOPES.lock().unwrap();
+        let before = reg.len();
+        reg.retain(|&(id, _, _, _)| id != self.id);
+        let still_registered = reg.len() < before;
+        drop(reg);
+        if still_registered {
+            self.heap.free_pages(self.seg);
+        }
     }
 }
 
@@ -215,6 +265,36 @@ mod tests {
             assert!(heap.free_page_bytes() < free0);
         }
         assert_eq!(heap.free_page_bytes(), free0);
+    }
+
+    /// Failure plane: the sweep frees a dead proc's scope pages exactly
+    /// once, and a late Drop of the (leaked-then-recovered) scope is a
+    /// no-op instead of a double free.
+    #[test]
+    fn release_scopes_of_frees_dead_procs_pages_once() {
+        let pool = Pool::new(&SimConfig::for_tests()).unwrap();
+        let heap = Heap::new(&pool, "crash", 256 * 1024).unwrap();
+        let free0 = heap.free_page_bytes();
+        // Proc ids far outside any range parallel tests bind: the
+        // scope registry is process-global.
+        let dead: crate::memory::heap::ProcId = 920_001;
+        let alive: crate::memory::heap::ProcId = 920_002;
+        let dead_scope = crate::simproc::with_identity(dead, 0, || {
+            Scope::create(&heap, 16 * 1024).unwrap()
+        });
+        let live_scope = crate::simproc::with_identity(alive, 0, || {
+            Scope::create(&heap, 16 * 1024).unwrap()
+        });
+        assert_eq!(heap.free_page_bytes(), free0 - 32 * 1024);
+
+        assert_eq!(super::release_scopes_of(dead), 1, "only the dead proc's scope");
+        assert_eq!(heap.free_page_bytes(), free0 - 16 * 1024);
+        assert_eq!(super::release_scopes_of(dead), 0, "idempotent");
+        // Late drop of the already-swept scope must not free again.
+        drop(dead_scope);
+        assert_eq!(heap.free_page_bytes(), free0 - 16 * 1024);
+        drop(live_scope);
+        assert_eq!(heap.free_page_bytes(), free0, "survivor's drop still frees");
     }
 
     #[test]

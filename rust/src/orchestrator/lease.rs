@@ -4,6 +4,19 @@
 //! renews it periodically. If a proc dies (crash = it stops renewing),
 //! the lease expires, the orchestrator notifies the other participants
 //! and — once the last lease on a heap is gone — reclaims the heap.
+//!
+//! ## The boundary instant
+//!
+//! A renew arriving at *exactly* `expires` loses: **expire wins the
+//! tie**. `renew` succeeds only while `expires > now` (strict), and
+//! `expire` harvests every lease with `expires <= now` (inclusive), so
+//! the two predicates partition time with no gap and no overlap — at
+//! any instant a lease is either renewable or harvestable, never both,
+//! never neither. Failure detection prefers the pessimistic side: a
+//! renewal that cuts it to the exact deadline is treated as too late,
+//! because a recovery sweep running at that same instant must be able
+//! to rely on the lease being dead (`crash_stress` counts on expiry
+//! being final once the TTL has fully elapsed).
 
 use crate::memory::heap::ProcId;
 use std::collections::HashMap;
@@ -43,7 +56,9 @@ impl LeaseTable {
         lease
     }
 
-    /// Renew; returns false if the lease already expired or was revoked.
+    /// Renew; returns false if the lease already expired or was
+    /// revoked. Strict comparison: at exactly `expires` the renew
+    /// fails — expire wins the tie (see module docs).
     pub fn renew(&mut self, id: LeaseId, now: Instant) -> bool {
         match self.leases.get_mut(&id) {
             Some(l) if l.expires > now => {
@@ -67,7 +82,10 @@ impl LeaseTable {
     }
 
     /// Harvest expired leases; returns them (orchestrator notifies &
-    /// possibly GCs their heaps).
+    /// possibly GCs their heaps). Inclusive comparison: a lease whose
+    /// `expires` equals `now` is harvested — the exact complement of
+    /// [`LeaseTable::renew`]'s strict check, so the boundary instant
+    /// belongs to expiry on both sides (see module docs).
     pub fn expire(&mut self, now: Instant) -> Vec<Lease> {
         let dead: Vec<LeaseId> = self
             .leases
@@ -105,6 +123,15 @@ impl LeaseTable {
     pub fn live_count(&self) -> usize {
         self.leases.len()
     }
+
+    /// Does `proc` hold any lease still live at `now`? Drives
+    /// lease-aware admission (`ServerCore::admit`): a connection whose
+    /// client proc no longer holds a live lease does not count against
+    /// the ceiling, so crashed clients free their slots as soon as
+    /// their leases lapse, without waiting for the sweep.
+    pub fn proc_live(&self, proc: ProcId, now: Instant) -> bool {
+        self.leases.values().any(|l| l.proc == proc && l.expires > now)
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +168,50 @@ mod tests {
         assert_eq!(lt.holders(9), vec![2]);
         lt.expire(now + Duration::from_millis(500));
         assert!(lt.heap_is_orphaned(9));
+    }
+
+    #[test]
+    fn boundary_instant_expire_wins() {
+        // Both sides of the exact deadline: one tick before `expires`
+        // the lease is renewable and unharvestable; at exactly
+        // `expires` it is unrenewable and harvestable. No instant is
+        // both, no instant is neither.
+        let ttl = Duration::from_millis(100);
+        let mut lt = LeaseTable::new(ttl);
+        let now = t0();
+        let l = lt.grant(3, 1, now);
+        let deadline = now + ttl;
+        let just_before = deadline - Duration::from_nanos(1);
+
+        // ε before the deadline: renew side of the partition.
+        assert!(lt.expire(just_before).is_empty(), "live lease must not be harvested early");
+        assert!(lt.renew(l.id, just_before), "renew an instant before expiry succeeds");
+
+        // Renewal re-based expiry at just_before + ttl; probe that
+        // exact boundary: renew loses the tie, expire takes it.
+        let deadline2 = just_before + ttl;
+        assert!(!lt.renew(l.id, deadline2), "renew at exactly `expires` must fail");
+        let dead = lt.expire(deadline2);
+        assert_eq!(dead.len(), 1, "expire at exactly `expires` must harvest");
+        assert_eq!(dead[0].id, l.id);
+        assert!(!lt.renew(l.id, deadline2), "harvested lease stays dead");
+    }
+
+    #[test]
+    fn proc_live_tracks_any_live_lease() {
+        let ttl = Duration::from_millis(100);
+        let mut lt = LeaseTable::new(ttl);
+        let now = t0();
+        let a = lt.grant(1, 7, now);
+        let _b = lt.grant(2, 7, now + Duration::from_millis(50));
+        assert!(lt.proc_live(7, now));
+        assert!(!lt.proc_live(8, now), "proc with no leases is dead");
+        // First lease at its exact deadline: the second keeps proc 7
+        // alive (expire-wins applies per lease, liveness is any-of).
+        assert!(lt.proc_live(7, now + ttl));
+        lt.surrender(a.id);
+        // Second lease at its exact deadline: nothing live remains.
+        assert!(!lt.proc_live(7, now + Duration::from_millis(150)));
     }
 
     #[test]

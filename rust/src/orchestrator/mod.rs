@@ -69,6 +69,45 @@ pub const ADM_SHED: usize = 3;
 
 static ADMISSION_NAMES: [&str; 4] = ["admitted", "rejected", "queued", "shed"];
 
+/// Fault-counter indices into [`Orchestrator::fault`] — the failure
+/// plane's observability surface. The balance invariant the crash
+/// suite (and `ci/check_fault.sh`) holds: every injected kill is
+/// eventually matched by a completed recovery
+/// (`kills == recoveries` once the rack quiesces).
+pub const FLT_KILLS: usize = 0;
+pub const FLT_SLOTS_REAPED: usize = 1;
+pub const FLT_SEALS_FORCED: usize = 2;
+pub const FLT_SCOPES_FREED: usize = 3;
+pub const FLT_MAGS_FLUSHED: usize = 4;
+pub const FLT_RETRIES: usize = 5;
+pub const FLT_RECONNECTS: usize = 6;
+pub const FLT_RECOVERIES: usize = 7;
+
+static FAULT_NAMES: [&str; 8] = [
+    "kills",
+    "slots_reaped",
+    "seals_forced",
+    "scopes_freed",
+    "mags_flushed",
+    "retries",
+    "reconnects",
+    "recoveries",
+];
+
+/// A per-proc recovery obligation registered by a plane that owns
+/// state a dead proc may have poisoned (today: every open channel's
+/// `ServerCore`). Called once per dead proc from the sweep, with the
+/// orchestrator's `inner` lock *released* — hooks may call back into
+/// the orchestrator (unmap, counters). Return `false` to be pruned
+/// (the owning object is gone).
+pub type DeathHook = Box<dyn Fn(ProcId) -> bool + Send + Sync>;
+
+/// A per-sweep maintenance obligation (today: the worker pool's
+/// heal pass respawning killed workers). Returns `Some(recoveries)`
+/// to stay registered — the count lands in `FLT_RECOVERIES` — or
+/// `None` to be pruned.
+pub type TickHook = Box<dyn Fn() -> Option<u64> + Send + Sync>;
+
 pub struct Orchestrator {
     pub pool: Arc<Pool>,
     cfg: SimConfig,
@@ -78,6 +117,14 @@ pub struct Orchestrator {
     /// queued / admitted-as-shed), host-wide — benches and tests lift
     /// it into reports like the DSM transfer counters.
     admission: crate::metrics::CounterSet,
+    /// Failure-plane accounting (see the `FLT_*` indices). `Arc` so
+    /// the global fault injector can hold a weak sink for kill counts
+    /// fired on threads with no orchestrator handle (pool workers).
+    fault: Arc<crate::metrics::CounterSet>,
+    /// Recovery obligations run per dead proc during the sweep.
+    death_hooks: Mutex<Vec<DeathHook>>,
+    /// Maintenance obligations run at the end of every sweep.
+    tick_hooks: Mutex<Vec<TickHook>>,
 }
 
 impl Orchestrator {
@@ -97,6 +144,9 @@ impl Orchestrator {
             }),
             ticker_stop: AtomicBool::new(false),
             admission: crate::metrics::CounterSet::new(&ADMISSION_NAMES),
+            fault: Arc::new(crate::metrics::CounterSet::new(&FAULT_NAMES)),
+            death_hooks: Mutex::new(Vec::new()),
+            tick_hooks: Mutex::new(Vec::new()),
         })
     }
 
@@ -107,6 +157,36 @@ impl Orchestrator {
     /// Channel-admission counters (see the `ADM_*` indices).
     pub fn admission(&self) -> &crate::metrics::CounterSet {
         &self.admission
+    }
+
+    /// Failure-plane counters (see the `FLT_*` indices).
+    pub fn fault(&self) -> &crate::metrics::CounterSet {
+        &self.fault
+    }
+
+    /// Shared handle to the fault counters, for the injector's weak
+    /// kill-count sink (`fault::arm_with_sink`).
+    pub fn fault_counters(&self) -> Arc<crate::metrics::CounterSet> {
+        Arc::clone(&self.fault)
+    }
+
+    /// Register a recovery obligation run once per dead proc by the
+    /// lease sweep. The hook runs with the orchestrator's internal
+    /// lock released (it may call back in); it must not register
+    /// further hooks. Returns `false` to be pruned.
+    pub fn on_proc_death(&self, hook: DeathHook) {
+        self.death_hooks.lock().unwrap().push(hook);
+    }
+
+    /// Register a per-sweep maintenance pass (e.g. worker-pool heal).
+    pub fn on_tick(&self, hook: TickHook) {
+        self.tick_hooks.lock().unwrap().push(hook);
+    }
+
+    /// Does `proc` hold any live lease right now? Lease-aware
+    /// admission asks this per candidate connection.
+    pub fn proc_holds_lease(&self, proc: ProcId) -> bool {
+        self.inner.lock().unwrap().leases.proc_live(proc, Instant::now())
     }
 
     // ---------------- heaps ----------------
@@ -304,51 +384,134 @@ impl Orchestrator {
 
     // ---------------- failure handling ----------------
 
-    /// One sweep: expire leases, notify survivors, GC orphaned heaps.
-    /// Returns the number of leases that expired.
+    /// One sweep: expire leases, notify survivors, run per-plane
+    /// recovery for every proc that lost its last lease, then GC
+    /// orphaned heaps. Returns the number of leases that expired.
+    ///
+    /// The sweep is **phased** so its observable ordering is
+    /// deterministic regardless of how many leases expire together
+    /// (the lease map iterates in hash order):
+    ///
+    /// 1. *Notify* (locked): every expired lease credits its quota and
+    ///    pushes `PeerFailed` to that heap's surviving participants —
+    ///    **all** failure notifications land before any reclamation,
+    ///    so a survivor always observes `PeerFailed` for a shared heap
+    ///    before (never after) its `HeapReclaimed`. Channels owned by
+    ///    procs with no live lease left go down here too.
+    /// 2. *Recover* (unlocked): per dead proc, run the registered
+    ///    death hooks (channel planes reap ring slots, fail waiters,
+    ///    revoke connection seals, detach doorbells), flush its parked
+    ///    heap magazines back to central lists, force-free its scopes,
+    ///    and force-release its seals through every live heap's
+    ///    page-word index. One `FLT_RECOVERIES` per dead proc.
+    /// 3. *Reclaim* (relocked): orphaned heaps from the expired set
+    ///    are GC'd, pushing `HeapReclaimed` strictly after phase 1's
+    ///    notifications.
+    /// 4. *Maintain*: tick hooks (worker-pool heal) run; their healed
+    ///    counts land in `FLT_RECOVERIES`.
     pub fn tick(&self) -> usize {
         let now = Instant::now();
-        let mut inner = self.inner.lock().unwrap();
-        let dead = inner.leases.expire(now);
-        let n = dead.len();
-        for lease in dead {
-            inner.quotas.credit(lease.proc, lease.heap_id);
-            // Notify surviving participants of this heap.
-            let survivors: Vec<ProcId> = inner
-                .participants
-                .get(&lease.heap_id)
-                .map(|v| v.iter().copied().filter(|p| *p != lease.proc).collect())
-                .unwrap_or_default();
-            for s in survivors {
-                inner.notifications.entry(s).or_default().push(Notification::PeerFailed {
-                    proc: lease.proc,
-                    heap_id: lease.heap_id,
-                });
-            }
-            // Channels owned by the dead proc go down.
-            let downs: Vec<String> = inner
-                .channels
-                .values()
-                .filter(|c| c.owner_proc == lease.proc)
-                .map(|c| c.name.clone())
-                .collect();
-            for name in downs {
-                inner.channels.remove(&name);
-                // Tell everyone who shares the channel's heap.
-                let heap_holders = inner.leases.holders(lease.heap_id);
-                for h in heap_holders {
-                    inner
-                        .notifications
-                        .entry(h)
-                        .or_default()
-                        .push(Notification::ChannelDown { name: name.clone() });
+        // ---- phase 1: expire + notify (all failures before any GC) --
+        let (dead, dead_procs, live_heaps) = {
+            let mut inner = self.inner.lock().unwrap();
+            let dead = inner.leases.expire(now);
+            for lease in &dead {
+                inner.quotas.credit(lease.proc, lease.heap_id);
+                let survivors: Vec<ProcId> = inner
+                    .participants
+                    .get(&lease.heap_id)
+                    .map(|v| v.iter().copied().filter(|p| *p != lease.proc).collect())
+                    .unwrap_or_default();
+                for s in survivors {
+                    inner.notifications.entry(s).or_default().push(Notification::PeerFailed {
+                        proc: lease.proc,
+                        heap_id: lease.heap_id,
+                    });
                 }
             }
-            if inner.leases.heap_is_orphaned(lease.heap_id) {
-                Self::reclaim_heap(&mut inner, lease.heap_id);
+            // A proc is dead when no live lease of its remains — a
+            // proc that lost one of several leases keeps its channels.
+            let mut dead_procs: Vec<ProcId> = dead
+                .iter()
+                .map(|l| l.proc)
+                .filter(|p| !inner.leases.proc_live(*p, now))
+                .collect();
+            dead_procs.sort_unstable();
+            dead_procs.dedup();
+            for p in &dead_procs {
+                let downs: Vec<(String, u64)> = inner
+                    .channels
+                    .values()
+                    .filter(|c| c.owner_proc == *p)
+                    .map(|c| (c.name.clone(), c.heap_id))
+                    .collect();
+                for (name, heap_id) in downs {
+                    inner.channels.remove(&name);
+                    // Tell everyone who still shares the channel's heap.
+                    let heap_holders = inner.leases.holders(heap_id);
+                    for h in heap_holders {
+                        inner
+                            .notifications
+                            .entry(h)
+                            .or_default()
+                            .push(Notification::ChannelDown { name: name.clone() });
+                    }
+                }
+            }
+            let live_heaps: Vec<Arc<Heap>> = inner.heaps.values().cloned().collect();
+            (dead, dead_procs, live_heaps)
+        };
+        // ---- phase 2: per-plane recovery, lock released ------------
+        for p in &dead_procs {
+            self.run_death_hooks(*p);
+            let mags = crate::memory::heap::flush_dead_magazines(*p);
+            if mags > 0 {
+                self.fault.add(FLT_MAGS_FLUSHED, mags);
+            }
+            let scopes = crate::memory::scope::release_scopes_of(*p);
+            if scopes > 0 {
+                self.fault.add(FLT_SCOPES_FREED, scopes as u64);
+            }
+            let mut seals = 0u64;
+            for h in &live_heaps {
+                seals += h.force_unseal_proc(*p) as u64;
+            }
+            if seals > 0 {
+                self.fault.add(FLT_SEALS_FORCED, seals);
+            }
+            self.fault.add(FLT_RECOVERIES, 1);
+        }
+        // ---- phase 3: GC orphaned heaps (after all notifications) --
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for lease in &dead {
+                if inner.heaps.contains_key(&lease.heap_id)
+                    && inner.leases.heap_is_orphaned(lease.heap_id)
+                {
+                    Self::reclaim_heap(&mut inner, lease.heap_id);
+                }
             }
         }
-        n
+        // ---- phase 4: maintenance (worker-pool heal, ...) ----------
+        let mut hooks = self.tick_hooks.lock().unwrap();
+        hooks.retain(|h| match h() {
+            Some(recovered) => {
+                if recovered > 0 {
+                    self.fault.add(FLT_RECOVERIES, recovered);
+                }
+                true
+            }
+            None => false,
+        });
+        dead.len()
+    }
+
+    /// Run every registered death hook for one dead proc, pruning the
+    /// ones whose owning object is gone. Callers must not hold the
+    /// orchestrator's internal lock.
+    fn run_death_hooks(&self, dead: ProcId) {
+        let mut hooks = self.death_hooks.lock().unwrap();
+        hooks.retain(|h| h(dead));
     }
 
     /// Poll pending notifications for a proc (drains them).
@@ -427,6 +590,40 @@ mod tests {
         o.unmap_heap(client_lease, 2, h.id);
         assert_eq!(o.live_heaps(), 0);
         let _ = server_lease;
+    }
+
+    #[test]
+    fn peer_failed_fans_out_before_heap_reclaim() {
+        // Sweep-ordering pin: when BOTH leases of one shared heap
+        // expire in a single sweep, each proc must still observe the
+        // other's PeerFailed BEFORE the HeapReclaimed that same sweep
+        // produces. The unphased sweep got this wrong in lease-map
+        // hash order: whichever lease iterated first could find the
+        // heap already orphaned, reclaim it, and delete the
+        // participants list the second lease's fan-out needed.
+        let o = orch();
+        let (h, _l1) = o.create_heap("shared", 1 << 20, 1).unwrap();
+        let (_h2, _l2) = o.map_heap(h.id, 2).unwrap();
+        std::thread::sleep(Duration::from_millis(80)); // ttl 60ms
+        assert_eq!(o.tick(), 2, "both leases expire in one sweep");
+        for proc in [1u32, 2u32] {
+            let notes = o.poll_notifications(proc);
+            let peer = notes
+                .iter()
+                .position(|n| matches!(n, Notification::PeerFailed { .. }))
+                .unwrap_or_else(|| panic!("proc {proc} missing PeerFailed: {notes:?}"));
+            let reclaim = notes
+                .iter()
+                .position(|n| matches!(n, Notification::HeapReclaimed { .. }))
+                .unwrap_or_else(|| panic!("proc {proc} missing HeapReclaimed: {notes:?}"));
+            assert!(
+                peer < reclaim,
+                "proc {proc} saw HeapReclaimed before PeerFailed: {notes:?}"
+            );
+        }
+        assert_eq!(o.live_heaps(), 0);
+        // Two procs lost their last lease: two completed recoveries.
+        assert_eq!(o.fault().get(FLT_RECOVERIES), 2);
     }
 
     #[test]

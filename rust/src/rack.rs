@@ -38,6 +38,11 @@ impl Rack {
         let pool = Pool::new(&cfg).expect("pool mmap");
         let orch = Orchestrator::new(&cfg, Arc::clone(&pool));
         simproc::set_enforcement(cfg.enforce_protection);
+        // Arm the crash-fault injector when the config names a kill
+        // point; kills count on this rack's fault counters.
+        if let Some(plan) = crate::fault::FaultPlan::from_config(&cfg) {
+            crate::fault::arm_with_sink(plan, Arc::downgrade(&orch.fault_counters()));
+        }
         let topo = Topology::from_config(&cfg);
         let next_ext_host = AtomicU32::new(cfg.rack_hosts as u32);
         Arc::new(Rack {

@@ -40,7 +40,9 @@ pub const DESC_COMPLETE: u32 = 2;
 #[repr(C)]
 struct SealDescriptor {
     state: AtomicU32,
-    _pad: u32,
+    /// Sealing proc — the failure plane's handle for force-releasing
+    /// everything a dead proc left sealed (`Sealer::revoke_proc`).
+    proc: AtomicU32,
     start: u64,
     len: u64,
 }
@@ -129,6 +131,7 @@ impl Sealer {
             (*dm).start = start as u64;
             (*dm).len = len as u64;
         }
+        d.proc.store(proc, Ordering::Relaxed);
         d.state.store(DESC_SEALED, Ordering::Release);
         self.heap.seal_range(start, len, proc);
         Ok(SealHandle { idx, start, len, proc })
@@ -200,6 +203,33 @@ impl Sealer {
 
     pub fn heap(&self) -> &Arc<Heap> {
         &self.heap
+    }
+
+    /// Failure plane: force-release every seal a dead proc holds on
+    /// this connection (orchestrator sweep, after lease expiry). The
+    /// dead sender will never call `release()`, so its SEALED and
+    /// COMPLETE descriptors would pin the argument pages read-only —
+    /// and pin the heap's seal words — forever. The COMPLETE gate is
+    /// deliberately bypassed: the authority here is the orchestrator
+    /// acting as the dead proc's kernel, not the (gone) sender.
+    /// Returns the number of seals revoked. No cost is charged — the
+    /// dead proc's address space no longer exists, so there are no
+    /// PTEs to flip or TLBs to shoot down; only the shared descriptor
+    /// and page-word state is cleaned.
+    pub fn revoke_proc(&self, dead: ProcId) -> u64 {
+        let mut revoked = 0u64;
+        for slot in 0..self.ring.n {
+            let d = self.ring.desc(slot as u64);
+            let st = d.state.load(Ordering::Acquire);
+            if (st == DESC_SEALED || st == DESC_COMPLETE)
+                && d.proc.load(Ordering::Relaxed) == dead
+            {
+                self.heap.unseal_range(d.start as usize, d.len as usize, dead);
+                d.state.store(DESC_FREE, Ordering::Release);
+                revoked += 1;
+            }
+        }
+        revoked
     }
 }
 
@@ -631,6 +661,36 @@ mod tests {
         pool.flush().unwrap();
         assert_eq!(pool.pending_len(), 0);
         assert_eq!(heap.sealed_count(), 0, "every seal released exactly once");
+    }
+
+    /// Failure plane: a dead proc's seals (SEALED and COMPLETE alike)
+    /// are force-released by `revoke_proc`; survivors' seals are not.
+    #[test]
+    fn revoke_proc_releases_only_the_dead_procs_seals() {
+        let (_p, heap, sealer) = setup();
+        let s1 = Scope::create(&heap, 4096).unwrap();
+        let s2 = Scope::create(&heap, 4096).unwrap();
+        let s3 = Scope::create(&heap, 4096).unwrap();
+        let dead: ProcId = 7;
+        let alive: ProcId = 8;
+        // Dead proc: one still-SEALED, one COMPLETE-but-unreleased.
+        let h1 = sealer.seal(s1.base(), s1.len(), dead).unwrap();
+        let h2 = sealer.seal(s2.base(), s2.len(), dead).unwrap();
+        sealer.complete(h2.idx);
+        // Survivor's in-flight seal must be untouched.
+        let h3 = sealer.seal(s3.base(), s3.len(), alive).unwrap();
+        assert_eq!(heap.sealed_count(), 3);
+
+        assert_eq!(sealer.revoke_proc(dead), 2);
+        assert_eq!(heap.sealed_count(), 1, "only the survivor's seal remains");
+        assert!(!sealer.verify(h1.idx, s1.base(), 64), "revoked seal no longer verifies");
+        assert!(sealer.verify(h3.idx, s3.base(), 64), "survivor still verifies");
+        assert_eq!(sealer.revoke_proc(dead), 0, "idempotent: nothing left to revoke");
+        // Survivor completes its protocol normally.
+        sealer.complete(h3.idx);
+        sealer.release(h3).unwrap();
+        assert_eq!(heap.sealed_count(), 0);
+        let _ = h2;
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Crash-fault recovery suite (ISSUE 9): one test per kill point.
+//!
+//! Each test arms a deterministic, seeded [`FaultPlan`], drives a
+//! small workload until the victim proc dies *without cleanup* at the
+//! worst possible instant, then recovers the way production would:
+//! survivors keep renewing their leases, the victim's lapse, and one
+//! orchestrator sweep (`Orchestrator::tick`) reclaims everything the
+//! corpse stranded. Every test then checks the two halves of the
+//! acceptance bar:
+//!
+//! * **liveness** — pending calls on survivors resolve (as
+//!   `PeerFailed`, never a hang), and a fresh connect + call works;
+//! * **books balance** — orphaned heaps leave the orchestrator's
+//!   registry, stranded ring slots are tombstoned, force-released
+//!   seals zero the seal index, leaked scopes free their pages, and
+//!   the `FAULT_COUNTERS` line it prints satisfies the CI gate
+//!   (`ci/check_fault.sh`): kills ≥ 1 and kills == recoveries.
+//!
+//! The fault injector is process-global state, so every test
+//! serializes on `GATE` (the suite still runs under the default
+//! parallel harness). `PROP_SEED` (CI sweeps four seeds) picks the
+//! crossing depth wherever the kill point allows one.
+
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc, RpcServer};
+use rpcool::daemon::Daemon;
+use rpcool::error::RpcError;
+use rpcool::fault::{self, FaultPlan, KillPoint};
+use rpcool::metrics::CounterSet;
+use rpcool::orchestrator::{
+    FLT_KILLS, FLT_MAGS_FLUSHED, FLT_RECONNECTS, FLT_RECOVERIES, FLT_RETRIES, FLT_SCOPES_FREED,
+    FLT_SEALS_FORCED, FLT_SLOTS_REAPED,
+};
+use rpcool::rack::{ProcEnv, Rack};
+use rpcool::RetryPolicy;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The fault injector (and its crossing budget) is process-global:
+/// kill-point tests must not run concurrently.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Seed source: `PROP_SEED` env var (CI matrix), fixed default.
+fn prop_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED)
+}
+
+/// Disarm on scope exit, even when an assert panics — a leftover
+/// armed plan would fire inside the *next* test's workload.
+struct DisarmGuard;
+impl Drop for DisarmGuard {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+/// librpcool's renewal loop, for the survivors only: the victim's
+/// lease is the one that must lapse.
+fn spawn_renewer(
+    daemon: Arc<Daemon>,
+    procs: Vec<u32>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !stop.load(Ordering::Acquire) {
+            for p in &procs {
+                daemon.renew_all(*p);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    })
+}
+
+/// The machine-readable line `ci/check_fault.sh` gates on.
+fn print_counters(point: &str, f: &CounterSet) {
+    println!(
+        "FAULT_COUNTERS point={point} kills={} slots_reaped={} seals_forced={} \
+         scopes_freed={} mags_flushed={} retries={} reconnects={} recoveries={}",
+        f.get(FLT_KILLS),
+        f.get(FLT_SLOTS_REAPED),
+        f.get(FLT_SEALS_FORCED),
+        f.get(FLT_SCOPES_FREED),
+        f.get(FLT_MAGS_FLUSHED),
+        f.get(FLT_RETRIES),
+        f.get(FLT_RECONNECTS),
+        f.get(FLT_RECOVERIES),
+    );
+}
+
+/// Common scaffolding: a one-shard/8-slot echo channel with a
+/// dedicated listener, one survivor client, one victim client.
+struct CrashRig {
+    rack: Arc<Rack>,
+    server: RpcServer,
+    listener: std::thread::JoinHandle<()>,
+    daemon: Arc<Daemon>,
+    senv: ProcEnv,
+    surv_env: ProcEnv,
+    surv: Connection,
+    /// `live_heaps` with the survivor connected, before the victim.
+    heaps_baseline: usize,
+}
+
+fn crash_rig(name: &str) -> CrashRig {
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .call_timeout(Duration::from_secs(5))
+        .open(&senv, name)
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let listener = server.spawn_listener();
+    let daemon = Arc::clone(server.core().daemon());
+    let surv_env = rack.proc_env(1);
+    let surv = Connection::connect(&surv_env, name).unwrap();
+    let heaps_baseline = rack.orch.live_heaps();
+    CrashRig { rack, server, listener, daemon, senv, surv_env, surv, heaps_baseline }
+}
+
+impl CrashRig {
+    /// Post-recovery liveness: the survivor's connection still serves,
+    /// and a fresh connect is admitted and serves (the victim's
+    /// admission slot came back).
+    fn assert_survivor_liveness(&self, name: &str) {
+        let r = self.surv_env.run(|| self.surv.call_scalar::<u64>(1, &7, CallOpts::new()));
+        assert_eq!(r.unwrap(), 8, "survivor serves after recovery");
+        let fresh_env = self.rack.proc_env(1);
+        let fresh = Connection::connect(&fresh_env, name).expect("fresh connect after recovery");
+        let r = fresh_env.run(|| fresh.call_scalar::<u64>(1, &9, CallOpts::new()));
+        assert_eq!(r.unwrap(), 10, "fresh connection serves after recovery");
+    }
+
+    fn teardown(self) {
+        drop(self.surv);
+        self.server.stop();
+        self.listener.join().unwrap();
+    }
+}
+
+/// Drive one client-side kill: connect a victim, run `workload` under
+/// its identity (it must return the `Killed` error), crash the proc,
+/// let its lease lapse while survivors renew, sweep, and check the
+/// books. Returns the rig for per-point extra assertions.
+fn run_client_kill(
+    name: &str,
+    point: KillPoint,
+    nth: u64,
+    workload: impl FnOnce(&Connection) + Send + 'static,
+) -> (CrashRig, Arc<CounterSet>) {
+    let rig = crash_rig(name);
+    let orch = Arc::clone(&rig.rack.orch);
+    let vic_env = rig.rack.proc_env(1);
+    let vic_proc = vic_env.proc;
+    let vic = Connection::connect(&vic_env, name).unwrap();
+    assert_eq!(orch.live_heaps(), rig.heaps_baseline + 1, "victim heap mapped");
+
+    // Survivors renew from the start (renewal is strict: a lapsed
+    // lease cannot be revived, so the renewer must outpace the TTL
+    // across the whole scenario). The victim is never renewed.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(
+        Arc::clone(&rig.daemon),
+        vec![rig.senv.proc, rig.surv_env.proc],
+        Arc::clone(&stop),
+    );
+
+    fault::arm_with_sink(
+        FaultPlan::new(point).victim(vic_proc).nth(nth),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    std::thread::spawn(move || {
+        vic_env.run(|| {
+            workload(&vic);
+            vic.crash();
+        })
+    })
+    .join()
+    .unwrap();
+    let f = orch.fault_counters();
+    assert_eq!(f.get(FLT_KILLS), 1, "exactly one injected kill fired");
+    assert!(!fault::armed(), "injector auto-disarmed");
+
+    // The victim's lease lapses; one sweep recovers everything.
+    std::thread::sleep(Duration::from_millis(rig.rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+    orch.tick(); // idempotent: no new dead procs, no new recoveries
+
+    assert_eq!(orch.live_heaps(), rig.heaps_baseline, "victim heap reclaimed");
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "one dead proc, one recovery");
+    rig.assert_survivor_liveness(name);
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    (rig, f)
+}
+
+/// Die after a chunk's `publish_quiet` loop, before `flush_publish`:
+/// requests sit fully written with no doorbell. The sweep must
+/// tombstone every stranded slot.
+#[test]
+fn crash_pre_flush_client() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let nth = 1 + prop_seed() % 3; // die on the nth chunk flush
+    let (rig, f) = run_client_kill("crash-preflush", KillPoint::PreFlush, nth, |vic| {
+        let vals: Vec<u64> = (0..64).collect(); // 8 chunks of 8 slots
+        let r = vic.call_scalar_batch::<u64>(1, &vals, CallOpts::new());
+        assert!(matches!(r, Err(RpcError::Killed(_))), "victim sees Killed: {r:?}");
+    });
+    assert!(
+        f.get(FLT_SLOTS_REAPED) >= 1,
+        "published-but-unflushed slots must be tombstoned, got {}",
+        f.get(FLT_SLOTS_REAPED)
+    );
+    print_counters("pre_flush", &f);
+    rig.teardown();
+}
+
+/// Die between batch chunks: earlier chunks fully consumed, later
+/// ones never claimed — recovery has nothing stranded on the ring but
+/// must still reclaim the heap and free the admission slot.
+#[test]
+fn crash_mid_batch_client() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let nth = 1 + prop_seed() % 3;
+    let (rig, f) = run_client_kill("crash-midbatch", KillPoint::MidBatch, nth, |vic| {
+        let vals: Vec<u64> = (0..64).collect();
+        let r = vic.call_scalar_batch::<u64>(1, &vals, CallOpts::new());
+        assert!(matches!(r, Err(RpcError::Killed(_))), "victim sees Killed: {r:?}");
+    });
+    print_counters("mid_batch", &f);
+    rig.teardown();
+}
+
+/// Die holding an installed COMPLETE seal: the page words stay set
+/// until the sweep revokes the dead proc's descriptors.
+#[test]
+fn crash_holding_seal_client() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let nth = 1 + prop_seed() % 3; // die on the nth sealed call
+    let vheap: Arc<Mutex<Option<Arc<rpcool::memory::heap::Heap>>>> =
+        Arc::new(Mutex::new(None));
+    let vh = Arc::clone(&vheap);
+    let (rig, f) = run_client_kill("crash-seal", KillPoint::HoldingSeal, nth, move |vic| {
+        *vh.lock().unwrap() = Some(Arc::clone(vic.heap()));
+        let scope = vic.create_scope(4096).unwrap();
+        let addr = scope.new_val(5u64).unwrap();
+        let mut killed = false;
+        for _ in 0..5 {
+            match vic.invoke(1, (addr, 8), CallOpts::new().sealed(&scope)) {
+                Ok(r) => assert_eq!(r, 6),
+                Err(RpcError::Killed(_)) => {
+                    killed = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected sealed-call error: {e:?}"),
+            }
+        }
+        assert!(killed, "kill must fire within the sealed-call loop");
+        // Died holding the scope too: its Drop never runs.
+        std::mem::forget(scope);
+    });
+    let vheap = vheap.lock().unwrap().take().unwrap();
+    assert_eq!(vheap.sealed_count(), 0, "dead proc's seal force-released");
+    assert!(f.get(FLT_SEALS_FORCED) >= 1, "force-release counted");
+    assert_eq!(f.get(FLT_SCOPES_FREED), 1, "leaked scope swept");
+    print_counters("holding_seal", &f);
+    rig.teardown();
+}
+
+/// Die holding a live scope (before any seal): its pages leak until
+/// the sweep frees them through the scope registry.
+#[test]
+fn crash_holding_scope_client() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let (rig, f) = run_client_kill("crash-scope", KillPoint::HoldingScope, 1, |vic| {
+        let scope = vic.create_scope(4096).unwrap();
+        let addr = scope.new_val(5u64).unwrap();
+        let r = vic.invoke(1, (addr, 8), CallOpts::new().sealed(&scope));
+        assert!(matches!(r, Err(RpcError::Killed(_))), "victim sees Killed: {r:?}");
+        std::mem::forget(scope);
+    });
+    assert_eq!(f.get(FLT_SCOPES_FREED), 1, "leaked scope swept");
+    print_counters("holding_scope", &f);
+    rig.teardown();
+}
+
+/// The *server* dies mid-serving (slot taken, no reply). The
+/// survivor's in-flight batch must resolve as `PeerFailed` within one
+/// lease TTL + sweep — never hang to the call timeout.
+#[test]
+fn crash_mid_serve_server() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rig = crash_rig("crash-midserve");
+    let orch = Arc::clone(&rig.rack.orch);
+    let nth = 1 + prop_seed() % 3; // die on the nth served request
+
+    // Only the *client* renews (the batch connection clones the rig
+    // survivor's env, so one proc id covers both connections): the
+    // server's lease lapses once the kill stops its serving loop.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew =
+        spawn_renewer(Arc::clone(&rig.daemon), vec![rig.surv_env.proc], Arc::clone(&stop));
+
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::MidServe).victim(rig.senv.proc).nth(nth),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    // The survivor's batch is what the dying server was serving; it
+    // must fail over, not hang.
+    let surv_env = rig.surv_env.clone();
+    let surv = Connection::connect(&surv_env, "crash-midserve").unwrap();
+    let pending = std::thread::spawn(move || {
+        surv_env.run(|| {
+            let vals: Vec<u64> = (0..8).collect();
+            let t0 = Instant::now();
+            let r = surv.call_scalar_batch::<u64>(1, &vals, CallOpts::new());
+            (r, t0.elapsed())
+        })
+    });
+
+    let f = orch.fault_counters();
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while f.get(FLT_KILLS) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(f.get(FLT_KILLS), 1, "server kill fired");
+
+    std::thread::sleep(Duration::from_millis(rig.rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+
+    let (r, elapsed) = pending.join().unwrap();
+    assert!(
+        matches!(r, Err(RpcError::PeerFailed(_))),
+        "survivor's pending batch fails over as PeerFailed: {r:?}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "fail-over must beat the 5s call timeout, took {elapsed:?}"
+    );
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "one dead proc (the server)");
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    print_counters("mid_serve", &f);
+    drop(rig.surv);
+    rig.server.stop();
+    rig.listener.join().unwrap();
+}
+
+/// A parked worker-pool thread dies: the pool serves thin until the
+/// sweep's heal hook respawns to the high-water mark.
+#[test]
+fn crash_parked_worker_heals() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .pool_workers(2)
+        .call_timeout(Duration::from_secs(5))
+        .open(&senv, "crash-worker")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    assert!(server.spawn_listeners(1).is_empty(), "pooled channel, no listeners");
+    let daemon = Arc::clone(server.core().daemon());
+    let pool = daemon.worker_pool(2);
+    assert_eq!(pool.worker_count(), 2);
+
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, "crash-worker").unwrap();
+    let r = cenv.run(|| conn.call_scalar::<u64>(1, &1, CallOpts::new()));
+    assert_eq!(r.unwrap(), 2, "pooled serving works before the kill");
+
+    // Both endpoints survive this scenario — keep their leases fresh
+    // so the sweep's only recovery is the pool heal.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew =
+        spawn_renewer(Arc::clone(&daemon), vec![senv.proc, cenv.proc], Arc::clone(&stop));
+
+    let orch = Arc::clone(&rack.orch);
+    let f = orch.fault_counters();
+    // Workers cross the park decision every idle loop; no victim
+    // filter (pool threads carry no proc identity).
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::ParkedWorker).nth(1 + prop_seed() % 3),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while (f.get(FLT_KILLS) == 0 || pool.worker_count() != 1) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(f.get(FLT_KILLS), 1, "a parked worker died");
+    assert_eq!(pool.worker_count(), 1, "pool is serving thin");
+
+    orch.tick();
+    assert_eq!(pool.worker_count(), 2, "heal respawned to the high-water mark");
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "healed worker counts as the recovery");
+
+    let r = cenv.run(|| conn.call_scalar::<u64>(1, &10, CallOpts::new()));
+    assert_eq!(r.unwrap(), 11, "pooled serving works after the heal");
+    print_counters("parked_worker", &f);
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    drop(conn);
+    server.stop();
+}
+
+/// The client-side failure plane end to end: bounded idempotent
+/// retries against a dead peer (counted), then reconnect-with-backoff
+/// to the channel's replacement (counted).
+#[test]
+fn retrying_client_reconnects_after_server_crash() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let server = Rpc::open(&senv, "phoenix").unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let listener = server.spawn_listener();
+    let daemon = Arc::clone(server.core().daemon());
+    let orch = Arc::clone(&rack.orch);
+    let f = orch.fault_counters();
+
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, "phoenix").unwrap();
+    let r = cenv.run(|| conn.call_scalar::<u64>(1, &1, CallOpts::new()));
+    assert_eq!(r.unwrap(), 2);
+
+    // Server crashes: only the client renews; the sweep fails the peer.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(Arc::clone(&daemon), vec![cenv.proc], Arc::clone(&stop));
+    std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+
+    // Bounded idempotent retries against the dead peer: 3 attempts, 2
+    // retries, final error stays PeerFailed.
+    let policy = RetryPolicy::new(3)
+        .idempotent()
+        .seed(prop_seed())
+        .backoff_base(Duration::from_micros(100), Duration::from_millis(2));
+    let r = cenv.run(|| conn.call_scalar::<u64>(1, &5, CallOpts::new().retry(policy)));
+    assert!(matches!(r, Err(RpcError::PeerFailed(_))), "retries exhaust into PeerFailed: {r:?}");
+    assert_eq!(f.get(FLT_RETRIES), 2, "attempts - 1 retries counted");
+
+    // Tear the dead channel fully down so the name frees...
+    listener.join().unwrap();
+    drop(server);
+    drop(conn);
+    // ...then reconnect-with-backoff while a replacement comes up.
+    let renv = rack.proc_env(0);
+    let opener = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(40));
+        let s2 = Rpc::open(&renv, "phoenix").unwrap();
+        s2.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 100));
+        let l2 = s2.spawn_listener();
+        (s2, l2)
+    });
+    let c2env = rack.proc_env(1);
+    let policy = RetryPolicy::new(100)
+        .idempotent()
+        .seed(prop_seed())
+        .backoff_base(Duration::from_millis(2), Duration::from_millis(8));
+    let c2 = Connection::connect_retry(&c2env, "phoenix", policy)
+        .expect("reconnect lands once the replacement opens");
+    assert!(f.get(FLT_RECONNECTS) >= 1, "failed connect attempts counted as reconnects");
+    let (s2, l2) = opener.join().unwrap();
+    let r = c2env.run(|| c2.call_scalar::<u64>(1, &5, CallOpts::new()));
+    assert_eq!(r.unwrap(), 105, "replacement channel serves the reconnected client");
+
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    drop(c2);
+    s2.stop();
+    l2.join().unwrap();
+}
