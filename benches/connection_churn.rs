@@ -24,6 +24,12 @@
 //! * `churn/admission/{reject,shed}` — connects beyond `conn_limit`
 //!   under each policy; extras carry the orchestrator's admission
 //!   counters (admitted/rejected/shed).
+//! * `churn/crash/seeded` — crash churn (ISSUE 10): each round arms a
+//!   seeded kill against a fresh victim connection, lets its batch
+//!   die mid-flight, waits out the lease, and sweeps; the row's
+//!   throughput is crash-to-recovered rounds/s and its extras are the
+//!   orchestrator's full `fault` CounterSet (kills, reaps,
+//!   recoveries, epoch bumps, adoptions, ...).
 //! * `churn/acct/{fixed,elastic_off}` — deterministic single-threaded
 //!   inline-serving accounting rows. The elastic machinery compiled
 //!   in but switched OFF must charge byte-for-byte what the fixed
@@ -237,6 +243,83 @@ fn admission(policy: AdmissionPolicy, limit: usize, attempts: usize) -> (u64, u6
     out
 }
 
+/// Crash churn (ISSUE 10): every round connects a fresh victim, arms
+/// a seeded client-side kill, lets its batch die mid-flight, waits
+/// out the lease, and sweeps — measuring full crash-to-recovered
+/// turnaround while a survivor connection keeps being served. The
+/// orchestrator's `fault` CounterSet is returned for the report's
+/// extras, so the perf trajectory carries the recovery books
+/// (kills/reaps/recoveries/epoch bumps/adoptions) alongside the
+/// latency numbers.
+fn crash_churn(rounds: u64) -> (f64, Histogram, Arc<rpcool::metrics::CounterSet>) {
+    use rpcool::fault::{self, FaultPlan, KillPoint};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let mut c = cfg();
+    c.lease_ttl_ms = 25; // keep the lapse-wait, not the default TTL
+    let rack = Rack::new(c);
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_slots(8)
+        .ring_shards(1)
+        .pool_workers(2)
+        .open(&env, "crashchurn")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let cenv = rack.proc_env(1);
+    let surv = Connection::connect(&cenv, "crashchurn").unwrap();
+
+    // Survivors renew; each round's victim lapses.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = {
+        let stop = Arc::clone(&stop);
+        let daemon = Arc::clone(server.core().daemon());
+        let procs = vec![env.proc, cenv.proc];
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                for p in &procs {
+                    daemon.renew_all(*p);
+                }
+                std::thread::sleep(std::time::Duration::from_millis(8));
+            }
+        })
+    };
+
+    let hist = Histogram::new();
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        let vic_env = rack.proc_env(1);
+        let vic = Connection::connect(&vic_env, "crashchurn").unwrap();
+        let t = Instant::now();
+        fault::arm_with_sink(
+            FaultPlan::seeded(KillPoint::PreFlush, 0xC4A5_4C41 ^ r, 3).victim(vic_env.proc),
+            Arc::downgrade(&rack.orch.fault_counters()),
+        );
+        std::thread::spawn(move || {
+            vic_env.run(|| {
+                let vals: Vec<u64> = (0..64).collect();
+                let _ = vic.call_scalar_batch::<u64>(1, &vals, CallOpts::new());
+                vic.crash();
+            })
+        })
+        .join()
+        .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(rack.cfg.lease_ttl_ms + 10));
+        rack.orch.tick();
+        // Recovered: the survivor must still be served.
+        let ok = cenv.run(|| surv.call_scalar::<u64>(1, &r, CallOpts::new())).unwrap();
+        assert_eq!(ok, r + 1);
+        hist.record(t.elapsed());
+    }
+    let wall = t0.elapsed();
+    fault::disarm();
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    let counters = rack.orch.fault_counters();
+    drop(surv);
+    server.stop();
+    (rounds as f64 / wall.as_secs_f64(), hist, counters)
+}
+
 /// Deterministic single-threaded inline-serving accounting: charged
 /// ns per op on a fixed 4-shard channel. `explicit_off` routes
 /// through a builder that names the elastic knob (set to off) — the
@@ -276,6 +359,7 @@ fn main() {
     let storm_rounds: u64 = if quick { 128 } else { 1024 };
     let elastic_ops: u64 = if quick { 2_000 } else { 20_000 };
     let acct_ops: u64 = if quick { 2_000 } else { 20_000 };
+    let crash_rounds: u64 = if quick { 2 } else { 6 };
 
     let mut t = Table::new(&["Scenario", "ops/s", "p50", "p99", "p99.9", "threads"]);
     let mut rep = BenchReport::new("connection_churn");
@@ -396,6 +480,25 @@ fn main() {
         ]);
         rep.row(label, 0.0, 0.0, 0.0, 0.0);
         rep.extra("charged_ns_per_op", ns);
+    }
+
+    // Crash churn: seeded kills against fresh victims, lease lapse,
+    // sweep, survivor liveness — the fault CounterSet rides along as
+    // extras so the perf trajectory carries the recovery books.
+    let (thr, hist, fc) = crash_churn(crash_rounds);
+    t.row(&[
+        "churn/crash/seeded".into(),
+        format!("{thr:.1}"),
+        Histogram::fmt_ns(hist.median_ns()),
+        Histogram::fmt_ns(hist.p99_ns()),
+        Histogram::fmt_ns(hist.p999_ns()),
+        format!("{} kills", fc.get(rpcool::orchestrator::FLT_KILLS)),
+    ]);
+    // Crash rounds sit on a deliberate lease-lapse wait, so the 2ms
+    // call SLO does not apply to this row's latency columns.
+    rep.row("churn/crash/seeded", 0.0, 0.0, 0.0, thr);
+    for (name, v) in fc.snapshot() {
+        rep.extra(name, v as f64);
     }
 
     t.print("Connection churn — pooled capacity plane vs dedicated listeners");

@@ -6,13 +6,16 @@
 # Each kill-point test prints one machine-readable line:
 #
 #   FAULT_COUNTERS point=<name> kills=N slots_reaped=N seals_forced=N \
-#       scopes_freed=N mags_flushed=N retries=N reconnects=N recoveries=N
+#       scopes_freed=N mags_flushed=N retries=N reconnects=N recoveries=N \
+#       epoch_bumps=N pages_reclaimed=N adoptions=N
 #
 # The gate asserts the failure plane's books balance on every line:
 #
-#  1. Coverage: all six kill points must report (pre_flush, mid_batch,
-#     holding_seal, holding_scope, mid_serve, parked_worker) — a
-#     silently skipped scenario would read as "covered" otherwise.
+#  1. Coverage: all nine kill points must report (pre_flush, mid_batch,
+#     holding_seal, holding_scope, mid_serve, parked_worker,
+#     mid_respond, post_respond, dsm_owner) plus the standby_adoption
+#     scenario — a silently skipped scenario would read as "covered"
+#     otherwise.
 #
 #  2. Counter balance, per line: kills >= 1 (the injected fault
 #     actually fired at this seed) and kills == recoveries (every
@@ -22,7 +25,11 @@
 #  3. Point-specific reclamation: pre_flush must reap stranded ring
 #     slots (the victim dies with a full published-but-unflushed
 #     chunk); holding_seal must force-release seals AND sweep the
-#     leaked scope; holding_scope must sweep the leaked scope.
+#     leaked scope; holding_scope must sweep the leaked scope;
+#     dsm_owner must reclaim corpse-owned DSM pages with exactly one
+#     owner-epoch bump per page (epoch_bumps == pages_reclaimed >= 1);
+#     standby_adoption must resurrect the channel (adoptions >= 1)
+#     and answer the stranded slots (slots_reaped >= 1).
 #
 # Usage: check_fault.sh <crash-stress-log>
 set -euo pipefail
@@ -35,6 +42,8 @@ import sys
 EXPECTED = {
     "pre_flush", "mid_batch", "holding_seal",
     "holding_scope", "mid_serve", "parked_worker",
+    "mid_respond", "post_respond", "dsm_owner",
+    "standby_adoption",
 }
 
 lines = []
@@ -79,6 +88,23 @@ for r in lines:
     if p == "holding_scope" and r["scopes_freed"] < 1:
         print(f"::error::holding_scope: leaked scope was not swept")
         ok = False
+    if p == "dsm_owner":
+        bumps = r.get("epoch_bumps", 0)
+        pages = r.get("pages_reclaimed", 0)
+        if bumps < 1 or bumps != pages:
+            print(f"::error::dsm_owner: epoch_bumps={bumps} "
+                  f"pages_reclaimed={pages} — every corpse-owned DSM page "
+                  f"must be reclaimed with exactly one epoch bump")
+            ok = False
+    if p == "standby_adoption":
+        if r.get("adoptions", 0) < 1:
+            print(f"::error::standby_adoption: no adoption counted — the "
+                  f"channel was torn down instead of resurrected")
+            ok = False
+        if r.get("slots_reaped", 0) < 1:
+            print(f"::error::standby_adoption: the adoption reap answered "
+                  f"no stranded slots")
+            ok = False
 
 if ok:
     print(f"fault counter balance ok over {len(lines)} kill-point scenarios: "

@@ -135,10 +135,29 @@ fn directory_insert(rack_id: u64, name: &str, core: &Arc<ServerCore>) {
         .insert((rack_id, name.to_string()), Arc::downgrade(core));
 }
 
-fn directory_remove(rack_id: u64, name: &str) {
+/// Remove a directory entry only if it still points at `core`: a
+/// stale handle to a dead (or resurrected) channel dropped after a
+/// new owner re-registered the same name must not evict the new
+/// owner's entry (the stale-death-latching bug).
+fn directory_remove_if(rack_id: u64, name: &str, core: &Arc<ServerCore>) {
     if let Some(d) = DIRECTORY.lock().unwrap().as_mut() {
-        d.remove(&(rack_id, name.to_string()));
+        let key = (rack_id, name.to_string());
+        if d.get(&key).map_or(false, |w| w.as_ptr() == Arc::as_ptr(core)) {
+            d.remove(&key);
+        }
     }
+}
+
+/// Channels the recovery sweep resurrected into a standby proc, parked
+/// until the standby claims them via [`RpcServer::take_adopted`].
+static ADOPTED: Mutex<Option<HashMap<(u64, String), Arc<ServerCore>>>> = Mutex::new(None);
+
+fn adopted_insert(rack_id: u64, name: &str, core: &Arc<ServerCore>) {
+    ADOPTED
+        .lock()
+        .unwrap()
+        .get_or_insert_with(HashMap::new)
+        .insert((rack_id, name.to_string()), Arc::clone(core));
 }
 
 fn directory_get(rack_id: u64, name: &str) -> Option<Arc<ServerCore>> {
@@ -282,6 +301,14 @@ pub struct ChannelOpts {
     /// Live-connection ceiling that arms the admission policy
     /// (0 = unlimited, the default).
     pub conn_limit: usize,
+    /// Standby process for crash resurrection: when the channel's
+    /// owner proc loses its lease, the recovery sweep adopts the
+    /// channel into this proc (`Daemon::adopt_channel`) — re-opening
+    /// the same shared heap, re-registering the handler set, reaping
+    /// stranded slots — instead of tearing it down. `None` (the
+    /// default) keeps teardown-on-death. The standby must live on a
+    /// host in the owner's pod (it maps the same heaps directly).
+    pub standby: Option<ProcEnv>,
 }
 
 impl ChannelOpts {
@@ -302,6 +329,7 @@ impl ChannelOpts {
             elastic_shards: cfg.elastic_shards,
             admission: cfg.admission,
             conn_limit: cfg.conn_limit,
+            standby: None,
         }
     }
 }
@@ -445,6 +473,16 @@ impl ChannelBuilder {
     /// counters. One global injector: the last armed plan wins.
     pub fn fault_plan(mut self, plan: crate::fault::FaultPlan) -> ChannelBuilder {
         self.fault = Some(plan);
+        self
+    }
+
+    /// Register a standby proc for crash resurrection (see
+    /// [`ChannelOpts::standby`]): if the owner dies, the sweep adopts
+    /// the channel into `env` instead of tearing it down, and
+    /// in-flight idempotent calls complete against the resurrected
+    /// endpoint. The standby must be on a host in the owner's pod.
+    pub fn standby(mut self, env: &ProcEnv) -> ChannelBuilder {
+        self.opts.standby = Some(env.clone());
         self
     }
 
@@ -949,6 +987,13 @@ pub struct ServerCore {
     accepting: Mutex<Accepting>,
     accept_cv: Condvar,
     stop: AtomicBool,
+    /// Set (together with `stop`) when a fault-injection kill point
+    /// fired on one of this core's serving threads. A killed proc
+    /// died *without cleanup*: the in-process handles that remain must
+    /// not run the clean-teardown path (`Drop for RpcServer`) a real
+    /// crashed process could never run — the recovery sweep (and a
+    /// registered standby) owns the pieces instead.
+    killed: AtomicBool,
     next_conn_id: AtomicU64,
     daemon: Arc<Daemon>,
     /// The shared channel-wide heap, if `opts.shared_heap`.
@@ -996,6 +1041,7 @@ impl RpcServer {
             accepting: Mutex::new(Accepting { queue: Vec::new() }),
             accept_cv: Condvar::new(),
             stop: AtomicBool::new(false),
+            killed: AtomicBool::new(false),
             next_conn_id: AtomicU64::new(1),
             daemon,
             shared_heap: Mutex::new(None),
@@ -1021,32 +1067,22 @@ impl RpcServer {
         directory_insert(rack.id, name, &core);
 
         // Failure plane: when the lease sweep declares a proc dead,
-        // this channel reaps whatever that proc stranded. Weak so a
-        // closed channel prunes itself from the hook list.
-        let weak = Arc::downgrade(&core);
-        let fault = rack.orch.fault_counters();
-        rack.orch.on_proc_death(Box::new(move |dead| {
-            let Some(core) = weak.upgrade() else { return false };
-            if dead == core.env.proc {
-                // The channel owner itself died: stop the core,
-                // withdraw its worker-pool slots, and fail every
-                // surviving client promptly (their in-flight waits
-                // resolve with PeerFailed, not a full timeout).
-                core.stop.store(true, Ordering::Release);
-                core.accept_cv.notify_all();
-                if let Some(p) = &core.pool {
-                    p.forget_core(&core);
-                }
-                for c in core.conns.lock().unwrap().iter() {
-                    c.fail_peer();
-                }
-                core.bell.ring();
-            } else {
-                core.reap_dead_client(dead, &fault);
-            }
-            true
-        }));
+        // this channel reaps whatever that proc stranded.
+        register_death_hook(&core);
         Ok(RpcServer { core })
+    }
+
+    /// Claim the handle of a channel the recovery sweep resurrected
+    /// into this proc (a standby registered via
+    /// [`ChannelBuilder::standby`]). Adoption happens inside the
+    /// sweep, which has no one to hand the new server to — the handle
+    /// parks in a process-global registry until the standby claims
+    /// it. Returns `None` if no adoption happened (or it was already
+    /// claimed).
+    pub fn take_adopted(env: &ProcEnv, name: &str) -> Option<RpcServer> {
+        let core =
+            ADOPTED.lock().unwrap().as_mut()?.remove(&(env.rack.id, name.to_string()))?;
+        Some(RpcServer { core })
     }
 
     /// Register a handler under a function id (the paper's `rpc.add`).
@@ -1173,27 +1209,17 @@ impl RpcServer {
                     let mut took = false;
                     for k in 0..nsh {
                         let si = (worker + k) % nsh;
-                        let sh = &conn.shards[si];
                         // Drain up to k requests from this shard with
-                        // quiet replies...
-                        let mut drained = 0usize;
-                        while drained < budget {
-                            match sh.ring.take_request() {
-                                Some(slot) => {
-                                    self.core.handle_slot_quiet(conn, si, slot);
-                                    drained += 1;
-                                }
-                                None => break,
-                            }
-                        }
-                        // ...then one coalesced doorbell for the whole
-                        // sweep. This MUST run before the worker moves
-                        // on (and certainly before it parks): every
-                        // quiet respond is covered by a flush on its
-                        // own shard, which is the no-lost-wakeup
+                        // quiet replies, then one coalesced doorbell
+                        // for the whole sweep (`serve_shard`, shared
+                        // with the worker pool — it carries the
+                        // response-side kill points). The flush MUST
+                        // run before the worker moves on (and
+                        // certainly before it parks): every quiet
+                        // respond is covered by a flush on its own
+                        // shard, which is the no-lost-wakeup
                         // invariant the waiters rely on.
-                        if drained > 0 {
-                            sh.ring.flush_respond();
+                        if self.core.serve_shard(conn, si, budget) > 0 {
                             took = true;
                         }
                     }
@@ -1201,6 +1227,9 @@ impl RpcServer {
                         break;
                     }
                     progress = true;
+                    if self.core.stop.load(Ordering::Acquire) {
+                        break;
+                    }
                 }
             }
             if progress {
@@ -1315,6 +1344,15 @@ impl RpcServer {
 
 impl Drop for RpcServer {
     fn drop(&mut self) {
+        // A core killed by fault injection died *without cleanup*:
+        // its surviving in-process handles must not run the clean
+        // teardown a real crashed process could never run — the
+        // recovery sweep (and a registered standby adopter) owns its
+        // pieces. Unregistering/closing here would clobber the
+        // resurrected channel's state (stale-death latching).
+        if self.core.killed.load(Ordering::Acquire) {
+            return;
+        }
         // Last handle (beyond any listener threads' core refs) tears
         // the channel down: 38.4ms-class destroy in Table 1b.
         self.stop();
@@ -1322,13 +1360,215 @@ impl Drop for RpcServer {
             let rack = &self.core.env.rack;
             let charger = &rack.pool.charger;
             charger.charge_ns(charger.cost.channel_destroy_us * 1000);
-            rack.orch.unregister_channel(&self.core.name);
-            directory_remove(rack.id, &self.core.name);
+            // Both removals are owner/identity-guarded: a stale
+            // handle dropped after another proc re-registered the
+            // same name must not evict the new registration.
+            rack.orch.unregister_channel_owned(&self.core.name, self.core.env.proc);
+            directory_remove_if(rack.id, &self.core.name, &self.core);
             for c in self.core.conns.lock().unwrap().iter() {
                 c.closed.store(true, Ordering::Release);
             }
         }
     }
+}
+
+/// Failure plane: register this core's recovery obligation with the
+/// lease sweep. For a dead *client*, the channel reaps whatever the
+/// client stranded. For the dead *owner*, either a registered standby
+/// adopts the channel (resurrection) or every surviving client is
+/// failed promptly. Weak so a closed channel prunes itself from the
+/// hook list; a successfully adopted channel prunes its old core's
+/// hook too (the resurrected core registered its own).
+fn register_death_hook(core: &Arc<ServerCore>) {
+    let rack = &core.env.rack;
+    let weak = Arc::downgrade(core);
+    let fault = rack.orch.fault_counters();
+    rack.orch.on_proc_death(Box::new(move |dead| {
+        let Some(core) = weak.upgrade() else { return false };
+        if dead == core.env.proc {
+            // The channel owner itself died. A registered standby
+            // resurrects the channel instead of tearing it down...
+            if core.opts.standby.is_some() {
+                match adopt_channel(&core, &fault) {
+                    Ok(_) => return false,
+                    Err(e) => {
+                        eprintln!(
+                            "standby adoption of '{}' failed ({e}); tearing down",
+                            core.name
+                        );
+                    }
+                }
+            }
+            // ...otherwise (or if adoption failed): stop the core,
+            // withdraw its worker-pool slots, fail every surviving
+            // client promptly (their in-flight waits resolve with
+            // PeerFailed, not a full timeout), and reclaim any DSM
+            // pages the dead owner's node still holds so survivors
+            // sharing the heap never fault against a corpse.
+            core.stop.store(true, Ordering::Release);
+            core.accept_cv.notify_all();
+            if let Some(p) = &core.pool {
+                p.forget_core(&core);
+            }
+            for c in core.conns.lock().unwrap().iter() {
+                c.fail_peer();
+                if let Some(dsm) = &c.dsm {
+                    let (bumps, pages) = dsm.reclaim_dead(c.server_node, c.client_node);
+                    if bumps > 0 {
+                        fault.add(crate::orchestrator::FLT_EPOCH_BUMPS, bumps);
+                        fault.add(crate::orchestrator::FLT_PAGES_RECLAIMED, pages);
+                    }
+                }
+            }
+            core.bell.ring();
+        } else {
+            core.reap_dead_client(dead, &fault);
+        }
+        true
+    }));
+}
+
+/// Crash resurrection (the paper's CoolDB restart story): adopt a
+/// dead owner's channel into its registered standby proc. The standby
+/// re-opens the same shared heap (mapping it under its own lease),
+/// inherits the handler table (modeling the standby re-registering
+/// the same handler set), drains every surviving connection's rings
+/// via [`RpcRing::reap_server_death`] — stranded requests answer
+/// `ST_CLOSED` so live idempotent callers retry, stranded replies get
+/// the doorbell ring the corpse never sent — and starts serving again
+/// on the *same* channel doorbell, so existing clients' publishes
+/// wake the resurrected listener with no client-side rebinding.
+/// Driven by the sweep's death hook; [`Daemon::adopt_channel`] is the
+/// public entry.
+pub(crate) fn adopt_channel(
+    old: &Arc<ServerCore>,
+    fault: &crate::metrics::CounterSet,
+) -> Result<Arc<ServerCore>> {
+    use crate::orchestrator::{FLT_ADOPTIONS, FLT_SLOTS_REAPED};
+    let standby = old
+        .opts
+        .standby
+        .clone()
+        .ok_or_else(|| RpcError::Config("channel has no registered standby".into()))?;
+    let rack = &old.env.rack;
+    // The standby maps the owner's heaps directly, so it must live in
+    // the owner's pod (cross-pod standby would need a DSM remap of
+    // every surviving mapping — not modeled).
+    if rack.pod_of(standby.host) != rack.pod_of(old.env.host) {
+        return Err(RpcError::Config(format!(
+            "standby host {} is outside the dead owner's pod",
+            standby.host
+        )));
+    }
+    // The corpse's core stops serving for good.
+    old.stop.store(true, Ordering::Release);
+    old.accept_cv.notify_all();
+    if let Some(p) = &old.pool {
+        p.forget_core(old);
+    }
+    // Adoption models the standby re-opening the channel.
+    let charger = &rack.pool.charger;
+    charger.charge_ns(charger.cost.channel_create_us * 1000);
+    let daemon = Daemon::new(standby.host, Arc::clone(&rack.orch));
+    let wpool = if old.opts.pool_workers > 0 {
+        Some(daemon.worker_pool(old.opts.pool_workers))
+    } else {
+        None
+    };
+    // One resurrection per registration: the adopted core comes up
+    // with no standby of its own unless re-armed by the operator.
+    let mut opts = old.opts.clone();
+    opts.standby = None;
+    let shared = old.shared_heap.lock().unwrap().clone();
+    let handlers = std::mem::take(&mut *old.handlers.write().unwrap());
+    let conns: Vec<Arc<ConnShared>> = std::mem::take(&mut *old.conns.lock().unwrap());
+    let queued: Vec<Arc<ConnShared>> =
+        std::mem::take(&mut old.accepting.lock().unwrap().queue);
+    let core = Arc::new(ServerCore {
+        name: old.name.clone(),
+        env: standby.clone(),
+        opts,
+        handlers: RwLock::new(handlers),
+        conns: Mutex::new(Vec::new()),
+        accepting: Mutex::new(Accepting { queue: queued }),
+        accept_cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+        killed: AtomicBool::new(false),
+        next_conn_id: AtomicU64::new(old.next_conn_id.load(Ordering::Relaxed)),
+        daemon,
+        shared_heap: Mutex::new(shared.clone()),
+        served: AtomicU64::new(old.served.load(Ordering::Relaxed)),
+        // Existing clients' publishes ring the *old* channel bell
+        // (dedicated-mode shards hold clones of it): the resurrected
+        // listener must wake on the same bell, so it is inherited,
+        // not replaced.
+        bell: Arc::clone(&old.bell),
+        pool: wpool,
+    });
+    // Re-register under the standby's identity. Sweep phase 1 removed
+    // the dead owner's registration before any hook ran, so the name
+    // is normally free; losing it to a faster re-opener aborts the
+    // adoption (the re-opener owns the name now).
+    rack.orch.register_channel(ChannelReg {
+        name: core.name.clone(),
+        owner_proc: standby.proc,
+        owner_uid: standby.uid,
+        acl: core.opts.acl.clone().unwrap_or_else(|| Acl::open(standby.uid)),
+        heap_id: shared.as_ref().map_or(0, |h| h.id),
+    })?;
+    directory_insert(rack.id, &core.name, &core);
+    // Map the surviving heaps for the standby: it acquires its own
+    // leases, so the resurrection stays up only while the standby
+    // renews — exactly a first-class participant.
+    let spod = rack.pod_of(standby.host);
+    if let Some(h) = &shared {
+        core.daemon.map_heap_from(h.id, standby.proc, spod)?;
+    }
+    // Adopt every surviving connection, reaping the dead server's
+    // half of each ring *before* any resurrected worker serves:
+    // stranded PROCESSING slots answer ST_CLOSED (live callers retry)
+    // and never-flushed replies finally get their doorbell ring.
+    let mut reaped = 0u64;
+    for c in &conns {
+        if !core.opts.shared_heap {
+            core.daemon.map_heap_from(c.heap.id, standby.proc, spod)?;
+        }
+        for sh in &c.shards {
+            reaped += sh.ring.reap_server_death();
+        }
+        core.conns.lock().unwrap().push(Arc::clone(c));
+    }
+    if reaped > 0 {
+        fault.add(FLT_SLOTS_REAPED, reaped);
+    }
+    // Serve again: pooled channels re-enter the waiter tree with
+    // every adopted connection re-attached; dedicated channels get
+    // one resurrected listener thread under the standby's identity.
+    if let Some(p) = &core.pool {
+        p.register_accept(&core);
+        let adopted: Vec<Arc<ConnShared>> = core.conns.lock().unwrap().clone();
+        for c in adopted {
+            p.adopt(&core, c);
+        }
+        p.ensure_workers(core.opts.pool_workers.max(1));
+    } else {
+        let s = RpcServer { core: Arc::clone(&core) };
+        std::thread::spawn(move || s.listen());
+    }
+    register_death_hook(&core);
+    adopted_insert(rack.id, &core.name, &core);
+    fault.add(FLT_ADOPTIONS, 1);
+    core.bell.ring();
+    Ok(core)
+}
+
+/// [`adopt_channel`] wrapped in a server handle — the public entry,
+/// via [`Daemon::adopt_channel`].
+pub(crate) fn adopt_channel_into(
+    old: &Arc<ServerCore>,
+    fault: &crate::metrics::CounterSet,
+) -> Result<RpcServer> {
+    adopt_channel(old, fault).map(|core| RpcServer { core })
 }
 
 impl ServerCore {
@@ -1367,8 +1607,32 @@ impl ServerCore {
                 None => break,
             }
         }
+        if self.killed.load(Ordering::Acquire) {
+            // A kill point fired inside the drain (mid_serve /
+            // dsm_owner): the proc is dead mid-sweep, so even earlier
+            // quiet replies of this sweep go unflushed — exactly the
+            // stranding the recovery path undoes.
+            return drained;
+        }
         if drained > 0 {
-            sh.ring.flush_respond();
+            // Kill point: die between the sweep's quiet responds and
+            // the coalesced flush — every reply of the sweep is
+            // written (state-wise complete) but the doorbell never
+            // rings, so the waiters sleep through their own answers
+            // until recovery wakes them.
+            if crate::fault::should_die(crate::fault::KillPoint::MidRespond) {
+                self.stop.store(true, Ordering::Release);
+                self.killed.store(true, Ordering::Release);
+                crate::memory::heap::park_thread_magazines(self.env.proc);
+                return drained;
+            }
+            // `post_respond` rides inside the probed flush: the
+            // signal cost is charged, the bell never rings.
+            if sh.ring.flush_respond_probed() {
+                self.stop.store(true, Ordering::Release);
+                self.killed.store(true, Ordering::Release);
+                crate::memory::heap::park_thread_magazines(self.env.proc);
+            }
         }
         drained
     }
@@ -1419,7 +1683,9 @@ impl ServerCore {
     /// per-connection heap is released so the orphaned heap can be
     /// reclaimed, and the dead connections leave the serving list.
     fn reap_dead_client(&self, dead: u32, fault: &crate::metrics::CounterSet) {
-        use crate::orchestrator::{FLT_SEALS_FORCED, FLT_SLOTS_REAPED};
+        use crate::orchestrator::{
+            FLT_EPOCH_BUMPS, FLT_PAGES_RECLAIMED, FLT_SEALS_FORCED, FLT_SLOTS_REAPED,
+        };
         let victims: Vec<Arc<ConnShared>> = {
             let mut conns = self.conns.lock().unwrap();
             let v = conns.iter().filter(|c| c.client_proc == dead).cloned().collect();
@@ -1440,6 +1706,18 @@ impl ServerCore {
             let seals = c.sealer.revoke_proc(dead);
             if seals > 0 {
                 fault.add(FLT_SEALS_FORCED, seals);
+            }
+            // DSM connections: every page the dead client's node
+            // still owns is reclaimed to the surviving server's node
+            // with an epoch bump, so no future accessor faults
+            // against a corpse (and the corpse's own late transfer
+            // CAS, if any, can never land).
+            if let Some(dsm) = &c.dsm {
+                let (bumps, pages) = dsm.reclaim_dead(c.client_node, c.server_node);
+                if bumps > 0 {
+                    fault.add(FLT_EPOCH_BUMPS, bumps);
+                    fault.add(FLT_PAGES_RECLAIMED, pages);
+                }
             }
             // Mirror Connection::drop's server-side unmap: with the
             // client gone for good, holding our lease would pin the
@@ -1510,6 +1788,7 @@ impl ServerCore {
         // crash would leave them.
         if crate::fault::should_die(crate::fault::KillPoint::MidServe) {
             self.stop.store(true, Ordering::Release);
+            self.killed.store(true, Ordering::Release);
             crate::memory::heap::park_thread_magazines(self.env.proc);
             return;
         }
@@ -1543,7 +1822,17 @@ impl ServerCore {
         if let Some(dsm) = &conn.dsm {
             if arg != 0 {
                 if let Err(e) = dsm.ensure_owned(conn.server_node, arg, arg_len.max(1)) {
-                    let _ = e;
+                    if matches!(e, RpcError::Killed(_)) {
+                        // Kill point `dsm_owner` fired inside the
+                        // transfer: the serving proc died *holding*
+                        // the page it just took (the owner word names
+                        // a corpse) and mid-slot (PROCESSING, no
+                        // reply) — the sweep's epoch reclamation and
+                        // ring reap own both pieces.
+                        self.stop.store(true, Ordering::Release);
+                        self.killed.store(true, Ordering::Release);
+                        return;
+                    }
                     reply(ST_HANDLER_ERROR, 0);
                     return;
                 }

@@ -188,8 +188,10 @@ impl WorkerPool {
     /// shard's request bell at its shard bit, then force-mark all
     /// shards ready — requests published before the bells were
     /// attached never rang the tree, and the kick guarantees the
-    /// first sweep finds them anyway.
-    fn adopt(&self, core: &Arc<ServerCore>, conn: Arc<ConnShared>) {
+    /// first sweep finds them anyway. `pub(crate)`: channel
+    /// resurrection re-attaches a dead owner's surviving connections
+    /// to the standby's core through this same path.
+    pub(crate) fn adopt(&self, core: &Arc<ServerCore>, conn: Arc<ConnShared>) {
         let slot = self.inner.tree.register();
         for (i, sh) in conn.shards.iter().enumerate().take(64) {
             self.inner.tree.attach(sh.ring.req_bell(), &slot, i as u32);

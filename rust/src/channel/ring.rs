@@ -468,6 +468,22 @@ impl RpcRing {
         self.resp_bell.ring();
     }
 
+    /// [`RpcRing::flush_respond`] carrying the `post_respond` kill
+    /// point: the sweep's replies are all written (state-wise the
+    /// responses exist) and the signal cost is charged, but the proc
+    /// dies on the doorbell threshold — the bell never rings, so every
+    /// parked waiter sleeps through its own completed reply until the
+    /// recovery sweep wakes it. Returns `true` when the kill fired
+    /// (the serving layer must then stop, as a dead proc would).
+    pub fn flush_respond_probed(&self) -> bool {
+        self.charger.charge_ns(self.signal_ns);
+        if crate::fault::should_die(crate::fault::KillPoint::PostRespond) {
+            return true;
+        }
+        self.resp_bell.ring();
+        false
+    }
+
     /// Server side: error response carrying remote detail. The slot's
     /// `arg`/`arg_len` words are dead on a response, so they carry the
     /// auxiliary fault data (e.g. the sandbox window bounds) back to
@@ -615,6 +631,65 @@ impl RpcRing {
                 _ => {}
             }
         }
+        reaped
+    }
+
+    /// Failure plane, mirror image of [`RpcRing::reap_dead`]: the
+    /// *server* proc died and the client is alive — clear the dead
+    /// server's half of every in-flight call so the surviving client's
+    /// waiters resolve and the slots a standby adopter inherits are
+    /// clean. Run by the adoption/teardown path once the owner's lease
+    /// has expired, before any resurrected listener starts; the only
+    /// concurrent actors are live clients, and every arm arbitrates
+    /// against them through the existing state CASes:
+    ///
+    /// * `REQUEST` — the dead server never picked it up. CAS to
+    ///   PROCESSING (exactly the serving loop's `take_request` claim;
+    ///   losing the CAS means a resurrected worker already has it) and
+    ///   self-respond `ST_CLOSED` *without* a tombstone: the live
+    ///   client consumes it, maps `ST_CLOSED` to `ConnectionClosed`,
+    ///   and an idempotent retry republishes against the adopted
+    ///   endpoint.
+    /// * `PROCESSING` — the corpse died mid-serve (`mid_serve`,
+    ///   `dsm_owner`); no handler will ever respond. Self-respond
+    ///   `ST_CLOSED` the same way.
+    /// * `RESPONSE` — the reply is complete (possibly written by a
+    ///   `mid_respond`/`post_respond` victim that died before ringing)
+    ///   — leave it; the flush below delivers the wakeup the corpse
+    ///   never sent.
+    /// * `CLAIMED` — a live client owns the ticket and will publish;
+    ///   leave it alone.
+    ///
+    /// Always flushes the response doorbell once at the end, covering
+    /// both the self-responses and any stranded quiet replies. Returns
+    /// the number of slots answered on the corpse's behalf.
+    pub fn reap_server_death(&self) -> u64 {
+        let mut reaped = 0u64;
+        for i in 0..self.n {
+            let s = self.slot(i);
+            match s.state.load(Ordering::Acquire) {
+                SLOT_REQUEST => {
+                    if s.state
+                        .compare_exchange(
+                            SLOT_REQUEST,
+                            SLOT_PROCESSING,
+                            Ordering::AcqRel,
+                            Ordering::Relaxed,
+                        )
+                        .is_ok()
+                    {
+                        self.respond_quiet(i, ST_CLOSED, 0);
+                        reaped += 1;
+                    }
+                }
+                SLOT_PROCESSING => {
+                    self.respond_quiet(i, ST_CLOSED, 0);
+                    reaped += 1;
+                }
+                _ => {}
+            }
+        }
+        self.flush_respond();
         reaped
     }
 }

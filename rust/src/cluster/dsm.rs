@@ -7,10 +7,20 @@
 //! (unmapping it there), and remaps it locally. Originally a two-node
 //! client/server sketch, this is now generalized to an arbitrary set
 //! of node ids — in practice the pod ids of the peers sharing the
-//! heap — while keeping the same single-word-per-page protocol: an
-//! atomic `swap` on the owner word is the entire transfer, so each
-//! ownership transition is observed by exactly one racer no matter
-//! how many writers contend.
+//! heap — while keeping a single-word-per-page protocol.
+//!
+//! The owner word is a packed `(epoch << 32) | owner` u64. A live
+//! transfer CASes the owner field while *preserving* the epoch, so
+//! each ownership transition is still observed by exactly one racer
+//! no matter how many writers contend. The epoch exists for crash
+//! recovery: when the orchestrator sweep declares a node dead, it
+//! reclaims every page the corpse owns by CASing in a surviving heir
+//! *and* advancing the epoch. A late transfer CAS issued by the
+//! corpse before it died carries the old-epoch word as its compare
+//! value — the epoch advance makes that word stale, the CAS fails,
+//! and the corpse (being dead) never retries; if the corpse's CAS
+//! landed first, the sweep observes the corpse as owner and reclaims
+//! anyway. Either order, the sweep wins exactly once.
 //!
 //! The simulation shares physical memory (it's one process), so a
 //! "transfer" is bookkeeping + the calibrated RDMA wire/fault costs —
@@ -23,7 +33,7 @@ use crate::error::{Result, RpcError};
 use crate::memory::heap::Heap;
 use crate::memory::pool::Charger;
 use crate::metrics::CounterSet;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// A DSM node id. In cross-pod connections this is the pod id of the
@@ -36,18 +46,44 @@ pub type NodeId = u32;
 pub const NODE_CLIENT: NodeId = 0;
 pub const NODE_SERVER: NodeId = 1;
 
-/// Names of the exported DSM counters, in [`CounterSet`] order.
-pub const DSM_COUNTERS: [&str; 3] = ["dsm_faults", "dsm_pages_transferred", "dsm_charged_ns"];
+/// Names of the exported DSM counters, in [`CounterSet`] order. The
+/// recovery counters are appended after the transfer trio so existing
+/// snapshot indices stay stable.
+pub const DSM_COUNTERS: [&str; 5] = [
+    "dsm_faults",
+    "dsm_pages_transferred",
+    "dsm_charged_ns",
+    "dsm_epoch_bumps",
+    "dsm_pages_reclaimed",
+];
 const C_FAULTS: usize = 0;
 const C_PAGES: usize = 1;
 const C_CHARGED_NS: usize = 2;
+const C_EPOCH_BUMPS: usize = 3;
+const C_RECLAIMED: usize = 4;
+
+/// Pack an owner node id and a recovery epoch into one atomic word.
+#[inline]
+fn pack(owner: NodeId, epoch: u32) -> u64 {
+    ((epoch as u64) << 32) | owner as u64
+}
+
+#[inline]
+fn word_owner(w: u64) -> NodeId {
+    w as u32
+}
+
+#[inline]
+fn word_epoch(w: u64) -> u32 {
+    (w >> 32) as u32
+}
 
 /// Ownership + cost state for one DSM-backed heap.
 pub struct DsmState {
     heap_base: usize,
     page: usize,
-    /// Per-page owner node id.
-    owner: Vec<AtomicU32>,
+    /// Per-page `(epoch << 32) | owner` word.
+    owner: Vec<AtomicU64>,
     /// Sorted, deduplicated set of valid node ids.
     nodes: Vec<NodeId>,
     charger: Arc<Charger>,
@@ -78,7 +114,7 @@ impl DsmState {
         Arc::new(DsmState {
             heap_base: heap.base(),
             page: page_bytes,
-            owner: (0..npages).map(|_| AtomicU32::new(initial)).collect(),
+            owner: (0..npages).map(|_| AtomicU64::new(pack(initial, 0))).collect(),
             nodes: set,
             charger: Arc::clone(&heap.pool().charger),
             counters: CounterSet::new(&DSM_COUNTERS),
@@ -93,7 +129,15 @@ impl DsmState {
     }
 
     pub fn owner_of(&self, addr: usize) -> Option<NodeId> {
-        self.page_index(addr).map(|i| self.owner[i].load(Ordering::Acquire))
+        self.page_index(addr)
+            .map(|i| word_owner(self.owner[i].load(Ordering::Acquire)))
+    }
+
+    /// Recovery epoch of the page holding `addr` (0 until the first
+    /// sweep reclamation touches it).
+    pub fn epoch_of(&self, addr: usize) -> Option<u32> {
+        self.page_index(addr)
+            .map(|i| word_epoch(self.owner[i].load(Ordering::Acquire)))
     }
 
     /// Fault in every page of `[addr, addr+len)` that `node` does not
@@ -101,10 +145,18 @@ impl DsmState {
     /// §5.6: "triggers a page fault, fetches the page from the client,
     /// and re-executes"). Returns pages transferred.
     ///
-    /// The `swap` on the owner word makes every transition
-    /// exactly-once under racing writers: whichever racer's swap
-    /// observes a foreign previous owner is the one (and only one)
-    /// charged for that transfer.
+    /// The epoch-preserving CAS on the owner word makes every
+    /// transition exactly-once under racing writers: whichever
+    /// racer's CAS lands on a word naming a foreign owner is the one
+    /// (and only one) charged for that transfer. Losing a CAS means
+    /// some other racer (a transfer or a recovery sweep) changed the
+    /// word first; we reload and re-decide against the fresh word.
+    ///
+    /// Carries the `dsm_owner` kill point: when armed, the calling
+    /// proc dies immediately *after* a transfer lands — the owner
+    /// word now names a node that will never act again, which is
+    /// exactly the stranding the sweep's epoch reclamation exists to
+    /// undo.
     pub fn ensure_owned(&self, node: NodeId, addr: usize, len: usize) -> Result<usize> {
         debug_assert!(self.nodes.binary_search(&node).is_ok(), "unknown DSM node {node}");
         let Some(first) = self.page_index(addr) else {
@@ -116,19 +168,83 @@ impl DsmState {
         let mut moved = 0usize;
         let cost = &self.charger.cost;
         for i in first..=last {
-            let prev = self.owner[i].swap(node, Ordering::AcqRel);
-            if prev != node {
-                // Trap + request/response on the wire + one page of
-                // bandwidth + remap.
-                let move_ns = Self::page_move_ns(cost);
-                self.counters.add(C_FAULTS, 1);
-                self.counters.add(C_PAGES, 1);
-                self.counters.add(C_CHARGED_NS, move_ns);
-                self.charger.charge_ns(move_ns);
-                moved += 1;
+            let mut cur = self.owner[i].load(Ordering::Acquire);
+            loop {
+                if word_owner(cur) == node {
+                    break; // already ours — free touch
+                }
+                let next = pack(node, word_epoch(cur));
+                match self.owner[i].compare_exchange(
+                    cur,
+                    next,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        // Trap + request/response on the wire + one
+                        // page of bandwidth + remap.
+                        let move_ns = Self::page_move_ns(cost);
+                        self.counters.add(C_FAULTS, 1);
+                        self.counters.add(C_PAGES, 1);
+                        self.counters.add(C_CHARGED_NS, move_ns);
+                        self.charger.charge_ns(move_ns);
+                        moved += 1;
+                        if crate::fault::should_die(crate::fault::KillPoint::DsmOwner) {
+                            crate::memory::heap::park_thread_magazines(
+                                crate::simproc::current_proc(),
+                            );
+                            return Err(crate::fault::killed_err(
+                                crate::fault::KillPoint::DsmOwner,
+                            ));
+                        }
+                        break;
+                    }
+                    Err(w) => cur = w,
+                }
             }
         }
         Ok(moved)
+    }
+
+    /// Recovery sweep: swing every page owned by `dead` to `heir`,
+    /// advancing the page's epoch so any in-flight CAS the corpse
+    /// issued against the pre-sweep word can never land afterwards.
+    /// Returns `(epoch_bumps, pages_reclaimed)` — equal by
+    /// construction when healthy (each successful reclaim CAS is one
+    /// bump and one page); counted separately so the CI gate can
+    /// catch them drifting apart.
+    ///
+    /// Reclamation is bookkeeping, not a transfer: nothing is charged
+    /// and the transfer counters don't move, so the exactly-once
+    /// invariant `charged_ns == pages_transferred * page_move_ns`
+    /// survives any number of sweeps. Idempotent: a second sweep for
+    /// the same corpse finds no page it owns and returns (0, 0).
+    pub fn reclaim_dead(&self, dead: NodeId, heir: NodeId) -> (u64, u64) {
+        debug_assert!(self.nodes.binary_search(&heir).is_ok(), "unknown heir node {heir}");
+        let mut bumps = 0u64;
+        let mut pages = 0u64;
+        for o in &self.owner {
+            let mut cur = o.load(Ordering::Acquire);
+            loop {
+                if word_owner(cur) != dead {
+                    break;
+                }
+                let next = pack(heir, word_epoch(cur).wrapping_add(1));
+                match o.compare_exchange(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                    Ok(_) => {
+                        bumps += 1;
+                        pages += 1;
+                        break;
+                    }
+                    Err(w) => cur = w,
+                }
+            }
+        }
+        if bumps > 0 {
+            self.counters.add(C_EPOCH_BUMPS, bumps);
+            self.counters.add(C_RECLAIMED, pages);
+        }
+        (bumps, pages)
     }
 
     /// Cost of moving one page between nodes.
@@ -139,6 +255,11 @@ impl DsmState {
 
     pub fn stats(&self) -> (u64, u64) {
         (self.counters.get(C_FAULTS), self.counters.get(C_PAGES))
+    }
+
+    /// `(epoch_bumps, pages_reclaimed)` recovery totals.
+    pub fn reclaim_stats(&self) -> (u64, u64) {
+        (self.counters.get(C_EPOCH_BUMPS), self.counters.get(C_RECLAIMED))
     }
 
     /// Total nanoseconds this DSM instance charged to the pool's
@@ -166,7 +287,7 @@ impl DsmState {
     pub fn owners_valid(&self) -> bool {
         self.owner
             .iter()
-            .all(|o| self.nodes.binary_search(&o.load(Ordering::Relaxed)).is_ok())
+            .all(|o| self.nodes.binary_search(&word_owner(o.load(Ordering::Relaxed))).is_ok())
     }
 }
 
@@ -188,6 +309,7 @@ mod tests {
     fn pages_start_client_owned() {
         let (_p, h, d) = dsm();
         assert_eq!(d.owner_of(h.base()), Some(NODE_CLIENT));
+        assert_eq!(d.epoch_of(h.base()), Some(0));
         assert_eq!(d.npages(), 256);
         assert!(d.owners_valid());
         assert_eq!(d.nodes(), &[NODE_CLIENT, NODE_SERVER]);
@@ -204,6 +326,8 @@ mod tests {
         assert_eq!(d.ensure_owned(NODE_SERVER, addr, 100).unwrap(), 0);
         let (faults, pages) = d.stats();
         assert_eq!((faults, pages), (1, 1));
+        // Live transfers never advance the epoch.
+        assert_eq!(d.epoch_of(addr), Some(0));
     }
 
     #[test]
@@ -280,6 +404,70 @@ mod tests {
         assert_eq!(snap[0], ("dsm_faults", 4));
         assert_eq!(snap[1], ("dsm_pages_transferred", 4));
         assert_eq!(snap[2], ("dsm_charged_ns", 4 * per_page));
+        assert_eq!(snap[3], ("dsm_epoch_bumps", 0));
+        assert_eq!(snap[4], ("dsm_pages_reclaimed", 0));
+    }
+
+    #[test]
+    fn reclaim_dead_swings_and_bumps_exactly_once() {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm-reclaim", 1 << 20).unwrap();
+        let d = DsmState::new_multi(&heap, cfg.page_bytes, &[1, 2, 3], 1);
+        // Node 2 takes three pages, then dies.
+        d.ensure_owned(2, heap.base(), 3 * cfg.page_bytes).unwrap();
+        let charged_before = d.charged_ns();
+        let (bumps, pages) = d.reclaim_dead(2, 3);
+        assert_eq!((bumps, pages), (3, 3));
+        assert_eq!(d.owner_of(heap.base()), Some(3));
+        assert_eq!(d.epoch_of(heap.base()), Some(1));
+        // Untouched pages keep owner 1, epoch 0.
+        assert_eq!(d.owner_of(heap.base() + 4 * cfg.page_bytes), Some(1));
+        assert_eq!(d.epoch_of(heap.base() + 4 * cfg.page_bytes), Some(0));
+        // Reclamation is bookkeeping: transfer accounting untouched.
+        assert_eq!(d.charged_ns(), charged_before);
+        assert_eq!(d.stats(), (3, 3));
+        assert_eq!(d.reclaim_stats(), (3, 3));
+        // Second sweep for the same corpse: nothing left to reclaim.
+        assert_eq!(d.reclaim_dead(2, 3), (0, 0));
+        assert!(d.owners_valid());
+    }
+
+    #[test]
+    fn stale_epoch_cas_cannot_win_after_sweep() {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm-stale", 1 << 20).unwrap();
+        let d = DsmState::new_multi(&heap, cfg.page_bytes, &[1, 2, 3], 2);
+        // A corpse (node 2, the owner) snapshots the word it would use
+        // as a CAS compare value for some late protocol step...
+        let stale = d.owner[0].load(Ordering::Acquire);
+        assert_eq!(word_owner(stale), 2);
+        // ...the sweep declares node 2 dead and reclaims first...
+        assert_eq!(d.reclaim_dead(2, 1), (d.npages() as u64, d.npages() as u64));
+        // ...so the corpse's stale-epoch CAS can never land.
+        assert!(d.owner[0]
+            .compare_exchange(stale, pack(2, word_epoch(stale)), Ordering::AcqRel, Ordering::Acquire)
+            .is_err());
+        assert_eq!(d.owner_of(heap.base()), Some(1));
+        assert_eq!(d.epoch_of(heap.base()), Some(1));
+    }
+
+    #[test]
+    fn transfer_after_reclaim_preserves_new_epoch() {
+        let cfg = SimConfig::for_tests();
+        let pool = Pool::new(&cfg).unwrap();
+        let heap = Heap::new(&pool, "dsm-epoch", 1 << 20).unwrap();
+        let d = DsmState::new_multi(&heap, cfg.page_bytes, &[1, 2, 3], 1);
+        d.ensure_owned(2, heap.base(), 8).unwrap();
+        d.reclaim_dead(2, 3);
+        assert_eq!(d.epoch_of(heap.base()), Some(1));
+        // A live transfer on the reclaimed page keeps the bumped epoch.
+        d.ensure_owned(1, heap.base(), 8).unwrap();
+        assert_eq!(d.owner_of(heap.base()), Some(1));
+        assert_eq!(d.epoch_of(heap.base()), Some(1));
+        // Transfer accounting: initial 1→2, then 3→1 after reclaim.
+        assert_eq!(d.stats(), (2, 2));
     }
 
     #[test]

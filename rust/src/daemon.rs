@@ -143,6 +143,24 @@ impl Daemon {
         self.mappings.lock().unwrap().remove(&proc);
     }
 
+    /// Crash resurrection (paper's CoolDB restart story): adopt a
+    /// dead owner's channel into its registered standby proc
+    /// ([`crate::channel::ChannelBuilder::standby`]). The standby
+    /// re-opens the same shared heap under its own lease, inherits
+    /// the handler table, reaps the corpse's half of every surviving
+    /// ring, and resumes serving on the same doorbell — in-flight
+    /// idempotent calls complete against the resurrected endpoint
+    /// instead of surfacing `PeerFailed`. Normally driven by the
+    /// recovery sweep's death hook; exposed for tests and tools that
+    /// orchestrate adoption by hand. Returns the resurrected server
+    /// handle.
+    pub fn adopt_channel(
+        &self,
+        old: &Arc<crate::channel::ServerCore>,
+    ) -> Result<crate::channel::RpcServer> {
+        crate::channel::adopt_channel_into(old, &self.orch.fault_counters())
+    }
+
     /// Applications may not mprotect connection-heap pages (§5.5).
     pub fn try_app_mprotect(&self, _addr: usize) -> Result<()> {
         self.denied_mprotects.fetch_add(1, Ordering::Relaxed);

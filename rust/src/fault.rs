@@ -53,6 +53,21 @@ pub enum KillPoint {
     /// its CPU share and futex state vanish; nothing it was serving
     /// is cleaned up).
     ParkedWorker,
+    /// Server, response side: after `respond_quiet` wrote one or more
+    /// RESPONSE slots but before the sweep's `flush_respond` — replies
+    /// exist in shared memory, the response doorbell never rings, and
+    /// the remaining drained slots of the sweep are never answered.
+    MidRespond,
+    /// Server, response side: every reply of the sweep is written
+    /// *and* flushed state-wise, but the proc dies on the doorbell
+    /// threshold — waiters parked on the response bell are stranded
+    /// with completed replies they were never signalled about.
+    PostRespond,
+    /// DSM: die owning a cross-pod page mid-transfer — the owner word
+    /// was already swung to the (now dead) node, so every future
+    /// accessor faults against a corpse until the sweep advances the
+    /// page's epoch and reclaims it.
+    DsmOwner,
 }
 
 impl KillPoint {
@@ -65,6 +80,9 @@ impl KillPoint {
             "holding_scope" => KillPoint::HoldingScope,
             "mid_batch" => KillPoint::MidBatch,
             "parked_worker" => KillPoint::ParkedWorker,
+            "mid_respond" => KillPoint::MidRespond,
+            "post_respond" => KillPoint::PostRespond,
+            "dsm_owner" => KillPoint::DsmOwner,
             _ => return None,
         })
     }
@@ -77,17 +95,23 @@ impl KillPoint {
             KillPoint::HoldingScope => "holding_scope",
             KillPoint::MidBatch => "mid_batch",
             KillPoint::ParkedWorker => "parked_worker",
+            KillPoint::MidRespond => "mid_respond",
+            KillPoint::PostRespond => "post_respond",
+            KillPoint::DsmOwner => "dsm_owner",
         }
     }
 
     /// Every kill point, for sweep-style tests.
-    pub const ALL: [KillPoint; 6] = [
+    pub const ALL: [KillPoint; 9] = [
         KillPoint::PreFlush,
         KillPoint::MidServe,
         KillPoint::HoldingSeal,
         KillPoint::HoldingScope,
         KillPoint::MidBatch,
         KillPoint::ParkedWorker,
+        KillPoint::MidRespond,
+        KillPoint::PostRespond,
+        KillPoint::DsmOwner,
     ];
 }
 

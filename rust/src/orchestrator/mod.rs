@@ -82,8 +82,15 @@ pub const FLT_MAGS_FLUSHED: usize = 4;
 pub const FLT_RETRIES: usize = 5;
 pub const FLT_RECONNECTS: usize = 6;
 pub const FLT_RECOVERIES: usize = 7;
+/// DSM owner-word epochs advanced by the sweep while reclaiming pages
+/// from a dead node; must equal [`FLT_PAGES_RECLAIMED`] when healthy.
+pub const FLT_EPOCH_BUMPS: usize = 8;
+pub const FLT_PAGES_RECLAIMED: usize = 9;
+/// Channels resurrected into a registered standby proc instead of
+/// being torn down on owner death.
+pub const FLT_ADOPTIONS: usize = 10;
 
-static FAULT_NAMES: [&str; 8] = [
+static FAULT_NAMES: [&str; 11] = [
     "kills",
     "slots_reaped",
     "seals_forced",
@@ -92,6 +99,9 @@ static FAULT_NAMES: [&str; 8] = [
     "retries",
     "reconnects",
     "recoveries",
+    "epoch_bumps",
+    "pages_reclaimed",
+    "adoptions",
 ];
 
 /// A per-proc recovery obligation registered by a plane that owns
@@ -172,8 +182,10 @@ impl Orchestrator {
 
     /// Register a recovery obligation run once per dead proc by the
     /// lease sweep. The hook runs with the orchestrator's internal
-    /// lock released (it may call back in); it must not register
-    /// further hooks. Returns `false` to be pruned.
+    /// lock released (it may call back in, and may register further
+    /// hooks — standby adoption registers the resurrected channel's
+    /// own death hook from inside the dead owner's). Returns `false`
+    /// to be pruned.
     pub fn on_proc_death(&self, hook: DeathHook) {
         self.death_hooks.lock().unwrap().push(hook);
     }
@@ -354,6 +366,18 @@ impl Orchestrator {
         inner.channels.remove(name);
     }
 
+    /// Unregister `name` only if `proc` still owns the registration.
+    /// Teardown paths use this instead of [`unregister_channel`] so a
+    /// stale handle to a dead (or resurrected) channel dropped *after*
+    /// a new owner registered the same name cannot clobber the new
+    /// registration — the stale-death-latching bug.
+    pub fn unregister_channel_owned(&self, name: &str, proc: ProcId) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.channels.get(name).map_or(false, |c| c.owner_proc == proc) {
+            inner.channels.remove(name);
+        }
+    }
+
     pub fn lookup_channel(&self, name: &str) -> Result<ChannelReg> {
         self.inner
             .lock()
@@ -508,10 +532,17 @@ impl Orchestrator {
 
     /// Run every registered death hook for one dead proc, pruning the
     /// ones whose owning object is gone. Callers must not hold the
-    /// orchestrator's internal lock.
+    /// orchestrator's internal lock. The hook list is swapped out for
+    /// the duration of the run so a hook may itself register new hooks
+    /// (standby adoption does) without deadlocking on the list mutex;
+    /// hooks registered mid-run are kept but not invoked for the proc
+    /// currently being swept.
     fn run_death_hooks(&self, dead: ProcId) {
-        let mut hooks = self.death_hooks.lock().unwrap();
-        hooks.retain(|h| h(dead));
+        let hooks: Vec<DeathHook> = std::mem::take(&mut *self.death_hooks.lock().unwrap());
+        let mut keep: Vec<DeathHook> = hooks.into_iter().filter(|h| h(dead)).collect();
+        let mut cur = self.death_hooks.lock().unwrap();
+        keep.append(&mut cur);
+        *cur = keep;
     }
 
     /// Poll pending notifications for a proc (drains them).

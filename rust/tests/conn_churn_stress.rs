@@ -27,6 +27,8 @@ use rpcool::channel::waiter::SleepPolicy;
 use rpcool::channel::{CallOpts, ChannelBuilder, Connection, RpcServer};
 use rpcool::config::AdmissionPolicy;
 use rpcool::error::RpcError;
+use rpcool::fault::{self, FaultPlan, KillPoint};
+use rpcool::orchestrator::{FLT_KILLS, FLT_RECOVERIES};
 use rpcool::rack::Rack;
 use rpcool::util::prop::{forall, Gen, U64Range};
 use rpcool::util::rng::Rng;
@@ -350,6 +352,94 @@ fn stress_elastic_resize_under_batches() {
             salt: prop_seed() ^ n.wrapping_mul(0x2545_F491_4F6C_DD1D),
         })
     });
+}
+
+/// Connection churn under injected crashes: every iteration arms a
+/// *fresh* seeded [`FaultPlan`] from `PROP_SEED` (different salt per
+/// iteration, so a CI seed sweep varies both the kill point's depth
+/// and which iteration it lands in) against a fresh victim
+/// connection, while a survivor keeps calling on the same pooled
+/// channel. After each sweep the books must balance — kills ==
+/// recoveries — and the survivor must still be served.
+#[test]
+fn stress_churn_with_seeded_fault_per_iteration() {
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            fault::disarm();
+        }
+    }
+    let _d = Disarm;
+    let rack = Rack::for_tests();
+    let env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .pool_workers(2)
+        .call_timeout(Duration::from_secs(5))
+        .open(&env, "churn-fault")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let orch = Arc::clone(&rack.orch);
+    let f = orch.fault_counters();
+    let surv_env = rack.proc_env(1);
+    let surv = Connection::connect(&surv_env, "churn-fault").unwrap();
+
+    // Survivors renew throughout (the sweep below enforces lease
+    // expiry rack-wide); only each iteration's victim lapses.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = {
+        let stop = Arc::clone(&stop);
+        let daemon = Arc::clone(server.core().daemon());
+        let procs = vec![env.proc, surv_env.proc];
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                for p in &procs {
+                    daemon.renew_all(*p);
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })
+    };
+
+    for i in 0..3u64 {
+        let vic_env = rack.proc_env(1);
+        let vic = Connection::connect(&vic_env, "churn-fault").unwrap();
+        let point = [KillPoint::PreFlush, KillPoint::MidBatch][(i % 2) as usize];
+        fault::arm_with_sink(
+            FaultPlan::seeded(point, prop_seed() ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15), 3)
+                .victim(vic_env.proc),
+            Arc::downgrade(&orch.fault_counters()),
+        );
+        let victim = std::thread::spawn(move || {
+            vic_env.run(|| {
+                let vals: Vec<u64> = (0..64).collect();
+                let r = vic.call_scalar_batch::<u64>(1, &vals, CallOpts::new());
+                assert!(matches!(r, Err(RpcError::Killed(_))), "victim sees Killed: {r:?}");
+                vic.crash();
+            })
+        });
+        // Churn racing the crash: the survivor's calls must never be
+        // cross-wired or lost while the victim dies next to them.
+        for k in 0..8u64 {
+            let r = surv_env.run(|| surv.call_scalar::<u64>(1, &k, CallOpts::new()));
+            assert_eq!(r.unwrap(), k + 1, "survivor call during iteration {i}");
+        }
+        victim.join().unwrap();
+        assert_eq!(f.get(FLT_KILLS), i + 1, "iteration {i}: fresh seeded plan fired");
+        assert!(!fault::armed(), "iteration {i}: injector auto-disarmed");
+
+        std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 30));
+        orch.tick();
+        assert_eq!(f.get(FLT_RECOVERIES), i + 1, "iteration {i}: kills == recoveries");
+        let r = surv_env.run(|| surv.call_scalar::<u64>(1, &99, CallOpts::new()));
+        assert_eq!(r.unwrap(), 100, "survivor serves after sweep {i}");
+    }
+
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    drop(surv);
+    server.stop();
 }
 
 // ---------------------------------------------------------------------

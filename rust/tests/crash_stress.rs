@@ -21,14 +21,15 @@
 //! parallel harness). `PROP_SEED` (CI sweeps four seeds) picks the
 //! crossing depth wherever the kill point allows one.
 
-use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc, RpcServer};
+use rpcool::channel::{CallOpts, ChannelBuilder, Connection, Rpc, RpcServer, TransportSel};
 use rpcool::daemon::Daemon;
 use rpcool::error::RpcError;
 use rpcool::fault::{self, FaultPlan, KillPoint};
 use rpcool::metrics::CounterSet;
 use rpcool::orchestrator::{
-    FLT_KILLS, FLT_MAGS_FLUSHED, FLT_RECONNECTS, FLT_RECOVERIES, FLT_RETRIES, FLT_SCOPES_FREED,
-    FLT_SEALS_FORCED, FLT_SLOTS_REAPED,
+    FLT_ADOPTIONS, FLT_EPOCH_BUMPS, FLT_KILLS, FLT_MAGS_FLUSHED, FLT_PAGES_RECLAIMED,
+    FLT_RECONNECTS, FLT_RECOVERIES, FLT_RETRIES, FLT_SCOPES_FREED, FLT_SEALS_FORCED,
+    FLT_SLOTS_REAPED,
 };
 use rpcool::rack::{ProcEnv, Rack};
 use rpcool::RetryPolicy;
@@ -75,7 +76,8 @@ fn spawn_renewer(
 fn print_counters(point: &str, f: &CounterSet) {
     println!(
         "FAULT_COUNTERS point={point} kills={} slots_reaped={} seals_forced={} \
-         scopes_freed={} mags_flushed={} retries={} reconnects={} recoveries={}",
+         scopes_freed={} mags_flushed={} retries={} reconnects={} recoveries={} \
+         epoch_bumps={} pages_reclaimed={} adoptions={}",
         f.get(FLT_KILLS),
         f.get(FLT_SLOTS_REAPED),
         f.get(FLT_SEALS_FORCED),
@@ -84,6 +86,9 @@ fn print_counters(point: &str, f: &CounterSet) {
         f.get(FLT_RETRIES),
         f.get(FLT_RECONNECTS),
         f.get(FLT_RECOVERIES),
+        f.get(FLT_EPOCH_BUMPS),
+        f.get(FLT_PAGES_RECLAIMED),
+        f.get(FLT_ADOPTIONS),
     );
 }
 
@@ -479,4 +484,523 @@ fn retrying_client_reconnects_after_server_crash() {
     drop(c2);
     s2.stop();
     l2.join().unwrap();
+}
+
+/// The server dies *between* a sweep's quiet responds and the
+/// coalesced flush: the reply is state-complete in the ring but the
+/// doorbell never rings. Recovery's `fail_peer` wake must deliver the
+/// finished answer — the pending call resolves `Ok`, never
+/// `PeerFailed` and never the full call timeout.
+#[test]
+fn crash_mid_respond_server() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rig = crash_rig("crash-midrespond");
+    let orch = Arc::clone(&rig.rack.orch);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew =
+        spawn_renewer(Arc::clone(&rig.daemon), vec![rig.surv_env.proc], Arc::clone(&stop));
+
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::MidRespond).victim(rig.senv.proc).nth(1),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    let surv_env = rig.surv_env.clone();
+    let surv = Connection::connect(&surv_env, "crash-midrespond").unwrap();
+    let pending = std::thread::spawn(move || {
+        surv_env.run(|| {
+            let t0 = Instant::now();
+            let r = surv.call_scalar::<u64>(1, &7, CallOpts::new());
+            (r, t0.elapsed())
+        })
+    });
+
+    let f = orch.fault_counters();
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while f.get(FLT_KILLS) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(f.get(FLT_KILLS), 1, "server kill fired between respond and flush");
+
+    std::thread::sleep(Duration::from_millis(rig.rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+
+    let (r, elapsed) = pending.join().unwrap();
+    assert_eq!(
+        r.expect("quiet reply was complete — recovery delivers it, not PeerFailed"),
+        8,
+        "the unflushed response is the real answer"
+    );
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "recovery wake must beat the 5s call timeout, took {elapsed:?}"
+    );
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "one dead proc (the server)");
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    print_counters("mid_respond", &f);
+    drop(rig.surv);
+    rig.server.stop();
+    rig.listener.join().unwrap();
+}
+
+/// The server dies *inside* the probed flush: the signal cost is
+/// charged, the response status words are published, but the bell
+/// never rings. Same resolution contract as `mid_respond` — the
+/// parked caller gets its real answer at recovery.
+#[test]
+fn crash_post_respond_server() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rig = crash_rig("crash-postrespond");
+    let orch = Arc::clone(&rig.rack.orch);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew =
+        spawn_renewer(Arc::clone(&rig.daemon), vec![rig.surv_env.proc], Arc::clone(&stop));
+
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::PostRespond).victim(rig.senv.proc).nth(1),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    let surv_env = rig.surv_env.clone();
+    let surv = Connection::connect(&surv_env, "crash-postrespond").unwrap();
+    let pending = std::thread::spawn(move || {
+        surv_env.run(|| {
+            let t0 = Instant::now();
+            let r = surv.call_scalar::<u64>(1, &7, CallOpts::new());
+            (r, t0.elapsed())
+        })
+    });
+
+    let f = orch.fault_counters();
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while f.get(FLT_KILLS) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(f.get(FLT_KILLS), 1, "server kill fired with the bell unrung");
+
+    std::thread::sleep(Duration::from_millis(rig.rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+
+    let (r, elapsed) = pending.join().unwrap();
+    assert_eq!(r.expect("published reply delivered by recovery"), 8);
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "recovery wake must beat the 5s call timeout, took {elapsed:?}"
+    );
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "one dead proc (the server)");
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    print_counters("post_respond", &f);
+    drop(rig.surv);
+    rig.server.stop();
+    rig.listener.join().unwrap();
+}
+
+/// A cross-pod client dies the instant a DSM page-ownership transfer
+/// lands on its node (the CAS succeeded, the proc never used the
+/// page). The sweep must reclaim every page the corpse's node owns
+/// with an owner-epoch bump, so the corpse's own late CAS — carrying
+/// the stale epoch in its compare word — can never land.
+#[test]
+fn crash_dsm_owner_client() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rig = crash_rig("crash-dsmowner");
+    let orch = Arc::clone(&rig.rack.orch);
+    let vic_env = rig.rack.remote_proc_env();
+    let vic_proc = vic_env.proc;
+    let vic = Connection::connect_with(&vic_env, "crash-dsmowner", TransportSel::Rdma).unwrap();
+    assert!(vic.shared.is_dsm(), "out-of-rack victim rides the DSM transport");
+    assert_eq!(orch.live_heaps(), rig.heaps_baseline + 1, "victim heap mapped");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(
+        Arc::clone(&rig.daemon),
+        vec![rig.senv.proc, rig.surv_env.proc],
+        Arc::clone(&stop),
+    );
+
+    // Crossings are transfers *by the victim*: the warm call's
+    // server-side faults don't count, so nth=1 is the client-side
+    // fault-back of the argument page.
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::DsmOwner).victim(vic_proc).nth(1),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    let (dsm, addr, server_node, epoch_at_death) = std::thread::spawn(move || {
+        vic_env.run(|| {
+            let dsm = Arc::clone(vic.shared.dsm.as_ref().unwrap());
+            let server_node = vic.shared.server_node;
+            let scope = vic.create_scope(4096).unwrap();
+            let addr = scope.new_val(5u64).unwrap();
+            // Warm call: the server faults the argument page over.
+            let r = vic.invoke(1, (addr, 8), CallOpts::new());
+            assert_eq!(r.unwrap(), 6, "warm call moves the page to the server node");
+            // Second call: the client faults it back — the transfer
+            // lands, then the proc dies still owning the page.
+            let r = vic.invoke(1, (addr, 8), CallOpts::new());
+            assert!(matches!(r, Err(RpcError::Killed(_))), "victim sees Killed: {r:?}");
+            std::mem::forget(scope);
+            let epoch = dsm.epoch_of(addr);
+            vic.crash();
+            (dsm, addr, server_node, epoch)
+        })
+    })
+    .join()
+    .unwrap();
+    let f = orch.fault_counters();
+    assert_eq!(f.get(FLT_KILLS), 1, "exactly one injected kill fired");
+    assert_eq!(epoch_at_death, Some(0), "live transfers preserve the epoch");
+
+    std::thread::sleep(Duration::from_millis(rig.rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+    orch.tick(); // idempotent: reclamation must not double-bump
+
+    assert_eq!(orch.live_heaps(), rig.heaps_baseline, "victim heap reclaimed");
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "one dead proc, one recovery");
+    let bumps = f.get(FLT_EPOCH_BUMPS);
+    let pages = f.get(FLT_PAGES_RECLAIMED);
+    assert!(bumps >= 1, "the corpse-owned transfer page was reclaimed");
+    assert_eq!(bumps, pages, "exactly one epoch bump per reclaimed page");
+    assert_eq!(
+        dsm.owner_of(addr),
+        Some(server_node),
+        "reclaimed pages swing to the surviving server's node"
+    );
+    assert_eq!(dsm.epoch_of(addr), Some(1), "reclamation advanced the owner epoch");
+    rig.assert_survivor_liveness("crash-dsmowner");
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    print_counters("dsm_owner", &f);
+    rig.teardown();
+}
+
+/// The tentpole's resurrection path: a channel opened with a standby
+/// dies mid-serve; the sweep's death hook adopts it instead of
+/// tearing it down. The in-flight idempotent call completes `Ok`
+/// through its `RetryPolicy` — no `PeerFailed` ever surfaces — within
+/// one lease TTL + sweep, on the *same* client connection.
+#[test]
+fn standby_adopts_channel_after_server_crash() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let standby_env = rack.proc_env(0); // same pod, fresh proc
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .shared_heap(true)
+        .call_timeout(Duration::from_secs(5))
+        .standby(&standby_env)
+        .open(&senv, "crash-standby")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let listener = server.spawn_listener();
+    let daemon = Arc::clone(server.core().daemon());
+    let orch = Arc::clone(&rack.orch);
+    let f = orch.fault_counters();
+
+    let cenv = rack.proc_env(1);
+    let conn = Arc::new(Connection::connect(&cenv, "crash-standby").unwrap());
+    let r = cenv.run(|| conn.call_scalar::<u64>(1, &1, CallOpts::new()));
+    assert_eq!(r.unwrap(), 2, "primary serves before the crash");
+
+    // Only the client renews: the primary's lease lapses, and the
+    // standby acquires its own fresh leases at adoption time.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(Arc::clone(&daemon), vec![cenv.proc], Arc::clone(&stop));
+
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::MidServe).victim(senv.proc).nth(1),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    let policy = RetryPolicy::new(8)
+        .idempotent()
+        .seed(prop_seed())
+        .backoff_base(Duration::from_millis(1), Duration::from_millis(8));
+    let cc = Arc::clone(&conn);
+    let ce = cenv.clone();
+    let pending = std::thread::spawn(move || {
+        ce.run(|| {
+            let t0 = Instant::now();
+            let r = cc.call_scalar::<u64>(1, &7, CallOpts::new().retry(policy));
+            (r, t0.elapsed())
+        })
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while f.get(FLT_KILLS) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(f.get(FLT_KILLS), 1, "primary died mid-serve");
+
+    std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+    orch.tick(); // idempotent: one adoption, not two
+
+    let (r, elapsed) = pending.join().unwrap();
+    assert_eq!(
+        r.expect("idempotent in-flight call completes on the adopted standby"),
+        8,
+        "no PeerFailed: the retry lands on the resurrected channel"
+    );
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "resurrection must complete within one TTL + sweep, took {elapsed:?}"
+    );
+    assert_eq!(f.get(FLT_ADOPTIONS), 1, "exactly one standby adoption");
+    assert_eq!(f.get(FLT_RECOVERIES), 1, "one dead proc swept");
+    assert!(
+        f.get(FLT_SLOTS_REAPED) >= 1,
+        "the mid-serve slot was answered ST_CLOSED by the adoption reap"
+    );
+
+    // The same connection keeps serving with no retry needed, and a
+    // fresh connect lands on the resurrected endpoint.
+    let r = cenv.run(|| conn.call_scalar::<u64>(1, &41, CallOpts::new()));
+    assert_eq!(r.unwrap(), 42, "adopted channel serves the surviving connection");
+    let fenv = rack.proc_env(1);
+    let fresh = Connection::connect(&fenv, "crash-standby").expect("fresh connect after adoption");
+    let r = fenv.run(|| fresh.call_scalar::<u64>(1, &9, CallOpts::new()));
+    assert_eq!(r.unwrap(), 10, "adopted channel accepts new connections");
+
+    let adopted = RpcServer::take_adopted(&standby_env, "crash-standby")
+        .expect("adoption parked the resurrected server handle");
+    assert_eq!(adopted.core().env.proc, standby_env.proc, "adopted under the standby identity");
+    print_counters("standby_adoption", &f);
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    drop((conn, fresh));
+    adopted.stop();
+    listener.join().unwrap();
+}
+
+/// Satellite S3: a batch killed mid-chunk on the server side. The
+/// adoption reap must consume-or-abandon every published slot —
+/// quiet-replied, mid-serve, and never-claimed alike — so the batch
+/// resolves promptly and its idempotent retry completes in full
+/// against the resurrected server.
+#[test]
+fn batch_killed_mid_chunk_completes_on_adopted_standby() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rack = Rack::for_tests();
+    let senv = rack.proc_env(0);
+    let standby_env = rack.proc_env(0);
+    let server = ChannelBuilder::from_config(&rack.cfg)
+        .ring_shards(1)
+        .ring_slots(8)
+        .shared_heap(true)
+        .call_timeout(Duration::from_secs(5))
+        .standby(&standby_env)
+        .open(&senv, "crash-standby-batch")
+        .unwrap();
+    server.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let listener = server.spawn_listener();
+    let daemon = Arc::clone(server.core().daemon());
+    let orch = Arc::clone(&rack.orch);
+    let f = orch.fault_counters();
+
+    let cenv = rack.proc_env(1);
+    let conn = Connection::connect(&cenv, "crash-standby-batch").unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(Arc::clone(&daemon), vec![cenv.proc], Arc::clone(&stop));
+
+    // Die on a seeded request of the first chunk: some slots are
+    // quiet-replied, one is stranded PROCESSING, the rest sit
+    // published and unclaimed.
+    fault::arm_with_sink(
+        FaultPlan::new(KillPoint::MidServe).victim(senv.proc).nth(1 + prop_seed() % 3),
+        Arc::downgrade(&orch.fault_counters()),
+    );
+    let policy = RetryPolicy::new(8)
+        .idempotent()
+        .seed(prop_seed())
+        .backoff_base(Duration::from_millis(1), Duration::from_millis(8));
+    let ce = cenv.clone();
+    let pending = std::thread::spawn(move || {
+        ce.run(|| {
+            let vals: Vec<u64> = (0..64).collect();
+            let r = conn.call_scalar_batch::<u64>(1, &vals, CallOpts::new().retry(policy));
+            (r, conn)
+        })
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while f.get(FLT_KILLS) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(f.get(FLT_KILLS), 1, "server died inside the first chunk");
+
+    std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+
+    let (r, conn) = pending.join().unwrap();
+    let rets = r.expect("batch completes idempotently on the adopted standby");
+    assert_eq!(rets.len(), 64);
+    for (v, got) in (0..64u64).zip(&rets) {
+        assert_eq!(*got, v + 1, "batch element {v} served exactly once after the retry");
+    }
+    assert_eq!(f.get(FLT_ADOPTIONS), 1, "one standby adoption");
+    assert!(f.get(FLT_RETRIES) >= 1, "the batch went through its retry policy");
+    assert!(
+        f.get(FLT_SLOTS_REAPED) >= 1,
+        "every published slot of the killed chunk was consumed or abandoned"
+    );
+
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    drop(conn);
+    let adopted = RpcServer::take_adopted(&standby_env, "crash-standby-batch").unwrap();
+    adopted.stop();
+    listener.join().unwrap();
+}
+
+/// Satellite S2 regression: a *stale* server handle — its proc long
+/// dead, its channel name since re-opened by a replacement — is
+/// finally dropped. The drop must not unregister the replacement's
+/// channel, evict its directory entry, or otherwise resurface the old
+/// latched death on connections to the replacement.
+#[test]
+fn late_drop_of_dead_server_handle_does_not_clobber_replacement() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rack = Rack::for_tests();
+    let aenv = rack.proc_env(0);
+    let a = Rpc::open(&aenv, "stale-latch").unwrap();
+    a.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 1));
+    let al = a.spawn_listener();
+    let daemon = Arc::clone(a.core().daemon());
+    let orch = Arc::clone(&rack.orch);
+
+    let cenv = rack.proc_env(1);
+    let c1 = Connection::connect(&cenv, "stale-latch").unwrap();
+    assert_eq!(cenv.run(|| c1.call_scalar::<u64>(1, &1, CallOpts::new())).unwrap(), 2);
+
+    // A's lease lapses (only the client renews); the sweep tears the
+    // channel down and the old connection latches PeerFailed.
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(Arc::clone(&daemon), vec![cenv.proc], Arc::clone(&stop));
+    std::thread::sleep(Duration::from_millis(rack.cfg.lease_ttl_ms + 30));
+    orch.tick();
+    let r = cenv.run(|| c1.call_scalar::<u64>(1, &2, CallOpts::new()));
+    assert!(matches!(r, Err(RpcError::PeerFailed(_))), "old connection latched: {r:?}");
+    al.join().unwrap();
+
+    // A replacement re-opens the name; a retrying client reconnects.
+    let benv = rack.proc_env(0);
+    let b = Rpc::open(&benv, "stale-latch").expect("name freed by the sweep");
+    b.serve_scalar::<u64>(1, |_ctx, v| Ok(*v + 100));
+    let bl = b.spawn_listener();
+    let policy = RetryPolicy::new(10)
+        .idempotent()
+        .seed(prop_seed())
+        .backoff_base(Duration::from_millis(1), Duration::from_millis(4));
+    let c2 = Connection::connect_retry(&cenv, "stale-latch", policy).unwrap();
+    assert_eq!(cenv.run(|| c2.call_scalar::<u64>(1, &1, CallOpts::new())).unwrap(), 101);
+
+    // The stale handle drops *after* the replacement is serving. Its
+    // teardown must be identity-guarded no-ops: the registration
+    // belongs to B's proc, the directory entry to B's core.
+    drop(c1);
+    drop(a);
+
+    // Regression: first call on the live connection after the stale
+    // drop — no latched dead_err / PeerFailed may resurface.
+    let r = cenv.run(|| c2.call_scalar::<u64>(1, &5, CallOpts::new()));
+    assert_eq!(r.expect("no stale death latched onto the replacement"), 105);
+    // And the name still resolves for brand-new clients.
+    let fenv = rack.proc_env(1);
+    let c3 = Connection::connect(&fenv, "stale-latch")
+        .expect("stale drop must not evict the replacement's registration");
+    assert_eq!(fenv.run(|| c3.call_scalar::<u64>(1, &9, CallOpts::new())).unwrap(), 109);
+
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    drop((c2, c3));
+    b.stop();
+    bl.join().unwrap();
+}
+
+/// Satellite S1: a randomized kill schedule — every iteration arms a
+/// *fresh* seeded plan (depth drawn from `PROP_SEED`, different salt
+/// per iteration) against a fresh victim, and the books must balance
+/// cumulatively: kills == recoveries after every sweep, and the
+/// channel keeps serving survivors throughout.
+#[test]
+fn randomized_fault_schedule_balances_books() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let _d = DisarmGuard;
+    let rig = crash_rig("crash-sched");
+    let orch = Arc::clone(&rig.rack.orch);
+    let f = orch.fault_counters();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let renew = spawn_renewer(
+        Arc::clone(&rig.daemon),
+        vec![rig.senv.proc, rig.surv_env.proc],
+        Arc::clone(&stop),
+    );
+
+    let points = [KillPoint::PreFlush, KillPoint::MidBatch, KillPoint::HoldingSeal];
+    for (i, point) in points.iter().enumerate() {
+        let vic_env = rig.rack.proc_env(1);
+        let vic = Connection::connect(&vic_env, "crash-sched").unwrap();
+        let salt = prop_seed() ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        fault::arm_with_sink(
+            FaultPlan::seeded(*point, salt, 3).victim(vic_env.proc),
+            Arc::downgrade(&orch.fault_counters()),
+        );
+        let point = *point;
+        std::thread::spawn(move || {
+            vic_env.run(|| {
+                match point {
+                    KillPoint::HoldingSeal => {
+                        let scope = vic.create_scope(4096).unwrap();
+                        let addr = scope.new_val(5u64).unwrap();
+                        let mut killed = false;
+                        for _ in 0..5 {
+                            match vic.invoke(1, (addr, 8), CallOpts::new().sealed(&scope)) {
+                                Ok(r) => assert_eq!(r, 6),
+                                Err(RpcError::Killed(_)) => {
+                                    killed = true;
+                                    break;
+                                }
+                                Err(e) => panic!("unexpected sealed-call error: {e:?}"),
+                            }
+                        }
+                        assert!(killed, "seeded kill must fire within the sealed loop");
+                        std::mem::forget(scope);
+                    }
+                    _ => {
+                        let vals: Vec<u64> = (0..64).collect();
+                        let r = vic.call_scalar_batch::<u64>(1, &vals, CallOpts::new());
+                        assert!(matches!(r, Err(RpcError::Killed(_))), "Killed: {r:?}");
+                    }
+                }
+                vic.crash();
+            })
+        })
+        .join()
+        .unwrap();
+        assert_eq!(f.get(FLT_KILLS), i as u64 + 1, "iteration {i}: fresh plan fired");
+        assert!(!fault::armed(), "iteration {i}: injector auto-disarmed");
+
+        std::thread::sleep(Duration::from_millis(rig.rack.cfg.lease_ttl_ms + 30));
+        orch.tick();
+        assert_eq!(
+            f.get(FLT_RECOVERIES),
+            i as u64 + 1,
+            "iteration {i}: books balance after the sweep"
+        );
+    }
+    assert_eq!(f.get(FLT_KILLS), f.get(FLT_RECOVERIES), "cumulative balance");
+    rig.assert_survivor_liveness("crash-sched");
+    stop.store(true, Ordering::Release);
+    renew.join().unwrap();
+    rig.teardown();
 }

@@ -161,6 +161,131 @@ fn stress_racing_writers_exactly_once() {
     forall("dsm-race", prop_seed(), 24, &ScenarioGen, run_scenario);
 }
 
+/// Owner-epoch reclamation replay (the crash-fault plane's DSM half):
+/// a seeded transfer schedule runs, then one node "dies" and the
+/// sweep reclaims its pages via `reclaim_dead`. Checked per scenario:
+///
+/// * reclamation swings every corpse-owned page to the heir with
+///   exactly one epoch bump each (bumps == pages), and a second sweep
+///   finds nothing — reclaim is exactly-once;
+/// * reclamation charges *nothing*: transfer counters and `charged_ns`
+///   stay exactly `pages_transferred * page_move_ns`;
+/// * post-reclaim transfers still work and keep exact accounting (a
+///   settle sweep moves exactly the pages the settler didn't own);
+/// * the whole history replays: the same seed reproduces identical
+///   transfer counts, reclamation counts, and final owner/epoch maps.
+#[test]
+fn prop_owner_epoch_reclaim_replays_exactly_once() {
+    forall("dsm-reclaim", prop_seed(), 16, &U64Range(0, (1 << 48) - 1), |&salt| {
+        let cfg = SimConfig::for_tests();
+        let pages = 24usize;
+        let nodes: Vec<u32> = vec![3, 10, 17];
+        let (dead, heir, settler) = (10u32, 3u32, 17u32);
+
+        // One full life: schedule → corpse → reclaim → settle.
+        // Returns the books and the final (owner, epoch) map.
+        let run = || -> (u64, u64, u64, u64, Vec<(Option<u32>, Option<u32>)>) {
+            let pool = Pool::new(&cfg).unwrap();
+            let heap = Heap::new(&pool, "dsm-reclaim", pages * cfg.page_bytes).unwrap();
+            let dsm = DsmState::new_multi(&heap, cfg.page_bytes, &nodes, nodes[0]);
+            let base = heap.base();
+            let mut rng = Rng::new(salt ^ 0xC0FF_EE00);
+            let mut moved = 0u64;
+            for _ in 0..120 {
+                let node = nodes[rng.next_below(nodes.len() as u64) as usize];
+                let off = rng.next_below((pages * cfg.page_bytes) as u64) as usize;
+                let span = (1 + rng.next_below(2 * 4096) as usize).min(heap.len() - off);
+                moved += dsm.ensure_owned(node, base + off, span).unwrap() as u64;
+            }
+            // The corpse's holdings, observed before the sweep.
+            let corpse_pages = (0..dsm.npages())
+                .filter(|&i| dsm.owner_of(base + i * cfg.page_bytes) == Some(dead))
+                .count() as u64;
+            let pre: Vec<(u32, u32)> = (0..dsm.npages())
+                .map(|i| {
+                    let a = base + i * cfg.page_bytes;
+                    (dsm.owner_of(a).unwrap(), dsm.epoch_of(a).unwrap())
+                })
+                .collect();
+
+            let (bumps, reclaimed) = dsm.reclaim_dead(dead, heir);
+            if bumps != corpse_pages || reclaimed != corpse_pages {
+                eprintln!(
+                    "dsm-reclaim: swept ({bumps}, {reclaimed}) != corpse holdings {corpse_pages}"
+                );
+                return (u64::MAX, 0, 0, 0, Vec::new());
+            }
+            // Exactly-once: a second sweep of the same corpse is a no-op.
+            if dsm.reclaim_dead(dead, heir) != (0, 0) {
+                eprintln!("dsm-reclaim: second sweep reclaimed again");
+                return (u64::MAX, 0, 0, 0, Vec::new());
+            }
+            // Every reclaimed page swung to the heir with exactly one
+            // epoch bump; every other page is untouched.
+            for (i, &(pre_owner, pre_epoch)) in pre.iter().enumerate() {
+                let a = base + i * cfg.page_bytes;
+                let want = if pre_owner == dead {
+                    (Some(heir), Some(pre_epoch + 1))
+                } else {
+                    (Some(pre_owner), Some(pre_epoch))
+                };
+                if (dsm.owner_of(a), dsm.epoch_of(a)) != want {
+                    eprintln!(
+                        "dsm-reclaim: page {i} ({:?}, {:?}) != expected {want:?}",
+                        dsm.owner_of(a),
+                        dsm.epoch_of(a)
+                    );
+                    return (u64::MAX, 0, 0, 0, Vec::new());
+                }
+            }
+            // Reclamation charges nothing: the transfer books still
+            // read exactly pages_transferred * page_move_ns.
+            let (faults, xfer_pages) = dsm.stats();
+            let per_page = DsmState::page_move_ns(&pool.charger.cost);
+            if faults != moved
+                || xfer_pages != moved
+                || dsm.charged_ns() != moved * per_page
+            {
+                eprintln!("dsm-reclaim: reclamation leaked into transfer accounting");
+                return (u64::MAX, 0, 0, 0, Vec::new());
+            }
+            if dsm.reclaim_stats() != (bumps, reclaimed) {
+                eprintln!("dsm-reclaim: reclaim_stats disagrees with the sweep's return");
+                return (u64::MAX, 0, 0, 0, Vec::new());
+            }
+            // Post-reclaim transfers keep exact accounting: a settle
+            // sweep moves exactly the settler's foreign pages.
+            let foreign = (0..dsm.npages())
+                .filter(|&i| dsm.owner_of(base + i * cfg.page_bytes) != Some(settler))
+                .count();
+            let swept = dsm.ensure_owned(settler, base, heap.len()).unwrap();
+            if swept != foreign {
+                eprintln!("dsm-reclaim: settle moved {swept} != foreign {foreign}");
+                return (u64::MAX, 0, 0, 0, Vec::new());
+            }
+            let map: Vec<(Option<u32>, Option<u32>)> = (0..dsm.npages())
+                .map(|i| {
+                    let a = base + i * cfg.page_bytes;
+                    (dsm.owner_of(a), dsm.epoch_of(a))
+                })
+                .collect();
+            (moved, bumps, reclaimed, swept as u64, map)
+        };
+
+        let first = run();
+        if first.0 == u64::MAX {
+            return false;
+        }
+        // Replay: the same seed reproduces the identical history.
+        let second = run();
+        if first != second {
+            eprintln!("dsm-reclaim: replay diverged under one seed");
+            return false;
+        }
+        true
+    });
+}
+
 /// Sequential multi-node schedules against a reference model: a plain
 /// `Vec<u32>` owner map replayed op-for-op. `ensure_owned`'s return
 /// value and the observable owner of every touched page must match
